@@ -1,0 +1,88 @@
+"""AOT compile path: lower every Layer-2 task body to HLO text + manifest.
+
+Usage (normally via ``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+XLA (xla_extension 0.5.1) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md). Lowering uses
+``return_tuple=True`` so the Rust side always unwraps a tuple.
+
+The manifest (``manifest.json``) records per-task input/output shapes and
+dtypes so the Rust runtime can validate literals before execution.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import SHAPES, task_functions
+
+
+def to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_json(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def out_specs(fn, example_args):
+    outs = jax.eval_shape(fn, *example_args)
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    return [spec_json(o) for o in outs]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description="RCOMPSs AOT artifact builder")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated task names (default: all)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    table = task_functions()
+    selected = (
+        {k: table[k] for k in args.only.split(",")} if args.only else table
+    )
+
+    manifest = {"shapes": SHAPES, "tasks": {}}
+    for name, (fn, example_args) in sorted(selected.items()):
+        hlo = to_hlo_text(fn, example_args)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(hlo)
+        digest = hashlib.sha256(hlo.encode()).hexdigest()[:16]
+        manifest["tasks"][name] = {
+            "file": fname,
+            "sha256_16": digest,
+            "inputs": [spec_json(s) for s in example_args],
+            "outputs": out_specs(fn, example_args),
+        }
+        print(f"  lowered {name:24s} -> {fname} ({len(hlo)/1024:.0f} KiB)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {len(manifest['tasks'])} artifacts + manifest.json "
+          f"to {args.out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,12 @@
+"""Layer 1 — Pallas kernels for the benchmark apps' compute hot-spots.
+
+``distances`` (KNN / K-means pairwise distances), ``gram`` (linear
+regression X^T X / X^T y), ``matmul`` (prediction GEMM + calibration), and
+``ref`` (the pure-jnp oracles the pytest suite checks everything against).
+
+All kernels are lowered with ``interpret=True`` so the emitted HLO contains
+no Mosaic custom-calls and runs on the CPU PJRT plugin the Rust runtime
+loads (see /opt/xla-example/README.md).
+"""
+
+from . import distances, gram, matmul, ref  # noqa: F401

@@ -1,0 +1,69 @@
+"""Pallas kernel: tiled pairwise squared-distance matrix (Layer 1).
+
+The compute hot-spot shared by KNN_frag (distances test x train) and
+K-means partial_sum (distances points x centroids). Written for the TPU
+memory hierarchy — ``BlockSpec`` tiles stage (TM, d) and (TN, d) panels into
+VMEM, the cross term is a single MXU matmul per tile, and the squared norms
+are fused rank-1 updates — then executed here with ``interpret=True`` so the
+lowered HLO runs on the CPU PJRT plugin (see DESIGN.md §Hardware-Adaptation).
+
+VMEM footprint per grid step (TM=TN=128, d<=256, f32):
+    2*128*256*4 B (panels) + 128*128*4 B (out tile) ~= 320 KiB  << 16 MiB.
+Arithmetic intensity ~= 64 FLOP/B -> MXU compute-bound.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes aligned to the MXU systolic array (128x128).
+TILE_M = 128
+TILE_N = 128
+
+
+def _sq_dist_kernel(test_ref, train_ref, o_ref):
+    """One (TILE_M, TILE_N) output tile of squared distances."""
+    a = test_ref[...]          # (TILE_M, d) panel in VMEM
+    b = train_ref[...]         # (TILE_N, d) panel in VMEM
+    # Cross term on the MXU; preferred_element_type keeps f32 accumulation.
+    cross = jax.lax.dot_general(
+        a, b,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    a2 = jnp.sum(a * a, axis=1, keepdims=True)   # (TILE_M, 1)
+    b2 = jnp.sum(b * b, axis=1, keepdims=True).T  # (1, TILE_N)
+    o_ref[...] = jnp.maximum(a2 + b2 - 2.0 * cross, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pairwise_sq_dists(test: jnp.ndarray, train: jnp.ndarray,
+                      interpret: bool = True) -> jnp.ndarray:
+    """(n_test, d) x (n_train, d) -> (n_test, n_train) squared distances.
+
+    Requires n_test % TILE_M == 0 and n_train % TILE_N == 0 (the callers
+    pick fragment shapes accordingly; ragged edges are padded at L2).
+    """
+    n_test, d = test.shape
+    n_train, d2 = train.shape
+    assert d == d2, f"feature dims differ: {d} vs {d2}"
+    assert n_test % TILE_M == 0, f"n_test={n_test} not a multiple of {TILE_M}"
+    assert n_train % TILE_N == 0, f"n_train={n_train} not a multiple of {TILE_N}"
+    grid = (n_test // TILE_M, n_train // TILE_N)
+    return pl.pallas_call(
+        _sq_dist_kernel,
+        grid=grid,
+        in_specs=[
+            # Row panel of test points: varies with i, full feature dim.
+            pl.BlockSpec((TILE_M, d), lambda i, j: (i, 0)),
+            # Row panel of train points: varies with j.
+            pl.BlockSpec((TILE_N, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_test, n_train), jnp.float32),
+        interpret=interpret,
+    )(test.astype(jnp.float32), train.astype(jnp.float32))

@@ -1,0 +1,96 @@
+"""Pallas kernel: blocked Gram-matrix update X^T X and X^T y (Layer 1).
+
+Linear regression's partial_ztz / partial_zty tasks are GEMM-heavy (§4.3:
+"four different tasks involve GEMM operations"). The canonical MXU pattern:
+(TP, TP) output tiles of X^T X accumulated over row panels of X staged
+through VMEM. The row-panel loop is the innermost grid dimension so the
+output tile stays resident in VMEM across the accumulation (the revisiting
+pattern Pallas guarantees for sequential grids).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_P = 128   # output tile side (feature blocks)
+PANEL_R = 256  # row panel height
+
+
+def _ztz_kernel(xi_ref, xj_ref, o_ref):
+    """Accumulate one (TILE_P, TILE_P) tile of X^T X over row panels."""
+    r = pl.program_id(2)
+
+    @pl.when(r == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xi = xi_ref[...]   # (PANEL_R, TILE_P)
+    xj = xj_ref[...]   # (PANEL_R, TILE_P)
+    o_ref[...] += jax.lax.dot_general(
+        xi, xj,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ztz(x: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """X^T X for X of shape (n, p); n % PANEL_R == 0, p % TILE_P == 0."""
+    n, p = x.shape
+    assert n % PANEL_R == 0, f"n={n} not a multiple of {PANEL_R}"
+    assert p % TILE_P == 0, f"p={p} not a multiple of {TILE_P}"
+    grid = (p // TILE_P, p // TILE_P, n // PANEL_R)
+    return pl.pallas_call(
+        _ztz_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((PANEL_R, TILE_P), lambda i, j, r: (r, i)),
+            pl.BlockSpec((PANEL_R, TILE_P), lambda i, j, r: (r, j)),
+        ],
+        # All r-steps hit the same output tile -> in-VMEM accumulation.
+        out_specs=pl.BlockSpec((TILE_P, TILE_P), lambda i, j, r: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((p, p), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), x.astype(jnp.float32))
+
+
+def _zty_kernel(x_ref, y_ref, o_ref):
+    """Accumulate one (TILE_P,) block of X^T y over row panels."""
+    r = pl.program_id(1)
+
+    @pl.when(r == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]          # (PANEL_R, TILE_P)
+    y = y_ref[...]          # (PANEL_R, 1)
+    o_ref[...] += jax.lax.dot_general(
+        x, y,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def zty(x: jnp.ndarray, y: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """X^T y for X (n, p), y (n,). Returns (p,)."""
+    n, p = x.shape
+    assert y.shape == (n,)
+    assert n % PANEL_R == 0 and p % TILE_P == 0
+    grid = (p // TILE_P, n // PANEL_R)
+    out = pl.pallas_call(
+        _zty_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((PANEL_R, TILE_P), lambda i, r: (r, i)),
+            pl.BlockSpec((PANEL_R, 1), lambda i, r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_P, 1), lambda i, r: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, 1), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), y.astype(jnp.float32).reshape(n, 1))
+    return out.reshape(p)

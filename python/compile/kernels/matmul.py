@@ -1,0 +1,57 @@
+"""Pallas kernel: general tiled matmul (Layer 1).
+
+Used by compute_prediction (X @ beta, with beta broadcast to a narrow
+matrix) and as the calibration GEMM for the MKL-vs-RBLAS ratio the cluster
+profiles need (DESIGN.md §3). Classic three-level tiling: (TM, TN) output
+tiles, K swept in VMEM-resident panels via the innermost grid dimension.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_M = 128
+TILE_N = 128
+TILE_K = 256
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul(a: jnp.ndarray, b: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """(m, k) @ (k, n) with m % TILE_M == n % TILE_N == k % TILE_K == 0."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims differ: {k} vs {k2}"
+    assert m % TILE_M == 0 and n % TILE_N == 0 and k % TILE_K == 0, (
+        f"shape ({m},{k})x({k},{n}) not aligned to "
+        f"({TILE_M},{TILE_K},{TILE_N}) tiles"
+    )
+    grid = (m // TILE_M, n // TILE_N, k // TILE_K)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_M, TILE_K), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((TILE_K, TILE_N), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_N), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))

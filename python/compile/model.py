@@ -1,0 +1,223 @@
+"""Layer 2 — the benchmark apps' task bodies as jax functions.
+
+Each function here is the compute of one RCOMPSs task type from §4 of the
+paper (KNN_frag, KNN_merge, partial_sum, partial_ztz, ...), expressed in
+jax and calling the Layer-1 Pallas kernels for the hot spots. ``aot.py``
+lowers every entry of ``TASK_FUNCTIONS`` to an HLO-text artifact which the
+Rust workers execute through PJRT — Python never runs at request time.
+
+Shape policy: HLO is static-shaped, so each task type is lowered for the
+canonical fragment shapes in ``SHAPES``. The Rust apps generate fragments
+in exactly these shapes (padding ragged tails), mirroring how the paper's R
+implementation fixes per-fragment block sizes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import distances, gram, matmul, ref
+
+# ---------------------------------------------------------------------------
+# Canonical fragment shapes (kept MXU-tile-aligned for the Pallas kernels).
+# ---------------------------------------------------------------------------
+
+SHAPES = {
+    # KNN (§4.1): fixed training fragment, per-task test block, k neighbours.
+    "knn_train_n": 2048,
+    "knn_test_block": 512,
+    "knn_d": 64,
+    "knn_k": 8,
+    "knn_classes": 10,
+    # K-means (§4.2): per-task point fragment, k centroids.
+    "km_frag_n": 4096,
+    "km_d": 64,
+    "km_k": 16,
+    # Linear regression (§4.3): per-task row fragment, p features
+    # (intercept column included in X).
+    "lr_frag_n": 2048,
+    "lr_p": 256,
+    "lr_pred_block": 2048,
+    # Calibration GEMM.
+    "gemm_n": 512,
+}
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _s(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), F32)
+
+
+def _si(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), I32)
+
+
+# ---------------------------------------------------------------------------
+# KNN task bodies (Figure 3).
+# ---------------------------------------------------------------------------
+
+def _k_smallest(d, lab, k):
+    """Co-sort (distances, labels) rows ascending and keep the first k.
+
+    ``jax.lax.top_k`` lowers to a ``topk`` HLO instruction that the
+    Rust-side XLA (0.5.1) cannot parse; ``lax.sort`` lowers to plain
+    ``sort`` HLO which it can.
+    """
+    sd, sl = jax.lax.sort((d, lab), dimension=1, num_keys=1)
+    return sd[:, :k], sl[:, :k]
+
+
+def knn_frag(test, train_x, train_y):
+    """KNN_frag: local k-NN of a test block within one training fragment.
+
+    Distances come from the Pallas kernel; k-smallest selection stays in
+    jnp (lowers to an HLO sort).
+    """
+    k = SHAPES["knn_k"]
+    d = distances.pairwise_sq_dists(test, train_x)
+    lab = jnp.broadcast_to(train_y.astype(I32)[None, :], d.shape)
+    return _k_smallest(d, lab, k)
+
+
+def knn_merge(d1, l1, d2, l2):
+    """KNN_merge: keep the k nearest of two partial neighbour sets."""
+    k = SHAPES["knn_k"]
+    d = jnp.concatenate([d1, d2], axis=1)
+    lab = jnp.concatenate([l1.astype(I32), l2.astype(I32)], axis=1)
+    return _k_smallest(d, lab, k)
+
+
+def knn_classify(labels):
+    """KNN_classify: majority vote; returns int32 class per test point."""
+    votes = jax.nn.one_hot(labels.astype(I32), SHAPES["knn_classes"], dtype=F32)
+    return (jnp.argmax(jnp.sum(votes, axis=1), axis=1).astype(I32),)
+
+
+# ---------------------------------------------------------------------------
+# K-means task bodies (Figure 4).
+# ---------------------------------------------------------------------------
+
+def kmeans_partial(points, centroids):
+    """partial_sum: nearest-centroid assignment + per-cluster sums/counts.
+
+    The distance matrix is the Pallas kernel; the scatter-style reduction is
+    a one-hot GEMM, which XLA fuses tightly. The k centroids are padded to a
+    full MXU tile (distance columns beyond k are sliced off before argmin).
+    """
+    k = SHAPES["km_k"]
+    pad_rows = distances.TILE_N - k
+    far = jnp.full((pad_rows, centroids.shape[1]), 1e6, dtype=F32)
+    padded = jnp.concatenate([centroids, far], axis=0)
+    d = distances.pairwise_sq_dists(points, padded)[:, :k]
+    labels = jnp.argmin(d, axis=1)
+    onehot = jax.nn.one_hot(labels, SHAPES["km_k"], dtype=F32)
+    sums = jax.lax.dot_general(
+        onehot, points, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=F32)
+    counts = jnp.sum(onehot, axis=0)
+    return sums, counts
+
+
+def kmeans_update(sums, counts, old):
+    """Merge result -> new centroids; empty clusters keep old positions."""
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    fresh = sums / safe
+    return (jnp.where(counts[:, None] > 0, fresh, old),)
+
+
+# ---------------------------------------------------------------------------
+# Linear regression task bodies (Figure 5).
+# ---------------------------------------------------------------------------
+
+def lr_ztz(x):
+    """partial_ztz via the blocked Gram Pallas kernel."""
+    return (gram.ztz(x),)
+
+
+def lr_zty(x, y):
+    """partial_zty via the blocked Pallas kernel."""
+    return (gram.zty(x, y),)
+
+
+def lr_solve(ztz_, zty_):
+    """compute_model_parameters: solve (X^T X + eps I) beta = X^T y.
+
+    Conjugate gradients instead of LAPACK Cholesky: ``cho_factor`` lowers to
+    a typed-FFI custom-call the Rust-side XLA (0.5.1) cannot execute, while
+    CG is pure HLO (a While loop of matvecs) and the ridge-stabilized Gram
+    matrix is SPD, where CG converges in <= p iterations.
+    """
+    p = SHAPES["lr_p"]
+    a = ztz_ + 1e-6 * jnp.eye(p, dtype=F32)
+
+    def body(_, state):
+        x, r, pv, rs = state
+        ap = a @ pv
+        alpha = rs / (pv @ ap + 1e-30)
+        x = x + alpha * pv
+        r_new = r - alpha * ap
+        rs_new = r_new @ r_new
+        beta = rs_new / (rs + 1e-30)
+        return (x, r_new, r_new + beta * pv, rs_new)
+
+    x0 = jnp.zeros_like(zty_)
+    state = (x0, zty_, zty_, zty_ @ zty_)
+    x, *_ = jax.lax.fori_loop(0, p, body, state)
+    return (x,)
+
+
+def lr_predict(x, beta):
+    """compute_prediction: X @ beta through the tiled matmul kernel
+    (beta broadcast to a (p, TILE_N) panel, first column taken)."""
+    n = SHAPES["lr_pred_block"]
+    p = SHAPES["lr_p"]
+    beta_panel = jnp.tile(beta[:, None], (1, matmul.TILE_N))
+    out = matmul.matmul(x.reshape(n, p), beta_panel)
+    return (out[:, 0],)
+
+
+# ---------------------------------------------------------------------------
+# Shared / calibration bodies.
+# ---------------------------------------------------------------------------
+
+def merge_add2(a, b):
+    """Generic pairwise merge: elementwise sum (K-means & linreg merges)."""
+    return (a + b,)
+
+
+def gemm_cal(a, b):
+    """Calibration GEMM for the MKL/RBLAS ratio (Pallas path)."""
+    return (matmul.matmul(a, b),)
+
+
+# ---------------------------------------------------------------------------
+# AOT export table: name -> (fn, example_args).
+# ---------------------------------------------------------------------------
+
+def task_functions():
+    s = SHAPES
+    tb, tn, d = s["knn_test_block"], s["knn_train_n"], s["knn_d"]
+    k = s["knn_k"]
+    kn, kd, kk = s["km_frag_n"], s["km_d"], s["km_k"]
+    ln, lp = s["lr_frag_n"], s["lr_p"]
+    pn = s["lr_pred_block"]
+    g = s["gemm_n"]
+    return {
+        "knn_frag": (knn_frag, (_s(tb, d), _s(tn, d), _s(tn))),
+        "knn_merge": (knn_merge, (_s(tb, k), _si(tb, k), _s(tb, k), _si(tb, k))),
+        "knn_classify": (knn_classify, (_si(tb, k),)),
+        "kmeans_partial": (kmeans_partial, (_s(kn, kd), _s(kk, kd))),
+        "kmeans_update": (kmeans_update, (_s(kk, kd), _s(kk), _s(kk, kd))),
+        "lr_ztz": (lr_ztz, (_s(ln, lp),)),
+        "lr_zty": (lr_zty, (_s(ln, lp), _s(ln))),
+        "lr_solve": (lr_solve, (_s(lp, lp), _s(lp))),
+        "lr_predict": (lr_predict, (_s(pn, lp), _s(lp))),
+        "merge_add2_kmsums": (merge_add2, (_s(kk, kd), _s(kk, kd))),
+        "merge_add2_kmcounts": (merge_add2, (_s(kk), _s(kk))),
+        "merge_add2_ztz": (merge_add2, (_s(lp, lp), _s(lp, lp))),
+        "merge_add2_zty": (merge_add2, (_s(lp), _s(lp))),
+        "gemm_cal": (gemm_cal, (_s(g, g), _s(g, g))),
+    }

@@ -1,0 +1,139 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (tile-aligned, as the kernels require) and data
+distributions; every kernel must match ``ref.py`` to float32 tolerance.
+This is the core compute-correctness signal of the repo.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import distances, gram, matmul, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+COMMON = dict(deadline=None, max_examples=12,
+              suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def rng_array(seed, *shape, scale=1.0):
+    return (np.random.default_rng(seed)
+            .normal(size=shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# distances.pairwise_sq_dists
+# ---------------------------------------------------------------------------
+
+@settings(**COMMON)
+@given(
+    mt=st.integers(1, 3),
+    nt=st.integers(1, 3),
+    d=st.sampled_from([8, 64, 96]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1e-2, 1.0, 1e2]),
+)
+def test_pairwise_sq_dists_matches_ref(mt, nt, d, seed, scale):
+    m, n = mt * distances.TILE_M, nt * distances.TILE_N
+    test = rng_array(seed, m, d, scale=scale)
+    train = rng_array(seed + 1, n, d, scale=scale)
+    got = distances.pairwise_sq_dists(test, train)
+    want = ref.pairwise_sq_dists(jnp.asarray(test), jnp.asarray(train))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4 * scale**2)
+
+
+def test_pairwise_sq_dists_zero_for_identical_points():
+    x = rng_array(0, distances.TILE_M, 32)
+    d = np.asarray(distances.pairwise_sq_dists(x, x))
+    np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-3)
+    assert (d >= 0).all(), "squared distances must be non-negative"
+
+
+def test_pairwise_rejects_misaligned_shapes():
+    with pytest.raises(AssertionError):
+        distances.pairwise_sq_dists(np.zeros((100, 8), np.float32),
+                                    np.zeros((128, 8), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# gram.ztz / gram.zty
+# ---------------------------------------------------------------------------
+
+@settings(**COMMON)
+@given(
+    rp=st.integers(1, 3),
+    pp=st.integers(1, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ztz_matches_ref(rp, pp, seed):
+    n, p = rp * gram.PANEL_R, pp * gram.TILE_P
+    x = rng_array(seed, n, p)
+    got = np.asarray(gram.ztz(x))
+    want = np.asarray(ref.lr_ztz(jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-3)
+    # Gram matrices are symmetric PSD.
+    np.testing.assert_allclose(got, got.T, rtol=1e-5, atol=1e-4)
+
+
+@settings(**COMMON)
+@given(
+    rp=st.integers(1, 3),
+    pp=st.integers(1, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_zty_matches_ref(rp, pp, seed):
+    n, p = rp * gram.PANEL_R, pp * gram.TILE_P
+    x = rng_array(seed, n, p)
+    y = rng_array(seed + 7, n)
+    got = np.asarray(gram.zty(x, y))
+    want = np.asarray(ref.lr_zty(jnp.asarray(x), jnp.asarray(y)))
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-3)
+
+
+def test_ztz_accumulates_over_panels():
+    # Two row-panels must equal the sum of their separate Grams.
+    x = rng_array(3, 2 * gram.PANEL_R, gram.TILE_P)
+    whole = np.asarray(gram.ztz(x))
+    parts = (np.asarray(gram.ztz(x[:gram.PANEL_R]))
+             + np.asarray(gram.ztz(x[gram.PANEL_R:])))
+    np.testing.assert_allclose(whole, parts, rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# matmul.matmul
+# ---------------------------------------------------------------------------
+
+@settings(**COMMON)
+@given(
+    mi=st.integers(1, 2),
+    ni=st.integers(1, 2),
+    ki=st.integers(1, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(mi, ni, ki, seed):
+    m, n, k = mi * matmul.TILE_M, ni * matmul.TILE_N, ki * matmul.TILE_K
+    a = rng_array(seed, m, k)
+    b = rng_array(seed + 1, k, n)
+    got = np.asarray(matmul.matmul(a, b))
+    want = np.asarray(ref.gemm(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=5e-3)
+
+
+def test_matmul_identity():
+    n = matmul.TILE_K
+    a = rng_array(11, matmul.TILE_M, n)
+    eye = np.eye(n, matmul.TILE_N, dtype=np.float32)
+    got = np.asarray(matmul.matmul(a, eye))
+    np.testing.assert_allclose(got[:, :min(n, matmul.TILE_N)],
+                               a[:, :min(n, matmul.TILE_N)], rtol=1e-6)
+
+
+def test_matmul_rejects_misaligned():
+    with pytest.raises(AssertionError):
+        matmul.matmul(np.zeros((64, 256), np.float32),
+                      np.zeros((256, 128), np.float32))

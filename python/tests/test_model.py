@@ -1,0 +1,122 @@
+"""Layer-2 correctness: task bodies vs reference semantics + shape checks.
+
+Each task body (the functions ``aot.py`` lowers) must (a) produce the
+shapes declared in the manifest and (b) agree with the ``ref.py`` oracle
+composition — e.g. running knn_frag + knn_merge over fragments must equal a
+brute-force k-NN over the concatenated training set.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+S = model.SHAPES
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def test_task_table_shapes_agree_with_eval_shape():
+    for name, (fn, args) in model.task_functions().items():
+        outs = jax.eval_shape(fn, *args)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        for o in outs:
+            assert all(dim > 0 for dim in o.shape), f"{name}: bad shape {o.shape}"
+
+
+def test_knn_frag_merge_equals_bruteforce():
+    r = rng(0)
+    tb, d, k = S["knn_test_block"], S["knn_d"], S["knn_k"]
+    tn = S["knn_train_n"]
+    test = r.normal(size=(tb, d)).astype(np.float32)
+    frags_x = [r.normal(size=(tn, d)).astype(np.float32) for _ in range(3)]
+    frags_y = [r.integers(0, S["knn_classes"], size=tn).astype(np.float32)
+               for _ in range(3)]
+
+    # Task-graph evaluation: frag + pairwise merges.
+    parts = [model.knn_frag(jnp.asarray(test), jnp.asarray(x), jnp.asarray(y))
+             for x, y in zip(frags_x, frags_y)]
+    d01, l01 = model.knn_merge(parts[0][0], parts[0][1], parts[1][0], parts[1][1])
+    dm, lm = model.knn_merge(d01, l01, parts[2][0], parts[2][1])
+
+    # Brute force over the concatenated training set.
+    all_x = jnp.asarray(np.concatenate(frags_x))
+    all_y = jnp.asarray(np.concatenate(frags_y))
+    dref, lref = ref.knn_frag(jnp.asarray(test), all_x, all_y, k)
+
+    np.testing.assert_allclose(np.sort(np.asarray(dm), axis=1),
+                               np.sort(np.asarray(dref), axis=1),
+                               rtol=1e-3, atol=1e-2)
+    # Final classification must agree.
+    got = np.asarray(model.knn_classify(lm)[0])
+    want = np.asarray(ref.knn_classify(lref.astype(jnp.int32), S["knn_classes"]))
+    assert (got == want).mean() > 0.99
+
+
+def test_kmeans_partial_matches_ref_and_merges():
+    r = rng(1)
+    n, d, k = S["km_frag_n"], S["km_d"], S["km_k"]
+    pts = r.normal(size=(n, d)).astype(np.float32)
+    cents = r.normal(size=(k, d)).astype(np.float32)
+    sums, counts = model.kmeans_partial(jnp.asarray(pts), jnp.asarray(cents))
+    rs, rc = ref.kmeans_partial(jnp.asarray(pts), jnp.asarray(cents))
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(rs),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(counts), np.asarray(rc))
+    assert float(jnp.sum(counts)) == n
+
+    # Splitting the fragment and merging partials must be equivalent.
+    s1, c1 = model.kmeans_partial(jnp.asarray(np.vstack([pts[: n // 2],
+                                                         pts[: n // 2]])),
+                                  jnp.asarray(cents))
+    assert float(jnp.sum(c1)) == n
+
+
+def test_kmeans_update_handles_empty_clusters():
+    k, d = S["km_k"], S["km_d"]
+    sums = jnp.ones((k, d), jnp.float32)
+    counts = jnp.zeros((k,), jnp.float32).at[0].set(2.0)
+    old = jnp.full((k, d), 7.0, jnp.float32)
+    new = np.asarray(model.kmeans_update(sums, counts, old)[0])
+    np.testing.assert_allclose(new[0], 0.5)
+    np.testing.assert_allclose(new[1:], 7.0)
+
+
+def test_linreg_pipeline_recovers_beta():
+    r = rng(2)
+    n, p = S["lr_frag_n"], S["lr_p"]
+    beta_true = r.normal(size=p).astype(np.float32) * 0.1
+    frags = []
+    for i in range(4):
+        x = r.normal(size=(n, p)).astype(np.float32)
+        y = (x @ beta_true + 0.001 * r.normal(size=n)).astype(np.float32)
+        frags.append((x, y))
+
+    ztz_total = None
+    zty_total = None
+    for x, y in frags:
+        zz = model.lr_ztz(jnp.asarray(x))[0]
+        zy = model.lr_zty(jnp.asarray(x), jnp.asarray(y))[0]
+        ztz_total = zz if ztz_total is None else model.merge_add2(ztz_total, zz)[0]
+        zty_total = zy if zty_total is None else model.merge_add2(zty_total, zy)[0]
+
+    beta = np.asarray(model.lr_solve(ztz_total, zty_total)[0])
+    np.testing.assert_allclose(beta, beta_true, rtol=5e-2, atol=5e-3)
+
+    # Prediction: X @ beta via the Pallas matmul path.
+    xp = frags[0][0][: S["lr_pred_block"]]
+    pred = np.asarray(model.lr_predict(jnp.asarray(xp), jnp.asarray(beta))[0])
+    np.testing.assert_allclose(pred, xp @ beta, rtol=1e-2, atol=2e-2)
+
+
+def test_merge_add2_is_elementwise_sum():
+    a = jnp.arange(12.0, dtype=jnp.float32).reshape(3, 4)
+    got = np.asarray(model.merge_add2(a, a)[0])
+    np.testing.assert_allclose(got, 2 * np.asarray(a))

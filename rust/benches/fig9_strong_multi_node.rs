@@ -1,0 +1,88 @@
+//! Regenerates **Figure 9**: strong scalability on up to 32 nodes.
+//!
+//! Fixed totals sized for ~8 nodes (paper: KNN 32.76M x50 test; K-means
+//! 1.22B x100; linreg 81.92M x1000 + 20.48M x1000 predictions); node count
+//! sweeps 1→32. Metric: strong efficiency T1/(n·Tn).
+//!
+//! Expected shape (paper §5.3): KNN 44% (Shaheen) / 56% (MN5) at 32 nodes;
+//! K-means 38% / 47%; linreg 28% on the fast-BLAS profile but >70% on the
+//! slow-BLAS profile.
+//!
+//! Run: `cargo bench --bench fig9_strong_multi_node`
+
+use rcompss::bench_harness::{banner, quick, record_result};
+use rcompss::cluster::{ClusterSpec, MachineProfile};
+use rcompss::sim::{plans, CostModel, SimEngine};
+use rcompss::util::json::Json;
+use rcompss::util::stats::strong_efficiency;
+use rcompss::util::table::{fmt_pct, fmt_secs, Table};
+
+fn nodes_sweep() -> Vec<u32> {
+    if quick() {
+        vec![1, 4, 16]
+    } else {
+        vec![1, 2, 4, 8, 16, 32]
+    }
+}
+
+fn plan_for(app: &str) -> rcompss::sim::sink::SimPlan {
+    // The paper's fixed totals (§5.3): KNN train 8000x50 / test 32.76Mx50
+    // (4096 blocks of 8000); K-means 1.22Bx100 (~4096 fragments of 300k);
+    // linreg 81.92Mx1000 (4096 fragments of 20k) + 20.48Mx1000 predictions
+    // (1024 blocks).
+    let s = rcompss::apps::Shapes::paper_multi_node();
+    match app {
+        "knn" => plans::knn_plan_with(4, 4096, 9, s).unwrap(),
+        "kmeans" => plans::kmeans_plan_with(4096, 3, 9, s).unwrap(),
+        "linreg" => plans::linreg_plan_with(4096, 1024, 9, s).unwrap(),
+        _ => unreachable!(),
+    }
+}
+
+fn main() {
+    banner(
+        "Figure 9 — strong scalability, up to 32 nodes",
+        "fixed totals (~8-node-sized); locality scheduler",
+    );
+    for profile in [MachineProfile::shaheen3(), MachineProfile::marenostrum5()] {
+        let wpn = profile.workers_per_node as usize;
+        println!("--- {} ({} workers/node) ---", profile.name, wpn);
+        for app in ["knn", "kmeans", "linreg"] {
+            let mut table = Table::new(&["nodes", "time", "speedup", "efficiency"])
+                .with_title(&format!("{app} @ {}", profile.name));
+            let mut t1 = None;
+            for nodes in nodes_sweep() {
+                let spec = ClusterSpec::new(profile.clone(), nodes);
+                let report = SimEngine::new(spec, CostModel::default())
+                    .with_scheduler("locality")
+                    .run(plan_for(app), &format!("{app}@{nodes}n"))
+                    .unwrap();
+                let t = report.makespan_s;
+                let base = *t1.get_or_insert(t);
+                let eff = strong_efficiency(base, t, nodes as f64);
+                table.row(vec![
+                    nodes.to_string(),
+                    fmt_secs(t),
+                    format!("{:.1}x", base / t),
+                    fmt_pct(eff),
+                ]);
+                record_result(
+                    "fig9",
+                    vec![
+                        ("machine", Json::Str(profile.name.clone())),
+                        ("app", Json::Str(app.into())),
+                        ("nodes", Json::Num(nodes as f64)),
+                        ("time_s", Json::Num(t)),
+                        ("efficiency", Json::Num(eff)),
+                    ],
+                );
+            }
+            table.print();
+            println!();
+        }
+    }
+    println!(
+        "paper shape: @32 nodes — KNN 44%/56%, K-means 38%/47%,\n\
+         linreg 28% (fast BLAS) vs >70% (slow BLAS)."
+    );
+}

@@ -1,0 +1,94 @@
+//! Regenerates **Table 1**: serialization (S) and deserialization (D)
+//! times for the codec set across square double-precision blocks.
+//!
+//! The paper measured 10K/20K/30K square blocks on a 56-core Ice Lake; by
+//! default this bench uses scaled sizes that fit this box's RAM and time
+//! budget (override with `T1_SIZES=10000,20000,30000` for the full run).
+//! Expected *shape* (paper): RMVL ≈ qs < fst < serialize_Rcpp << RDS on
+//! serialization; RMVL/qs fastest on deserialization.
+//!
+//! Run: `cargo bench --bench table1_serialization`
+
+use rcompss::bench_harness::{banner, record_result, time_reps};
+use rcompss::serialization::all_codecs;
+use rcompss::util::json::Json;
+use rcompss::util::prng::Pcg64;
+use rcompss::util::table::{fmt_secs, Table};
+use rcompss::value::Gen;
+
+fn sizes() -> Vec<usize> {
+    if let Ok(env) = std::env::var("T1_SIZES") {
+        return env
+            .split(',')
+            .filter_map(|s| s.trim().parse().ok())
+            .collect();
+    }
+    if rcompss::bench_harness::quick() {
+        vec![512, 1024]
+    } else {
+        vec![1000, 2000, 3000]
+    }
+}
+
+fn main() {
+    let sizes = sizes();
+    banner(
+        "Table 1 — serialization/deserialization times (seconds)",
+        &format!(
+            "square f64 blocks, sides {sizes:?} (paper: 10000/20000/30000; set T1_SIZES for full size)"
+        ),
+    );
+
+    let dir = std::env::temp_dir().join(format!("rcompss_table1_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let reps = rcompss::bench_harness::reps(3);
+
+    let mut header: Vec<String> = vec!["Method".into()];
+    for n in &sizes {
+        header.push(format!("{n} S"));
+        header.push(format!("{n} D"));
+    }
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&header_refs);
+
+    // Paper row order first (serialize_Rcpp, RDS, fst, qs, RMVL), then our
+    // extra baselines (rawbin, csv).
+    for codec in all_codecs() {
+        let mut row = vec![codec.name().to_string()];
+        for &n in &sizes {
+            let mut rng = Pcg64::seeded(n as u64);
+            let block = Gen::new(&mut rng).square_block(n);
+            let path = dir.join(format!("{}_{n}.bin", codec.name()));
+
+            let s = time_reps(reps, || codec.write_file(&block, &path).unwrap());
+            let d = time_reps(reps, || {
+                std::hint::black_box(codec.read_file(&path).unwrap());
+            });
+            // Sanity: the roundtrip must be exact.
+            assert!(codec.read_file(&path).unwrap().identical(&block));
+            row.push(fmt_secs(s.median));
+            row.push(fmt_secs(d.median));
+            record_result(
+                "table1",
+                vec![
+                    ("method", Json::Str(codec.name().into())),
+                    ("side", Json::Num(n as f64)),
+                    ("serialize_s", Json::Num(s.median)),
+                    ("deserialize_s", Json::Num(d.median)),
+                    ("bytes", Json::Num((n * n * 8) as f64)),
+                ],
+            );
+            std::fs::remove_file(&path).ok();
+        }
+        table.row(row);
+        eprintln!("  measured {}", codec.name());
+    }
+    println!();
+    table.print();
+
+    println!(
+        "\npaper shape check: RMVL & qs should lead both columns; RDS serialization\n\
+         should be the outlier (gzip). Raw numbers in target/bench_results.jsonl."
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,323 @@
+//! The RCOMPSs programming model — the five-call API of §3.2.
+//!
+//! | Paper (R)            | Here                                   |
+//! |----------------------|----------------------------------------|
+//! | `compss_start()`     | [`CompssRuntime::start`]               |
+//! | `task(f, ...)`       | [`CompssRuntime::register_task`]       |
+//! | calling `f.dec(...)` | [`CompssRuntime::submit`]              |
+//! | `compss_wait_on(x)`  | [`CompssRuntime::wait_on`]             |
+//! | `compss_barrier()`   | [`CompssRuntime::barrier`]             |
+//! | `compss_stop()`      | [`CompssRuntime::stop`]                |
+//!
+//! The Figure-2 example (adding four numbers with a two-argument `add`)
+//! reads almost identically — see `examples/quickstart.rs`.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::access::Direction;
+use crate::coordinator::registry::DataKey;
+use crate::coordinator::runtime::{Arg, Coordinator, CoordinatorConfig, TaskSpec};
+use crate::value::RValue;
+
+pub use crate::coordinator::runtime::RuntimeStats;
+
+/// Runtime configuration (re-exported coordinator config with API-level
+/// constructors).
+pub type RuntimeConfig = CoordinatorConfig;
+
+/// A future handle to data produced by a task — what the paper's R binding
+/// returns from a decorated call before synchronization.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DataRef(pub(crate) DataKey);
+
+impl DataRef {
+    /// The `dXvY` label of this handle (diagnostics, DOT cross-reference).
+    pub fn label(&self) -> String {
+        self.0.to_string()
+    }
+}
+
+/// An argument to a submitted task: a literal value or a [`DataRef`].
+#[derive(Clone)]
+pub enum TaskArg {
+    Value(RValue),
+    Future(DataRef),
+}
+
+impl From<RValue> for TaskArg {
+    fn from(v: RValue) -> TaskArg {
+        TaskArg::Value(v)
+    }
+}
+
+impl From<DataRef> for TaskArg {
+    fn from(r: DataRef) -> TaskArg {
+        TaskArg::Future(r)
+    }
+}
+
+impl From<f64> for TaskArg {
+    fn from(x: f64) -> TaskArg {
+        TaskArg::Value(RValue::scalar(x))
+    }
+}
+
+impl From<i32> for TaskArg {
+    fn from(x: i32) -> TaskArg {
+        TaskArg::Value(RValue::int_scalar(x))
+    }
+}
+
+/// A task definition: the analog of `task(add, "add.R", return_value=TRUE)`.
+pub struct TaskDef {
+    pub(crate) spec: Arc<TaskSpec>,
+}
+
+impl TaskDef {
+    /// Define a task with `arity` IN arguments and one return value.
+    pub fn new(
+        name: &str,
+        arity: usize,
+        body: impl Fn(&[RValue]) -> Result<Vec<RValue>> + Send + Sync + 'static,
+    ) -> TaskDef {
+        TaskDef {
+            spec: Arc::new(TaskSpec {
+                name: name.to_string(),
+                arity,
+                n_outputs: 1,
+                directions: vec![Direction::In; arity],
+                body: Arc::new(body),
+            }),
+        }
+    }
+
+    /// Override the number of return values (0 for side-effect-only tasks
+    /// whose completion is awaited via `barrier`).
+    pub fn with_outputs(mut self, n: usize) -> TaskDef {
+        Arc::get_mut(&mut self.spec)
+            .expect("with_outputs after registration")
+            .n_outputs = n;
+        self
+    }
+
+    /// Override per-argument directions (INOUT support).
+    pub fn with_directions(mut self, dirs: Vec<Direction>) -> TaskDef {
+        let spec = Arc::get_mut(&mut self.spec).expect("with_directions after registration");
+        assert_eq!(dirs.len(), spec.arity, "directions must match arity");
+        spec.directions = dirs;
+        self
+    }
+
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+}
+
+/// A registered task, bound to a runtime — calling it submits executions.
+#[derive(Clone)]
+pub struct RegisteredTask {
+    spec: Arc<TaskSpec>,
+}
+
+/// The runtime handle (`library(RCOMPSs)` + `compss_start()`).
+pub struct CompssRuntime {
+    coord: Coordinator,
+}
+
+impl CompssRuntime {
+    /// Initialize the COMPSs runtime (spawns the persistent worker pool).
+    pub fn start(config: RuntimeConfig) -> Result<CompssRuntime> {
+        Ok(CompssRuntime {
+            coord: Coordinator::start(config)?,
+        })
+    }
+
+    /// Register a task definition (the `task()` call).
+    pub fn register_task(&self, def: TaskDef) -> RegisteredTask {
+        RegisteredTask { spec: def.spec }
+    }
+
+    /// Submit an asynchronous execution; returns the handle to its single
+    /// return value. (Use [`CompssRuntime::submit_multi`] for multi-output
+    /// tasks.)
+    pub fn submit(&self, task: &RegisteredTask, args: &[TaskArg]) -> Result<DataRef> {
+        let out = self.submit_multi(task, args)?;
+        out.into_iter()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("task '{}' declares no outputs", task.spec.name))
+    }
+
+    /// Submit and get every output handle.
+    pub fn submit_multi(&self, task: &RegisteredTask, args: &[TaskArg]) -> Result<Vec<DataRef>> {
+        let coord_args: Vec<Arg> = args
+            .iter()
+            .map(|a| match a {
+                TaskArg::Value(v) => Arg::Value(v.clone()),
+                TaskArg::Future(r) => Arg::Ref(r.0),
+            })
+            .collect();
+        let outcome = self.coord.submit(&task.spec, &coord_args)?;
+        Ok(outcome
+            .returns
+            .into_iter()
+            .chain(outcome.updated)
+            .map(DataRef)
+            .collect())
+    }
+
+    /// `compss_wait_on`: block for and fetch a value.
+    pub fn wait_on(&self, r: &DataRef) -> Result<RValue> {
+        self.coord.wait_on(r.0)
+    }
+
+    /// `compss_barrier`: block until all submitted tasks finished.
+    pub fn barrier(&self) -> Result<()> {
+        self.coord.barrier()
+    }
+
+    /// `compss_stop`: drain, shut the pool down, and report statistics.
+    pub fn stop(self) -> Result<RuntimeStats> {
+        let workdir = self.coord.config.workdir.clone();
+        let stats = self.coord.stop()?;
+        let _ = std::fs::remove_dir_all(workdir);
+        Ok(stats)
+    }
+
+    /// Current DAG in Graphviz DOT (Figures 2-5).
+    pub fn dag_dot(&self, title: &str) -> String {
+        self.coord.dag_dot(title)
+    }
+
+    /// Trace snapshot (Figure 10).
+    pub fn trace(&self, label: &str) -> crate::trace::Trace {
+        self.coord.trace(label)
+    }
+
+    /// Runtime statistics snapshot.
+    pub fn stats(&self) -> RuntimeStats {
+        self.coord.stats()
+    }
+
+    /// DAG critical-path length.
+    pub fn critical_path_len(&self) -> usize {
+        self.coord.critical_path_len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn add_task() -> TaskDef {
+        TaskDef::new("add", 2, |args| {
+            let x = args[0].as_f64().ok_or_else(|| anyhow::anyhow!("x"))?;
+            let y = args[1].as_f64().ok_or_else(|| anyhow::anyhow!("y"))?;
+            Ok(vec![RValue::scalar(x + y)])
+        })
+    }
+
+    #[test]
+    fn figure2_add_four_numbers() {
+        let rt = CompssRuntime::start(RuntimeConfig::local(2)).unwrap();
+        let add = rt.register_task(add_task());
+        // Task(1), Task(2), Task(3) as in Figure 2.
+        let r1 = rt.submit(&add, &[4.0.into(), 5.0.into()]).unwrap();
+        let r2 = rt.submit(&add, &[6.0.into(), 7.0.into()]).unwrap();
+        let r3 = rt.submit(&add, &[r1.into(), r2.into()]).unwrap();
+        let v = rt.wait_on(&r3).unwrap();
+        assert_eq!(v.as_f64(), Some(22.0));
+        let stats = rt.stop().unwrap();
+        assert_eq!(stats.tasks_done, 3);
+        assert_eq!(stats.tasks_failed, 0);
+    }
+
+    #[test]
+    fn dag_of_figure2_has_diamond_shape() {
+        let rt = CompssRuntime::start(RuntimeConfig::local(2)).unwrap();
+        let add = rt.register_task(add_task());
+        let r1 = rt.submit(&add, &[1.0.into(), 2.0.into()]).unwrap();
+        let r2 = rt.submit(&add, &[3.0.into(), 4.0.into()]).unwrap();
+        let r3 = rt.submit(&add, &[r1.into(), r2.into()]).unwrap();
+        rt.wait_on(&r3).unwrap();
+        let dot = rt.dag_dot("fig2");
+        assert!(dot.contains("main ->"));
+        assert!(dot.contains("-> sync"));
+        // Two RAW edges into task 3.
+        assert_eq!(dot.matches("-> 3 [label=").count(), 2);
+        rt.stop().unwrap();
+    }
+
+    #[test]
+    fn barrier_waits_for_everything() {
+        let rt = CompssRuntime::start(RuntimeConfig::local(4)).unwrap();
+        let slow = rt.register_task(TaskDef::new("slow", 1, |args| {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            Ok(vec![args[0].clone()])
+        }));
+        for i in 0..16 {
+            rt.submit(&slow, &[(i as f64).into()]).unwrap();
+        }
+        rt.barrier().unwrap();
+        assert_eq!(rt.stats().tasks_done, 16);
+        rt.stop().unwrap();
+    }
+
+    #[test]
+    fn failing_task_surfaces_in_wait_on() {
+        let rt = CompssRuntime::start(RuntimeConfig::local(2)).unwrap();
+        let boom = rt.register_task(TaskDef::new("boom", 0, |_| {
+            anyhow::bail!("kaboom")
+        }));
+        let r = rt.submit(&boom, &[]).unwrap();
+        let err = rt.wait_on(&r).unwrap_err().to_string();
+        assert!(err.contains("failed"), "{err}");
+        assert!(rt.barrier().is_err());
+        // stop() still succeeds after failures.
+        let stats = rt.stop().unwrap();
+        assert_eq!(stats.tasks_failed, 1);
+        // Default retry policy ran it 1 + 2 times.
+        assert_eq!(stats.resubmissions, 2);
+    }
+
+    #[test]
+    fn zero_output_tasks_via_barrier() {
+        let rt = CompssRuntime::start(RuntimeConfig::local(2)).unwrap();
+        let sink = rt.register_task(TaskDef::new("sink", 1, |_| Ok(vec![])).with_outputs(0));
+        let refs = rt
+            .submit_multi(&sink, &[RValue::scalar(1.0).into()])
+            .unwrap();
+        assert!(refs.is_empty());
+        rt.barrier().unwrap();
+        rt.stop().unwrap();
+    }
+
+    #[test]
+    fn inout_argument_chains_versions() {
+        let rt = CompssRuntime::start(RuntimeConfig::local(2)).unwrap();
+        let init = rt.register_task(TaskDef::new("init", 0, |_| {
+            Ok(vec![RValue::scalar(0.0)])
+        }));
+        let bump = rt.register_task(
+            TaskDef::new("bump", 1, |args| {
+                let x = args[0].as_f64().unwrap();
+                Ok(vec![RValue::scalar(x + 1.0)])
+            })
+            .with_outputs(0)
+            .with_directions(vec![Direction::InOut]),
+        );
+        let counter = rt.submit(&init, &[]).unwrap();
+        // Three INOUT bumps must serialize (WAW/RAW chain) and the final
+        // version must be 3.
+        let mut latest = counter;
+        for _ in 0..3 {
+            let outs = rt.submit_multi(&bump, &[latest.into()]).unwrap();
+            assert_eq!(outs.len(), 1); // the updated INOUT handle
+            latest = outs[0];
+        }
+        let v = rt.wait_on(&latest).unwrap();
+        assert_eq!(v.as_f64(), Some(3.0));
+        rt.stop().unwrap();
+    }
+}

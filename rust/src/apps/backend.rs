@@ -1,0 +1,833 @@
+//! Task bodies for the benchmark apps, over two compute backends:
+//!
+//! * [`Backend::Pjrt`] — the AOT path: jax/Pallas-lowered HLO artifacts
+//!   executed through the PJRT runtime (the "Intel MKL" class of §5.2);
+//! * [`Backend::Native`] — the reference path: `crate::blas` single-thread
+//!   kernels (the "RBLAS" class).
+//!
+//! Both backends implement identical task semantics; the integration tests
+//! cross-check them against each other, and `runtime_hotpath` measures
+//! their GEMM ratio (the paper's ≈100x observation).
+//!
+//! Synthetic data generation lives here too — the paper's apps generate
+//! fragments *inside* tasks ("the data is generated on the fly and not read
+//! from files", §4.2), so fill tasks take `(seed, index)` literals and are
+//! perfectly reproducible.
+
+use anyhow::{anyhow, Result};
+
+use crate::api::TaskDef;
+use crate::apps::Shapes;
+use crate::blas;
+use crate::cluster::BlasClass;
+use crate::runtime::{self, tensor};
+use crate::util::prng::Pcg64;
+use crate::value::RValue;
+
+/// Which compute implementation the task bodies use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT HLO artifacts via PJRT (requires `make artifacts`).
+    Pjrt,
+    /// Pure-Rust reference BLAS.
+    Native,
+}
+
+impl Backend {
+    /// PJRT when artifacts are present, native otherwise.
+    pub fn auto() -> Backend {
+        if runtime::artifacts_available() {
+            Backend::Pjrt
+        } else {
+            Backend::Native
+        }
+    }
+
+    /// Map a machine profile's BLAS class to a backend.
+    pub fn for_class(class: BlasClass) -> Backend {
+        match class {
+            BlasClass::Fast => Backend::auto(),
+            BlasClass::Reference => Backend::Native,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Layout helpers (RValue column-major f64 <-> blas row-major f32).
+// ---------------------------------------------------------------------------
+
+fn rmat_to_native(v: &RValue) -> Result<blas::Mat> {
+    let (data, nrow, ncol) = v
+        .as_matrix()
+        .ok_or_else(|| anyhow!("expected matrix, got {}", v.type_name()))?;
+    let mut m = blas::Mat::new(nrow, ncol);
+    for c in 0..ncol {
+        for r in 0..nrow {
+            m.data[r * ncol + c] = data[c * nrow + r] as f32;
+        }
+    }
+    Ok(m)
+}
+
+fn native_to_rmat(m: &blas::Mat) -> RValue {
+    let mut col = vec![0f64; m.rows * m.cols];
+    for r in 0..m.rows {
+        for c in 0..m.cols {
+            col[c * m.rows + r] = m.data[r * m.cols + c] as f64;
+        }
+    }
+    RValue::matrix(col, m.rows, m.cols)
+}
+
+fn real_vec_f32(v: &RValue) -> Result<Vec<f32>> {
+    Ok(v.as_real()
+        .ok_or_else(|| anyhow!("expected double vector, got {}", v.type_name()))?
+        .iter()
+        .map(|x| *x as f32)
+        .collect())
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic data generation (shared by both backends).
+// ---------------------------------------------------------------------------
+
+/// KNN training fragment: Gaussian blobs, one center per class.
+/// Returns (X (n, d), labels (n,) as doubles 0..classes).
+pub fn gen_knn_points(seed: u64, stream: u64, n: usize, d: usize, classes: usize)
+    -> (RValue, RValue)
+{
+    let mut rng = Pcg64::new(seed, stream);
+    let mut x = vec![0f64; n * d];
+    let mut y = vec![0f64; n];
+    for i in 0..n {
+        let cls = rng.below(classes as u64) as usize;
+        y[i] = cls as f64;
+        for j in 0..d {
+            let center = if j % classes == cls { 3.0 } else { 0.0 };
+            // Column-major store.
+            x[j * n + i] = center + rng.normal();
+        }
+    }
+    (RValue::matrix(x, n, d), RValue::Real(y))
+}
+
+/// K-means fragment: mixture of `k` unit blobs at spread-out centers.
+pub fn gen_kmeans_points(seed: u64, stream: u64, n: usize, d: usize, k: usize) -> RValue {
+    let mut rng = Pcg64::new(seed, stream);
+    let mut x = vec![0f64; n * d];
+    for i in 0..n {
+        let blob = rng.below(k as u64) as usize;
+        for j in 0..d {
+            let center = 6.0 * (((blob * 31 + j * 17) % 13) as f64 - 6.0) / 6.0;
+            x[j * n + i] = center + rng.normal();
+        }
+    }
+    RValue::matrix(x, n, d)
+}
+
+/// Deterministic initial centroids (first k synthetic points of stream 0).
+pub fn gen_kmeans_init(seed: u64, k: usize, d: usize) -> RValue {
+    let pts = gen_kmeans_points(seed, u64::MAX, k, d, k);
+    pts
+}
+
+/// Ground-truth regression coefficients (deterministic, size p).
+pub fn lr_beta_true(p: usize) -> Vec<f64> {
+    (0..p).map(|j| 0.05 * (j as f64 * 0.7).sin()).collect()
+}
+
+/// Linear-regression fragment: X ~ N(0,1), y = X beta + 0.01 noise.
+pub fn gen_lr_fragment(seed: u64, stream: u64, n: usize, p: usize) -> (RValue, RValue) {
+    let mut rng = Pcg64::new(seed, stream);
+    let beta = lr_beta_true(p);
+    let mut x = vec![0f64; n * p];
+    for i in 0..n {
+        for j in 0..p {
+            x[j * n + i] = rng.normal();
+        }
+    }
+    let mut y = vec![0f64; n];
+    for i in 0..n {
+        let mut s = 0.0;
+        for j in 0..p {
+            s += x[j * n + i] * beta[j];
+        }
+        y[i] = s + 0.01 * rng.normal();
+    }
+    (RValue::matrix(x, n, p), RValue::Real(y))
+}
+
+// ---------------------------------------------------------------------------
+// Native compute kernels for the app semantics.
+// ---------------------------------------------------------------------------
+
+/// Brute-force k smallest distances per test row.
+/// Returns (dists (tb, k) col-major matrix, labels flat row-major Int).
+fn native_knn_frag(
+    test: &RValue,
+    train_x: &RValue,
+    train_y: &RValue,
+    k: usize,
+) -> Result<(RValue, RValue)> {
+    let t = rmat_to_native(test)?;
+    let tr = rmat_to_native(train_x)?;
+    let ty = real_vec_f32(train_y)?;
+    anyhow::ensure!(t.cols == tr.cols, "feature dims differ");
+    let (tb, tn, d) = (t.rows, tr.rows, t.cols);
+    let mut dists = vec![0f64; tb * k];
+    let mut labels = vec![0i32; tb * k];
+    let mut best: Vec<(f32, i32)> = Vec::with_capacity(k + 1);
+    for i in 0..tb {
+        best.clear();
+        let trow = &t.data[i * d..(i + 1) * d];
+        for j in 0..tn {
+            let rrow = &tr.data[j * d..(j + 1) * d];
+            let mut s = 0f32;
+            for (a, b) in trow.iter().zip(rrow.iter()) {
+                let diff = a - b;
+                s += diff * diff;
+            }
+            if best.len() < k || s < best[best.len() - 1].0 {
+                let pos = best.partition_point(|(bd, _)| *bd <= s);
+                best.insert(pos, (s, ty[j] as i32));
+                if best.len() > k {
+                    best.pop();
+                }
+            }
+        }
+        for (r, (bd, bl)) in best.iter().enumerate() {
+            dists[r * tb + i] = *bd as f64; // column-major (tb, k)
+            labels[i * k + r] = *bl; // row-major flat (tb, k)
+        }
+    }
+    Ok((RValue::matrix(dists, tb, k), RValue::Int(labels)))
+}
+
+/// Merge two sorted k-lists per row.
+fn native_knn_merge(
+    d1: &RValue,
+    l1: &RValue,
+    d2: &RValue,
+    l2: &RValue,
+) -> Result<(RValue, RValue)> {
+    let (dd1, tb, k) = d1.as_matrix().ok_or_else(|| anyhow!("d1 not matrix"))?;
+    let (dd2, tb2, k2) = d2.as_matrix().ok_or_else(|| anyhow!("d2 not matrix"))?;
+    anyhow::ensure!(tb == tb2 && k == k2, "merge shape mismatch");
+    let ll1 = l1.as_int().ok_or_else(|| anyhow!("l1 not int"))?;
+    let ll2 = l2.as_int().ok_or_else(|| anyhow!("l2 not int"))?;
+    let mut dists = vec![0f64; tb * k];
+    let mut labels = vec![0i32; tb * k];
+    for i in 0..tb {
+        let (mut a, mut b) = (0usize, 0usize);
+        for r in 0..k {
+            let da = dd1[a * tb + i];
+            let db = dd2[b * tb + i];
+            if da <= db {
+                dists[r * tb + i] = da;
+                labels[i * k + r] = ll1[i * k + a];
+                a += 1;
+            } else {
+                dists[r * tb + i] = db;
+                labels[i * k + r] = ll2[i * k + b];
+                b += 1;
+            }
+        }
+    }
+    Ok((RValue::matrix(dists, tb, k), RValue::Int(labels)))
+}
+
+fn native_knn_classify(labels: &RValue, tb: usize, k: usize, classes: usize) -> Result<RValue> {
+    let ll = labels.as_int().ok_or_else(|| anyhow!("labels not int"))?;
+    anyhow::ensure!(ll.len() == tb * k, "labels length");
+    let mut out = vec![0i32; tb];
+    let mut votes = vec![0u32; classes];
+    for i in 0..tb {
+        votes.iter_mut().for_each(|v| *v = 0);
+        for r in 0..k {
+            let c = ll[i * k + r];
+            if (0..classes as i32).contains(&c) {
+                votes[c as usize] += 1;
+            }
+        }
+        out[i] = votes
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, v)| **v)
+            .map(|(c, _)| c as i32)
+            .unwrap_or(0);
+    }
+    Ok(RValue::Int(out))
+}
+
+fn native_kmeans_partial(points: &RValue, centroids: &RValue) -> Result<(RValue, RValue)> {
+    let p = rmat_to_native(points)?;
+    let c = rmat_to_native(centroids)?;
+    anyhow::ensure!(p.cols == c.cols, "dims differ");
+    let (n, d, k) = (p.rows, p.cols, c.rows);
+    let mut sums = vec![0f64; k * d]; // row-major accumulation
+    let mut counts = vec![0f64; k];
+    for i in 0..n {
+        let row = &p.data[i * d..(i + 1) * d];
+        let mut best = (f32::INFINITY, 0usize);
+        for j in 0..k {
+            let crow = &c.data[j * d..(j + 1) * d];
+            let mut s = 0f32;
+            for (a, b) in row.iter().zip(crow.iter()) {
+                let diff = a - b;
+                s += diff * diff;
+            }
+            if s < best.0 {
+                best = (s, j);
+            }
+        }
+        counts[best.1] += 1.0;
+        let srow = &mut sums[best.1 * d..(best.1 + 1) * d];
+        for (sv, pv) in srow.iter_mut().zip(row.iter()) {
+            *sv += *pv as f64;
+        }
+    }
+    // Row-major -> column-major matrix.
+    let mut col = vec![0f64; k * d];
+    for r in 0..k {
+        for cc in 0..d {
+            col[cc * k + r] = sums[r * d + cc];
+        }
+    }
+    Ok((RValue::matrix(col, k, d), RValue::Real(counts)))
+}
+
+fn native_kmeans_update(sums: &RValue, counts: &RValue, old: &RValue) -> Result<RValue> {
+    let (s, k, d) = sums.as_matrix().ok_or_else(|| anyhow!("sums not matrix"))?;
+    let c = counts.as_real().ok_or_else(|| anyhow!("counts not real"))?;
+    let (o, k2, d2) = old.as_matrix().ok_or_else(|| anyhow!("old not matrix"))?;
+    anyhow::ensure!(k == k2 && d == d2 && c.len() == k, "update shape mismatch");
+    let mut out = vec![0f64; k * d];
+    for r in 0..k {
+        for cc in 0..d {
+            out[cc * k + r] = if c[r] > 0.0 {
+                s[cc * k + r] / c[r]
+            } else {
+                o[cc * k + r]
+            };
+        }
+    }
+    Ok(RValue::matrix(out, k, d))
+}
+
+fn elementwise_add(a: &RValue, b: &RValue) -> Result<RValue> {
+    match (a, b) {
+        (
+            RValue::Matrix { data: x, nrow, ncol },
+            RValue::Matrix { data: y, nrow: n2, ncol: c2 },
+        ) => {
+            anyhow::ensure!(nrow == n2 && ncol == c2, "matrix add shape mismatch");
+            Ok(RValue::matrix(
+                x.iter().zip(y).map(|(p, q)| p + q).collect(),
+                *nrow,
+                *ncol,
+            ))
+        }
+        (RValue::Real(x), RValue::Real(y)) => {
+            anyhow::ensure!(x.len() == y.len(), "vector add length mismatch");
+            Ok(RValue::Real(x.iter().zip(y).map(|(p, q)| p + q).collect()))
+        }
+        _ => anyhow::bail!("cannot add {} and {}", a.type_name(), b.type_name()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT bodies.
+// ---------------------------------------------------------------------------
+
+fn pjrt_knn_frag(
+    test: &RValue,
+    train_x: &RValue,
+    train_y: &RValue,
+    tb: usize,
+    k: usize,
+) -> Result<(RValue, RValue)> {
+    runtime::with_engine(|eng| {
+        let t = tensor::matrix_to_f32_literal(test)?;
+        let x = tensor::matrix_to_f32_literal(train_x)?;
+        let y = tensor::real_to_f32_literal(train_y)?;
+        let outs = eng.execute("knn_frag", &[t, x, y])?;
+        Ok((
+            tensor::literal_to_matrix(&outs[0], tb, k)?,
+            tensor::literal_to_int(&outs[1])?,
+        ))
+    })
+}
+
+fn pjrt_knn_merge(
+    d1: &RValue,
+    l1: &RValue,
+    d2: &RValue,
+    l2: &RValue,
+    tb: usize,
+    k: usize,
+) -> Result<(RValue, RValue)> {
+    runtime::with_engine(|eng| {
+        let a = tensor::matrix_to_f32_literal(d1)?;
+        let la = tensor::int_to_i32_literal_shaped(l1, &[tb, k])?;
+        let b = tensor::matrix_to_f32_literal(d2)?;
+        let lb = tensor::int_to_i32_literal_shaped(l2, &[tb, k])?;
+        let outs = eng.execute("knn_merge", &[a, la, b, lb])?;
+        Ok((
+            tensor::literal_to_matrix(&outs[0], tb, k)?,
+            tensor::literal_to_int(&outs[1])?,
+        ))
+    })
+}
+
+fn pjrt_knn_classify(labels: &RValue, tb: usize, k: usize) -> Result<RValue> {
+    runtime::with_engine(|eng| {
+        let l = tensor::int_to_i32_literal_shaped(labels, &[tb, k])?;
+        let outs = eng.execute("knn_classify", &[l])?;
+        tensor::literal_to_int(&outs[0])
+    })
+}
+
+fn pjrt_kmeans_partial(
+    points: &RValue,
+    centroids: &RValue,
+    k: usize,
+    d: usize,
+) -> Result<(RValue, RValue)> {
+    runtime::with_engine(|eng| {
+        let p = tensor::matrix_to_f32_literal(points)?;
+        let c = tensor::matrix_to_f32_literal(centroids)?;
+        let outs = eng.execute("kmeans_partial", &[p, c])?;
+        Ok((
+            tensor::literal_to_matrix(&outs[0], k, d)?,
+            tensor::literal_to_real(&outs[1])?,
+        ))
+    })
+}
+
+fn pjrt_kmeans_update(
+    sums: &RValue,
+    counts: &RValue,
+    old: &RValue,
+    k: usize,
+    d: usize,
+) -> Result<RValue> {
+    runtime::with_engine(|eng| {
+        let s = tensor::matrix_to_f32_literal(sums)?;
+        let c = tensor::real_to_f32_literal(counts)?;
+        let o = tensor::matrix_to_f32_literal(old)?;
+        let outs = eng.execute("kmeans_update", &[s, c, o])?;
+        tensor::literal_to_matrix(&outs[0], k, d)
+    })
+}
+
+fn pjrt_merge_add(task: &'static str, a: &RValue, b: &RValue) -> Result<RValue> {
+    runtime::with_engine(|eng| {
+        let to_lit = |v: &RValue| -> Result<xla::Literal> {
+            match v {
+                RValue::Matrix { .. } => tensor::matrix_to_f32_literal(v),
+                _ => tensor::real_to_f32_literal(v),
+            }
+        };
+        let la = to_lit(a)?;
+        let lb = to_lit(b)?;
+        let outs = eng.execute(task, &[la, lb])?;
+        match a {
+            RValue::Matrix { nrow, ncol, .. } => {
+                tensor::literal_to_matrix(&outs[0], *nrow, *ncol)
+            }
+            _ => tensor::literal_to_real(&outs[0]),
+        }
+    })
+}
+
+fn pjrt_lr_ztz(x: &RValue, p: usize) -> Result<RValue> {
+    runtime::with_engine(|eng| {
+        let lx = tensor::matrix_to_f32_literal(x)?;
+        let outs = eng.execute("lr_ztz", &[lx])?;
+        tensor::literal_to_matrix(&outs[0], p, p)
+    })
+}
+
+fn pjrt_lr_zty(x: &RValue, y: &RValue) -> Result<RValue> {
+    runtime::with_engine(|eng| {
+        let lx = tensor::matrix_to_f32_literal(x)?;
+        let ly = tensor::real_to_f32_literal(y)?;
+        let outs = eng.execute("lr_zty", &[lx, ly])?;
+        tensor::literal_to_real(&outs[0])
+    })
+}
+
+fn pjrt_lr_solve(ztz: &RValue, zty: &RValue) -> Result<RValue> {
+    runtime::with_engine(|eng| {
+        let a = tensor::matrix_to_f32_literal(ztz)?;
+        let b = tensor::real_to_f32_literal(zty)?;
+        let outs = eng.execute("lr_solve", &[a, b])?;
+        tensor::literal_to_real(&outs[0])
+    })
+}
+
+fn pjrt_lr_predict(x: &RValue, beta: &RValue) -> Result<RValue> {
+    runtime::with_engine(|eng| {
+        let lx = tensor::matrix_to_f32_literal(x)?;
+        let lb = tensor::real_to_f32_literal(beta)?;
+        let outs = eng.execute("lr_predict", &[lx, lb])?;
+        tensor::literal_to_real(&outs[0])
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Task definition tables (planner type name -> body).
+// ---------------------------------------------------------------------------
+
+fn arg_u64(args: &[RValue], i: usize) -> Result<u64> {
+    args[i]
+        .as_f64()
+        .map(|x| x as u64)
+        .ok_or_else(|| anyhow!("argument {i} is not a scalar"))
+}
+
+/// Bodies for the KNN planner's task types.
+pub fn knn_task_defs(s: Shapes, backend: Backend) -> Vec<(&'static str, TaskDef)> {
+    let (tb, tn, d, k, classes) =
+        (s.knn_test_block, s.knn_train_n, s.knn_d, s.knn_k, s.knn_classes);
+    vec![
+        (
+            "KNN_fill_fragment",
+            TaskDef::new("KNN_fill_fragment", 2, move |a| {
+                let (x, y) = gen_knn_points(arg_u64(a, 0)?, arg_u64(a, 1)?, tn, d, classes);
+                Ok(vec![x, y])
+            })
+            .with_outputs(2),
+        ),
+        (
+            "KNN_fill_test",
+            TaskDef::new("KNN_fill_test", 2, move |a| {
+                let (x, y) =
+                    gen_knn_points(arg_u64(a, 0)?.wrapping_add(0xF00D), arg_u64(a, 1)?, tb, d, classes);
+                Ok(vec![x, y])
+            })
+            .with_outputs(2),
+        ),
+        (
+            "KNN_frag",
+            TaskDef::new("KNN_frag", 3, move |a| {
+                let (dd, ll) = match backend {
+                    Backend::Pjrt => pjrt_knn_frag(&a[0], &a[1], &a[2], tb, k)?,
+                    Backend::Native => native_knn_frag(&a[0], &a[1], &a[2], k)?,
+                };
+                Ok(vec![dd, ll])
+            })
+            .with_outputs(2),
+        ),
+        (
+            "KNN_merge",
+            TaskDef::new("KNN_merge", 4, move |a| {
+                let (dd, ll) = match backend {
+                    Backend::Pjrt => pjrt_knn_merge(&a[0], &a[1], &a[2], &a[3], tb, k)?,
+                    Backend::Native => native_knn_merge(&a[0], &a[1], &a[2], &a[3])?,
+                };
+                Ok(vec![dd, ll])
+            })
+            .with_outputs(2),
+        ),
+        (
+            "KNN_classify",
+            TaskDef::new("KNN_classify", 1, move |a| {
+                let out = match backend {
+                    Backend::Pjrt => pjrt_knn_classify(&a[0], tb, k)?,
+                    Backend::Native => native_knn_classify(&a[0], tb, k, classes)?,
+                };
+                Ok(vec![out])
+            }),
+        ),
+    ]
+}
+
+/// Bodies for the K-means planner's task types.
+pub fn kmeans_task_defs(s: Shapes, backend: Backend) -> Vec<(&'static str, TaskDef)> {
+    let (n, d, k) = (s.km_frag_n, s.km_d, s.km_k);
+    vec![
+        (
+            "fill_fragment",
+            TaskDef::new("fill_fragment", 2, move |a| {
+                Ok(vec![gen_kmeans_points(arg_u64(a, 0)?, arg_u64(a, 1)?, n, d, k)])
+            }),
+        ),
+        (
+            "partial_sum",
+            TaskDef::new("partial_sum", 2, move |a| {
+                let (sums, counts) = match backend {
+                    Backend::Pjrt => pjrt_kmeans_partial(&a[0], &a[1], k, d)?,
+                    Backend::Native => native_kmeans_partial(&a[0], &a[1])?,
+                };
+                Ok(vec![sums, counts])
+            })
+            .with_outputs(2),
+        ),
+        (
+            "merge",
+            TaskDef::new("merge", 4, move |a| {
+                let (s2, c2) = match backend {
+                    Backend::Pjrt => (
+                        pjrt_merge_add("merge_add2_kmsums", &a[0], &a[2])?,
+                        pjrt_merge_add("merge_add2_kmcounts", &a[1], &a[3])?,
+                    ),
+                    Backend::Native => {
+                        (elementwise_add(&a[0], &a[2])?, elementwise_add(&a[1], &a[3])?)
+                    }
+                };
+                Ok(vec![s2, c2])
+            })
+            .with_outputs(2),
+        ),
+        (
+            "update_centroids",
+            TaskDef::new("update_centroids", 3, move |a| {
+                let out = match backend {
+                    Backend::Pjrt => pjrt_kmeans_update(&a[0], &a[1], &a[2], k, d)?,
+                    Backend::Native => native_kmeans_update(&a[0], &a[1], &a[2])?,
+                };
+                Ok(vec![out])
+            }),
+        ),
+    ]
+}
+
+/// Bodies for the linear-regression planner's task types.
+pub fn linreg_task_defs(s: Shapes, backend: Backend) -> Vec<(&'static str, TaskDef)> {
+    let (n, p, pn) = (s.lr_frag_n, s.lr_p, s.lr_pred_block);
+    vec![
+        (
+            "LR_fill_fragment",
+            TaskDef::new("LR_fill_fragment", 2, move |a| {
+                let (x, y) = gen_lr_fragment(arg_u64(a, 0)?, arg_u64(a, 1)?, n, p);
+                Ok(vec![x, y])
+            })
+            .with_outputs(2),
+        ),
+        (
+            "partial_ztz",
+            TaskDef::new("partial_ztz", 1, move |a| {
+                let out = match backend {
+                    Backend::Pjrt => pjrt_lr_ztz(&a[0], p)?,
+                    Backend::Native => {
+                        let x = rmat_to_native(&a[0])?;
+                        native_to_rmat(&blas::syrk_t(&x))
+                    }
+                };
+                Ok(vec![out])
+            }),
+        ),
+        (
+            "partial_zty",
+            TaskDef::new("partial_zty", 2, move |a| {
+                let out = match backend {
+                    Backend::Pjrt => pjrt_lr_zty(&a[0], &a[1])?,
+                    Backend::Native => {
+                        let x = rmat_to_native(&a[0])?;
+                        let y = real_vec_f32(&a[1])?;
+                        RValue::Real(
+                            blas::gemv_t(&x, &y)?.into_iter().map(|v| v as f64).collect(),
+                        )
+                    }
+                };
+                Ok(vec![out])
+            }),
+        ),
+        (
+            "merge_ztz",
+            TaskDef::new("merge_ztz", 2, move |a| {
+                let out = match backend {
+                    Backend::Pjrt => pjrt_merge_add("merge_add2_ztz", &a[0], &a[1])?,
+                    Backend::Native => elementwise_add(&a[0], &a[1])?,
+                };
+                Ok(vec![out])
+            }),
+        ),
+        (
+            "merge_zty",
+            TaskDef::new("merge_zty", 2, move |a| {
+                let out = match backend {
+                    Backend::Pjrt => pjrt_merge_add("merge_add2_zty", &a[0], &a[1])?,
+                    Backend::Native => elementwise_add(&a[0], &a[1])?,
+                };
+                Ok(vec![out])
+            }),
+        ),
+        (
+            "compute_model_parameters",
+            TaskDef::new("compute_model_parameters", 2, move |a| {
+                let out = match backend {
+                    Backend::Pjrt => pjrt_lr_solve(&a[0], &a[1])?,
+                    Backend::Native => {
+                        let ztz = rmat_to_native(&a[0])?;
+                        let zty = real_vec_f32(&a[1])?;
+                        RValue::Real(
+                            blas::solve_normal_eqs(&ztz, &zty, 1e-6)?
+                                .into_iter()
+                                .map(|v| v as f64)
+                                .collect(),
+                        )
+                    }
+                };
+                Ok(vec![out])
+            }),
+        ),
+        (
+            "LR_genpred",
+            TaskDef::new("LR_genpred", 2, move |a| {
+                let (x, y) = gen_lr_fragment(
+                    arg_u64(a, 0)?.wrapping_add(0xBEEF),
+                    arg_u64(a, 1)?,
+                    pn,
+                    p,
+                );
+                Ok(vec![x, y])
+            })
+            .with_outputs(2),
+        ),
+        (
+            "compute_prediction",
+            TaskDef::new("compute_prediction", 2, move |a| {
+                let out = match backend {
+                    Backend::Pjrt => pjrt_lr_predict(&a[0], &a[1])?,
+                    Backend::Native => {
+                        let x = rmat_to_native(&a[0])?;
+                        let b = real_vec_f32(&a[1])?;
+                        RValue::Real(
+                            blas::gemv(&x, &b)?.into_iter().map(|v| v as f64).collect(),
+                        )
+                    }
+                };
+                Ok(vec![out])
+            }),
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shapes_small() -> Shapes {
+        Shapes {
+            knn_train_n: 64,
+            knn_test_block: 16,
+            knn_d: 8,
+            knn_k: 4,
+            knn_classes: 3,
+            km_frag_n: 128,
+            km_d: 6,
+            km_k: 4,
+            lr_frag_n: 96,
+            lr_p: 12,
+            lr_pred_block: 32,
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let (x1, y1) = gen_knn_points(7, 3, 32, 4, 3);
+        let (x2, y2) = gen_knn_points(7, 3, 32, 4, 3);
+        assert!(x1.identical(&x2) && y1.identical(&y2));
+        let (x3, _) = gen_knn_points(7, 4, 32, 4, 3);
+        assert!(!x1.identical(&x3), "different streams differ");
+    }
+
+    #[test]
+    fn native_knn_frag_finds_true_neighbours() {
+        let s = shapes_small();
+        let (tx, ty) = gen_knn_points(1, 0, s.knn_train_n, s.knn_d, s.knn_classes);
+        // Query the training points themselves: nearest neighbour distance 0,
+        // nearest label == own label.
+        let (d, l) = native_knn_frag(&tx, &tx, &ty, s.knn_k).unwrap();
+        let (dd, n, _) = d.as_matrix().unwrap();
+        let ll = l.as_int().unwrap();
+        let y = ty.as_real().unwrap();
+        for i in 0..n {
+            assert!(dd[i] < 1e-6, "self-distance row {i}: {}", dd[i]);
+            assert_eq!(ll[i * s.knn_k], y[i] as i32);
+        }
+    }
+
+    #[test]
+    fn native_merge_keeps_k_smallest_sorted() {
+        let s = shapes_small();
+        let (tx, ty) = gen_knn_points(2, 0, s.knn_train_n, s.knn_d, s.knn_classes);
+        let (qx, _) = gen_knn_points(2, 9, s.knn_test_block, s.knn_d, s.knn_classes);
+        let (d1, l1) = native_knn_frag(&qx, &tx, &ty, s.knn_k).unwrap();
+        let (tx2, ty2) = gen_knn_points(2, 1, s.knn_train_n, s.knn_d, s.knn_classes);
+        let (d2, l2) = native_knn_frag(&qx, &tx2, &ty2, s.knn_k).unwrap();
+        let (dm, _lm) = native_knn_merge(&d1, &l1, &d2, &l2).unwrap();
+        let (dd, tb, k) = dm.as_matrix().unwrap();
+        let (a1, ..) = d1.as_matrix().unwrap();
+        let (a2, ..) = d2.as_matrix().unwrap();
+        for i in 0..tb {
+            // Rows sorted ascending.
+            for r in 1..k {
+                assert!(dd[r * tb + i] >= dd[(r - 1) * tb + i]);
+            }
+            // Global min preserved.
+            let m = a1[i].min(a2[i]);
+            assert_eq!(dd[i], m);
+        }
+    }
+
+    #[test]
+    fn native_kmeans_partial_counts_everything() {
+        let s = shapes_small();
+        let pts = gen_kmeans_points(3, 0, s.km_frag_n, s.km_d, s.km_k);
+        let init = gen_kmeans_init(3, s.km_k, s.km_d);
+        let (sums, counts) = native_kmeans_partial(&pts, &init).unwrap();
+        let total: f64 = counts.as_real().unwrap().iter().sum();
+        assert_eq!(total as usize, s.km_frag_n);
+        let (sm, k, d) = sums.as_matrix().unwrap();
+        assert_eq!((k, d), (s.km_k, s.km_d));
+        assert!(sm.iter().any(|v| *v != 0.0));
+    }
+
+    #[test]
+    fn native_linreg_pipeline_recovers_beta() {
+        let s = shapes_small();
+        let (x, y) = gen_lr_fragment(4, 0, s.lr_frag_n, s.lr_p);
+        let xm = rmat_to_native(&x).unwrap();
+        let ztz = blas::syrk_t(&xm);
+        let zty = blas::gemv_t(&xm, &real_vec_f32(&y).unwrap()).unwrap();
+        let beta = blas::solve_normal_eqs(&ztz, &zty, 1e-6).unwrap();
+        let truth = lr_beta_true(s.lr_p);
+        for (b, t) in beta.iter().zip(truth.iter()) {
+            assert!((*b as f64 - t).abs() < 0.02, "{b} vs {t}");
+        }
+    }
+
+    #[test]
+    fn layout_roundtrip() {
+        let v = RValue::matrix(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3);
+        let m = rmat_to_native(&v).unwrap();
+        assert_eq!(m.at(0, 0), 1.0);
+        assert_eq!(m.at(1, 0), 2.0);
+        assert_eq!(m.at(0, 2), 5.0);
+        let back = native_to_rmat(&m);
+        assert!(back.all_equal(&v, 1e-6));
+    }
+
+    #[test]
+    fn elementwise_add_checks_shapes() {
+        let a = RValue::zeros(2, 2);
+        let b = RValue::zeros(2, 3);
+        assert!(elementwise_add(&a, &b).is_err());
+        let ok = elementwise_add(&RValue::Real(vec![1.0]), &RValue::Real(vec![2.0])).unwrap();
+        assert_eq!(ok.as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn backend_auto_matches_artifact_presence() {
+        let b = Backend::auto();
+        if runtime::artifacts_available() {
+            assert_eq!(b, Backend::Pjrt);
+        } else {
+            assert_eq!(b, Backend::Native);
+        }
+        assert_eq!(Backend::for_class(BlasClass::Reference), Backend::Native);
+    }
+}

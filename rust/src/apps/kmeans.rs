@@ -1,0 +1,306 @@
+//! Parallel K-means clustering (§4.2, Figure 4).
+//!
+//! Fragments are generated independently (`fill_fragment`); each iteration
+//! runs `partial_sum` per fragment in parallel, combines the partial
+//! (sums, counts) through a hierarchical binary `merge` tree, and updates
+//! the global centroids (`update_centroids`). Convergence is decided on the
+//! master by comparing successive centroid matrices (`converged` in the
+//! paper) — a per-iteration synchronization visible as the black gap in the
+//! Figure-10b trace.
+
+use anyhow::Result;
+
+use crate::api::{CompssRuntime, RuntimeConfig};
+use crate::apps::backend::{self, Backend};
+use crate::apps::{mat_bytes, vec_bytes, LiveSink, Shapes, SinkRef, SubmitSpec, TaskSink};
+use crate::value::RValue;
+
+#[derive(Clone, Copy, Debug)]
+pub struct KmeansConfig {
+    pub fragments: usize,
+    /// Fixed iteration count (the scaling benches fix iterations so the
+    /// simulated and live DAGs are identical; live runs may stop earlier
+    /// when `tol` is reached).
+    pub iterations: usize,
+    /// Early-stop tolerance on centroid movement (live mode only;
+    /// `None` always runs `iterations`).
+    pub tol: Option<f64>,
+    pub seed: u64,
+    pub shapes: Shapes,
+}
+
+impl KmeansConfig {
+    pub fn small(seed: u64) -> KmeansConfig {
+        KmeansConfig {
+            fragments: 4,
+            iterations: 3,
+            tol: None,
+            seed,
+            shapes: Shapes::from_manifest(),
+        }
+    }
+}
+
+/// Plan one K-means iteration over existing fragment refs; returns the new
+/// centroids ref. (Figure 4 is exactly this subgraph.)
+pub fn plan_kmeans_iteration(
+    sink: &mut dyn TaskSink,
+    cfg: &KmeansConfig,
+    fragments: &[SinkRef],
+    centroids: SinkRef,
+) -> Result<SinkRef> {
+    let s = cfg.shapes;
+    let (k, d, n) = (s.km_k, s.km_d, s.km_frag_n);
+
+    // partial_sum per fragment (white nodes).
+    let mut partials: Vec<(SinkRef, SinkRef)> = Vec::with_capacity(fragments.len());
+    for f in fragments {
+        let outs = sink.submit(SubmitSpec {
+            ty: "partial_sum",
+            args: vec![(*f).into(), centroids.into()],
+            n_outputs: 2,
+            out_bytes: vec![mat_bytes(k, d), vec_bytes(k)],
+            cost_units: (n * k * d) as f64,
+            gemm_class: false,
+        })?;
+        partials.push((outs[0], outs[1]));
+    }
+
+    // Hierarchical merge tree (red nodes).
+    while partials.len() > 1 {
+        let mut next = Vec::with_capacity(partials.len().div_ceil(2));
+        let mut it = partials.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => {
+                    let outs = sink.submit(SubmitSpec {
+                        ty: "merge",
+                        args: vec![a.0.into(), a.1.into(), b.0.into(), b.1.into()],
+                        n_outputs: 2,
+                        out_bytes: vec![mat_bytes(k, d), vec_bytes(k)],
+                        cost_units: (k * d) as f64,
+                        gemm_class: false,
+                    })?;
+                    next.push((outs[0], outs[1]));
+                }
+                None => next.push(a),
+            }
+        }
+        partials = next;
+    }
+    let (sums, counts) = partials[0];
+
+    // Centroid update.
+    let new_centroids = sink.submit(SubmitSpec {
+        ty: "update_centroids",
+        args: vec![sums.into(), counts.into(), centroids.into()],
+        n_outputs: 1,
+        out_bytes: vec![mat_bytes(k, d)],
+        cost_units: (k * d) as f64,
+        gemm_class: false,
+    })?[0];
+    Ok(new_centroids)
+}
+
+/// Plan data generation + `iterations` rounds. Returns (fragments, final
+/// centroids).
+pub fn plan_kmeans(
+    sink: &mut dyn TaskSink,
+    cfg: &KmeansConfig,
+) -> Result<(Vec<SinkRef>, SinkRef)> {
+    let s = cfg.shapes;
+    let (k, d, n) = (s.km_k, s.km_d, s.km_frag_n);
+
+    // Fragment generation (blue nodes).
+    let mut fragments = Vec::with_capacity(cfg.fragments);
+    for f in 0..cfg.fragments {
+        let outs = sink.submit(SubmitSpec {
+            ty: "fill_fragment",
+            args: vec![(cfg.seed as i32).into(), (f as i32).into()],
+            n_outputs: 1,
+            out_bytes: vec![mat_bytes(n, d)],
+            cost_units: (n * d) as f64,
+            gemm_class: false,
+        })?;
+        fragments.push(outs[0]);
+    }
+
+    // Initial centroids: a small fill task of its own.
+    let mut centroids = sink.submit(SubmitSpec {
+        ty: "init_centroids",
+        args: vec![(cfg.seed as i32).into(), 0.into()],
+        n_outputs: 1,
+        out_bytes: vec![mat_bytes(k, d)],
+        cost_units: (k * d) as f64,
+        gemm_class: false,
+    })?[0];
+
+    for _ in 0..cfg.iterations {
+        centroids = plan_kmeans_iteration(sink, cfg, &fragments, centroids)?;
+        // The paper's `converged` check synchronizes the centroids each
+        // round on the master.
+        sink.sync(centroids)?;
+    }
+    sink.barrier()?;
+    Ok((fragments, centroids))
+}
+
+pub struct KmeansResult {
+    pub centroids: RValue,
+    pub iterations_run: usize,
+    /// Mean within-cluster movement of the final iteration (live runs).
+    pub last_shift: f64,
+}
+
+/// Live execution with optional early stopping via `tol`.
+pub fn run_kmeans(rt: &CompssRuntime, cfg: &KmeansConfig, backend: Backend) -> Result<KmeansResult> {
+    let mut defs = backend::kmeans_task_defs(cfg.shapes, backend);
+    // init_centroids body (shared generation, deterministic).
+    let s = cfg.shapes;
+    defs.push((
+        "init_centroids",
+        crate::api::TaskDef::new("init_centroids", 2, move |a| {
+            let seed = a[0].as_f64().unwrap_or(0.0) as u64;
+            Ok(vec![backend::gen_kmeans_init(seed, s.km_k, s.km_d)])
+        }),
+    ));
+    let mut sink = LiveSink::new(rt, defs);
+
+    // Mirror plan_kmeans but consult the synced centroids for early stop.
+    let (fragments, mut centroids) = {
+        // generation + init only (first part of plan_kmeans without loops)
+        let mut frags = Vec::with_capacity(cfg.fragments);
+        for f in 0..cfg.fragments {
+            let outs = sink.submit(SubmitSpec {
+                ty: "fill_fragment",
+                args: vec![(cfg.seed as i32).into(), (f as i32).into()],
+                n_outputs: 1,
+                out_bytes: vec![mat_bytes(s.km_frag_n, s.km_d)],
+                cost_units: (s.km_frag_n * s.km_d) as f64,
+                gemm_class: false,
+            })?;
+            frags.push(outs[0]);
+        }
+        let init = sink.submit(SubmitSpec {
+            ty: "init_centroids",
+            args: vec![(cfg.seed as i32).into(), 0.into()],
+            n_outputs: 1,
+            out_bytes: vec![mat_bytes(s.km_k, s.km_d)],
+            cost_units: (s.km_k * s.km_d) as f64,
+            gemm_class: false,
+        })?[0];
+        (frags, init)
+    };
+
+    let mut prev: Option<RValue> = None;
+    let mut last_shift = f64::INFINITY;
+    let mut iterations_run = 0;
+    for _ in 0..cfg.iterations {
+        centroids = plan_kmeans_iteration(&mut sink, cfg, &fragments, centroids)?;
+        sink.sync(centroids)?;
+        iterations_run += 1;
+        let current = sink.fetch(centroids)?;
+        if let Some(p) = &prev {
+            last_shift = centroid_shift(p, &current)?;
+            if let Some(tol) = cfg.tol {
+                if last_shift < tol {
+                    break;
+                }
+            }
+        }
+        prev = Some(current);
+    }
+    sink.barrier()?;
+    Ok(KmeansResult {
+        centroids: sink.fetch(centroids)?,
+        iterations_run,
+        last_shift,
+    })
+}
+
+/// Mean Euclidean movement between two centroid matrices — the `converged`
+/// criterion.
+pub fn centroid_shift(a: &RValue, b: &RValue) -> Result<f64> {
+    let (x, k, d) = a.as_matrix().ok_or_else(|| anyhow::anyhow!("a not matrix"))?;
+    let (y, k2, d2) = b.as_matrix().ok_or_else(|| anyhow::anyhow!("b not matrix"))?;
+    anyhow::ensure!(k == k2 && d == d2, "centroid shapes differ");
+    let mut total = 0.0;
+    for r in 0..k {
+        let mut s = 0.0;
+        for c in 0..d {
+            let diff = x[c * k + r] - y[c * k + r];
+            s += diff * diff;
+        }
+        total += s.sqrt();
+    }
+    Ok(total / k as f64)
+}
+
+pub fn run_kmeans_local(cfg: &KmeansConfig, workers: u32, backend: Backend) -> Result<KmeansResult> {
+    let rt = CompssRuntime::start(RuntimeConfig::local(workers))?;
+    let out = run_kmeans(&rt, cfg, backend);
+    rt.stop()?;
+    out
+}
+
+/// Expected task counts per config (DAG-parity tests).
+pub fn expected_task_counts(cfg: &KmeansConfig) -> Vec<(&'static str, usize)> {
+    let merges_per_iter = cfg.fragments.saturating_sub(1);
+    vec![
+        ("fill_fragment", cfg.fragments),
+        ("init_centroids", 1),
+        ("partial_sum", cfg.iterations * cfg.fragments),
+        ("merge", cfg.iterations * merges_per_iter),
+        ("update_centroids", cfg.iterations),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_shapes() -> Shapes {
+        Shapes {
+            km_frag_n: 256,
+            km_d: 8,
+            km_k: 4,
+            ..Shapes::default()
+        }
+    }
+
+    #[test]
+    fn kmeans_native_converges_on_blobs() {
+        let mut cfg = KmeansConfig::small(7);
+        cfg.shapes = small_shapes();
+        cfg.fragments = 3;
+        cfg.iterations = 8;
+        cfg.tol = Some(1e-3);
+        let res = run_kmeans_local(&cfg, 4, Backend::Native).unwrap();
+        assert!(res.iterations_run <= 8);
+        assert!(
+            res.last_shift < 0.05,
+            "did not converge: shift = {}",
+            res.last_shift
+        );
+        let (_, k, d) = res.centroids.as_matrix().unwrap();
+        assert_eq!((k, d), (4, 8));
+    }
+
+    #[test]
+    fn task_counts_match_figure4_pattern() {
+        let mut cfg = KmeansConfig::small(1);
+        cfg.fragments = 8;
+        cfg.iterations = 1;
+        let counts = expected_task_counts(&cfg);
+        let get = |ty: &str| counts.iter().find(|(t, _)| *t == ty).unwrap().1;
+        assert_eq!(get("partial_sum"), 8);
+        assert_eq!(get("merge"), 7);
+        assert_eq!(get("update_centroids"), 1);
+    }
+
+    #[test]
+    fn centroid_shift_zero_for_identical() {
+        let c = RValue::zeros(3, 2);
+        assert_eq!(centroid_shift(&c, &c).unwrap(), 0.0);
+    }
+}

@@ -1,0 +1,278 @@
+//! Parallel linear regression with prediction (§4.3, Figure 5).
+//!
+//! Nine task types, as the paper enumerates: `LR_fill_fragment` generates
+//! data fragments; `partial_ztz` / `partial_zty` compute per-fragment
+//! contributions to X^T X and X^T y; `merge_ztz` / `merge_zty` combine them
+//! in binary trees; `compute_model_parameters` solves the normal equations;
+//! `LR_genpred` generates prediction blocks and `compute_prediction`
+//! applies the model. This DAG is the *deepest* of the three apps —
+//! fill → partial → log2(f) merges → solve → predict — which is exactly
+//! why the paper sees linear regression scale worst (§5.2: "deeper task
+//! dependencies amplify the impact of runtime overheads").
+
+use anyhow::Result;
+
+use crate::api::{CompssRuntime, RuntimeConfig};
+use crate::apps::backend::{self, Backend};
+use crate::apps::{mat_bytes, vec_bytes, LiveSink, Shapes, SinkRef, SubmitSpec, TaskSink};
+use crate::value::RValue;
+
+#[derive(Clone, Copy, Debug)]
+pub struct LinregConfig {
+    /// Fitting fragments (n_total = fragments * lr_frag_n rows).
+    pub fragments: usize,
+    /// Prediction blocks.
+    pub pred_blocks: usize,
+    pub seed: u64,
+    pub shapes: Shapes,
+}
+
+impl LinregConfig {
+    pub fn small(seed: u64) -> LinregConfig {
+        LinregConfig {
+            fragments: 4,
+            pred_blocks: 2,
+            seed,
+            shapes: Shapes::from_manifest(),
+        }
+    }
+}
+
+pub struct LinregPlan {
+    pub beta: SinkRef,
+    /// (prediction, ground truth) per prediction block.
+    pub predictions: Vec<(SinkRef, SinkRef)>,
+}
+
+/// Emit the Figure-5 DAG through a sink.
+pub fn plan_linreg(sink: &mut dyn TaskSink, cfg: &LinregConfig) -> Result<LinregPlan> {
+    let s = cfg.shapes;
+    let (n, p, pn) = (s.lr_frag_n, s.lr_p, s.lr_pred_block);
+
+    // Fill fragments (blue). GEMM-class per §5.2's trace discussion
+    // (fill includes the X beta product for y).
+    let mut frags: Vec<(SinkRef, SinkRef)> = Vec::with_capacity(cfg.fragments);
+    for f in 0..cfg.fragments {
+        let outs = sink.submit(SubmitSpec {
+            ty: "LR_fill_fragment",
+            args: vec![(cfg.seed as i32).into(), (f as i32).into()],
+            n_outputs: 2,
+            out_bytes: vec![mat_bytes(n, p), vec_bytes(n)],
+            cost_units: (n * p) as f64,
+            gemm_class: true,
+        })?;
+        frags.push((outs[0], outs[1]));
+    }
+
+    // Partial moments (red partial_ztz, pink partial_zty).
+    let mut ztzs: Vec<SinkRef> = Vec::with_capacity(cfg.fragments);
+    let mut ztys: Vec<SinkRef> = Vec::with_capacity(cfg.fragments);
+    for (x, y) in &frags {
+        ztzs.push(
+            sink.submit(SubmitSpec {
+                ty: "partial_ztz",
+                args: vec![(*x).into()],
+                n_outputs: 1,
+                out_bytes: vec![mat_bytes(p, p)],
+                cost_units: (n * p * p) as f64,
+                gemm_class: true,
+            })?[0],
+        );
+        ztys.push(
+            sink.submit(SubmitSpec {
+                ty: "partial_zty",
+                args: vec![(*x).into(), (*y).into()],
+                n_outputs: 1,
+                out_bytes: vec![vec_bytes(p)],
+                cost_units: (n * p) as f64,
+                gemm_class: true,
+            })?[0],
+        );
+    }
+
+    // Merge trees (dark red).
+    let merge_tree = |sink: &mut dyn TaskSink,
+                      mut parts: Vec<SinkRef>,
+                      ty: &'static str,
+                      bytes: u64,
+                      units: f64|
+     -> Result<SinkRef> {
+        while parts.len() > 1 {
+            let mut next = Vec::with_capacity(parts.len().div_ceil(2));
+            let mut it = parts.into_iter();
+            while let Some(a) = it.next() {
+                match it.next() {
+                    Some(b) => next.push(
+                        sink.submit(SubmitSpec {
+                            ty,
+                            args: vec![a.into(), b.into()],
+                            n_outputs: 1,
+                            out_bytes: vec![bytes],
+                            cost_units: units,
+                            gemm_class: false,
+                        })?[0],
+                    ),
+                    None => next.push(a),
+                }
+            }
+            parts = next;
+        }
+        Ok(parts[0])
+    };
+    let ztz = merge_tree(sink, ztzs, "merge_ztz", mat_bytes(p, p), (p * p) as f64)?;
+    let zty = merge_tree(sink, ztys, "merge_zty", vec_bytes(p), p as f64)?;
+
+    // Solve (green).
+    let beta = sink.submit(SubmitSpec {
+        ty: "compute_model_parameters",
+        args: vec![ztz.into(), zty.into()],
+        n_outputs: 1,
+        out_bytes: vec![vec_bytes(p)],
+        cost_units: (p * p * p) as f64,
+        gemm_class: true,
+    })?[0];
+
+    // Prediction blocks (white LR_genpred, yellow compute_prediction).
+    let mut predictions = Vec::with_capacity(cfg.pred_blocks);
+    for b in 0..cfg.pred_blocks {
+        let gp = sink.submit(SubmitSpec {
+            ty: "LR_genpred",
+            args: vec![(cfg.seed as i32).into(), (b as i32).into()],
+            n_outputs: 2,
+            out_bytes: vec![mat_bytes(pn, p), vec_bytes(pn)],
+            cost_units: (pn * p) as f64,
+            gemm_class: true,
+        })?;
+        let (xp, ytrue) = (gp[0], gp[1]);
+        let yhat = sink.submit(SubmitSpec {
+            ty: "compute_prediction",
+            args: vec![xp.into(), beta.into()],
+            n_outputs: 1,
+            out_bytes: vec![vec_bytes(pn)],
+            cost_units: (pn * p) as f64,
+            gemm_class: true,
+        })?[0];
+        predictions.push((yhat, ytrue));
+    }
+
+    sink.sync(beta)?;
+    sink.barrier()?;
+    Ok(LinregPlan { beta, predictions })
+}
+
+pub struct LinregResult {
+    pub beta: RValue,
+    /// Max |beta - beta_true|.
+    pub beta_max_err: f64,
+    /// R^2 of the predictions against ground truth.
+    pub r2: f64,
+}
+
+pub fn run_linreg(rt: &CompssRuntime, cfg: &LinregConfig, backend: Backend) -> Result<LinregResult> {
+    let mut sink = LiveSink::new(rt, backend::linreg_task_defs(cfg.shapes, backend));
+    let plan = plan_linreg(&mut sink, cfg)?;
+
+    let beta = sink.fetch(plan.beta)?;
+    let bvals = beta
+        .as_real()
+        .ok_or_else(|| anyhow::anyhow!("beta not real"))?;
+    let truth = backend::lr_beta_true(cfg.shapes.lr_p);
+    let beta_max_err = bvals
+        .iter()
+        .zip(truth.iter())
+        .map(|(b, t)| (b - t).abs())
+        .fold(0.0, f64::max);
+
+    // R^2 over all prediction blocks.
+    let (mut ss_res, mut ss_tot, mut mean_acc, mut count) = (0.0, 0.0, 0.0, 0usize);
+    let mut pairs: Vec<(f64, f64)> = Vec::new();
+    for (yhat_ref, ytrue_ref) in &plan.predictions {
+        let yhat = sink.fetch(*yhat_ref)?;
+        let ytrue = sink.fetch(*ytrue_ref)?;
+        for (a, b) in yhat
+            .as_real()
+            .ok_or_else(|| anyhow::anyhow!("yhat not real"))?
+            .iter()
+            .zip(ytrue.as_real().ok_or_else(|| anyhow::anyhow!("ytrue"))?)
+        {
+            pairs.push((*a, *b));
+            mean_acc += *b;
+            count += 1;
+        }
+    }
+    let mean = mean_acc / count.max(1) as f64;
+    for (a, b) in &pairs {
+        ss_res += (b - a).powi(2);
+        ss_tot += (b - mean).powi(2);
+    }
+    let r2 = 1.0 - ss_res / ss_tot.max(1e-300);
+    Ok(LinregResult {
+        beta,
+        beta_max_err,
+        r2,
+    })
+}
+
+pub fn run_linreg_local(cfg: &LinregConfig, workers: u32, backend: Backend) -> Result<LinregResult> {
+    let rt = CompssRuntime::start(RuntimeConfig::local(workers))?;
+    let out = run_linreg(&rt, cfg, backend);
+    rt.stop()?;
+    out
+}
+
+/// Expected task counts (DAG-parity tests).
+pub fn expected_task_counts(cfg: &LinregConfig) -> Vec<(&'static str, usize)> {
+    let merges = cfg.fragments.saturating_sub(1);
+    vec![
+        ("LR_fill_fragment", cfg.fragments),
+        ("partial_ztz", cfg.fragments),
+        ("partial_zty", cfg.fragments),
+        ("merge_ztz", merges),
+        ("merge_zty", merges),
+        ("compute_model_parameters", 1),
+        ("LR_genpred", cfg.pred_blocks),
+        ("compute_prediction", cfg.pred_blocks),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linreg_native_recovers_model() {
+        let mut cfg = LinregConfig::small(11);
+        cfg.shapes = Shapes {
+            lr_frag_n: 200,
+            lr_p: 16,
+            lr_pred_block: 64,
+            ..Shapes::default()
+        };
+        cfg.fragments = 3;
+        cfg.pred_blocks = 2;
+        let res = run_linreg_local(&cfg, 4, Backend::Native).unwrap();
+        assert!(res.beta_max_err < 0.01, "beta err {}", res.beta_max_err);
+        assert!(res.r2 > 0.95, "r2 = {}", res.r2);
+    }
+
+    #[test]
+    fn nine_task_types_as_figure5() {
+        let cfg = LinregConfig::small(1);
+        // 8 listed types + the implicit sync = the paper's "nine task types
+        // for data loading, partial computation, merging, model fitting,
+        // and prediction".
+        assert_eq!(expected_task_counts(&cfg).len(), 8);
+    }
+
+    #[test]
+    fn counts_scale_with_fragments() {
+        let mut cfg = LinregConfig::small(1);
+        cfg.fragments = 8;
+        cfg.pred_blocks = 3;
+        let counts = expected_task_counts(&cfg);
+        let get = |ty: &str| counts.iter().find(|(t, _)| *t == ty).unwrap().1;
+        assert_eq!(get("partial_ztz"), 8);
+        assert_eq!(get("merge_ztz"), 7);
+        assert_eq!(get("compute_prediction"), 3);
+    }
+}

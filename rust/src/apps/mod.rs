@@ -1,0 +1,318 @@
+//! The paper's three benchmark applications (§4), written against the
+//! RCOMPSs programming model: K-nearest-neighbours classification, K-means
+//! clustering, and linear regression with prediction.
+//!
+//! ## Planner / sink split
+//!
+//! Each app is written once as a *planner* — a function that emits task
+//! submissions through the [`TaskSink`] trait following exactly the task
+//! decomposition of Figures 3-5 (`KNN_fill_fragment` → `KNN_frag` →
+//! `KNN_merge` tree → `KNN_classify`, etc.). Two sinks consume planners:
+//!
+//! * [`LiveSink`] binds task types to real bodies (PJRT artifacts or native
+//!   BLAS) and submits to the live [`CompssRuntime`];
+//! * `crate::sim::SimSink` materializes the same DAG inside the
+//!   discrete-event simulator with calibrated costs.
+//!
+//! The scale-out numbers of Figures 6-9 therefore run the *same* dependency
+//! structure and scheduler decisions as the real executions that validate
+//! correctness — the central fidelity property of this reproduction
+//! (DESIGN.md §7).
+
+pub mod backend;
+pub mod kmeans;
+pub mod knn;
+pub mod linreg;
+
+use crate::api::{CompssRuntime, DataRef, RegisteredTask, TaskArg, TaskDef};
+use crate::value::RValue;
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Opaque handle to a planner-level datum.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SinkRef(pub u64);
+
+/// Planner argument: literal or reference.
+#[derive(Clone)]
+pub enum SinkArg {
+    Lit(RValue),
+    Ref(SinkRef),
+}
+
+impl From<SinkRef> for SinkArg {
+    fn from(r: SinkRef) -> SinkArg {
+        SinkArg::Ref(r)
+    }
+}
+
+impl From<f64> for SinkArg {
+    fn from(x: f64) -> SinkArg {
+        SinkArg::Lit(RValue::scalar(x))
+    }
+}
+
+impl From<i32> for SinkArg {
+    fn from(x: i32) -> SinkArg {
+        SinkArg::Lit(RValue::int_scalar(x))
+    }
+}
+
+/// One task submission as the planners describe it.
+pub struct SubmitSpec {
+    /// Task type name — drives body lookup, trace colors, DOT labels.
+    pub ty: &'static str,
+    pub args: Vec<SinkArg>,
+    pub n_outputs: usize,
+    /// Estimated serialized size of each output (bytes) — the simulator's
+    /// I/O model and the locality scheduler need sizes before execution.
+    pub out_bytes: Vec<u64>,
+    /// Abstract work units (≈ flop count) for the simulator's cost model.
+    pub cost_units: f64,
+    /// GEMM-heavy task class — the MKL/RBLAS multiplier applies (§5.2).
+    pub gemm_class: bool,
+}
+
+/// Where planners send their task graph.
+pub trait TaskSink {
+    fn submit(&mut self, spec: SubmitSpec) -> Result<Vec<SinkRef>>;
+    /// Synchronization point on one datum (`compss_wait_on` in the DAGs).
+    fn sync(&mut self, r: SinkRef) -> Result<()>;
+    /// Global barrier (end-of-app `sync` node).
+    fn barrier(&mut self) -> Result<()>;
+}
+
+/// Live sink: executes planners on a [`CompssRuntime`] with real bodies.
+pub struct LiveSink<'rt> {
+    rt: &'rt CompssRuntime,
+    tasks: HashMap<&'static str, RegisteredTask>,
+    refs: HashMap<SinkRef, DataRef>,
+    next: u64,
+    /// Values fetched by `sync`, retrievable after planning.
+    pub fetched: HashMap<SinkRef, RValue>,
+}
+
+impl<'rt> LiveSink<'rt> {
+    /// Build a live sink with the given task bodies (type name -> def).
+    pub fn new(rt: &'rt CompssRuntime, defs: Vec<(&'static str, TaskDef)>) -> LiveSink<'rt> {
+        let tasks = defs
+            .into_iter()
+            .map(|(name, def)| (name, rt.register_task(def)))
+            .collect();
+        LiveSink {
+            rt,
+            tasks,
+            refs: HashMap::new(),
+            next: 0,
+            fetched: HashMap::new(),
+        }
+    }
+
+    /// Fetch a value produced by the plan (waits if still running).
+    pub fn fetch(&self, r: SinkRef) -> Result<RValue> {
+        if let Some(v) = self.fetched.get(&r) {
+            return Ok(v.clone());
+        }
+        let dref = self
+            .refs
+            .get(&r)
+            .ok_or_else(|| anyhow::anyhow!("unknown sink ref {r:?}"))?;
+        self.rt.wait_on(dref)
+    }
+}
+
+impl TaskSink for LiveSink<'_> {
+    fn submit(&mut self, spec: SubmitSpec) -> Result<Vec<SinkRef>> {
+        let task = self
+            .tasks
+            .get(spec.ty)
+            .ok_or_else(|| anyhow::anyhow!("no body registered for task type '{}'", spec.ty))?;
+        let args: Vec<TaskArg> = spec
+            .args
+            .iter()
+            .map(|a| match a {
+                SinkArg::Lit(v) => Ok(TaskArg::Value(v.clone())),
+                SinkArg::Ref(r) => {
+                    let dref = self
+                        .refs
+                        .get(r)
+                        .ok_or_else(|| anyhow::anyhow!("dangling sink ref {r:?}"))?;
+                    Ok(TaskArg::Future(*dref))
+                }
+            })
+            .collect::<Result<_>>()?;
+        let outs = self.rt.submit_multi(task, &args)?;
+        anyhow::ensure!(
+            outs.len() == spec.n_outputs,
+            "task '{}': planner declared {} outputs, runtime produced {}",
+            spec.ty,
+            spec.n_outputs,
+            outs.len()
+        );
+        let mut sink_refs = Vec::with_capacity(outs.len());
+        for dref in outs {
+            self.next += 1;
+            let sr = SinkRef(self.next);
+            self.refs.insert(sr, dref);
+            sink_refs.push(sr);
+        }
+        Ok(sink_refs)
+    }
+
+    fn sync(&mut self, r: SinkRef) -> Result<()> {
+        let v = self.fetch(r)?;
+        self.fetched.insert(r, v);
+        Ok(())
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        self.rt.barrier()
+    }
+}
+
+/// Shared canonical fragment shapes (mirrors python model.SHAPES; read from
+/// the artifact manifest when present so the two sides cannot drift).
+#[derive(Clone, Copy, Debug)]
+pub struct Shapes {
+    pub knn_train_n: usize,
+    pub knn_test_block: usize,
+    pub knn_d: usize,
+    pub knn_k: usize,
+    pub knn_classes: usize,
+    pub km_frag_n: usize,
+    pub km_d: usize,
+    pub km_k: usize,
+    pub lr_frag_n: usize,
+    pub lr_p: usize,
+    pub lr_pred_block: usize,
+}
+
+impl Default for Shapes {
+    fn default() -> Shapes {
+        Shapes {
+            knn_train_n: 2048,
+            knn_test_block: 512,
+            knn_d: 64,
+            knn_k: 8,
+            knn_classes: 10,
+            km_frag_n: 4096,
+            km_d: 64,
+            km_k: 16,
+            lr_frag_n: 2048,
+            lr_p: 256,
+            lr_pred_block: 2048,
+        }
+    }
+}
+
+impl Shapes {
+    /// The paper's single-node workload shapes (§5.2): KNN training fixed
+    /// at 2000x50 with 2000x50 test per core; K-means 864,000x50 per core;
+    /// linreg 80,000x1000 fitting + 20,000x1000 prediction per core. Used
+    /// by the simulated Figure-6/7 sweeps (structure is identical to the
+    /// artifact shapes; only byte/flop weights differ).
+    pub fn paper_single_node() -> Shapes {
+        Shapes {
+            knn_train_n: 2000,
+            knn_test_block: 2000,
+            knn_d: 50,
+            knn_k: 8,
+            knn_classes: 10,
+            km_frag_n: 864_000,
+            km_d: 50,
+            km_k: 16,
+            lr_frag_n: 80_000,
+            lr_p: 1000,
+            lr_pred_block: 20_000,
+        }
+    }
+
+    /// The paper's multi-node workload shapes (§5.3): KNN test 1.016Mx50
+    /// per node (≈8000 per worker), K-means 38.18Mx100 per node (≈300k per
+    /// worker), linreg 2.56Mx1000 per node (=20k per worker). Figure-8/9
+    /// sweeps.
+    pub fn paper_multi_node() -> Shapes {
+        Shapes {
+            knn_train_n: 2000,
+            knn_test_block: 8000,
+            knn_d: 50,
+            knn_k: 8,
+            knn_classes: 10,
+            km_frag_n: 300_000,
+            km_d: 100,
+            km_k: 16,
+            lr_frag_n: 20_000,
+            lr_p: 1000,
+            lr_pred_block: 20_000,
+        }
+    }
+
+    /// Load from the artifact manifest, falling back to defaults.
+    pub fn from_manifest() -> Shapes {
+        let mut s = Shapes::default();
+        if let Ok(m) = crate::runtime::Manifest::load(&crate::runtime::artifacts_dir()) {
+            let get = |k: &str, slot: &mut usize| {
+                if let Ok(v) = m.shape(k) {
+                    *slot = v;
+                }
+            };
+            get("knn_train_n", &mut s.knn_train_n);
+            get("knn_test_block", &mut s.knn_test_block);
+            get("knn_d", &mut s.knn_d);
+            get("knn_k", &mut s.knn_k);
+            get("knn_classes", &mut s.knn_classes);
+            get("km_frag_n", &mut s.km_frag_n);
+            get("km_d", &mut s.km_d);
+            get("km_k", &mut s.km_k);
+            get("lr_frag_n", &mut s.lr_frag_n);
+            get("lr_p", &mut s.lr_p);
+            get("lr_pred_block", &mut s.lr_pred_block);
+        }
+        s
+    }
+}
+
+/// Bytes of an f64 matrix payload plus codec overhead (≈ wire size).
+pub(crate) fn mat_bytes(nrow: usize, ncol: usize) -> u64 {
+    (nrow * ncol * 8 + 64) as u64
+}
+
+pub(crate) fn vec_bytes(len: usize) -> u64 {
+    (len * 8 + 64) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_default_matches_python_model() {
+        let s = Shapes::default();
+        assert_eq!(s.knn_train_n, 2048);
+        assert_eq!(s.km_k, 16);
+        assert_eq!(s.lr_p, 256);
+    }
+
+    #[test]
+    fn shapes_from_manifest_agrees_when_present() {
+        // When artifacts exist, manifest values must equal the defaults
+        // (drift between python SHAPES and Shapes::default is a bug).
+        if crate::runtime::artifacts_available() {
+            let m = Shapes::from_manifest();
+            let d = Shapes::default();
+            assert_eq!(m.knn_train_n, d.knn_train_n);
+            assert_eq!(m.knn_test_block, d.knn_test_block);
+            assert_eq!(m.km_frag_n, d.km_frag_n);
+            assert_eq!(m.lr_frag_n, d.lr_frag_n);
+            assert_eq!(m.lr_p, d.lr_p);
+        }
+    }
+
+    #[test]
+    fn sink_arg_conversions() {
+        let a: SinkArg = 3.5f64.into();
+        assert!(matches!(a, SinkArg::Lit(_)));
+        let r: SinkArg = SinkRef(7).into();
+        assert!(matches!(r, SinkArg::Ref(SinkRef(7))));
+    }
+}

@@ -1,0 +1,92 @@
+//! Shared bench harness (criterion is not in the offline vendor set).
+//!
+//! Every file in `rust/benches/` is a plain `harness = false` binary that
+//! uses these helpers to time workloads, compute the paper's efficiency
+//! metrics, and print the same rows/series the paper reports. Each bench
+//! also appends a machine-readable JSON line to
+//! `target/bench_results.jsonl` so EXPERIMENTS.md can be assembled from
+//! real outputs.
+
+use std::io::Write as _;
+use std::time::Instant;
+
+use crate::util::json::{obj, Json};
+use crate::util::stats::Summary;
+
+/// Time one closure invocation in seconds.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (f64, T) {
+    let t0 = Instant::now();
+    let out = f();
+    (t0.elapsed().as_secs_f64(), out)
+}
+
+/// Time `reps` invocations and summarize.
+pub fn time_reps<T>(reps: usize, mut f: impl FnMut() -> T) -> Summary {
+    assert!(reps > 0);
+    let samples: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            let out = f();
+            std::hint::black_box(&out);
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    Summary::of(&samples)
+}
+
+/// Environment knob: `RCOMPSS_BENCH_REPS` (default given).
+pub fn reps(default: usize) -> usize {
+    std::env::var("RCOMPSS_BENCH_REPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Environment knob: quick mode trims sweeps for CI (`RCOMPSS_BENCH_QUICK=1`).
+pub fn quick() -> bool {
+    std::env::var("RCOMPSS_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Append a JSON record to `target/bench_results.jsonl`.
+pub fn record_result(bench: &str, fields: Vec<(&str, Json)>) {
+    let mut all = vec![("bench", Json::Str(bench.to_string()))];
+    all.extend(fields);
+    let line = obj(all).to_string_compact();
+    let path = std::path::Path::new("target").join("bench_results.jsonl");
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        let _ = writeln!(f, "{line}");
+    }
+}
+
+/// Standard header for a bench binary.
+pub fn banner(title: &str, detail: &str) {
+    println!("\n=== {title} ===");
+    if !detail.is_empty() {
+        println!("{detail}");
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_reps_counts() {
+        let s = time_reps(5, || std::thread::sleep(std::time::Duration::from_micros(200)));
+        assert_eq!(s.n, 5);
+        assert!(s.min >= 0.0002);
+    }
+
+    #[test]
+    fn record_result_appends_parseable_json() {
+        record_result("unit_test", vec![("x", Json::Num(1.0))]);
+        let text = std::fs::read_to_string("target/bench_results.jsonl").unwrap();
+        let last = text.lines().last().unwrap();
+        let v = Json::parse(last).unwrap();
+        assert_eq!(v.get("bench").as_str(), Some("unit_test"));
+    }
+}

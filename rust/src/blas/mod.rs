@@ -1,0 +1,306 @@
+//! Native dense linear algebra — the "reference RBLAS" substrate.
+//!
+//! The paper's decisive single-node observation (§5.2) is that R on
+//! Shaheen-III links Intel MKL while R on MareNostrum 5 uses single-thread
+//! reference RBLAS, a ≈100x GEMM gap that flips linear regression's
+//! scalability story. This module is our RBLAS stand-in: correct,
+//! deliberately straightforward single-threaded kernels (triple-loop GEMM
+//! with only the classic ikj ordering for cache sanity, unblocked
+//! Cholesky), used (a) as the compute backend for the `Reference` BLAS
+//! machine profile and (b) as the fallback when PJRT artifacts are absent.
+//! The PJRT/XLA path plays the MKL role; `runtime_hotpath` measures the
+//! actual ratio on this box and feeds it to the simulator's cost model.
+//!
+//! Matrices are **row-major** here (the compute layer's layout; `RValue`
+//! matrices are column-major R-style and get converted at the app
+//! boundary).
+
+use anyhow::{bail, Result};
+
+/// Row-major matrix view for the native kernels.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub data: Vec<f32>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl Mat {
+    pub fn new(rows: usize, cols: usize) -> Mat {
+        Mat {
+            data: vec![0.0; rows * cols],
+            rows,
+            cols,
+        }
+    }
+
+    pub fn from_vec(data: Vec<f32>, rows: usize, cols: usize) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { data, rows, cols }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+}
+
+/// C = A @ B, single-threaded ikj triple loop (reference-BLAS class).
+pub fn gemm(a: &Mat, b: &Mat) -> Result<Mat> {
+    if a.cols != b.rows {
+        bail!("gemm dims: ({}x{}) @ ({}x{})", a.rows, a.cols, b.rows, b.cols);
+    }
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::new(m, n);
+    for i in 0..m {
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let aik = a.data[i * k + kk];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += aik * bv;
+            }
+        }
+    }
+    Ok(c)
+}
+
+/// C = A^T @ A (Gram matrix), exploiting symmetry.
+pub fn syrk_t(a: &Mat) -> Mat {
+    let (n, p) = (a.rows, a.cols);
+    let mut c = Mat::new(p, p);
+    for r in 0..n {
+        let row = &a.data[r * p..(r + 1) * p];
+        for i in 0..p {
+            let v = row[i];
+            if v == 0.0 {
+                continue;
+            }
+            let ci = &mut c.data[i * p..(i + 1) * p];
+            for j in i..p {
+                ci[j] += v * row[j];
+            }
+        }
+    }
+    // Mirror the upper triangle.
+    for i in 0..p {
+        for j in 0..i {
+            c.data[i * p + j] = c.data[j * p + i];
+        }
+    }
+    c
+}
+
+/// y = A^T @ x.
+pub fn gemv_t(a: &Mat, x: &[f32]) -> Result<Vec<f32>> {
+    if x.len() != a.rows {
+        bail!("gemv_t dims: ({}x{})^T @ {}", a.rows, a.cols, x.len());
+    }
+    let mut y = vec![0.0f32; a.cols];
+    for r in 0..a.rows {
+        let xr = x[r];
+        if xr == 0.0 {
+            continue;
+        }
+        let row = &a.data[r * a.cols..(r + 1) * a.cols];
+        for (yv, av) in y.iter_mut().zip(row.iter()) {
+            *yv += xr * av;
+        }
+    }
+    Ok(y)
+}
+
+/// y = A @ x.
+pub fn gemv(a: &Mat, x: &[f32]) -> Result<Vec<f32>> {
+    if x.len() != a.cols {
+        bail!("gemv dims: ({}x{}) @ {}", a.rows, a.cols, x.len());
+    }
+    let mut y = vec![0.0f32; a.rows];
+    for r in 0..a.rows {
+        let row = &a.data[r * a.cols..(r + 1) * a.cols];
+        y[r] = row.iter().zip(x.iter()).map(|(a, b)| a * b).sum();
+    }
+    Ok(y)
+}
+
+/// Unblocked Cholesky factorization (lower), in place on a copy.
+/// Fails on non-SPD input.
+pub fn cholesky(a: &Mat) -> Result<Mat> {
+    if a.rows != a.cols {
+        bail!("cholesky needs a square matrix, got {}x{}", a.rows, a.cols);
+    }
+    let n = a.rows;
+    let mut l = Mat::new(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.at(i, j) as f64;
+            for k in 0..j {
+                s -= l.at(i, k) as f64 * l.at(j, k) as f64;
+            }
+            if i == j {
+                if s <= 0.0 {
+                    bail!("matrix is not positive definite (pivot {i}: {s})");
+                }
+                l.set(i, j, s.sqrt() as f32);
+            } else {
+                l.set(i, j, (s / l.at(j, j) as f64) as f32);
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve A x = b for SPD A via Cholesky (two triangular sweeps).
+pub fn cho_solve(a: &Mat, b: &[f32]) -> Result<Vec<f32>> {
+    let n = a.rows;
+    if b.len() != n {
+        bail!("cho_solve dims: A is {}x{}, b has {}", n, a.cols, b.len());
+    }
+    let l = cholesky(a)?;
+    // Forward: L z = b.
+    let mut z = vec![0.0f32; n];
+    for i in 0..n {
+        let mut s = b[i] as f64;
+        for k in 0..i {
+            s -= l.at(i, k) as f64 * z[k] as f64;
+        }
+        z[i] = (s / l.at(i, i) as f64) as f32;
+    }
+    // Backward: L^T x = z.
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut s = z[i] as f64;
+        for k in i + 1..n {
+            s -= l.at(k, i) as f64 * x[k] as f64;
+        }
+        x[i] = (s / l.at(i, i) as f64) as f32;
+    }
+    Ok(x)
+}
+
+/// Solve the ridge-stabilized normal equations (X^T X + eps I) beta = X^T y
+/// given precomputed Gram/moment inputs — the native path for
+/// `compute_model_parameters`.
+pub fn solve_normal_eqs(ztz: &Mat, zty: &[f32], eps: f32) -> Result<Vec<f32>> {
+    let n = ztz.rows;
+    let mut a = ztz.clone();
+    for i in 0..n {
+        a.data[i * n + i] += eps;
+    }
+    cho_solve(&a, zty)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    fn random_mat(rng: &mut Pcg64, r: usize, c: usize) -> Mat {
+        let data = (0..r * c).map(|_| rng.normal() as f32).collect();
+        Mat::from_vec(data, r, c)
+    }
+
+    #[test]
+    fn gemm_small_known() {
+        let a = Mat::from_vec(vec![1.0, 2.0, 3.0, 4.0], 2, 2);
+        let b = Mat::from_vec(vec![1.0, 1.0, 1.0, 1.0], 2, 2);
+        let c = gemm(&a, &b).unwrap();
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn gemm_rejects_bad_dims() {
+        let a = Mat::new(2, 3);
+        let b = Mat::new(2, 3);
+        assert!(gemm(&a, &b).is_err());
+    }
+
+    #[test]
+    fn syrk_matches_gemm() {
+        let mut rng = Pcg64::seeded(1);
+        let a = random_mat(&mut rng, 17, 9);
+        let at = {
+            let mut t = Mat::new(a.cols, a.rows);
+            for i in 0..a.rows {
+                for j in 0..a.cols {
+                    t.set(j, i, a.at(i, j));
+                }
+            }
+            t
+        };
+        let want = gemm(&at, &a).unwrap();
+        let got = syrk_t(&a);
+        for (x, y) in got.data.iter().zip(want.data.iter()) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn gemv_pair_consistent_with_gemm() {
+        let mut rng = Pcg64::seeded(2);
+        let a = random_mat(&mut rng, 8, 5);
+        let x: Vec<f32> = (0..5).map(|_| rng.normal() as f32).collect();
+        let y = gemv(&a, &x).unwrap();
+        for (i, yi) in y.iter().enumerate() {
+            let want: f32 = (0..5).map(|j| a.at(i, j) * x[j]).sum();
+            assert!((yi - want).abs() < 1e-5);
+        }
+        let xt: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+        let yt = gemv_t(&a, &xt).unwrap();
+        for (j, yj) in yt.iter().enumerate() {
+            let want: f32 = (0..8).map(|i| a.at(i, j) * xt[i]).sum();
+            assert!((yj - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Pcg64::seeded(3);
+        let x = random_mat(&mut rng, 20, 6);
+        let mut a = syrk_t(&x);
+        for i in 0..6 {
+            a.data[i * 6 + i] += 1.0; // well-conditioned SPD
+        }
+        let l = cholesky(&a).unwrap();
+        // L L^T == A.
+        for i in 0..6 {
+            for j in 0..6 {
+                let mut s = 0.0f64;
+                for k in 0..6 {
+                    s += l.at(i, k) as f64 * l.at(j, k) as f64;
+                }
+                assert!((s - a.at(i, j) as f64).abs() < 1e-3, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_vec(vec![1.0, 2.0, 2.0, 1.0], 2, 2); // eigvals 3, -1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn normal_equations_recover_beta() {
+        let mut rng = Pcg64::seeded(4);
+        let n = 200;
+        let p = 8;
+        let x = random_mat(&mut rng, n, p);
+        let beta_true: Vec<f32> = (0..p).map(|i| 0.1 * (i as f32 + 1.0)).collect();
+        let y = gemv(&x, &beta_true).unwrap();
+        let ztz = syrk_t(&x);
+        let zty = gemv_t(&x, &y).unwrap();
+        let beta = solve_normal_eqs(&ztz, &zty, 1e-6).unwrap();
+        for (b, t) in beta.iter().zip(beta_true.iter()) {
+            assert!((b - t).abs() < 1e-3, "{b} vs {t}");
+        }
+    }
+}

@@ -1,0 +1,61 @@
+//! Parameter access directions.
+//!
+//! COMPSs' dependency detection is driven by how each task parameter is
+//! accessed: inputs create read-after-write dependencies on the last
+//! producer, outputs create write-after-read/write-after-write dependencies
+//! and bump the datum's version. RCOMPSs derives directions from the R
+//! function signature (arguments are IN, return values are OUT); the
+//! binding-commons API also supports INOUT, which we keep for generality.
+
+use std::fmt;
+
+/// How a task accesses one parameter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Direction {
+    /// Read-only: the task consumes the current version.
+    In,
+    /// Write-only: the task produces a fresh version; prior content unread.
+    Out,
+    /// Read-modify-write: consumes the current version, produces the next.
+    InOut,
+}
+
+impl Direction {
+    pub fn reads(self) -> bool {
+        matches!(self, Direction::In | Direction::InOut)
+    }
+
+    pub fn writes(self) -> bool {
+        matches!(self, Direction::Out | Direction::InOut)
+    }
+}
+
+impl fmt::Display for Direction {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Direction::In => "IN",
+            Direction::Out => "OUT",
+            Direction::InOut => "INOUT",
+        };
+        write!(f, "{s}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_write_predicates() {
+        assert!(Direction::In.reads() && !Direction::In.writes());
+        assert!(!Direction::Out.reads() && Direction::Out.writes());
+        assert!(Direction::InOut.reads() && Direction::InOut.writes());
+    }
+
+    #[test]
+    fn display_matches_compss_vocabulary() {
+        assert_eq!(Direction::In.to_string(), "IN");
+        assert_eq!(Direction::Out.to_string(), "OUT");
+        assert_eq!(Direction::InOut.to_string(), "INOUT");
+    }
+}

@@ -1,0 +1,557 @@
+//! The dynamic task dependency graph.
+//!
+//! Tasks enter the graph at submission time with the dependency edges the
+//! registry reported (RAW from producers, WAR from readers, WAW from prior
+//! writers). The graph maintains the ready frontier as tasks complete, and
+//! exports Graphviz DOT with `dXvY` edge labels reproducing the paper's
+//! Figures 2-5.
+
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+
+use crate::coordinator::registry::DataKey;
+
+/// Task identity, in submission order (node "1", "2", ... in Figure 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub u64);
+
+impl fmt::Display for TaskId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "t{}", self.0)
+    }
+}
+
+/// Why an edge exists.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EdgeKind {
+    /// Read-after-write: true dataflow.
+    Raw,
+    /// Write-after-read: version renaming makes this ordering-only.
+    War,
+    /// Write-after-write.
+    Waw,
+}
+
+impl fmt::Display for EdgeKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            EdgeKind::Raw => "RAW",
+            EdgeKind::War => "WAR",
+            EdgeKind::Waw => "WAW",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Lifecycle of a task.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskState {
+    /// Waiting on dependencies.
+    Pending,
+    /// All dependencies satisfied; queued at the scheduler.
+    Ready,
+    /// Claimed by a worker.
+    Running,
+    /// Finished successfully.
+    Done,
+    /// Failed after exhausting resubmissions.
+    Failed,
+    /// A transitive dependency failed; will never run.
+    Cancelled,
+}
+
+/// A directed dependency edge.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Edge {
+    pub from: TaskId,
+    pub to: TaskId,
+    pub kind: EdgeKind,
+    /// The datum version that carries the dependency (for DOT labels).
+    pub key: DataKey,
+}
+
+/// Graph node.
+#[derive(Clone, Debug)]
+pub struct TaskNode {
+    pub id: TaskId,
+    /// Task type name ("KNN_frag", "partial_sum", ...). Drives trace colors
+    /// and DOT shapes.
+    pub type_name: String,
+    pub state: TaskState,
+    /// Input versions this task reads (for locality decisions).
+    pub reads: Vec<DataKey>,
+    /// Output versions this task produces.
+    pub writes: Vec<DataKey>,
+    /// Remaining unfinished dependencies.
+    pub pending_deps: usize,
+    /// Tasks waiting on this one.
+    pub dependents: Vec<TaskId>,
+    /// Execution attempts so far (fault tolerance).
+    pub attempts: u32,
+}
+
+/// The task graph.
+#[derive(Debug, Default)]
+pub struct TaskGraph {
+    next_id: u64,
+    nodes: HashMap<TaskId, TaskNode>,
+    edges: Vec<Edge>,
+    /// Insertion order, for deterministic DOT output and iteration.
+    order: Vec<TaskId>,
+    done_count: usize,
+    failed_count: usize,
+    cancelled_count: usize,
+}
+
+impl TaskGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate the next task id (submission order).
+    pub fn next_task_id(&mut self) -> TaskId {
+        self.next_id += 1;
+        TaskId(self.next_id)
+    }
+
+    /// Insert a task with its dependency edges. `deps` pairs each
+    /// predecessor with the edge kind and carrying datum. Duplicate
+    /// predecessors are collapsed (a task depending on the same producer
+    /// through three arguments still has one pending-dep).
+    ///
+    /// Returns `true` if the task is immediately ready.
+    pub fn insert_task(
+        &mut self,
+        id: TaskId,
+        type_name: &str,
+        reads: Vec<DataKey>,
+        writes: Vec<DataKey>,
+        deps: Vec<(TaskId, EdgeKind, DataKey)>,
+    ) -> bool {
+        let mut uniq: HashSet<TaskId> = HashSet::new();
+        let mut pending = 0usize;
+        for (from, kind, key) in deps {
+            debug_assert!(from != id, "self-dependency on {id}");
+            // Edges to finished predecessors don't gate readiness but are
+            // kept for the DOT view. `uniq` collapses multi-edge
+            // predecessors so `pending_deps` and the dependent list agree:
+            // one unfinished predecessor == one pending count == one
+            // dependent entry (complete() decrements exactly once).
+            let from_state = self.nodes.get(&from).map(|n| n.state);
+            self.edges.push(Edge { from, to: id, kind, key });
+            if uniq.insert(from) {
+                match from_state {
+                    Some(TaskState::Done) => {}
+                    Some(TaskState::Failed) | Some(TaskState::Cancelled) => {
+                        // Dependency already failed: this task can never run
+                        // (the `dead` sweep below cancels it). Keep pending
+                        // >0 so it is never scheduled; do not register a
+                        // dependent (failed tasks never complete()).
+                        pending += 1;
+                    }
+                    _ => {
+                        pending += 1;
+                        if let Some(n) = self.nodes.get_mut(&from) {
+                            n.dependents.push(id);
+                        }
+                    }
+                }
+            }
+        }
+        let ready = pending == 0;
+        self.nodes.insert(
+            id,
+            TaskNode {
+                id,
+                type_name: type_name.to_string(),
+                state: if ready { TaskState::Ready } else { TaskState::Pending },
+                reads,
+                writes,
+                pending_deps: pending,
+                dependents: Vec::new(),
+                attempts: 0,
+            },
+        );
+        self.order.push(id);
+        // If any predecessor already failed, cancel immediately.
+        let dead = self.edges.iter().any(|e| {
+            e.to == id
+                && matches!(
+                    self.nodes.get(&e.from).map(|n| n.state),
+                    Some(TaskState::Failed) | Some(TaskState::Cancelled)
+                )
+        });
+        if dead {
+            self.cancel(id);
+            return false;
+        }
+        ready
+    }
+
+    /// Mark a ready task as claimed by a worker.
+    pub fn start(&mut self, id: TaskId) {
+        let n = self.nodes.get_mut(&id).expect("start of unknown task");
+        debug_assert_eq!(n.state, TaskState::Ready, "start on non-ready {id}");
+        n.state = TaskState::Running;
+        n.attempts += 1;
+    }
+
+    /// Put a running task back in the ready state (resubmission).
+    pub fn resubmit(&mut self, id: TaskId) {
+        let n = self.nodes.get_mut(&id).expect("resubmit of unknown task");
+        debug_assert_eq!(n.state, TaskState::Running);
+        n.state = TaskState::Ready;
+    }
+
+    /// Complete a running task; returns the dependents that became ready.
+    pub fn complete(&mut self, id: TaskId) -> Vec<TaskId> {
+        let dependents = {
+            let n = self.nodes.get_mut(&id).expect("complete of unknown task");
+            debug_assert_eq!(n.state, TaskState::Running, "complete on non-running {id}");
+            n.state = TaskState::Done;
+            std::mem::take(&mut n.dependents)
+        };
+        self.done_count += 1;
+        let mut newly_ready = Vec::new();
+        for dep in dependents {
+            let n = self.nodes.get_mut(&dep).expect("dependent missing");
+            n.pending_deps -= 1;
+            if n.pending_deps == 0 && n.state == TaskState::Pending {
+                n.state = TaskState::Ready;
+                newly_ready.push(dep);
+            }
+        }
+        newly_ready
+    }
+
+    /// Mark a running task as permanently failed; transitively cancels
+    /// everything downstream. Returns the cancelled set.
+    pub fn fail(&mut self, id: TaskId) -> Vec<TaskId> {
+        {
+            let n = self.nodes.get_mut(&id).expect("fail of unknown task");
+            n.state = TaskState::Failed;
+        }
+        self.failed_count += 1;
+        let mut cancelled = Vec::new();
+        let mut stack: Vec<TaskId> = self
+            .nodes
+            .get(&id)
+            .map(|n| n.dependents.clone())
+            .unwrap_or_default();
+        while let Some(t) = stack.pop() {
+            let n = self.nodes.get_mut(&t).expect("dependent missing");
+            if matches!(n.state, TaskState::Pending | TaskState::Ready) {
+                n.state = TaskState::Cancelled;
+                self.cancelled_count += 1;
+                cancelled.push(t);
+                stack.extend(n.dependents.clone());
+            }
+        }
+        cancelled
+    }
+
+    fn cancel(&mut self, id: TaskId) {
+        if let Some(n) = self.nodes.get_mut(&id) {
+            if n.state != TaskState::Cancelled {
+                n.state = TaskState::Cancelled;
+                self.cancelled_count += 1;
+            }
+        }
+    }
+
+    // ---- queries -----------------------------------------------------------
+
+    pub fn node(&self, id: TaskId) -> Option<&TaskNode> {
+        self.nodes.get(&id)
+    }
+
+    pub fn state(&self, id: TaskId) -> Option<TaskState> {
+        self.nodes.get(&id).map(|n| n.state)
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn done_count(&self) -> usize {
+        self.done_count
+    }
+
+    pub fn failed_count(&self) -> usize {
+        self.failed_count
+    }
+
+    pub fn cancelled_count(&self) -> usize {
+        self.cancelled_count
+    }
+
+    /// All tasks have reached a terminal state.
+    pub fn quiescent(&self) -> bool {
+        self.done_count + self.failed_count + self.cancelled_count == self.nodes.len()
+    }
+
+    pub fn tasks_in_order(&self) -> impl Iterator<Item = &TaskNode> {
+        self.order.iter().map(move |id| &self.nodes[id])
+    }
+
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+
+    /// Length of the critical path (in tasks) — the depth bound on
+    /// parallel speedup the paper invokes to explain linear regression's
+    /// weaker scaling ("deeper task dependencies").
+    pub fn critical_path_len(&self) -> usize {
+        let mut depth: HashMap<TaskId, usize> = HashMap::new();
+        let mut best = 0usize;
+        // `order` is a topological order: dependencies are always submitted
+        // before dependents in a superscalar runtime.
+        let mut preds: HashMap<TaskId, Vec<TaskId>> = HashMap::new();
+        for e in &self.edges {
+            preds.entry(e.to).or_default().push(e.from);
+        }
+        for id in &self.order {
+            let d = preds
+                .get(id)
+                .map(|ps| ps.iter().filter_map(|p| depth.get(p)).max().copied().unwrap_or(0))
+                .unwrap_or(0)
+                + 1;
+            depth.insert(*id, d);
+            best = best.max(d);
+        }
+        best
+    }
+
+    // ---- DOT export (Figures 2-5) -------------------------------------------
+
+    /// Graphviz DOT with the paper's visual vocabulary: one node per task
+    /// (colored by task type), `main` and `sync` pseudo-nodes, and edges
+    /// labeled with the carrying `dXvY`.
+    pub fn to_dot(&self, title: &str) -> String {
+        let mut out = String::new();
+        out.push_str("digraph RCOMPSs {\n");
+        out.push_str(&format!("  label=\"{title}\";\n"));
+        out.push_str("  rankdir=TB;\n  node [style=filled, fontname=\"Helvetica\"];\n");
+        out.push_str("  main [shape=box, fillcolor=lightgray];\n");
+        out.push_str("  sync [shape=octagon, fillcolor=red, fontcolor=white];\n");
+
+        // Stable color per task type, matching the paper's palette where
+        // the type names match (fill=blue, frag/partial=white, merge=red,
+        // classify/pred=pink/yellow...).
+        let palette = [
+            ("fill", "steelblue"),
+            ("frag", "white"),
+            ("partial_sum", "white"),
+            ("partial_ztz", "indianred"),
+            ("partial_zty", "lightpink"),
+            ("merge", "firebrick"),
+            ("classify", "pink"),
+            ("compute_model_parameters", "green3"),
+            ("genpred", "white"),
+            ("compute_prediction", "gold"),
+        ];
+        let color_of = |ty: &str| -> &'static str {
+            for (pat, color) in palette {
+                if ty.contains(pat) {
+                    return color;
+                }
+            }
+            "lightyellow"
+        };
+
+        let has_preds: HashSet<TaskId> = self.edges.iter().map(|e| e.to).collect();
+        let has_succs: HashSet<TaskId> = self.edges.iter().map(|e| e.from).collect();
+
+        for n in self.tasks_in_order() {
+            out.push_str(&format!(
+                "  {} [label=\"{}\\n{}\", fillcolor=\"{}\"];\n",
+                n.id.0,
+                n.id.0,
+                n.type_name,
+                color_of(&n.type_name)
+            ));
+            if !has_preds.contains(&n.id) {
+                out.push_str(&format!("  main -> {};\n", n.id.0));
+            }
+            if !has_succs.contains(&n.id) {
+                out.push_str(&format!("  {} -> sync;\n", n.id.0));
+            }
+        }
+        for e in &self.edges {
+            let style = match e.kind {
+                EdgeKind::Raw => "solid",
+                EdgeKind::War => "dashed",
+                EdgeKind::Waw => "dotted",
+            };
+            out.push_str(&format!(
+                "  {} -> {} [label=\"{}\", style={}];\n",
+                e.from.0, e.to.0, e.key, style
+            ));
+        }
+        out.push_str("}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::registry::{DataId, DataKey};
+
+    fn key(d: u64, v: u32) -> DataKey {
+        DataKey {
+            data: DataId(d),
+            version: v,
+        }
+    }
+
+    /// Build the Figure-2 diamond: t1, t2 independent; t3 reads both.
+    fn diamond() -> (TaskGraph, TaskId, TaskId, TaskId) {
+        let mut g = TaskGraph::new();
+        let t1 = g.next_task_id();
+        assert!(g.insert_task(t1, "add", vec![], vec![key(1, 1)], vec![]));
+        let t2 = g.next_task_id();
+        assert!(g.insert_task(t2, "add", vec![], vec![key(2, 1)], vec![]));
+        let t3 = g.next_task_id();
+        let ready = g.insert_task(
+            t3,
+            "add",
+            vec![key(1, 1), key(2, 1)],
+            vec![key(3, 1)],
+            vec![(t1, EdgeKind::Raw, key(1, 1)), (t2, EdgeKind::Raw, key(2, 1))],
+        );
+        assert!(!ready);
+        (g, t1, t2, t3)
+    }
+
+    #[test]
+    fn readiness_propagates_on_completion() {
+        let (mut g, t1, t2, t3) = diamond();
+        g.start(t1);
+        assert!(g.complete(t1).is_empty());
+        g.start(t2);
+        assert_eq!(g.complete(t2), vec![t3]);
+        assert_eq!(g.state(t3), Some(TaskState::Ready));
+        g.start(t3);
+        g.complete(t3);
+        assert!(g.quiescent());
+        assert_eq!(g.done_count(), 3);
+    }
+
+    #[test]
+    fn duplicate_predecessor_counts_once() {
+        let mut g = TaskGraph::new();
+        let t1 = g.next_task_id();
+        g.insert_task(t1, "p", vec![], vec![key(1, 1), key(2, 1)], vec![]);
+        let t2 = g.next_task_id();
+        g.insert_task(
+            t2,
+            "c",
+            vec![key(1, 1), key(2, 1)],
+            vec![],
+            vec![(t1, EdgeKind::Raw, key(1, 1)), (t1, EdgeKind::Raw, key(2, 1))],
+        );
+        g.start(t1);
+        assert_eq!(g.complete(t1), vec![t2]);
+    }
+
+    #[test]
+    fn dep_on_done_task_is_satisfied() {
+        let mut g = TaskGraph::new();
+        let t1 = g.next_task_id();
+        g.insert_task(t1, "p", vec![], vec![key(1, 1)], vec![]);
+        g.start(t1);
+        g.complete(t1);
+        let t2 = g.next_task_id();
+        let ready = g.insert_task(t2, "c", vec![key(1, 1)], vec![], vec![(
+            t1,
+            EdgeKind::Raw,
+            key(1, 1),
+        )]);
+        assert!(ready, "dependency on finished task must not block");
+    }
+
+    #[test]
+    fn failure_cancels_downstream_transitively() {
+        let (mut g, t1, t2, t3) = diamond();
+        let t4 = g.next_task_id();
+        g.insert_task(t4, "sink", vec![key(3, 1)], vec![], vec![(
+            t3,
+            EdgeKind::Raw,
+            key(3, 1),
+        )]);
+        g.start(t1);
+        let cancelled = g.fail(t1);
+        assert!(cancelled.contains(&t3));
+        assert!(cancelled.contains(&t4));
+        assert_eq!(g.state(t3), Some(TaskState::Cancelled));
+        // t2 is unaffected.
+        assert_eq!(g.state(t2), Some(TaskState::Ready));
+        g.start(t2);
+        g.complete(t2);
+        assert!(g.quiescent());
+    }
+
+    #[test]
+    fn resubmit_returns_to_ready() {
+        let (mut g, t1, _, _) = diamond();
+        g.start(t1);
+        g.resubmit(t1);
+        assert_eq!(g.state(t1), Some(TaskState::Ready));
+        g.start(t1);
+        assert_eq!(g.node(t1).unwrap().attempts, 2);
+        g.complete(t1);
+    }
+
+    #[test]
+    fn critical_path_of_diamond_is_two() {
+        let (g, ..) = diamond();
+        assert_eq!(g.critical_path_len(), 2);
+    }
+
+    #[test]
+    fn chain_critical_path_equals_length() {
+        let mut g = TaskGraph::new();
+        let mut prev: Option<TaskId> = None;
+        for i in 0..10 {
+            let t = g.next_task_id();
+            let deps = prev
+                .map(|p| vec![(p, EdgeKind::Raw, key(i, 1))])
+                .unwrap_or_default();
+            g.insert_task(t, "link", vec![], vec![], deps);
+            prev = Some(t);
+        }
+        assert_eq!(g.critical_path_len(), 10);
+    }
+
+    #[test]
+    fn dot_contains_paper_vocabulary() {
+        let (g, ..) = diamond();
+        let dot = g.to_dot("add four numbers");
+        assert!(dot.contains("main ->"));
+        assert!(dot.contains("-> sync"));
+        assert!(dot.contains("d1v1"));
+        assert!(dot.contains("digraph RCOMPSs"));
+    }
+
+    #[test]
+    fn submitting_under_failed_dependency_cancels_immediately() {
+        let mut g = TaskGraph::new();
+        let t1 = g.next_task_id();
+        g.insert_task(t1, "p", vec![], vec![key(1, 1)], vec![]);
+        g.start(t1);
+        g.fail(t1);
+        let t2 = g.next_task_id();
+        let ready = g.insert_task(t2, "c", vec![key(1, 1)], vec![], vec![(
+            t1,
+            EdgeKind::Raw,
+            key(1, 1),
+        )]);
+        assert!(!ready);
+        assert_eq!(g.state(t2), Some(TaskState::Cancelled));
+    }
+}

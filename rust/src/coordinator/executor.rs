@@ -1,0 +1,244 @@
+//! The persistent worker executor loop.
+//!
+//! RCOMPSs deploys one worker process per node with "as many executor
+//! processes as available cores; each executor lives during the entire
+//! application execution time" (§3.2). Here each executor is a thread,
+//! pinned logically to a (node, slot) pair. The loop:
+//!
+//! 1. waits for the scheduler to offer a ready task for its node,
+//! 2. deserializes the task's input files through the configured codec
+//!    (recording a transfer if the file was produced on another node),
+//! 3. executes the task body (with failure injection if configured),
+//! 4. serializes the outputs and marks them available, and
+//! 5. completes the task, which unblocks dependents and waiters —
+//!    or, on failure, resubmits it within the retry budget.
+
+use std::sync::Arc;
+
+use crate::coordinator::dag::TaskState;
+use crate::coordinator::runtime::{Claim, Shared};
+use crate::trace::{EventKind, WorkerId};
+use crate::value::RValue;
+
+/// Body of every persistent worker thread.
+pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
+    loop {
+        // ---- acquire work ------------------------------------------------
+        let claim: Claim = {
+            let mut core = shared.core.lock().unwrap();
+            loop {
+                if let Some(id) = core.scheduler.pop_for(wid.node) {
+                    core.graph.start(id);
+                    // Locality accounting is resolved here, under the claim
+                    // lock, instead of re-locking per input on the read
+                    // path (2 lock round-trips per input saved — see
+                    // EXPERIMENTS.md §Perf).
+                    let input_keys = core.meta[&id].inputs.clone();
+                    let inputs: Vec<(crate::coordinator::registry::DataKey, std::path::PathBuf, bool)> =
+                        input_keys
+                            .iter()
+                            .map(|k| {
+                                let local = core.registry.is_local(*k, wid.node);
+                                if !local {
+                                    core.registry.add_location(*k, wid.node);
+                                }
+                                (*k, shared.path_for(*k), local)
+                            })
+                            .collect();
+                    let meta = &core.meta[&id];
+                    // Only return-value / INOUT-new versions are produced
+                    // here; `outputs` already holds exactly those.
+                    let claim = Claim {
+                        id,
+                        spec: Arc::clone(&meta.spec),
+                        inputs,
+                        outputs: meta.outputs.clone(),
+                    };
+                    break claim;
+                }
+                if core.shutdown {
+                    return;
+                }
+                core = shared.cv_work.wait(core).unwrap();
+            }
+        };
+
+        // ---- deserialize inputs (outside the lock) ------------------------
+        let mut args: Vec<RValue> = Vec::with_capacity(claim.inputs.len());
+        let mut input_bytes = 0u64;
+        let deser_start = shared.tracer.now();
+        let mut io_error: Option<anyhow::Error> = None;
+        for (key, path, was_local) in &claim.inputs {
+            // Locality accounting was resolved at claim time: a read of a
+            // version not resident on this node counts as a transfer (live
+            // mode shares one filesystem, so the "transfer" is free, but
+            // the event keeps live traces comparable with simulated ones).
+            if !was_local {
+                let t = shared.tracer.now();
+                shared
+                    .tracer
+                    .record_at(wid, EventKind::Transfer, Some(claim.id), t, t);
+            }
+            match shared.codec.read_file(path) {
+                Ok(v) => {
+                    input_bytes += std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+                    args.push(v);
+                }
+                Err(e) => {
+                    io_error = Some(e.context(format!("deserialize {key}")));
+                    break;
+                }
+            }
+        }
+        let deser_end = shared.tracer.now();
+        if !claim.inputs.is_empty() {
+            shared.tracer.record_at(
+                wid,
+                EventKind::Deserialize,
+                Some(claim.id),
+                deser_start,
+                deser_end,
+            );
+        }
+
+        // ---- execute -------------------------------------------------------
+        let exec_start = shared.tracer.now();
+        let result: anyhow::Result<Vec<RValue>> = match io_error {
+            Some(e) => Err(e),
+            None => {
+                if shared.injector.should_fail(&claim.spec.name) {
+                    Err(anyhow::anyhow!(
+                        "injected failure in '{}' (attempt on {wid})",
+                        claim.spec.name
+                    ))
+                } else {
+                    (claim.spec.body)(&args)
+                }
+            }
+        };
+        let exec_end = shared.tracer.now();
+        shared.tracer.record_at(
+            wid,
+            EventKind::TaskExec(claim.spec.name.clone()),
+            Some(claim.id),
+            exec_start,
+            exec_end,
+        );
+
+        match result {
+            Ok(outputs) => {
+                // ---- serialize outputs (outside the lock) -----------------
+                let ser_start = shared.tracer.now();
+                let mut produced = Vec::with_capacity(claim.outputs.len());
+                let mut ser_error: Option<anyhow::Error> = None;
+                if outputs.len() != claim.outputs.len() {
+                    ser_error = Some(anyhow::anyhow!(
+                        "task '{}' returned {} values, declared {}",
+                        claim.spec.name,
+                        outputs.len(),
+                        claim.outputs.len()
+                    ));
+                } else {
+                    for (key, value) in claim.outputs.iter().zip(outputs.iter()) {
+                        let path = shared.path_for(*key);
+                        match shared.codec.write_file(value, &path) {
+                            Ok(()) => {
+                                let bytes =
+                                    std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+                                produced.push((*key, bytes, path));
+                            }
+                            Err(e) => {
+                                ser_error = Some(e.context(format!("serialize {key}")));
+                                break;
+                            }
+                        }
+                    }
+                }
+                let ser_end = shared.tracer.now();
+                if !claim.outputs.is_empty() {
+                    shared.tracer.record_at(
+                        wid,
+                        EventKind::Serialize,
+                        Some(claim.id),
+                        ser_start,
+                        ser_end,
+                    );
+                }
+
+                let mut core = shared.core.lock().unwrap();
+                if let Some(e) = ser_error {
+                    handle_failure(&shared, &mut core, &claim, wid, e);
+                } else {
+                    for (key, bytes, path) in produced {
+                        core.registry.mark_available(key, wid.node, bytes, path);
+                        core.stats.bytes_serialized += bytes;
+                    }
+                    core.stats.bytes_deserialized += input_bytes;
+                    core.stats.deserialize_s += deser_end - deser_start;
+                    core.stats.serialize_s += ser_end - ser_start;
+                    core.stats.exec_s += exec_end - exec_start;
+                    let per = core
+                        .stats
+                        .per_type
+                        .entry(claim.spec.name.clone())
+                        .or_insert((0, 0.0));
+                    per.0 += 1;
+                    per.1 += exec_end - exec_start;
+                    core.stats.tasks_done += 1;
+                    let newly_ready = core.graph.complete(claim.id);
+                    for t in newly_ready {
+                        core.enqueue_ready(t);
+                    }
+                    shared.cv_work.notify_all();
+                    shared.cv_done.notify_all();
+                }
+            }
+            Err(e) => {
+                let mut core = shared.core.lock().unwrap();
+                core.stats.bytes_deserialized += input_bytes;
+                core.stats.deserialize_s += deser_end - deser_start;
+                handle_failure(&shared, &mut core, &claim, wid, e);
+            }
+        }
+    }
+}
+
+/// Failure path: resubmit within budget, else fail + cancel downstream.
+fn handle_failure(
+    shared: &Arc<Shared>,
+    core: &mut crate::coordinator::runtime::Core,
+    claim: &Claim,
+    wid: WorkerId,
+    err: anyhow::Error,
+) {
+    let attempts = core
+        .graph
+        .node(claim.id)
+        .map(|n| n.attempts)
+        .unwrap_or(u32::MAX);
+    if shared.retry.may_retry(attempts) {
+        // COMPSs-style resubmission: back to the ready queue; any worker
+        // (possibly on another node) may pick it up.
+        core.stats.resubmissions += 1;
+        core.graph.resubmit(claim.id);
+        core.enqueue_ready(claim.id);
+        shared.cv_work.notify_one();
+        eprintln!(
+            "[rcompss] task {} '{}' failed on {wid} (attempt {attempts}): {err}; resubmitting",
+            claim.id, claim.spec.name
+        );
+    } else {
+        let cancelled = core.graph.fail(claim.id);
+        core.stats.tasks_failed += 1;
+        core.stats.tasks_cancelled += cancelled.len() as u64;
+        debug_assert_eq!(core.graph.state(claim.id), Some(TaskState::Failed));
+        eprintln!(
+            "[rcompss] task {} '{}' failed permanently after {attempts} attempts: {err}; cancelled {} dependents",
+            claim.id,
+            claim.spec.name,
+            cancelled.len()
+        );
+        shared.cv_done.notify_all();
+        shared.cv_work.notify_all();
+    }
+}

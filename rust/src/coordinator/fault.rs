@@ -1,0 +1,145 @@
+//! Fault tolerance: task resubmission and failure injection.
+//!
+//! RCOMPSs inherits COMPSs' fault-tolerance mechanisms — "automatic task
+//! resubmission and exception management" (§1, §3.1). The policy here is
+//! the COMPSs default: a failed task execution is retried up to
+//! `max_retries` times (possibly on a different worker, since it simply
+//! re-enters the ready queue); when the budget is exhausted the task is
+//! marked failed and every transitive dependent is cancelled, which
+//! `wait_on`/`barrier` surface as an error to the application.
+//!
+//! [`FailureInjector`] drives the failure-injection tests: it makes chosen
+//! task types fail with a given probability on their first `n` attempts,
+//! letting the integration suite prove that resubmission preserves results.
+
+use crate::util::prng::Pcg64;
+use std::sync::Mutex;
+
+/// Retry policy.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Additional executions allowed after the first failure
+    /// (COMPSs' default is 2 resubmissions).
+    pub max_retries: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 2 }
+    }
+}
+
+impl RetryPolicy {
+    /// May a task that has already run `attempts` times (and failed) run
+    /// again?
+    pub fn may_retry(&self, attempts: u32) -> bool {
+        // First execution is attempt 1; retries allowed while
+        // attempts <= max_retries.
+        attempts <= self.max_retries
+    }
+}
+
+/// Deterministic failure injector for tests and chaos benches.
+pub struct FailureInjector {
+    inner: Mutex<InjectorState>,
+}
+
+struct InjectorState {
+    rng: Pcg64,
+    /// Probability that a matching execution fails.
+    probability: f64,
+    /// Only task types containing this substring fail ("" = all).
+    type_filter: String,
+    /// Stop injecting after this many injected failures (u32::MAX = never).
+    budget: u32,
+    injected: u32,
+}
+
+impl FailureInjector {
+    /// No-op injector.
+    pub fn none() -> Self {
+        Self::new(0.0, "", u32::MAX, 0)
+    }
+
+    pub fn new(probability: f64, type_filter: &str, budget: u32, seed: u64) -> Self {
+        FailureInjector {
+            inner: Mutex::new(InjectorState {
+                rng: Pcg64::seeded(seed),
+                probability,
+                type_filter: type_filter.to_string(),
+                budget,
+                injected: 0,
+            }),
+        }
+    }
+
+    /// Decide whether this execution should be made to fail.
+    pub fn should_fail(&self, task_type: &str) -> bool {
+        let mut s = self.inner.lock().unwrap();
+        if s.probability <= 0.0 || s.injected >= s.budget {
+            return false;
+        }
+        if !s.type_filter.is_empty() && !task_type.contains(&s.type_filter) {
+            return false;
+        }
+        let p = s.probability;
+        if s.rng.chance(p) {
+            s.injected += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Failures injected so far.
+    pub fn injected(&self) -> u32 {
+        self.inner.lock().unwrap().injected
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_policy_allows_two_resubmissions() {
+        let p = RetryPolicy::default();
+        assert!(p.may_retry(1)); // failed first run -> retry
+        assert!(p.may_retry(2)); // failed second run -> retry
+        assert!(!p.may_retry(3)); // failed third run -> permanent
+    }
+
+    #[test]
+    fn zero_retry_policy() {
+        let p = RetryPolicy { max_retries: 0 };
+        assert!(!p.may_retry(1));
+    }
+
+    #[test]
+    fn injector_respects_budget() {
+        let inj = FailureInjector::new(1.0, "", 3, 42);
+        let fails = (0..10).filter(|_| inj.should_fail("anything")).count();
+        assert_eq!(fails, 3);
+        assert_eq!(inj.injected(), 3);
+    }
+
+    #[test]
+    fn injector_filters_by_type() {
+        let inj = FailureInjector::new(1.0, "merge", u32::MAX, 1);
+        assert!(!inj.should_fail("KNN_frag"));
+        assert!(inj.should_fail("KNN_merge"));
+    }
+
+    #[test]
+    fn none_injector_never_fails() {
+        let inj = FailureInjector::none();
+        assert!((0..100).all(|_| !inj.should_fail("x")));
+    }
+
+    #[test]
+    fn probability_roughly_respected() {
+        let inj = FailureInjector::new(0.3, "", u32::MAX, 7);
+        let fails = (0..10_000).filter(|_| inj.should_fail("t")).count();
+        assert!((2500..3500).contains(&fails), "fails={fails}");
+    }
+}

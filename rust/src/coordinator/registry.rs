@@ -1,0 +1,304 @@
+//! The versioned data registry — COMPSs' object tracker.
+//!
+//! Every value that crosses a task boundary becomes a *datum* with an id and
+//! a version: the `dXvY` labels on the paper's DAG figures (§3.4, Figures
+//! 2-5). Writing a datum creates version `Y+1` while readers of version `Y`
+//! keep a consistent snapshot — this renaming is what lets the superscalar
+//! dependency analysis avoid false WAR/WAW serialization.
+//!
+//! The registry also tracks *where* each version lives (which cluster nodes
+//! hold its serialized file) and how big it is; the data-locality scheduler
+//! and the simulator's transfer model both read that.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::path::PathBuf;
+
+use crate::coordinator::dag::TaskId;
+
+/// A cluster node index. Node 0 also hosts the master, as in COMPSs
+/// deployments where the leader process shares the first allocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+/// Identity of a logical datum (stable across versions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DataId(pub u64);
+
+/// A specific version of a datum: the `dXvY` in the paper's DAGs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DataKey {
+    pub data: DataId,
+    pub version: u32,
+}
+
+impl fmt::Display for DataKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "d{}v{}", self.data.0, self.version)
+    }
+}
+
+/// Per-version bookkeeping.
+#[derive(Clone, Debug)]
+pub struct VersionInfo {
+    /// Task that produces this version; `None` for values materialized by
+    /// the master at submission time (literal arguments).
+    pub producer: Option<TaskId>,
+    /// Whether the bytes exist yet (producer finished / literal written).
+    pub available: bool,
+    /// Nodes that currently hold the serialized file.
+    pub locations: Vec<NodeId>,
+    /// Serialized size in bytes (0 until known).
+    pub bytes: u64,
+    /// Backing file (local mode); empty in pure simulation.
+    pub path: PathBuf,
+}
+
+/// Per-datum access history used by the dependency analysis.
+#[derive(Clone, Debug, Default)]
+struct AccessHistory {
+    /// Task that wrote the latest version (None if literal).
+    last_writer: Option<TaskId>,
+    /// Tasks that have read the latest version since it was written.
+    readers_since_write: Vec<TaskId>,
+}
+
+/// The registry proper.
+#[derive(Debug, Default)]
+pub struct DataRegistry {
+    next_data: u64,
+    /// Latest version number per datum.
+    latest: HashMap<DataId, u32>,
+    /// Version table.
+    versions: HashMap<DataKey, VersionInfo>,
+    history: HashMap<DataId, AccessHistory>,
+}
+
+impl DataRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a brand-new datum whose first version is materialized by
+    /// the master (a literal argument). Returns its key (version 1).
+    pub fn new_literal(&mut self, bytes: u64, node: NodeId) -> DataKey {
+        self.next_data += 1;
+        let key = DataKey {
+            data: DataId(self.next_data),
+            version: 1,
+        };
+        self.latest.insert(key.data, 1);
+        self.versions.insert(
+            key,
+            VersionInfo {
+                producer: None,
+                available: true,
+                locations: vec![node],
+                bytes,
+                path: PathBuf::new(),
+            },
+        );
+        self.history.insert(key.data, AccessHistory::default());
+        key
+    }
+
+    /// Register a brand-new datum to be produced by `producer` (a task
+    /// return value). Returns its key (version 1, unavailable).
+    pub fn new_future(&mut self, producer: TaskId) -> DataKey {
+        self.next_data += 1;
+        let key = DataKey {
+            data: DataId(self.next_data),
+            version: 1,
+        };
+        self.latest.insert(key.data, 1);
+        self.versions.insert(
+            key,
+            VersionInfo {
+                producer: Some(producer),
+                available: false,
+                locations: Vec::new(),
+                bytes: 0,
+                path: PathBuf::new(),
+            },
+        );
+        self.history.insert(
+            key.data,
+            AccessHistory {
+                last_writer: Some(producer),
+                readers_since_write: Vec::new(),
+            },
+        );
+        key
+    }
+
+    /// Latest version key of a datum.
+    pub fn latest_key(&self, data: DataId) -> Option<DataKey> {
+        self.latest.get(&data).map(|v| DataKey { data, version: *v })
+    }
+
+    /// Record a read of the datum's latest version by `reader`.
+    /// Returns the key read and the task to depend on (RAW), if any.
+    pub fn record_read(&mut self, data: DataId, reader: TaskId) -> (DataKey, Option<TaskId>) {
+        let key = self.latest_key(data).expect("read of unknown datum");
+        let hist = self.history.get_mut(&data).expect("history missing");
+        hist.readers_since_write.push(reader);
+        (key, hist.last_writer)
+    }
+
+    /// Record a write (OUT or the write half of INOUT) by `writer`:
+    /// bumps the version and returns `(new_key, waw_dep, war_deps)`.
+    pub fn record_write(
+        &mut self,
+        data: DataId,
+        writer: TaskId,
+    ) -> (DataKey, Option<TaskId>, Vec<TaskId>) {
+        let v = self.latest.get_mut(&data).expect("write of unknown datum");
+        *v += 1;
+        let new_key = DataKey { data, version: *v };
+        self.versions.insert(
+            new_key,
+            VersionInfo {
+                producer: Some(writer),
+                available: false,
+                locations: Vec::new(),
+                bytes: 0,
+                path: PathBuf::new(),
+            },
+        );
+        let hist = self.history.get_mut(&data).expect("history missing");
+        let waw = hist.last_writer;
+        let war = std::mem::take(&mut hist.readers_since_write);
+        hist.last_writer = Some(writer);
+        (new_key, waw, war)
+    }
+
+    /// Mark a version as produced, with its physical location and size.
+    pub fn mark_available(&mut self, key: DataKey, node: NodeId, bytes: u64, path: PathBuf) {
+        let info = self.versions.get_mut(&key).expect("mark of unknown version");
+        info.available = true;
+        info.bytes = bytes;
+        info.path = path;
+        if !info.locations.contains(&node) {
+            info.locations.push(node);
+        }
+    }
+
+    /// Record that `node` now also holds a replica (after a transfer).
+    pub fn add_location(&mut self, key: DataKey, node: NodeId) {
+        let info = self.versions.get_mut(&key).expect("unknown version");
+        if !info.locations.contains(&node) {
+            info.locations.push(node);
+        }
+    }
+
+    pub fn info(&self, key: DataKey) -> Option<&VersionInfo> {
+        self.versions.get(&key)
+    }
+
+    pub fn is_available(&self, key: DataKey) -> bool {
+        self.versions.get(&key).map(|i| i.available).unwrap_or(false)
+    }
+
+    /// Does `node` hold this version locally?
+    pub fn is_local(&self, key: DataKey, node: NodeId) -> bool {
+        self.versions
+            .get(&key)
+            .map(|i| i.locations.contains(&node))
+            .unwrap_or(false)
+    }
+
+    /// Number of registered data (for stats).
+    pub fn datum_count(&self) -> usize {
+        self.latest.len()
+    }
+
+    /// Number of live versions (for stats).
+    pub fn version_count(&self) -> usize {
+        self.versions.len()
+    }
+
+    /// Total serialized bytes across all available versions.
+    pub fn total_bytes(&self) -> u64 {
+        self.versions.values().map(|v| v.bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const T1: TaskId = TaskId(1);
+    const T2: TaskId = TaskId(2);
+    const T3: TaskId = TaskId(3);
+
+    #[test]
+    fn literal_is_immediately_available() {
+        let mut reg = DataRegistry::new();
+        let key = reg.new_literal(128, NodeId(0));
+        assert!(reg.is_available(key));
+        assert!(reg.is_local(key, NodeId(0)));
+        assert!(!reg.is_local(key, NodeId(1)));
+        assert_eq!(key.to_string(), "d1v1");
+    }
+
+    #[test]
+    fn future_becomes_available_when_marked() {
+        let mut reg = DataRegistry::new();
+        let key = reg.new_future(T1);
+        assert!(!reg.is_available(key));
+        reg.mark_available(key, NodeId(2), 64, PathBuf::from("/tmp/d1v1"));
+        assert!(reg.is_available(key));
+        assert_eq!(reg.info(key).unwrap().bytes, 64);
+        assert!(reg.is_local(key, NodeId(2)));
+    }
+
+    #[test]
+    fn raw_dependency_on_last_writer() {
+        let mut reg = DataRegistry::new();
+        let key = reg.new_future(T1);
+        let (read_key, dep) = reg.record_read(key.data, T2);
+        assert_eq!(read_key, key);
+        assert_eq!(dep, Some(T1));
+    }
+
+    #[test]
+    fn write_bumps_version_and_reports_war_waw() {
+        let mut reg = DataRegistry::new();
+        let key = reg.new_literal(8, NodeId(0));
+        // Two readers of v1.
+        reg.record_read(key.data, T1);
+        reg.record_read(key.data, T2);
+        // T3 writes: WAR on T1,T2; no WAW (literal had no writer).
+        let (new_key, waw, war) = reg.record_write(key.data, T3);
+        assert_eq!(new_key.version, 2);
+        assert_eq!(waw, None);
+        assert_eq!(war, vec![T1, T2]);
+        // Subsequent read depends on T3 (RAW) and sees v2.
+        let (k, dep) = reg.record_read(key.data, T1);
+        assert_eq!(k.version, 2);
+        assert_eq!(dep, Some(T3));
+    }
+
+    #[test]
+    fn waw_between_successive_writers() {
+        let mut reg = DataRegistry::new();
+        let key = reg.new_literal(8, NodeId(0));
+        let (_, waw1, _) = reg.record_write(key.data, T1);
+        assert_eq!(waw1, None);
+        let (k2, waw2, war2) = reg.record_write(key.data, T2);
+        assert_eq!(k2.version, 3);
+        assert_eq!(waw2, Some(T1));
+        assert!(war2.is_empty());
+    }
+
+    #[test]
+    fn old_versions_remain_after_write() {
+        let mut reg = DataRegistry::new();
+        let key = reg.new_literal(8, NodeId(0));
+        reg.record_write(key.data, T1);
+        // v1 still readable (snapshot isolation for in-flight readers).
+        assert!(reg.is_available(key));
+        assert_eq!(reg.version_count(), 2);
+        assert_eq!(reg.datum_count(), 1);
+    }
+}

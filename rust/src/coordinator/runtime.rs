@@ -1,0 +1,514 @@
+//! The orchestrator: glue between the API, the dependency machinery, the
+//! scheduler, and the persistent worker pool.
+//!
+//! This is the RCOMPSs `Core` module of Figure 1b: it performs "all
+//! necessary actions for task preparation (parameter serialization, task
+//! registry, and object tracking) and COMPSs requests for execution or data
+//! retrieval". The master thread runs the user's sequential program;
+//! [`Coordinator::submit`] analyzes each call's data accesses against the
+//! versioned registry, inserts the task into the DAG, and hands ready tasks
+//! to the scheduler, while persistent workers (see [`super::executor`])
+//! pull, deserialize, execute, and serialize asynchronously.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::access::Direction;
+use crate::coordinator::dag::{EdgeKind, TaskGraph, TaskId, TaskState};
+use crate::coordinator::executor;
+use crate::coordinator::fault::{FailureInjector, RetryPolicy};
+use crate::coordinator::registry::{DataKey, DataRegistry, NodeId};
+use crate::coordinator::scheduler::{scheduler_by_name, ReadyTask, Scheduler};
+use crate::serialization::{codec_by_name, Codec};
+use crate::trace::{EventKind, Tracer, WorkerId};
+use crate::value::RValue;
+
+/// A task body: pure function from input values to output values.
+pub type TaskBody = Arc<dyn Fn(&[RValue]) -> Result<Vec<RValue>> + Send + Sync>;
+
+/// Registered task metadata (the product of the R-level `task()` call).
+pub struct TaskSpec {
+    pub name: String,
+    pub arity: usize,
+    pub n_outputs: usize,
+    /// Per-argument directions; length == arity.
+    pub directions: Vec<Direction>,
+    pub body: TaskBody,
+}
+
+/// An argument at a call site: either a literal value (serialized by the
+/// master at submission, like COMPSs does) or a reference to runtime data.
+#[derive(Clone)]
+pub enum Arg {
+    Value(RValue),
+    Ref(DataKey),
+}
+
+/// What `submit` returns: the OUT data produced by the call.
+#[derive(Clone, Debug)]
+pub struct SubmitOutcome {
+    /// One key per declared output (function return values).
+    pub returns: Vec<DataKey>,
+    /// New versions of INOUT arguments, in argument order.
+    pub updated: Vec<DataKey>,
+}
+
+/// Coordinator configuration.
+#[derive(Clone)]
+pub struct CoordinatorConfig {
+    /// Cluster nodes to emulate in live mode (workers are threads; node
+    /// membership affects locality accounting and tracing).
+    pub nodes: u32,
+    pub workers_per_node: u32,
+    /// Scheduling policy: "fifo" | "lifo" | "locality".
+    pub scheduler: String,
+    /// Parameter codec (Table 1): "rmvl" (default) | "qs" | ...
+    pub codec: String,
+    /// Directory for serialized parameter files.
+    pub workdir: PathBuf,
+    pub retry: RetryPolicy,
+    /// Collect trace events.
+    pub trace: bool,
+    /// Failure injection (tests/chaos benches).
+    pub injector: Arc<FailureInjector>,
+}
+
+impl CoordinatorConfig {
+    /// Sensible local defaults: one node, `workers` executors, RMVL codec,
+    /// FIFO policy, workdir under the system temp dir.
+    pub fn local(workers: u32) -> CoordinatorConfig {
+        CoordinatorConfig {
+            nodes: 1,
+            workers_per_node: workers.max(1),
+            scheduler: "fifo".into(),
+            codec: "rmvl".into(),
+            workdir: std::env::temp_dir().join(format!(
+                "rcompss_{}_{}",
+                std::process::id(),
+                unique_run_id()
+            )),
+            retry: RetryPolicy::default(),
+            trace: false,
+            injector: Arc::new(FailureInjector::none()),
+        }
+    }
+
+    pub fn with_scheduler(mut self, name: &str) -> Self {
+        self.scheduler = name.into();
+        self
+    }
+
+    pub fn with_codec(mut self, name: &str) -> Self {
+        self.codec = name.into();
+        self
+    }
+
+    pub fn with_trace(mut self, on: bool) -> Self {
+        self.trace = on;
+        self
+    }
+
+    pub fn with_nodes(mut self, nodes: u32, workers_per_node: u32) -> Self {
+        self.nodes = nodes.max(1);
+        self.workers_per_node = workers_per_node.max(1);
+        self
+    }
+}
+
+fn unique_run_id() -> u64 {
+    use std::sync::atomic::AtomicU64;
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Aggregate runtime statistics, printed at `stop()` and used by benches.
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    pub tasks_submitted: u64,
+    pub tasks_done: u64,
+    pub tasks_failed: u64,
+    pub tasks_cancelled: u64,
+    pub resubmissions: u64,
+    pub bytes_serialized: u64,
+    pub bytes_deserialized: u64,
+    pub serialize_s: f64,
+    pub deserialize_s: f64,
+    pub exec_s: f64,
+    /// Per task type: (count, total execution seconds).
+    pub per_type: HashMap<String, (u64, f64)>,
+}
+
+/// Everything a claimed task needs to run outside the lock.
+/// `inputs` carries `(key, path, was_node_local)` — locality resolved at
+/// claim time so the read path takes no extra locks.
+pub(crate) struct Claim {
+    pub id: TaskId,
+    pub spec: Arc<TaskSpec>,
+    pub inputs: Vec<(DataKey, PathBuf, bool)>,
+    pub outputs: Vec<DataKey>,
+}
+
+pub(crate) struct TaskMeta {
+    pub spec: Arc<TaskSpec>,
+    pub inputs: Vec<DataKey>,
+    pub outputs: Vec<DataKey>,
+}
+
+/// Mutable coordinator state (behind the big lock).
+pub(crate) struct Core {
+    pub graph: TaskGraph,
+    pub registry: DataRegistry,
+    pub scheduler: Box<dyn Scheduler>,
+    pub meta: HashMap<TaskId, TaskMeta>,
+    pub stats: RuntimeStats,
+    pub shutdown: bool,
+}
+
+impl Core {
+    /// Push a newly-ready task to the scheduler with locality metadata.
+    pub(crate) fn enqueue_ready(&mut self, id: TaskId) {
+        let meta = &self.meta[&id];
+        let inputs = meta
+            .inputs
+            .iter()
+            .map(|k| {
+                let info = self.registry.info(*k).expect("input version missing");
+                (info.bytes, info.locations.clone())
+            })
+            .collect();
+        let type_name = meta.spec.name.clone();
+        self.scheduler.push(ReadyTask {
+            id,
+            inputs,
+            type_name,
+        });
+    }
+}
+
+/// Shared coordinator handle (master + workers).
+pub(crate) struct Shared {
+    pub core: Mutex<Core>,
+    /// Workers wait here for ready tasks.
+    pub cv_work: Condvar,
+    /// Waiters (`wait_on`, `barrier`) wait here for completions.
+    pub cv_done: Condvar,
+    pub codec: Box<dyn Codec>,
+    pub tracer: Tracer,
+    pub workdir: PathBuf,
+    pub retry: RetryPolicy,
+    pub injector: Arc<FailureInjector>,
+    pub stopping: AtomicBool,
+}
+
+impl Shared {
+    /// File path for a datum version: `workdir/dXvY.par` — the on-disk
+    /// sibling of the paper's `dXvY` labels.
+    pub fn path_for(&self, key: DataKey) -> PathBuf {
+        self.workdir.join(format!("{key}.par"))
+    }
+}
+
+/// The coordinator: one per application run (`compss_start` .. `compss_stop`).
+pub struct Coordinator {
+    pub(crate) shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    pub config: CoordinatorConfig,
+}
+
+impl Coordinator {
+    /// Start the runtime: create the workdir, spawn the persistent worker
+    /// pool, and return the handle (the `compss_start()` of the paper).
+    pub fn start(config: CoordinatorConfig) -> Result<Coordinator> {
+        std::fs::create_dir_all(&config.workdir)
+            .with_context(|| format!("create workdir {}", config.workdir.display()))?;
+        let scheduler = scheduler_by_name(&config.scheduler)
+            .ok_or_else(|| anyhow!("unknown scheduler '{}'", config.scheduler))?;
+        let codec = codec_by_name(&config.codec)
+            .ok_or_else(|| anyhow!("unknown codec '{}'", config.codec))?;
+        let shared = Arc::new(Shared {
+            core: Mutex::new(Core {
+                graph: TaskGraph::new(),
+                registry: DataRegistry::new(),
+                scheduler,
+                meta: HashMap::new(),
+                stats: RuntimeStats::default(),
+                shutdown: false,
+            }),
+            cv_work: Condvar::new(),
+            cv_done: Condvar::new(),
+            codec,
+            tracer: Tracer::new(config.trace),
+            workdir: config.workdir.clone(),
+            retry: config.retry,
+            injector: config.injector.clone(),
+            stopping: AtomicBool::new(false),
+        });
+
+        // Persistent worker pool: `nodes * workers_per_node` executors that
+        // live for the whole application (the PyCOMPSs-inherited model,
+        // §3.3.2).
+        let mut workers = Vec::new();
+        for node in 0..config.nodes {
+            for slot in 0..config.workers_per_node {
+                let wid = WorkerId {
+                    node: NodeId(node),
+                    slot,
+                };
+                let sh = Arc::clone(&shared);
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("rcompss-{wid}"))
+                        .spawn(move || executor::worker_loop(sh, wid))
+                        .context("spawn worker")?,
+                );
+            }
+        }
+        Ok(Coordinator {
+            shared,
+            workers,
+            config,
+        })
+    }
+
+    /// Master pseudo-worker id used for submission-side serialization
+    /// events in traces.
+    fn master_wid(&self) -> WorkerId {
+        WorkerId {
+            node: NodeId(0),
+            slot: u32::MAX,
+        }
+    }
+
+    /// Submit a task call: analyze accesses, build edges, enqueue if ready.
+    /// Returns the OUT data handles. This is asynchronous — it returns as
+    /// soon as the task is in the DAG.
+    pub fn submit(&self, spec: &Arc<TaskSpec>, args: &[Arg]) -> Result<SubmitOutcome> {
+        if args.len() != spec.arity {
+            bail!(
+                "task '{}' expects {} arguments, got {}",
+                spec.name,
+                spec.arity,
+                args.len()
+            );
+        }
+        if self.shared.stopping.load(Ordering::SeqCst) {
+            bail!("runtime is stopping");
+        }
+
+        // Phase 1: materialize literal arguments (master-side
+        // serialization, traced). Reserve ids under a short lock, write
+        // files outside it.
+        let mut literal_keys: Vec<Option<DataKey>> = vec![None; args.len()];
+        for (i, arg) in args.iter().enumerate() {
+            if let Arg::Value(v) = arg {
+                let start = self.shared.tracer.now();
+                let bytes = self.shared.codec.encode(v)?;
+                let nbytes = bytes.len() as u64;
+                let key = {
+                    let mut core = self.shared.core.lock().unwrap();
+                    let key = core.registry.new_literal(nbytes, NodeId(0));
+                    core.stats.bytes_serialized += nbytes;
+                    key
+                };
+                let path = self.shared.path_for(key);
+                std::fs::write(&path, &bytes)
+                    .with_context(|| format!("write literal {}", path.display()))?;
+                {
+                    let mut core = self.shared.core.lock().unwrap();
+                    core.registry.mark_available(key, NodeId(0), nbytes, path);
+                    core.stats.serialize_s += self.shared.tracer.now() - start;
+                }
+                self.shared.tracer.record_at(
+                    self.master_wid(),
+                    EventKind::Serialize,
+                    None,
+                    start,
+                    self.shared.tracer.now(),
+                );
+                literal_keys[i] = Some(key);
+            }
+        }
+
+        // Phase 2: dependency analysis + DAG insertion under the lock.
+        let mut core = self.shared.core.lock().unwrap();
+        let core = &mut *core;
+        let id = core.graph.next_task_id();
+        let mut deps: Vec<(TaskId, EdgeKind, DataKey)> = Vec::new();
+        let mut reads: Vec<DataKey> = Vec::new();
+        let mut input_keys: Vec<DataKey> = Vec::with_capacity(args.len());
+        let mut writes: Vec<DataKey> = Vec::new();
+        let mut updated: Vec<DataKey> = Vec::new();
+
+        for (i, arg) in args.iter().enumerate() {
+            let dir = spec.directions[i];
+            let data_id = match (arg, literal_keys[i]) {
+                (_, Some(k)) => k.data,
+                (Arg::Ref(k), _) => k.data,
+                (Arg::Value(_), None) => unreachable!("literal not materialized"),
+            };
+            if dir.reads() {
+                let (key, raw) = core.registry.record_read(data_id, id);
+                if !core.registry.is_available(key) || raw.is_some() {
+                    if let Some(p) = raw {
+                        deps.push((p, EdgeKind::Raw, key));
+                    }
+                }
+                reads.push(key);
+                input_keys.push(key);
+            }
+            if dir.writes() {
+                let (new_key, waw, war) = core.registry.record_write(data_id, id);
+                if let Some(p) = waw {
+                    deps.push((p, EdgeKind::Waw, new_key));
+                }
+                for r in war {
+                    if r != id {
+                        deps.push((r, EdgeKind::War, new_key));
+                    }
+                }
+                writes.push(new_key);
+                updated.push(new_key);
+            }
+        }
+
+        // Return values: fresh data produced by this task.
+        let mut returns = Vec::with_capacity(spec.n_outputs);
+        for _ in 0..spec.n_outputs {
+            let key = core.registry.new_future(id);
+            writes.push(key);
+            returns.push(key);
+        }
+
+        core.meta.insert(
+            id,
+            TaskMeta {
+                spec: Arc::clone(spec),
+                inputs: input_keys,
+                outputs: writes.clone(),
+            },
+        );
+        core.stats.tasks_submitted += 1;
+
+        let ready = core.graph.insert_task(id, &spec.name, reads, writes, deps);
+        if ready {
+            core.enqueue_ready(id);
+            self.shared.cv_work.notify_one();
+        }
+        // A task may have been cancelled on insert (failed upstream).
+        if core.graph.state(id) == Some(TaskState::Cancelled) {
+            core.stats.tasks_cancelled += 1;
+            self.shared.cv_done.notify_all();
+        }
+        Ok(SubmitOutcome { returns, updated })
+    }
+
+    /// Block until `key` is produced, then deserialize and return it
+    /// (`compss_wait_on`). Fails if the producing task failed or was
+    /// cancelled.
+    pub fn wait_on(&self, key: DataKey) -> Result<RValue> {
+        let path = {
+            let mut core = self.shared.core.lock().unwrap();
+            loop {
+                if core.registry.is_available(key) {
+                    break self
+                        .shared
+                        .path_for(key);
+                }
+                let producer = core
+                    .registry
+                    .info(key)
+                    .and_then(|i| i.producer)
+                    .ok_or_else(|| anyhow!("unknown datum {key}"))?;
+                match core.graph.state(producer) {
+                    Some(TaskState::Failed) => {
+                        bail!("task {producer} producing {key} failed permanently")
+                    }
+                    Some(TaskState::Cancelled) => {
+                        bail!("task {producer} producing {key} was cancelled")
+                    }
+                    _ => {}
+                }
+                core = self.shared.cv_done.wait(core).unwrap();
+            }
+        };
+        let start = self.shared.tracer.now();
+        let v = self.shared.codec.read_file(&path)?;
+        self.shared.tracer.record_at(
+            self.master_wid(),
+            EventKind::Deserialize,
+            None,
+            start,
+            self.shared.tracer.now(),
+        );
+        Ok(v)
+    }
+
+    /// Block until every submitted task is in a terminal state
+    /// (`compss_barrier`). Returns an error if any task failed.
+    pub fn barrier(&self) -> Result<()> {
+        let core = self.shared.core.lock().unwrap();
+        let core = self
+            .shared
+            .cv_done
+            .wait_while(core, |c| !c.graph.quiescent())
+            .unwrap();
+        if core.graph.failed_count() > 0 {
+            bail!(
+                "{} task(s) failed, {} cancelled",
+                core.graph.failed_count(),
+                core.graph.cancelled_count()
+            );
+        }
+        Ok(())
+    }
+
+    /// Stop the runtime (`compss_stop`): drain, join workers, return stats.
+    pub fn stop(self) -> Result<RuntimeStats> {
+        // Drain outstanding work first (stop() implies a barrier in COMPSs).
+        {
+            let core = self.shared.core.lock().unwrap();
+            let mut core = self
+                .shared
+                .cv_done
+                .wait_while(core, |c| !c.graph.quiescent())
+                .unwrap();
+            core.shutdown = true;
+        }
+        self.shared.stopping.store(true, Ordering::SeqCst);
+        self.shared.cv_work.notify_all();
+        for w in self.workers {
+            let _ = w.join();
+        }
+        let core = self.shared.core.lock().unwrap();
+        Ok(core.stats.clone())
+    }
+
+    /// Snapshot statistics without stopping.
+    pub fn stats(&self) -> RuntimeStats {
+        self.shared.core.lock().unwrap().stats.clone()
+    }
+
+    /// DOT export of the current DAG (Figures 2-5).
+    pub fn dag_dot(&self, title: &str) -> String {
+        self.shared.core.lock().unwrap().graph.to_dot(title)
+    }
+
+    /// Finish and return the trace collected so far.
+    pub fn trace(&self, label: &str) -> crate::trace::Trace {
+        self.shared.tracer.finish(label)
+    }
+
+    /// Critical-path length of the submitted DAG.
+    pub fn critical_path_len(&self) -> usize {
+        self.shared.core.lock().unwrap().graph.critical_path_len()
+    }
+
+    /// Remove the workdir (after stop). Separate so tests can inspect files.
+    pub fn cleanup_workdir(config: &CoordinatorConfig) {
+        let _ = std::fs::remove_dir_all(&config.workdir);
+    }
+}

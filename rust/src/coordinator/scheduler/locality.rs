@@ -1,0 +1,170 @@
+//! Data-locality policy: prefer the ready task with the most input bytes
+//! already resident on the requesting node, falling back to FIFO order.
+//! This models COMPSs' "data-locality-aware strategies" (§3.1) and is what
+//! keeps merge trees node-local in the multi-node runs — the Figure 8/9
+//! sweeps run under it.
+//!
+//! Implementation note (EXPERIMENTS.md §Perf): the first version scanned
+//! the whole ready frontier per `pop_for` (O(n), which collapsed to
+//! ~0.04 M ops/s at 100k queued tasks). Tasks are now *bucketed by their
+//! best node at push time*: `pop_for(node)` takes the oldest task whose
+//! dominant input locality is that node in O(1), falling back to the
+//! global FIFO of locality-free tasks, then to work stealing from other
+//! nodes' buckets. The placement decisions match the scan version whenever
+//! a task has a single dominant node — the common case for fragment
+//! pipelines — at >100x the throughput.
+
+use super::{ReadyTask, Scheduler};
+use crate::coordinator::dag::TaskId;
+use crate::coordinator::registry::NodeId;
+use std::collections::{HashMap, VecDeque};
+
+#[derive(Default)]
+pub struct LocalityScheduler {
+    /// Tasks whose inputs are dominantly resident on one node.
+    buckets: HashMap<NodeId, VecDeque<ReadyTask>>,
+    /// Tasks with no locality signal (literals only, empty inputs).
+    anywhere: VecDeque<ReadyTask>,
+    len: usize,
+}
+
+impl LocalityScheduler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The node holding the most input bytes, if any bytes are localized.
+    fn best_node(task: &ReadyTask) -> Option<NodeId> {
+        let mut per_node: HashMap<NodeId, u64> = HashMap::new();
+        for (bytes, locs) in &task.inputs {
+            for n in locs {
+                *per_node.entry(*n).or_insert(0) += *bytes;
+            }
+        }
+        per_node
+            .into_iter()
+            .max_by(|a, b| a.1.cmp(&b.1).then(b.0 .0.cmp(&a.0 .0)))
+            .filter(|(_, bytes)| *bytes > 0)
+            .map(|(n, _)| n)
+    }
+}
+
+impl Scheduler for LocalityScheduler {
+    fn push(&mut self, task: ReadyTask) {
+        self.len += 1;
+        match Self::best_node(&task) {
+            Some(node) => self.buckets.entry(node).or_default().push_back(task),
+            None => self.anywhere.push_back(task),
+        }
+    }
+
+    fn pop_for(&mut self, node: NodeId) -> Option<TaskId> {
+        // 1. Own bucket (locality hit).
+        if let Some(b) = self.buckets.get_mut(&node) {
+            if let Some(t) = b.pop_front() {
+                self.len -= 1;
+                return Some(t.id);
+            }
+        }
+        // 2. Locality-free pool, FIFO.
+        if let Some(t) = self.anywhere.pop_front() {
+            self.len -= 1;
+            return Some(t.id);
+        }
+        // 3. Steal the oldest task from the fullest other bucket (keeps
+        // workers busy over strict locality, as COMPSs does).
+        let victim = self
+            .buckets
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .max_by_key(|(_, q)| q.len())
+            .map(|(n, _)| *n)?;
+        let t = self.buckets.get_mut(&victim)?.pop_front()?;
+        self.len -= 1;
+        Some(t.id)
+    }
+
+    fn queue_len(&self) -> usize {
+        self.len
+    }
+
+    fn name(&self) -> &'static str {
+        "locality"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt(id: u64, inputs: Vec<(u64, Vec<NodeId>)>) -> ReadyTask {
+        ReadyTask {
+            id: TaskId(id),
+            inputs,
+            type_name: "t".into(),
+        }
+    }
+
+    #[test]
+    fn prefers_node_local_inputs() {
+        let mut s = LocalityScheduler::new();
+        s.push(rt(1, vec![(100, vec![NodeId(1)])]));
+        s.push(rt(2, vec![(100, vec![NodeId(0)])]));
+        // Node 0 should get task 2 despite FIFO order.
+        assert_eq!(s.pop_for(NodeId(0)).unwrap().0, 2);
+        // Node 1 gets its local task.
+        assert_eq!(s.pop_for(NodeId(1)).unwrap().0, 1);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn steals_when_starved() {
+        let mut s = LocalityScheduler::new();
+        s.push(rt(1, vec![(10, vec![NodeId(5)])]));
+        s.push(rt(2, vec![(10, vec![NodeId(6)])]));
+        // Node 0 has no local work but must not idle.
+        assert!(s.pop_for(NodeId(0)).is_some());
+        assert!(s.pop_for(NodeId(0)).is_some());
+        assert!(s.pop_for(NodeId(0)).is_none());
+    }
+
+    #[test]
+    fn weighs_bytes_not_counts() {
+        let mut s = LocalityScheduler::new();
+        // Task dominated by node 9's big input despite node 0 replicas.
+        s.push(rt(1, vec![(10, vec![NodeId(0)]), (1000, vec![NodeId(9)])]));
+        // Task fully on node 0.
+        s.push(rt(2, vec![(50, vec![NodeId(0)])]));
+        assert_eq!(s.pop_for(NodeId(0)).unwrap().0, 2);
+    }
+
+    #[test]
+    fn locality_free_tasks_go_anywhere_fifo() {
+        let mut s = LocalityScheduler::new();
+        s.push(rt(1, vec![]));
+        s.push(rt(2, vec![]));
+        assert_eq!(s.pop_for(NodeId(3)).unwrap().0, 1);
+        assert_eq!(s.pop_for(NodeId(7)).unwrap().0, 2);
+    }
+
+    #[test]
+    fn high_volume_pop_is_fast() {
+        // 100k tasks: the old O(n^2) scan took ~minutes; this must finish
+        // instantly.
+        let mut s = LocalityScheduler::new();
+        for i in 0..100_000u64 {
+            s.push(rt(i, vec![(64, vec![NodeId((i % 4) as u32)])]));
+        }
+        let t0 = std::time::Instant::now();
+        let mut popped = 0;
+        while s.pop_for(NodeId(0)).is_some() {
+            popped += 1;
+        }
+        assert_eq!(popped, 100_000);
+        assert!(
+            t0.elapsed().as_secs_f64() < 1.0,
+            "pop loop too slow: {:?}",
+            t0.elapsed()
+        );
+    }
+}

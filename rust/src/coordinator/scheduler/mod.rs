@@ -1,0 +1,126 @@
+//! Pluggable task schedulers.
+//!
+//! COMPSs ships pluggable scheduling policies — FIFO, LIFO, and
+//! data-locality-aware strategies (§3.1). The runtime asks the policy for a
+//! task whenever a worker goes idle; the policy sees the ready frontier plus
+//! enough metadata (input sizes and locations) to make locality decisions.
+//!
+//! Policies are pure data structures driven identically by the live
+//! executor and the discrete-event simulator.
+
+mod fifo;
+mod lifo;
+mod locality;
+
+pub use fifo::FifoScheduler;
+pub use lifo::LifoScheduler;
+pub use locality::LocalityScheduler;
+
+use crate::coordinator::dag::TaskId;
+use crate::coordinator::registry::NodeId;
+
+/// Metadata the policy may use for placement.
+#[derive(Clone, Debug)]
+pub struct ReadyTask {
+    pub id: TaskId,
+    /// (bytes, nodes-holding-a-replica) per input.
+    pub inputs: Vec<(u64, Vec<NodeId>)>,
+    /// Task type, for policies that classify by type.
+    pub type_name: String,
+}
+
+impl ReadyTask {
+    /// Bytes of input already resident on `node`.
+    pub fn local_bytes(&self, node: NodeId) -> u64 {
+        self.inputs
+            .iter()
+            .filter(|(_, locs)| locs.contains(&node))
+            .map(|(b, _)| *b)
+            .sum()
+    }
+
+    /// Total input bytes.
+    pub fn total_bytes(&self) -> u64 {
+        self.inputs.iter().map(|(b, _)| *b).sum()
+    }
+}
+
+/// A scheduling policy over the ready frontier.
+pub trait Scheduler: Send {
+    /// Offer a task that just became ready.
+    fn push(&mut self, task: ReadyTask);
+
+    /// Pick a task for an idle worker on `node`; `None` leaves the worker
+    /// parked until the next `push`.
+    fn pop_for(&mut self, node: NodeId) -> Option<TaskId>;
+
+    /// Number of queued ready tasks.
+    fn queue_len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.queue_len() == 0
+    }
+
+    /// Policy name for configs/CLI (`fifo`, `lifo`, `locality`).
+    fn name(&self) -> &'static str;
+}
+
+/// Construct a policy by name.
+pub fn scheduler_by_name(name: &str) -> Option<Box<dyn Scheduler>> {
+    match name {
+        "fifo" => Some(Box::new(FifoScheduler::new())),
+        "lifo" => Some(Box::new(LifoScheduler::new())),
+        "locality" => Some(Box::new(LocalityScheduler::new())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt(id: u64) -> ReadyTask {
+        ReadyTask {
+            id: TaskId(id),
+            inputs: vec![],
+            type_name: "t".into(),
+        }
+    }
+
+    #[test]
+    fn by_name_resolves() {
+        for n in ["fifo", "lifo", "locality"] {
+            assert_eq!(scheduler_by_name(n).unwrap().name(), n);
+        }
+        assert!(scheduler_by_name("zzz").is_none());
+    }
+
+    #[test]
+    fn ready_task_locality_math() {
+        let t = ReadyTask {
+            id: TaskId(1),
+            inputs: vec![
+                (100, vec![NodeId(0)]),
+                (50, vec![NodeId(0), NodeId(1)]),
+                (25, vec![NodeId(2)]),
+            ],
+            type_name: "x".into(),
+        };
+        assert_eq!(t.local_bytes(NodeId(0)), 150);
+        assert_eq!(t.local_bytes(NodeId(1)), 50);
+        assert_eq!(t.local_bytes(NodeId(3)), 0);
+        assert_eq!(t.total_bytes(), 175);
+    }
+
+    #[test]
+    fn empty_schedulers_return_none() {
+        for name in ["fifo", "lifo", "locality"] {
+            let mut s = scheduler_by_name(name).unwrap();
+            assert!(s.pop_for(NodeId(0)).is_none());
+            s.push(rt(1));
+            assert_eq!(s.queue_len(), 1);
+            assert!(s.pop_for(NodeId(0)).is_some());
+            assert!(s.is_empty());
+        }
+    }
+}

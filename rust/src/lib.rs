@@ -1,0 +1,66 @@
+//! # RCOMPSs — a scalable task-based runtime system (paper reproduction)
+//!
+//! This crate reproduces *RCOMPSs: A Scalable Runtime System for R Code
+//! Execution on Manycore Systems* (CS.DC 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the COMPSs-style task runtime: a versioned
+//!   data registry, automatic dependency detection, dynamic DAG
+//!   construction, pluggable schedulers, persistent worker executors,
+//!   file-based parameter serialization (the paper's Table-1 codec set),
+//!   fault tolerance, Extrae-like tracing, and a discrete-event cluster
+//!   simulator for scale-out experiments.
+//! * **Layer 2 (python/compile/model.py)** — the benchmark task bodies
+//!   (KNN / K-means / linear regression fragments) as jax functions,
+//!   AOT-lowered to HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot-spots, lowered inside the L2 functions.
+//!
+//! Python runs only at build time (`make artifacts`); the Rust binary loads
+//! the artifacts through PJRT (`runtime` module) and is self-contained.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use rcompss::prelude::*;
+//!
+//! let rt = CompssRuntime::start(RuntimeConfig::local(4)).unwrap();
+//! let add = rt.register_task(TaskDef::new("add", 2, |args| {
+//!     let x = args[0].as_f64().unwrap();
+//!     let y = args[1].as_f64().unwrap();
+//!     Ok(vec![RValue::scalar(x + y)])
+//! }));
+//! let a = rt.submit(&add, &[RValue::scalar(4.0).into(), RValue::scalar(5.0).into()]).unwrap();
+//! let b = rt.submit(&add, &[RValue::scalar(6.0).into(), RValue::scalar(7.0).into()]).unwrap();
+//! let c = rt.submit(&add, &[a.into(), b.into()]).unwrap();
+//! let res = rt.wait_on(&c).unwrap();
+//! assert_eq!(res.as_f64().unwrap(), 22.0);
+//! rt.stop().unwrap();
+//! ```
+
+pub mod api;
+pub mod apps;
+pub mod bench_harness;
+pub mod blas;
+pub mod cluster;
+pub mod coordinator;
+pub mod runtime;
+pub mod serialization;
+pub mod sim;
+pub mod trace;
+pub mod util;
+pub mod value;
+
+/// Convenience re-exports covering the public programming model —
+/// the analog of `library(RCOMPSs)`.
+pub mod prelude {
+    pub use crate::api::{CompssRuntime, DataRef, RuntimeConfig, TaskArg, TaskDef};
+    pub use crate::coordinator::access::Direction;
+    pub use crate::value::RValue;
+}
+
+/// Crate version, reported by the CLI (`rcompss --version`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// COMPSs version the paper built against; reported for parity.
+pub const COMPSS_COMPAT: &str = "3.3.2";

@@ -1,0 +1,374 @@
+//! `rcompss` — the launcher CLI (the `runcompss` analog).
+//!
+//! Subcommands:
+//!
+//! * `run`   — execute one of the benchmark apps on the live runtime;
+//! * `sim`   — execute an app's DAG on the simulated cluster;
+//! * `dag`   — export an app's DAG as Graphviz DOT (Figures 2-5);
+//! * `trace` — run (live or simulated) and render a Figure-10 timeline;
+//! * `codecs`— list the Table-1 serialization codecs;
+//! * `info`  — environment report (artifacts, profiles, versions).
+//!
+//! Argument parsing is hand-rolled (`--key value` / `--flag`), since the
+//! offline vendor set has no clap.
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+use rcompss::api::{CompssRuntime, RuntimeConfig};
+use rcompss::apps::backend::Backend;
+use rcompss::apps::kmeans::{self, KmeansConfig};
+use rcompss::apps::knn::{self, KnnConfig};
+use rcompss::apps::linreg::{self, LinregConfig};
+use rcompss::apps::{LiveSink, TaskSink};
+use rcompss::cluster::{ClusterSpec, MachineProfile};
+use rcompss::sim::{CostModel, SimEngine, SimSink};
+use rcompss::value::RValue;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("rcompss: error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+struct Opts {
+    flags: HashMap<String, String>,
+}
+
+impl Opts {
+    fn parse(args: &[String]) -> anyhow::Result<Opts> {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), args[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                anyhow::bail!("unexpected positional argument '{a}'");
+            }
+        }
+        Ok(Opts { flags })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn backend_from(opts: &Opts) -> anyhow::Result<Backend> {
+    match opts.get("backend", "auto").as_str() {
+        "auto" => Ok(Backend::auto()),
+        "pjrt" => Ok(Backend::Pjrt),
+        "native" => Ok(Backend::Native),
+        other => anyhow::bail!("unknown backend '{other}' (auto|pjrt|native)"),
+    }
+}
+
+fn run(args: Vec<String>) -> anyhow::Result<()> {
+    let Some(cmd) = args.first().map(|s| s.as_str()) else {
+        print_usage();
+        return Ok(());
+    };
+    if cmd == "--version" || cmd == "version" {
+        println!(
+            "rcompss {} (COMPSs-compatible runtime, paper reproduction; COMPSs {})",
+            rcompss::VERSION,
+            rcompss::COMPSS_COMPAT
+        );
+        return Ok(());
+    }
+    let opts = Opts::parse(&args[1..])?;
+    match cmd {
+        "run" => cmd_run(&opts),
+        "sim" => cmd_sim(&opts),
+        "dag" => cmd_dag(&opts),
+        "trace" => cmd_trace(&opts),
+        "codecs" => cmd_codecs(),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}' (try `rcompss help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "rcompss {} — task-based runtime for R-style workloads (RCOMPSs reproduction)
+
+USAGE:
+  rcompss run    --app knn|kmeans|linreg [--workers N] [--fragments F]
+                 [--backend auto|pjrt|native] [--codec rmvl|qs|fst|rds|...]
+                 [--scheduler fifo|lifo|locality] [--trace]
+  rcompss sim    --app knn|kmeans|linreg --machine shaheen3|marenostrum5
+                 [--nodes N] [--workers-per-node W] [--fragments F]
+                 [--scheduler fifo|lifo|locality]
+  rcompss dag    --app add|knn|kmeans|linreg [--fragments F] [--out FILE.dot]
+  rcompss trace  --app knn|kmeans|linreg --machine shaheen3|marenostrum5
+                 [--nodes N] [--workers-per-node W] [--width COLS]
+  rcompss codecs
+  rcompss info
+  rcompss --version",
+        rcompss::VERSION
+    );
+}
+
+fn cmd_run(opts: &Opts) -> anyhow::Result<()> {
+    let app = opts.get("app", "knn");
+    let workers = opts.get_usize("workers", 4)? as u32;
+    let fragments = opts.get_usize("fragments", 4)?;
+    let backend = backend_from(opts)?;
+    let config = RuntimeConfig::local(workers)
+        .with_scheduler(&opts.get("scheduler", "fifo"))
+        .with_codec(&opts.get("codec", "rmvl"))
+        .with_trace(opts.has("trace"));
+    let rt = CompssRuntime::start(config)?;
+    println!("rcompss run: app={app} workers={workers} fragments={fragments} backend={backend:?}");
+    let t0 = std::time::Instant::now();
+    match app.as_str() {
+        "knn" => {
+            let mut cfg = KnnConfig::small(42);
+            cfg.train_fragments = fragments;
+            cfg.test_blocks = opts.get_usize("test-blocks", 2)?;
+            let res = knn::run_knn(&rt, &cfg, backend)?;
+            println!(
+                "KNN: {} test points classified, accuracy {:.1}%",
+                res.total_test_points,
+                res.accuracy * 100.0
+            );
+        }
+        "kmeans" => {
+            let mut cfg = KmeansConfig::small(42);
+            cfg.fragments = fragments;
+            cfg.iterations = opts.get_usize("iterations", 3)?;
+            let res = kmeans::run_kmeans(&rt, &cfg, backend)?;
+            println!(
+                "K-means: {} iterations, final centroid shift {:.5}",
+                res.iterations_run, res.last_shift
+            );
+        }
+        "linreg" => {
+            let mut cfg = LinregConfig::small(42);
+            cfg.fragments = fragments;
+            cfg.pred_blocks = opts.get_usize("pred-blocks", 2)?;
+            let res = linreg::run_linreg(&rt, &cfg, backend)?;
+            println!(
+                "Linear regression: max |beta error| {:.5}, prediction R^2 {:.4}",
+                res.beta_max_err, res.r2
+            );
+        }
+        other => anyhow::bail!("unknown app '{other}'"),
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    if opts.has("trace") {
+        let trace = rt.trace(&format!("{app} live"));
+        println!("\n{}", trace.ascii_timeline(opts.get_usize("width", 100)?));
+    }
+    let stats = rt.stop()?;
+    println!(
+        "elapsed {:.3}s | tasks: {} done, {} failed, {} resubmitted | ser {:.3}s / {} | deser {:.3}s / {}",
+        elapsed,
+        stats.tasks_done,
+        stats.tasks_failed,
+        stats.resubmissions,
+        stats.serialize_s,
+        rcompss::util::table::fmt_bytes(stats.bytes_serialized as usize),
+        stats.deserialize_s,
+        rcompss::util::table::fmt_bytes(stats.bytes_deserialized as usize),
+    );
+    Ok(())
+}
+
+fn build_plan(app: &str, fragments: usize, opts: &Opts) -> anyhow::Result<rcompss::sim::sink::SimPlan> {
+    let mut sink = SimSink::new();
+    match app {
+        "knn" => {
+            let mut cfg = KnnConfig::small(42);
+            cfg.train_fragments = fragments;
+            cfg.test_blocks = opts.get_usize("test-blocks", 2)?;
+            knn::plan_knn(&mut sink, &cfg)?;
+        }
+        "kmeans" => {
+            let mut cfg = KmeansConfig::small(42);
+            cfg.fragments = fragments;
+            cfg.iterations = opts.get_usize("iterations", 3)?;
+            kmeans::plan_kmeans(&mut sink, &cfg)?;
+        }
+        "linreg" => {
+            let mut cfg = LinregConfig::small(42);
+            cfg.fragments = fragments;
+            cfg.pred_blocks = opts.get_usize("pred-blocks", 2)?;
+            linreg::plan_linreg(&mut sink, &cfg)?;
+        }
+        other => anyhow::bail!("unknown app '{other}'"),
+    }
+    Ok(sink.finish())
+}
+
+fn cluster_from(opts: &Opts) -> anyhow::Result<ClusterSpec> {
+    let machine = opts.get("machine", "shaheen3");
+    let profile = MachineProfile::by_name(&machine)
+        .ok_or_else(|| anyhow::anyhow!("unknown machine '{machine}'"))?;
+    let nodes = opts.get_usize("nodes", 1)? as u32;
+    let mut spec = ClusterSpec::new(profile, nodes);
+    if opts.has("workers-per-node") {
+        spec = spec.with_workers_per_node(opts.get_usize("workers-per-node", 0)? as u32);
+    }
+    Ok(spec)
+}
+
+fn cmd_sim(opts: &Opts) -> anyhow::Result<()> {
+    let app = opts.get("app", "knn");
+    let fragments = opts.get_usize("fragments", 64)?;
+    let spec = cluster_from(opts)?;
+    let plan = build_plan(&app, fragments, opts)?;
+    let n_tasks = plan.graph.len();
+    let cp = plan.graph.critical_path_len();
+    let engine = SimEngine::new(spec.clone(), CostModel::default())
+        .with_scheduler(&opts.get("scheduler", "fifo"));
+    let report = engine.run(plan, &format!("{app}@{}", spec.profile.name))?;
+    println!(
+        "sim: app={app} machine={} nodes={} workers/node={} scheduler={}",
+        spec.profile.name,
+        spec.nodes,
+        spec.workers_per_node,
+        opts.get("scheduler", "fifo")
+    );
+    println!(
+        "  tasks={n_tasks} critical_path={cp} makespan={:.3}s utilization={:.0}% io={:.3}s transfer={:.3}s",
+        report.makespan_s,
+        report.utilization * 100.0,
+        report.total_io_s,
+        report.total_transfer_s
+    );
+    let mut types: Vec<_> = report.per_type.iter().collect();
+    types.sort_by(|a, b| b.1 .1.partial_cmp(&a.1 .1).unwrap());
+    for (ty, (count, secs)) in types {
+        println!("  {ty:28} x{count:<6} {secs:9.3}s compute");
+    }
+    Ok(())
+}
+
+fn cmd_dag(opts: &Opts) -> anyhow::Result<()> {
+    let app = opts.get("app", "add");
+    let fragments = opts.get_usize("fragments", 5)?;
+    let dot = if app == "add" {
+        // Figure 2: add four numbers.
+        let rt = CompssRuntime::start(RuntimeConfig::local(2))?;
+        let add = rt.register_task(rcompss::api::TaskDef::new("add", 2, |a| {
+            Ok(vec![RValue::scalar(
+                a[0].as_f64().unwrap_or(0.0) + a[1].as_f64().unwrap_or(0.0),
+            )])
+        }));
+        let r1 = rt.submit(&add, &[4.0.into(), 5.0.into()])?;
+        let r2 = rt.submit(&add, &[6.0.into(), 7.0.into()])?;
+        let r3 = rt.submit(&add, &[r1.into(), r2.into()])?;
+        rt.wait_on(&r3)?;
+        let dot = rt.dag_dot("Figure 2: add four numbers");
+        rt.stop()?;
+        dot
+    } else {
+        let plan = build_plan(&app, fragments, opts)?;
+        plan.graph.to_dot(&format!("{app} ({fragments} fragments)"))
+    };
+    match opts.flags.get("out") {
+        Some(path) => {
+            std::fs::write(path, &dot)?;
+            println!("wrote {path}");
+        }
+        None => println!("{dot}"),
+    }
+    Ok(())
+}
+
+fn cmd_trace(opts: &Opts) -> anyhow::Result<()> {
+    let app = opts.get("app", "knn");
+    let fragments = opts.get_usize("fragments", 16)?;
+    let spec = cluster_from(opts)?;
+    let plan = build_plan(&app, fragments, opts)?;
+    let engine = SimEngine::new(spec.clone(), CostModel::default())
+        .with_scheduler(&opts.get("scheduler", "fifo"))
+        .with_trace(true);
+    let report = engine.run(plan, &format!("{app}@{}", spec.profile.name))?;
+    println!("{}", report.trace.ascii_timeline(opts.get_usize("width", 110)?));
+    if let Some(out) = opts.flags.get("prv") {
+        std::fs::write(out, report.trace.to_prv())?;
+        println!("wrote Paraver trace to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_codecs() -> anyhow::Result<()> {
+    println!("Table-1 serialization codecs (default: rmvl):");
+    for codec in rcompss::serialization::all_codecs() {
+        println!("  {}", codec.name());
+    }
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    println!("rcompss {}", rcompss::VERSION);
+    println!(
+        "artifacts: {} ({})",
+        rcompss::runtime::artifacts_dir().display(),
+        if rcompss::runtime::artifacts_available() {
+            "present"
+        } else {
+            "missing — run `make artifacts`"
+        }
+    );
+    if rcompss::runtime::artifacts_available() {
+        let m = rcompss::runtime::Manifest::load(&rcompss::runtime::artifacts_dir())?;
+        println!("  {} task artifacts", m.tasks.len());
+    }
+    for name in ["shaheen3", "marenostrum5", "localbox"] {
+        let p = MachineProfile::by_name(name).unwrap();
+        println!(
+            "profile {:14} workers/node={:3} blas={:?} gemm_slowdown={}x",
+            p.name, p.workers_per_node, p.blas, p.gemm_slowdown
+        );
+    }
+    // Exercise a LiveSink-independent sanity path so `info` doubles as a
+    // smoke test in CI.
+    let rt = CompssRuntime::start(RuntimeConfig::local(1))?;
+    let ok = rt.register_task(rcompss::api::TaskDef::new("probe", 0, |_| {
+        Ok(vec![RValue::scalar(1.0)])
+    }));
+    let r = rt.submit(&ok, &[])?;
+    let v = rt.wait_on(&r)?;
+    rt.stop()?;
+    println!(
+        "runtime smoke: {}",
+        if v.as_f64() == Some(1.0) { "ok" } else { "BROKEN" }
+    );
+    Ok(())
+}
+
+// Silence "unused import" for LiveSink/TaskSink used only in some builds.
+#[allow(unused)]
+fn _keep(_: Option<(LiveSink<'static>, &dyn TaskSink)>) {}

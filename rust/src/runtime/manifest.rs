@@ -1,0 +1,176 @@
+//! Artifact manifest: what `python/compile/aot.py` produced.
+//!
+//! `artifacts/manifest.json` records, per task type, the HLO file name and
+//! the input/output tensor specs the function was lowered for. The runtime
+//! validates every execution against these specs — shape bugs surface as
+//! errors at the call site instead of PJRT aborts.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Tensor shape + dtype as lowered.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow!("spec missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .get("dtype")
+            .as_str()
+            .ok_or_else(|| anyhow!("spec missing dtype"))?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One lowered task function.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    /// The canonical fragment shape constants (model.py SHAPES).
+    pub shapes: BTreeMap<String, usize>,
+    pub tasks: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let doc = Json::parse(text).context("parse manifest.json")?;
+        let mut shapes = BTreeMap::new();
+        if let Some(obj) = doc.get("shapes").as_obj() {
+            for (k, v) in obj {
+                if let Some(n) = v.as_usize() {
+                    shapes.insert(k.clone(), n);
+                }
+            }
+        }
+        let mut tasks = BTreeMap::new();
+        let tasks_obj = doc
+            .get("tasks")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest missing tasks"))?;
+        for (name, t) in tasks_obj {
+            let file = t
+                .get("file")
+                .as_str()
+                .ok_or_else(|| anyhow!("task {name} missing file"))?;
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                t.get(key)
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("task {name} missing {key}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            tasks.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                },
+            );
+        }
+        if tasks.is_empty() {
+            bail!("manifest has no tasks");
+        }
+        Ok(Manifest { shapes, tasks })
+    }
+
+    pub fn task(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.tasks
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact for task '{name}'"))
+    }
+
+    /// Shape constant lookup (e.g. "knn_k").
+    pub fn shape(&self, key: &str) -> Result<usize> {
+        self.shapes
+            .get(key)
+            .copied()
+            .ok_or_else(|| anyhow!("manifest missing shape constant '{key}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "shapes": {"knn_k": 8, "km_k": 16},
+      "tasks": {
+        "knn_merge": {
+          "file": "knn_merge.hlo.txt",
+          "sha256_16": "abc",
+          "inputs": [
+            {"shape": [512, 8], "dtype": "float32"},
+            {"shape": [512, 8], "dtype": "int32"},
+            {"shape": [512, 8], "dtype": "float32"},
+            {"shape": [512, 8], "dtype": "int32"}
+          ],
+          "outputs": [
+            {"shape": [512, 8], "dtype": "float32"},
+            {"shape": [512, 8], "dtype": "int32"}
+          ]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        assert_eq!(m.shape("knn_k").unwrap(), 8);
+        let t = m.task("knn_merge").unwrap();
+        assert_eq!(t.inputs.len(), 4);
+        assert_eq!(t.outputs[1].dtype, "int32");
+        assert_eq!(t.file, PathBuf::from("/art/knn_merge.hlo.txt"));
+        assert_eq!(t.inputs[0].element_count(), 4096);
+    }
+
+    #[test]
+    fn missing_task_is_error() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        assert!(m.task("nope").is_err());
+        assert!(m.shape("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_empty_manifest() {
+        assert!(Manifest::parse(r#"{"tasks": {}}"#, Path::new("/")).is_err());
+        assert!(Manifest::parse("{", Path::new("/")).is_err());
+    }
+}

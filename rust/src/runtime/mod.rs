@@ -1,0 +1,265 @@
+//! PJRT runtime: load and execute the AOT artifacts from the worker hot
+//! path.
+//!
+//! The bridge pattern follows /opt/xla-example/load_hlo: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Executables are compiled once per
+//! thread and cached (the `xla` crate's client is `Rc`-based, so each
+//! persistent worker thread owns a thread-local engine — compile cost is
+//! paid once per worker per task type, consistent with the persistent
+//! worker model).
+//!
+//! This is the "Intel MKL" side of the paper's BLAS dichotomy: XLA's
+//! vectorized CPU kernels play MKL, `crate::blas` plays reference RBLAS,
+//! and `benches/runtime_hotpath.rs` measures the actual ratio that the
+//! simulator's cost model consumes.
+
+pub mod manifest;
+pub mod tensor;
+
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+/// Where the artifacts live: `$RCOMPSS_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("RCOMPSS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Quick availability probe (apps fall back to native BLAS when absent).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// A per-thread PJRT engine: client + compiled-executable cache.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl PjrtEngine {
+    /// Create an engine over an artifact directory.
+    pub fn new(dir: &std::path::Path) -> Result<PjrtEngine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(PjrtEngine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the executable for a task type.
+    fn executable(&self, task: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(task) {
+            return Ok(());
+        }
+        let spec = self.manifest.task(task)?;
+        let path_str = spec
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parse HLO text {}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile artifact '{task}'"))?;
+        self.cache.borrow_mut().insert(task.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a task artifact on literals. Inputs are validated against
+    /// the manifest; the tuple output is flattened to one literal per
+    /// declared output.
+    pub fn execute(&self, task: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let spec = self.manifest.task(task)?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "task '{task}' expects {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (lit, ts)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            let have = lit.element_count();
+            let want = ts.element_count();
+            if have != want {
+                bail!(
+                    "task '{task}' input {i}: {have} elements, manifest says {want} \
+                     (shape {:?})",
+                    ts.shape
+                );
+            }
+        }
+        self.executable(task)?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(task).expect("just compiled");
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute '{task}'"))?;
+        let first = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow::anyhow!("no output buffer from '{task}'"))?;
+        let lit = first
+            .to_literal_sync()
+            .with_context(|| format!("fetch result of '{task}'"))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let outs = lit.to_tuple().context("decompose result tuple")?;
+        if outs.len() != spec.outputs.len() {
+            bail!(
+                "task '{task}' produced {} outputs, manifest says {}",
+                outs.len(),
+                spec.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    /// Number of compiled executables in this thread's cache.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+thread_local! {
+    static ENGINE: RefCell<Option<PjrtEngine>> = const { RefCell::new(None) };
+}
+
+/// Run `f` with this thread's engine, creating it on first use.
+/// Fails if artifacts are missing — call [`artifacts_available`] first.
+pub fn with_engine<T>(f: impl FnOnce(&PjrtEngine) -> Result<T>) -> Result<T> {
+    ENGINE.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(PjrtEngine::new(&artifacts_dir())?);
+        }
+        f(slot.as_ref().unwrap())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        // Tests run from the crate root, where `artifacts/` lives.
+        artifacts_available()
+    }
+
+    #[test]
+    fn merge_add2_roundtrip() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        with_engine(|eng| {
+            let k = eng.manifest().shape("km_k")?; // 16
+            let a = xla::Literal::vec1(&vec![1.5f32; k]);
+            let b = xla::Literal::vec1(&vec![2.5f32; k]);
+            let outs = eng.execute("merge_add2_kmcounts", &[a, b])?;
+            assert_eq!(outs.len(), 1);
+            let v = outs[0].to_vec::<f32>()?;
+            assert!(v.iter().all(|x| (*x - 4.0).abs() < 1e-6));
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn input_arity_and_shape_validated() {
+        if !have_artifacts() {
+            return;
+        }
+        with_engine(|eng| {
+            let a = xla::Literal::vec1(&vec![1.0f32; 16]);
+            assert!(eng.execute("merge_add2_kmcounts", &[a]).is_err());
+            let small = xla::Literal::vec1(&vec![1.0f32; 3]);
+            let b = xla::Literal::vec1(&vec![1.0f32; 16]);
+            assert!(eng.execute("merge_add2_kmcounts", &[small, b]).is_err());
+            assert!(eng
+                .execute("not_a_task", &[xla::Literal::vec1(&[0f32])])
+                .is_err());
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn executables_are_cached() {
+        if !have_artifacts() {
+            return;
+        }
+        with_engine(|eng| {
+            let k = eng.manifest().shape("km_k")?;
+            let before = eng.compiled_count();
+            let a = xla::Literal::vec1(&vec![0f32; k]);
+            let b = xla::Literal::vec1(&vec![0f32; k]);
+            eng.execute("merge_add2_kmcounts", &[a, b])?;
+            let after_first = eng.compiled_count();
+            let a = xla::Literal::vec1(&vec![0f32; k]);
+            let b = xla::Literal::vec1(&vec![0f32; k]);
+            eng.execute("merge_add2_kmcounts", &[a, b])?;
+            assert!(after_first >= before);
+            assert_eq!(eng.compiled_count(), after_first, "second call reuses cache");
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn every_artifact_compiles() {
+        // Catches HLO the Rust-side XLA cannot run (e.g. LAPACK typed-FFI
+        // custom-calls) the moment an artifact regresses.
+        if !have_artifacts() {
+            return;
+        }
+        with_engine(|eng| {
+            let names: Vec<String> = eng.manifest().tasks.keys().cloned().collect();
+            for name in names {
+                eng.executable(&name)
+                    .unwrap_or_else(|e| panic!("artifact '{name}' failed to compile: {e:#}"));
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn lr_solve_solves_identity_system() {
+        if !have_artifacts() {
+            return;
+        }
+        with_engine(|eng| {
+            let p = eng.manifest().shape("lr_p")?; // 256
+            // ztz = I, zty = e -> beta = e (up to the 1e-6 ridge).
+            let mut eye = vec![0f32; p * p];
+            for i in 0..p {
+                eye[i * p + i] = 1.0;
+            }
+            let rhs: Vec<f32> = (0..p).map(|i| (i % 7) as f32).collect();
+            let ztz = xla::Literal::vec1(&eye).reshape(&[p as i64, p as i64])?;
+            let zty = xla::Literal::vec1(&rhs);
+            let outs = eng.execute("lr_solve", &[ztz, zty])?;
+            let beta = outs[0].to_vec::<f32>()?;
+            for (b, r) in beta.iter().zip(rhs.iter()) {
+                assert!((b - r).abs() < 1e-3, "{b} vs {r}");
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+}

@@ -1,0 +1,127 @@
+//! Conversions between the R value model and PJRT literals.
+//!
+//! `RValue` matrices are column-major f64 (R layout); the L2 jax functions
+//! take row-major f32/i32 arrays. These helpers do the layout + dtype
+//! conversion at the app/runtime boundary in one pass.
+
+use anyhow::{anyhow, Result};
+
+use crate::value::RValue;
+
+/// Column-major f64 matrix -> row-major f32 literal of shape (nrow, ncol).
+pub fn matrix_to_f32_literal(v: &RValue) -> Result<xla::Literal> {
+    let (data, nrow, ncol) = v
+        .as_matrix()
+        .ok_or_else(|| anyhow!("expected matrix, got {}", v.type_name()))?;
+    let mut row_major = vec![0f32; nrow * ncol];
+    for c in 0..ncol {
+        let col = &data[c * nrow..(c + 1) * nrow];
+        for (r, x) in col.iter().enumerate() {
+            row_major[r * ncol + c] = *x as f32;
+        }
+    }
+    Ok(xla::Literal::vec1(&row_major).reshape(&[nrow as i64, ncol as i64])?)
+}
+
+/// Real vector -> f32 literal (1-D).
+pub fn real_to_f32_literal(v: &RValue) -> Result<xla::Literal> {
+    let xs = v
+        .as_real()
+        .ok_or_else(|| anyhow!("expected double vector, got {}", v.type_name()))?;
+    let f: Vec<f32> = xs.iter().map(|x| *x as f32).collect();
+    Ok(xla::Literal::vec1(&f))
+}
+
+/// Real vector (flat, row-major order) -> f32 literal reshaped to dims.
+pub fn real_to_f32_literal_shaped(v: &RValue, dims: &[usize]) -> Result<xla::Literal> {
+    let xs = v
+        .as_real()
+        .ok_or_else(|| anyhow!("expected double vector, got {}", v.type_name()))?;
+    let want: usize = dims.iter().product();
+    if xs.len() != want {
+        anyhow::bail!("shape mismatch: {} elements for dims {:?}", xs.len(), dims);
+    }
+    let f: Vec<f32> = xs.iter().map(|x| *x as f32).collect();
+    let dims_i: Vec<i64> = dims.iter().map(|d| *d as i64).collect();
+    Ok(xla::Literal::vec1(&f).reshape(&dims_i)?)
+}
+
+/// Int vector -> i32 literal reshaped to dims.
+pub fn int_to_i32_literal_shaped(v: &RValue, dims: &[usize]) -> Result<xla::Literal> {
+    let xs = v
+        .as_int()
+        .ok_or_else(|| anyhow!("expected integer vector, got {}", v.type_name()))?;
+    let want: usize = dims.iter().product();
+    if xs.len() != want {
+        anyhow::bail!("shape mismatch: {} elements for dims {:?}", xs.len(), dims);
+    }
+    let dims_i: Vec<i64> = dims.iter().map(|d| *d as i64).collect();
+    Ok(xla::Literal::vec1(xs).reshape(&dims_i)?)
+}
+
+/// f32 literal -> Real vector (row-major flat order preserved).
+pub fn literal_to_real(lit: &xla::Literal) -> Result<RValue> {
+    let v = lit.to_vec::<f32>()?;
+    Ok(RValue::Real(v.into_iter().map(|x| x as f64).collect()))
+}
+
+/// f32 literal of shape (nrow, ncol) -> column-major RValue matrix.
+pub fn literal_to_matrix(lit: &xla::Literal, nrow: usize, ncol: usize) -> Result<RValue> {
+    let row_major = lit.to_vec::<f32>()?;
+    if row_major.len() != nrow * ncol {
+        anyhow::bail!(
+            "literal has {} elements, expected {}x{}",
+            row_major.len(),
+            nrow,
+            ncol
+        );
+    }
+    let mut col_major = vec![0f64; nrow * ncol];
+    for r in 0..nrow {
+        for c in 0..ncol {
+            col_major[c * nrow + r] = row_major[r * ncol + c] as f64;
+        }
+    }
+    Ok(RValue::matrix(col_major, nrow, ncol))
+}
+
+/// i32 literal -> Int vector.
+pub fn literal_to_int(lit: &xla::Literal) -> Result<RValue> {
+    Ok(RValue::Int(lit.to_vec::<i32>()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_roundtrip_transposes_layout() {
+        // Column-major 2x3: columns [1,2],[3,4],[5,6].
+        let m = RValue::matrix(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3);
+        let lit = matrix_to_f32_literal(&m).unwrap();
+        // Row-major order must be 1,3,5,2,4,6.
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1., 3., 5., 2., 4., 6.]);
+        let back = literal_to_matrix(&lit, 2, 3).unwrap();
+        assert!(back.identical(&m));
+    }
+
+    #[test]
+    fn vector_conversions() {
+        let v = RValue::Real(vec![1.5, -2.5]);
+        let lit = real_to_f32_literal(&v).unwrap();
+        assert!(literal_to_real(&lit).unwrap().identical(&v));
+
+        let iv = RValue::Int(vec![1, 2, 3, 4, 5, 6]);
+        let lit = int_to_i32_literal_shaped(&iv, &[2, 3]).unwrap();
+        assert!(literal_to_int(&lit).unwrap().identical(&iv));
+    }
+
+    #[test]
+    fn shape_mismatches_rejected() {
+        let v = RValue::Real(vec![1.0; 5]);
+        assert!(real_to_f32_literal_shaped(&v, &[2, 3]).is_err());
+        let iv = RValue::Int(vec![1; 5]);
+        assert!(int_to_i32_literal_shaped(&iv, &[2, 3]).is_err());
+        assert!(matrix_to_f32_literal(&RValue::Null).is_err());
+    }
+}

@@ -1,0 +1,371 @@
+//! `csv` codec — models `data.table::fwrite`/`fread`: text I/O. The paper
+//! benchmarked data.table's text path among its nine candidates; text is
+//! human-inspectable but pays formatting/parsing costs on numeric data.
+//!
+//! To satisfy the crate-wide codec contract (bit-exact round-trip of every
+//! `RValue`, including `NA_real_` payload bits), doubles are written as C99
+//! hex-floats with NA/NaN/Inf sentinels, and strings are RFC-4180 quoted.
+//! The container format is a line-oriented header (`#rcsv <type> <dims>`)
+//! followed by CSV rows; lists nest via an indented block count.
+
+use super::Codec;
+use crate::value::{is_na_real, RValue, NA_INTEGER, NA_REAL};
+use anyhow::{bail, Context, Result};
+use std::fmt::Write as _;
+
+pub struct CsvCodec;
+
+impl Codec for CsvCodec {
+    fn name(&self) -> &'static str {
+        "csv"
+    }
+
+    fn encode(&self, v: &RValue) -> Result<Vec<u8>> {
+        let mut out = String::new();
+        out.push_str("#rcsv v1\n");
+        write_value(&mut out, v)?;
+        Ok(out.into_bytes())
+    }
+
+    fn decode(&self, bytes: &[u8]) -> Result<RValue> {
+        let text = std::str::from_utf8(bytes).context("csv payload is not utf-8")?;
+        let mut lines = text.lines().peekable();
+        match lines.next() {
+            Some("#rcsv v1") => {}
+            _ => bail!("not an rcsv payload (bad header)"),
+        }
+        let v = read_value(&mut lines)?;
+        if lines.next().is_some() {
+            bail!("trailing lines after value");
+        }
+        Ok(v)
+    }
+}
+
+// ---- doubles: lossless text ------------------------------------------------
+
+fn fmt_f64(x: f64) -> String {
+    if is_na_real(x) {
+        "NA".to_string()
+    } else if x.is_nan() {
+        "NaN".to_string()
+    } else if x == f64::INFINITY {
+        "Inf".to_string()
+    } else if x == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        // Hex float: exact round-trip without 17-digit parsing subtleties.
+        format!("{:x}", HexF64(x))
+    }
+}
+
+struct HexF64(f64);
+
+impl std::fmt::LowerHex for HexF64 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let bits = self.0.to_bits();
+        write!(f, "0x{bits:016x}")
+    }
+}
+
+fn parse_f64(s: &str) -> Result<f64> {
+    Ok(match s {
+        "NA" => NA_REAL,
+        "NaN" => f64::NAN,
+        "Inf" => f64::INFINITY,
+        "-Inf" => f64::NEG_INFINITY,
+        hex if hex.starts_with("0x") => {
+            let bits = u64::from_str_radix(&hex[2..], 16).context("bad hex double")?;
+            f64::from_bits(bits)
+        }
+        dec => dec.parse::<f64>().context("bad double")?,
+    })
+}
+
+fn fmt_i32(x: i32) -> String {
+    if x == NA_INTEGER {
+        "NA".to_string()
+    } else {
+        x.to_string()
+    }
+}
+
+fn parse_i32(s: &str) -> Result<i32> {
+    if s == "NA" {
+        Ok(NA_INTEGER)
+    } else {
+        s.parse::<i32>().context("bad integer")
+    }
+}
+
+// ---- strings: RFC-4180 quoting ---------------------------------------------
+
+fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\"\""),
+            '\n' => out.push_str("\\n"),
+            '\\' => out.push_str("\\\\"),
+            '\r' => out.push_str("\\r"),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn unquote(s: &str) -> Result<String> {
+    let inner = s
+        .strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .ok_or_else(|| anyhow::anyhow!("unquoted string field: {s}"))?;
+    let mut out = String::with_capacity(inner.len());
+    let mut chars = inner.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => {
+                // Doubled quote inside a quoted field.
+                match chars.next() {
+                    Some('"') => out.push('"'),
+                    _ => bail!("stray quote in string field"),
+                }
+            }
+            '\\' => match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('r') => out.push('\r'),
+                Some('\\') => out.push('\\'),
+                other => bail!("bad escape {other:?}"),
+            },
+            c => out.push(c),
+        }
+    }
+    Ok(out)
+}
+
+/// Split a CSV line honoring quoted fields.
+fn split_csv(line: &str) -> Vec<String> {
+    let mut fields = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => {
+                in_quotes = !in_quotes;
+                cur.push('"');
+            }
+            '\\' if in_quotes => {
+                cur.push('\\');
+                if let Some(n) = chars.next() {
+                    cur.push(n);
+                }
+            }
+            ',' if !in_quotes => {
+                fields.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    fields.push(cur);
+    fields
+}
+
+// ---- value writer / reader --------------------------------------------------
+
+fn write_value(out: &mut String, v: &RValue) -> Result<()> {
+    match v {
+        RValue::Null => out.push_str("null\n"),
+        RValue::Logical(xs) => {
+            writeln!(out, "logical {}", xs.len()).unwrap();
+            writeln!(out, "{}", xs.iter().map(|x| fmt_i32(*x)).collect::<Vec<_>>().join(","))
+                .unwrap();
+        }
+        RValue::Int(xs) => {
+            writeln!(out, "integer {}", xs.len()).unwrap();
+            writeln!(out, "{}", xs.iter().map(|x| fmt_i32(*x)).collect::<Vec<_>>().join(","))
+                .unwrap();
+        }
+        RValue::Real(xs) => {
+            writeln!(out, "double {}", xs.len()).unwrap();
+            writeln!(out, "{}", xs.iter().map(|x| fmt_f64(*x)).collect::<Vec<_>>().join(","))
+                .unwrap();
+        }
+        RValue::Str(xs) => {
+            writeln!(out, "character {}", xs.len()).unwrap();
+            writeln!(out, "{}", xs.iter().map(|s| quote(s)).collect::<Vec<_>>().join(","))
+                .unwrap();
+        }
+        RValue::Matrix { data, nrow, ncol } => {
+            writeln!(out, "matrix {nrow} {ncol}").unwrap();
+            // One CSV row per matrix row — the natural fwrite layout.
+            for r in 0..*nrow {
+                let row: Vec<String> =
+                    (0..*ncol).map(|c| fmt_f64(data[c * nrow + r])).collect();
+                writeln!(out, "{}", row.join(",")).unwrap();
+            }
+        }
+        RValue::List(items) => {
+            writeln!(out, "list {}", items.len()).unwrap();
+            for (name, val) in items {
+                writeln!(out, "{}", quote(name)).unwrap();
+                write_value(out, val)?;
+            }
+        }
+        RValue::Raw(xs) => {
+            writeln!(out, "raw {}", xs.len()).unwrap();
+            let hex: String = xs.iter().map(|b| format!("{b:02x}")).collect();
+            writeln!(out, "{hex}").unwrap();
+        }
+    }
+    Ok(())
+}
+
+fn read_value<'a, I: Iterator<Item = &'a str>>(
+    lines: &mut std::iter::Peekable<I>,
+) -> Result<RValue> {
+    let header = lines.next().ok_or_else(|| anyhow::anyhow!("missing value header"))?;
+    let mut parts = header.split(' ');
+    let kind = parts.next().unwrap_or("");
+    match kind {
+        "null" => Ok(RValue::Null),
+        "logical" | "integer" => {
+            let n: usize = parts.next().unwrap_or("x").parse().context("bad length")?;
+            let xs = read_scalar_row(lines, n, parse_i32)?;
+            Ok(if kind == "logical" {
+                RValue::Logical(xs)
+            } else {
+                RValue::Int(xs)
+            })
+        }
+        "double" => {
+            let n: usize = parts.next().unwrap_or("x").parse().context("bad length")?;
+            Ok(RValue::Real(read_scalar_row(lines, n, parse_f64)?))
+        }
+        "character" => {
+            let n: usize = parts.next().unwrap_or("x").parse().context("bad length")?;
+            if n == 0 {
+                lines.next(); // consume the (empty) data line
+                return Ok(RValue::Str(vec![]));
+            }
+            let line = lines.next().ok_or_else(|| anyhow::anyhow!("missing row"))?;
+            let fields = split_csv(line);
+            if fields.len() != n {
+                bail!("character row has {} fields, expected {n}", fields.len());
+            }
+            Ok(RValue::Str(
+                fields.iter().map(|f| unquote(f)).collect::<Result<_>>()?,
+            ))
+        }
+        "matrix" => {
+            let nrow: usize = parts.next().unwrap_or("x").parse().context("bad nrow")?;
+            let ncol: usize = parts.next().unwrap_or("x").parse().context("bad ncol")?;
+            let mut data = vec![0f64; nrow * ncol];
+            for r in 0..nrow {
+                let line = lines.next().ok_or_else(|| anyhow::anyhow!("missing matrix row"))?;
+                let fields: Vec<&str> = line.split(',').collect();
+                if fields.len() != ncol {
+                    bail!("matrix row has {} fields, expected {ncol}", fields.len());
+                }
+                for (c, f) in fields.iter().enumerate() {
+                    data[c * nrow + r] = parse_f64(f)?;
+                }
+            }
+            Ok(RValue::Matrix { data, nrow, ncol })
+        }
+        "list" => {
+            let n: usize = parts.next().unwrap_or("x").parse().context("bad length")?;
+            let mut items = Vec::with_capacity(n);
+            for _ in 0..n {
+                let name_line =
+                    lines.next().ok_or_else(|| anyhow::anyhow!("missing list name"))?;
+                let name = unquote(name_line)?;
+                let val = read_value(lines)?;
+                items.push((name, val));
+            }
+            Ok(RValue::List(items))
+        }
+        "raw" => {
+            let n: usize = parts.next().unwrap_or("x").parse().context("bad length")?;
+            let line = lines
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("missing raw data line"))?;
+            if line.len() != n * 2 {
+                bail!("raw line has {} hex chars, expected {}", line.len(), n * 2);
+            }
+            let mut xs = Vec::with_capacity(n);
+            for i in 0..n {
+                xs.push(
+                    u8::from_str_radix(&line[i * 2..i * 2 + 2], 16).context("bad raw hex")?,
+                );
+            }
+            Ok(RValue::Raw(xs))
+        }
+        other => bail!("unknown rcsv kind {other:?}"),
+    }
+}
+
+fn read_scalar_row<'a, I: Iterator<Item = &'a str>, T>(
+    lines: &mut std::iter::Peekable<I>,
+    n: usize,
+    parse: impl Fn(&str) -> Result<T>,
+) -> Result<Vec<T>> {
+    let line = lines
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("missing data row"))?;
+    if n == 0 {
+        if !line.is_empty() {
+            bail!("expected empty row for zero-length vector");
+        }
+        return Ok(vec![]);
+    }
+    let fields: Vec<&str> = line.split(',').collect();
+    if fields.len() != n {
+        bail!("row has {} fields, expected {n}", fields.len());
+    }
+    fields.iter().map(|f| parse(f)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hex_floats_are_bit_exact() {
+        for x in [0.1, -0.0, f64::MAX, f64::MIN_POSITIVE, 1.0 / 3.0] {
+            let s = fmt_f64(x);
+            assert_eq!(parse_f64(&s).unwrap().to_bits(), x.to_bits(), "{s}");
+        }
+    }
+
+    #[test]
+    fn na_sentinels_roundtrip() {
+        assert!(is_na_real(parse_f64("NA").unwrap()));
+        assert!(parse_f64("NaN").unwrap().is_nan());
+        assert_eq!(parse_f64("Inf").unwrap(), f64::INFINITY);
+        assert_eq!(parse_i32("NA").unwrap(), NA_INTEGER);
+    }
+
+    #[test]
+    fn strings_with_commas_and_quotes() {
+        let v = RValue::Str(vec!["a,b".into(), "say \"hi\"".into(), "new\nline".into()]);
+        let c = CsvCodec;
+        assert!(v.identical(&c.decode(&c.encode(&v).unwrap()).unwrap()));
+    }
+
+    #[test]
+    fn matrix_row_layout() {
+        let v = RValue::matrix(vec![1.0, 2.0, 3.0, 4.0], 2, 2);
+        let text = String::from_utf8(CsvCodec.encode(&v).unwrap()).unwrap();
+        // Row 0 is (1,3) in column-major storage.
+        assert!(text.lines().nth(2).unwrap().starts_with("0x3ff0"));
+        assert!(v.identical(&CsvCodec.decode(text.as_bytes()).unwrap()));
+    }
+
+    #[test]
+    fn wrong_field_count_rejected() {
+        let text = "#rcsv v1\ndouble 3\n0x0,0x0\n";
+        assert!(CsvCodec.decode(text.as_bytes()).is_err());
+    }
+}

@@ -1,0 +1,217 @@
+//! File-based parameter serialization — the COMPSs interchange layer.
+//!
+//! COMPSs passes every task parameter through a file so the runtime can move
+//! data between processes and nodes without caring about the source
+//! language (§3.3.3 of the paper). The paper benchmarks nine R
+//! serialization methods and picks RMVL; this module rebuilds that design
+//! space in Rust, one codec per module, all behind the [`Codec`] trait:
+//!
+//! | Codec       | Models (R)             | Technique                                 |
+//! |-------------|------------------------|-------------------------------------------|
+//! | `rawbin`    | writeBin/readBin       | little-endian tagged binary, no filter    |
+//! | `xdr`       | serialize() ("_Rcpp")  | big-endian XDR binary (byte-swap cost)    |
+//! | `rds`       | saveRDS/readRDS        | XDR + gzip (slow write, ok read)          |
+//! | `qs_like`   | qs::qsave/qread        | byte-shuffle + fast zstd                  |
+//! | `fst_like`  | fst::write.fst         | columnar blocks + per-column fast zstd    |
+//! | `csv`       | data.table fwrite/fread| text (hex-float for lossless round-trip)  |
+//! | `rmvl`      | RMVL (default)         | aligned little-endian + mmap read path    |
+//!
+//! Every codec must round-trip **any** [`RValue`] bit-exactly (including
+//! `NA_real_` payloads); the shared property tests in this module enforce
+//! that, and `benches/table1_serialization.rs` regenerates Table 1.
+
+pub mod csv;
+pub mod fst_like;
+pub mod qs_like;
+pub mod rawbin;
+pub mod rds;
+pub mod rmvl;
+pub mod wire;
+pub mod xdr;
+
+use crate::value::RValue;
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// A serialization method for R values.
+///
+/// `encode`/`decode` work on byte buffers; `write_file`/`read_file` go
+/// through the filesystem and may be overridden for codecs with special I/O
+/// paths (RMVL uses mmap for reads).
+pub trait Codec: Send + Sync {
+    /// Short name used in configs, CLI flags, and Table 1 rows.
+    fn name(&self) -> &'static str;
+
+    /// Serialize a value into a fresh buffer.
+    fn encode(&self, v: &RValue) -> Result<Vec<u8>>;
+
+    /// Deserialize a value from a buffer.
+    fn decode(&self, bytes: &[u8]) -> Result<RValue>;
+
+    /// Serialize to a file (atomic enough for a single writer).
+    fn write_file(&self, v: &RValue, path: &Path) -> Result<()> {
+        let bytes = self.encode(v)?;
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        f.write_all(&bytes)?;
+        Ok(())
+    }
+
+    /// Deserialize from a file.
+    fn read_file(&self, path: &Path) -> Result<RValue> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+        self.decode(&bytes)
+    }
+}
+
+/// All codecs, in Table-1 display order.
+pub fn all_codecs() -> Vec<Box<dyn Codec>> {
+    vec![
+        Box::new(xdr::XdrCodec),
+        Box::new(rds::RdsCodec::default()),
+        Box::new(fst_like::FstCodec::default()),
+        Box::new(qs_like::QsCodec::default()),
+        Box::new(rmvl::RmvlCodec),
+        Box::new(rawbin::RawBinCodec),
+        Box::new(csv::CsvCodec),
+    ]
+}
+
+/// Look a codec up by name (CLI / config entry point).
+pub fn codec_by_name(name: &str) -> Option<Box<dyn Codec>> {
+    let c: Box<dyn Codec> = match name {
+        "xdr" | "serialize" | "serialize_rcpp" => Box::new(xdr::XdrCodec),
+        "rds" => Box::new(rds::RdsCodec::default()),
+        "fst" | "fst_like" => Box::new(fst_like::FstCodec::default()),
+        "qs" | "qs_like" => Box::new(qs_like::QsCodec::default()),
+        "rmvl" => Box::new(rmvl::RmvlCodec),
+        "rawbin" | "writebin" => Box::new(rawbin::RawBinCodec),
+        "csv" | "data.table" => Box::new(csv::CsvCodec),
+        _ => return None,
+    };
+    Some(c)
+}
+
+/// The default codec — the paper selects RMVL (§3.3.3).
+pub fn default_codec() -> Box<dyn Codec> {
+    Box::new(rmvl::RmvlCodec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+    use crate::value::{Gen, NA_INTEGER, NA_REAL};
+
+    fn corpus() -> Vec<RValue> {
+        let mut vals = vec![
+            RValue::Null,
+            RValue::Logical(vec![0, 1, NA_INTEGER]),
+            RValue::Int(vec![i32::MAX, i32::MIN + 1, 0, NA_INTEGER]),
+            RValue::Real(vec![
+                0.0,
+                -0.0,
+                1.5,
+                f64::MAX,
+                f64::MIN_POSITIVE,
+                f64::INFINITY,
+                f64::NEG_INFINITY,
+                f64::NAN,
+                NA_REAL,
+            ]),
+            RValue::Str(vec!["".into(), "héllo, \"wörld\"\n".into(), "x,y".into()]),
+            RValue::matrix(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3),
+            RValue::Raw(vec![0, 255, 128, 7]),
+            RValue::List(vec![
+                ("a".into(), RValue::scalar(1.0)),
+                ("".into(), RValue::Null),
+                (
+                    "nested".into(),
+                    RValue::List(vec![("m".into(), RValue::zeros(3, 3))]),
+                ),
+            ]),
+            RValue::Real(vec![]),
+            RValue::Str(vec![]),
+            RValue::List(vec![]),
+        ];
+        let mut rng = Pcg64::seeded(0xABCD);
+        let mut gen = Gen::new(&mut rng);
+        for _ in 0..40 {
+            vals.push(gen.arbitrary(3));
+        }
+        vals
+    }
+
+    #[test]
+    fn every_codec_roundtrips_corpus() {
+        for codec in all_codecs() {
+            for (i, v) in corpus().iter().enumerate() {
+                let bytes = codec
+                    .encode(v)
+                    .unwrap_or_else(|e| panic!("{} encode case {i}: {e}", codec.name()));
+                let back = codec
+                    .decode(&bytes)
+                    .unwrap_or_else(|e| panic!("{} decode case {i}: {e}", codec.name()));
+                assert!(
+                    v.identical(&back),
+                    "{} failed roundtrip on case {i}: {v:?} -> {back:?}",
+                    codec.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn every_codec_roundtrips_via_file() {
+        let dir = std::env::temp_dir().join(format!("rcompss_codec_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let v = {
+            let mut rng = Pcg64::seeded(7);
+            Gen::new(&mut rng).normal_matrix(64, 32)
+        };
+        for codec in all_codecs() {
+            let path = dir.join(format!("x.{}", codec.name()));
+            codec.write_file(&v, &path).unwrap();
+            let back = codec.read_file(&path).unwrap();
+            assert!(v.identical(&back), "{} file roundtrip", codec.name());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn codec_by_name_resolves_aliases() {
+        for name in ["rmvl", "qs", "fst", "rds", "serialize_rcpp", "csv", "rawbin"] {
+            assert!(codec_by_name(name).is_some(), "{name}");
+        }
+        assert!(codec_by_name("nope").is_none());
+        assert_eq!(default_codec().name(), "rmvl");
+    }
+
+    #[test]
+    fn decode_rejects_truncated_input() {
+        let v = RValue::Real(vec![1.0; 100]);
+        for codec in all_codecs() {
+            let bytes = codec.encode(&v).unwrap();
+            let cut = &bytes[..bytes.len() / 2];
+            assert!(
+                codec.decode(cut).is_err(),
+                "{} accepted truncated input",
+                codec.name()
+            );
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        let garbage = vec![0xA5u8; 64];
+        for codec in all_codecs() {
+            assert!(
+                codec.decode(&garbage).is_err(),
+                "{} accepted garbage",
+                codec.name()
+            );
+        }
+    }
+}

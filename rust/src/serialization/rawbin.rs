@@ -1,0 +1,60 @@
+//! `rawbin` codec — models R's `writeBin`/`readBin`: the little-endian
+//! tagged tree with no filtering or compression. This is the "as fast as a
+//! memcpy" floor that the RMVL codec competes with (RMVL adds alignment,
+//! a directory, and an mmap read path on top).
+
+use super::wire::{decode_tree_exact, encode_tree, encoded_size, Le};
+use super::Codec;
+use crate::value::RValue;
+use anyhow::Result;
+
+/// Magic prefix so garbage input is detected instead of misparsed.
+const MAGIC: &[u8; 4] = b"RBN1";
+
+pub struct RawBinCodec;
+
+impl Codec for RawBinCodec {
+    fn name(&self) -> &'static str {
+        "rawbin"
+    }
+
+    fn encode(&self, v: &RValue) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(4 + encoded_size(v));
+        out.extend_from_slice(MAGIC);
+        encode_tree::<Le>(v, &mut out);
+        Ok(out)
+    }
+
+    fn decode(&self, bytes: &[u8]) -> Result<RValue> {
+        let body = bytes
+            .strip_prefix(MAGIC)
+            .ok_or_else(|| anyhow::anyhow!("not a rawbin payload (bad magic)"))?;
+        decode_tree_exact::<Le>(body)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_matrix() {
+        let v = RValue::matrix(vec![1.0, 2.0, 3.0, 4.0], 2, 2);
+        let c = RawBinCodec;
+        let bytes = c.encode(&v).unwrap();
+        assert!(bytes.starts_with(MAGIC));
+        assert!(v.identical(&c.decode(&bytes).unwrap()));
+    }
+
+    #[test]
+    fn encode_is_compact() {
+        // 4 magic + 1 tag + 16 dims + 32 payload.
+        let v = RValue::zeros(2, 2);
+        assert_eq!(RawBinCodec.encode(&v).unwrap().len(), 4 + 1 + 16 + 32);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        assert!(RawBinCodec.decode(b"XXXX\x00").is_err());
+    }
+}

@@ -1,0 +1,92 @@
+//! `rds` codec — models R's `saveRDS`/`readRDS`: the XDR tree run through
+//! gzip (R's default is gzip level 6). This reproduces the Table-1 RDS
+//! signature: *serialization far slower than deserialization* (10K block:
+//! S 31.85 s vs D 4.51 s) because deflate compression is much more
+//! expensive than inflate on incompressible double data.
+
+use super::wire::{decode_tree, encode_tree, encoded_size, Be};
+use super::Codec;
+use crate::value::RValue;
+use anyhow::{bail, Context, Result};
+use flate2::read::GzDecoder;
+use flate2::write::GzEncoder;
+use flate2::Compression;
+use std::io::{Read, Write};
+
+const MAGIC: &[u8; 4] = b"RDX3"; // R's own rds v3 header tag
+
+pub struct RdsCodec {
+    /// gzip level; R's default is 6.
+    pub level: u32,
+}
+
+impl Default for RdsCodec {
+    fn default() -> Self {
+        RdsCodec { level: 6 }
+    }
+}
+
+impl Codec for RdsCodec {
+    fn name(&self) -> &'static str {
+        "rds"
+    }
+
+    fn encode(&self, v: &RValue) -> Result<Vec<u8>> {
+        let mut tree = Vec::with_capacity(encoded_size(v));
+        encode_tree::<Be>(v, &mut tree);
+        let mut out = Vec::with_capacity(tree.len() / 2 + 64);
+        out.extend_from_slice(MAGIC);
+        let mut enc = GzEncoder::new(&mut out, Compression::new(self.level));
+        enc.write_all(&tree).context("gzip compress")?;
+        enc.finish().context("gzip finish")?;
+        Ok(out)
+    }
+
+    fn decode(&self, bytes: &[u8]) -> Result<RValue> {
+        let body = bytes
+            .strip_prefix(MAGIC)
+            .ok_or_else(|| anyhow::anyhow!("not an RDS payload (bad magic)"))?;
+        let mut tree = Vec::new();
+        GzDecoder::new(body)
+            .read_to_end(&mut tree)
+            .context("gzip decompress")?;
+        let mut off = 0;
+        let v = decode_tree::<Be>(&tree, &mut off)?;
+        if off != tree.len() {
+            bail!("trailing bytes inside rds payload");
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let v = RValue::List(vec![
+            ("x".into(), RValue::Real(vec![1.0; 1000])),
+            ("s".into(), RValue::string("hello")),
+        ]);
+        let c = RdsCodec::default();
+        assert!(v.identical(&c.decode(&c.encode(&v).unwrap()).unwrap()));
+    }
+
+    #[test]
+    fn compresses_repetitive_data() {
+        // 1000 identical doubles should shrink well below 8000 bytes.
+        let v = RValue::Real(vec![42.0; 1000]);
+        let bytes = RdsCodec::default().encode(&v).unwrap();
+        assert!(bytes.len() < 1000, "len = {}", bytes.len());
+    }
+
+    #[test]
+    fn corrupted_stream_rejected() {
+        let v = RValue::Real(vec![1.0; 64]);
+        let mut bytes = RdsCodec::default().encode(&v).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        assert!(RdsCodec::default().decode(&bytes).is_err());
+    }
+}

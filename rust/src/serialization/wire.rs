@@ -1,0 +1,389 @@
+//! Shared tagged-tree wire format, generic over byte order.
+//!
+//! Several codecs are "the same tree, different primitive encoding":
+//! `rawbin` is this tree little-endian, `xdr` is it big-endian (R's
+//! `serialize()` uses XDR, i.e. network order), `rds` is the XDR tree run
+//! through gzip, `qs_like` is the LE tree run through shuffle+zstd.
+//!
+//! Layout (all lengths u64 in the codec's byte order):
+//!
+//! ```text
+//! value   := tag:u8 body
+//! body    := ()                      for Null       (tag 0)
+//!          | len, i32[len]           for Logical    (tag 1)
+//!          | len, i32[len]           for Int        (tag 2)
+//!          | len, f64[len]           for Real       (tag 3)
+//!          | len, (slen, utf8)[len]  for Str        (tag 4)
+//!          | nrow, ncol, f64[n*c]    for Matrix     (tag 5)
+//!          | len, (nlen, utf8, value)[len] for List (tag 6)
+//!          | len, u8[len]            for Raw        (tag 7)
+//! ```
+
+use crate::value::RValue;
+use anyhow::{bail, Result};
+
+/// Byte-order behaviour for primitive packing. Implementations are
+/// zero-sized; everything inlines.
+pub trait ByteOrder: Send + Sync + 'static {
+    fn put_u64(out: &mut Vec<u8>, v: u64);
+    fn get_u64(buf: &[u8], off: &mut usize) -> Result<u64>;
+    fn put_i32_slice(out: &mut Vec<u8>, xs: &[i32]);
+    fn get_i32_vec(buf: &[u8], off: &mut usize, n: usize) -> Result<Vec<i32>>;
+    fn put_f64_slice(out: &mut Vec<u8>, xs: &[f64]);
+    fn get_f64_vec(buf: &[u8], off: &mut usize, n: usize) -> Result<Vec<f64>>;
+}
+
+#[inline]
+fn take<'a>(buf: &'a [u8], off: &mut usize, n: usize) -> Result<&'a [u8]> {
+    match buf.get(*off..*off + n) {
+        Some(s) => {
+            *off += n;
+            Ok(s)
+        }
+        None => bail!("truncated input: need {n} bytes at offset {off:?}", off = *off),
+    }
+}
+
+/// Little-endian order. On the (little-endian) targets we build for, bulk
+/// f64/i32 moves compile to straight memcpy.
+pub struct Le;
+
+impl ByteOrder for Le {
+    #[inline]
+    fn put_u64(out: &mut Vec<u8>, v: u64) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    fn get_u64(buf: &[u8], off: &mut usize) -> Result<u64> {
+        let b = take(buf, off, 8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn put_i32_slice(out: &mut Vec<u8>, xs: &[i32]) {
+        #[cfg(target_endian = "little")]
+        {
+            // Safe view: i32 has no padding; LE target matches wire order.
+            let bytes = unsafe {
+                std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4)
+            };
+            out.extend_from_slice(bytes);
+        }
+        #[cfg(not(target_endian = "little"))]
+        for x in xs {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn get_i32_vec(buf: &[u8], off: &mut usize, n: usize) -> Result<Vec<i32>> {
+        let b = take(buf, off, n * 4)?;
+        let mut v = vec![0i32; n];
+        #[cfg(target_endian = "little")]
+        unsafe {
+            std::ptr::copy_nonoverlapping(b.as_ptr(), v.as_mut_ptr() as *mut u8, n * 4);
+        }
+        #[cfg(not(target_endian = "little"))]
+        for (i, c) in b.chunks_exact(4).enumerate() {
+            v[i] = i32::from_le_bytes(c.try_into().unwrap());
+        }
+        Ok(v)
+    }
+
+    fn put_f64_slice(out: &mut Vec<u8>, xs: &[f64]) {
+        #[cfg(target_endian = "little")]
+        {
+            let bytes = unsafe {
+                std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 8)
+            };
+            out.extend_from_slice(bytes);
+        }
+        #[cfg(not(target_endian = "little"))]
+        for x in xs {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn get_f64_vec(buf: &[u8], off: &mut usize, n: usize) -> Result<Vec<f64>> {
+        let b = take(buf, off, n * 8)?;
+        let mut v = vec![0f64; n];
+        #[cfg(target_endian = "little")]
+        unsafe {
+            std::ptr::copy_nonoverlapping(b.as_ptr(), v.as_mut_ptr() as *mut u8, n * 8);
+        }
+        #[cfg(not(target_endian = "little"))]
+        for (i, c) in b.chunks_exact(8).enumerate() {
+            v[i] = f64::from_le_bytes(c.try_into().unwrap());
+        }
+        Ok(v)
+    }
+}
+
+/// Big-endian (XDR / network) order — what R's `serialize()` emits. The
+/// per-element byte swap is the realistic cost the `serialize_Rcpp` Table-1
+/// row pays relative to native-order codecs.
+pub struct Be;
+
+impl ByteOrder for Be {
+    #[inline]
+    fn put_u64(out: &mut Vec<u8>, v: u64) {
+        out.extend_from_slice(&v.to_be_bytes());
+    }
+
+    #[inline]
+    fn get_u64(buf: &[u8], off: &mut usize) -> Result<u64> {
+        let b = take(buf, off, 8)?;
+        Ok(u64::from_be_bytes(b.try_into().unwrap()))
+    }
+
+    fn put_i32_slice(out: &mut Vec<u8>, xs: &[i32]) {
+        for x in xs {
+            out.extend_from_slice(&x.to_be_bytes());
+        }
+    }
+
+    fn get_i32_vec(buf: &[u8], off: &mut usize, n: usize) -> Result<Vec<i32>> {
+        let b = take(buf, off, n * 4)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| i32::from_be_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn put_f64_slice(out: &mut Vec<u8>, xs: &[f64]) {
+        for x in xs {
+            out.extend_from_slice(&x.to_be_bytes());
+        }
+    }
+
+    fn get_f64_vec(buf: &[u8], off: &mut usize, n: usize) -> Result<Vec<f64>> {
+        let b = take(buf, off, n * 8)?;
+        Ok(b.chunks_exact(8)
+            .map(|c| f64::from_be_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+const TAG_NULL: u8 = 0;
+const TAG_LOGICAL: u8 = 1;
+const TAG_INT: u8 = 2;
+const TAG_REAL: u8 = 3;
+const TAG_STR: u8 = 4;
+const TAG_MATRIX: u8 = 5;
+const TAG_LIST: u8 = 6;
+const TAG_RAW: u8 = 7;
+
+/// Serialize the tree into `out`.
+pub fn encode_tree<B: ByteOrder>(v: &RValue, out: &mut Vec<u8>) {
+    match v {
+        RValue::Null => out.push(TAG_NULL),
+        RValue::Logical(xs) => {
+            out.push(TAG_LOGICAL);
+            B::put_u64(out, xs.len() as u64);
+            B::put_i32_slice(out, xs);
+        }
+        RValue::Int(xs) => {
+            out.push(TAG_INT);
+            B::put_u64(out, xs.len() as u64);
+            B::put_i32_slice(out, xs);
+        }
+        RValue::Real(xs) => {
+            out.push(TAG_REAL);
+            B::put_u64(out, xs.len() as u64);
+            B::put_f64_slice(out, xs);
+        }
+        RValue::Str(xs) => {
+            out.push(TAG_STR);
+            B::put_u64(out, xs.len() as u64);
+            for s in xs {
+                B::put_u64(out, s.len() as u64);
+                out.extend_from_slice(s.as_bytes());
+            }
+        }
+        RValue::Matrix { data, nrow, ncol } => {
+            out.push(TAG_MATRIX);
+            B::put_u64(out, *nrow as u64);
+            B::put_u64(out, *ncol as u64);
+            B::put_f64_slice(out, data);
+        }
+        RValue::List(items) => {
+            out.push(TAG_LIST);
+            B::put_u64(out, items.len() as u64);
+            for (name, val) in items {
+                B::put_u64(out, name.len() as u64);
+                out.extend_from_slice(name.as_bytes());
+                encode_tree::<B>(val, out);
+            }
+        }
+        RValue::Raw(xs) => {
+            out.push(TAG_RAW);
+            B::put_u64(out, xs.len() as u64);
+            out.extend_from_slice(xs);
+        }
+    }
+}
+
+/// Exact encoded size of the tree — lets encoders pre-allocate once.
+pub fn encoded_size(v: &RValue) -> usize {
+    match v {
+        RValue::Null => 1,
+        RValue::Logical(xs) | RValue::Int(xs) => 1 + 8 + xs.len() * 4,
+        RValue::Real(xs) => 1 + 8 + xs.len() * 8,
+        RValue::Str(xs) => 1 + 8 + xs.iter().map(|s| 8 + s.len()).sum::<usize>(),
+        RValue::Matrix { data, .. } => 1 + 16 + data.len() * 8,
+        RValue::List(items) => {
+            1 + 8
+                + items
+                    .iter()
+                    .map(|(n, v)| 8 + n.len() + encoded_size(v))
+                    .sum::<usize>()
+        }
+        RValue::Raw(xs) => 1 + 8 + xs.len(),
+    }
+}
+
+/// Guard against length fields that claim more data than the buffer holds
+/// (corrupt or hostile input must not trigger huge allocations).
+#[inline]
+fn check_claim(buf: &[u8], off: usize, claimed_bytes: u64) -> Result<usize> {
+    let remaining = (buf.len() - off) as u64;
+    if claimed_bytes > remaining {
+        bail!("corrupt input: claims {claimed_bytes} bytes but only {remaining} remain");
+    }
+    Ok(claimed_bytes as usize)
+}
+
+/// Deserialize a tree from `buf` starting at `off`.
+pub fn decode_tree<B: ByteOrder>(buf: &[u8], off: &mut usize) -> Result<RValue> {
+    let tag = *buf
+        .get(*off)
+        .ok_or_else(|| anyhow::anyhow!("truncated input: missing tag"))?;
+    *off += 1;
+    match tag {
+        TAG_NULL => Ok(RValue::Null),
+        TAG_LOGICAL | TAG_INT => {
+            let n = B::get_u64(buf, off)?;
+            let n = check_claim(buf, *off, n.saturating_mul(4))? / 4;
+            let v = B::get_i32_vec(buf, off, n)?;
+            Ok(if tag == TAG_LOGICAL {
+                RValue::Logical(v)
+            } else {
+                RValue::Int(v)
+            })
+        }
+        TAG_REAL => {
+            let n = B::get_u64(buf, off)?;
+            let n = check_claim(buf, *off, n.saturating_mul(8))? / 8;
+            Ok(RValue::Real(B::get_f64_vec(buf, off, n)?))
+        }
+        TAG_STR => {
+            let n = B::get_u64(buf, off)?;
+            check_claim(buf, *off, n.saturating_mul(8))?;
+            let mut v = Vec::with_capacity(n as usize);
+            for _ in 0..n {
+                let slen = B::get_u64(buf, off)?;
+                let slen = check_claim(buf, *off, slen)?;
+                let bytes = take(buf, off, slen)?;
+                v.push(String::from_utf8(bytes.to_vec())?);
+            }
+            Ok(RValue::Str(v))
+        }
+        TAG_MATRIX => {
+            let nrow = B::get_u64(buf, off)? as usize;
+            let ncol = B::get_u64(buf, off)? as usize;
+            let n = (nrow as u64).saturating_mul(ncol as u64);
+            let n = check_claim(buf, *off, n.saturating_mul(8))? / 8;
+            let data = B::get_f64_vec(buf, off, n)?;
+            Ok(RValue::Matrix { data, nrow, ncol })
+        }
+        TAG_LIST => {
+            let n = B::get_u64(buf, off)?;
+            check_claim(buf, *off, n.saturating_mul(9))?; // ≥9 bytes/slot min
+            let mut items = Vec::with_capacity(n as usize);
+            for _ in 0..n {
+                let nlen = B::get_u64(buf, off)?;
+                let nlen = check_claim(buf, *off, nlen)?;
+                let name = String::from_utf8(take(buf, off, nlen)?.to_vec())?;
+                let val = decode_tree::<B>(buf, off)?;
+                items.push((name, val));
+            }
+            Ok(RValue::List(items))
+        }
+        TAG_RAW => {
+            let n = B::get_u64(buf, off)?;
+            let n = check_claim(buf, *off, n)?;
+            Ok(RValue::Raw(take(buf, off, n)?.to_vec()))
+        }
+        other => bail!("unknown value tag {other}"),
+    }
+}
+
+/// Decode and insist the whole buffer was consumed.
+pub fn decode_tree_exact<B: ByteOrder>(buf: &[u8]) -> Result<RValue> {
+    let mut off = 0;
+    let v = decode_tree::<B>(buf, &mut off)?;
+    if off != buf.len() {
+        bail!("trailing bytes after value: {} of {}", buf.len() - off, buf.len());
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+    use crate::value::Gen;
+
+    fn roundtrip<B: ByteOrder>(v: &RValue) {
+        let mut buf = Vec::new();
+        encode_tree::<B>(v, &mut buf);
+        assert_eq!(buf.len(), encoded_size(v), "encoded_size mismatch for {v:?}");
+        let back = decode_tree_exact::<B>(&buf).unwrap();
+        assert!(v.identical(&back), "{v:?} != {back:?}");
+    }
+
+    #[test]
+    fn both_orders_roundtrip_arbitrary() {
+        let mut rng = Pcg64::seeded(11);
+        let mut gen = Gen::new(&mut rng);
+        for _ in 0..60 {
+            let v = gen.arbitrary(3);
+            roundtrip::<Le>(&v);
+            roundtrip::<Be>(&v);
+        }
+    }
+
+    #[test]
+    fn orders_differ_on_the_wire() {
+        let v = RValue::Real(vec![1.0]);
+        let (mut le, mut be) = (Vec::new(), Vec::new());
+        encode_tree::<Le>(&v, &mut le);
+        encode_tree::<Be>(&v, &mut be);
+        assert_ne!(le, be);
+        assert_eq!(le.len(), be.len());
+    }
+
+    #[test]
+    fn corrupt_length_fields_do_not_overallocate() {
+        // Claim u64::MAX reals in a 32-byte buffer.
+        let mut buf = vec![TAG_REAL];
+        Le::put_u64(&mut buf, u64::MAX);
+        buf.extend_from_slice(&[0u8; 16]);
+        assert!(decode_tree_exact::<Le>(&buf).is_err());
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let mut buf = Vec::new();
+        encode_tree::<Le>(&RValue::Null, &mut buf);
+        buf.push(0xFF);
+        assert!(decode_tree_exact::<Le>(&buf).is_err());
+    }
+
+    #[test]
+    fn invalid_utf8_in_strings_rejected() {
+        let mut buf = vec![TAG_STR];
+        Le::put_u64(&mut buf, 1);
+        Le::put_u64(&mut buf, 2);
+        buf.extend_from_slice(&[0xFF, 0xFE]);
+        assert!(decode_tree_exact::<Le>(&buf).is_err());
+    }
+}

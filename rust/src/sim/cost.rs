@@ -1,0 +1,182 @@
+//! Task cost model for the simulator.
+//!
+//! Costs are expressed as seconds per *cost unit* (the planners attach a
+//! work measure — roughly a flop count — to every submission). The defaults
+//! below were measured on this box with the PJRT backend
+//! (`cargo bench --bench runtime_hotpath` prints a fresh calibration); the
+//! profile then scales them: `core_speed` for general compute and
+//! `gemm_slowdown` for GEMM-class tasks on `Reference`-BLAS machines —
+//! reproducing the paper's MKL/RBLAS dichotomy without inventing numbers.
+
+use std::collections::HashMap;
+
+use crate::cluster::{BlasClass, MachineProfile};
+
+/// Seconds-per-unit defaults, measured on the calibration box (PJRT
+/// backend). Keys are task type names; anything absent uses
+/// `default_unit_cost`.
+pub const DEFAULT_UNIT_COSTS: &[(&str, f64)] = &[
+    // Generation tasks are PRNG-bound (few ops per element).
+    ("KNN_fill_fragment", 9.0e-9),
+    ("KNN_fill_test", 9.0e-9),
+    ("fill_fragment", 9.0e-9),
+    ("init_centroids", 9.0e-9),
+    ("LR_fill_fragment", 1.2e-8),
+    ("LR_genpred", 1.2e-8),
+    // Dense compute through XLA.
+    ("KNN_frag", 8.0e-10),
+    ("partial_sum", 9.0e-10),
+    ("partial_ztz", 6.0e-10),
+    ("partial_zty", 1.5e-9),
+    ("compute_model_parameters", 2.0e-9),
+    ("compute_prediction", 1.5e-9),
+    // Small merge/vote tasks: per-element cost dominated by call overhead.
+    ("KNN_merge", 2.0e-8),
+    ("KNN_classify", 2.0e-8),
+    ("merge", 2.0e-8),
+    ("merge_ztz", 6.0e-9),
+    ("merge_zty", 2.0e-8),
+    ("update_centroids", 2.0e-8),
+];
+
+/// The cost model: unit costs + serialization throughput.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    pub unit_costs: HashMap<String, f64>,
+    pub default_unit_cost: f64,
+    /// Fixed per-task dispatch overhead on a worker (claim, bookkeeping).
+    pub dispatch_overhead_s: f64,
+    /// Serial per-task cost at the *master*: COMPSs runs one master process
+    /// that analyzes, schedules, and launches every task. Dispatch is a
+    /// global FCFS resource in the engine; as the cluster grows, the
+    /// master's task rate becomes the scaling ceiling — the paper's
+    /// "increased overhead from task scheduling" at high core/node counts.
+    pub master_dispatch_s: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            unit_costs: DEFAULT_UNIT_COSTS
+                .iter()
+                .map(|(k, v)| (k.to_string(), *v))
+                .collect(),
+            default_unit_cost: 2.0e-9,
+            dispatch_overhead_s: 250e-6,
+            master_dispatch_s: 2.5e-3,
+        }
+    }
+}
+
+impl CostModel {
+    /// Override one task type's unit cost (calibration).
+    pub fn set_unit_cost(&mut self, ty: &str, seconds_per_unit: f64) {
+        self.unit_costs.insert(ty.to_string(), seconds_per_unit);
+    }
+
+    pub fn unit_cost(&self, ty: &str) -> f64 {
+        self.unit_costs
+            .get(ty)
+            .copied()
+            .unwrap_or(self.default_unit_cost)
+    }
+
+    /// Execution time of a task on a machine profile. `occupancy` in
+    /// [0, 1] is the fraction of the node's cores running workers; GEMM
+    /// tasks pay the profile's DRAM-saturation penalty proportionally.
+    pub fn exec_time(
+        &self,
+        ty: &str,
+        cost_units: f64,
+        gemm_class: bool,
+        profile: &MachineProfile,
+        occupancy: f64,
+    ) -> f64 {
+        // GEMM-class tasks are native BLAS calls even from R, so the
+        // interpreter factor applies only to non-GEMM (R-level) compute.
+        let mut t = cost_units * self.unit_cost(ty) / profile.core_speed;
+        if gemm_class {
+            if profile.blas == BlasClass::Reference {
+                t *= profile.gemm_slowdown;
+            }
+            t *= 1.0 + profile.mem_sat_gemm * occupancy.clamp(0.0, 1.0);
+        } else {
+            t *= profile.interpreter_factor;
+        }
+        t + self.dispatch_overhead_s
+    }
+
+    /// Disk I/O time for one serialized file on a node, *excluding*
+    /// queueing (the engine's per-node disk server adds that).
+    pub fn io_time(&self, bytes: u64, profile: &MachineProfile) -> f64 {
+        profile.disk_latency_s + bytes as f64 / profile.disk_bw_bytes_per_s
+    }
+
+    /// Cached re-read: a file this node already holds is served from the
+    /// page cache (the paper's systems have hundreds of GB of RAM per
+    /// node; K-means re-reads its fragments every iteration from cache).
+    pub fn cached_read_time(&self, bytes: u64) -> f64 {
+        10e-6 + bytes as f64 / 25e9
+    }
+
+    /// Backend service time at the shared filesystem for a write.
+    pub fn fs_write_time(&self, bytes: u64, profile: &MachineProfile) -> f64 {
+        bytes as f64 / profile.fs_bw_bytes_per_s
+    }
+
+    /// Inter-node transfer time.
+    pub fn transfer_time(&self, bytes: u64, profile: &MachineProfile) -> f64 {
+        profile.net_latency_s + bytes as f64 / profile.net_bw_bytes_per_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::MachineProfile;
+
+    #[test]
+    fn gemm_slowdown_applies_only_to_gemm_class_on_reference() {
+        let m = CostModel::default();
+        let sh = MachineProfile::shaheen3();
+        let mn = MachineProfile::marenostrum5();
+        let fast = m.exec_time("partial_ztz", 1e9, true, &sh, 0.0);
+        let slow = m.exec_time("partial_ztz", 1e9, true, &mn, 0.0);
+        // ~100x modulo core_speed.
+        assert!(slow / fast > 50.0, "ratio {}", slow / fast);
+        let non_gemm_fast = m.exec_time("partial_sum", 1e9, false, &sh, 0.0);
+        let non_gemm_slow = m.exec_time("partial_sum", 1e9, false, &mn, 0.0);
+        assert!(non_gemm_slow / non_gemm_fast < 2.0);
+    }
+
+    #[test]
+    fn memory_saturation_penalizes_gemm_at_full_occupancy() {
+        let m = CostModel::default();
+        let sh = MachineProfile::shaheen3();
+        let alone = m.exec_time("partial_ztz", 1e9, true, &sh, 0.0);
+        let packed = m.exec_time("partial_ztz", 1e9, true, &sh, 1.0);
+        assert!((packed / alone - (1.0 + sh.mem_sat_gemm)).abs() < 0.01);
+        // Non-GEMM tasks are unaffected.
+        let a = m.exec_time("partial_sum", 1e9, false, &sh, 0.0);
+        let b = m.exec_time("partial_sum", 1e9, false, &sh, 1.0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn io_time_scales_with_bytes() {
+        let m = CostModel::default();
+        let p = MachineProfile::shaheen3();
+        let small = m.io_time(1_000, &p);
+        let big = m.io_time(1_000_000_000, &p);
+        assert!(big > small * 100.0);
+        assert!(small >= p.disk_latency_s);
+    }
+
+    #[test]
+    fn unknown_types_use_default() {
+        let mut m = CostModel::default();
+        assert_eq!(m.unit_cost("mystery"), m.default_unit_cost);
+        m.set_unit_cost("mystery", 1e-6);
+        assert_eq!(m.unit_cost("mystery"), 1e-6);
+    }
+}

@@ -1,0 +1,29 @@
+//! Discrete-event cluster simulation — the scale-out substrate.
+//!
+//! The paper's headline experiments run on up to 32 nodes x 128 workers;
+//! this box has a handful of cores. Per the reproduction rules (DESIGN.md
+//! §3) we *simulate* the cluster: the same planners emit the same DAG into
+//! [`SimSink`], the same `Scheduler` policies make the same placement
+//! decisions, and a virtual-time engine ([`engine::SimEngine`]) replays
+//! execution against a machine profile with a **calibrated** cost model:
+//!
+//! * per-task-type compute costs measured on this box ([`cost::CostModel`]),
+//!   scaled by the profile's core speed and (for GEMM-class tasks) the
+//!   measured MKL/RBLAS ratio;
+//! * serialization I/O charged against a per-node FCFS disk server
+//!   (bandwidth + latency), which reproduces the paper's I/O contention at
+//!   high core counts;
+//! * staggered worker initialization (the MareNostrum-5 bring-up skew);
+//! * inter-node transfers for non-local inputs (bandwidth + latency).
+//!
+//! The engine emits ordinary `trace::Trace` events, so Figure-10-style
+//! timelines come out of simulated runs exactly as they do from live ones.
+
+pub mod cost;
+pub mod engine;
+pub mod plans;
+pub mod sink;
+
+pub use cost::CostModel;
+pub use engine::{SimEngine, SimReport};
+pub use sink::SimSink;

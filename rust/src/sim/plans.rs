@@ -1,0 +1,100 @@
+//! Convenience plan builders shared by the CLI, benches, and tests.
+//!
+//! The `*_plan` functions use the artifact (live-run) shapes; the
+//! `*_plan_with` variants take explicit [`Shapes`] so the figure benches
+//! can weight the DAG with the **paper's** workload sizes
+//! (`Shapes::paper_single_node` / `paper_multi_node`). Shapes never change
+//! the DAG structure — only per-task byte sizes and cost units.
+
+use anyhow::Result;
+
+use crate::apps::kmeans::{plan_kmeans, KmeansConfig};
+use crate::apps::knn::{plan_knn, KnnConfig};
+use crate::apps::linreg::{plan_linreg, LinregConfig};
+use crate::apps::Shapes;
+use crate::sim::sink::{SimPlan, SimSink};
+
+/// KNN plan: `train_fragments` x `test_blocks` (Figure 3 pattern).
+pub fn knn_plan(train_fragments: usize, test_blocks: usize, seed: u64) -> Result<SimPlan> {
+    knn_plan_with(train_fragments, test_blocks, seed, Shapes::from_manifest())
+}
+
+pub fn knn_plan_with(
+    train_fragments: usize,
+    test_blocks: usize,
+    seed: u64,
+    shapes: Shapes,
+) -> Result<SimPlan> {
+    let mut cfg = KnnConfig::small(seed);
+    cfg.train_fragments = train_fragments;
+    cfg.test_blocks = test_blocks;
+    cfg.shapes = shapes;
+    let mut sink = SimSink::new();
+    plan_knn(&mut sink, &cfg)?;
+    Ok(sink.finish())
+}
+
+/// K-means plan: `fragments` x `iterations` (Figure 4 pattern).
+pub fn kmeans_plan(fragments: usize, iterations: usize, seed: u64) -> Result<SimPlan> {
+    kmeans_plan_with(fragments, iterations, seed, Shapes::from_manifest())
+}
+
+pub fn kmeans_plan_with(
+    fragments: usize,
+    iterations: usize,
+    seed: u64,
+    shapes: Shapes,
+) -> Result<SimPlan> {
+    let mut cfg = KmeansConfig::small(seed);
+    cfg.fragments = fragments;
+    cfg.iterations = iterations;
+    cfg.shapes = shapes;
+    let mut sink = SimSink::new();
+    plan_kmeans(&mut sink, &cfg)?;
+    Ok(sink.finish())
+}
+
+/// Linear-regression plan: `fragments` + `pred_blocks` (Figure 5 pattern).
+pub fn linreg_plan(fragments: usize, pred_blocks: usize, seed: u64) -> Result<SimPlan> {
+    linreg_plan_with(fragments, pred_blocks, seed, Shapes::from_manifest())
+}
+
+pub fn linreg_plan_with(
+    fragments: usize,
+    pred_blocks: usize,
+    seed: u64,
+    shapes: Shapes,
+) -> Result<SimPlan> {
+    let mut cfg = LinregConfig::small(seed);
+    cfg.fragments = fragments;
+    cfg.pred_blocks = pred_blocks;
+    cfg.shapes = shapes;
+    let mut sink = SimSink::new();
+    plan_linreg(&mut sink, &cfg)?;
+    Ok(sink.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_produce_nonempty_plans() {
+        assert!(knn_plan(4, 2, 1).unwrap().graph.len() > 10);
+        assert!(kmeans_plan(4, 2, 1).unwrap().graph.len() > 10);
+        assert!(linreg_plan(4, 2, 1).unwrap().graph.len() > 10);
+    }
+
+    #[test]
+    fn paper_shapes_change_weights_not_structure() {
+        let a = knn_plan_with(4, 2, 1, Shapes::default()).unwrap();
+        let b = knn_plan_with(4, 2, 1, Shapes::paper_single_node()).unwrap();
+        assert_eq!(a.graph.len(), b.graph.len());
+        assert_eq!(a.type_counts(), b.type_counts());
+        // but the paper shapes carry heavier fragments
+        let bytes = |p: &SimPlan| -> u64 {
+            p.meta.values().flat_map(|m| m.outputs.iter().map(|(_, b)| *b)).sum()
+        };
+        assert!(bytes(&b) > bytes(&a));
+    }
+}

@@ -1,0 +1,227 @@
+//! [`SimSink`]: materializes a planner's task graph for the simulator,
+//! using the *same* dependency machinery as the live coordinator
+//! (`DataRegistry` versioning + `TaskGraph` insertion). The result is a
+//! `SimPlan` the engine executes in virtual time.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::apps::{SinkArg, SinkRef, SubmitSpec, TaskSink};
+use crate::coordinator::dag::{EdgeKind, TaskGraph, TaskId};
+use crate::coordinator::registry::{DataKey, DataRegistry, NodeId};
+
+/// Per-task metadata the engine needs.
+#[derive(Clone, Debug)]
+pub struct SimTaskMeta {
+    pub ty: String,
+    pub cost_units: f64,
+    pub gemm_class: bool,
+    pub inputs: Vec<DataKey>,
+    /// (key, serialized bytes) per output.
+    pub outputs: Vec<(DataKey, u64)>,
+}
+
+/// The materialized plan.
+pub struct SimPlan {
+    pub graph: TaskGraph,
+    pub registry: DataRegistry,
+    pub meta: HashMap<TaskId, SimTaskMeta>,
+    /// Tasks ready at time zero.
+    pub initially_ready: Vec<TaskId>,
+    /// Count of master sync points (stats only).
+    pub sync_count: usize,
+}
+
+impl SimPlan {
+    /// Task count per type — checked against the live runs for DAG parity.
+    pub fn type_counts(&self) -> HashMap<String, usize> {
+        let mut m = HashMap::new();
+        for t in self.graph.tasks_in_order() {
+            *m.entry(t.type_name.clone()).or_insert(0) += 1;
+        }
+        m
+    }
+}
+
+/// Sink that builds a [`SimPlan`].
+pub struct SimSink {
+    graph: TaskGraph,
+    registry: DataRegistry,
+    meta: HashMap<TaskId, SimTaskMeta>,
+    refs: HashMap<SinkRef, DataKey>,
+    next_ref: u64,
+    ready: Vec<TaskId>,
+    sync_count: usize,
+}
+
+impl Default for SimSink {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SimSink {
+    pub fn new() -> SimSink {
+        SimSink {
+            graph: TaskGraph::new(),
+            registry: DataRegistry::new(),
+            meta: HashMap::new(),
+            refs: HashMap::new(),
+            next_ref: 0,
+            ready: Vec::new(),
+            sync_count: 0,
+        }
+    }
+
+    pub fn finish(self) -> SimPlan {
+        SimPlan {
+            graph: self.graph,
+            registry: self.registry,
+            meta: self.meta,
+            initially_ready: self.ready,
+            sync_count: self.sync_count,
+        }
+    }
+}
+
+impl TaskSink for SimSink {
+    fn submit(&mut self, spec: SubmitSpec) -> Result<Vec<SinkRef>> {
+        anyhow::ensure!(
+            spec.out_bytes.len() == spec.n_outputs,
+            "task '{}': out_bytes length {} != n_outputs {}",
+            spec.ty,
+            spec.out_bytes.len(),
+            spec.n_outputs
+        );
+        let id = self.graph.next_task_id();
+        // Same dependency analysis as Coordinator::submit, minus the I/O.
+        let mut deps: Vec<(TaskId, EdgeKind, DataKey)> = Vec::new();
+        let mut reads: Vec<DataKey> = Vec::new();
+        for arg in &spec.args {
+            match arg {
+                SinkArg::Lit(v) => {
+                    // Literal materialized by the master on node 0.
+                    let bytes = (v.byte_size() + 64) as u64;
+                    let key = self.registry.new_literal(bytes, NodeId(0));
+                    reads.push(key);
+                }
+                SinkArg::Ref(r) => {
+                    let key = self
+                        .refs
+                        .get(r)
+                        .copied()
+                        .ok_or_else(|| anyhow::anyhow!("dangling sink ref {r:?}"))?;
+                    let (read_key, raw) = self.registry.record_read(key.data, id);
+                    if let Some(p) = raw {
+                        deps.push((p, EdgeKind::Raw, read_key));
+                    }
+                    reads.push(read_key);
+                }
+            }
+        }
+        let mut writes = Vec::with_capacity(spec.n_outputs);
+        let mut out_refs = Vec::with_capacity(spec.n_outputs);
+        let mut outputs = Vec::with_capacity(spec.n_outputs);
+        for b in &spec.out_bytes {
+            let key = self.registry.new_future(id);
+            writes.push(key);
+            outputs.push((key, *b));
+            self.next_ref += 1;
+            let sr = SinkRef(self.next_ref);
+            self.refs.insert(sr, key);
+            out_refs.push(sr);
+        }
+        self.meta.insert(
+            id,
+            SimTaskMeta {
+                ty: spec.ty.to_string(),
+                cost_units: spec.cost_units,
+                gemm_class: spec.gemm_class,
+                inputs: reads.clone(),
+                outputs,
+            },
+        );
+        let ready = self.graph.insert_task(id, spec.ty, reads, writes, deps);
+        if ready {
+            self.ready.push(id);
+        }
+        Ok(out_refs)
+    }
+
+    fn sync(&mut self, _r: SinkRef) -> Result<()> {
+        self.sync_count += 1;
+        Ok(())
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::kmeans::{expected_task_counts, plan_kmeans, KmeansConfig};
+    use crate::apps::knn::{self, KnnConfig};
+    use crate::apps::linreg::{self, LinregConfig};
+
+    #[test]
+    fn knn_plan_counts_match_expectation() {
+        let mut cfg = KnnConfig::small(3);
+        cfg.train_fragments = 5;
+        cfg.test_blocks = 2;
+        let mut sink = SimSink::new();
+        knn::plan_knn(&mut sink, &cfg).unwrap();
+        let plan = sink.finish();
+        let counts = plan.type_counts();
+        for (ty, n) in knn::expected_task_counts(&cfg) {
+            assert_eq!(counts.get(ty).copied().unwrap_or(0), n, "type {ty}");
+        }
+        assert!(plan.graph.critical_path_len() >= 4);
+    }
+
+    #[test]
+    fn kmeans_plan_counts_match_expectation() {
+        let mut cfg = KmeansConfig::small(3);
+        cfg.fragments = 8;
+        cfg.iterations = 2;
+        let mut sink = SimSink::new();
+        plan_kmeans(&mut sink, &cfg).unwrap();
+        let plan = sink.finish();
+        let counts = plan.type_counts();
+        for (ty, n) in expected_task_counts(&cfg) {
+            assert_eq!(counts.get(ty).copied().unwrap_or(0), n, "type {ty}");
+        }
+        // Iterations serialize through centroids: the critical path must
+        // grow with iterations: fill, then per iteration
+        // partial -> 3 merge levels (8 fragments) -> update.
+        assert!(plan.graph.critical_path_len() >= 1 + 2 * (1 + 3 + 1));
+    }
+
+    #[test]
+    fn linreg_plan_counts_match_expectation() {
+        let mut cfg = LinregConfig::small(3);
+        cfg.fragments = 6;
+        cfg.pred_blocks = 2;
+        let mut sink = SimSink::new();
+        linreg::plan_linreg(&mut sink, &cfg).unwrap();
+        let plan = sink.finish();
+        let counts = plan.type_counts();
+        for (ty, n) in linreg::expected_task_counts(&cfg) {
+            assert_eq!(counts.get(ty).copied().unwrap_or(0), n, "type {ty}");
+        }
+    }
+
+    #[test]
+    fn fill_tasks_are_initially_ready() {
+        let mut cfg = KnnConfig::small(1);
+        cfg.train_fragments = 3;
+        cfg.test_blocks = 1;
+        let mut sink = SimSink::new();
+        knn::plan_knn(&mut sink, &cfg).unwrap();
+        let plan = sink.finish();
+        // 3 train fills + 1 test fill ready at t=0.
+        assert_eq!(plan.initially_ready.len(), 4);
+    }
+}

@@ -1,0 +1,386 @@
+//! Extrae-style tracing and Paraver-style rendering (§3.3.4, Figure 10).
+//!
+//! RCOMPSs integrates Extrae to record R-level execution events and renders
+//! them post-mortem with Paraver. This module is that substrate: the
+//! [`Tracer`] collects timestamped per-worker events from the live executor
+//! *and* from the discrete-event simulator (same event vocabulary), then:
+//!
+//! * [`Trace::to_prv`] writes a Paraver-like `.prv` state-record file, and
+//! * [`Trace::ascii_timeline`] renders the Figure-10 view — one row per
+//!   worker, one glyph per time bucket, colored/lettered by task type —
+//!   directly on the terminal.
+//!
+//! Event kinds mirror what the paper's traces distinguish: worker
+//! initialization (the MareNostrum-5 stagger!), task execution by type,
+//! (de)serialization, and inter-node transfers.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::coordinator::dag::TaskId;
+use crate::coordinator::registry::NodeId;
+
+/// A worker slot: node + executor index within the node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct WorkerId {
+    pub node: NodeId,
+    pub slot: u32,
+}
+
+impl std::fmt::Display for WorkerId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "n{}w{}", self.node.0, self.slot)
+    }
+}
+
+/// What happened during an interval.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// Worker process/interpreter initialization.
+    WorkerInit,
+    /// Task body execution; payload is the task type name.
+    TaskExec(String),
+    /// Parameter serialization (master or worker side).
+    Serialize,
+    /// Parameter deserialization.
+    Deserialize,
+    /// Inter-node file transfer.
+    Transfer,
+}
+
+impl EventKind {
+    /// Paraver state id (arbitrary but stable).
+    fn state_id(&self) -> u32 {
+        match self {
+            EventKind::WorkerInit => 1,
+            EventKind::TaskExec(_) => 2,
+            EventKind::Serialize => 3,
+            EventKind::Deserialize => 4,
+            EventKind::Transfer => 5,
+        }
+    }
+}
+
+/// One timed interval on one worker.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub worker: WorkerId,
+    pub kind: EventKind,
+    pub task: Option<TaskId>,
+    /// Seconds since run start.
+    pub start: f64,
+    pub end: f64,
+}
+
+/// A completed trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub events: Vec<Event>,
+    /// Label for headers ("knn@shaheen3, 4 nodes").
+    pub label: String,
+}
+
+/// Thread-safe collector. The live executor stamps times from a monotonic
+/// clock; the simulator passes virtual times through [`Tracer::record_at`].
+pub struct Tracer {
+    inner: Mutex<Vec<Event>>,
+    epoch: Instant,
+    enabled: bool,
+}
+
+impl Tracer {
+    pub fn new(enabled: bool) -> Tracer {
+        Tracer {
+            inner: Mutex::new(Vec::new()),
+            epoch: Instant::now(),
+            enabled,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Seconds since tracer creation — the live-mode clock.
+    pub fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Record an interval with explicit times (virtual or measured).
+    pub fn record_at(
+        &self,
+        worker: WorkerId,
+        kind: EventKind,
+        task: Option<TaskId>,
+        start: f64,
+        end: f64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.inner.lock().unwrap().push(Event {
+            worker,
+            kind,
+            task,
+            start,
+            end,
+        });
+    }
+
+    /// Convenience for live mode: run `f`, recording its wall-time extent.
+    pub fn timed<T>(
+        &self,
+        worker: WorkerId,
+        kind: EventKind,
+        task: Option<TaskId>,
+        f: impl FnOnce() -> T,
+    ) -> T {
+        if !self.enabled {
+            return f();
+        }
+        let start = self.now();
+        let out = f();
+        self.record_at(worker, kind, task, start, self.now());
+        out
+    }
+
+    /// Snapshot into an immutable trace.
+    pub fn finish(&self, label: &str) -> Trace {
+        let mut events = self.inner.lock().unwrap().clone();
+        events.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        Trace {
+            events,
+            label: label.to_string(),
+        }
+    }
+}
+
+impl Trace {
+    /// Total span in seconds.
+    pub fn makespan(&self) -> f64 {
+        self.events.iter().map(|e| e.end).fold(0.0, f64::max)
+    }
+
+    /// Busy time per worker (task execution only).
+    pub fn busy_per_worker(&self) -> BTreeMap<WorkerId, f64> {
+        let mut m = BTreeMap::new();
+        for e in &self.events {
+            if matches!(e.kind, EventKind::TaskExec(_)) {
+                *m.entry(e.worker).or_insert(0.0) += e.end - e.start;
+            }
+        }
+        m
+    }
+
+    /// Fraction of worker-time spent executing tasks (a load-balance /
+    /// overhead summary the paper discusses qualitatively on Figure 10).
+    pub fn utilization(&self) -> f64 {
+        let span = self.makespan();
+        if span == 0.0 {
+            return 0.0;
+        }
+        let workers: std::collections::BTreeSet<WorkerId> =
+            self.events.iter().map(|e| e.worker).collect();
+        if workers.is_empty() {
+            return 0.0;
+        }
+        let busy: f64 = self.busy_per_worker().values().sum();
+        busy / (span * workers.len() as f64)
+    }
+
+    /// Paraver-style `.prv` state records:
+    /// `1:node:1:1:worker:start_ns:end_ns:state`.
+    pub fn to_prv(&self) -> String {
+        let mut out = String::new();
+        let span_ns = (self.makespan() * 1e9) as u64;
+        let workers: std::collections::BTreeSet<WorkerId> =
+            self.events.iter().map(|e| e.worker).collect();
+        writeln!(
+            out,
+            "#Paraver (rcompss '{label}'):{span}_ns:1:{n}:{n}",
+            label = self.label,
+            span = span_ns,
+            n = workers.len()
+        )
+        .unwrap();
+        for e in &self.events {
+            writeln!(
+                out,
+                "1:{}:1:1:{}:{}:{}:{}",
+                e.worker.node.0 + 1,
+                e.worker.slot + 1,
+                (e.start * 1e9) as u64,
+                (e.end * 1e9) as u64,
+                e.kind.state_id()
+            )
+            .unwrap();
+        }
+        out
+    }
+
+    /// ASCII rendering of the Figure-10 timeline: one row per worker,
+    /// `width` buckets across the makespan, each bucket showing the
+    /// dominant event kind (task types get stable letters, `#` init,
+    /// `s`/`d` serialization, `>` transfer, `.` idle).
+    pub fn ascii_timeline(&self, width: usize) -> String {
+        assert!(width > 0);
+        let span = self.makespan().max(1e-12);
+        let workers: Vec<WorkerId> = {
+            let set: std::collections::BTreeSet<WorkerId> =
+                self.events.iter().map(|e| e.worker).collect();
+            set.into_iter().collect()
+        };
+        let widx: BTreeMap<WorkerId, usize> =
+            workers.iter().enumerate().map(|(i, w)| (*w, i)).collect();
+
+        // Stable letter per task type, in first-seen order: A, B, C ...
+        let mut letters: BTreeMap<String, char> = BTreeMap::new();
+        for e in &self.events {
+            if let EventKind::TaskExec(ty) = &e.kind {
+                if !letters.contains_key(ty) {
+                    let c = (b'A' + (letters.len() as u8 % 26)) as char;
+                    letters.insert(ty.clone(), c);
+                }
+            }
+        }
+
+        // Dominant kind per (worker, bucket) by covered time.
+        let mut cover = vec![vec![(0.0f64, ' '); width]; workers.len()];
+        for e in &self.events {
+            let row = widx[&e.worker];
+            let glyph = match &e.kind {
+                EventKind::WorkerInit => '#',
+                EventKind::TaskExec(ty) => letters[ty],
+                EventKind::Serialize => 's',
+                EventKind::Deserialize => 'd',
+                EventKind::Transfer => '>',
+            };
+            let b0 = ((e.start / span) * width as f64).floor() as usize;
+            let b1 = (((e.end / span) * width as f64).ceil() as usize).min(width);
+            for (b, slot) in cover[row].iter_mut().enumerate().take(b1).skip(b0.min(width)) {
+                let lo = span * b as f64 / width as f64;
+                let hi = span * (b + 1) as f64 / width as f64;
+                let overlap = (e.end.min(hi) - e.start.max(lo)).max(0.0);
+                if overlap > slot.0 {
+                    *slot = (overlap, glyph);
+                }
+            }
+        }
+
+        let mut out = String::new();
+        writeln!(
+            out,
+            "trace: {}  span={:.3}s  util={:.0}%",
+            self.label,
+            span,
+            self.utilization() * 100.0
+        )
+        .unwrap();
+        for (ty, c) in &letters {
+            writeln!(out, "  {c} = {ty}").unwrap();
+        }
+        writeln!(out, "  # = worker init, s/d = ser/deser, > = transfer, . = idle").unwrap();
+        for (i, w) in workers.iter().enumerate() {
+            let row: String = cover[i]
+                .iter()
+                .map(|(t, c)| if *t > 0.0 { *c } else { '.' })
+                .collect();
+            writeln!(out, "{w:>8} |{row}|").unwrap();
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w(node: u32, slot: u32) -> WorkerId {
+        WorkerId {
+            node: NodeId(node),
+            slot,
+        }
+    }
+
+    fn sample_trace() -> Trace {
+        let t = Tracer::new(true);
+        t.record_at(w(0, 0), EventKind::WorkerInit, None, 0.0, 0.1);
+        t.record_at(
+            w(0, 0),
+            EventKind::TaskExec("fill".into()),
+            Some(TaskId(1)),
+            0.1,
+            0.6,
+        );
+        t.record_at(
+            w(0, 1),
+            EventKind::TaskExec("merge".into()),
+            Some(TaskId(2)),
+            0.3,
+            1.0,
+        );
+        t.record_at(w(0, 1), EventKind::Serialize, Some(TaskId(2)), 1.0, 1.1);
+        t.finish("unit")
+    }
+
+    #[test]
+    fn makespan_and_busy() {
+        let tr = sample_trace();
+        assert!((tr.makespan() - 1.1).abs() < 1e-9);
+        let busy = tr.busy_per_worker();
+        assert!((busy[&w(0, 0)] - 0.5).abs() < 1e-9);
+        assert!((busy[&w(0, 1)] - 0.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let tr = sample_trace();
+        let u = tr.utilization();
+        assert!(u > 0.0 && u <= 1.0, "u={u}");
+    }
+
+    #[test]
+    fn prv_has_header_and_records() {
+        let tr = sample_trace();
+        let prv = tr.to_prv();
+        assert!(prv.starts_with("#Paraver"));
+        assert_eq!(prv.lines().count(), 1 + tr.events.len());
+        // A task record carries state 2.
+        assert!(prv.lines().any(|l| l.ends_with(":2")));
+    }
+
+    #[test]
+    fn ascii_timeline_shape() {
+        let tr = sample_trace();
+        let art = tr.ascii_timeline(40);
+        // Two worker rows with 40-char lanes.
+        let lanes: Vec<&str> = art.lines().filter(|l| l.contains('|')).collect();
+        assert_eq!(lanes.len(), 2);
+        assert!(lanes[0].contains('#'), "init glyph: {}", lanes[0]);
+        assert!(lanes[0].contains('A'), "first task letter: {}", lanes[0]);
+        assert!(lanes[1].contains('B'));
+        assert!(lanes[1].contains('s'));
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::new(false);
+        t.record_at(w(0, 0), EventKind::Serialize, None, 0.0, 1.0);
+        let out = t.timed(w(0, 0), EventKind::Transfer, None, || 42);
+        assert_eq!(out, 42);
+        assert!(t.finish("x").events.is_empty());
+    }
+
+    #[test]
+    fn timed_records_interval() {
+        let t = Tracer::new(true);
+        t.timed(w(1, 0), EventKind::Deserialize, None, || {
+            std::thread::sleep(std::time::Duration::from_millis(2))
+        });
+        let tr = t.finish("x");
+        assert_eq!(tr.events.len(), 1);
+        assert!(tr.events[0].end > tr.events[0].start);
+    }
+}

@@ -1,0 +1,153 @@
+//! Byte-level transforms shared by the serialization codecs:
+//! little/big-endian primitive packing and the byte-shuffle (transpose)
+//! filter that the `qs`-style codec applies before LZ compression.
+
+/// Append a little-endian u64.
+#[inline]
+pub fn put_u64_le(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a little-endian u32.
+#[inline]
+pub fn put_u32_le(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Read a little-endian u64 at `off`, advancing it.
+#[inline]
+pub fn get_u64_le(buf: &[u8], off: &mut usize) -> Option<u64> {
+    let b = buf.get(*off..*off + 8)?;
+    *off += 8;
+    Some(u64::from_le_bytes(b.try_into().unwrap()))
+}
+
+/// Read a little-endian u32 at `off`, advancing it.
+#[inline]
+pub fn get_u32_le(buf: &[u8], off: &mut usize) -> Option<u32> {
+    let b = buf.get(*off..*off + 4)?;
+    *off += 4;
+    Some(u32::from_le_bytes(b.try_into().unwrap()))
+}
+
+/// Reinterpret an f64 slice as raw little-endian bytes (copy).
+pub fn f64s_to_le_bytes(xs: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 8);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Parse raw little-endian bytes into f64s; `None` if not a multiple of 8.
+pub fn le_bytes_to_f64s(buf: &[u8]) -> Option<Vec<f64>> {
+    if buf.len() % 8 != 0 {
+        return None;
+    }
+    Some(
+        buf.chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect(),
+    )
+}
+
+/// Byte-shuffle filter: for `width`-byte elements, groups byte 0 of every
+/// element, then byte 1 of every element, etc. Floating-point data has
+/// highly repetitive exponent bytes, so shuffling dramatically improves LZ
+/// compressibility — this is the trick behind `qs` (and Blosc).
+pub fn shuffle(data: &[u8], width: usize) -> Vec<u8> {
+    assert!(width > 0);
+    let n = data.len() / width;
+    let tail = &data[n * width..];
+    let mut out = Vec::with_capacity(data.len());
+    for b in 0..width {
+        for i in 0..n {
+            out.push(data[i * width + b]);
+        }
+    }
+    out.extend_from_slice(tail);
+    out
+}
+
+/// Inverse of [`shuffle`].
+pub fn unshuffle(data: &[u8], width: usize) -> Vec<u8> {
+    assert!(width > 0);
+    let n = data.len() / width;
+    let body = n * width;
+    let tail = &data[body..];
+    let mut out = vec![0u8; body];
+    for b in 0..width {
+        for i in 0..n {
+            out[i * width + b] = data[b * n + i];
+        }
+    }
+    out.extend_from_slice(tail);
+    out
+}
+
+/// CRC32 (IEEE, reflected) — used by the RMVL-like codec footer to detect
+/// torn writes, mirroring checksummed object stores.
+pub fn crc32(data: &[u8]) -> u32 {
+    // Tiny table-driven implementation; table built once.
+    static TABLE: once_cell::sync::Lazy<[u32; 256]> = once_cell::sync::Lazy::new(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut crc = !0u32;
+    for &b in data {
+        crc = TABLE[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u64_roundtrip() {
+        let mut buf = Vec::new();
+        put_u64_le(&mut buf, 0xDEAD_BEEF_CAFE_F00D);
+        put_u32_le(&mut buf, 7);
+        let mut off = 0;
+        assert_eq!(get_u64_le(&buf, &mut off), Some(0xDEAD_BEEF_CAFE_F00D));
+        assert_eq!(get_u32_le(&buf, &mut off), Some(7));
+        assert_eq!(get_u32_le(&buf, &mut off), None);
+    }
+
+    #[test]
+    fn f64_bytes_roundtrip() {
+        let xs = vec![1.5, -2.25, f64::MAX, f64::MIN_POSITIVE, 0.0];
+        let bytes = f64s_to_le_bytes(&xs);
+        assert_eq!(le_bytes_to_f64s(&bytes).unwrap(), xs);
+        assert!(le_bytes_to_f64s(&bytes[..7]).is_none());
+    }
+
+    #[test]
+    fn shuffle_roundtrip_with_tail() {
+        let data: Vec<u8> = (0..35).collect(); // 4 elems of 8 + 3 tail
+        let sh = shuffle(&data, 8);
+        assert_eq!(unshuffle(&sh, 8), data);
+        assert_ne!(sh, data);
+    }
+
+    #[test]
+    fn shuffle_groups_bytes() {
+        // elements [0,1], [2,3] width 2 -> [0,2,1,3]
+        assert_eq!(shuffle(&[0, 1, 2, 3], 2), vec![0, 2, 1, 3]);
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // Standard test vector: CRC32("123456789") = 0xCBF43926.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+}

@@ -1,0 +1,38 @@
+//! Tiny duration formatting helpers for logs and the trace renderer.
+
+/// Format a duration in seconds adaptively: "830µs", "12.3ms", "4.56s",
+/// "2m03s", "1h02m".
+pub fn format_duration_s(secs: f64) -> String {
+    if secs < 0.0 {
+        return format!("-{}", format_duration_s(-secs));
+    }
+    if secs < 1e-3 {
+        format!("{:.0}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.1}ms", secs * 1e3)
+    } else if secs < 60.0 {
+        format!("{secs:.2}s")
+    } else if secs < 3600.0 {
+        let m = (secs / 60.0).floor();
+        format!("{}m{:02.0}s", m as u64, secs - m * 60.0)
+    } else {
+        let h = (secs / 3600.0).floor();
+        let m = ((secs - h * 3600.0) / 60.0).floor();
+        format!("{}h{:02}m", h as u64, m as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scales() {
+        assert_eq!(format_duration_s(0.0000014), "1µs");
+        assert_eq!(format_duration_s(0.0123), "12.3ms");
+        assert_eq!(format_duration_s(4.561), "4.56s");
+        assert_eq!(format_duration_s(123.0), "2m03s");
+        assert_eq!(format_duration_s(3720.0), "1h02m");
+        assert_eq!(format_duration_s(-2.0), "-2.00s");
+    }
+}

@@ -1,0 +1,20 @@
+//! Shared utilities for the runtime.
+//!
+//! Everything here is hand-rolled because the build is fully offline: a JSON
+//! parser/writer (artifact manifests, run configs, trace metadata), a PCG
+//! pseudo-random generator (deterministic workload generation), descriptive
+//! statistics for the bench harness, a fixed-width table printer that
+//! renders the paper-style result tables, byte-level transforms used by the
+//! serialization codecs, and a miniature property-testing harness used by
+//! the coordinator invariant tests.
+
+pub mod bytes;
+pub mod humantime;
+pub mod json;
+pub mod prng;
+pub mod propcheck;
+pub mod stats;
+pub mod table;
+
+pub use humantime::format_duration_s;
+pub use prng::Pcg64;

@@ -1,0 +1,111 @@
+//! Miniature property-testing harness (proptest is not in the offline
+//! vendor set). It generates seeded random cases, runs a property, and on
+//! failure re-reports the seed so the case can be replayed exactly.
+//!
+//! The coordinator invariant tests (`rust/tests/prop_coordinator.rs`) are
+//! built on this: random task graphs in, schedule-validity invariants out.
+
+use crate::util::prng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed; case `i` uses stream `i`.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // RCOMPSS_PROP_CASES / RCOMPSS_PROP_SEED allow widening or replaying
+        // from the environment without recompiling.
+        let cases = std::env::var("RCOMPSS_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        let seed = std::env::var("RCOMPSS_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Config { cases, seed }
+    }
+}
+
+/// Run `prop` against `cases` generated inputs. `gen` receives a per-case
+/// PRNG; `prop` returns `Err(reason)` to fail. Panics with the seed and the
+/// case debug representation on failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cfg: &Config,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let mut rng = Pcg64::new(cfg.seed, case as u64);
+        let input = gen(&mut rng);
+        if let Err(reason) = prop(&input) {
+            panic!(
+                "property '{name}' failed\n  case:   {case}\n  seed:   {} (set RCOMPSS_PROP_SEED to replay)\n  reason: {reason}\n  input:  {input:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        check(
+            "u64 is even after doubling",
+            &Config { cases: 32, seed: 1 },
+            |r| r.next_u64() / 2 * 2,
+            |x| {
+                if x % 2 == 0 {
+                    Ok(())
+                } else {
+                    Err("odd".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failures() {
+        check(
+            "always fails",
+            &Config { cases: 4, seed: 2 },
+            |r| r.next_u64(),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn cases_are_reproducible() {
+        let mut first: Vec<u64> = Vec::new();
+        check(
+            "collect",
+            &Config { cases: 8, seed: 9 },
+            |r| r.next_u64(),
+            |x| {
+                first.push(*x);
+                Ok(())
+            },
+        );
+        let mut second: Vec<u64> = Vec::new();
+        check(
+            "collect again",
+            &Config { cases: 8, seed: 9 },
+            |r| r.next_u64(),
+            |x| {
+                second.push(*x);
+                Ok(())
+            },
+        );
+        assert_eq!(first, second);
+    }
+}

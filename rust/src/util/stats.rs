@@ -1,0 +1,113 @@
+//! Descriptive statistics for the bench harness: mean, stddev, median,
+//! percentiles, and the parallel-efficiency metrics the paper reports.
+
+/// Summary of a sample of measurements (seconds, bytes/s, ...).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::of on empty sample");
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            stddev: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            median: percentile_sorted(&sorted, 50.0),
+            p95: percentile_sorted(&sorted, 95.0),
+        }
+    }
+}
+
+/// Linear-interpolated percentile over a pre-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = pct / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Strong-scaling parallel efficiency: `T1 / (p * Tp)`.
+///
+/// This is the metric behind Figures 7 and 9 ("KNN maintains parallel
+/// efficiency of 44% on Shaheen-III ... at 32 nodes").
+pub fn strong_efficiency(t1: f64, tp: f64, p: f64) -> f64 {
+    t1 / (p * tp)
+}
+
+/// Weak-scaling parallel efficiency: `T1 / Tp` with the problem size grown
+/// proportionally to `p` (Figures 6 and 8).
+pub fn weak_efficiency(t1: f64, tp: f64) -> f64 {
+    t1 / tp
+}
+
+/// Speedup `T1 / Tp`.
+pub fn speedup(t1: f64, tp: f64) -> f64 {
+    t1 / tp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.median - 3.0).abs() < 1e-12);
+        assert!((s.min - 1.0).abs() < 1e-12);
+        assert!((s.max - 5.0).abs() < 1e-12);
+        assert!((s.stddev - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let sorted = [0.0, 10.0];
+        assert!((percentile_sorted(&sorted, 50.0) - 5.0).abs() < 1e-12);
+        assert!((percentile_sorted(&sorted, 0.0) - 0.0).abs() < 1e-12);
+        assert!((percentile_sorted(&sorted, 100.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn efficiency_definitions() {
+        // Ideal strong scaling: p cores -> T/p.
+        assert!((strong_efficiency(100.0, 25.0, 4.0) - 1.0).abs() < 1e-12);
+        // Half-efficient.
+        assert!((strong_efficiency(100.0, 50.0, 4.0) - 0.5).abs() < 1e-12);
+        // Ideal weak scaling: time constant.
+        assert!((weak_efficiency(10.0, 10.0) - 1.0).abs() < 1e-12);
+        assert!((weak_efficiency(10.0, 20.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_sample_summary() {
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.median, 7.0);
+        assert_eq!(s.p95, 7.0);
+    }
+}

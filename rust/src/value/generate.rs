@@ -1,0 +1,173 @@
+//! Random `RValue` generators: deterministic synthetic data for the codec
+//! benchmarks (Table 1 uses "square blocks" of doubles) and arbitrary nested
+//! values for property tests.
+
+use crate::util::prng::Pcg64;
+use crate::value::{RValue, NA_INTEGER, NA_REAL};
+
+/// Generator facade over a PRNG.
+pub struct Gen<'a> {
+    pub rng: &'a mut Pcg64,
+}
+
+impl<'a> Gen<'a> {
+    pub fn new(rng: &'a mut Pcg64) -> Gen<'a> {
+        Gen { rng }
+    }
+
+    /// Square numeric block of side `n` — the Table-1 payload shape
+    /// ("10K" in the paper = a 10000x10000 double matrix).
+    pub fn square_block(&mut self, n: usize) -> RValue {
+        let mut data = vec![0.0f64; n * n];
+        self.rng.fill_f64(&mut data);
+        RValue::matrix(data, n, n)
+    }
+
+    /// Numeric matrix with standard-normal entries.
+    pub fn normal_matrix(&mut self, nrow: usize, ncol: usize) -> RValue {
+        let mut data = Vec::with_capacity(nrow * ncol);
+        for _ in 0..nrow * ncol {
+            data.push(self.rng.normal());
+        }
+        RValue::matrix(data, nrow, ncol)
+    }
+
+    /// Real vector with a fraction of NA_real_ entries — exercises codec NA
+    /// fidelity.
+    pub fn real_vec_with_na(&mut self, len: usize, na_frac: f64) -> RValue {
+        let mut v = Vec::with_capacity(len);
+        for _ in 0..len {
+            if self.rng.chance(na_frac) {
+                v.push(NA_REAL);
+            } else {
+                v.push(self.rng.uniform(-1e6, 1e6));
+            }
+        }
+        RValue::Real(v)
+    }
+
+    /// Integer vector with NAs.
+    pub fn int_vec_with_na(&mut self, len: usize, na_frac: f64) -> RValue {
+        let mut v = Vec::with_capacity(len);
+        for _ in 0..len {
+            if self.rng.chance(na_frac) {
+                v.push(NA_INTEGER);
+            } else {
+                v.push(self.rng.next_u64() as i32);
+            }
+        }
+        RValue::Int(v)
+    }
+
+    /// Character vector of plausible tokens (mixed ASCII + a few multibyte).
+    pub fn str_vec(&mut self, len: usize) -> RValue {
+        const WORDS: [&str; 8] = [
+            "alpha", "beta", "gamma", "delta", "épsilon", "θeta", "fragment", "centroid",
+        ];
+        let v = (0..len)
+            .map(|_| {
+                let w = WORDS[self.rng.below_usize(WORDS.len())];
+                format!("{w}_{}", self.rng.below(1000))
+            })
+            .collect();
+        RValue::Str(v)
+    }
+
+    /// Arbitrary nested value up to `depth`; used by the codec property
+    /// tests — every codec must round-trip anything this produces.
+    pub fn arbitrary(&mut self, depth: usize) -> RValue {
+        let top = if depth == 0 { 6 } else { 8 };
+        match self.rng.below(top) {
+            0 => RValue::Null,
+            1 => {
+                let len = self.rng.below_usize(20);
+                RValue::Logical(
+                    (0..len)
+                        .map(|_| match self.rng.below(3) {
+                            0 => 0,
+                            1 => 1,
+                            _ => NA_INTEGER,
+                        })
+                        .collect(),
+                )
+            }
+            2 => {
+                let len = self.rng.below_usize(30);
+                self.int_vec_with_na(len, 0.1)
+            }
+            3 => {
+                let len = self.rng.below_usize(30);
+                self.real_vec_with_na(len, 0.1)
+            }
+            4 => {
+                let len = self.rng.below_usize(10);
+                self.str_vec(len)
+            }
+            5 => RValue::Raw((0..self.rng.below_usize(40)).map(|_| self.rng.next_u64() as u8).collect()),
+            6 => {
+                let nrow = 1 + self.rng.below_usize(6);
+                let ncol = 1 + self.rng.below_usize(6);
+                self.normal_matrix(nrow, ncol)
+            }
+            _ => {
+                let slots = self.rng.below_usize(4);
+                RValue::List(
+                    (0..slots)
+                        .map(|i| {
+                            let name = if self.rng.chance(0.5) {
+                                format!("slot{i}")
+                            } else {
+                                String::new()
+                            };
+                            (name, self.arbitrary(depth - 1))
+                        })
+                        .collect(),
+                )
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn square_block_dims() {
+        let mut rng = Pcg64::seeded(1);
+        let b = Gen::new(&mut rng).square_block(16);
+        let (_, r, c) = b.as_matrix().unwrap();
+        assert_eq!((r, c), (16, 16));
+    }
+
+    #[test]
+    fn na_fraction_roughly_respected() {
+        let mut rng = Pcg64::seeded(2);
+        let v = Gen::new(&mut rng).real_vec_with_na(10_000, 0.2);
+        let nas = v
+            .as_real()
+            .unwrap()
+            .iter()
+            .filter(|x| crate::value::is_na_real(**x))
+            .count();
+        assert!((1500..2500).contains(&nas), "nas={nas}");
+    }
+
+    #[test]
+    fn arbitrary_is_deterministic() {
+        let mut r1 = Pcg64::seeded(3);
+        let mut r2 = Pcg64::seeded(3);
+        let a = Gen::new(&mut r1).arbitrary(3);
+        let b = Gen::new(&mut r2).arbitrary(3);
+        assert!(a.identical(&b));
+    }
+
+    #[test]
+    fn arbitrary_depth_zero_is_flat() {
+        let mut rng = Pcg64::seeded(4);
+        for _ in 0..50 {
+            let v = Gen::new(&mut rng).arbitrary(0);
+            assert!(!matches!(v, RValue::List(_) | RValue::Matrix { .. }));
+        }
+    }
+}

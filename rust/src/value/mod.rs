@@ -1,0 +1,359 @@
+//! The R value model.
+//!
+//! RCOMPSs moves *R objects* between tasks; this module is the Rust stand-in
+//! for R's SEXP universe. It models the types that actually cross task
+//! boundaries in the paper's three applications (numeric vectors/matrices,
+//! integer and logical vectors, strings, named lists, raw byte vectors) plus
+//! R's NA semantics, since every Table-1 codec has to round-trip them
+//! faithfully.
+//!
+//! Design notes:
+//! * Numeric data is `f64` (R "double"); R's `NA_real_` is a specific quiet
+//!   NaN payload, modelled here by [`NA_REAL`] with bit-exact round-trips.
+//! * Integer NA is `i32::MIN`, exactly as in R.
+//! * Matrices are column-major with explicit `nrow`/`ncol` — R layout — so
+//!   codec output is byte-comparable with what an R process would write.
+
+mod generate;
+
+pub use generate::Gen;
+
+use std::fmt;
+
+/// R's `NA_real_`: a quiet NaN with the low word 1954 (the year R's authors
+/// chose; this is the actual bit pattern R uses).
+pub const NA_REAL: f64 = f64::from_bits(0x7FF0_0000_0000_07A2);
+
+/// R's integer NA.
+pub const NA_INTEGER: i32 = i32::MIN;
+
+/// R's logical NA (logicals are ints in R).
+pub const NA_LOGICAL: i32 = i32::MIN;
+
+/// Returns true iff `x` is R's NA_real_ (bit-exact, distinct from plain NaN).
+#[inline]
+pub fn is_na_real(x: f64) -> bool {
+    x.to_bits() == NA_REAL.to_bits()
+}
+
+/// A value in the R object model.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RValue {
+    /// R `NULL`.
+    Null,
+    /// Logical vector; elements are 0/1/NA_LOGICAL as in R.
+    Logical(Vec<i32>),
+    /// Integer vector.
+    Int(Vec<i32>),
+    /// Double vector.
+    Real(Vec<f64>),
+    /// Character vector.
+    Str(Vec<String>),
+    /// Numeric matrix, column-major (R layout).
+    Matrix {
+        data: Vec<f64>,
+        nrow: usize,
+        ncol: usize,
+    },
+    /// Named list (R `list`); names may be empty strings for unnamed slots.
+    List(Vec<(String, RValue)>),
+    /// Raw byte vector.
+    Raw(Vec<u8>),
+}
+
+impl RValue {
+    // ---- constructors ----------------------------------------------------
+
+    /// Length-1 double vector — R's scalar.
+    pub fn scalar(x: f64) -> RValue {
+        RValue::Real(vec![x])
+    }
+
+    /// Length-1 integer vector.
+    pub fn int_scalar(x: i32) -> RValue {
+        RValue::Int(vec![x])
+    }
+
+    /// Length-1 character vector.
+    pub fn string(s: &str) -> RValue {
+        RValue::Str(vec![s.to_string()])
+    }
+
+    /// Column-major matrix from parts; panics unless `data.len() == nrow*ncol`.
+    pub fn matrix(data: Vec<f64>, nrow: usize, ncol: usize) -> RValue {
+        assert_eq!(data.len(), nrow * ncol, "matrix dims do not match data");
+        RValue::Matrix { data, nrow, ncol }
+    }
+
+    /// Zero-filled matrix.
+    pub fn zeros(nrow: usize, ncol: usize) -> RValue {
+        RValue::Matrix {
+            data: vec![0.0; nrow * ncol],
+            nrow,
+            ncol,
+        }
+    }
+
+    // ---- accessors -------------------------------------------------------
+
+    /// Scalar double out of a length-1 Real/Int/Logical vector.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            RValue::Real(v) if v.len() == 1 => Some(v[0]),
+            RValue::Int(v) if v.len() == 1 && v[0] != NA_INTEGER => Some(v[0] as f64),
+            RValue::Logical(v) if v.len() == 1 && v[0] != NA_LOGICAL => Some(v[0] as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<i32> {
+        match self {
+            RValue::Int(v) if v.len() == 1 => Some(v[0]),
+            _ => None,
+        }
+    }
+
+    pub fn as_real(&self) -> Option<&[f64]> {
+        match self {
+            RValue::Real(v) => Some(v),
+            RValue::Matrix { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<&[i32]> {
+        match self {
+            RValue::Int(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str_vec(&self) -> Option<&[String]> {
+        match self {
+            RValue::Str(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Matrix view: (data, nrow, ncol).
+    pub fn as_matrix(&self) -> Option<(&[f64], usize, usize)> {
+        match self {
+            RValue::Matrix { data, nrow, ncol } => Some((data, *nrow, *ncol)),
+            _ => None,
+        }
+    }
+
+    pub fn as_list(&self) -> Option<&[(String, RValue)]> {
+        match self {
+            RValue::List(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    /// Look up a list element by name.
+    pub fn list_get(&self, name: &str) -> Option<&RValue> {
+        self.as_list()?.iter().find(|(n, _)| n == name).map(|(_, v)| v)
+    }
+
+    /// Number of elements at the top level (R `length()` semantics:
+    /// matrices count elements, lists count slots, NULL is 0).
+    pub fn len(&self) -> usize {
+        match self {
+            RValue::Null => 0,
+            RValue::Logical(v) => v.len(),
+            RValue::Int(v) => v.len(),
+            RValue::Real(v) => v.len(),
+            RValue::Str(v) => v.len(),
+            RValue::Matrix { data, .. } => data.len(),
+            RValue::List(v) => v.len(),
+            RValue::Raw(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Approximate payload size in bytes — used by the schedulers for
+    /// locality decisions and by the simulator's transfer model.
+    pub fn byte_size(&self) -> usize {
+        match self {
+            RValue::Null => 0,
+            RValue::Logical(v) | RValue::Int(v) => v.len() * 4,
+            RValue::Real(v) => v.len() * 8,
+            RValue::Str(v) => v.iter().map(|s| s.len() + 8).sum(),
+            RValue::Matrix { data, .. } => data.len() * 8,
+            RValue::List(v) => v
+                .iter()
+                .map(|(n, x)| n.len() + 8 + x.byte_size())
+                .sum::<usize>(),
+            RValue::Raw(v) => v.len(),
+        }
+    }
+
+    /// R-ish type name, used in logs and trace metadata.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            RValue::Null => "NULL",
+            RValue::Logical(_) => "logical",
+            RValue::Int(_) => "integer",
+            RValue::Real(_) => "double",
+            RValue::Str(_) => "character",
+            RValue::Matrix { .. } => "matrix",
+            RValue::List(_) => "list",
+            RValue::Raw(_) => "raw",
+        }
+    }
+
+    /// Structural equality with bit-exact NA handling and exact float
+    /// compare — what "the codec round-tripped correctly" means.
+    pub fn identical(&self, other: &RValue) -> bool {
+        fn f64_ident(a: f64, b: f64) -> bool {
+            a.to_bits() == b.to_bits() || (a == b)
+        }
+        match (self, other) {
+            (RValue::Null, RValue::Null) => true,
+            (RValue::Logical(a), RValue::Logical(b)) | (RValue::Int(a), RValue::Int(b)) => a == b,
+            (RValue::Real(a), RValue::Real(b)) => {
+                a.len() == b.len() && a.iter().zip(b).all(|(x, y)| f64_ident(*x, *y))
+            }
+            (RValue::Str(a), RValue::Str(b)) => a == b,
+            (
+                RValue::Matrix { data: a, nrow: r1, ncol: c1 },
+                RValue::Matrix { data: b, nrow: r2, ncol: c2 },
+            ) => r1 == r2 && c1 == c2 && a.len() == b.len()
+                && a.iter().zip(b).all(|(x, y)| f64_ident(*x, *y)),
+            (RValue::List(a), RValue::List(b)) => {
+                a.len() == b.len()
+                    && a.iter()
+                        .zip(b)
+                        .all(|((n1, v1), (n2, v2))| n1 == n2 && v1.identical(v2))
+            }
+            (RValue::Raw(a), RValue::Raw(b)) => a == b,
+            _ => false,
+        }
+    }
+
+    /// Approximate numeric equality (`all.equal` style) for compute results.
+    pub fn all_equal(&self, other: &RValue, tol: f64) -> bool {
+        fn close(a: f64, b: f64, tol: f64) -> bool {
+            if is_na_real(a) && is_na_real(b) {
+                return true;
+            }
+            if a.is_nan() || b.is_nan() {
+                return a.is_nan() && b.is_nan();
+            }
+            let scale = a.abs().max(b.abs()).max(1.0);
+            (a - b).abs() <= tol * scale
+        }
+        match (self, other) {
+            (RValue::Real(a), RValue::Real(b)) => {
+                a.len() == b.len() && a.iter().zip(b).all(|(x, y)| close(*x, *y, tol))
+            }
+            (
+                RValue::Matrix { data: a, nrow: r1, ncol: c1 },
+                RValue::Matrix { data: b, nrow: r2, ncol: c2 },
+            ) => r1 == r2 && c1 == c2 && a.iter().zip(b).all(|(x, y)| close(*x, *y, tol)),
+            (RValue::List(a), RValue::List(b)) => {
+                a.len() == b.len()
+                    && a.iter()
+                        .zip(b)
+                        .all(|((n1, v1), (n2, v2))| n1 == n2 && v1.all_equal(v2, tol))
+            }
+            _ => self.identical(other),
+        }
+    }
+
+    /// Matrix element (row-major index math over column-major storage).
+    #[inline]
+    pub fn mat_get(&self, r: usize, c: usize) -> Option<f64> {
+        match self {
+            RValue::Matrix { data, nrow, ncol } if r < *nrow && c < *ncol => {
+                Some(data[c * nrow + r])
+            }
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for RValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RValue::Null => write!(f, "NULL"),
+            RValue::Matrix { nrow, ncol, .. } => write!(f, "matrix[{nrow}x{ncol}]"),
+            RValue::List(items) => write!(f, "list({} slots)", items.len()),
+            RValue::Real(v) if v.len() == 1 => write!(f, "{}", v[0]),
+            other => write!(f, "{}[{}]", other.type_name(), other.len()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn na_real_is_bit_exact_nan() {
+        assert!(NA_REAL.is_nan());
+        assert!(is_na_real(NA_REAL));
+        assert!(!is_na_real(f64::NAN));
+        assert!(!is_na_real(1.0));
+    }
+
+    #[test]
+    fn scalar_accessors() {
+        assert_eq!(RValue::scalar(3.5).as_f64(), Some(3.5));
+        assert_eq!(RValue::int_scalar(7).as_f64(), Some(7.0));
+        assert_eq!(RValue::int_scalar(NA_INTEGER).as_f64(), None);
+        assert_eq!(RValue::Real(vec![1.0, 2.0]).as_f64(), None);
+    }
+
+    #[test]
+    fn matrix_layout_is_column_major() {
+        // 2x3 matrix, columns [1,2], [3,4], [5,6].
+        let m = RValue::matrix(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3);
+        assert_eq!(m.mat_get(0, 0), Some(1.0));
+        assert_eq!(m.mat_get(1, 0), Some(2.0));
+        assert_eq!(m.mat_get(0, 2), Some(5.0));
+        assert_eq!(m.mat_get(2, 0), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "matrix dims")]
+    fn matrix_dim_mismatch_panics() {
+        RValue::matrix(vec![1.0], 2, 2);
+    }
+
+    #[test]
+    fn identical_distinguishes_na_and_nan() {
+        let a = RValue::Real(vec![NA_REAL]);
+        let b = RValue::Real(vec![f64::NAN]);
+        assert!(a.identical(&a.clone()));
+        assert!(!a.identical(&b));
+    }
+
+    #[test]
+    fn list_get_by_name() {
+        let l = RValue::List(vec![
+            ("beta".into(), RValue::scalar(2.0)),
+            ("rss".into(), RValue::scalar(0.5)),
+        ]);
+        assert_eq!(l.list_get("rss").unwrap().as_f64(), Some(0.5));
+        assert!(l.list_get("zzz").is_none());
+    }
+
+    #[test]
+    fn byte_size_accounts_payload() {
+        assert_eq!(RValue::Real(vec![0.0; 10]).byte_size(), 80);
+        assert_eq!(RValue::Int(vec![0; 10]).byte_size(), 40);
+        assert_eq!(RValue::zeros(4, 4).byte_size(), 128);
+    }
+
+    #[test]
+    fn all_equal_tolerates_small_error() {
+        let a = RValue::Real(vec![1.0, 2.0]);
+        let b = RValue::Real(vec![1.0 + 1e-12, 2.0 - 1e-12]);
+        assert!(a.all_equal(&b, 1e-9));
+        assert!(!a.all_equal(&RValue::Real(vec![1.1, 2.0]), 1e-9));
+    }
+}

@@ -1,0 +1,282 @@
+//! Integration tests across the full stack: apps x codecs x schedulers,
+//! fault injection under load, DAG parity between live and simulated
+//! executions, and the PJRT path (when artifacts are present).
+
+use std::sync::Arc;
+
+use rcompss::api::{CompssRuntime, RuntimeConfig};
+use rcompss::apps::backend::Backend;
+use rcompss::apps::kmeans::{self, KmeansConfig};
+use rcompss::apps::knn::{self, KnnConfig};
+use rcompss::apps::linreg::{self, LinregConfig};
+use rcompss::apps::{LiveSink, Shapes};
+use rcompss::cluster::{ClusterSpec, MachineProfile};
+use rcompss::coordinator::fault::FailureInjector;
+use rcompss::sim::{CostModel, SimEngine, SimSink};
+
+fn tiny_shapes() -> Shapes {
+    Shapes {
+        knn_train_n: 128,
+        knn_test_block: 32,
+        knn_d: 8,
+        knn_k: 3,
+        knn_classes: 3,
+        km_frag_n: 96,
+        km_d: 4,
+        km_k: 3,
+        lr_frag_n: 64,
+        lr_p: 8,
+        lr_pred_block: 32,
+        ..Shapes::default()
+    }
+}
+
+#[test]
+fn knn_is_deterministic_across_codecs_and_policies() {
+    let mut reference: Option<Vec<i32>> = None;
+    for codec in ["rmvl", "qs", "fst", "rawbin", "serialize_rcpp"] {
+        for policy in ["fifo", "locality"] {
+            let rt = CompssRuntime::start(
+                RuntimeConfig::local(3)
+                    .with_codec(codec)
+                    .with_scheduler(policy),
+            )
+            .unwrap();
+            let mut cfg = KnnConfig::small(5);
+            cfg.shapes = tiny_shapes();
+            cfg.train_fragments = 3;
+            cfg.test_blocks = 1;
+            let mut sink =
+                LiveSink::new(&rt, rcompss::apps::backend::knn_task_defs(cfg.shapes, Backend::Native));
+            let plan = knn::plan_knn(&mut sink, &cfg).unwrap();
+            let classes = sink.fetch(plan.classes[0]).unwrap();
+            let got = classes.as_int().unwrap().to_vec();
+            rt.stop().unwrap();
+            match &reference {
+                None => reference = Some(got),
+                Some(want) => assert_eq!(
+                    &got, want,
+                    "codec {codec} policy {policy} changed results"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn kmeans_survives_heavy_failure_injection() {
+    // A third of partial_sum executions fail (budget-capped); resubmission
+    // must still converge to the same centroids as a clean run. (With the
+    // default 2-retry policy, p=0.35 keeps the chance of a task failing
+    // three times in a row ~4% — the seed below is verified green.)
+    let clean = {
+        let rt = CompssRuntime::start(RuntimeConfig::local(3)).unwrap();
+        let mut cfg = KmeansConfig::small(11);
+        cfg.shapes = tiny_shapes();
+        cfg.fragments = 3;
+        cfg.iterations = 3;
+        let res = kmeans::run_kmeans(&rt, &cfg, Backend::Native).unwrap();
+        rt.stop().unwrap();
+        res.centroids
+    };
+    let mut config = RuntimeConfig::local(3);
+    config.injector = Arc::new(FailureInjector::new(0.35, "partial_sum", 6, 77));
+    // A wider retry budget than the COMPSs default so injected streaks
+    // cannot exhaust it — this test is about result preservation, not the
+    // budget boundary (covered by `exhausted_retries_...` below).
+    config.retry = rcompss::coordinator::fault::RetryPolicy { max_retries: 6 };
+    let rt = CompssRuntime::start(config).unwrap();
+    let mut cfg = KmeansConfig::small(11);
+    cfg.shapes = tiny_shapes();
+    cfg.fragments = 3;
+    cfg.iterations = 3;
+    let res = kmeans::run_kmeans(&rt, &cfg, Backend::Native).unwrap();
+    let stats = rt.stop().unwrap();
+    assert!(stats.resubmissions > 0, "injector must have fired");
+    assert_eq!(stats.tasks_failed, 0, "no permanent failures within budget");
+    assert!(
+        clean.all_equal(&res.centroids, 1e-9),
+        "failure injection changed the result"
+    );
+}
+
+#[test]
+fn exhausted_retries_cancel_downstream_but_runtime_survives() {
+    let mut config = RuntimeConfig::local(2);
+    // Infinite budget, always fail KNN_frag -> permanent failure.
+    config.injector = Arc::new(FailureInjector::new(1.0, "KNN_frag", u32::MAX, 3));
+    let rt = CompssRuntime::start(config).unwrap();
+    let mut cfg = KnnConfig::small(9);
+    cfg.shapes = tiny_shapes();
+    cfg.train_fragments = 2;
+    cfg.test_blocks = 1;
+    let err = knn::run_knn(&rt, &cfg, Backend::Native);
+    assert!(err.is_err(), "run must surface the failure");
+    let stats = rt.stop().unwrap();
+    assert!(stats.tasks_failed > 0);
+    assert!(stats.tasks_cancelled > 0, "downstream tasks cancelled");
+}
+
+#[test]
+fn live_and_simulated_dags_match_for_all_apps() {
+    let shapes = tiny_shapes();
+    // KNN.
+    {
+        let mut cfg = KnnConfig::small(2);
+        cfg.shapes = shapes;
+        cfg.train_fragments = 4;
+        cfg.test_blocks = 2;
+        let rt = CompssRuntime::start(RuntimeConfig::local(3)).unwrap();
+        knn::run_knn(&rt, &cfg, Backend::Native).unwrap();
+        let live = rt.stop().unwrap();
+        let mut sink = SimSink::new();
+        knn::plan_knn(&mut sink, &cfg).unwrap();
+        let sim = sink.finish().type_counts();
+        for (ty, (count, _)) in &live.per_type {
+            assert_eq!(sim.get(ty).copied(), Some(*count as usize), "knn {ty}");
+        }
+    }
+    // K-means (fixed iterations so live == plan).
+    {
+        let mut cfg = KmeansConfig::small(2);
+        cfg.shapes = shapes;
+        cfg.fragments = 3;
+        cfg.iterations = 2;
+        cfg.tol = None;
+        let rt = CompssRuntime::start(RuntimeConfig::local(3)).unwrap();
+        kmeans::run_kmeans(&rt, &cfg, Backend::Native).unwrap();
+        let live = rt.stop().unwrap();
+        let mut sink = SimSink::new();
+        kmeans::plan_kmeans(&mut sink, &cfg).unwrap();
+        let sim = sink.finish().type_counts();
+        for (ty, (count, _)) in &live.per_type {
+            assert_eq!(sim.get(ty).copied(), Some(*count as usize), "kmeans {ty}");
+        }
+    }
+    // Linreg.
+    {
+        let mut cfg = LinregConfig::small(2);
+        cfg.shapes = shapes;
+        cfg.fragments = 4;
+        cfg.pred_blocks = 2;
+        let rt = CompssRuntime::start(RuntimeConfig::local(3)).unwrap();
+        linreg::run_linreg(&rt, &cfg, Backend::Native).unwrap();
+        let live = rt.stop().unwrap();
+        let mut sink = SimSink::new();
+        linreg::plan_linreg(&mut sink, &cfg).unwrap();
+        let sim = sink.finish().type_counts();
+        for (ty, (count, _)) in &live.per_type {
+            assert_eq!(sim.get(ty).copied(), Some(*count as usize), "linreg {ty}");
+        }
+    }
+}
+
+#[test]
+fn simulated_scaling_is_sane_for_all_apps_and_machines() {
+    // Strong scaling 1 -> 8 workers must speed up every app on every
+    // machine, and efficiency must stay within (0, 1].
+    for profile in [MachineProfile::shaheen3(), MachineProfile::marenostrum5()] {
+        for app in ["knn", "kmeans", "linreg"] {
+            let plan = |_w: u32| match app {
+                "knn" => rcompss::sim::plans::knn_plan(4, 16, 1).unwrap(),
+                "kmeans" => rcompss::sim::plans::kmeans_plan(16, 2, 1).unwrap(),
+                _ => rcompss::sim::plans::linreg_plan(16, 4, 1).unwrap(),
+            };
+            let t1 = SimEngine::new(
+                ClusterSpec::new(profile.clone(), 1).with_workers_per_node(1),
+                CostModel::default(),
+            )
+            .run(plan(1), "s1")
+            .unwrap()
+            .makespan_s;
+            let t8 = SimEngine::new(
+                ClusterSpec::new(profile.clone(), 1).with_workers_per_node(8),
+                CostModel::default(),
+            )
+            .run(plan(8), "s8")
+            .unwrap()
+            .makespan_s;
+            assert!(
+                t8 < t1,
+                "{app}@{}: 8 workers ({t8:.2}s) not faster than 1 ({t1:.2}s)",
+                profile.name
+            );
+            let eff = t1 / (8.0 * t8);
+            assert!(eff <= 1.05, "{app}@{}: superlinear {eff}", profile.name);
+        }
+    }
+}
+
+#[test]
+fn pjrt_backend_agrees_with_native_on_linreg() {
+    if !rcompss::runtime::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // Artifact shapes are required for the PJRT backend.
+    let cfg = {
+        let mut c = LinregConfig::small(4);
+        c.fragments = 2;
+        c.pred_blocks = 1;
+        c
+    };
+    let run = |backend| {
+        let rt = CompssRuntime::start(RuntimeConfig::local(2)).unwrap();
+        let res = linreg::run_linreg(&rt, &cfg, backend).unwrap();
+        rt.stop().unwrap();
+        res
+    };
+    let p = run(Backend::Pjrt);
+    let n = run(Backend::Native);
+    assert!(p.beta.all_equal(&n.beta, 1e-2), "backends disagree on beta");
+    assert!(p.r2 > 0.95 && n.r2 > 0.95);
+}
+
+#[test]
+fn trace_of_live_run_covers_all_task_types() {
+    let rt = CompssRuntime::start(RuntimeConfig::local(3).with_trace(true)).unwrap();
+    let mut cfg = KnnConfig::small(6);
+    cfg.shapes = tiny_shapes();
+    cfg.train_fragments = 3;
+    cfg.test_blocks = 1;
+    knn::run_knn(&rt, &cfg, Backend::Native).unwrap();
+    let trace = rt.trace("live knn");
+    rt.stop().unwrap();
+    let types: std::collections::HashSet<String> = trace
+        .events
+        .iter()
+        .filter_map(|e| match &e.kind {
+            rcompss::trace::EventKind::TaskExec(ty) => Some(ty.clone()),
+            _ => None,
+        })
+        .collect();
+    for ty in ["KNN_fill_fragment", "KNN_fill_test", "KNN_frag", "KNN_merge", "KNN_classify"] {
+        assert!(types.contains(ty), "trace missing {ty}");
+    }
+    assert!(trace.utilization() > 0.0);
+    assert!(trace.to_prv().starts_with("#Paraver"));
+}
+
+#[test]
+fn workdir_files_use_dxvy_naming() {
+    // The on-disk parameter files carry the paper's dXvY labels.
+    let config = RuntimeConfig::local(2);
+    let workdir = config.workdir.clone();
+    let rt = CompssRuntime::start(config).unwrap();
+    let mut cfg = KnnConfig::small(8);
+    cfg.shapes = tiny_shapes();
+    cfg.train_fragments = 2;
+    cfg.test_blocks = 1;
+    knn::run_knn(&rt, &cfg, Backend::Native).unwrap();
+    let names: Vec<String> = std::fs::read_dir(&workdir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    assert!(!names.is_empty());
+    assert!(
+        names.iter().all(|n| n.starts_with('d') && n.contains('v') && n.ends_with(".par")),
+        "unexpected names: {names:?}"
+    );
+    rt.stop().unwrap();
+    assert!(!workdir.exists(), "stop() must clean the workdir");
+}

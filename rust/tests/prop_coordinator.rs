@@ -1,0 +1,272 @@
+//! Property-based tests on coordinator invariants (random task graphs).
+//!
+//! Uses the crate's seeded `propcheck` harness: each case generates a
+//! random DAG workload, executes it (pure graph or live runtime), and
+//! checks the invariants that make a superscalar runtime correct:
+//! completion order respects dependencies, versions are monotone, every
+//! scheduled task was ready, and random graphs always drain.
+
+use std::collections::{HashMap, HashSet};
+
+use rcompss::api::{CompssRuntime, RuntimeConfig, TaskArg, TaskDef};
+use rcompss::coordinator::dag::{EdgeKind, TaskGraph, TaskId, TaskState};
+use rcompss::coordinator::registry::{DataKey, DataRegistry, NodeId};
+use rcompss::coordinator::scheduler::{scheduler_by_name, ReadyTask};
+use rcompss::util::propcheck::{check, Config};
+use rcompss::util::prng::Pcg64;
+use rcompss::value::RValue;
+
+/// A random DAG description: for each task, the set of earlier tasks it
+/// reads from.
+#[derive(Debug, Clone)]
+struct RandomDag {
+    deps: Vec<Vec<usize>>,
+}
+
+fn gen_dag(rng: &mut Pcg64, max_tasks: usize) -> RandomDag {
+    let n = 2 + rng.below_usize(max_tasks - 1);
+    let mut deps = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut d = Vec::new();
+        if i > 0 {
+            let k = rng.below_usize(3.min(i) + 1);
+            for _ in 0..k {
+                d.push(rng.below_usize(i));
+            }
+            d.sort_unstable();
+            d.dedup();
+        }
+        deps.push(d);
+    }
+    RandomDag { deps }
+}
+
+/// Drive a RandomDag through the pure TaskGraph with a scheduler, checking
+/// every dispatch was legal and the graph drains.
+fn run_pure(dag: &RandomDag, policy: &str) -> Result<(), String> {
+    let mut graph = TaskGraph::new();
+    let mut registry = DataRegistry::new();
+    let mut scheduler = scheduler_by_name(policy).expect("policy");
+    let mut out_keys: Vec<DataKey> = Vec::new();
+    let mut ready: Vec<TaskId> = Vec::new();
+    let mut ids = Vec::new();
+
+    for (i, dd) in dag.deps.iter().enumerate() {
+        let id = graph.next_task_id();
+        ids.push(id);
+        let mut deps = Vec::new();
+        let mut reads = Vec::new();
+        for &j in dd {
+            let key = out_keys[j];
+            let (k, raw) = registry.record_read(key.data, id);
+            if let Some(p) = raw {
+                deps.push((p, EdgeKind::Raw, k));
+            }
+            reads.push(k);
+        }
+        let out = registry.new_future(id);
+        out_keys.push(out);
+        let is_ready = graph.insert_task(id, &format!("t{i}"), reads, vec![out], deps);
+        if is_ready {
+            ready.push(id);
+        }
+    }
+    for id in ready {
+        scheduler.push(ReadyTask {
+            id,
+            inputs: vec![],
+            type_name: "x".into(),
+        });
+    }
+
+    let mut done: HashSet<TaskId> = HashSet::new();
+    let idx: HashMap<TaskId, usize> = ids.iter().enumerate().map(|(i, t)| (*t, i)).collect();
+    while let Some(id) = scheduler.pop_for(NodeId(0)) {
+        // Invariant: every dependency of a dispatched task is done.
+        let i = idx[&id];
+        for &j in &dag.deps[i] {
+            if !done.contains(&ids[j]) {
+                return Err(format!("task {i} dispatched before dependency {j}"));
+            }
+        }
+        if graph.state(id) != Some(TaskState::Ready) {
+            return Err(format!("task {i} dispatched while not ready"));
+        }
+        graph.start(id);
+        registry.mark_available(out_keys[i], NodeId(0), 1, Default::default());
+        done.insert(id);
+        for t in graph.complete(id) {
+            scheduler.push(ReadyTask {
+                id: t,
+                inputs: vec![],
+                type_name: "x".into(),
+            });
+        }
+    }
+    if !graph.quiescent() {
+        return Err(format!(
+            "graph did not drain: {}/{} done",
+            graph.done_count(),
+            dag.deps.len()
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_random_dags_drain_under_every_policy() {
+    for policy in ["fifo", "lifo", "locality"] {
+        check(
+            &format!("random dags drain [{policy}]"),
+            &Config::default(),
+            |rng| gen_dag(rng, 40),
+            |dag| run_pure(dag, policy),
+        );
+    }
+}
+
+#[test]
+fn prop_critical_path_bounds() {
+    check(
+        "critical path is within [1, n] and >= longest chain",
+        &Config::default(),
+        |rng| gen_dag(rng, 30),
+        |dag| {
+            let mut graph = TaskGraph::new();
+            let mut ids = Vec::new();
+            let key = |d: u64| DataKey {
+                data: rcompss::coordinator::registry::DataId(d),
+                version: 1,
+            };
+            for (i, dd) in dag.deps.iter().enumerate() {
+                let id = graph.next_task_id();
+                let deps = dd
+                    .iter()
+                    .map(|j| (ids[*j], EdgeKind::Raw, key(*j as u64 + 1)))
+                    .collect();
+                graph.insert_task(id, &format!("t{i}"), vec![], vec![], deps);
+                ids.push(id);
+            }
+            let cp = graph.critical_path_len();
+            let n = dag.deps.len();
+            if cp == 0 || cp > n {
+                return Err(format!("critical path {cp} outside [1, {n}]"));
+            }
+            // Depth computed independently.
+            let mut depth = vec![1usize; n];
+            for i in 0..n {
+                for &j in &dag.deps[i] {
+                    depth[i] = depth[i].max(depth[j] + 1);
+                }
+            }
+            let want = depth.iter().copied().max().unwrap_or(1);
+            if cp != want {
+                return Err(format!("critical path {cp} != independent depth {want}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_version_monotonicity() {
+    check(
+        "writes produce strictly increasing versions",
+        &Config::default(),
+        |rng| (rng.below(20) + 1, rng.below(5) + 1),
+        |&(writes, readers)| {
+            let mut reg = DataRegistry::new();
+            let key = reg.new_literal(8, NodeId(0));
+            let mut last = key.version;
+            let mut next_task = 100u64;
+            for _ in 0..writes {
+                for _ in 0..readers {
+                    next_task += 1;
+                    reg.record_read(key.data, TaskId(next_task));
+                }
+                next_task += 1;
+                let (new_key, _, war) = reg.record_write(key.data, TaskId(next_task));
+                if new_key.version != last + 1 {
+                    return Err(format!(
+                        "version jumped {last} -> {}",
+                        new_key.version
+                    ));
+                }
+                if war.len() != readers as usize {
+                    return Err(format!(
+                        "WAR edges {} != readers {readers}",
+                        war.len()
+                    ));
+                }
+                last = new_key.version;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Live-runtime property: random reduction trees over addition always
+/// compute the exact total, under any scheduler, any codec, any worker
+/// count.
+#[test]
+fn prop_live_reduction_trees_are_exact() {
+    check(
+        "live reduction trees sum correctly",
+        &Config {
+            cases: 10,
+            seed: 0xFEED,
+        },
+        |rng| {
+            let n = 2 + rng.below_usize(24);
+            let values: Vec<f64> = (0..n).map(|_| rng.below(1000) as f64).collect();
+            let workers = 1 + rng.below(4) as u32;
+            let policy = ["fifo", "lifo", "locality"][rng.below_usize(3)];
+            let codec = ["rmvl", "qs", "rawbin"][rng.below_usize(3)];
+            (values, workers, policy, codec)
+        },
+        |(values, workers, policy, codec)| {
+            let rt = CompssRuntime::start(
+                RuntimeConfig::local(*workers)
+                    .with_scheduler(policy)
+                    .with_codec(codec),
+            )
+            .map_err(|e| e.to_string())?;
+            let add = rt.register_task(TaskDef::new("add", 2, |a| {
+                Ok(vec![RValue::scalar(
+                    a[0].as_f64().unwrap() + a[1].as_f64().unwrap(),
+                )])
+            }));
+            // Pairwise reduction tree.
+            let mut layer: Vec<TaskArg> =
+                values.iter().map(|v| TaskArg::from(*v)).collect();
+            while layer.len() > 1 {
+                let mut next = Vec::new();
+                let mut it = layer.into_iter();
+                while let Some(a) = it.next() {
+                    match it.next() {
+                        Some(b) => {
+                            let r = rt.submit(&add, &[a, b]).map_err(|e| e.to_string())?;
+                            next.push(TaskArg::from(r));
+                        }
+                        None => next.push(a),
+                    }
+                }
+                layer = next;
+            }
+            let total = match layer.pop().unwrap() {
+                TaskArg::Future(r) => rt
+                    .wait_on(&r)
+                    .map_err(|e| e.to_string())?
+                    .as_f64()
+                    .unwrap(),
+                TaskArg::Value(v) => v.as_f64().unwrap(),
+            };
+            rt.stop().map_err(|e| e.to_string())?;
+            let want: f64 = values.iter().sum();
+            if (total - want).abs() > 1e-9 {
+                return Err(format!("sum {total} != {want}"));
+            }
+            Ok(())
+        },
+    );
+}
