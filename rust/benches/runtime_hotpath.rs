@@ -27,7 +27,7 @@ use rcompss::coordinator::registry::NodeId;
 use rcompss::coordinator::scheduler::{scheduler_by_name, ReadyTask};
 use rcompss::coordinator::dag::TaskId;
 use rcompss::sim::{plans, CostModel, SimEngine};
-use rcompss::util::json::Json;
+use rcompss::util::json::{obj, Json};
 use rcompss::util::prng::Pcg64;
 use rcompss::util::table::{fmt_bytes, Table};
 use rcompss::value::{Gen, RValue};
@@ -45,6 +45,7 @@ fn gemm_ratio() {
         std::hint::black_box(rcompss::blas::gemm(&am, &bm).unwrap());
     });
 
+    #[cfg(feature = "pjrt")]
     if rcompss::runtime::artifacts_available() {
         // Pure execution time: literals built once outside the timed loop
         // (the conversion cost is measured separately by [4]).
@@ -77,9 +78,13 @@ fn gemm_ratio() {
                 ("ratio", Json::Num(ratio)),
             ],
         );
-    } else {
-        println!("  artifacts missing; native GEMM only: {:.1} ms", native.median * 1e3);
+        println!();
+        return;
     }
+    println!(
+        "  artifacts missing (or pjrt feature off); native GEMM only: {:.1} ms",
+        native.median * 1e3
+    );
     println!();
 }
 
@@ -214,32 +219,72 @@ fn codec_throughput() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Case [4]: per-task dispatch overhead of the live runtime with trivial
+/// bodies, comparing the file data plane (every parameter through the
+/// codec + workdir, as the seed runtime did) against the in-memory
+/// zero-copy plane, at 1 and 8 workers. Emits `BENCH_hotpath.json` so the
+/// perf trajectory is tracked in-repo (acceptance target: >= 2x lower
+/// overhead with the memory plane at 8 workers).
 fn dispatch_overhead() {
-    println!("[4] live runtime dispatch overhead (trivial bodies)");
+    println!("[4] live runtime dispatch overhead (trivial bodies, file vs memory plane)");
     let n_tasks = 2000usize;
-    for workers in [1u32, 4] {
-        let rt = CompssRuntime::start(RuntimeConfig::local(workers)).unwrap();
-        let noop = rt.register_task(TaskDef::new("noop", 1, |args| Ok(vec![args[0].clone()])));
-        let (elapsed, _) = time_once(|| {
-            for i in 0..n_tasks {
-                rt.submit(&noop, &[(i as f64).into()]).unwrap();
-            }
-            rt.barrier().unwrap();
-        });
-        let per_task = elapsed / n_tasks as f64 * 1e6;
-        println!(
-            "  {workers} worker(s): {n_tasks} tasks in {:.2}s -> {per_task:.0} µs/task (incl. ser/deser files)",
-            elapsed
-        );
-        record_result(
-            "hotpath_dispatch",
-            vec![
+    let mut summary: Vec<Json> = Vec::new();
+    let mut us_file_8 = f64::NAN;
+    let mut us_mem_8 = f64::NAN;
+    for (plane, budget) in [("file", 0u64), ("memory", 256 << 20)] {
+        for workers in [1u32, 8] {
+            let config = RuntimeConfig::local(workers).with_memory_budget(budget);
+            let rt = CompssRuntime::start(config).unwrap();
+            let noop = rt.register_task(TaskDef::new("noop", 1, |args| {
+                Ok(vec![args[0].as_ref().clone()])
+            }));
+            let (elapsed, _) = time_once(|| {
+                for i in 0..n_tasks {
+                    rt.submit(&noop, &[(i as f64).into()]).unwrap();
+                }
+                rt.barrier().unwrap();
+            });
+            let stats = rt.stop().unwrap();
+            let per_task = elapsed / n_tasks as f64 * 1e6;
+            println!(
+                "  {plane:6} plane, {workers} worker(s): {n_tasks} tasks in {elapsed:.2}s \
+                 -> {per_task:.0} µs/task (store hits {}, spills {})",
+                stats.store_hits, stats.spills
+            );
+            record_result(
+                "hotpath_dispatch",
+                vec![
+                    ("plane", Json::Str(plane.into())),
+                    ("workers", Json::Num(workers as f64)),
+                    ("us_per_task", Json::Num(per_task)),
+                    ("store_hits", Json::Num(stats.store_hits as f64)),
+                    ("spills", Json::Num(stats.spills as f64)),
+                ],
+            );
+            summary.push(obj(vec![
+                ("metric", Json::Str("dispatch_us_per_task".into())),
+                ("plane", Json::Str(plane.into())),
                 ("workers", Json::Num(workers as f64)),
+                ("n_tasks", Json::Num(n_tasks as f64)),
                 ("us_per_task", Json::Num(per_task)),
-            ],
-        );
-        rt.stop().unwrap();
+            ]));
+            if workers == 8 {
+                if plane == "file" {
+                    us_file_8 = per_task;
+                } else {
+                    us_mem_8 = per_task;
+                }
+            }
+        }
     }
+    let speedup = us_file_8 / us_mem_8;
+    println!("  memory-plane speedup at 8 workers: {speedup:.1}x (target >= 2x)");
+    summary.push(obj(vec![
+        ("metric", Json::Str("memory_plane_speedup_8w".into())),
+        ("speedup", Json::Num(speedup)),
+        ("target", Json::Num(2.0)),
+    ]));
+    rcompss::bench_harness::write_json_summary("hotpath", summary);
     println!();
 }
 

@@ -77,10 +77,16 @@ pub struct TaskDef {
 
 impl TaskDef {
     /// Define a task with `arity` IN arguments and one return value.
+    ///
+    /// Arguments arrive as `Arc<RValue>` handles: the in-memory data plane
+    /// hands every node-local consumer the producer's allocation without a
+    /// copy. `Arc<RValue>` derefs to [`RValue`], so accessors read as
+    /// before (`args[0].as_f64()`); use `args[0].as_ref()` where a plain
+    /// `&RValue` is needed.
     pub fn new(
         name: &str,
         arity: usize,
-        body: impl Fn(&[RValue]) -> Result<Vec<RValue>> + Send + Sync + 'static,
+        body: impl Fn(&[Arc<RValue>]) -> Result<Vec<RValue>> + Send + Sync + 'static,
     ) -> TaskDef {
         TaskDef {
             spec: Arc::new(TaskSpec {
@@ -254,7 +260,7 @@ mod tests {
         let rt = CompssRuntime::start(RuntimeConfig::local(4)).unwrap();
         let slow = rt.register_task(TaskDef::new("slow", 1, |args| {
             std::thread::sleep(std::time::Duration::from_millis(5));
-            Ok(vec![args[0].clone()])
+            Ok(vec![args[0].as_ref().clone()])
         }));
         for i in 0..16 {
             rt.submit(&slow, &[(i as f64).into()]).unwrap();
@@ -279,6 +285,49 @@ mod tests {
         assert_eq!(stats.tasks_failed, 1);
         // Default retry policy ran it 1 + 2 times.
         assert_eq!(stats.resubmissions, 2);
+    }
+
+    #[test]
+    fn figure2_add_four_numbers_on_memory_plane() {
+        // Same program as `figure2_add_four_numbers`, but through the
+        // in-memory data plane: identical result, all consumptions served
+        // zero-copy from the store, no spills at this budget.
+        let rt = CompssRuntime::start(RuntimeConfig::local_in_memory(2)).unwrap();
+        let add = rt.register_task(add_task());
+        let r1 = rt.submit(&add, &[4.0.into(), 5.0.into()]).unwrap();
+        let r2 = rt.submit(&add, &[6.0.into(), 7.0.into()]).unwrap();
+        let r3 = rt.submit(&add, &[r1.into(), r2.into()]).unwrap();
+        let v = rt.wait_on(&r3).unwrap();
+        assert_eq!(v.as_f64(), Some(22.0));
+        let stats = rt.stop().unwrap();
+        assert_eq!(stats.tasks_done, 3);
+        assert!(stats.store_hits >= 7, "6 task inputs + 1 wait_on: {stats:?}");
+        assert_eq!(stats.store_misses, 0);
+        assert_eq!(stats.spills, 0);
+        assert_eq!(stats.bytes_serialized, 0, "no codec on a node-local chain");
+    }
+
+    #[test]
+    fn memory_plane_spills_under_pressure_and_reloads() {
+        // A budget far below the working set forces LRU spills through the
+        // codec; reloads must still produce exact results.
+        let config = RuntimeConfig::local(2).with_memory_budget(64).with_spill("lru");
+        let rt = CompssRuntime::start(config).unwrap();
+        let add = rt.register_task(add_task());
+        let mut acc = rt.submit(&add, &[0.0.into(), 0.0.into()]).unwrap();
+        for i in 1..=10 {
+            acc = rt.submit(&add, &[acc.into(), (i as f64).into()]).unwrap();
+        }
+        let v = rt.wait_on(&acc).unwrap();
+        assert_eq!(v.as_f64(), Some(55.0));
+        let stats = rt.stop().unwrap();
+        assert!(stats.spills > 0, "tiny budget must spill: {stats:?}");
+    }
+
+    #[test]
+    fn unknown_spill_policy_is_rejected() {
+        let config = RuntimeConfig::local(1).with_memory_budget(1024).with_spill("nope");
+        assert!(CompssRuntime::start(config).is_err());
     }
 
     #[test]

@@ -14,15 +14,19 @@
 //! from files", §4.2), so fill tasks take `(seed, index)` literals and are
 //! perfectly reproducible.
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, Result};
 
 use crate::api::TaskDef;
 use crate::apps::Shapes;
 use crate::blas;
 use crate::cluster::BlasClass;
-use crate::runtime::{self, tensor};
+use crate::runtime;
 use crate::util::prng::Pcg64;
 use crate::value::RValue;
+
+use pjrt_bodies::*;
 
 /// Which compute implementation the task bodies use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -336,17 +340,24 @@ fn elementwise_add(a: &RValue, b: &RValue) -> Result<RValue> {
 }
 
 // ---------------------------------------------------------------------------
-// PJRT bodies.
+// PJRT bodies. Gated: the `xla` crate only exists in toolchains with the
+// artifact pipeline; without the `pjrt` feature the same signatures bail,
+// and `Backend::auto()` never selects them (`artifacts_available` is false).
 // ---------------------------------------------------------------------------
 
-fn pjrt_knn_frag(
-    test: &RValue,
-    train_x: &RValue,
-    train_y: &RValue,
-    tb: usize,
-    k: usize,
-) -> Result<(RValue, RValue)> {
-    runtime::with_engine(|eng| {
+#[cfg(feature = "pjrt")]
+mod pjrt_bodies {
+    use super::*;
+    use crate::runtime::tensor;
+
+    pub(super) fn pjrt_knn_frag(
+        test: &RValue,
+        train_x: &RValue,
+        train_y: &RValue,
+        tb: usize,
+        k: usize,
+    ) -> Result<(RValue, RValue)> {
+        runtime::with_engine(|eng| {
         let t = tensor::matrix_to_f32_literal(test)?;
         let x = tensor::matrix_to_f32_literal(train_x)?;
         let y = tensor::real_to_f32_literal(train_y)?;
@@ -358,7 +369,7 @@ fn pjrt_knn_frag(
     })
 }
 
-fn pjrt_knn_merge(
+pub(super) fn pjrt_knn_merge(
     d1: &RValue,
     l1: &RValue,
     d2: &RValue,
@@ -379,7 +390,7 @@ fn pjrt_knn_merge(
     })
 }
 
-fn pjrt_knn_classify(labels: &RValue, tb: usize, k: usize) -> Result<RValue> {
+pub(super) fn pjrt_knn_classify(labels: &RValue, tb: usize, k: usize) -> Result<RValue> {
     runtime::with_engine(|eng| {
         let l = tensor::int_to_i32_literal_shaped(labels, &[tb, k])?;
         let outs = eng.execute("knn_classify", &[l])?;
@@ -387,7 +398,7 @@ fn pjrt_knn_classify(labels: &RValue, tb: usize, k: usize) -> Result<RValue> {
     })
 }
 
-fn pjrt_kmeans_partial(
+pub(super) fn pjrt_kmeans_partial(
     points: &RValue,
     centroids: &RValue,
     k: usize,
@@ -404,7 +415,7 @@ fn pjrt_kmeans_partial(
     })
 }
 
-fn pjrt_kmeans_update(
+pub(super) fn pjrt_kmeans_update(
     sums: &RValue,
     counts: &RValue,
     old: &RValue,
@@ -420,7 +431,7 @@ fn pjrt_kmeans_update(
     })
 }
 
-fn pjrt_merge_add(task: &'static str, a: &RValue, b: &RValue) -> Result<RValue> {
+pub(super) fn pjrt_merge_add(task: &'static str, a: &RValue, b: &RValue) -> Result<RValue> {
     runtime::with_engine(|eng| {
         let to_lit = |v: &RValue| -> Result<xla::Literal> {
             match v {
@@ -440,7 +451,7 @@ fn pjrt_merge_add(task: &'static str, a: &RValue, b: &RValue) -> Result<RValue> 
     })
 }
 
-fn pjrt_lr_ztz(x: &RValue, p: usize) -> Result<RValue> {
+pub(super) fn pjrt_lr_ztz(x: &RValue, p: usize) -> Result<RValue> {
     runtime::with_engine(|eng| {
         let lx = tensor::matrix_to_f32_literal(x)?;
         let outs = eng.execute("lr_ztz", &[lx])?;
@@ -448,7 +459,7 @@ fn pjrt_lr_ztz(x: &RValue, p: usize) -> Result<RValue> {
     })
 }
 
-fn pjrt_lr_zty(x: &RValue, y: &RValue) -> Result<RValue> {
+pub(super) fn pjrt_lr_zty(x: &RValue, y: &RValue) -> Result<RValue> {
     runtime::with_engine(|eng| {
         let lx = tensor::matrix_to_f32_literal(x)?;
         let ly = tensor::real_to_f32_literal(y)?;
@@ -457,7 +468,7 @@ fn pjrt_lr_zty(x: &RValue, y: &RValue) -> Result<RValue> {
     })
 }
 
-fn pjrt_lr_solve(ztz: &RValue, zty: &RValue) -> Result<RValue> {
+pub(super) fn pjrt_lr_solve(ztz: &RValue, zty: &RValue) -> Result<RValue> {
     runtime::with_engine(|eng| {
         let a = tensor::matrix_to_f32_literal(ztz)?;
         let b = tensor::real_to_f32_literal(zty)?;
@@ -466,7 +477,7 @@ fn pjrt_lr_solve(ztz: &RValue, zty: &RValue) -> Result<RValue> {
     })
 }
 
-fn pjrt_lr_predict(x: &RValue, beta: &RValue) -> Result<RValue> {
+pub(super) fn pjrt_lr_predict(x: &RValue, beta: &RValue) -> Result<RValue> {
     runtime::with_engine(|eng| {
         let lx = tensor::matrix_to_f32_literal(x)?;
         let lb = tensor::real_to_f32_literal(beta)?;
@@ -474,12 +485,89 @@ fn pjrt_lr_predict(x: &RValue, beta: &RValue) -> Result<RValue> {
         tensor::literal_to_real(&outs[0])
     })
 }
+} // mod pjrt_bodies (feature = "pjrt")
+
+/// Stubs with matching signatures so the task tables compile without the
+/// `xla` dependency; unreachable in practice because `Backend::auto()`
+/// reports artifacts unavailable when the feature is off.
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_bodies {
+    use super::*;
+
+    fn off<T>() -> Result<T> {
+        anyhow::bail!("PJRT support not compiled in (enable the `pjrt` feature)")
+    }
+
+    pub(super) fn pjrt_knn_frag(
+        _test: &RValue,
+        _train_x: &RValue,
+        _train_y: &RValue,
+        _tb: usize,
+        _k: usize,
+    ) -> Result<(RValue, RValue)> {
+        off()
+    }
+
+    pub(super) fn pjrt_knn_merge(
+        _d1: &RValue,
+        _l1: &RValue,
+        _d2: &RValue,
+        _l2: &RValue,
+        _tb: usize,
+        _k: usize,
+    ) -> Result<(RValue, RValue)> {
+        off()
+    }
+
+    pub(super) fn pjrt_knn_classify(_labels: &RValue, _tb: usize, _k: usize) -> Result<RValue> {
+        off()
+    }
+
+    pub(super) fn pjrt_kmeans_partial(
+        _points: &RValue,
+        _centroids: &RValue,
+        _k: usize,
+        _d: usize,
+    ) -> Result<(RValue, RValue)> {
+        off()
+    }
+
+    pub(super) fn pjrt_kmeans_update(
+        _sums: &RValue,
+        _counts: &RValue,
+        _old: &RValue,
+        _k: usize,
+        _d: usize,
+    ) -> Result<RValue> {
+        off()
+    }
+
+    pub(super) fn pjrt_merge_add(_task: &'static str, _a: &RValue, _b: &RValue) -> Result<RValue> {
+        off()
+    }
+
+    pub(super) fn pjrt_lr_ztz(_x: &RValue, _p: usize) -> Result<RValue> {
+        off()
+    }
+
+    pub(super) fn pjrt_lr_zty(_x: &RValue, _y: &RValue) -> Result<RValue> {
+        off()
+    }
+
+    pub(super) fn pjrt_lr_solve(_ztz: &RValue, _zty: &RValue) -> Result<RValue> {
+        off()
+    }
+
+    pub(super) fn pjrt_lr_predict(_x: &RValue, _beta: &RValue) -> Result<RValue> {
+        off()
+    }
+}
 
 // ---------------------------------------------------------------------------
 // Task definition tables (planner type name -> body).
 // ---------------------------------------------------------------------------
 
-fn arg_u64(args: &[RValue], i: usize) -> Result<u64> {
+fn arg_u64(args: &[Arc<RValue>], i: usize) -> Result<u64> {
     args[i]
         .as_f64()
         .map(|x| x as u64)
@@ -512,8 +600,8 @@ pub fn knn_task_defs(s: Shapes, backend: Backend) -> Vec<(&'static str, TaskDef)
             "KNN_frag",
             TaskDef::new("KNN_frag", 3, move |a| {
                 let (dd, ll) = match backend {
-                    Backend::Pjrt => pjrt_knn_frag(&a[0], &a[1], &a[2], tb, k)?,
-                    Backend::Native => native_knn_frag(&a[0], &a[1], &a[2], k)?,
+                    Backend::Pjrt => pjrt_knn_frag(a[0].as_ref(), a[1].as_ref(), a[2].as_ref(), tb, k)?,
+                    Backend::Native => native_knn_frag(a[0].as_ref(), a[1].as_ref(), a[2].as_ref(), k)?,
                 };
                 Ok(vec![dd, ll])
             })
@@ -523,8 +611,8 @@ pub fn knn_task_defs(s: Shapes, backend: Backend) -> Vec<(&'static str, TaskDef)
             "KNN_merge",
             TaskDef::new("KNN_merge", 4, move |a| {
                 let (dd, ll) = match backend {
-                    Backend::Pjrt => pjrt_knn_merge(&a[0], &a[1], &a[2], &a[3], tb, k)?,
-                    Backend::Native => native_knn_merge(&a[0], &a[1], &a[2], &a[3])?,
+                    Backend::Pjrt => pjrt_knn_merge(a[0].as_ref(), a[1].as_ref(), a[2].as_ref(), a[3].as_ref(), tb, k)?,
+                    Backend::Native => native_knn_merge(a[0].as_ref(), a[1].as_ref(), a[2].as_ref(), a[3].as_ref())?,
                 };
                 Ok(vec![dd, ll])
             })
@@ -534,8 +622,8 @@ pub fn knn_task_defs(s: Shapes, backend: Backend) -> Vec<(&'static str, TaskDef)
             "KNN_classify",
             TaskDef::new("KNN_classify", 1, move |a| {
                 let out = match backend {
-                    Backend::Pjrt => pjrt_knn_classify(&a[0], tb, k)?,
-                    Backend::Native => native_knn_classify(&a[0], tb, k, classes)?,
+                    Backend::Pjrt => pjrt_knn_classify(a[0].as_ref(), tb, k)?,
+                    Backend::Native => native_knn_classify(a[0].as_ref(), tb, k, classes)?,
                 };
                 Ok(vec![out])
             }),
@@ -557,8 +645,8 @@ pub fn kmeans_task_defs(s: Shapes, backend: Backend) -> Vec<(&'static str, TaskD
             "partial_sum",
             TaskDef::new("partial_sum", 2, move |a| {
                 let (sums, counts) = match backend {
-                    Backend::Pjrt => pjrt_kmeans_partial(&a[0], &a[1], k, d)?,
-                    Backend::Native => native_kmeans_partial(&a[0], &a[1])?,
+                    Backend::Pjrt => pjrt_kmeans_partial(a[0].as_ref(), a[1].as_ref(), k, d)?,
+                    Backend::Native => native_kmeans_partial(a[0].as_ref(), a[1].as_ref())?,
                 };
                 Ok(vec![sums, counts])
             })
@@ -569,11 +657,11 @@ pub fn kmeans_task_defs(s: Shapes, backend: Backend) -> Vec<(&'static str, TaskD
             TaskDef::new("merge", 4, move |a| {
                 let (s2, c2) = match backend {
                     Backend::Pjrt => (
-                        pjrt_merge_add("merge_add2_kmsums", &a[0], &a[2])?,
-                        pjrt_merge_add("merge_add2_kmcounts", &a[1], &a[3])?,
+                        pjrt_merge_add("merge_add2_kmsums", a[0].as_ref(), a[2].as_ref())?,
+                        pjrt_merge_add("merge_add2_kmcounts", a[1].as_ref(), a[3].as_ref())?,
                     ),
                     Backend::Native => {
-                        (elementwise_add(&a[0], &a[2])?, elementwise_add(&a[1], &a[3])?)
+                        (elementwise_add(a[0].as_ref(), a[2].as_ref())?, elementwise_add(a[1].as_ref(), a[3].as_ref())?)
                     }
                 };
                 Ok(vec![s2, c2])
@@ -584,8 +672,8 @@ pub fn kmeans_task_defs(s: Shapes, backend: Backend) -> Vec<(&'static str, TaskD
             "update_centroids",
             TaskDef::new("update_centroids", 3, move |a| {
                 let out = match backend {
-                    Backend::Pjrt => pjrt_kmeans_update(&a[0], &a[1], &a[2], k, d)?,
-                    Backend::Native => native_kmeans_update(&a[0], &a[1], &a[2])?,
+                    Backend::Pjrt => pjrt_kmeans_update(a[0].as_ref(), a[1].as_ref(), a[2].as_ref(), k, d)?,
+                    Backend::Native => native_kmeans_update(a[0].as_ref(), a[1].as_ref(), a[2].as_ref())?,
                 };
                 Ok(vec![out])
             }),
@@ -609,9 +697,9 @@ pub fn linreg_task_defs(s: Shapes, backend: Backend) -> Vec<(&'static str, TaskD
             "partial_ztz",
             TaskDef::new("partial_ztz", 1, move |a| {
                 let out = match backend {
-                    Backend::Pjrt => pjrt_lr_ztz(&a[0], p)?,
+                    Backend::Pjrt => pjrt_lr_ztz(a[0].as_ref(), p)?,
                     Backend::Native => {
-                        let x = rmat_to_native(&a[0])?;
+                        let x = rmat_to_native(a[0].as_ref())?;
                         native_to_rmat(&blas::syrk_t(&x))
                     }
                 };
@@ -622,10 +710,10 @@ pub fn linreg_task_defs(s: Shapes, backend: Backend) -> Vec<(&'static str, TaskD
             "partial_zty",
             TaskDef::new("partial_zty", 2, move |a| {
                 let out = match backend {
-                    Backend::Pjrt => pjrt_lr_zty(&a[0], &a[1])?,
+                    Backend::Pjrt => pjrt_lr_zty(a[0].as_ref(), a[1].as_ref())?,
                     Backend::Native => {
-                        let x = rmat_to_native(&a[0])?;
-                        let y = real_vec_f32(&a[1])?;
+                        let x = rmat_to_native(a[0].as_ref())?;
+                        let y = real_vec_f32(a[1].as_ref())?;
                         RValue::Real(
                             blas::gemv_t(&x, &y)?.into_iter().map(|v| v as f64).collect(),
                         )
@@ -638,8 +726,8 @@ pub fn linreg_task_defs(s: Shapes, backend: Backend) -> Vec<(&'static str, TaskD
             "merge_ztz",
             TaskDef::new("merge_ztz", 2, move |a| {
                 let out = match backend {
-                    Backend::Pjrt => pjrt_merge_add("merge_add2_ztz", &a[0], &a[1])?,
-                    Backend::Native => elementwise_add(&a[0], &a[1])?,
+                    Backend::Pjrt => pjrt_merge_add("merge_add2_ztz", a[0].as_ref(), a[1].as_ref())?,
+                    Backend::Native => elementwise_add(a[0].as_ref(), a[1].as_ref())?,
                 };
                 Ok(vec![out])
             }),
@@ -648,8 +736,8 @@ pub fn linreg_task_defs(s: Shapes, backend: Backend) -> Vec<(&'static str, TaskD
             "merge_zty",
             TaskDef::new("merge_zty", 2, move |a| {
                 let out = match backend {
-                    Backend::Pjrt => pjrt_merge_add("merge_add2_zty", &a[0], &a[1])?,
-                    Backend::Native => elementwise_add(&a[0], &a[1])?,
+                    Backend::Pjrt => pjrt_merge_add("merge_add2_zty", a[0].as_ref(), a[1].as_ref())?,
+                    Backend::Native => elementwise_add(a[0].as_ref(), a[1].as_ref())?,
                 };
                 Ok(vec![out])
             }),
@@ -658,10 +746,10 @@ pub fn linreg_task_defs(s: Shapes, backend: Backend) -> Vec<(&'static str, TaskD
             "compute_model_parameters",
             TaskDef::new("compute_model_parameters", 2, move |a| {
                 let out = match backend {
-                    Backend::Pjrt => pjrt_lr_solve(&a[0], &a[1])?,
+                    Backend::Pjrt => pjrt_lr_solve(a[0].as_ref(), a[1].as_ref())?,
                     Backend::Native => {
-                        let ztz = rmat_to_native(&a[0])?;
-                        let zty = real_vec_f32(&a[1])?;
+                        let ztz = rmat_to_native(a[0].as_ref())?;
+                        let zty = real_vec_f32(a[1].as_ref())?;
                         RValue::Real(
                             blas::solve_normal_eqs(&ztz, &zty, 1e-6)?
                                 .into_iter()
@@ -690,10 +778,10 @@ pub fn linreg_task_defs(s: Shapes, backend: Backend) -> Vec<(&'static str, TaskD
             "compute_prediction",
             TaskDef::new("compute_prediction", 2, move |a| {
                 let out = match backend {
-                    Backend::Pjrt => pjrt_lr_predict(&a[0], &a[1])?,
+                    Backend::Pjrt => pjrt_lr_predict(a[0].as_ref(), a[1].as_ref())?,
                     Backend::Native => {
-                        let x = rmat_to_native(&a[0])?;
-                        let b = real_vec_f32(&a[1])?;
+                        let x = rmat_to_native(a[0].as_ref())?;
+                        let b = real_vec_f32(a[1].as_ref())?;
                         RValue::Real(
                             blas::gemv(&x, &b)?.into_iter().map(|v| v as f64).collect(),
                         )

@@ -61,6 +61,23 @@ pub fn record_result(bench: &str, fields: Vec<(&str, Json)>) {
     }
 }
 
+/// Write a named bench summary as pretty JSON to `BENCH_<name>.json` in the
+/// crate root (committed alongside the code so the perf trajectory is
+/// tracked in-repo). Entries are the same `(key, value)` rows that
+/// [`record_result`] appends to the JSONL stream.
+pub fn write_json_summary(name: &str, entries: Vec<Json>) {
+    let doc = obj(vec![
+        ("bench", Json::Str(name.to_string())),
+        ("results", Json::Arr(entries)),
+    ]);
+    let path = format!("BENCH_{name}.json");
+    if let Err(e) = std::fs::write(&path, doc.to_string_pretty() + "\n") {
+        eprintln!("[bench] could not write {path}: {e}");
+    } else {
+        println!("  wrote {path}");
+    }
+}
+
 /// Standard header for a bench binary.
 pub fn banner(title: &str, detail: &str) {
     println!("\n=== {title} ===");

@@ -1,0 +1,455 @@
+//! The in-memory data plane: a byte-budgeted cache of produced values.
+//!
+//! COMPSs (and the seed version of this runtime) passes *every* task
+//! parameter through a serialized file, even when producer and consumer are
+//! threads of the same process on the same node. The paper's efficiency
+//! argument (§4) rests on runtime overhead staying small relative to task
+//! granularity; for fine-grained tasks the encode→write→read→decode
+//! round-trip *is* the overhead. The [`DataStore`] removes it: produced
+//! values are kept as `Arc<RValue>` keyed by their `dXvY` [`DataKey`], so a
+//! node-local consumer receives a zero-copy handle and the configured codec
+//! runs only at *spill boundaries*:
+//!
+//! * **memory pressure** — the store holds at most `budget` bytes; overflow
+//!   evicts victims (LRU or largest-first per [`SpillPolicy`]) which are
+//!   serialized to the workdir exactly like the file plane would have done;
+//! * **cross-node transfer** — a consumer on another (emulated) node forces
+//!   the value through the codec, keeping multi-node runs honest;
+//! * **explicit fetch** — `wait_on` of an evicted value reloads it from its
+//!   spill file.
+//!
+//! A budget of 0 disables the store entirely, restoring the seed's
+//! byte-identical file-based behavior (every codec round-trip property test
+//! runs against that path unchanged).
+//!
+//! ## Concurrency protocol
+//!
+//! The store is a sharded-lock-free *consumer* but a mutexed *container*:
+//! `get` clones an `Arc` under a short lock; eviction is two-phase so a
+//! value is always reachable. `put` selects victims and marks them
+//! `spilling` (still readable), the caller serializes them to disk *outside*
+//! the lock, publishes the file path in the
+//! [`VersionTable`](super::registry::VersionTable), and only then calls
+//! [`DataStore::finish_spill`] to drop the cached copy. A concurrent reader
+//! therefore always finds the value in the store or a published path —
+//! never neither.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::registry::DataKey;
+use crate::value::RValue;
+
+/// Which victim the store picks when over budget.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpillPolicy {
+    /// Least-recently-used first (default) — favors hot working sets.
+    Lru,
+    /// Largest entry first — frees the budget in the fewest codec calls.
+    Largest,
+}
+
+impl SpillPolicy {
+    /// Parse a config string (`"lru"` | `"largest"`).
+    pub fn by_name(name: &str) -> Option<SpillPolicy> {
+        match name {
+            "lru" => Some(SpillPolicy::Lru),
+            "largest" => Some(SpillPolicy::Largest),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpillPolicy::Lru => "lru",
+            SpillPolicy::Largest => "largest",
+        }
+    }
+}
+
+/// A value selected for spilling: still readable in the store until the
+/// caller publishes its file and calls [`DataStore::finish_spill`].
+pub struct SpillVictim {
+    pub key: DataKey,
+    pub value: Arc<RValue>,
+    /// The value already has an up-to-date spill file (it was reloaded from
+    /// one); the caller may skip the codec and just `finish_spill`.
+    pub has_file: bool,
+}
+
+struct Entry {
+    value: Arc<RValue>,
+    bytes: u64,
+    last_used: u64,
+    /// Selected as a spill victim; excluded from further selection and from
+    /// the resident-byte total, but still served by `get`.
+    spilling: bool,
+    /// An up-to-date serialized file for this version already exists.
+    has_file: bool,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<DataKey, Entry>,
+    /// Bytes held by entries not currently being spilled.
+    resident: u64,
+}
+
+/// The in-memory object store. All methods take `&self`; a budget of 0
+/// makes every operation a cheap no-op (file plane).
+pub struct DataStore {
+    budget: u64,
+    policy: SpillPolicy,
+    tick: AtomicU64,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    spills: AtomicU64,
+    spill_bytes: AtomicU64,
+}
+
+impl DataStore {
+    pub fn new(budget: u64, policy: SpillPolicy) -> DataStore {
+        DataStore {
+            budget,
+            policy,
+            tick: AtomicU64::new(0),
+            inner: Mutex::new(Inner::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            spills: AtomicU64::new(0),
+            spill_bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// A disabled store (budget 0): the runtime uses the file plane only.
+    pub fn disabled() -> DataStore {
+        DataStore::new(0, SpillPolicy::Lru)
+    }
+
+    /// Is the in-memory plane active?
+    pub fn enabled(&self) -> bool {
+        self.budget > 0
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Insert a produced value and return any victims that must be spilled
+    /// to stay within budget (possibly including the value just inserted,
+    /// when it alone exceeds the budget). The caller must serialize each
+    /// victim, publish its path, then call [`DataStore::finish_spill`].
+    ///
+    /// `has_file` marks values reloaded from an existing spill file, whose
+    /// eviction is free.
+    #[must_use = "victims must be spilled and finish_spill()ed"]
+    pub fn put(&self, key: DataKey, value: Arc<RValue>, has_file: bool) -> Vec<SpillVictim> {
+        if !self.enabled() {
+            return Vec::new();
+        }
+        let bytes = value.byte_size() as u64;
+        let now = self.tick.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        let entry = Entry {
+            value,
+            bytes,
+            last_used: now,
+            spilling: false,
+            has_file,
+        };
+        if let Some(old) = inner.map.insert(key, entry) {
+            // Re-insert of the same version (e.g. a reload racing another
+            // reader): keep byte accounting consistent.
+            if !old.spilling {
+                inner.resident = inner.resident.saturating_sub(old.bytes);
+            }
+        }
+        inner.resident += bytes;
+
+        let mut victims = Vec::new();
+        while inner.resident > self.budget {
+            let pick = match self.policy {
+                SpillPolicy::Lru => inner
+                    .map
+                    .iter()
+                    .filter(|(_, e)| !e.spilling)
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(k, _)| *k),
+                SpillPolicy::Largest => inner
+                    .map
+                    .iter()
+                    .filter(|(_, e)| !e.spilling)
+                    .max_by_key(|(_, e)| e.bytes)
+                    .map(|(k, _)| *k),
+            };
+            let Some(k) = pick else { break };
+            let e = inner.map.get_mut(&k).expect("victim entry");
+            e.spilling = true;
+            inner.resident = inner.resident.saturating_sub(e.bytes);
+            victims.push(SpillVictim {
+                key: k,
+                value: Arc::clone(&e.value),
+                has_file: e.has_file,
+            });
+        }
+        victims
+    }
+
+    /// Zero-copy lookup; bumps recency and the hit/miss counters.
+    pub fn get(&self, key: DataKey) -> Option<Arc<RValue>> {
+        if !self.enabled() {
+            return None;
+        }
+        let now = self.tick.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        match inner.map.get_mut(&key) {
+            Some(e) => {
+                e.last_used = now;
+                let v = Arc::clone(&e.value);
+                drop(inner);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            None => {
+                drop(inner);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Peek without touching recency or counters (tests, stats).
+    pub fn contains(&self, key: DataKey) -> bool {
+        self.enabled() && self.inner.lock().unwrap().map.contains_key(&key)
+    }
+
+    /// Drop a spilled entry once its file path is published. Counts the
+    /// spill (unless the file already existed, i.e. a free eviction). If a
+    /// concurrent `put` re-inserted a fresh (non-spilling) entry for the
+    /// same version in the meantime — a cross-node reload racing the
+    /// eviction — that entry is left in place: it is separately accounted
+    /// in `resident` and removing it would both leak the counter and drop
+    /// a live cache line.
+    pub fn finish_spill(&self, key: DataKey, wrote_file: bool, file_bytes: u64) {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if inner.map.get(&key).map(|e| e.spilling).unwrap_or(false) {
+                inner.map.remove(&key);
+            }
+        }
+        if wrote_file {
+            self.spills.fetch_add(1, Ordering::Relaxed);
+            self.spill_bytes.fetch_add(file_bytes, Ordering::Relaxed);
+        }
+    }
+
+    /// Undo a victim selection after a failed spill write, so the value
+    /// stays reachable and evictable.
+    pub fn abort_spill(&self, key: DataKey) {
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        if let Some(e) = inner.map.get_mut(&key) {
+            if e.spilling {
+                e.spilling = false;
+                inner.resident += e.bytes;
+            }
+        }
+    }
+
+    /// Mark that an up-to-date serialized file now exists for a cached
+    /// value (spill-for-transfer keeps the value resident).
+    pub fn note_file(&self, key: DataKey) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(e) = inner.map.get_mut(&key) {
+            e.has_file = true;
+        }
+    }
+
+    pub fn resident_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().resident
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hit_count(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn miss_count(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn spill_count(&self) -> u64 {
+        self.spills.load(Ordering::Relaxed)
+    }
+
+    pub fn spilled_bytes(&self) -> u64 {
+        self.spill_bytes.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::registry::DataId;
+
+    fn key(d: u64, v: u32) -> DataKey {
+        DataKey {
+            data: DataId(d),
+            version: v,
+        }
+    }
+
+    fn val(n: usize) -> Arc<RValue> {
+        Arc::new(RValue::Real(vec![1.0; n]))
+    }
+
+    #[test]
+    fn disabled_store_is_inert() {
+        let s = DataStore::disabled();
+        assert!(!s.enabled());
+        assert!(s.put(key(1, 1), val(8), false).is_empty());
+        assert!(s.get(key(1, 1)).is_none());
+        assert_eq!(s.len(), 0);
+        // A disabled store records no traffic at all.
+        assert_eq!(s.hit_count() + s.miss_count(), 0);
+    }
+
+    #[test]
+    fn put_get_roundtrip_is_zero_copy() {
+        let s = DataStore::new(1 << 20, SpillPolicy::Lru);
+        let v = val(10);
+        assert!(s.put(key(1, 1), Arc::clone(&v), false).is_empty());
+        let got = s.get(key(1, 1)).unwrap();
+        assert!(Arc::ptr_eq(&v, &got), "get must return the same allocation");
+        assert_eq!(s.hit_count(), 1);
+        assert!(s.get(key(9, 9)).is_none());
+        assert_eq!(s.miss_count(), 1);
+    }
+
+    #[test]
+    fn lru_evicts_the_oldest_untouched_entry() {
+        // Budget fits two 80-byte vectors; the third insert evicts the LRU.
+        let s = DataStore::new(170, SpillPolicy::Lru);
+        assert!(s.put(key(1, 1), val(10), false).is_empty());
+        assert!(s.put(key(2, 1), val(10), false).is_empty());
+        // Touch 1 so 2 becomes the LRU victim.
+        s.get(key(1, 1)).unwrap();
+        let victims = s.put(key(3, 1), val(10), false);
+        assert_eq!(victims.len(), 1);
+        assert_eq!(victims[0].key, key(2, 1));
+        // Victim is still readable until finish_spill (two-phase eviction).
+        assert!(s.get(key(2, 1)).is_some());
+        s.finish_spill(key(2, 1), true, 80);
+        assert!(s.get(key(2, 1)).is_none());
+        assert_eq!(s.spill_count(), 1);
+        assert_eq!(s.spilled_bytes(), 80);
+        assert!(s.resident_bytes() <= 170);
+    }
+
+    #[test]
+    fn largest_policy_evicts_by_size() {
+        let s = DataStore::new(200, SpillPolicy::Largest);
+        assert!(s.put(key(1, 1), val(2), false).is_empty()); // 16 B
+        assert!(s.put(key(2, 1), val(20), false).is_empty()); // 160 B
+        let victims = s.put(key(3, 1), val(5), false); // 40 B -> over budget
+        assert_eq!(victims.len(), 1);
+        assert_eq!(victims[0].key, key(2, 1), "largest entry goes first");
+        s.finish_spill(key(2, 1), true, 160);
+    }
+
+    #[test]
+    fn oversized_value_spills_itself() {
+        let s = DataStore::new(64, SpillPolicy::Lru);
+        let victims = s.put(key(1, 1), val(100), false); // 800 B > budget
+        assert_eq!(victims.len(), 1);
+        assert_eq!(victims[0].key, key(1, 1));
+        // Still readable until the spill completes.
+        assert!(s.get(key(1, 1)).is_some());
+        s.finish_spill(key(1, 1), true, 800);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn abort_spill_restores_the_entry() {
+        let s = DataStore::new(100, SpillPolicy::Lru);
+        let victims = s.put(key(1, 1), val(50), false);
+        assert_eq!(victims.len(), 1);
+        s.abort_spill(key(1, 1));
+        assert_eq!(s.resident_bytes(), 400);
+        // The entry is a candidate again on the next overflow.
+        let victims = s.put(key(2, 1), val(1), false);
+        assert!(victims.iter().any(|v| v.key == key(1, 1)));
+        for v in victims {
+            s.finish_spill(v.key, true, 1);
+        }
+    }
+
+    #[test]
+    fn reloaded_entries_evict_without_recount() {
+        let s = DataStore::new(100, SpillPolicy::Lru);
+        let victims = s.put(key(1, 1), val(50), true); // reloaded from file
+        assert_eq!(victims.len(), 1);
+        assert!(victims[0].has_file, "reload carries the has_file mark");
+        s.finish_spill(key(1, 1), false, 0); // free eviction: no codec ran
+        assert_eq!(s.spill_count(), 0);
+    }
+
+    #[test]
+    fn versions_are_distinct_keys() {
+        let s = DataStore::new(1 << 20, SpillPolicy::Lru);
+        let v1 = val(1);
+        let v2 = Arc::new(RValue::Real(vec![2.0]));
+        assert!(s.put(key(1, 1), Arc::clone(&v1), false).is_empty());
+        assert!(s.put(key(1, 2), Arc::clone(&v2), false).is_empty());
+        assert!(Arc::ptr_eq(&s.get(key(1, 1)).unwrap(), &v1));
+        assert!(Arc::ptr_eq(&s.get(key(1, 2)).unwrap(), &v2));
+    }
+
+    #[test]
+    fn concurrent_produce_consume_across_versions() {
+        // N producer threads publish distinct versions while N consumers
+        // spin until they observe each one; the store must never lose or
+        // mix up a version. Budget is tight enough to force evictions.
+        let s = Arc::new(DataStore::new(4096, SpillPolicy::Lru));
+        let versions: u32 = 40;
+        let data: u64 = 7;
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let s = Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                for v in 1..=versions {
+                    if (u64::from(v) % 4) == t {
+                        let value = Arc::new(RValue::Real(vec![f64::from(v); 32]));
+                        for victim in s.put(key(data, v), value, false) {
+                            // Test stand-in for the runtime's codec spill.
+                            s.finish_spill(victim.key, true, victim.value.byte_size() as u64);
+                        }
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Every surviving resident version must carry its own payload.
+        let mut seen = 0;
+        for v in 1..=versions {
+            if let Some(got) = s.get(key(data, v)) {
+                assert_eq!(got.as_real().unwrap()[0], f64::from(v), "version {v} mixed up");
+                seen += 1;
+            }
+        }
+        assert!(seen > 0, "some versions must remain resident");
+        assert!(s.resident_bytes() <= 4096 + 32 * 8);
+    }
+}

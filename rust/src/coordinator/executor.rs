@@ -5,84 +5,149 @@
 //! application execution time" (§3.2). Here each executor is a thread,
 //! pinned logically to a (node, slot) pair. The loop:
 //!
-//! 1. waits for the scheduler to offer a ready task for its node,
-//! 2. deserializes the task's input files through the configured codec
-//!    (recording a transfer if the file was produced on another node),
-//! 3. executes the task body (with failure injection if configured),
-//! 4. serializes the outputs and marks them available, and
-//! 5. completes the task, which unblocks dependents and waiters —
-//!    or, on failure, resubmits it within the retry budget.
+//! 1. pops a ready task from its node's shard of the dispatch fabric
+//!    (stealing from other shards before parking — no global lock),
+//! 2. flips the task to Running and grabs its metadata `Arc` — the only
+//!    touch of the control lock before execution; locality and paths are
+//!    resolved afterwards against the sharded version table,
+//! 3. gathers inputs: zero-copy `Arc` handles from the in-memory store for
+//!    node-local values, codec reads for file-plane values, spilled values,
+//!    and cross-node transfers (which force the value through the codec,
+//!    as on a real cluster),
+//! 4. executes the task body (with failure injection if configured),
+//! 5. publishes the outputs — into the store (memory plane, spilling under
+//!    pressure) or through `Codec::write_file` (file plane, byte-identical
+//!    to the original runtime) — and completes the task, which unblocks
+//!    dependents and waiters; on failure it resubmits within the retry
+//!    budget.
 
 use std::sync::Arc;
 
 use crate::coordinator::dag::TaskState;
-use crate::coordinator::runtime::{Claim, Shared};
+use crate::coordinator::registry::DataKey;
+use crate::coordinator::runtime::{spill_victims, Core, Shared, TaskMeta};
 use crate::trace::{EventKind, WorkerId};
 use crate::value::RValue;
 
+/// Fetch an available value for a node-local consumer: a zero-copy handle
+/// when the store holds it, a codec reload of its spill file otherwise
+/// (re-caching the result). Returns `(value, decoded, file_bytes)`.
+///
+/// Only called for values already marked available, whose producer always
+/// publishes the store entry or the spill path first — the yield loop can
+/// only spin across the instants of a concurrent eviction.
+pub(crate) fn fetch_resident(
+    shared: &Shared,
+    key: DataKey,
+) -> anyhow::Result<(Arc<RValue>, bool, u64)> {
+    loop {
+        if let Some(v) = shared.store.get(key) {
+            return Ok((v, false, 0));
+        }
+        if let Some(path) = shared.table.path_of(key) {
+            let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+            let v = Arc::new(shared.codec.read_file(&path)?);
+            let victims = shared.store.put(key, Arc::clone(&v), true);
+            spill_victims(shared, victims);
+            return Ok((v, true, bytes));
+        }
+        std::thread::yield_now();
+    }
+}
+
+/// Make sure a serialized file exists for `key` (cross-node transfer
+/// boundary): publish a spill file from the store if none does.
+fn ensure_file(shared: &Shared, key: DataKey) -> anyhow::Result<std::path::PathBuf> {
+    loop {
+        if let Some(p) = shared.table.path_of(key) {
+            return Ok(p);
+        }
+        if let Some(v) = shared.store.get(key) {
+            let (bytes, path) = crate::coordinator::runtime::write_spill_file(shared, key, &v)?;
+            shared.table.mark_spilled(key, bytes, path.clone());
+            shared.store.note_file(key);
+            return Ok(path);
+        }
+        // Mid-eviction: the spill path is about to be published.
+        std::thread::yield_now();
+    }
+}
+
+/// Gather one input. Returns `(value, decoded, file_bytes)` where
+/// `decoded` marks an actual codec invocation (drives the Deserialize
+/// trace event and byte stats).
+fn acquire_input(
+    shared: &Shared,
+    key: DataKey,
+    was_local: bool,
+) -> anyhow::Result<(Arc<RValue>, bool, u64)> {
+    if !shared.store.enabled() {
+        // File plane: byte-identical to the seed runtime.
+        let path = shared.path_for(key);
+        let v = shared.codec.read_file(&path)?;
+        let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        return Ok((Arc::new(v), true, bytes));
+    }
+    if was_local {
+        return fetch_resident(shared, key);
+    }
+    // Cross-node consumption is a spill boundary: the value crosses the
+    // codec even when it is memory-resident, keeping the emulated transfer
+    // honest. The decoded replica is cached for later same-node consumers.
+    let path = ensure_file(shared, key)?;
+    let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    let v = Arc::new(shared.codec.read_file(&path)?);
+    let victims = shared.store.put(key, Arc::clone(&v), true);
+    spill_victims(shared, victims);
+    Ok((v, true, bytes))
+}
+
 /// Body of every persistent worker thread.
 pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
-    loop {
-        // ---- acquire work ------------------------------------------------
-        let claim: Claim = {
+    // `pop` parks the thread between tasks and returns None at shutdown.
+    while let Some(id) = shared.ready.pop(wid.node) {
+        // ---- claim: the control lock covers only the state flip and an
+        // Arc clone of the metadata (no per-input work under the lock).
+        let meta: Arc<TaskMeta> = {
             let mut core = shared.core.lock().unwrap();
-            loop {
-                if let Some(id) = core.scheduler.pop_for(wid.node) {
-                    core.graph.start(id);
-                    // Locality accounting is resolved here, under the claim
-                    // lock, instead of re-locking per input on the read
-                    // path (2 lock round-trips per input saved — see
-                    // EXPERIMENTS.md §Perf).
-                    let input_keys = core.meta[&id].inputs.clone();
-                    let inputs: Vec<(crate::coordinator::registry::DataKey, std::path::PathBuf, bool)> =
-                        input_keys
-                            .iter()
-                            .map(|k| {
-                                let local = core.registry.is_local(*k, wid.node);
-                                if !local {
-                                    core.registry.add_location(*k, wid.node);
-                                }
-                                (*k, shared.path_for(*k), local)
-                            })
-                            .collect();
-                    let meta = &core.meta[&id];
-                    // Only return-value / INOUT-new versions are produced
-                    // here; `outputs` already holds exactly those.
-                    let claim = Claim {
-                        id,
-                        spec: Arc::clone(&meta.spec),
-                        inputs,
-                        outputs: meta.outputs.clone(),
-                    };
-                    break claim;
-                }
-                if core.shutdown {
-                    return;
-                }
-                core = shared.cv_work.wait(core).unwrap();
-            }
+            core.graph.start(id);
+            Arc::clone(&core.meta[&id])
         };
+        // Locality accounting against the sharded table, outside all locks.
+        let inputs: Vec<(DataKey, bool)> = meta
+            .inputs
+            .iter()
+            .map(|k| {
+                let local = shared.table.is_local(*k, wid.node);
+                if !local {
+                    shared.table.add_location(*k, wid.node);
+                }
+                (*k, local)
+            })
+            .collect();
 
-        // ---- deserialize inputs (outside the lock) ------------------------
-        let mut args: Vec<RValue> = Vec::with_capacity(claim.inputs.len());
+        // ---- gather inputs ------------------------------------------------
+        let mut args: Vec<Arc<RValue>> = Vec::with_capacity(inputs.len());
         let mut input_bytes = 0u64;
+        let mut decoded_any = false;
         let deser_start = shared.tracer.now();
         let mut io_error: Option<anyhow::Error> = None;
-        for (key, path, was_local) in &claim.inputs {
-            // Locality accounting was resolved at claim time: a read of a
-            // version not resident on this node counts as a transfer (live
-            // mode shares one filesystem, so the "transfer" is free, but
-            // the event keeps live traces comparable with simulated ones).
-            if !was_local {
+        for (key, was_local) in &inputs {
+            // A read of a version not resident on this node counts as a
+            // transfer (live mode shares one address space, so the
+            // "transfer" cost is the codec round-trip; the event keeps
+            // live traces comparable with simulated ones).
+            if !*was_local {
                 let t = shared.tracer.now();
                 shared
                     .tracer
-                    .record_at(wid, EventKind::Transfer, Some(claim.id), t, t);
+                    .record_at(wid, EventKind::Transfer, Some(id), t, t);
             }
-            match shared.codec.read_file(path) {
-                Ok(v) => {
-                    input_bytes += std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+            match acquire_input(&shared, *key, *was_local) {
+                Ok((v, decoded, bytes)) => {
                     args.push(v);
+                    input_bytes += bytes;
+                    decoded_any |= decoded;
                 }
                 Err(e) => {
                     io_error = Some(e.context(format!("deserialize {key}")));
@@ -91,11 +156,11 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
             }
         }
         let deser_end = shared.tracer.now();
-        if !claim.inputs.is_empty() {
+        if decoded_any {
             shared.tracer.record_at(
                 wid,
                 EventKind::Deserialize,
-                Some(claim.id),
+                Some(id),
                 deser_start,
                 deser_end,
             );
@@ -106,40 +171,54 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
         let result: anyhow::Result<Vec<RValue>> = match io_error {
             Some(e) => Err(e),
             None => {
-                if shared.injector.should_fail(&claim.spec.name) {
+                if shared.injector.should_fail(&meta.spec.name) {
                     Err(anyhow::anyhow!(
                         "injected failure in '{}' (attempt on {wid})",
-                        claim.spec.name
+                        meta.spec.name
                     ))
                 } else {
-                    (claim.spec.body)(&args)
+                    (meta.spec.body)(&args)
                 }
             }
         };
+        drop(args);
         let exec_end = shared.tracer.now();
         shared.tracer.record_at(
             wid,
-            EventKind::TaskExec(claim.spec.name.clone()),
-            Some(claim.id),
+            EventKind::TaskExec(meta.spec.name.clone()),
+            Some(id),
             exec_start,
             exec_end,
         );
 
         match result {
             Ok(outputs) => {
-                // ---- serialize outputs (outside the lock) -----------------
+                // ---- publish outputs (outside the control lock) -----------
                 let ser_start = shared.tracer.now();
-                let mut produced = Vec::with_capacity(claim.outputs.len());
                 let mut ser_error: Option<anyhow::Error> = None;
-                if outputs.len() != claim.outputs.len() {
+                let mut produced_bytes = 0u64;
+                let mut encoded_any = false;
+                if outputs.len() != meta.outputs.len() {
                     ser_error = Some(anyhow::anyhow!(
                         "task '{}' returned {} values, declared {}",
-                        claim.spec.name,
+                        meta.spec.name,
                         outputs.len(),
-                        claim.outputs.len()
+                        meta.outputs.len()
                     ));
+                } else if shared.store.enabled() {
+                    // Memory plane: the store takes ownership; the codec
+                    // runs only if memory pressure spills a victim.
+                    for (key, value) in meta.outputs.iter().zip(outputs.into_iter()) {
+                        let value = Arc::new(value);
+                        let nbytes = value.byte_size() as u64;
+                        let victims = shared.store.put(*key, Arc::clone(&value), false);
+                        shared.table.mark_available_memory(*key, wid.node, nbytes);
+                        spill_victims(&shared, victims);
+                    }
                 } else {
-                    for (key, value) in claim.outputs.iter().zip(outputs.iter()) {
+                    // File plane: byte-identical to the seed runtime.
+                    let mut produced = Vec::with_capacity(meta.outputs.len());
+                    for (key, value) in meta.outputs.iter().zip(outputs.iter()) {
                         let path = shared.path_for(*key);
                         match shared.codec.write_file(value, &path) {
                             Ok(()) => {
@@ -153,13 +232,20 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
                             }
                         }
                     }
+                    if ser_error.is_none() {
+                        encoded_any = !produced.is_empty();
+                        for (key, bytes, path) in produced {
+                            shared.table.mark_available(key, wid.node, bytes, path);
+                            produced_bytes += bytes;
+                        }
+                    }
                 }
                 let ser_end = shared.tracer.now();
-                if !claim.outputs.is_empty() {
+                if encoded_any {
                     shared.tracer.record_at(
                         wid,
                         EventKind::Serialize,
-                        Some(claim.id),
+                        Some(id),
                         ser_start,
                         ser_end,
                     );
@@ -167,12 +253,9 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
 
                 let mut core = shared.core.lock().unwrap();
                 if let Some(e) = ser_error {
-                    handle_failure(&shared, &mut core, &claim, wid, e);
+                    handle_failure(&shared, &mut core, id, &meta, wid, e);
                 } else {
-                    for (key, bytes, path) in produced {
-                        core.registry.mark_available(key, wid.node, bytes, path);
-                        core.stats.bytes_serialized += bytes;
-                    }
+                    core.stats.bytes_serialized += produced_bytes;
                     core.stats.bytes_deserialized += input_bytes;
                     core.stats.deserialize_s += deser_end - deser_start;
                     core.stats.serialize_s += ser_end - ser_start;
@@ -180,16 +263,16 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
                     let per = core
                         .stats
                         .per_type
-                        .entry(claim.spec.name.clone())
+                        .entry(meta.spec.name.clone())
                         .or_insert((0, 0.0));
                     per.0 += 1;
                     per.1 += exec_end - exec_start;
                     core.stats.tasks_done += 1;
-                    let newly_ready = core.graph.complete(claim.id);
+                    let newly_ready = core.graph.complete(id);
+                    let core = &mut *core;
                     for t in newly_ready {
-                        core.enqueue_ready(t);
+                        shared.enqueue_ready(core, t);
                     }
-                    shared.cv_work.notify_all();
                     shared.cv_done.notify_all();
                 }
             }
@@ -197,7 +280,7 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
                 let mut core = shared.core.lock().unwrap();
                 core.stats.bytes_deserialized += input_bytes;
                 core.stats.deserialize_s += deser_end - deser_start;
-                handle_failure(&shared, &mut core, &claim, wid, e);
+                handle_failure(&shared, &mut core, id, &meta, wid, e);
             }
         }
     }
@@ -206,39 +289,34 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
 /// Failure path: resubmit within budget, else fail + cancel downstream.
 fn handle_failure(
     shared: &Arc<Shared>,
-    core: &mut crate::coordinator::runtime::Core,
-    claim: &Claim,
+    core: &mut Core,
+    id: crate::coordinator::dag::TaskId,
+    meta: &Arc<TaskMeta>,
     wid: WorkerId,
     err: anyhow::Error,
 ) {
-    let attempts = core
-        .graph
-        .node(claim.id)
-        .map(|n| n.attempts)
-        .unwrap_or(u32::MAX);
+    let attempts = core.graph.node(id).map(|n| n.attempts).unwrap_or(u32::MAX);
     if shared.retry.may_retry(attempts) {
-        // COMPSs-style resubmission: back to the ready queue; any worker
+        // COMPSs-style resubmission: back to the ready queues; any worker
         // (possibly on another node) may pick it up.
         core.stats.resubmissions += 1;
-        core.graph.resubmit(claim.id);
-        core.enqueue_ready(claim.id);
-        shared.cv_work.notify_one();
+        core.graph.resubmit(id);
+        shared.enqueue_ready(core, id);
         eprintln!(
             "[rcompss] task {} '{}' failed on {wid} (attempt {attempts}): {err}; resubmitting",
-            claim.id, claim.spec.name
+            id, meta.spec.name
         );
     } else {
-        let cancelled = core.graph.fail(claim.id);
+        let cancelled = core.graph.fail(id);
         core.stats.tasks_failed += 1;
         core.stats.tasks_cancelled += cancelled.len() as u64;
-        debug_assert_eq!(core.graph.state(claim.id), Some(TaskState::Failed));
+        debug_assert_eq!(core.graph.state(id), Some(TaskState::Failed));
         eprintln!(
             "[rcompss] task {} '{}' failed permanently after {attempts} attempts: {err}; cancelled {} dependents",
-            claim.id,
-            claim.spec.name,
+            id,
+            meta.spec.name,
             cancelled.len()
         );
         shared.cv_done.notify_all();
-        shared.cv_work.notify_all();
     }
 }

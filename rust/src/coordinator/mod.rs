@@ -8,23 +8,59 @@
 //! * [`access`] — parameter directions (IN / OUT / INOUT) and access records;
 //! * [`registry`] — the versioned data registry: every task parameter is a
 //!   `dXvY` datum (data X, version Y), exactly the labels on the paper's
-//!   DAG figures;
+//!   DAG figures, split into a master-side dependency half and a sharded
+//!   worker-side [`registry::VersionTable`];
 //! * [`dag`] — superscalar dependency analysis (RAW/WAR/WAW) and the task
 //!   graph, with DOT export reproducing Figures 2-5;
-//! * [`scheduler`] — pluggable policies: FIFO, LIFO, data-locality
-//!   (the paper cites these as COMPSs' pluggable scheduling policies);
+//! * [`datastore`] — the in-memory zero-copy data plane: produced values
+//!   cached as `Arc<RValue>` with a byte budget and LRU/largest spill;
+//! * [`scheduler`] — pluggable policies: FIFO, LIFO, data-locality, plus
+//!   [`scheduler::ShardedReady`], the per-node dispatch fabric with work
+//!   stealing that the live executor drives;
 //! * [`executor`] — the persistent worker pool (threads) for real local
-//!   execution, with file-based parameter passing through the codecs;
+//!   execution, with memory- or file-based parameter passing;
 //! * [`fault`] — task resubmission on failure and failure injection;
 //! * [`runtime`] — the orchestrator gluing the above behind the API.
 //!
-//! The DAG, registry, and scheduler are *pure* (no threads, no I/O); both
-//! the live executor and the discrete-event simulator (`crate::sim`) drive
-//! the same code, which is what makes the simulated scale-out runs of
-//! Figures 6-9 a faithful extrapolation of the real runtime.
+//! The DAG, registry, and scheduler policies are *pure* (no threads, no
+//! I/O); both the live executor and the discrete-event simulator
+//! (`crate::sim`) drive the same code, which is what makes the simulated
+//! scale-out runs of Figures 6-9 a faithful extrapolation of the real
+//! runtime.
+//!
+//! # Data plane & locking
+//!
+//! The seed runtime funneled every operation — dependency analysis, ready
+//! queues, location tracking, claim resolution — through one global
+//! `Mutex<Core>`, and moved every parameter through a serialized file. Both
+//! were per-task overhead on the dispatch hot path, precisely what the
+//! paper says must stay small relative to task granularity for 70%+
+//! parallel efficiency at 128 cores (§4). The runtime now separates four
+//! concerns with four synchronization domains:
+//!
+//! | Domain | Structure | Who touches it |
+//! |--------|-----------|----------------|
+//! | control (DAG, dependency analysis, metadata, stats) | `Mutex<Core>` + `cv_done` | master on submit/wait; workers only to flip task states |
+//! | dispatch (ready tasks) | [`scheduler::ShardedReady`]: per-node policy shards + park lot | workers pop/steal; submit & completions push |
+//! | location (where each `dXvY` lives) | [`registry::VersionTable`]: 16 `RwLock` shards | workers on every claim/publish, lock-free of control |
+//! | values (the bytes themselves) | [`datastore::DataStore`]: mutexed `Arc<RValue>` cache | producers put, consumers get zero-copy handles |
+//!
+//! Lock ordering: the control lock may be held while touching the leaf
+//! domains (dispatch shards, table shards, store); leaf locks never nest
+//! into each other or back into control. `cv_done` waiters recheck state
+//! guarded by leaves only after a completion has re-acquired the control
+//! lock, which rules out missed wakeups.
+//!
+//! **Data-plane knobs** (`runtime::CoordinatorConfig`): `memory_budget`
+//! (bytes; 0 = file plane, byte-identical to the seed runtime) and `spill`
+//! (`"lru"` | `"largest"`). With the memory plane on, the configured codec
+//! runs only at spill boundaries: memory pressure, cross-node transfer,
+//! and reloads of spilled values. A node-local RAW chain therefore
+//! executes with zero file I/O and zero serialization.
 
 pub mod access;
 pub mod dag;
+pub mod datastore;
 pub mod executor;
 pub mod fault;
 pub mod registry;
@@ -33,5 +69,6 @@ pub mod scheduler;
 
 pub use access::Direction;
 pub use dag::{EdgeKind, TaskGraph, TaskId, TaskState};
-pub use registry::{DataKey, DataRegistry, NodeId};
+pub use datastore::{DataStore, SpillPolicy};
+pub use registry::{DataKey, DataRegistry, NodeId, VersionTable};
 pub use runtime::{Coordinator, CoordinatorConfig, SubmitOutcome};

@@ -6,13 +6,26 @@
 //! keep a consistent snapshot — this renaming is what lets the superscalar
 //! dependency analysis avoid false WAR/WAW serialization.
 //!
-//! The registry also tracks *where* each version lives (which cluster nodes
-//! hold its serialized file) and how big it is; the data-locality scheduler
-//! and the simulator's transfer model both read that.
+//! The registry is split along its two access patterns:
+//!
+//! * [`DataRegistry`] — the *dependency half* (latest-version map and
+//!   read/write access history). It is consulted only during submission, on
+//!   the master's dependency-analysis path, and stays behind the
+//!   coordinator's control lock.
+//! * [`VersionTable`] — the *location half* (where each version's bytes
+//!   live, how big they are, whether they are memory-resident). Workers hit
+//!   it on every claim and completion, so it is sharded behind fine-grained
+//!   `RwLock`s and shared via `Arc`: claim-path lookups never touch the
+//!   control lock.
+//!
+//! The data-locality scheduler and the simulator's transfer model both read
+//! the location half.
 
 use std::collections::HashMap;
 use std::fmt;
+use std::hash::{Hash, Hasher};
 use std::path::PathBuf;
+use std::sync::{Arc, RwLock};
 
 use crate::coordinator::dag::TaskId;
 
@@ -44,14 +57,145 @@ pub struct VersionInfo {
     /// Task that produces this version; `None` for values materialized by
     /// the master at submission time (literal arguments).
     pub producer: Option<TaskId>,
-    /// Whether the bytes exist yet (producer finished / literal written).
+    /// Whether the value exists yet (producer finished / literal written) —
+    /// either as a serialized file or as a memory-resident object.
     pub available: bool,
-    /// Nodes that currently hold the serialized file.
+    /// The value is held by the in-memory
+    /// [`DataStore`](super::datastore::DataStore); `path` may be empty
+    /// until it spills.
+    pub in_memory: bool,
+    /// Nodes that currently hold a replica.
     pub locations: Vec<NodeId>,
-    /// Serialized size in bytes (0 until known).
+    /// Size in bytes (serialized size when a file exists, payload estimate
+    /// for memory-resident values; 0 until known).
     pub bytes: u64,
-    /// Backing file (local mode); empty in pure simulation.
+    /// Backing file (file plane or spilled); empty for memory-resident
+    /// values and in pure simulation.
     pub path: PathBuf,
+}
+
+/// Sharded version/location table. Every method takes `&self`; shard locks
+/// are leaf locks (no other lock is ever taken while one is held), so the
+/// table can be consulted from any context.
+#[derive(Debug)]
+pub struct VersionTable {
+    shards: Vec<RwLock<HashMap<DataKey, VersionInfo>>>,
+}
+
+const VERSION_SHARDS: usize = 16;
+
+impl Default for VersionTable {
+    fn default() -> Self {
+        VersionTable {
+            shards: (0..VERSION_SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+        }
+    }
+}
+
+impl VersionTable {
+    pub fn new() -> VersionTable {
+        VersionTable::default()
+    }
+
+    fn shard(&self, key: DataKey) -> &RwLock<HashMap<DataKey, VersionInfo>> {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
+    }
+
+    pub fn insert(&self, key: DataKey, info: VersionInfo) {
+        self.shard(key).write().unwrap().insert(key, info);
+    }
+
+    /// Snapshot of a version's info (cloned out of the shard lock).
+    pub fn info(&self, key: DataKey) -> Option<VersionInfo> {
+        self.shard(key).read().unwrap().get(&key).cloned()
+    }
+
+    pub fn is_available(&self, key: DataKey) -> bool {
+        self.shard(key)
+            .read()
+            .unwrap()
+            .get(&key)
+            .map(|i| i.available)
+            .unwrap_or(false)
+    }
+
+    /// Does `node` hold a replica of this version?
+    pub fn is_local(&self, key: DataKey, node: NodeId) -> bool {
+        self.shard(key)
+            .read()
+            .unwrap()
+            .get(&key)
+            .map(|i| i.locations.contains(&node))
+            .unwrap_or(false)
+    }
+
+    /// The spill/parameter file path, when one has been published.
+    pub fn path_of(&self, key: DataKey) -> Option<PathBuf> {
+        self.shard(key)
+            .read()
+            .unwrap()
+            .get(&key)
+            .filter(|i| !i.path.as_os_str().is_empty())
+            .map(|i| i.path.clone())
+    }
+
+    /// Mark a version as produced on disk, with its file and size.
+    pub fn mark_available(&self, key: DataKey, node: NodeId, bytes: u64, path: PathBuf) {
+        let mut shard = self.shard(key).write().unwrap();
+        let info = shard.get_mut(&key).expect("mark of unknown version");
+        info.available = true;
+        info.in_memory = false;
+        info.bytes = bytes;
+        info.path = path;
+        if !info.locations.contains(&node) {
+            info.locations.push(node);
+        }
+    }
+
+    /// Mark a version as produced into the in-memory store (no file yet).
+    pub fn mark_available_memory(&self, key: DataKey, node: NodeId, bytes: u64) {
+        let mut shard = self.shard(key).write().unwrap();
+        let info = shard.get_mut(&key).expect("mark of unknown version");
+        info.available = true;
+        info.in_memory = true;
+        info.bytes = bytes;
+        if !info.locations.contains(&node) {
+            info.locations.push(node);
+        }
+    }
+
+    /// Publish the spill file of a memory-resident version. The value may
+    /// stay cached (spill-for-transfer), so `in_memory` is left as-is.
+    pub fn mark_spilled(&self, key: DataKey, bytes: u64, path: PathBuf) {
+        let mut shard = self.shard(key).write().unwrap();
+        let info = shard.get_mut(&key).expect("spill of unknown version");
+        info.bytes = bytes;
+        info.path = path;
+    }
+
+    /// Record that `node` now also holds a replica (after a transfer).
+    pub fn add_location(&self, key: DataKey, node: NodeId) {
+        let mut shard = self.shard(key).write().unwrap();
+        let info = shard.get_mut(&key).expect("unknown version");
+        if !info.locations.contains(&node) {
+            info.locations.push(node);
+        }
+    }
+
+    /// Number of live versions (for stats).
+    pub fn version_count(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    /// Total bytes across all versions.
+    pub fn total_bytes(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.read().unwrap().values().map(|v| v.bytes).sum::<u64>())
+            .sum()
+    }
 }
 
 /// Per-datum access history used by the dependency analysis.
@@ -63,20 +207,42 @@ struct AccessHistory {
     readers_since_write: Vec<TaskId>,
 }
 
-/// The registry proper.
-#[derive(Debug, Default)]
+/// The dependency half of the registry. Owns (an `Arc` to) the version
+/// table it creates entries in; location updates go through
+/// [`DataRegistry::table`] directly on hot paths.
+#[derive(Debug)]
 pub struct DataRegistry {
     next_data: u64,
     /// Latest version number per datum.
     latest: HashMap<DataId, u32>,
-    /// Version table.
-    versions: HashMap<DataKey, VersionInfo>,
     history: HashMap<DataId, AccessHistory>,
+    table: Arc<VersionTable>,
+}
+
+impl Default for DataRegistry {
+    fn default() -> Self {
+        DataRegistry::with_table(Arc::new(VersionTable::new()))
+    }
 }
 
 impl DataRegistry {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Build a registry whose version entries land in a shared table.
+    pub fn with_table(table: Arc<VersionTable>) -> Self {
+        DataRegistry {
+            next_data: 0,
+            latest: HashMap::new(),
+            history: HashMap::new(),
+            table,
+        }
+    }
+
+    /// The shared location half.
+    pub fn table(&self) -> &Arc<VersionTable> {
+        &self.table
     }
 
     /// Register a brand-new datum whose first version is materialized by
@@ -88,11 +254,12 @@ impl DataRegistry {
             version: 1,
         };
         self.latest.insert(key.data, 1);
-        self.versions.insert(
+        self.table.insert(
             key,
             VersionInfo {
                 producer: None,
                 available: true,
+                in_memory: false,
                 locations: vec![node],
                 bytes,
                 path: PathBuf::new(),
@@ -111,11 +278,12 @@ impl DataRegistry {
             version: 1,
         };
         self.latest.insert(key.data, 1);
-        self.versions.insert(
+        self.table.insert(
             key,
             VersionInfo {
                 producer: Some(producer),
                 available: false,
+                in_memory: false,
                 locations: Vec::new(),
                 bytes: 0,
                 path: PathBuf::new(),
@@ -155,11 +323,12 @@ impl DataRegistry {
         let v = self.latest.get_mut(&data).expect("write of unknown datum");
         *v += 1;
         let new_key = DataKey { data, version: *v };
-        self.versions.insert(
+        self.table.insert(
             new_key,
             VersionInfo {
                 producer: Some(writer),
                 available: false,
+                in_memory: false,
                 locations: Vec::new(),
                 bytes: 0,
                 path: PathBuf::new(),
@@ -172,39 +341,31 @@ impl DataRegistry {
         (new_key, waw, war)
     }
 
+    // ---- delegating accessors (compat with the pre-split API; the live
+    // runtime's hot paths go through `table()` directly) ------------------
+
     /// Mark a version as produced, with its physical location and size.
     pub fn mark_available(&mut self, key: DataKey, node: NodeId, bytes: u64, path: PathBuf) {
-        let info = self.versions.get_mut(&key).expect("mark of unknown version");
-        info.available = true;
-        info.bytes = bytes;
-        info.path = path;
-        if !info.locations.contains(&node) {
-            info.locations.push(node);
-        }
+        self.table.mark_available(key, node, bytes, path);
     }
 
     /// Record that `node` now also holds a replica (after a transfer).
     pub fn add_location(&mut self, key: DataKey, node: NodeId) {
-        let info = self.versions.get_mut(&key).expect("unknown version");
-        if !info.locations.contains(&node) {
-            info.locations.push(node);
-        }
+        self.table.add_location(key, node);
     }
 
-    pub fn info(&self, key: DataKey) -> Option<&VersionInfo> {
-        self.versions.get(&key)
+    /// Snapshot of a version's info.
+    pub fn info(&self, key: DataKey) -> Option<VersionInfo> {
+        self.table.info(key)
     }
 
     pub fn is_available(&self, key: DataKey) -> bool {
-        self.versions.get(&key).map(|i| i.available).unwrap_or(false)
+        self.table.is_available(key)
     }
 
     /// Does `node` hold this version locally?
     pub fn is_local(&self, key: DataKey, node: NodeId) -> bool {
-        self.versions
-            .get(&key)
-            .map(|i| i.locations.contains(&node))
-            .unwrap_or(false)
+        self.table.is_local(key, node)
     }
 
     /// Number of registered data (for stats).
@@ -214,12 +375,12 @@ impl DataRegistry {
 
     /// Number of live versions (for stats).
     pub fn version_count(&self) -> usize {
-        self.versions.len()
+        self.table.version_count()
     }
 
     /// Total serialized bytes across all available versions.
     pub fn total_bytes(&self) -> u64 {
-        self.versions.values().map(|v| v.bytes).sum()
+        self.table.total_bytes()
     }
 }
 
@@ -300,5 +461,41 @@ mod tests {
         assert!(reg.is_available(key));
         assert_eq!(reg.version_count(), 2);
         assert_eq!(reg.datum_count(), 1);
+    }
+
+    #[test]
+    fn version_table_memory_lifecycle() {
+        // memory-resident -> spilled -> file: availability never flickers
+        // and the path appears exactly when the spill publishes it.
+        let table = Arc::new(VersionTable::new());
+        let mut reg = DataRegistry::with_table(Arc::clone(&table));
+        let key = reg.new_future(T1);
+        assert!(table.path_of(key).is_none());
+
+        table.mark_available_memory(key, NodeId(1), 256);
+        let info = table.info(key).unwrap();
+        assert!(info.available && info.in_memory);
+        assert_eq!(info.bytes, 256);
+        assert!(table.is_local(key, NodeId(1)));
+        assert!(table.path_of(key).is_none(), "no file before the spill");
+
+        table.mark_spilled(key, 300, PathBuf::from("/tmp/d1v1.par"));
+        assert!(table.is_available(key));
+        assert_eq!(table.path_of(key).unwrap(), PathBuf::from("/tmp/d1v1.par"));
+        assert_eq!(table.info(key).unwrap().bytes, 300);
+    }
+
+    #[test]
+    fn version_table_is_shared_between_registry_and_workers() {
+        // A worker-side mark through the table is visible through the
+        // registry's delegating accessors, and vice versa.
+        let table = Arc::new(VersionTable::new());
+        let mut reg = DataRegistry::with_table(Arc::clone(&table));
+        let key = reg.new_future(T2);
+        table.mark_available(key, NodeId(3), 99, PathBuf::from("/x"));
+        assert!(reg.is_available(key));
+        assert_eq!(reg.info(key).unwrap().bytes, 99);
+        reg.add_location(key, NodeId(4));
+        assert!(table.is_local(key, NodeId(4)));
     }
 }

@@ -7,8 +7,17 @@
 //! retrieval". The master thread runs the user's sequential program;
 //! [`Coordinator::submit`] analyzes each call's data accesses against the
 //! versioned registry, inserts the task into the DAG, and hands ready tasks
-//! to the scheduler, while persistent workers (see [`super::executor`])
-//! pull, deserialize, execute, and serialize asynchronously.
+//! to the sharded dispatch fabric, while persistent workers (see
+//! [`super::executor`]) pull, gather inputs, execute, and publish outputs
+//! asynchronously.
+//!
+//! Locking layout (see `coordinator/mod.rs` § *Data plane & locking*): the
+//! control lock ([`Core`]) now guards only the DAG, the dependency half of
+//! the registry, task metadata, and stats. Ready-task dispatch lives in
+//! [`ShardedReady`], version locations in the sharded
+//! [`VersionTable`](crate::coordinator::registry::VersionTable), and
+//! produced values in the [`DataStore`] — workers touch the control lock
+//! only to flip task states.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -19,16 +28,20 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::access::Direction;
 use crate::coordinator::dag::{EdgeKind, TaskGraph, TaskId, TaskState};
+use crate::coordinator::datastore::{DataStore, SpillPolicy};
 use crate::coordinator::executor;
 use crate::coordinator::fault::{FailureInjector, RetryPolicy};
-use crate::coordinator::registry::{DataKey, DataRegistry, NodeId};
-use crate::coordinator::scheduler::{scheduler_by_name, ReadyTask, Scheduler};
+use crate::coordinator::registry::{DataKey, DataRegistry, NodeId, VersionTable};
+use crate::coordinator::scheduler::{ReadyTask, ShardedReady};
 use crate::serialization::{codec_by_name, Codec};
 use crate::trace::{EventKind, Tracer, WorkerId};
 use crate::value::RValue;
 
-/// A task body: pure function from input values to output values.
-pub type TaskBody = Arc<dyn Fn(&[RValue]) -> Result<Vec<RValue>> + Send + Sync>;
+/// A task body: pure function from input values to output values. Inputs
+/// arrive as shared handles so the in-memory data plane can feed the same
+/// allocation to every node-local consumer (zero-copy); `Arc<RValue>`
+/// derefs to [`RValue`], so bodies read arguments exactly as before.
+pub type TaskBody = Arc<dyn Fn(&[Arc<RValue>]) -> Result<Vec<RValue>> + Send + Sync>;
 
 /// Registered task metadata (the product of the R-level `task()` call).
 pub struct TaskSpec {
@@ -40,7 +53,7 @@ pub struct TaskSpec {
     pub body: TaskBody,
 }
 
-/// An argument at a call site: either a literal value (serialized by the
+/// An argument at a call site: either a literal value (materialized by the
 /// master at submission, like COMPSs does) or a reference to runtime data.
 #[derive(Clone)]
 pub enum Arg {
@@ -75,11 +88,17 @@ pub struct CoordinatorConfig {
     pub trace: bool,
     /// Failure injection (tests/chaos benches).
     pub injector: Arc<FailureInjector>,
+    /// Byte budget of the in-memory data plane. 0 (the default) disables
+    /// the store entirely: every parameter goes through the codec and the
+    /// workdir, byte-identical to the original file-based runtime.
+    pub memory_budget: u64,
+    /// Spill victim selection when over budget: "lru" | "largest".
+    pub spill: String,
 }
 
 impl CoordinatorConfig {
     /// Sensible local defaults: one node, `workers` executors, RMVL codec,
-    /// FIFO policy, workdir under the system temp dir.
+    /// FIFO policy, workdir under the system temp dir, file data plane.
     pub fn local(workers: u32) -> CoordinatorConfig {
         CoordinatorConfig {
             nodes: 1,
@@ -94,7 +113,14 @@ impl CoordinatorConfig {
             retry: RetryPolicy::default(),
             trace: false,
             injector: Arc::new(FailureInjector::none()),
+            memory_budget: 0,
+            spill: "lru".into(),
         }
+    }
+
+    /// Local defaults plus the in-memory data plane (256 MiB budget).
+    pub fn local_in_memory(workers: u32) -> CoordinatorConfig {
+        CoordinatorConfig::local(workers).with_memory_budget(256 << 20)
     }
 
     pub fn with_scheduler(mut self, name: &str) -> Self {
@@ -115,6 +141,19 @@ impl CoordinatorConfig {
     pub fn with_nodes(mut self, nodes: u32, workers_per_node: u32) -> Self {
         self.nodes = nodes.max(1);
         self.workers_per_node = workers_per_node.max(1);
+        self
+    }
+
+    /// Enable the in-memory data plane with the given byte budget
+    /// (0 disables it again).
+    pub fn with_memory_budget(mut self, bytes: u64) -> Self {
+        self.memory_budget = bytes;
+        self
+    }
+
+    /// Spill policy of the in-memory plane: "lru" | "largest".
+    pub fn with_spill(mut self, policy: &str) -> Self {
+        self.spill = policy.into();
         self
     }
 }
@@ -140,62 +179,46 @@ pub struct RuntimeStats {
     pub exec_s: f64,
     /// Per task type: (count, total execution seconds).
     pub per_type: HashMap<String, (u64, f64)>,
+    /// In-memory data plane: zero-copy consumptions served by the store.
+    pub store_hits: u64,
+    /// In-memory data plane: consumptions that fell back to a file read.
+    pub store_misses: u64,
+    /// Values pushed through the codec by memory pressure.
+    pub spills: u64,
+    /// Bytes written by those spills.
+    pub spill_bytes: u64,
 }
 
-/// Everything a claimed task needs to run outside the lock.
-/// `inputs` carries `(key, path, was_node_local)` — locality resolved at
-/// claim time so the read path takes no extra locks.
-pub(crate) struct Claim {
-    pub id: TaskId,
-    pub spec: Arc<TaskSpec>,
-    pub inputs: Vec<(DataKey, PathBuf, bool)>,
-    pub outputs: Vec<DataKey>,
-}
-
+/// Per-task metadata kept by the coordinator; shared with claimants as an
+/// `Arc` so the claim path never deep-copies input lists under the lock.
 pub(crate) struct TaskMeta {
     pub spec: Arc<TaskSpec>,
     pub inputs: Vec<DataKey>,
     pub outputs: Vec<DataKey>,
 }
 
-/// Mutable coordinator state (behind the big lock).
+/// Mutable coordinator control state (behind the control lock): the DAG,
+/// the dependency half of the registry, task metadata, and stats. The
+/// dispatch queues, version locations, and produced values live outside.
 pub(crate) struct Core {
     pub graph: TaskGraph,
     pub registry: DataRegistry,
-    pub scheduler: Box<dyn Scheduler>,
-    pub meta: HashMap<TaskId, TaskMeta>,
+    pub meta: HashMap<TaskId, Arc<TaskMeta>>,
     pub stats: RuntimeStats,
-    pub shutdown: bool,
-}
-
-impl Core {
-    /// Push a newly-ready task to the scheduler with locality metadata.
-    pub(crate) fn enqueue_ready(&mut self, id: TaskId) {
-        let meta = &self.meta[&id];
-        let inputs = meta
-            .inputs
-            .iter()
-            .map(|k| {
-                let info = self.registry.info(*k).expect("input version missing");
-                (info.bytes, info.locations.clone())
-            })
-            .collect();
-        let type_name = meta.spec.name.clone();
-        self.scheduler.push(ReadyTask {
-            id,
-            inputs,
-            type_name,
-        });
-    }
 }
 
 /// Shared coordinator handle (master + workers).
 pub(crate) struct Shared {
     pub core: Mutex<Core>,
-    /// Workers wait here for ready tasks.
-    pub cv_work: Condvar,
     /// Waiters (`wait_on`, `barrier`) wait here for completions.
     pub cv_done: Condvar,
+    /// Sharded version/location table — the claim path reads it lock-free
+    /// of the control lock.
+    pub table: Arc<VersionTable>,
+    /// Per-node ready queues with stealing and parking.
+    pub ready: ShardedReady,
+    /// The in-memory data plane (disabled at budget 0).
+    pub store: DataStore,
     pub codec: Box<dyn Codec>,
     pub tracer: Tracer,
     pub workdir: PathBuf,
@@ -209,6 +232,72 @@ impl Shared {
     /// sibling of the paper's `dXvY` labels.
     pub fn path_for(&self, key: DataKey) -> PathBuf {
         self.workdir.join(format!("{key}.par"))
+    }
+
+    /// Push a newly-ready task to the dispatch fabric with locality
+    /// metadata (input sizes and replica locations from the version table).
+    pub(crate) fn enqueue_ready(&self, core: &mut Core, id: TaskId) {
+        let meta = &core.meta[&id];
+        let inputs = meta
+            .inputs
+            .iter()
+            .map(|k| {
+                let info = self.table.info(*k).expect("input version missing");
+                (info.bytes, info.locations)
+            })
+            .collect();
+        let type_name = meta.spec.name.clone();
+        self.ready.push(ReadyTask {
+            id,
+            inputs,
+            type_name,
+        });
+    }
+}
+
+/// Atomically publish a spill file for `key`: encode into a uniquely-named
+/// temp file and rename it over the final `dXvY.par` path. Racing spillers
+/// (an eviction and a spill-for-transfer of the same version) then each
+/// publish a complete, identical file — a reader of a published path can
+/// never observe a torn truncate-then-write.
+pub(crate) fn write_spill_file(
+    shared: &Shared,
+    key: DataKey,
+    value: &RValue,
+) -> Result<(u64, PathBuf)> {
+    let final_path = shared.path_for(key);
+    let tmp = shared.workdir.join(format!("{key}.par.{}.tmp", unique_run_id()));
+    shared.codec.write_file(value, &tmp)?;
+    let bytes = std::fs::metadata(&tmp).map(|m| m.len()).unwrap_or(0);
+    std::fs::rename(&tmp, &final_path)
+        .with_context(|| format!("publish spill {}", final_path.display()))?;
+    Ok((bytes, final_path))
+}
+
+/// Serialize spill victims to the workdir and publish their paths. Spill
+/// failures do not fail tasks: the value stays resident (over budget) and
+/// the store keeps it evictable, which degrades memory use, not results.
+pub(crate) fn spill_victims(
+    shared: &Shared,
+    victims: Vec<crate::coordinator::datastore::SpillVictim>,
+) {
+    for v in victims {
+        if v.has_file {
+            // An up-to-date file already exists (the value was reloaded
+            // from one, or spilled for a transfer): eviction is free.
+            shared.store.finish_spill(v.key, false, 0);
+            continue;
+        }
+        match write_spill_file(shared, v.key, &v.value) {
+            Ok((bytes, path)) => {
+                shared.table.mark_spilled(v.key, bytes, path);
+                shared.store.finish_spill(v.key, true, bytes);
+            }
+            Err(e) => {
+                eprintln!("[rcompss] spill of {} failed ({e:#}); keeping it resident", v.key);
+                shared.store.abort_spill(v.key);
+            }
+        }
     }
 }
 
@@ -225,21 +314,24 @@ impl Coordinator {
     pub fn start(config: CoordinatorConfig) -> Result<Coordinator> {
         std::fs::create_dir_all(&config.workdir)
             .with_context(|| format!("create workdir {}", config.workdir.display()))?;
-        let scheduler = scheduler_by_name(&config.scheduler)
+        let ready = ShardedReady::new(&config.scheduler, config.nodes)
             .ok_or_else(|| anyhow!("unknown scheduler '{}'", config.scheduler))?;
         let codec = codec_by_name(&config.codec)
             .ok_or_else(|| anyhow!("unknown codec '{}'", config.codec))?;
+        let spill = SpillPolicy::by_name(&config.spill)
+            .ok_or_else(|| anyhow!("unknown spill policy '{}' (lru|largest)", config.spill))?;
+        let table = Arc::new(VersionTable::new());
         let shared = Arc::new(Shared {
             core: Mutex::new(Core {
                 graph: TaskGraph::new(),
-                registry: DataRegistry::new(),
-                scheduler,
+                registry: DataRegistry::with_table(Arc::clone(&table)),
                 meta: HashMap::new(),
                 stats: RuntimeStats::default(),
-                shutdown: false,
             }),
-            cv_work: Condvar::new(),
             cv_done: Condvar::new(),
+            table,
+            ready,
+            store: DataStore::new(config.memory_budget, spill),
             codec,
             tracer: Tracer::new(config.trace),
             workdir: config.workdir.clone(),
@@ -299,41 +391,57 @@ impl Coordinator {
             bail!("runtime is stopping");
         }
 
-        // Phase 1: materialize literal arguments (master-side
-        // serialization, traced). Reserve ids under a short lock, write
-        // files outside it.
+        // Phase 1: materialize literal arguments. On the file plane this is
+        // master-side serialization (traced, like COMPSs); on the memory
+        // plane the value goes straight into the store — the codec runs
+        // only if it later spills.
         let mut literal_keys: Vec<Option<DataKey>> = vec![None; args.len()];
         for (i, arg) in args.iter().enumerate() {
             if let Arg::Value(v) = arg {
-                let start = self.shared.tracer.now();
-                let bytes = self.shared.codec.encode(v)?;
-                let nbytes = bytes.len() as u64;
-                let key = {
-                    let mut core = self.shared.core.lock().unwrap();
-                    let key = core.registry.new_literal(nbytes, NodeId(0));
-                    core.stats.bytes_serialized += nbytes;
-                    key
-                };
-                let path = self.shared.path_for(key);
-                std::fs::write(&path, &bytes)
-                    .with_context(|| format!("write literal {}", path.display()))?;
-                {
-                    let mut core = self.shared.core.lock().unwrap();
-                    core.registry.mark_available(key, NodeId(0), nbytes, path);
-                    core.stats.serialize_s += self.shared.tracer.now() - start;
+                if self.shared.store.enabled() {
+                    let value = Arc::new(v.clone());
+                    let nbytes = value.byte_size() as u64;
+                    let key = {
+                        let mut core = self.shared.core.lock().unwrap();
+                        core.registry.new_literal(nbytes, NodeId(0))
+                    };
+                    let victims = self.shared.store.put(key, value, false);
+                    self.shared.table.mark_available_memory(key, NodeId(0), nbytes);
+                    spill_victims(&self.shared, victims);
+                    literal_keys[i] = Some(key);
+                } else {
+                    let start = self.shared.tracer.now();
+                    let bytes = self.shared.codec.encode(v)?;
+                    let nbytes = bytes.len() as u64;
+                    let key = {
+                        let mut core = self.shared.core.lock().unwrap();
+                        let key = core.registry.new_literal(nbytes, NodeId(0));
+                        core.stats.bytes_serialized += nbytes;
+                        key
+                    };
+                    let path = self.shared.path_for(key);
+                    std::fs::write(&path, &bytes)
+                        .with_context(|| format!("write literal {}", path.display()))?;
+                    self.shared.table.mark_available(key, NodeId(0), nbytes, path);
+                    {
+                        let mut core = self.shared.core.lock().unwrap();
+                        core.stats.serialize_s += self.shared.tracer.now() - start;
+                    }
+                    self.shared.tracer.record_at(
+                        self.master_wid(),
+                        EventKind::Serialize,
+                        None,
+                        start,
+                        self.shared.tracer.now(),
+                    );
+                    literal_keys[i] = Some(key);
                 }
-                self.shared.tracer.record_at(
-                    self.master_wid(),
-                    EventKind::Serialize,
-                    None,
-                    start,
-                    self.shared.tracer.now(),
-                );
-                literal_keys[i] = Some(key);
             }
         }
 
-        // Phase 2: dependency analysis + DAG insertion under the lock.
+        // Phase 2: dependency analysis + DAG insertion under the control
+        // lock (kept atomic so a dependent can never be inserted before its
+        // producer).
         let mut core = self.shared.core.lock().unwrap();
         let core = &mut *core;
         let id = core.graph.next_task_id();
@@ -385,18 +493,17 @@ impl Coordinator {
 
         core.meta.insert(
             id,
-            TaskMeta {
+            Arc::new(TaskMeta {
                 spec: Arc::clone(spec),
                 inputs: input_keys,
                 outputs: writes.clone(),
-            },
+            }),
         );
         core.stats.tasks_submitted += 1;
 
         let ready = core.graph.insert_task(id, &spec.name, reads, writes, deps);
         if ready {
-            core.enqueue_ready(id);
-            self.shared.cv_work.notify_one();
+            self.shared.enqueue_ready(core, id);
         }
         // A task may have been cancelled on insert (failed upstream).
         if core.graph.state(id) == Some(TaskState::Cancelled) {
@@ -406,20 +513,20 @@ impl Coordinator {
         Ok(SubmitOutcome { returns, updated })
     }
 
-    /// Block until `key` is produced, then deserialize and return it
+    /// Block until `key` is produced, then fetch and return it
     /// (`compss_wait_on`). Fails if the producing task failed or was
-    /// cancelled.
+    /// cancelled. On the memory plane this is a store lookup (plus one
+    /// clone for ownership); on the file plane, a codec read.
     pub fn wait_on(&self, key: DataKey) -> Result<RValue> {
-        let path = {
+        {
             let mut core = self.shared.core.lock().unwrap();
             loop {
-                if core.registry.is_available(key) {
-                    break self
-                        .shared
-                        .path_for(key);
+                if self.shared.table.is_available(key) {
+                    break;
                 }
-                let producer = core
-                    .registry
+                let producer = self
+                    .shared
+                    .table
                     .info(key)
                     .and_then(|i| i.producer)
                     .ok_or_else(|| anyhow!("unknown datum {key}"))?;
@@ -434,7 +541,12 @@ impl Coordinator {
                 }
                 core = self.shared.cv_done.wait(core).unwrap();
             }
-        };
+        }
+        if self.shared.store.enabled() {
+            let (value, _, _) = executor::fetch_resident(&self.shared, key)?;
+            return Ok((*value).clone());
+        }
+        let path = self.shared.path_for(key);
         let start = self.shared.tracer.now();
         let v = self.shared.codec.read_file(&path)?;
         self.shared.tracer.record_at(
@@ -471,25 +583,34 @@ impl Coordinator {
         // Drain outstanding work first (stop() implies a barrier in COMPSs).
         {
             let core = self.shared.core.lock().unwrap();
-            let mut core = self
+            let _quiescent = self
                 .shared
                 .cv_done
                 .wait_while(core, |c| !c.graph.quiescent())
                 .unwrap();
-            core.shutdown = true;
         }
         self.shared.stopping.store(true, Ordering::SeqCst);
-        self.shared.cv_work.notify_all();
+        self.shared.ready.stop();
         for w in self.workers {
             let _ = w.join();
         }
-        let core = self.shared.core.lock().unwrap();
-        Ok(core.stats.clone())
+        let mut stats = self.shared.core.lock().unwrap().stats.clone();
+        self.fill_store_stats(&mut stats);
+        Ok(stats)
+    }
+
+    fn fill_store_stats(&self, stats: &mut RuntimeStats) {
+        stats.store_hits = self.shared.store.hit_count();
+        stats.store_misses = self.shared.store.miss_count();
+        stats.spills = self.shared.store.spill_count();
+        stats.spill_bytes = self.shared.store.spilled_bytes();
     }
 
     /// Snapshot statistics without stopping.
     pub fn stats(&self) -> RuntimeStats {
-        self.shared.core.lock().unwrap().stats.clone()
+        let mut stats = self.shared.core.lock().unwrap().stats.clone();
+        self.fill_store_stats(&mut stats);
+        stats
     }
 
     /// DOT export of the current DAG (Figures 2-5).

@@ -6,15 +6,22 @@
 //! enough metadata (input sizes and locations) to make locality decisions.
 //!
 //! Policies are pure data structures driven identically by the live
-//! executor and the discrete-event simulator.
+//! executor and the discrete-event simulator. The live executor no longer
+//! drives a single policy instance behind the global lock: it instantiates
+//! one per node inside [`ShardedReady`], which adds locality routing, work
+//! stealing, and lock-free worker parking around the unchanged policies
+//! (see `coordinator/mod.rs` § *Data plane & locking*). The simulator keeps
+//! driving a single instance directly.
 
 mod fifo;
 mod lifo;
 mod locality;
+mod sharded;
 
 pub use fifo::FifoScheduler;
 pub use lifo::LifoScheduler;
 pub use locality::LocalityScheduler;
+pub use sharded::ShardedReady;
 
 use crate::coordinator::dag::TaskId;
 use crate::coordinator::registry::NodeId;

@@ -1,0 +1,271 @@
+//! Sharded ready queues with work stealing — the live executor's dispatch
+//! fabric.
+//!
+//! The seed runtime kept one scheduler instance behind the global
+//! coordinator lock; every idle worker contended on that lock to pop a
+//! task, which is exactly the per-task dispatch overhead the paper says
+//! must stay small for 70%+ efficiency at 128 cores (§4). [`ShardedReady`]
+//! breaks the claim loop apart:
+//!
+//! * one policy instance ([`Scheduler`]) per emulated node, each behind its
+//!   own mutex — a worker's common-case pop touches only its node's shard;
+//! * pushes are routed to the node holding the most input bytes (falling
+//!   back to round-robin), so the configured policy keeps making its
+//!   locality/order decisions *within* a shard;
+//! * a worker that finds its shard empty steals from the other shards in
+//!   ring order before parking — stealing trades strict policy order for
+//!   utilization, exactly as COMPSs does;
+//! * parking uses a separate mutex+condvar pair with a global ready count,
+//!   so sleeping and waking never touch the coordinator control lock.
+//!
+//! The wakeup protocol is the standard no-lost-wakeup dance: a pusher
+//! increments the ready count *before* taking the park lock to notify; a
+//! parking worker re-checks the count *after* taking the park lock. Either
+//! the worker sees the count and retries, or it is provably waiting when
+//! the notification fires.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use super::{scheduler_by_name, ReadyTask, Scheduler};
+use crate::coordinator::dag::TaskId;
+use crate::coordinator::registry::NodeId;
+
+pub struct ShardedReady {
+    shards: Vec<Mutex<Box<dyn Scheduler>>>,
+    /// Total tasks currently queued across all shards.
+    queued: AtomicU64,
+    /// Round-robin cursor for tasks with no locality signal.
+    rr: AtomicUsize,
+    /// Workers registered as parked (or about to park). Lets the push hot
+    /// path skip the park lock entirely while everyone is busy.
+    sleepers: AtomicUsize,
+    park: Mutex<()>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+impl ShardedReady {
+    /// One shard per node, each running the named policy.
+    pub fn new(policy: &str, nodes: u32) -> Option<ShardedReady> {
+        let shards = (0..nodes.max(1))
+            .map(|_| scheduler_by_name(policy).map(Mutex::new))
+            .collect::<Option<Vec<_>>>()?;
+        Some(ShardedReady {
+            shards,
+            queued: AtomicU64::new(0),
+            rr: AtomicUsize::new(0),
+            sleepers: AtomicUsize::new(0),
+            park: Mutex::new(()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        })
+    }
+
+    pub fn nodes(&self) -> u32 {
+        self.shards.len() as u32
+    }
+
+    /// The shard a task should land on: the node holding the most input
+    /// bytes, else round-robin.
+    fn route(&self, task: &ReadyTask) -> usize {
+        let nodes = self.shards.len();
+        let mut per_node = vec![0u64; nodes];
+        for (bytes, locs) in &task.inputs {
+            for n in locs {
+                if (n.0 as usize) < nodes {
+                    per_node[n.0 as usize] += *bytes;
+                }
+            }
+        }
+        let best = per_node
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, b)| **b)
+            .filter(|(_, b)| **b > 0)
+            .map(|(i, _)| i);
+        best.unwrap_or_else(|| self.rr.fetch_add(1, Ordering::Relaxed) % nodes)
+    }
+
+    /// Enqueue a ready task and wake one parked worker.
+    pub fn push(&self, task: ReadyTask) {
+        let shard = self.route(&task);
+        {
+            // Increment while holding the shard lock so a concurrent pop of
+            // this very task (its matching decrement also runs under the
+            // shard lock) can never observe the counter before the
+            // increment and underflow it.
+            let mut s = self.shards[shard].lock().unwrap();
+            s.push(task);
+            self.queued.fetch_add(1, Ordering::SeqCst);
+        }
+        // Counted before reading `sleepers`: see the module-level wakeup
+        // protocol (the parking side registers before re-reading `queued`,
+        // so at least one of the two sides observes the other).
+        if self.sleepers.load(Ordering::SeqCst) > 0 {
+            let _guard = self.park.lock().unwrap();
+            self.cv.notify_one();
+        }
+    }
+
+    /// Pop a task for a worker on `node`: own shard, then steal in ring
+    /// order, then park. Returns `None` only at shutdown.
+    pub fn pop(&self, node: NodeId) -> Option<TaskId> {
+        let nodes = self.shards.len();
+        let home = (node.0 as usize) % nodes;
+        loop {
+            // Scan own shard first, then the others (work stealing).
+            for i in 0..nodes {
+                let shard = (home + i) % nodes;
+                let mut s = self.shards[shard].lock().unwrap();
+                if let Some(id) = s.pop_for(node) {
+                    // Decrement under the same shard lock as the push's
+                    // increment: the counter can never underflow.
+                    self.queued.fetch_sub(1, Ordering::SeqCst);
+                    return Some(id);
+                }
+            }
+            if self.shutdown.load(Ordering::SeqCst) {
+                return None;
+            }
+            // Park until a push or shutdown. Register as a sleeper first,
+            // then re-check the count under the park lock, so a concurrent
+            // push either sees the registration or is seen by the re-check.
+            let guard = self.park.lock().unwrap();
+            self.sleepers.fetch_add(1, Ordering::SeqCst);
+            if self.queued.load(Ordering::SeqCst) > 0 || self.shutdown.load(Ordering::SeqCst) {
+                self.sleepers.fetch_sub(1, Ordering::SeqCst);
+                if self.shutdown.load(Ordering::SeqCst) && self.queued.load(Ordering::SeqCst) == 0
+                {
+                    return None;
+                }
+                continue;
+            }
+            let _unused = self.cv.wait(guard).unwrap();
+            self.sleepers.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Wake everyone and make subsequent `pop`s return `None` once the
+    /// queues drain.
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _guard = self.park.lock().unwrap();
+        self.cv.notify_all();
+    }
+
+    /// Tasks currently queued (all shards).
+    pub fn queue_len(&self) -> usize {
+        self.queued.load(Ordering::SeqCst) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn rt(id: u64, inputs: Vec<(u64, Vec<NodeId>)>) -> ReadyTask {
+        ReadyTask {
+            id: TaskId(id),
+            inputs,
+            type_name: "t".into(),
+        }
+    }
+
+    #[test]
+    fn routes_by_locality_and_round_robin() {
+        let q = ShardedReady::new("fifo", 2).unwrap();
+        // Task with bytes on node 1 lands on shard 1.
+        q.push(rt(1, vec![(100, vec![NodeId(1)])]));
+        // Node-1 worker gets it from its own shard.
+        assert_eq!(q.pop(NodeId(1)), Some(TaskId(1)));
+        // Locality-free tasks round-robin across both shards but any
+        // worker can drain them all (stealing).
+        for i in 2..=5 {
+            q.push(rt(i, vec![]));
+        }
+        let mut got: Vec<u64> = (0..4).map(|_| q.pop(NodeId(0)).unwrap().0).collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![2, 3, 4, 5]);
+        assert_eq!(q.queue_len(), 0);
+    }
+
+    #[test]
+    fn single_node_fifo_preserves_seed_order() {
+        let q = ShardedReady::new("fifo", 1).unwrap();
+        for i in 1..=6 {
+            q.push(rt(i, vec![]));
+        }
+        let order: Vec<u64> = (0..6).map(|_| q.pop(NodeId(0)).unwrap().0).collect();
+        assert_eq!(order, vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn stealing_keeps_workers_busy() {
+        let q = ShardedReady::new("locality", 4).unwrap();
+        q.push(rt(1, vec![(10, vec![NodeId(3)])]));
+        q.push(rt(2, vec![(10, vec![NodeId(2)])]));
+        // A node-0 worker has no local work but must not park.
+        assert!(q.pop(NodeId(0)).is_some());
+        assert!(q.pop(NodeId(0)).is_some());
+    }
+
+    #[test]
+    fn stop_releases_parked_workers() {
+        let q = Arc::new(ShardedReady::new("fifo", 1).unwrap());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let q = Arc::clone(&q);
+            handles.push(std::thread::spawn(move || q.pop(NodeId(0))));
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.stop();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), None);
+        }
+    }
+
+    #[test]
+    fn concurrent_producers_and_consumers_drain_exactly() {
+        let q = Arc::new(ShardedReady::new("lifo", 3).unwrap());
+        let total = 3 * 500u64;
+        let mut producers = Vec::new();
+        for p in 0..3u64 {
+            let q = Arc::clone(&q);
+            producers.push(std::thread::spawn(move || {
+                for i in 0..500u64 {
+                    q.push(rt(p * 500 + i + 1, vec![]));
+                }
+            }));
+        }
+        let popped = Arc::new(AtomicU64::new(0));
+        let mut consumers = Vec::new();
+        for c in 0..4u32 {
+            let q = Arc::clone(&q);
+            let popped = Arc::clone(&popped);
+            consumers.push(std::thread::spawn(move || {
+                while q.pop(NodeId(c % 3)).is_some() {
+                    popped.fetch_add(1, Ordering::SeqCst);
+                }
+            }));
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        // Spin until drained, then stop to release the consumers.
+        while q.queue_len() > 0 {
+            std::thread::yield_now();
+        }
+        q.stop();
+        for c in consumers {
+            c.join().unwrap();
+        }
+        assert_eq!(popped.load(Ordering::SeqCst), total);
+    }
+
+    #[test]
+    fn unknown_policy_is_rejected() {
+        assert!(ShardedReady::new("zzz", 2).is_none());
+    }
+}

@@ -125,6 +125,7 @@ USAGE:
   rcompss run    --app knn|kmeans|linreg [--workers N] [--fragments F]
                  [--backend auto|pjrt|native] [--codec rmvl|qs|fst|rds|...]
                  [--scheduler fifo|lifo|locality] [--trace]
+                 [--memory-budget BYTES] [--spill lru|largest]
   rcompss sim    --app knn|kmeans|linreg --machine shaheen3|marenostrum5
                  [--nodes N] [--workers-per-node W] [--fragments F]
                  [--scheduler fifo|lifo|locality]
@@ -143,12 +144,19 @@ fn cmd_run(opts: &Opts) -> anyhow::Result<()> {
     let workers = opts.get_usize("workers", 4)? as u32;
     let fragments = opts.get_usize("fragments", 4)?;
     let backend = backend_from(opts)?;
+    let memory_budget = opts.get_usize("memory-budget", 0)? as u64;
     let config = RuntimeConfig::local(workers)
         .with_scheduler(&opts.get("scheduler", "fifo"))
         .with_codec(&opts.get("codec", "rmvl"))
-        .with_trace(opts.has("trace"));
+        .with_trace(opts.has("trace"))
+        .with_memory_budget(memory_budget)
+        .with_spill(&opts.get("spill", "lru"));
     let rt = CompssRuntime::start(config)?;
-    println!("rcompss run: app={app} workers={workers} fragments={fragments} backend={backend:?}");
+    println!(
+        "rcompss run: app={app} workers={workers} fragments={fragments} backend={backend:?} \
+         data-plane={}",
+        if memory_budget > 0 { "memory" } else { "file" }
+    );
     let t0 = std::time::Instant::now();
     match app.as_str() {
         "knn" => {
@@ -201,6 +209,15 @@ fn cmd_run(opts: &Opts) -> anyhow::Result<()> {
         stats.deserialize_s,
         rcompss::util::table::fmt_bytes(stats.bytes_deserialized as usize),
     );
+    if memory_budget > 0 {
+        println!(
+            "store: {} hits, {} misses, {} spills / {}",
+            stats.store_hits,
+            stats.store_misses,
+            stats.spills,
+            rcompss::util::table::fmt_bytes(stats.spill_bytes as usize),
+        );
+    }
     Ok(())
 }
 

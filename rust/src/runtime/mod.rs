@@ -15,14 +15,18 @@
 //! simulator's cost model consumes.
 
 pub mod manifest;
+#[cfg(feature = "pjrt")]
 pub mod tensor;
 
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
 
+#[cfg(feature = "pjrt")]
 use std::cell::RefCell;
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::PathBuf;
 
+#[cfg(feature = "pjrt")]
 use anyhow::{bail, Context, Result};
 
 /// Where the artifacts live: `$RCOMPSS_ARTIFACTS` or `./artifacts`.
@@ -33,17 +37,21 @@ pub fn artifacts_dir() -> PathBuf {
 }
 
 /// Quick availability probe (apps fall back to native BLAS when absent).
+/// Always false without the `pjrt` feature: the artifacts cannot be
+/// executed, so the backends must not select them.
 pub fn artifacts_available() -> bool {
-    artifacts_dir().join("manifest.json").exists()
+    cfg!(feature = "pjrt") && artifacts_dir().join("manifest.json").exists()
 }
 
 /// A per-thread PJRT engine: client + compiled-executable cache.
+#[cfg(feature = "pjrt")]
 pub struct PjrtEngine {
     client: xla::PjRtClient,
     manifest: Manifest,
     cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtEngine {
     /// Create an engine over an artifact directory.
     pub fn new(dir: &std::path::Path) -> Result<PjrtEngine> {
@@ -135,12 +143,14 @@ impl PjrtEngine {
     }
 }
 
+#[cfg(feature = "pjrt")]
 thread_local! {
     static ENGINE: RefCell<Option<PjrtEngine>> = const { RefCell::new(None) };
 }
 
 /// Run `f` with this thread's engine, creating it on first use.
 /// Fails if artifacts are missing — call [`artifacts_available`] first.
+#[cfg(feature = "pjrt")]
 pub fn with_engine<T>(f: impl FnOnce(&PjrtEngine) -> Result<T>) -> Result<T> {
     ENGINE.with(|slot| {
         let mut slot = slot.borrow_mut();
@@ -151,7 +161,7 @@ pub fn with_engine<T>(f: impl FnOnce(&PjrtEngine) -> Result<T>) -> Result<T> {
     })
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 

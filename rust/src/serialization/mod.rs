@@ -19,6 +19,16 @@
 //! Every codec must round-trip **any** [`RValue`] bit-exactly (including
 //! `NA_real_` payloads); the shared property tests in this module enforce
 //! that, and `benches/table1_serialization.rs` regenerates Table 1.
+//!
+//! With the in-memory data plane enabled
+//! (`CoordinatorConfig::memory_budget > 0`), codecs are no longer on the
+//! per-task hot path: node-local consumers receive zero-copy handles, and
+//! the configured codec runs only at *spill boundaries* — memory pressure,
+//! cross-node transfer, and reloads of spilled values (see
+//! `coordinator/mod.rs` § *Data plane & locking*). With the plane disabled
+//! (the default), every parameter goes through `write_file`/`read_file`
+//! exactly as before, so these property tests cover both planes' byte
+//! format.
 
 pub mod csv;
 pub mod fst_like;

@@ -352,7 +352,7 @@ fn push_ready(plan: &SimPlan, scheduler: &mut dyn Scheduler, id: TaskId) {
         .iter()
         .map(|k| {
             let info = plan.registry.info(*k).expect("input info");
-            (info.bytes, info.locations.clone())
+            (info.bytes, info.locations)
         })
         .collect();
     scheduler.push(ReadyTask {

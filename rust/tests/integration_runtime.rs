@@ -258,6 +258,153 @@ fn trace_of_live_run_covers_all_task_types() {
 }
 
 #[test]
+fn memory_plane_matches_file_plane_results() {
+    // The in-memory data plane must be semantically invisible: the same
+    // KNN run classifies identically with the store on or off, across
+    // schedulers.
+    let mut reference: Option<Vec<i32>> = None;
+    for budget in [0u64, 256 << 20] {
+        for policy in ["fifo", "locality"] {
+            let rt = CompssRuntime::start(
+                RuntimeConfig::local(3)
+                    .with_scheduler(policy)
+                    .with_memory_budget(budget),
+            )
+            .unwrap();
+            let mut cfg = KnnConfig::small(5);
+            cfg.shapes = tiny_shapes();
+            cfg.train_fragments = 3;
+            cfg.test_blocks = 1;
+            let mut sink = LiveSink::new(
+                &rt,
+                rcompss::apps::backend::knn_task_defs(cfg.shapes, Backend::Native),
+            );
+            let plan = knn::plan_knn(&mut sink, &cfg).unwrap();
+            let classes = sink.fetch(plan.classes[0]).unwrap();
+            let got = classes.as_int().unwrap().to_vec();
+            rt.stop().unwrap();
+            match &reference {
+                None => reference = Some(got),
+                Some(want) => assert_eq!(
+                    &got, want,
+                    "budget {budget} policy {policy} changed results"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn node_local_chain_performs_zero_file_io() {
+    // Regression test for the zero-copy data plane: a node-local RAW chain
+    // with a comfortable budget must never touch the codec or the workdir.
+    let config = RuntimeConfig::local_in_memory(2);
+    let workdir = config.workdir.clone();
+    let rt = CompssRuntime::start(config).unwrap();
+    let double = rt.register_task(rcompss::api::TaskDef::new("double", 1, |a| {
+        let x = a[0].as_f64().ok_or_else(|| anyhow::anyhow!("not scalar"))?;
+        Ok(vec![rcompss::value::RValue::scalar(2.0 * x)])
+    }));
+    let mut r = rt.submit(&double, &[1.0.into()]).unwrap();
+    for _ in 0..6 {
+        r = rt.submit(&double, &[r.into()]).unwrap();
+    }
+    let v = rt.wait_on(&r).unwrap();
+    assert_eq!(v.as_f64(), Some(128.0));
+    let files: Vec<_> = std::fs::read_dir(&workdir).unwrap().collect();
+    assert!(
+        files.is_empty(),
+        "node-local chain wrote {} parameter file(s)",
+        files.len()
+    );
+    let stats = rt.stop().unwrap();
+    assert_eq!(stats.spills, 0);
+    assert_eq!(stats.store_misses, 0);
+    assert_eq!(stats.bytes_serialized + stats.bytes_deserialized, 0);
+    assert!(stats.store_hits >= 8, "7 task inputs + 1 wait_on: {stats:?}");
+}
+
+#[test]
+fn spill_reload_roundtrips_through_every_codec() {
+    // LRU spill + reload must be exact for each Table-1 codec: a tiny
+    // budget forces every intermediate out through the codec and back.
+    for codec in ["rmvl", "qs", "fst", "rawbin", "serialize_rcpp", "rds", "csv"] {
+        let config = RuntimeConfig::local(2)
+            .with_codec(codec)
+            .with_memory_budget(96)
+            .with_spill("lru");
+        let rt = CompssRuntime::start(config).unwrap();
+        let add = rt.register_task(rcompss::api::TaskDef::new("add", 2, |a| {
+            let x = a[0].as_f64().unwrap();
+            let y = a[1].as_f64().unwrap();
+            Ok(vec![rcompss::value::RValue::scalar(x + y)])
+        }));
+        let mut acc = rt.submit(&add, &[0.25.into(), 0.5.into()]).unwrap();
+        for i in 1..=8 {
+            acc = rt.submit(&add, &[acc.into(), (i as f64 + 0.125).into()]).unwrap();
+        }
+        let v = rt.wait_on(&acc).unwrap();
+        assert_eq!(v.as_f64(), Some(0.75 + 36.0 + 8.0 * 0.125), "codec {codec}");
+        let stats = rt.stop().unwrap();
+        assert!(stats.spills > 0, "codec {codec}: tiny budget must spill");
+    }
+}
+
+#[test]
+fn largest_spill_policy_also_preserves_results() {
+    let config = RuntimeConfig::local(3)
+        .with_memory_budget(1 << 10)
+        .with_spill("largest");
+    let rt = CompssRuntime::start(config).unwrap();
+    let mut cfg = KmeansConfig::small(11);
+    cfg.shapes = tiny_shapes();
+    cfg.fragments = 3;
+    cfg.iterations = 2;
+    cfg.tol = None;
+    let res = kmeans::run_kmeans(&rt, &cfg, Backend::Native).unwrap();
+    let stats = rt.stop().unwrap();
+    assert!(stats.spills > 0, "1 KiB budget must spill: {stats:?}");
+
+    let rt = CompssRuntime::start(RuntimeConfig::local(3)).unwrap();
+    let clean = kmeans::run_kmeans(&rt, &cfg, Backend::Native).unwrap();
+    rt.stop().unwrap();
+    assert!(
+        clean.centroids.all_equal(&res.centroids, 1e-9),
+        "spilling changed the k-means result"
+    );
+}
+
+#[test]
+fn memory_plane_multi_node_transfers_through_codec() {
+    // Cross-node consumption is a spill boundary: a 2-node run must work,
+    // agree with single-node results, and exercise the codec.
+    let mut cfg = KnnConfig::small(5);
+    cfg.shapes = tiny_shapes();
+    cfg.train_fragments = 3;
+    cfg.test_blocks = 1;
+    let run = |nodes: u32, wpn: u32, budget: u64| {
+        let rt = CompssRuntime::start(
+            RuntimeConfig::local(2)
+                .with_nodes(nodes, wpn)
+                .with_memory_budget(budget),
+        )
+        .unwrap();
+        let mut sink = LiveSink::new(
+            &rt,
+            rcompss::apps::backend::knn_task_defs(cfg.shapes, Backend::Native),
+        );
+        let plan = knn::plan_knn(&mut sink, &cfg).unwrap();
+        let classes = sink.fetch(plan.classes[0]).unwrap();
+        let got = classes.as_int().unwrap().to_vec();
+        rt.stop().unwrap();
+        got
+    };
+    let single = run(1, 2, 256 << 20);
+    let multi = run(2, 2, 256 << 20);
+    assert_eq!(single, multi, "node count changed classification");
+}
+
+#[test]
 fn workdir_files_use_dxvy_naming() {
     // The on-disk parameter files carry the paper's dXvY labels.
     let config = RuntimeConfig::local(2);
