@@ -222,13 +222,13 @@ fn codec_throughput() {
 /// Case [4]: per-task dispatch overhead of the live runtime with trivial
 /// bodies, comparing the file data plane (every parameter through the
 /// codec + workdir, as the seed runtime did) against the in-memory
-/// zero-copy plane, at 1 and 8 workers. Emits `BENCH_hotpath.json` so the
-/// perf trajectory is tracked in-repo (acceptance target: >= 2x lower
+/// zero-copy plane, at 1 and 8 workers. Appends to the shared summary
+/// that `main` writes to `BENCH_hotpath.json` after every case ran, so
+/// the perf trajectory is tracked in-repo (acceptance target: >= 2x lower
 /// overhead with the memory plane at 8 workers).
-fn dispatch_overhead() {
+fn dispatch_overhead(summary: &mut Vec<Json>) {
     println!("[4] live runtime dispatch overhead (trivial bodies, file vs memory plane)");
     let n_tasks = 2000usize;
-    let mut summary: Vec<Json> = Vec::new();
     let mut us_file_8 = f64::NAN;
     let mut us_mem_8 = f64::NAN;
     for (plane, budget) in [("file", 0u64), ("memory", 256 << 20)] {
@@ -284,7 +284,51 @@ fn dispatch_overhead() {
         ("speedup", Json::Num(speedup)),
         ("target", Json::Num(2.0)),
     ]));
-    rcompss::bench_harness::write_json_summary("hotpath", summary);
+    println!();
+}
+
+/// Case [6]: batched vs sequential submission. `Runtime::submit_batch`
+/// amortizes the control lock across a partition loop; this measures the
+/// per-task submission cost both ways on the memory plane.
+fn batched_submission(summary: &mut Vec<Json>) {
+    println!("[6] batched vs sequential submission (memory plane, 4 workers)");
+    let n_tasks = 2000usize;
+    for mode in ["sequential", "batched"] {
+        let rt = CompssRuntime::start(RuntimeConfig::local_in_memory(4)).unwrap();
+        let noop = rt.register_task(TaskDef::new("noop", 1, |args| {
+            Ok(vec![args[0].as_ref().clone()])
+        }));
+        let (elapsed, _) = time_once(|| {
+            if mode == "batched" {
+                let calls: Vec<_> = (0..n_tasks)
+                    .map(|i| (&noop, vec![rcompss::api::TaskArg::from(i as f64)]))
+                    .collect();
+                rt.submit_batch(&calls).unwrap();
+            } else {
+                for i in 0..n_tasks {
+                    rt.submit(&noop, &[(i as f64).into()]).unwrap();
+                }
+            }
+            rt.barrier().unwrap();
+        });
+        rt.stop().unwrap();
+        let per_task = elapsed / n_tasks as f64 * 1e6;
+        println!("  {mode:10}: {n_tasks} tasks -> {per_task:.1} µs/task");
+        record_result(
+            "hotpath_submit_batch",
+            vec![
+                ("mode", Json::Str(mode.into())),
+                ("n_tasks", Json::Num(n_tasks as f64)),
+                ("us_per_task", Json::Num(per_task)),
+            ],
+        );
+        summary.push(obj(vec![
+            ("metric", Json::Str("submit_us_per_task".into())),
+            ("mode", Json::Str(mode.into())),
+            ("n_tasks", Json::Num(n_tasks as f64)),
+            ("us_per_task", Json::Num(per_task)),
+        ]));
+    }
     println!();
 }
 
@@ -352,6 +396,12 @@ fn main() {
     gemm_ratio();
     unit_costs();
     codec_throughput();
-    dispatch_overhead();
+    // Cases [4] and [6] share one committed summary file; it is written
+    // only after both ran, so a measured BENCH_hotpath.json always carries
+    // the dispatch *and* batched-submit metrics the projected copy has.
+    let mut summary: Vec<Json> = Vec::new();
+    dispatch_overhead(&mut summary);
+    batched_submission(&mut summary);
+    rcompss::bench_harness::write_json_summary("hotpath", summary);
     pure_structures();
 }

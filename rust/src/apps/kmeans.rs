@@ -52,19 +52,25 @@ pub fn plan_kmeans_iteration(
     let s = cfg.shapes;
     let (k, d, n) = (s.km_k, s.km_d, s.km_frag_n);
 
-    // partial_sum per fragment (white nodes).
-    let mut partials: Vec<(SinkRef, SinkRef)> = Vec::with_capacity(fragments.len());
-    for f in fragments {
-        let outs = sink.submit(SubmitSpec {
+    // partial_sum per fragment (white nodes) — one batched submission for
+    // the whole partition loop (a single control-lock acquisition on the
+    // live runtime).
+    let partial_specs: Vec<SubmitSpec> = fragments
+        .iter()
+        .map(|f| SubmitSpec {
             ty: "partial_sum",
             args: vec![(*f).into(), centroids.into()],
             n_outputs: 2,
             out_bytes: vec![mat_bytes(k, d), vec_bytes(k)],
             cost_units: (n * k * d) as f64,
             gemm_class: false,
-        })?;
-        partials.push((outs[0], outs[1]));
-    }
+        })
+        .collect();
+    let mut partials: Vec<(SinkRef, SinkRef)> = sink
+        .submit_batch(partial_specs)?
+        .into_iter()
+        .map(|outs| (outs[0], outs[1]))
+        .collect();
 
     // Hierarchical merge tree (red nodes).
     while partials.len() > 1 {
@@ -111,19 +117,22 @@ pub fn plan_kmeans(
     let s = cfg.shapes;
     let (k, d, n) = (s.km_k, s.km_d, s.km_frag_n);
 
-    // Fragment generation (blue nodes).
-    let mut fragments = Vec::with_capacity(cfg.fragments);
-    for f in 0..cfg.fragments {
-        let outs = sink.submit(SubmitSpec {
+    // Fragment generation (blue nodes), batched.
+    let fill_specs: Vec<SubmitSpec> = (0..cfg.fragments)
+        .map(|f| SubmitSpec {
             ty: "fill_fragment",
             args: vec![(cfg.seed as i32).into(), (f as i32).into()],
             n_outputs: 1,
             out_bytes: vec![mat_bytes(n, d)],
             cost_units: (n * d) as f64,
             gemm_class: false,
-        })?;
-        fragments.push(outs[0]);
-    }
+        })
+        .collect();
+    let fragments: Vec<SinkRef> = sink
+        .submit_batch(fill_specs)?
+        .into_iter()
+        .map(|outs| outs[0])
+        .collect();
 
     // Initial centroids: a small fill task of its own.
     let mut centroids = sink.submit(SubmitSpec {
@@ -169,18 +178,21 @@ pub fn run_kmeans(rt: &CompssRuntime, cfg: &KmeansConfig, backend: Backend) -> R
     // Mirror plan_kmeans but consult the synced centroids for early stop.
     let (fragments, mut centroids) = {
         // generation + init only (first part of plan_kmeans without loops)
-        let mut frags = Vec::with_capacity(cfg.fragments);
-        for f in 0..cfg.fragments {
-            let outs = sink.submit(SubmitSpec {
+        let fill_specs: Vec<SubmitSpec> = (0..cfg.fragments)
+            .map(|f| SubmitSpec {
                 ty: "fill_fragment",
                 args: vec![(cfg.seed as i32).into(), (f as i32).into()],
                 n_outputs: 1,
                 out_bytes: vec![mat_bytes(s.km_frag_n, s.km_d)],
                 cost_units: (s.km_frag_n * s.km_d) as f64,
                 gemm_class: false,
-            })?;
-            frags.push(outs[0]);
-        }
+            })
+            .collect();
+        let frags: Vec<SinkRef> = sink
+            .submit_batch(fill_specs)?
+            .into_iter()
+            .map(|outs| outs[0])
+            .collect();
         let init = sink.submit(SubmitSpec {
             ty: "init_centroids",
             args: vec![(cfg.seed as i32).into(), 0.into()],

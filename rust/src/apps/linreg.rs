@@ -50,44 +50,52 @@ pub fn plan_linreg(sink: &mut dyn TaskSink, cfg: &LinregConfig) -> Result<Linreg
     let (n, p, pn) = (s.lr_frag_n, s.lr_p, s.lr_pred_block);
 
     // Fill fragments (blue). GEMM-class per §5.2's trace discussion
-    // (fill includes the X beta product for y).
-    let mut frags: Vec<(SinkRef, SinkRef)> = Vec::with_capacity(cfg.fragments);
-    for f in 0..cfg.fragments {
-        let outs = sink.submit(SubmitSpec {
+    // (fill includes the X beta product for y). Batched: one control-lock
+    // acquisition for the whole generation loop on the live runtime.
+    let fill_specs: Vec<SubmitSpec> = (0..cfg.fragments)
+        .map(|f| SubmitSpec {
             ty: "LR_fill_fragment",
             args: vec![(cfg.seed as i32).into(), (f as i32).into()],
             n_outputs: 2,
             out_bytes: vec![mat_bytes(n, p), vec_bytes(n)],
             cost_units: (n * p) as f64,
             gemm_class: true,
-        })?;
-        frags.push((outs[0], outs[1]));
-    }
+        })
+        .collect();
+    let frags: Vec<(SinkRef, SinkRef)> = sink
+        .submit_batch(fill_specs)?
+        .into_iter()
+        .map(|outs| (outs[0], outs[1]))
+        .collect();
 
-    // Partial moments (red partial_ztz, pink partial_zty).
+    // Partial moments (red partial_ztz, pink partial_zty), batched as one
+    // interleaved loop: [ztz(f0), zty(f0), ztz(f1), zty(f1), ...] — the
+    // submission order (and so the DAG) is identical to the seed's.
+    let mut partial_specs: Vec<SubmitSpec> = Vec::with_capacity(2 * frags.len());
+    for (x, y) in &frags {
+        partial_specs.push(SubmitSpec {
+            ty: "partial_ztz",
+            args: vec![(*x).into()],
+            n_outputs: 1,
+            out_bytes: vec![mat_bytes(p, p)],
+            cost_units: (n * p * p) as f64,
+            gemm_class: true,
+        });
+        partial_specs.push(SubmitSpec {
+            ty: "partial_zty",
+            args: vec![(*x).into(), (*y).into()],
+            n_outputs: 1,
+            out_bytes: vec![vec_bytes(p)],
+            cost_units: (n * p) as f64,
+            gemm_class: true,
+        });
+    }
+    let partial_refs = sink.submit_batch(partial_specs)?;
     let mut ztzs: Vec<SinkRef> = Vec::with_capacity(cfg.fragments);
     let mut ztys: Vec<SinkRef> = Vec::with_capacity(cfg.fragments);
-    for (x, y) in &frags {
-        ztzs.push(
-            sink.submit(SubmitSpec {
-                ty: "partial_ztz",
-                args: vec![(*x).into()],
-                n_outputs: 1,
-                out_bytes: vec![mat_bytes(p, p)],
-                cost_units: (n * p * p) as f64,
-                gemm_class: true,
-            })?[0],
-        );
-        ztys.push(
-            sink.submit(SubmitSpec {
-                ty: "partial_zty",
-                args: vec![(*x).into(), (*y).into()],
-                n_outputs: 1,
-                out_bytes: vec![vec_bytes(p)],
-                cost_units: (n * p) as f64,
-                gemm_class: true,
-            })?[0],
-        );
+    for pair in partial_refs.chunks(2) {
+        ztzs.push(pair[0][0]);
+        ztys.push(pair[1][0]);
     }
 
     // Merge trees (dark red).

@@ -76,6 +76,13 @@ pub struct SubmitSpec {
 /// Where planners send their task graph.
 pub trait TaskSink {
     fn submit(&mut self, spec: SubmitSpec) -> Result<Vec<SinkRef>>;
+    /// Submit a whole partition loop at once, in order. The default simply
+    /// loops [`TaskSink::submit`] (so the simulator's DAG is identical);
+    /// the live sink overrides it to amortize the runtime's control lock
+    /// across the batch.
+    fn submit_batch(&mut self, specs: Vec<SubmitSpec>) -> Result<Vec<Vec<SinkRef>>> {
+        specs.into_iter().map(|s| self.submit(s)).collect()
+    }
     /// Synchronization point on one datum (`compss_wait_on` in the DAGs).
     fn sync(&mut self, r: SinkRef) -> Result<()>;
     /// Global barrier (end-of-app `sync` node).
@@ -157,6 +164,55 @@ impl TaskSink for LiveSink<'_> {
             sink_refs.push(sr);
         }
         Ok(sink_refs)
+    }
+
+    fn submit_batch(&mut self, specs: Vec<SubmitSpec>) -> Result<Vec<Vec<SinkRef>>> {
+        // Resolve every argument first (errors surface before anything is
+        // submitted), then hand the whole batch to the runtime under one
+        // control-lock acquisition.
+        let mut calls: Vec<(&RegisteredTask, Vec<TaskArg>)> = Vec::with_capacity(specs.len());
+        for spec in &specs {
+            let task = self
+                .tasks
+                .get(spec.ty)
+                .ok_or_else(|| anyhow::anyhow!("no body registered for task type '{}'", spec.ty))?;
+            let args: Vec<TaskArg> = spec
+                .args
+                .iter()
+                .map(|a| match a {
+                    SinkArg::Lit(v) => Ok(TaskArg::Value(v.clone())),
+                    SinkArg::Ref(r) => {
+                        let dref = self
+                            .refs
+                            .get(r)
+                            .ok_or_else(|| anyhow::anyhow!("dangling sink ref {r:?}"))?;
+                        Ok(TaskArg::Future(*dref))
+                    }
+                })
+                .collect::<Result<_>>()?;
+            calls.push((task, args));
+        }
+        let batched = self.rt.submit_batch(&calls)?;
+        drop(calls);
+        let mut all_refs = Vec::with_capacity(batched.len());
+        for (spec, outs) in specs.iter().zip(batched) {
+            anyhow::ensure!(
+                outs.len() == spec.n_outputs,
+                "task '{}': planner declared {} outputs, runtime produced {}",
+                spec.ty,
+                spec.n_outputs,
+                outs.len()
+            );
+            let mut sink_refs = Vec::with_capacity(outs.len());
+            for dref in outs {
+                self.next += 1;
+                let sr = SinkRef(self.next);
+                self.refs.insert(sr, dref);
+                sink_refs.push(sr);
+            }
+            all_refs.push(sink_refs);
+        }
+        Ok(all_refs)
     }
 
     fn sync(&mut self, r: SinkRef) -> Result<()> {

@@ -65,9 +65,17 @@ pub fn record_result(bench: &str, fields: Vec<(&str, Json)>) {
 /// crate root (committed alongside the code so the perf trajectory is
 /// tracked in-repo). Entries are the same `(key, value)` rows that
 /// [`record_result`] appends to the JSONL stream.
+///
+/// Files written by an actual bench run are stamped `"projected": false` /
+/// `"status": "measured"`. A committed copy that was estimated by hand (no
+/// toolchain on the authoring machine) must carry `"projected": true`
+/// instead, so stale committed numbers can never be mistaken for measured
+/// ones — see README § Benchmarks.
 pub fn write_json_summary(name: &str, entries: Vec<Json>) {
     let doc = obj(vec![
         ("bench", Json::Str(name.to_string())),
+        ("projected", Json::Bool(false)),
+        ("status", Json::Str("measured".to_string())),
         ("results", Json::Arr(entries)),
     ]);
     let path = format!("BENCH_{name}.json");

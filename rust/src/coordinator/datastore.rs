@@ -107,6 +107,10 @@ pub struct DataStore {
     misses: AtomicU64,
     spills: AtomicU64,
     spill_bytes: AtomicU64,
+    /// Cross-node consumptions that ran the codec *synchronously on the
+    /// claim path* (the seed behavior). With the async transfer service on,
+    /// this stays zero: movers run the codec, claimants get staged bytes.
+    sync_transfer_decodes: AtomicU64,
 }
 
 impl DataStore {
@@ -120,6 +124,7 @@ impl DataStore {
             misses: AtomicU64::new(0),
             spills: AtomicU64::new(0),
             spill_bytes: AtomicU64::new(0),
+            sync_transfer_decodes: AtomicU64::new(0),
         }
     }
 
@@ -257,6 +262,40 @@ impl DataStore {
                 inner.resident += e.bytes;
             }
         }
+    }
+
+    /// Drop a version the GC reclaimed: the entry disappears immediately
+    /// (no two-phase dance — the caller guarantees no consumer reference
+    /// remains). Returns the payload bytes freed. An entry mid-spill is
+    /// removed too; its in-flight spill writer finishes harmlessly against
+    /// a missing entry.
+    pub fn remove(&self, key: DataKey) -> Option<u64> {
+        if !self.enabled() {
+            return None;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        match inner.map.remove(&key) {
+            Some(e) => {
+                if !e.spilling {
+                    inner.resident = inner.resident.saturating_sub(e.bytes);
+                }
+                Some(e.bytes)
+            }
+            None => None,
+        }
+    }
+
+    /// Count a synchronous cross-node codec round-trip on a claim path
+    /// (the fallback when the transfer service is disabled or a transfer
+    /// failed). The async-transfer acceptance tests assert this is zero.
+    pub fn note_sync_transfer_decode(&self) {
+        self.sync_transfer_decodes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Synchronous cross-node codec round-trips taken on claim paths.
+    pub fn sync_transfer_decode_count(&self) -> u64 {
+        self.sync_transfer_decodes.load(Ordering::Relaxed)
     }
 
     /// Mark that an up-to-date serialized file now exists for a cached
@@ -402,6 +441,42 @@ mod tests {
         assert!(victims[0].has_file, "reload carries the has_file mark");
         s.finish_spill(key(1, 1), false, 0); // free eviction: no codec ran
         assert_eq!(s.spill_count(), 0);
+    }
+
+    #[test]
+    fn remove_frees_bytes_and_counts_nothing() {
+        let s = DataStore::new(1 << 20, SpillPolicy::Lru);
+        assert!(s.put(key(1, 1), val(10), false).is_empty());
+        assert_eq!(s.resident_bytes(), 80);
+        assert_eq!(s.remove(key(1, 1)), Some(80));
+        assert_eq!(s.resident_bytes(), 0);
+        assert!(s.get(key(1, 1)).is_none());
+        // Removing again (or an unknown key) is a no-op.
+        assert_eq!(s.remove(key(1, 1)), None);
+        assert_eq!(s.spill_count(), 0, "GC removal is not a spill");
+    }
+
+    #[test]
+    fn remove_of_spilling_entry_does_not_underflow_resident() {
+        let s = DataStore::new(100, SpillPolicy::Lru);
+        // 400 B value over a 100 B budget: immediately selected for spill,
+        // which already deducted it from `resident`.
+        let victims = s.put(key(1, 1), val(50), false);
+        assert_eq!(victims.len(), 1);
+        assert_eq!(s.remove(key(1, 1)), Some(400));
+        assert_eq!(s.resident_bytes(), 0);
+        // The in-flight spill completion finds nothing and stays harmless.
+        s.finish_spill(key(1, 1), true, 400);
+        assert_eq!(s.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn sync_transfer_decode_counter_ticks() {
+        let s = DataStore::new(1 << 20, SpillPolicy::Lru);
+        assert_eq!(s.sync_transfer_decode_count(), 0);
+        s.note_sync_transfer_decode();
+        s.note_sync_transfer_decode();
+        assert_eq!(s.sync_transfer_decode_count(), 2);
     }
 
     #[test]

@@ -24,8 +24,10 @@
 use std::sync::Arc;
 
 use crate::coordinator::dag::TaskState;
-use crate::coordinator::registry::DataKey;
-use crate::coordinator::runtime::{spill_victims, Core, Shared, TaskMeta};
+use crate::coordinator::registry::{DataKey, NodeId};
+use crate::coordinator::runtime::{
+    reap_if_drained, release_inputs, spill_victims, Core, Shared, TaskMeta,
+};
 use crate::trace::{EventKind, WorkerId};
 use crate::value::RValue;
 
@@ -35,7 +37,9 @@ use crate::value::RValue;
 ///
 /// Only called for values already marked available, whose producer always
 /// publishes the store entry or the spill path first — the yield loop can
-/// only spin across the instants of a concurrent eviction.
+/// only spin across the instants of a concurrent eviction. A version the
+/// GC reclaimed is an error, never a hang (the refcount protocol makes
+/// this unreachable from a live claim path).
 pub(crate) fn fetch_resident(
     shared: &Shared,
     key: DataKey,
@@ -51,34 +55,53 @@ pub(crate) fn fetch_resident(
             spill_victims(shared, victims);
             return Ok((v, true, bytes));
         }
+        if shared.table.is_collected(key) {
+            anyhow::bail!("datum {key} was reclaimed by the version GC");
+        }
         std::thread::yield_now();
     }
 }
 
 /// Make sure a serialized file exists for `key` (cross-node transfer
-/// boundary): publish a spill file from the store if none does.
-fn ensure_file(shared: &Shared, key: DataKey) -> anyhow::Result<std::path::PathBuf> {
+/// boundary): publish a spill file from the store if none does. Shared by
+/// the mover threads (the common path) and the synchronous fallback.
+pub(crate) fn ensure_file(shared: &Shared, key: DataKey) -> anyhow::Result<std::path::PathBuf> {
     loop {
         if let Some(p) = shared.table.path_of(key) {
             return Ok(p);
         }
         if let Some(v) = shared.store.get(key) {
             let (bytes, path) = crate::coordinator::runtime::write_spill_file(shared, key, &v)?;
-            shared.table.mark_spilled(key, bytes, path.clone());
+            if !shared.table.mark_spilled(key, bytes, path.clone()) {
+                let _ = std::fs::remove_file(&path);
+                anyhow::bail!("datum {key} was reclaimed by the version GC");
+            }
             shared.store.note_file(key);
             return Ok(path);
+        }
+        if shared.table.is_collected(key) {
+            anyhow::bail!("datum {key} was reclaimed by the version GC");
         }
         // Mid-eviction: the spill path is about to be published.
         std::thread::yield_now();
     }
 }
 
-/// Gather one input. Returns `(value, decoded, file_bytes)` where
-/// `decoded` marks an actual codec invocation (drives the Deserialize
-/// trace event and byte stats).
-fn acquire_input(
+/// Gather one input for a worker on `node`. Returns
+/// `(value, decoded, file_bytes)` where `decoded` marks an actual codec
+/// invocation on this (claim) path — it drives the Deserialize trace event
+/// and byte stats.
+///
+/// Cross-node inputs are normally staged by a mover thread before the
+/// claim (schedule-time prefetch); the claimant then takes the zero-copy
+/// fast path. It parks on the transfer only when the bytes are not there
+/// at the moment it actually needs them, and runs the codec itself only as
+/// a last-resort fallback (service disabled or transfer failed) — the
+/// counted seed behavior.
+pub(crate) fn acquire_input(
     shared: &Shared,
     key: DataKey,
+    node: NodeId,
     was_local: bool,
 ) -> anyhow::Result<(Arc<RValue>, bool, u64)> {
     if !shared.store.enabled() {
@@ -88,17 +111,31 @@ fn acquire_input(
         let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
         return Ok((Arc::new(v), true, bytes));
     }
-    if was_local {
+    if was_local || shared.table.is_local(key, node) {
+        // Node-local, or staged by a mover since routing: zero-copy handle
+        // (or a pressure-spill reload).
         return fetch_resident(shared, key);
     }
-    // Cross-node consumption is a spill boundary: the value crosses the
-    // codec even when it is memory-resident, keeping the emulated transfer
-    // honest. The decoded replica is cached for later same-node consumers.
+    if shared.transfers.enabled() {
+        match shared.transfers.await_staged(key, node) {
+            Ok(()) => return fetch_resident(shared, key),
+            Err(e) => eprintln!(
+                "[rcompss] transfer of {key} to node {} failed ({e}); \
+                 falling back to a synchronous reload",
+                node.0
+            ),
+        }
+    }
+    // Synchronous fallback (the seed behavior): the claim path itself runs
+    // the cross-node codec round-trip. Counted — the transfer tests assert
+    // this stays zero while the service is on and healthy.
+    shared.store.note_sync_transfer_decode();
     let path = ensure_file(shared, key)?;
     let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
     let v = Arc::new(shared.codec.read_file(&path)?);
     let victims = shared.store.put(key, Arc::clone(&v), true);
     spill_victims(shared, victims);
+    shared.table.add_location(key, node);
     Ok((v, true, bytes))
 }
 
@@ -114,12 +151,17 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
             Arc::clone(&core.meta[&id])
         };
         // Locality accounting against the sharded table, outside all locks.
+        // On the memory plane the location of a cross-node input is
+        // published by whoever actually stages the bytes (mover or
+        // fallback); on the file plane the codec read below stages them
+        // implicitly, so the claim records the location up front as the
+        // seed runtime did.
         let inputs: Vec<(DataKey, bool)> = meta
             .inputs
             .iter()
             .map(|k| {
                 let local = shared.table.is_local(*k, wid.node);
-                if !local {
+                if !local && !shared.store.enabled() {
                     shared.table.add_location(*k, wid.node);
                 }
                 (*k, local)
@@ -143,7 +185,7 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
                     .tracer
                     .record_at(wid, EventKind::Transfer, Some(id), t, t);
             }
-            match acquire_input(&shared, *key, *was_local) {
+            match acquire_input(&shared, *key, wid.node, *was_local) {
                 Ok((v, decoded, bytes)) => {
                     args.push(v);
                     input_bytes += bytes;
@@ -207,13 +249,16 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
                     ));
                 } else if shared.store.enabled() {
                     // Memory plane: the store takes ownership; the codec
-                    // runs only if memory pressure spills a victim.
+                    // runs only if memory pressure spills a victim. The
+                    // reap covers outputs whose consumers were all
+                    // cancelled while this task was still running.
                     for (key, value) in meta.outputs.iter().zip(outputs.into_iter()) {
                         let value = Arc::new(value);
                         let nbytes = value.byte_size() as u64;
                         let victims = shared.store.put(*key, Arc::clone(&value), false);
                         shared.table.mark_available_memory(*key, wid.node, nbytes);
                         spill_victims(&shared, victims);
+                        reap_if_drained(&shared, *key);
                     }
                 } else {
                     // File plane: byte-identical to the seed runtime.
@@ -237,6 +282,7 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
                         for (key, bytes, path) in produced {
                             shared.table.mark_available(key, wid.node, bytes, path);
                             produced_bytes += bytes;
+                            reap_if_drained(&shared, key);
                         }
                     }
                 }
@@ -251,42 +297,64 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
                     );
                 }
 
-                let mut core = shared.core.lock().unwrap();
-                if let Some(e) = ser_error {
-                    handle_failure(&shared, &mut core, id, &meta, wid, e);
-                } else {
-                    core.stats.bytes_serialized += produced_bytes;
-                    core.stats.bytes_deserialized += input_bytes;
-                    core.stats.deserialize_s += deser_end - deser_start;
-                    core.stats.serialize_s += ser_end - ser_start;
-                    core.stats.exec_s += exec_end - exec_start;
-                    let per = core
-                        .stats
-                        .per_type
-                        .entry(meta.spec.name.clone())
-                        .or_insert((0, 0.0));
-                    per.0 += 1;
-                    per.1 += exec_end - exec_start;
-                    core.stats.tasks_done += 1;
-                    let newly_ready = core.graph.complete(id);
-                    let core = &mut *core;
-                    for t in newly_ready {
-                        shared.enqueue_ready(core, t);
+                let mut success = false;
+                let to_release = {
+                    let mut core = shared.core.lock().unwrap();
+                    if let Some(e) = ser_error {
+                        handle_failure(&shared, &mut core, id, &meta, wid, e)
+                    } else {
+                        core.stats.bytes_serialized += produced_bytes;
+                        core.stats.bytes_deserialized += input_bytes;
+                        core.stats.deserialize_s += deser_end - deser_start;
+                        core.stats.serialize_s += ser_end - ser_start;
+                        core.stats.exec_s += exec_end - exec_start;
+                        let per = core
+                            .stats
+                            .per_type
+                            .entry(meta.spec.name.clone())
+                            .or_insert((0, 0.0));
+                        per.0 += 1;
+                        per.1 += exec_end - exec_start;
+                        core.stats.tasks_done += 1;
+                        let newly_ready = core.graph.complete(id);
+                        let core = &mut *core;
+                        for t in newly_ready {
+                            shared.enqueue_ready(core, t);
+                        }
+                        shared.cv_done.notify_all();
+                        success = true;
+                        Vec::new()
                     }
-                    shared.cv_done.notify_all();
+                };
+                // Outside the control lock: drop this task's consumer
+                // references. On success the inputs were consumed exactly
+                // once; on permanent failure the references of the failed
+                // task and its cancelled dependents are in `to_release`.
+                // The version GC reclaims whatever drained to zero.
+                if success {
+                    release_inputs(&shared, &meta.inputs);
+                } else {
+                    release_inputs(&shared, &to_release);
                 }
             }
             Err(e) => {
-                let mut core = shared.core.lock().unwrap();
-                core.stats.bytes_deserialized += input_bytes;
-                core.stats.deserialize_s += deser_end - deser_start;
-                handle_failure(&shared, &mut core, id, &meta, wid, e);
+                let to_release = {
+                    let mut core = shared.core.lock().unwrap();
+                    core.stats.bytes_deserialized += input_bytes;
+                    core.stats.deserialize_s += deser_end - deser_start;
+                    handle_failure(&shared, &mut core, id, &meta, wid, e)
+                };
+                release_inputs(&shared, &to_release);
             }
         }
     }
 }
 
 /// Failure path: resubmit within budget, else fail + cancel downstream.
+/// Returns the consumer references to release once the control lock is
+/// dropped: empty on resubmission (the retry consumes the inputs again),
+/// the failed task's and every cancelled dependent's inputs on permanent
+/// failure (none of them will ever consume).
 fn handle_failure(
     shared: &Arc<Shared>,
     core: &mut Core,
@@ -294,7 +362,7 @@ fn handle_failure(
     meta: &Arc<TaskMeta>,
     wid: WorkerId,
     err: anyhow::Error,
-) {
+) -> Vec<DataKey> {
     let attempts = core.graph.node(id).map(|n| n.attempts).unwrap_or(u32::MAX);
     if shared.retry.may_retry(attempts) {
         // COMPSs-style resubmission: back to the ready queues; any worker
@@ -306,6 +374,7 @@ fn handle_failure(
             "[rcompss] task {} '{}' failed on {wid} (attempt {attempts}): {err}; resubmitting",
             id, meta.spec.name
         );
+        Vec::new()
     } else {
         let cancelled = core.graph.fail(id);
         core.stats.tasks_failed += 1;
@@ -317,6 +386,13 @@ fn handle_failure(
             meta.spec.name,
             cancelled.len()
         );
+        let mut keys: Vec<DataKey> = meta.inputs.clone();
+        for t in &cancelled {
+            if let Some(m) = core.meta.get(t) {
+                keys.extend(m.inputs.iter().copied());
+            }
+        }
         shared.cv_done.notify_all();
+        keys
     }
 }

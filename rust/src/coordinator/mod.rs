@@ -44,19 +44,34 @@
 //! | dispatch (ready tasks) | [`scheduler::ShardedReady`]: per-node policy shards + park lot | workers pop/steal; submit & completions push |
 //! | location (where each `dXvY` lives) | [`registry::VersionTable`]: 16 `RwLock` shards | workers on every claim/publish, lock-free of control |
 //! | values (the bytes themselves) | [`datastore::DataStore`]: mutexed `Arc<RValue>` cache | producers put, consumers get zero-copy handles |
+//! | movement (cross-node staging) | [`transfer::TransferService`]: per-node request queues + mover threads | routing prefetches, movers stage, claimants park |
 //!
 //! Lock ordering: the control lock may be held while touching the leaf
-//! domains (dispatch shards, table shards, store); leaf locks never nest
-//! into each other or back into control. `cv_done` waiters recheck state
-//! guarded by leaves only after a completion has re-acquired the control
-//! lock, which rules out missed wakeups.
+//! domains (dispatch shards, table shards, store, transfer board); leaf
+//! locks never nest into each other or back into control. `cv_done`
+//! waiters recheck state guarded by leaves only after a completion has
+//! re-acquired the control lock, which rules out missed wakeups.
+//!
+//! # Value lifecycle
+//!
+//! Every `dXvY` version moves through: **produce** (task output or
+//! literal) → **cache** (zero-copy `Arc` in the store) → **transfer /
+//! prefetch** (movers stage replicas on consumer nodes at schedule time) →
+//! **consume** (zero-copy claim) → **GC / spill** (last registered
+//! consumer done ⇒ reclaimed; memory pressure ⇒ spilled through the
+//! codec). See `ARCHITECTURE.md` at the repository root for the full
+//! narrative, the lifecycle diagram, and the locking rules.
 //!
 //! **Data-plane knobs** (`runtime::CoordinatorConfig`): `memory_budget`
-//! (bytes; 0 = file plane, byte-identical to the seed runtime) and `spill`
-//! (`"lru"` | `"largest"`). With the memory plane on, the configured codec
+//! (bytes; 0 = file plane, byte-identical to the seed runtime), `spill`
+//! (`"lru"` | `"largest"`), `transfer_threads` (movers per emulated node;
+//! 0 = synchronous seed-style cross-node reloads), and `gc` (reference-
+//! counted version GC). With the memory plane on, the configured codec
 //! runs only at spill boundaries: memory pressure, cross-node transfer,
-//! and reloads of spilled values. A node-local RAW chain therefore
-//! executes with zero file I/O and zero serialization.
+//! and reloads of spilled values — and with `transfer_threads > 0` the
+//! cross-node boundary runs on mover threads, never on a claiming
+//! worker's critical path. A node-local RAW chain therefore executes with
+//! zero file I/O and zero serialization.
 
 pub mod access;
 pub mod dag;
@@ -66,9 +81,11 @@ pub mod fault;
 pub mod registry;
 pub mod runtime;
 pub mod scheduler;
+pub mod transfer;
 
 pub use access::Direction;
 pub use dag::{EdgeKind, TaskGraph, TaskId, TaskState};
 pub use datastore::{DataStore, SpillPolicy};
 pub use registry::{DataKey, DataRegistry, NodeId, VersionTable};
 pub use runtime::{Coordinator, CoordinatorConfig, SubmitOutcome};
+pub use transfer::TransferService;

@@ -72,6 +72,34 @@ pub struct VersionInfo {
     /// Backing file (file plane or spilled); empty for memory-resident
     /// values and in pure simulation.
     pub path: PathBuf,
+    /// Consumer tasks registered by the dependency analysis that have not
+    /// yet finished consuming this version (one count per reading argument;
+    /// see `DataRegistry::record_read`).
+    pub consumers_left: u32,
+    /// Consumer references ever registered. Distinguishes a *drained*
+    /// intermediate (`consumers_total > 0 && consumers_left == 0`, dead)
+    /// from a terminal output nothing ever read (`consumers_total == 0`,
+    /// live until the application fetches it).
+    pub consumers_total: u32,
+    /// Pinned by `wait_on`: the master may fetch this version again, so
+    /// the version GC must never reclaim it.
+    pub pinned: bool,
+    /// Reclaimed by the version GC: the store entry was dropped and any
+    /// spill file deleted. A collected version can never be fetched again.
+    pub collected: bool,
+}
+
+/// What the version GC must free once the last consumer reference of a
+/// version is released. Computed atomically under the shard lock by
+/// [`VersionTable::release_consumer`]; the caller performs the actual
+/// freeing (store removal, file deletion) outside the lock.
+#[derive(Debug)]
+pub struct CollectAction {
+    pub key: DataKey,
+    /// Published spill/parameter file to delete, when one exists.
+    pub path: Option<PathBuf>,
+    /// Recorded size of the version (serialized size or payload estimate).
+    pub bytes: u64,
 }
 
 /// Sharded version/location table. Every method takes `&self`; shard locks
@@ -168,11 +196,17 @@ impl VersionTable {
 
     /// Publish the spill file of a memory-resident version. The value may
     /// stay cached (spill-for-transfer), so `in_memory` is left as-is.
-    pub fn mark_spilled(&self, key: DataKey, bytes: u64, path: PathBuf) {
+    /// Returns `false` — without publishing — when the GC collected the
+    /// version in the meantime (the caller must delete the orphan file).
+    pub fn mark_spilled(&self, key: DataKey, bytes: u64, path: PathBuf) -> bool {
         let mut shard = self.shard(key).write().unwrap();
         let info = shard.get_mut(&key).expect("spill of unknown version");
+        if info.collected {
+            return false;
+        }
         info.bytes = bytes;
         info.path = path;
+        true
     }
 
     /// Record that `node` now also holds a replica (after a transfer).
@@ -182,6 +216,93 @@ impl VersionTable {
         if !info.locations.contains(&node) {
             info.locations.push(node);
         }
+    }
+
+    /// Register one consumer reference (a task argument that reads this
+    /// version). Called by the dependency analysis at submission time.
+    pub fn add_consumer(&self, key: DataKey) {
+        let mut shard = self.shard(key).write().unwrap();
+        let info = shard.get_mut(&key).expect("consumer on unknown version");
+        info.consumers_left += 1;
+        info.consumers_total += 1;
+    }
+
+    /// Pin a version so the GC never reclaims it (`wait_on` does this
+    /// before checking availability, closing the race against the last
+    /// consumer's release). Returns `false` for an unknown version.
+    pub fn pin(&self, key: DataKey) -> bool {
+        let mut shard = self.shard(key).write().unwrap();
+        match shard.get_mut(&key) {
+            Some(info) => {
+                info.pinned = true;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Has the version GC reclaimed this version?
+    pub fn is_collected(&self, key: DataKey) -> bool {
+        self.shard(key)
+            .read()
+            .unwrap()
+            .get(&key)
+            .map(|i| i.collected)
+            .unwrap_or(false)
+    }
+
+    /// Release one consumer reference. With `collect` set (the runtime's
+    /// GC knob), the version is atomically marked collected when this was
+    /// the last reference on an unpinned, produced, at-least-once-consumed
+    /// version; the returned action tells the caller what to free. The
+    /// shard lock makes the mark exclusive: two racing releasers can never
+    /// both receive an action for the same version.
+    pub fn release_consumer(&self, key: DataKey, collect: bool) -> Option<CollectAction> {
+        let mut shard = self.shard(key).write().unwrap();
+        let info = shard.get_mut(&key)?;
+        info.consumers_left = info.consumers_left.saturating_sub(1);
+        if collect {
+            try_mark_collected(key, info)
+        } else {
+            None
+        }
+    }
+
+    /// Publish-side half of the GC: collect a version whose consumers all
+    /// disappeared (cancelled) *before* it became available — its final
+    /// `release_consumer` found `available == false` and could not act.
+    /// The runtime calls this right after `mark_available*` on the worker
+    /// publish paths.
+    pub fn reap_if_drained(&self, key: DataKey, collect: bool) -> Option<CollectAction> {
+        if !collect {
+            return None;
+        }
+        let mut shard = self.shard(key).write().unwrap();
+        let info = shard.get_mut(&key)?;
+        try_mark_collected(key, info)
+    }
+
+    /// Bytes held by *dead* versions: fully consumed, unpinned, produced,
+    /// and not yet reclaimed. With the version GC enabled this is zero at
+    /// quiescence — the acceptance metric for the value-lifecycle engine.
+    pub fn dead_bytes(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| {
+                s.read()
+                    .unwrap()
+                    .values()
+                    .filter(|i| {
+                        i.available
+                            && !i.collected
+                            && !i.pinned
+                            && i.consumers_total > 0
+                            && i.consumers_left == 0
+                    })
+                    .map(|i| i.bytes)
+                    .sum::<u64>()
+            })
+            .sum()
     }
 
     /// Number of live versions (for stats).
@@ -195,6 +316,34 @@ impl VersionTable {
             .iter()
             .map(|s| s.read().unwrap().values().map(|v| v.bytes).sum::<u64>())
             .sum()
+    }
+}
+
+/// Shared collection gate (called under the owning shard's write lock):
+/// mark a drained, unpinned, produced, at-least-once-consumed version as
+/// collected and describe what to free. At most one caller ever receives
+/// the action for a given version.
+fn try_mark_collected(key: DataKey, info: &mut VersionInfo) -> Option<CollectAction> {
+    if info.consumers_left == 0
+        && info.consumers_total > 0
+        && !info.pinned
+        && !info.collected
+        && info.available
+    {
+        info.collected = true;
+        info.in_memory = false;
+        let path = if info.path.as_os_str().is_empty() {
+            None
+        } else {
+            Some(std::mem::take(&mut info.path))
+        };
+        Some(CollectAction {
+            key,
+            path,
+            bytes: info.bytes,
+        })
+    } else {
+        None
     }
 }
 
@@ -263,6 +412,10 @@ impl DataRegistry {
                 locations: vec![node],
                 bytes,
                 path: PathBuf::new(),
+                consumers_left: 0,
+                consumers_total: 0,
+                pinned: false,
+                collected: false,
             },
         );
         self.history.insert(key.data, AccessHistory::default());
@@ -287,6 +440,10 @@ impl DataRegistry {
                 locations: Vec::new(),
                 bytes: 0,
                 path: PathBuf::new(),
+                consumers_left: 0,
+                consumers_total: 0,
+                pinned: false,
+                collected: false,
             },
         );
         self.history.insert(
@@ -306,10 +463,13 @@ impl DataRegistry {
 
     /// Record a read of the datum's latest version by `reader`.
     /// Returns the key read and the task to depend on (RAW), if any.
+    /// Also registers one consumer reference in the version table — the
+    /// count the version GC drains as readers finish.
     pub fn record_read(&mut self, data: DataId, reader: TaskId) -> (DataKey, Option<TaskId>) {
         let key = self.latest_key(data).expect("read of unknown datum");
         let hist = self.history.get_mut(&data).expect("history missing");
         hist.readers_since_write.push(reader);
+        self.table.add_consumer(key);
         (key, hist.last_writer)
     }
 
@@ -332,6 +492,10 @@ impl DataRegistry {
                 locations: Vec::new(),
                 bytes: 0,
                 path: PathBuf::new(),
+                consumers_left: 0,
+                consumers_total: 0,
+                pinned: false,
+                collected: false,
             },
         );
         let hist = self.history.get_mut(&data).expect("history missing");
@@ -483,6 +647,112 @@ mod tests {
         assert!(table.is_available(key));
         assert_eq!(table.path_of(key).unwrap(), PathBuf::from("/tmp/d1v1.par"));
         assert_eq!(table.info(key).unwrap().bytes, 300);
+    }
+
+    #[test]
+    fn consumer_refcount_collects_on_last_release() {
+        let table = Arc::new(VersionTable::new());
+        let mut reg = DataRegistry::with_table(Arc::clone(&table));
+        let key = reg.new_future(T1);
+        table.mark_available_memory(key, NodeId(0), 256);
+        // Two readers registered by the dependency analysis.
+        reg.record_read(key.data, T2);
+        reg.record_read(key.data, T3);
+        assert_eq!(table.info(key).unwrap().consumers_left, 2);
+        // A pending consumer (e.g. one whose bytes are still being
+        // transferred cross-node) keeps the version alive.
+        assert!(table.release_consumer(key, true).is_none());
+        assert!(!table.is_collected(key));
+        // Last release collects.
+        let act = table.release_consumer(key, true).expect("collect on last release");
+        assert_eq!(act.key, key);
+        assert_eq!(act.bytes, 256);
+        assert!(act.path.is_none(), "memory-resident version has no file");
+        assert!(table.is_collected(key));
+        // Idempotent: further releases never double-collect.
+        assert!(table.release_consumer(key, true).is_none());
+    }
+
+    #[test]
+    fn pinned_versions_survive_release() {
+        let table = Arc::new(VersionTable::new());
+        let mut reg = DataRegistry::with_table(Arc::clone(&table));
+        let key = reg.new_future(T1);
+        table.mark_available_memory(key, NodeId(0), 64);
+        reg.record_read(key.data, T2);
+        assert!(table.pin(key), "pin of a known version succeeds");
+        assert!(table.release_consumer(key, true).is_none());
+        assert!(!table.is_collected(key));
+        assert!(!table.pin(DataKey { data: DataId(999), version: 1 }));
+    }
+
+    #[test]
+    fn publish_side_reap_collects_pre_drained_versions() {
+        let table = Arc::new(VersionTable::new());
+        let mut reg = DataRegistry::with_table(Arc::clone(&table));
+        let key = reg.new_future(T1);
+        reg.record_read(key.data, T2);
+        // T2 is cancelled while the producer still runs: its release finds
+        // the version unavailable and must not collect.
+        assert!(table.release_consumer(key, true).is_none());
+        assert!(!table.is_collected(key));
+        // The producer finally publishes; the publish-side sweep reclaims
+        // the drained version instead of leaking it.
+        table.mark_available_memory(key, NodeId(0), 64);
+        let act = table.reap_if_drained(key, true).expect("drained at publish");
+        assert_eq!(act.bytes, 64);
+        assert!(table.is_collected(key));
+        assert_eq!(table.dead_bytes(), 0);
+        // Never-consumed terminal outputs are not reaped...
+        let key2 = reg.new_future(T3);
+        table.mark_available_memory(key2, NodeId(0), 8);
+        assert!(table.reap_if_drained(key2, true).is_none());
+        // ...and with the GC off the sweep is inert.
+        let key3 = reg.new_future(T1);
+        reg.record_read(key3.data, T2);
+        table.mark_available_memory(key3, NodeId(0), 8);
+        assert!(table.release_consumer(key3, false).is_none());
+        assert!(table.reap_if_drained(key3, false).is_none());
+    }
+
+    #[test]
+    fn gc_disabled_releases_never_collect() {
+        let table = Arc::new(VersionTable::new());
+        let mut reg = DataRegistry::with_table(Arc::clone(&table));
+        let key = reg.new_future(T1);
+        table.mark_available_memory(key, NodeId(0), 128);
+        reg.record_read(key.data, T2);
+        assert!(table.release_consumer(key, false).is_none());
+        assert!(!table.is_collected(key));
+        // Fully consumed, unpinned, unreclaimed: counted as dead bytes.
+        assert_eq!(table.dead_bytes(), 128);
+    }
+
+    #[test]
+    fn terminal_outputs_are_not_dead() {
+        let table = Arc::new(VersionTable::new());
+        let mut reg = DataRegistry::with_table(Arc::clone(&table));
+        let key = reg.new_future(T1);
+        table.mark_available_memory(key, NodeId(0), 512);
+        // No consumer was ever registered: the version is a live result,
+        // not a dead intermediate.
+        assert_eq!(table.dead_bytes(), 0);
+        assert!(table.release_consumer(key, true).is_none());
+        assert!(!table.is_collected(key));
+    }
+
+    #[test]
+    fn collect_action_carries_spill_path() {
+        let table = Arc::new(VersionTable::new());
+        let mut reg = DataRegistry::with_table(Arc::clone(&table));
+        let key = reg.new_future(T1);
+        table.mark_available_memory(key, NodeId(0), 64);
+        table.mark_spilled(key, 80, PathBuf::from("/tmp/d1v1.par"));
+        reg.record_read(key.data, T2);
+        let act = table.release_consumer(key, true).expect("collect");
+        assert_eq!(act.path.as_deref(), Some(std::path::Path::new("/tmp/d1v1.par")));
+        // The path is cleared so no reader can reach the deleted file.
+        assert!(table.path_of(key).is_none());
     }
 
     #[test]

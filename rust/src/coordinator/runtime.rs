@@ -11,17 +11,19 @@
 //! [`super::executor`]) pull, gather inputs, execute, and publish outputs
 //! asynchronously.
 //!
-//! Locking layout (see `coordinator/mod.rs` § *Data plane & locking*): the
-//! control lock ([`Core`]) now guards only the DAG, the dependency half of
-//! the registry, task metadata, and stats. Ready-task dispatch lives in
-//! [`ShardedReady`], version locations in the sharded
-//! [`VersionTable`](crate::coordinator::registry::VersionTable), and
-//! produced values in the [`DataStore`] — workers touch the control lock
-//! only to flip task states.
+//! Locking layout (see `coordinator/mod.rs` § *Data plane & locking* and
+//! `ARCHITECTURE.md` at the repository root): the control lock (`Core`)
+//! now guards only the DAG, the dependency half of the registry, task
+//! metadata, and stats. Ready-task dispatch lives in [`ShardedReady`],
+//! version locations in the sharded
+//! [`VersionTable`](crate::coordinator::registry::VersionTable), produced
+//! values in the [`DataStore`], and cross-node staging in the
+//! [`TransferService`] — workers touch the control lock only to flip task
+//! states.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -31,8 +33,9 @@ use crate::coordinator::dag::{EdgeKind, TaskGraph, TaskId, TaskState};
 use crate::coordinator::datastore::{DataStore, SpillPolicy};
 use crate::coordinator::executor;
 use crate::coordinator::fault::{FailureInjector, RetryPolicy};
-use crate::coordinator::registry::{DataKey, DataRegistry, NodeId, VersionTable};
+use crate::coordinator::registry::{CollectAction, DataKey, DataRegistry, NodeId, VersionTable};
 use crate::coordinator::scheduler::{ReadyTask, ShardedReady};
+use crate::coordinator::transfer::{self, TransferService};
 use crate::serialization::{codec_by_name, Codec};
 use crate::trace::{EventKind, Tracer, WorkerId};
 use crate::value::RValue;
@@ -71,6 +74,32 @@ pub struct SubmitOutcome {
 }
 
 /// Coordinator configuration.
+///
+/// Re-exported as `rcompss::api::RuntimeConfig`. The data-plane knobs
+/// compose; the example below runs the memory plane with asynchronous
+/// cross-node transfers and the version GC, and checks the GC left no
+/// dead bytes behind:
+///
+/// ```
+/// use rcompss::api::{CompssRuntime, RuntimeConfig, TaskDef};
+/// use rcompss::value::RValue;
+///
+/// let config = RuntimeConfig::local(2)
+///     .with_memory_budget(64 << 20) // in-memory zero-copy data plane
+///     .with_transfer_threads(1)     // movers stage cross-node inputs
+///     .with_gc(true);               // reclaim dead dXvY versions
+/// let rt = CompssRuntime::start(config).unwrap();
+/// let add = rt.register_task(TaskDef::new("add", 2, |a| {
+///     Ok(vec![RValue::scalar(
+///         a[0].as_f64().unwrap() + a[1].as_f64().unwrap(),
+///     )])
+/// }));
+/// let r1 = rt.submit(&add, &[1.0.into(), 2.0.into()]).unwrap();
+/// let r2 = rt.submit(&add, &[r1.into(), 3.0.into()]).unwrap();
+/// assert_eq!(rt.wait_on(&r2).unwrap().as_f64(), Some(6.0));
+/// let stats = rt.stop().unwrap();
+/// assert_eq!(stats.dead_version_bytes, 0, "GC reclaimed every drained version");
+/// ```
 #[derive(Clone)]
 pub struct CoordinatorConfig {
     /// Cluster nodes to emulate in live mode (workers are threads; node
@@ -94,6 +123,19 @@ pub struct CoordinatorConfig {
     pub memory_budget: u64,
     /// Spill victim selection when over budget: "lru" | "largest".
     pub spill: String,
+    /// Mover threads per emulated node for asynchronous cross-node
+    /// transfers (default 1). 0 restores the seed behavior: the claiming
+    /// worker runs the codec round-trip synchronously. Only meaningful on
+    /// the memory plane (`memory_budget > 0`).
+    pub transfer_threads: u32,
+    /// Reference-counted version GC (default off). When on, a `dXvY`
+    /// version whose last registered consumer finishes is reclaimed
+    /// immediately — the store frees its bytes and any spill file is
+    /// deleted — instead of lingering until pressure eviction. Versions
+    /// fetched with `wait_on` are pinned and never reclaimed; fetching a
+    /// *different* handle after its last consumer already finished is an
+    /// error under GC (fetch before the last consumer, or keep GC off).
+    pub gc: bool,
 }
 
 impl CoordinatorConfig {
@@ -115,6 +157,8 @@ impl CoordinatorConfig {
             injector: Arc::new(FailureInjector::none()),
             memory_budget: 0,
             spill: "lru".into(),
+            transfer_threads: 1,
+            gc: false,
         }
     }
 
@@ -156,6 +200,19 @@ impl CoordinatorConfig {
         self.spill = policy.into();
         self
     }
+
+    /// Mover threads per emulated node for asynchronous cross-node
+    /// transfers (0 = synchronous seed behavior).
+    pub fn with_transfer_threads(mut self, threads: u32) -> Self {
+        self.transfer_threads = threads;
+        self
+    }
+
+    /// Enable the reference-counted version GC.
+    pub fn with_gc(mut self, on: bool) -> Self {
+        self.gc = on;
+        self
+    }
 }
 
 fn unique_run_id() -> u64 {
@@ -187,6 +244,35 @@ pub struct RuntimeStats {
     pub spills: u64,
     /// Bytes written by those spills.
     pub spill_bytes: u64,
+    /// Version GC: dead `dXvY` versions reclaimed.
+    pub gc_collected: u64,
+    /// Version GC: recorded bytes of the reclaimed versions.
+    pub gc_bytes: u64,
+    /// Version GC: spill/parameter files deleted.
+    pub gc_files_deleted: u64,
+    /// Async transfers: `(version, node)` pairs ever requested.
+    pub transfers_requested: u64,
+    /// Async transfers staged before any claimant had to wait (the
+    /// transfer fully overlapped with compute).
+    pub transfers_prefetched: u64,
+    /// Async transfers at least one claimant parked on.
+    pub transfers_waited: u64,
+    /// Async transfers dropped without moving bytes (destination already
+    /// held a replica, or the version was reclaimed mid-flight).
+    pub transfers_dropped: u64,
+    /// Async transfers that failed (claimants fell back to the
+    /// synchronous path).
+    pub transfers_failed: u64,
+    /// Serialized bytes moved by the mover threads.
+    pub transfer_bytes: u64,
+    /// Cross-node consumptions that ran the codec synchronously on the
+    /// claim path (the seed behavior; zero with the transfer service on).
+    pub sync_transfer_decodes: u64,
+    /// Store bytes resident at snapshot time.
+    pub store_resident_bytes: u64,
+    /// Bytes of dead versions (fully consumed, unpinned, unreclaimed) at
+    /// snapshot time — zero at quiescence when the GC is on.
+    pub dead_version_bytes: u64,
 }
 
 /// Per-task metadata kept by the coordinator; shared with claimants as an
@@ -219,6 +305,15 @@ pub(crate) struct Shared {
     pub ready: ShardedReady,
     /// The in-memory data plane (disabled at budget 0).
     pub store: DataStore,
+    /// Asynchronous cross-node transfer board (movers disabled at
+    /// `transfer_threads` 0 or on the file plane).
+    pub transfers: TransferService,
+    /// Reference-counted version GC knob.
+    pub gc_enabled: bool,
+    /// GC accounting: versions reclaimed / recorded bytes / files deleted.
+    pub gc_collected: AtomicU64,
+    pub gc_bytes: AtomicU64,
+    pub gc_files: AtomicU64,
     pub codec: Box<dyn Codec>,
     pub tracer: Tracer,
     pub workdir: PathBuf,
@@ -235,9 +330,12 @@ impl Shared {
     }
 
     /// Push a newly-ready task to the dispatch fabric with locality
-    /// metadata (input sizes and replica locations from the version table).
+    /// metadata (input sizes and replica locations from the version
+    /// table), then prefetch: every input the routed node does not hold
+    /// yet is handed to the transfer service at *schedule* time, so by the
+    /// time a worker claims the task the bytes are usually staged already.
     pub(crate) fn enqueue_ready(&self, core: &mut Core, id: TaskId) {
-        let meta = &core.meta[&id];
+        let meta = Arc::clone(&core.meta[&id]);
         let inputs = meta
             .inputs
             .iter()
@@ -246,13 +344,58 @@ impl Shared {
                 (info.bytes, info.locations)
             })
             .collect();
-        let type_name = meta.spec.name.clone();
-        self.ready.push(ReadyTask {
+        let node = self.ready.push(ReadyTask {
             id,
             inputs,
-            type_name,
+            type_name: meta.spec.name.clone(),
         });
+        if self.ready.nodes() > 1 && self.store.enabled() && self.transfers.enabled() {
+            let dst = NodeId(node as u32);
+            for k in &meta.inputs {
+                if !self.table.is_local(*k, dst) {
+                    self.transfers.request(*k, dst);
+                }
+            }
+        }
     }
+}
+
+/// Release one consumer reference per key (a finished, failed, or
+/// cancelled reader); with the GC knob on, a version whose last reference
+/// this was is reclaimed on the spot — store entry dropped, spill file
+/// deleted. Runs outside every lock; the shard-atomic mark in
+/// [`VersionTable::release_consumer`] guarantees single collection.
+pub(crate) fn release_inputs(shared: &Shared, keys: &[DataKey]) {
+    for k in keys {
+        if let Some(act) = shared.table.release_consumer(*k, shared.gc_enabled) {
+            collect_version(shared, &act);
+        }
+    }
+}
+
+/// Publish-side GC sweep: reclaim a just-published version whose
+/// consumers all vanished (cancelled) before it became available — their
+/// releases found `available == false` and could not collect, so the
+/// producer's publish is the last event that can. Called by the worker
+/// publish paths right after `mark_available*`.
+pub(crate) fn reap_if_drained(shared: &Shared, key: DataKey) {
+    if let Some(act) = shared.table.reap_if_drained(key, shared.gc_enabled) {
+        collect_version(shared, &act);
+    }
+}
+
+/// Free what a collected version held: its store entry and its spill
+/// file. The version table entry stays (marked collected) so diagnostics
+/// and late `wait_on`s get a precise error instead of a hang.
+fn collect_version(shared: &Shared, act: &CollectAction) {
+    shared.store.remove(act.key);
+    if let Some(path) = &act.path {
+        if std::fs::remove_file(path).is_ok() {
+            shared.gc_files.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    shared.gc_collected.fetch_add(1, Ordering::Relaxed);
+    shared.gc_bytes.fetch_add(act.bytes, Ordering::Relaxed);
 }
 
 /// Atomically publish a spill file for `key`: encode into a uniquely-named
@@ -290,8 +433,15 @@ pub(crate) fn spill_victims(
         }
         match write_spill_file(shared, v.key, &v.value) {
             Ok((bytes, path)) => {
-                shared.table.mark_spilled(v.key, bytes, path);
-                shared.store.finish_spill(v.key, true, bytes);
+                if shared.table.mark_spilled(v.key, bytes, path.clone()) {
+                    shared.store.finish_spill(v.key, true, bytes);
+                } else {
+                    // The GC collected the version while we were encoding
+                    // it: the file is an orphan — delete instead of
+                    // publishing, and drop the (already removed) entry.
+                    let _ = std::fs::remove_file(&path);
+                    shared.store.finish_spill(v.key, false, 0);
+                }
             }
             Err(e) => {
                 eprintln!("[rcompss] spill of {} failed ({e:#}); keeping it resident", v.key);
@@ -305,6 +455,7 @@ pub(crate) fn spill_victims(
 pub struct Coordinator {
     pub(crate) shared: Arc<Shared>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    movers: Vec<std::thread::JoinHandle<()>>,
     pub config: CoordinatorConfig,
 }
 
@@ -321,6 +472,13 @@ impl Coordinator {
         let spill = SpillPolicy::by_name(&config.spill)
             .ok_or_else(|| anyhow!("unknown spill policy '{}' (lru|largest)", config.spill))?;
         let table = Arc::new(VersionTable::new());
+        // Async transfers exist only on the memory plane: the file plane
+        // reads every parameter from its file anyway.
+        let movers_per_node = if config.memory_budget > 0 {
+            config.transfer_threads
+        } else {
+            0
+        };
         let shared = Arc::new(Shared {
             core: Mutex::new(Core {
                 graph: TaskGraph::new(),
@@ -332,6 +490,11 @@ impl Coordinator {
             table,
             ready,
             store: DataStore::new(config.memory_budget, spill),
+            transfers: TransferService::new(movers_per_node, config.nodes),
+            gc_enabled: config.gc,
+            gc_collected: AtomicU64::new(0),
+            gc_bytes: AtomicU64::new(0),
+            gc_files: AtomicU64::new(0),
             codec,
             tracer: Tracer::new(config.trace),
             workdir: config.workdir.clone(),
@@ -359,9 +522,25 @@ impl Coordinator {
                 );
             }
         }
+        // Dedicated mover threads per emulated node: they run the codec
+        // boundary of cross-node transfers off the workers' claim paths.
+        let mut movers = Vec::new();
+        for node in 0..config.nodes {
+            for slot in 0..movers_per_node {
+                let sh = Arc::clone(&shared);
+                let home = NodeId(node);
+                movers.push(
+                    std::thread::Builder::new()
+                        .name(format!("rcompss-mover-{node}.{slot}"))
+                        .spawn(move || transfer::mover_loop(sh, home))
+                        .context("spawn mover")?,
+                );
+            }
+        }
         Ok(Coordinator {
             shared,
             workers,
+            movers,
             config,
         })
     }
@@ -390,11 +569,67 @@ impl Coordinator {
         if self.shared.stopping.load(Ordering::SeqCst) {
             bail!("runtime is stopping");
         }
+        let literal_keys = self.materialize_literals(args)?;
+        let (outcome, cancelled) = {
+            let mut core = self.shared.core.lock().unwrap();
+            self.analyze_and_insert(&mut core, spec, args, &literal_keys)
+        };
+        if let Some(meta) = cancelled {
+            release_inputs(&self.shared, &meta.inputs);
+        }
+        Ok(outcome)
+    }
 
-        // Phase 1: materialize literal arguments. On the file plane this is
-        // master-side serialization (traced, like COMPSs); on the memory
-        // plane the value goes straight into the store — the codec runs
-        // only if it later spills.
+    /// Submit a batch of task calls, amortizing the control lock: every
+    /// literal is materialized first (off the lock), then the whole batch
+    /// runs dependency analysis and DAG insertion under a *single* lock
+    /// acquisition. Semantically identical to calling
+    /// [`Coordinator::submit`] once per element, in order — the apps'
+    /// partition loops use this to shrink per-task dispatch overhead.
+    pub fn submit_batch(&self, calls: &[(Arc<TaskSpec>, Vec<Arg>)]) -> Result<Vec<SubmitOutcome>> {
+        for (spec, args) in calls {
+            if args.len() != spec.arity {
+                bail!(
+                    "task '{}' expects {} arguments, got {}",
+                    spec.name,
+                    spec.arity,
+                    args.len()
+                );
+            }
+        }
+        if self.shared.stopping.load(Ordering::SeqCst) {
+            bail!("runtime is stopping");
+        }
+        let mut literal_keys = Vec::with_capacity(calls.len());
+        for (_, args) in calls {
+            literal_keys.push(self.materialize_literals(args)?);
+        }
+        let mut cancelled: Vec<Arc<TaskMeta>> = Vec::new();
+        let outcomes: Vec<SubmitOutcome> = {
+            let mut core = self.shared.core.lock().unwrap();
+            calls
+                .iter()
+                .zip(literal_keys.iter())
+                .map(|((spec, args), lits)| {
+                    let (out, c) = self.analyze_and_insert(&mut core, spec, args, lits);
+                    if let Some(meta) = c {
+                        cancelled.push(meta);
+                    }
+                    out
+                })
+                .collect()
+        };
+        for meta in cancelled {
+            release_inputs(&self.shared, &meta.inputs);
+        }
+        Ok(outcomes)
+    }
+
+    /// Phase 1 of submission: materialize literal arguments. On the file
+    /// plane this is master-side serialization (traced, like COMPSs); on
+    /// the memory plane the value goes straight into the store — the codec
+    /// runs only if it later spills.
+    fn materialize_literals(&self, args: &[Arg]) -> Result<Vec<Option<DataKey>>> {
         let mut literal_keys: Vec<Option<DataKey>> = vec![None; args.len()];
         for (i, arg) in args.iter().enumerate() {
             if let Arg::Value(v) = arg {
@@ -438,12 +673,21 @@ impl Coordinator {
                 }
             }
         }
+        Ok(literal_keys)
+    }
 
-        // Phase 2: dependency analysis + DAG insertion under the control
-        // lock (kept atomic so a dependent can never be inserted before its
-        // producer).
-        let mut core = self.shared.core.lock().unwrap();
-        let core = &mut *core;
+    /// Phase 2 of submission: dependency analysis + DAG insertion, under
+    /// the control lock (kept atomic so a dependent can never be inserted
+    /// before its producer). Returns the outcome plus, when the task was
+    /// cancelled on insert (failed upstream), its metadata so the caller
+    /// can release the never-to-be-consumed input references off the lock.
+    fn analyze_and_insert(
+        &self,
+        core: &mut Core,
+        spec: &Arc<TaskSpec>,
+        args: &[Arg],
+        literal_keys: &[Option<DataKey>],
+    ) -> (SubmitOutcome, Option<Arc<TaskMeta>>) {
         let id = core.graph.next_task_id();
         let mut deps: Vec<(TaskId, EdgeKind, DataKey)> = Vec::new();
         let mut reads: Vec<DataKey> = Vec::new();
@@ -491,44 +735,61 @@ impl Coordinator {
             returns.push(key);
         }
 
-        core.meta.insert(
-            id,
-            Arc::new(TaskMeta {
-                spec: Arc::clone(spec),
-                inputs: input_keys,
-                outputs: writes.clone(),
-            }),
-        );
+        let meta = Arc::new(TaskMeta {
+            spec: Arc::clone(spec),
+            inputs: input_keys,
+            outputs: writes.clone(),
+        });
+        core.meta.insert(id, Arc::clone(&meta));
         core.stats.tasks_submitted += 1;
 
         let ready = core.graph.insert_task(id, &spec.name, reads, writes, deps);
         if ready {
             self.shared.enqueue_ready(core, id);
         }
-        // A task may have been cancelled on insert (failed upstream).
+        // A task may have been cancelled on insert (failed upstream); its
+        // input references are handed back for release off the lock.
+        let mut cancelled = None;
         if core.graph.state(id) == Some(TaskState::Cancelled) {
             core.stats.tasks_cancelled += 1;
+            cancelled = Some(meta);
             self.shared.cv_done.notify_all();
         }
-        Ok(SubmitOutcome { returns, updated })
+        (SubmitOutcome { returns, updated }, cancelled)
     }
 
     /// Block until `key` is produced, then fetch and return it
     /// (`compss_wait_on`). Fails if the producing task failed or was
     /// cancelled. On the memory plane this is a store lookup (plus one
     /// clone for ownership); on the file plane, a codec read.
+    ///
+    /// Pins the version first: the version GC never reclaims a pinned
+    /// version, so repeated `wait_on`s of the same handle keep working.
+    /// Waiting on a version the GC *already* reclaimed (its last consumer
+    /// finished before this call) is an error, not a hang.
     pub fn wait_on(&self, key: DataKey) -> Result<RValue> {
+        if !self.shared.table.pin(key) {
+            bail!("unknown datum {key}");
+        }
         {
             let mut core = self.shared.core.lock().unwrap();
             loop {
-                if self.shared.table.is_available(key) {
-                    break;
-                }
-                let producer = self
+                let info = self
                     .shared
                     .table
                     .info(key)
-                    .and_then(|i| i.producer)
+                    .ok_or_else(|| anyhow!("unknown datum {key}"))?;
+                if info.collected {
+                    bail!(
+                        "datum {key} was reclaimed by the version GC before wait_on; \
+                         fetch results before their last consumer finishes or disable gc"
+                    );
+                }
+                if info.available {
+                    break;
+                }
+                let producer = info
+                    .producer
                     .ok_or_else(|| anyhow!("unknown datum {key}"))?;
                 match core.graph.state(producer) {
                     Some(TaskState::Failed) => {
@@ -594,22 +855,38 @@ impl Coordinator {
         for w in self.workers {
             let _ = w.join();
         }
+        self.shared.transfers.stop();
+        for m in self.movers {
+            let _ = m.join();
+        }
         let mut stats = self.shared.core.lock().unwrap().stats.clone();
-        self.fill_store_stats(&mut stats);
+        Self::fill_shared_stats(&self.shared, &mut stats);
         Ok(stats)
     }
 
-    fn fill_store_stats(&self, stats: &mut RuntimeStats) {
-        stats.store_hits = self.shared.store.hit_count();
-        stats.store_misses = self.shared.store.miss_count();
-        stats.spills = self.shared.store.spill_count();
-        stats.spill_bytes = self.shared.store.spilled_bytes();
+    fn fill_shared_stats(shared: &Shared, stats: &mut RuntimeStats) {
+        stats.store_hits = shared.store.hit_count();
+        stats.store_misses = shared.store.miss_count();
+        stats.spills = shared.store.spill_count();
+        stats.spill_bytes = shared.store.spilled_bytes();
+        stats.sync_transfer_decodes = shared.store.sync_transfer_decode_count();
+        stats.store_resident_bytes = shared.store.resident_bytes();
+        stats.dead_version_bytes = shared.table.dead_bytes();
+        stats.gc_collected = shared.gc_collected.load(Ordering::Relaxed);
+        stats.gc_bytes = shared.gc_bytes.load(Ordering::Relaxed);
+        stats.gc_files_deleted = shared.gc_files.load(Ordering::Relaxed);
+        stats.transfers_requested = shared.transfers.requested();
+        stats.transfers_prefetched = shared.transfers.prefetched();
+        stats.transfers_waited = shared.transfers.waited();
+        stats.transfers_dropped = shared.transfers.dropped();
+        stats.transfers_failed = shared.transfers.failed();
+        stats.transfer_bytes = shared.transfers.transfer_bytes();
     }
 
     /// Snapshot statistics without stopping.
     pub fn stats(&self) -> RuntimeStats {
         let mut stats = self.shared.core.lock().unwrap().stats.clone();
-        self.fill_store_stats(&mut stats);
+        Self::fill_shared_stats(&self.shared, &mut stats);
         stats
     }
 
@@ -631,5 +908,113 @@ impl Coordinator {
     /// Remove the workdir (after stop). Separate so tests can inspect files.
     pub fn cleanup_workdir(config: &CoordinatorConfig) {
         let _ = std::fs::remove_dir_all(&config.workdir);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    fn mem_config(nodes: u32, wpn: u32) -> CoordinatorConfig {
+        CoordinatorConfig::local(wpn)
+            .with_nodes(nodes, wpn)
+            .with_memory_budget(64 << 20)
+    }
+
+    /// Manufacture an available memory-resident literal on node 0 — the
+    /// state a producer leaves behind — without going through tasks, so
+    /// the transfer machinery can be driven deterministically.
+    fn seed_value(coord: &Coordinator, n: usize) -> DataKey {
+        let value = Arc::new(RValue::Real(vec![1.5; n]));
+        let nbytes = value.byte_size() as u64;
+        let key = {
+            let mut core = coord.shared.core.lock().unwrap();
+            core.registry.new_literal(nbytes, NodeId(0))
+        };
+        let victims = coord.shared.store.put(key, value, false);
+        assert!(victims.is_empty(), "budget must fit the seed value");
+        coord
+            .shared
+            .table
+            .mark_available_memory(key, NodeId(0), nbytes);
+        key
+    }
+
+    #[test]
+    fn transfer_is_prefetched_before_the_claim_needs_it() {
+        let config = mem_config(2, 1);
+        let coord = Coordinator::start(config.clone()).unwrap();
+        let key = seed_value(&coord, 64);
+        // Exactly what enqueue_ready issues when it routes a consumer of
+        // `key` to node 1.
+        coord.shared.transfers.request(key, NodeId(1));
+        // A mover stages the replica with no claimant anywhere near; the
+        // completion counter flips once the transfer is fully published.
+        let t0 = Instant::now();
+        while coord.shared.transfers.prefetched() == 0 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "mover never staged the value"
+            );
+            std::thread::yield_now();
+        }
+        assert!(coord.shared.table.is_local(key, NodeId(1)));
+        assert_eq!(coord.shared.transfers.waited(), 0);
+        // The claim path is now a zero-copy lookup: no codec invocation,
+        // no blocking (`decoded == false` is the no-blocking-reload
+        // witness the DataStore counter backs up).
+        let (v, decoded, _) =
+            executor::acquire_input(&coord.shared, key, NodeId(1), false).unwrap();
+        assert!(!decoded, "claim of a staged replica must not decode");
+        assert_eq!(v.as_real().unwrap()[0], 1.5);
+        assert_eq!(coord.shared.store.sync_transfer_decode_count(), 0);
+        coord.stop().unwrap();
+        Coordinator::cleanup_workdir(&config);
+    }
+
+    #[test]
+    fn claim_mid_transfer_parks_and_gets_the_staged_value() {
+        let config = mem_config(2, 1);
+        let coord = Coordinator::start(config.clone()).unwrap();
+        let key = seed_value(&coord, 256);
+        coord.shared.transfers.request(key, NodeId(1));
+        // Claim immediately, racing the mover: the claimant either finds
+        // the replica staged (prefetched) or parks mid-transfer (waited) —
+        // never a synchronous claim-path decode, always the right bytes.
+        let (v, _, _) =
+            executor::acquire_input(&coord.shared, key, NodeId(1), false).unwrap();
+        assert_eq!(v.as_real().unwrap()[0], 1.5);
+        assert!(coord.shared.table.is_local(key, NodeId(1)));
+        // The claim can return (fast path) a hair before the mover files
+        // its completion; poll the counters, then check the split.
+        let t = &coord.shared.transfers;
+        let t0 = Instant::now();
+        while t.prefetched() + t.waited() == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "transfer never completed");
+            std::thread::yield_now();
+        }
+        assert_eq!(t.prefetched() + t.waited(), 1);
+        assert_eq!(coord.shared.store.sync_transfer_decode_count(), 0);
+        coord.stop().unwrap();
+        Coordinator::cleanup_workdir(&config);
+    }
+
+    #[test]
+    fn transfer_threads_zero_falls_back_to_synchronous_decode() {
+        let config = mem_config(2, 1).with_transfer_threads(0);
+        let coord = Coordinator::start(config.clone()).unwrap();
+        assert!(!coord.shared.transfers.enabled());
+        let key = seed_value(&coord, 64);
+        // The seed behavior: the claim path itself spills + reloads, and
+        // the DataStore counter records it.
+        let (v, decoded, _) =
+            executor::acquire_input(&coord.shared, key, NodeId(1), false).unwrap();
+        assert!(decoded, "synchronous fallback decodes on the claim path");
+        assert_eq!(v.as_real().unwrap()[0], 1.5);
+        assert_eq!(coord.shared.store.sync_transfer_decode_count(), 1);
+        assert!(coord.shared.table.is_local(key, NodeId(1)));
+        coord.stop().unwrap();
+        Coordinator::cleanup_workdir(&config);
     }
 }

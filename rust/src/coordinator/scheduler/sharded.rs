@@ -87,8 +87,10 @@ impl ShardedReady {
         best.unwrap_or_else(|| self.rr.fetch_add(1, Ordering::Relaxed) % nodes)
     }
 
-    /// Enqueue a ready task and wake one parked worker.
-    pub fn push(&self, task: ReadyTask) {
+    /// Enqueue a ready task and wake one parked worker. Returns the shard
+    /// (node) index the task was routed to, so the caller can prefetch the
+    /// task's remote inputs toward that node at schedule time.
+    pub fn push(&self, task: ReadyTask) -> usize {
         let shard = self.route(&task);
         {
             // Increment while holding the shard lock so a concurrent pop of
@@ -106,6 +108,7 @@ impl ShardedReady {
             let _guard = self.park.lock().unwrap();
             self.cv.notify_one();
         }
+        shard
     }
 
     /// Pop a task for a worker on `node`: own shard, then steal in ring
@@ -176,8 +179,9 @@ mod tests {
     #[test]
     fn routes_by_locality_and_round_robin() {
         let q = ShardedReady::new("fifo", 2).unwrap();
-        // Task with bytes on node 1 lands on shard 1.
-        q.push(rt(1, vec![(100, vec![NodeId(1)])]));
+        // Task with bytes on node 1 lands on shard 1 (push reports the
+        // routed shard for schedule-time prefetching).
+        assert_eq!(q.push(rt(1, vec![(100, vec![NodeId(1)])])), 1);
         // Node-1 worker gets it from its own shard.
         assert_eq!(q.pop(NodeId(1)), Some(TaskId(1)));
         // Locality-free tasks round-robin across both shards but any

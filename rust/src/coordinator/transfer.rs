@@ -1,0 +1,472 @@
+//! Asynchronous cross-node transfer service — the data-movement half of
+//! the value-lifecycle engine.
+//!
+//! The seed runtime performed every cross-node consumption *synchronously
+//! on the claiming worker*: the claim path serialized the value (if it was
+//! memory-resident), read the file back, and decoded it — a full codec
+//! round-trip inside the worker's critical path. The pbdR line of work the
+//! paper builds on shows that overlapping data movement with compute, not
+//! just parallelizing compute, is what preserves efficiency as node counts
+//! grow (§4, Figure 8). [`TransferService`] makes that overlap real:
+//!
+//! * **requests** are issued at *schedule* time: when the dispatch fabric
+//!   routes a ready task to a node, every input without a replica on that
+//!   node is queued for transfer (`Shared::enqueue_ready`);
+//! * **movers** — `transfer_threads` dedicated threads per emulated node —
+//!   drain the per-node request queues (stealing from other nodes' queues
+//!   when idle), run the codec boundary off the critical path, cache the
+//!   decoded replica in the [`DataStore`](super::datastore::DataStore), and
+//!   publish the new location in the
+//!   [`VersionTable`](super::registry::VersionTable);
+//! * **claimants** call [`TransferService::await_staged`] only when the
+//!   bytes are not yet local at the moment they are actually needed —
+//!   parking on a condvar until the mover finishes (futures-by-parking). A
+//!   transfer that completes first costs the claimant nothing: the fast
+//!   path is an ordinary zero-copy store lookup.
+//!
+//! The split is observable: `transfers_prefetched` counts transfers that
+//! completed before any claimant had to wait, `transfers_waited` the ones a
+//! claimant parked on, and the
+//! [`DataStore`](super::datastore::DataStore)'s `sync_transfer_decodes`
+//! counter stays zero whenever the service is enabled (no codec on the
+//! claim path). Requests are deduplicated per `(version, destination)`
+//! pair, and a failed transfer degrades to the seed-style synchronous
+//! fallback on the claimant — robustness, not correctness, is what the
+//! mover threads add.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::coordinator::registry::{DataKey, NodeId};
+use crate::coordinator::runtime::{spill_victims, Shared};
+
+/// State of one `(version, destination-node)` transfer.
+#[derive(Clone, Debug)]
+enum TransferState {
+    Queued,
+    Running,
+    /// Replica cached in the store and the location published.
+    Done,
+    Failed(String),
+}
+
+struct Inner {
+    /// Per-destination-node request queues; a node's movers prefer their
+    /// own queue and steal from the others when idle.
+    queues: Vec<VecDeque<(DataKey, NodeId)>>,
+    /// State per `(version, destination-node)` pair. Done/Failed entries
+    /// are kept as tombstones (bounded by the number of distinct
+    /// transfers, i.e. by tasks x inputs).
+    states: HashMap<(DataKey, u32), TransferState>,
+    /// Claimants currently parked per pair — drives the prefetched/waited
+    /// accounting in [`TransferService::complete`].
+    waiting: HashMap<(DataKey, u32), u32>,
+}
+
+/// The transfer request board shared by the master (prefetch requests),
+/// the mover threads (work queue), and the claiming workers (completion
+/// futures). All methods take `&self`; `movers_per_node == 0` disables the
+/// service entirely and every cross-node consumption falls back to the
+/// seed-style synchronous path.
+pub struct TransferService {
+    movers_per_node: u32,
+    inner: Mutex<Inner>,
+    /// Movers park here for work.
+    cv_work: Condvar,
+    /// Claimants park here for completions.
+    cv_done: Condvar,
+    shutdown: AtomicBool,
+    requested: AtomicU64,
+    prefetched: AtomicU64,
+    waited: AtomicU64,
+    dropped: AtomicU64,
+    failed: AtomicU64,
+    bytes: AtomicU64,
+}
+
+impl TransferService {
+    /// A service for `nodes` emulated nodes with `movers_per_node` mover
+    /// threads each (0 disables asynchronous transfers).
+    pub fn new(movers_per_node: u32, nodes: u32) -> TransferService {
+        let nodes = nodes.max(1) as usize;
+        TransferService {
+            movers_per_node,
+            inner: Mutex::new(Inner {
+                queues: (0..nodes).map(|_| VecDeque::new()).collect(),
+                states: HashMap::new(),
+                waiting: HashMap::new(),
+            }),
+            cv_work: Condvar::new(),
+            cv_done: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            requested: AtomicU64::new(0),
+            prefetched: AtomicU64::new(0),
+            waited: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// Is the asynchronous transfer path active?
+    pub fn enabled(&self) -> bool {
+        self.movers_per_node > 0
+    }
+
+    /// Mover threads per emulated node (the `--transfer-threads` knob).
+    pub fn movers_per_node(&self) -> u32 {
+        self.movers_per_node
+    }
+
+    /// Ask for `key` to be staged on `node` (the schedule-time prefetch).
+    /// Duplicate requests for a pair already queued, running, or finished
+    /// are no-ops.
+    pub fn request(&self, key: DataKey, node: NodeId) {
+        if !self.enabled() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        self.enqueue_request(&mut inner, key, node);
+    }
+
+    /// Shared enqueue (board lock held): dedup by pair, queue toward the
+    /// destination node, count, and wake a mover. Notifying under the lock
+    /// means a mover is either about to re-scan the queues (and will see
+    /// this request) or provably parked.
+    fn enqueue_request(&self, inner: &mut Inner, key: DataKey, node: NodeId) {
+        let pair = (key, node.0);
+        if inner.states.contains_key(&pair) {
+            return;
+        }
+        inner.states.insert(pair, TransferState::Queued);
+        let qi = (node.0 as usize) % inner.queues.len();
+        inner.queues[qi].push_back((key, node));
+        self.requested.fetch_add(1, Ordering::Relaxed);
+        self.cv_work.notify_one();
+    }
+
+    /// Mover side: block for the next request, preferring `home`'s queue
+    /// and stealing from the other nodes' queues otherwise. Returns `None`
+    /// only at shutdown.
+    pub(crate) fn next_request(&self, home: NodeId) -> Option<(DataKey, NodeId)> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            let n = inner.queues.len();
+            let start = (home.0 as usize) % n;
+            for i in 0..n {
+                let qi = (start + i) % n;
+                if let Some((key, node)) = inner.queues[qi].pop_front() {
+                    inner.states.insert((key, node.0), TransferState::Running);
+                    return Some((key, node));
+                }
+            }
+            if self.shutdown.load(Ordering::SeqCst) {
+                return None;
+            }
+            inner = self.cv_work.wait(inner).unwrap();
+        }
+    }
+
+    /// Mover side: publish the outcome of a transfer and wake claimants.
+    /// A staged transfer (`Ok(Some(bytes))`) nobody was parked on counts
+    /// as *prefetched* (it fully overlapped with compute); one with parked
+    /// claimants as *waited*. `Ok(None)` is a *dropped* transfer — the
+    /// bytes were already local or the version was reclaimed mid-flight —
+    /// and inflates neither overlap metric.
+    pub(crate) fn complete(&self, key: DataKey, node: NodeId, result: anyhow::Result<Option<u64>>) {
+        let mut inner = self.inner.lock().unwrap();
+        let pair = (key, node.0);
+        let had_waiter = inner.waiting.get(&pair).copied().unwrap_or(0) > 0;
+        match result {
+            Ok(Some(nbytes)) => {
+                inner.states.insert(pair, TransferState::Done);
+                self.bytes.fetch_add(nbytes, Ordering::Relaxed);
+                if had_waiter {
+                    self.waited.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.prefetched.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Ok(None) => {
+                inner.states.insert(pair, TransferState::Done);
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => {
+                inner.states.insert(pair, TransferState::Failed(format!("{e:#}")));
+                self.failed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.cv_done.notify_all();
+    }
+
+    /// Claimant side: block until `key` is staged on `node`, requesting
+    /// the transfer first if nobody did (a stolen task can land on a node
+    /// the router never prefetched for). `Ok(())` means the replica's
+    /// location is published; `Err` carries the transfer failure and the
+    /// caller falls back to the synchronous path.
+    pub fn await_staged(&self, key: DataKey, node: NodeId) -> Result<(), String> {
+        if !self.enabled() {
+            return Err("transfer service disabled".into());
+        }
+        let pair = (key, node.0);
+        let mut inner = self.inner.lock().unwrap();
+        // A stolen task can land on a node the router never prefetched
+        // for; the dedup inside makes this a no-op otherwise.
+        self.enqueue_request(&mut inner, key, node);
+        loop {
+            match inner.states.get(&pair) {
+                Some(TransferState::Done) | None => return Ok(()),
+                Some(TransferState::Failed(e)) => return Err(e.clone()),
+                Some(TransferState::Queued) | Some(TransferState::Running) => {}
+            }
+            if self.shutdown.load(Ordering::SeqCst) {
+                return Err("runtime stopping".into());
+            }
+            *inner.waiting.entry(pair).or_insert(0) += 1;
+            inner = self.cv_done.wait(inner).unwrap();
+            let drained = match inner.waiting.get_mut(&pair) {
+                Some(w) => {
+                    *w -= 1;
+                    *w == 0
+                }
+                None => false,
+            };
+            if drained {
+                inner.waiting.remove(&pair);
+            }
+        }
+    }
+
+    /// Wake every mover and claimant; subsequent `next_request`s return
+    /// `None` and parked claimants error out.
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _guard = self.inner.lock().unwrap();
+        self.cv_work.notify_all();
+        self.cv_done.notify_all();
+    }
+
+    /// Transfers ever requested (deduplicated pairs).
+    pub fn requested(&self) -> u64 {
+        self.requested.load(Ordering::Relaxed)
+    }
+
+    /// Transfers that completed before any claimant parked on them.
+    pub fn prefetched(&self) -> u64 {
+        self.prefetched.load(Ordering::Relaxed)
+    }
+
+    /// Transfers at least one claimant parked on.
+    pub fn waited(&self) -> u64 {
+        self.waited.load(Ordering::Relaxed)
+    }
+
+    /// Transfers dropped without moving bytes (destination already had a
+    /// replica, or the version was reclaimed mid-flight).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Transfers that failed (their claimants fell back to the
+    /// synchronous path).
+    pub fn failed(&self) -> u64 {
+        self.failed.load(Ordering::Relaxed)
+    }
+
+    /// Serialized bytes moved by the movers.
+    pub fn transfer_bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    #[cfg(test)]
+    fn waiting_count(&self, key: DataKey, node: NodeId) -> u32 {
+        self.inner
+            .lock()
+            .unwrap()
+            .waiting
+            .get(&(key, node.0))
+            .copied()
+            .unwrap_or(0)
+    }
+}
+
+/// Body of a mover thread: drain transfer requests (preferring `home`'s
+/// queue) until shutdown. Spawned by `Coordinator::start`, joined by
+/// `Coordinator::stop`.
+pub(crate) fn mover_loop(shared: Arc<Shared>, home: NodeId) {
+    while let Some((key, node)) = shared.transfers.next_request(home) {
+        let result = perform_transfer(&shared, key, node);
+        shared.transfers.complete(key, node, result);
+    }
+}
+
+/// Move one version to `node`: make sure a serialized file exists (the
+/// cross-node codec boundary, run on the mover — not the claimant), decode
+/// it, cache the replica zero-copy for the destination's consumers, and
+/// publish the location. Returns the serialized byte count.
+///
+/// A version the GC reclaimed mid-transfer is *dropped* (`Ok(None)`), not
+/// failed: the refcount protocol keeps any version with a live (or
+/// parked) consumer uncollected, so a collected version means the
+/// prefetch went to a node whose claimant was stolen away — nobody needs
+/// the bytes anymore. Already-local destinations are dropped the same
+/// way.
+fn perform_transfer(
+    shared: &Shared,
+    key: DataKey,
+    node: NodeId,
+) -> anyhow::Result<Option<u64>> {
+    if shared.table.is_local(key, node) {
+        // Raced with a synchronous fallback or duplicate: already staged.
+        return Ok(None);
+    }
+    if shared.table.is_collected(key) {
+        return Ok(None);
+    }
+    match stage_replica(shared, key, node) {
+        Ok(staged) => Ok(staged),
+        // Collected while we were encoding/decoding it: benign.
+        Err(_) if shared.table.is_collected(key) => Ok(None),
+        Err(e) => Err(e),
+    }
+}
+
+fn stage_replica(shared: &Shared, key: DataKey, node: NodeId) -> anyhow::Result<Option<u64>> {
+    let path = crate::coordinator::executor::ensure_file(shared, key)?;
+    let nbytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    let value = Arc::new(shared.codec.read_file(&path)?);
+    let victims = shared.store.put(key, value, true);
+    spill_victims(shared, victims);
+    if shared.table.is_collected(key) {
+        // The GC ran between our decode and this publish: whichever of the
+        // two `store.remove`s runs last clears the replica; never publish
+        // the location of a reclaimed version.
+        shared.store.remove(key);
+        return Ok(None);
+    }
+    shared.table.add_location(key, node);
+    Ok(Some(nbytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::registry::DataId;
+    use std::time::{Duration, Instant};
+
+    fn key(d: u64) -> DataKey {
+        DataKey {
+            data: DataId(d),
+            version: 1,
+        }
+    }
+
+    #[test]
+    fn request_dedups_and_mover_drains() {
+        let s = TransferService::new(1, 2);
+        s.request(key(1), NodeId(1));
+        s.request(key(1), NodeId(1)); // duplicate: no second queue entry
+        assert_eq!(s.requested(), 1);
+        let (k, n) = s.next_request(NodeId(1)).unwrap();
+        assert_eq!((k, n), (key(1), NodeId(1)));
+        s.complete(k, n, Ok(Some(128)));
+        // Completed with nobody parked: a prefetch that fully overlapped.
+        assert_eq!(s.prefetched(), 1);
+        assert_eq!(s.waited(), 0);
+        assert_eq!(s.transfer_bytes(), 128);
+        // Done tombstone: claimants return immediately.
+        assert_eq!(s.await_staged(key(1), NodeId(1)), Ok(()));
+        assert_eq!(s.waited(), 0);
+        // A dropped transfer (already local / reclaimed) is Done for
+        // claimants but inflates neither overlap counter.
+        s.request(key(2), NodeId(0));
+        let (k2, n2) = s.next_request(NodeId(0)).unwrap();
+        s.complete(k2, n2, Ok(None));
+        assert_eq!(s.dropped(), 1);
+        assert_eq!(s.prefetched(), 1);
+        assert_eq!(s.await_staged(key(2), NodeId(0)), Ok(()));
+    }
+
+    #[test]
+    fn claimant_parks_until_completion_and_counts_waited() {
+        let s = Arc::new(TransferService::new(1, 2));
+        s.request(key(7), NodeId(1));
+        let s2 = Arc::clone(&s);
+        let waiter = std::thread::spawn(move || s2.await_staged(key(7), NodeId(1)));
+        // Deterministic: wait until the claimant is provably parked.
+        let t0 = Instant::now();
+        while s.waiting_count(key(7), NodeId(1)) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "claimant never parked");
+            std::thread::yield_now();
+        }
+        let (k, n) = s.next_request(NodeId(1)).unwrap();
+        s.complete(k, n, Ok(Some(64)));
+        assert_eq!(waiter.join().unwrap(), Ok(()));
+        assert_eq!(s.waited(), 1);
+        assert_eq!(s.prefetched(), 0);
+    }
+
+    #[test]
+    fn failed_transfer_reports_to_claimant() {
+        let s = Arc::new(TransferService::new(1, 1));
+        let s2 = Arc::clone(&s);
+        let waiter = std::thread::spawn(move || s2.await_staged(key(3), NodeId(0)));
+        let (k, n) = loop {
+            // await_staged itself enqueues the request.
+            if let Some(req) = s.next_request(NodeId(0)) {
+                break req;
+            }
+        };
+        s.complete(k, n, Err(anyhow::anyhow!("boom")));
+        let err = waiter.join().unwrap().unwrap_err();
+        assert!(err.contains("boom"), "{err}");
+        assert_eq!(s.failed(), 1);
+    }
+
+    #[test]
+    fn disabled_service_rejects_claims() {
+        let s = TransferService::new(0, 4);
+        assert!(!s.enabled());
+        assert!(s.await_staged(key(1), NodeId(0)).is_err());
+        s.request(key(1), NodeId(0)); // no-op
+        assert_eq!(s.requested(), 0);
+    }
+
+    #[test]
+    fn stop_releases_movers_and_waiters() {
+        let s = Arc::new(TransferService::new(1, 1));
+        let s_mover = Arc::clone(&s);
+        let mover = std::thread::spawn(move || s_mover.next_request(NodeId(0)));
+        s.request(key(9), NodeId(0));
+        // The mover takes the request but never completes it; a claimant
+        // parks on it.
+        let s_waiter = Arc::clone(&s);
+        let waiter = std::thread::spawn(move || s_waiter.await_staged(key(9), NodeId(0)));
+        let t0 = Instant::now();
+        while s.waiting_count(key(9), NodeId(0)) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "claimant never parked");
+            std::thread::yield_now();
+        }
+        s.stop();
+        assert!(waiter.join().unwrap().is_err(), "shutdown must release claimants");
+        // The mover got the request before stop, or None after it.
+        let _ = mover.join().unwrap();
+        // Post-stop, movers drain whatever is still queued, then exit.
+        while s.next_request(NodeId(0)).is_some() {}
+        assert!(s.next_request(NodeId(0)).is_none(), "post-stop movers exit");
+    }
+
+    #[test]
+    fn per_node_queues_prefer_home_but_steal() {
+        let s = TransferService::new(1, 2);
+        s.request(key(1), NodeId(0));
+        s.request(key(2), NodeId(1));
+        // Node-1 mover prefers its own queue...
+        let (k, _) = s.next_request(NodeId(1)).unwrap();
+        assert_eq!(k, key(2));
+        // ...and steals node-0 work when its own queue is empty.
+        let (k, _) = s.next_request(NodeId(1)).unwrap();
+        assert_eq!(k, key(1));
+    }
+}

@@ -126,6 +126,7 @@ USAGE:
                  [--backend auto|pjrt|native] [--codec rmvl|qs|fst|rds|...]
                  [--scheduler fifo|lifo|locality] [--trace]
                  [--memory-budget BYTES] [--spill lru|largest]
+                 [--nodes N] [--transfer-threads T] [--gc]
   rcompss sim    --app knn|kmeans|linreg --machine shaheen3|marenostrum5
                  [--nodes N] [--workers-per-node W] [--fragments F]
                  [--scheduler fifo|lifo|locality]
@@ -145,16 +146,24 @@ fn cmd_run(opts: &Opts) -> anyhow::Result<()> {
     let fragments = opts.get_usize("fragments", 4)?;
     let backend = backend_from(opts)?;
     let memory_budget = opts.get_usize("memory-budget", 0)? as u64;
-    let config = RuntimeConfig::local(workers)
+    let nodes = opts.get_usize("nodes", 1)?.max(1) as u32;
+    let transfer_threads = opts.get_usize("transfer-threads", 1)? as u32;
+    let gc = opts.has("gc");
+    let mut config = RuntimeConfig::local(workers)
         .with_scheduler(&opts.get("scheduler", "fifo"))
         .with_codec(&opts.get("codec", "rmvl"))
         .with_trace(opts.has("trace"))
         .with_memory_budget(memory_budget)
-        .with_spill(&opts.get("spill", "lru"));
+        .with_spill(&opts.get("spill", "lru"))
+        .with_transfer_threads(transfer_threads)
+        .with_gc(gc);
+    if nodes > 1 {
+        config = config.with_nodes(nodes, workers);
+    }
     let rt = CompssRuntime::start(config)?;
     println!(
-        "rcompss run: app={app} workers={workers} fragments={fragments} backend={backend:?} \
-         data-plane={}",
+        "rcompss run: app={app} nodes={nodes} workers/node={workers} fragments={fragments} \
+         backend={backend:?} data-plane={} transfer-threads={transfer_threads} gc={gc}",
         if memory_budget > 0 { "memory" } else { "file" }
     );
     let t0 = std::time::Instant::now();
@@ -216,6 +225,25 @@ fn cmd_run(opts: &Opts) -> anyhow::Result<()> {
             stats.store_misses,
             stats.spills,
             rcompss::util::table::fmt_bytes(stats.spill_bytes as usize),
+        );
+        println!(
+            "transfers: {} requested, {} prefetched, {} waited, {} dropped, {} failed, {} moved, {} sync claim decodes",
+            stats.transfers_requested,
+            stats.transfers_prefetched,
+            stats.transfers_waited,
+            stats.transfers_dropped,
+            stats.transfers_failed,
+            rcompss::util::table::fmt_bytes(stats.transfer_bytes as usize),
+            stats.sync_transfer_decodes,
+        );
+    }
+    if gc {
+        println!(
+            "gc: {} versions reclaimed / {}, {} spill files deleted, dead bytes at exit: {}",
+            stats.gc_collected,
+            rcompss::util::table::fmt_bytes(stats.gc_bytes as usize),
+            stats.gc_files_deleted,
+            stats.dead_version_bytes,
         );
     }
     Ok(())

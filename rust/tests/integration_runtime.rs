@@ -405,6 +405,192 @@ fn memory_plane_multi_node_transfers_through_codec() {
 }
 
 #[test]
+fn gc_chain_returns_store_bytes_to_zero() {
+    // Version-GC acceptance: after a RAW chain fully consumes its
+    // intermediates, the store holds (at most) the pinned final value and
+    // no dead-version bytes remain.
+    let config = RuntimeConfig::local_in_memory(2).with_gc(true);
+    let workdir = config.workdir.clone();
+    let rt = CompssRuntime::start(config).unwrap();
+    let double = rt.register_task(rcompss::api::TaskDef::new("double", 1, |a| {
+        let x = a[0].as_f64().ok_or_else(|| anyhow::anyhow!("not scalar"))?;
+        Ok(vec![rcompss::value::RValue::scalar(2.0 * x)])
+    }));
+    let mut r = rt.submit(&double, &[1.0.into()]).unwrap();
+    for _ in 0..9 {
+        r = rt.submit(&double, &[r.into()]).unwrap();
+    }
+    let v = rt.wait_on(&r).unwrap();
+    assert_eq!(v.as_f64(), Some(1024.0));
+    let files: Vec<_> = std::fs::read_dir(&workdir).unwrap().collect();
+    assert!(files.is_empty(), "comfortable budget: no files at all");
+    let stats = rt.stop().unwrap();
+    assert_eq!(stats.dead_version_bytes, 0, "{stats:?}");
+    assert!(stats.gc_collected >= 9, "9 intermediates + 10 literals: {stats:?}");
+    assert!(
+        stats.store_resident_bytes <= 64,
+        "only the pinned final scalar may remain: {stats:?}"
+    );
+}
+
+#[test]
+fn gc_deletes_spill_files_of_collected_versions() {
+    // A tiny budget forces intermediates through the codec onto disk; the
+    // GC must delete those spill files as the versions drain, not leave
+    // them for pressure-era cleanup. (10 bytes: even two scalars overflow,
+    // so spilling is deterministic regardless of how fast the GC drains.)
+    let config = RuntimeConfig::local(2)
+        .with_memory_budget(10)
+        .with_spill("lru")
+        .with_gc(true);
+    let workdir = config.workdir.clone();
+    let rt = CompssRuntime::start(config).unwrap();
+    let add = rt.register_task(rcompss::api::TaskDef::new("add", 2, |a| {
+        Ok(vec![rcompss::value::RValue::scalar(
+            a[0].as_f64().unwrap() + a[1].as_f64().unwrap(),
+        )])
+    }));
+    let mut acc = rt.submit(&add, &[0.0.into(), 1.0.into()]).unwrap();
+    for i in 2..=10 {
+        acc = rt.submit(&add, &[acc.into(), (i as f64).into()]).unwrap();
+    }
+    let v = rt.wait_on(&acc).unwrap();
+    assert_eq!(v.as_f64(), Some(55.0));
+    rt.barrier().unwrap();
+    // Read the workdir before stop() (which removes it). Barrier precedes
+    // the last couple of input releases by a hair, so allow one lagging
+    // file per worker besides the pinned final version.
+    let files: Vec<String> = std::fs::read_dir(&workdir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    let stats = rt.stop().unwrap();
+    assert!(stats.spills > 0, "10 B budget must spill: {stats:?}");
+    assert!(stats.gc_files_deleted > 0, "GC must delete spill files: {stats:?}");
+    assert_eq!(stats.dead_version_bytes, 0, "{stats:?}");
+    // Whatever survives on disk belongs to live (pinned/terminal)
+    // versions or a not-yet-released straggler, never the bulk of the
+    // drained intermediates (21 versions passed through this run).
+    assert!(
+        files.len() <= 3,
+        "drained intermediates must not linger on disk: {files:?}"
+    );
+}
+
+#[test]
+fn gc_file_plane_deletes_consumed_parameter_files() {
+    // The GC also applies to the pure file plane: a consumed dXvY's
+    // parameter file is deleted instead of accumulating in the workdir.
+    let config = RuntimeConfig::local(2).with_gc(true);
+    let workdir = config.workdir.clone();
+    let rt = CompssRuntime::start(config).unwrap();
+    let double = rt.register_task(rcompss::api::TaskDef::new("double", 1, |a| {
+        Ok(vec![rcompss::value::RValue::scalar(2.0 * a[0].as_f64().unwrap())])
+    }));
+    let mut r = rt.submit(&double, &[1.0.into()]).unwrap();
+    for _ in 0..7 {
+        r = rt.submit(&double, &[r.into()]).unwrap();
+    }
+    assert_eq!(rt.wait_on(&r).unwrap().as_f64(), Some(256.0));
+    rt.barrier().unwrap();
+    let files: Vec<String> = std::fs::read_dir(&workdir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    let stats = rt.stop().unwrap();
+    assert!(stats.gc_files_deleted >= 7, "{stats:?}");
+    assert!(
+        files.len() <= 3,
+        "only the pinned final version (plus at most a straggling
+         not-yet-released input) may keep a file: {files:?}"
+    );
+}
+
+#[test]
+fn kmeans_memory_plane_gc_ends_with_zero_dead_bytes() {
+    // Acceptance criterion: a full app run (K-means, memory plane, GC on)
+    // ends with zero live dead-version bytes in the store, and the result
+    // is identical to a GC-off run.
+    let mut cfg = KmeansConfig::small(11);
+    cfg.shapes = tiny_shapes();
+    cfg.fragments = 3;
+    cfg.iterations = 3;
+    cfg.tol = None;
+    let baseline = {
+        let rt = CompssRuntime::start(RuntimeConfig::local(3)).unwrap();
+        let res = kmeans::run_kmeans(&rt, &cfg, Backend::Native).unwrap();
+        rt.stop().unwrap();
+        res.centroids
+    };
+    let rt = CompssRuntime::start(RuntimeConfig::local_in_memory(3).with_gc(true)).unwrap();
+    let res = kmeans::run_kmeans(&rt, &cfg, Backend::Native).unwrap();
+    let stats = rt.stop().unwrap();
+    assert!(
+        baseline.all_equal(&res.centroids, 1e-9),
+        "GC changed the k-means result"
+    );
+    assert_eq!(stats.dead_version_bytes, 0, "{stats:?}");
+    assert!(stats.gc_collected > 0, "fragments and partials drain: {stats:?}");
+    // The fragments dominate the working set; after the last iteration
+    // consumed them they are reclaimed, so the residual store footprint is
+    // below a single fragment.
+    let frag_bytes = (cfg.shapes.km_frag_n * cfg.shapes.km_d * 8) as u64;
+    assert!(
+        stats.store_resident_bytes < frag_bytes,
+        "resident {} >= one fragment {}: {stats:?}",
+        stats.store_resident_bytes,
+        frag_bytes
+    );
+}
+
+#[test]
+fn two_node_memory_plane_claims_never_run_codec_synchronously() {
+    // Async-transfer acceptance: on a 2-node memory-plane run, cross-node
+    // consumption is staged by mover threads — the claim path never calls
+    // the codec synchronously (DataStore counter stays zero) — and the
+    // results match the single-node run.
+    let mut cfg = KnnConfig::small(5);
+    cfg.shapes = tiny_shapes();
+    cfg.train_fragments = 4;
+    cfg.test_blocks = 2;
+    let run = |nodes: u32| {
+        let rt = CompssRuntime::start(
+            RuntimeConfig::local(2)
+                .with_nodes(nodes, 2)
+                .with_memory_budget(256 << 20)
+                .with_gc(true),
+        )
+        .unwrap();
+        let mut sink = LiveSink::new(
+            &rt,
+            rcompss::apps::backend::knn_task_defs(cfg.shapes, Backend::Native),
+        );
+        let plan = knn::plan_knn(&mut sink, &cfg).unwrap();
+        let classes = sink.fetch(plan.classes[0]).unwrap();
+        let got = classes.as_int().unwrap().to_vec();
+        let stats = rt.stop().unwrap();
+        (got, stats)
+    };
+    let (single, _) = run(1);
+    let (multi, stats) = run(2);
+    assert_eq!(single, multi, "node count changed classification");
+    assert_eq!(
+        stats.sync_transfer_decodes, 0,
+        "claim paths must never run the codec for cross-node inputs: {stats:?}"
+    );
+    assert_eq!(stats.transfers_failed, 0, "{stats:?}");
+    assert_eq!(stats.dead_version_bytes, 0, "{stats:?}");
+    // Any data movement that did happen was performed by the movers, and
+    // every request was drained before shutdown: staged (prefetched or
+    // waited-on) or dropped (replica raced ahead / version reclaimed).
+    assert_eq!(
+        stats.transfers_prefetched + stats.transfers_waited + stats.transfers_dropped,
+        stats.transfers_requested,
+        "transfer accounting is consistent: {stats:?}"
+    );
+}
+
+#[test]
 fn workdir_files_use_dxvy_naming() {
     // The on-disk parameter files carry the paper's dXvY labels.
     let config = RuntimeConfig::local(2);

@@ -205,6 +205,92 @@ fn prop_version_monotonicity() {
     );
 }
 
+/// Multi-node value-lifecycle property: random reduction trees on 1-3
+/// emulated nodes with the memory plane, asynchronous transfers, and the
+/// version GC all enabled. Consumers race mover threads for every
+/// cross-node input (claim-mid-transfer), stealing moves tasks away from
+/// the prefetched node, and the GC reclaims each intermediate as its last
+/// reader finishes — the sum must stay exact, the claim path must never
+/// run the codec synchronously, and no dead bytes may remain.
+#[test]
+fn prop_multi_node_transfers_and_gc_preserve_results() {
+    check(
+        "multi-node reduction trees with async transfers + gc",
+        &Config {
+            cases: 8,
+            seed: 0xBEEF,
+        },
+        |rng| {
+            let n = 2 + rng.below_usize(24);
+            let values: Vec<f64> = (0..n).map(|_| rng.below(1000) as f64).collect();
+            let nodes = 1 + rng.below(3) as u32;
+            let wpn = 1 + rng.below(2) as u32;
+            let policy = ["fifo", "locality"][rng.below_usize(2)];
+            (values, nodes, wpn, policy)
+        },
+        |(values, nodes, wpn, policy)| {
+            let rt = CompssRuntime::start(
+                RuntimeConfig::local(*wpn)
+                    .with_nodes(*nodes, *wpn)
+                    .with_scheduler(policy)
+                    .with_memory_budget(256 << 20)
+                    .with_transfer_threads(1)
+                    .with_gc(true),
+            )
+            .map_err(|e| e.to_string())?;
+            let add = rt.register_task(TaskDef::new("add", 2, |a| {
+                Ok(vec![RValue::scalar(
+                    a[0].as_f64().unwrap() + a[1].as_f64().unwrap(),
+                )])
+            }));
+            let mut layer: Vec<TaskArg> = values.iter().map(|v| TaskArg::from(*v)).collect();
+            while layer.len() > 1 {
+                let mut next = Vec::new();
+                let mut it = layer.into_iter();
+                while let Some(a) = it.next() {
+                    match it.next() {
+                        Some(b) => {
+                            let r = rt.submit(&add, &[a, b]).map_err(|e| e.to_string())?;
+                            next.push(TaskArg::from(r));
+                        }
+                        None => next.push(a),
+                    }
+                }
+                layer = next;
+            }
+            let total = match layer.pop().unwrap() {
+                TaskArg::Future(r) => rt
+                    .wait_on(&r)
+                    .map_err(|e| e.to_string())?
+                    .as_f64()
+                    .unwrap(),
+                TaskArg::Value(v) => v.as_f64().unwrap(),
+            };
+            let stats = rt.stop().map_err(|e| e.to_string())?;
+            let want: f64 = values.iter().sum();
+            if (total - want).abs() > 1e-9 {
+                return Err(format!("sum {total} != {want}"));
+            }
+            if stats.sync_transfer_decodes != 0 {
+                return Err(format!(
+                    "claim path ran the codec {} time(s) with transfers on",
+                    stats.sync_transfer_decodes
+                ));
+            }
+            if stats.transfers_failed != 0 {
+                return Err(format!("{} transfer(s) failed", stats.transfers_failed));
+            }
+            if stats.dead_version_bytes != 0 {
+                return Err(format!(
+                    "{} dead bytes survived the GC",
+                    stats.dead_version_bytes
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Live-runtime property: random reduction trees over addition always
 /// compute the exact total, under any scheduler, any codec, any worker
 /// count.
