@@ -103,8 +103,10 @@ fn main() -> anyhow::Result<()> {
             let mut cfg = KnnConfig::small(7);
             cfg.train_fragments = 2;
             cfg.test_blocks = 1;
-            let mut sink =
-                rcompss::apps::LiveSink::new(&rt, rcompss::apps::backend::knn_task_defs(cfg.shapes, bk));
+            let mut sink = rcompss::apps::LiveSink::new(
+                &rt,
+                rcompss::apps::backend::knn_task_defs(cfg.shapes, bk),
+            );
             let plan = knn::plan_knn(&mut sink, &cfg)?;
             let v = sink.fetch(plan.classes[0])?;
             let out = v.as_int().unwrap().to_vec();

@@ -14,7 +14,10 @@
 //! 4. **Runtime dispatch overhead** — per-task wall overhead of the live
 //!    coordinator with trivial task bodies;
 //! 5. **Scheduler + DES throughput** — ops/sec of the pure coordination
-//!    structures.
+//!    structures;
+//! 6. **Batched vs sequential submission** — control-lock amortization;
+//! 7. **`bytes` vs `cost` routing** — transfer-heavy 2-node workload
+//!    through the placement engine (prefetch overlap split).
 //!
 //! Run: `cargo bench --bench runtime_hotpath`
 
@@ -233,7 +236,11 @@ fn dispatch_overhead(summary: &mut Vec<Json>) {
     let mut us_mem_8 = f64::NAN;
     for (plane, budget) in [("file", 0u64), ("memory", 256 << 20)] {
         for workers in [1u32, 8] {
-            let config = RuntimeConfig::local(workers).with_memory_budget(budget);
+            // GC pinned off so the file-plane arm stays seed-identical
+            // (the comparison this case has always measured).
+            let config = RuntimeConfig::local(workers)
+                .with_memory_budget(budget)
+                .with_gc(false);
             let rt = CompssRuntime::start(config).unwrap();
             let noop = rt.register_task(TaskDef::new("noop", 1, |args| {
                 Ok(vec![args[0].as_ref().clone()])
@@ -332,6 +339,80 @@ fn batched_submission(summary: &mut Vec<Json>) {
     println!();
 }
 
+/// Case [7]: `bytes` vs `cost` routing under a transfer-heavy 2-node
+/// workload. Producers spread across both nodes; each combiner reads two
+/// producers' outputs that live on *different* nodes, so every placement
+/// forces a transfer — the question is whether the router rides the
+/// prefetcher (`cost` counts in-flight bytes as local) or fights it
+/// (`bytes` chases resident replicas only). Reports wall time per task and
+/// the prefetch-overlap split.
+fn routing_models(summary: &mut Vec<Json>) {
+    println!("[7] bytes vs cost routing (transfer-heavy workload, 2 nodes x 2 workers)");
+    let producers = 64usize;
+    let payload = 32 * 1024usize; // 256 KiB per produced vector
+    for router in ["bytes", "cost"] {
+        let config = RuntimeConfig::local(2)
+            .with_nodes(2, 2)
+            .with_router(router)
+            .with_transfer_threads(1);
+        let rt = CompssRuntime::start(config).unwrap();
+        let mk = rt.register_task(TaskDef::new("mk", 1, move |args| {
+            let seed = args[0].as_f64().unwrap_or(0.0);
+            Ok(vec![RValue::Real(vec![seed; payload])])
+        }));
+        let combine = rt.register_task(TaskDef::new("combine", 2, |args| {
+            let a = args[0].as_real().unwrap();
+            let b = args[1].as_real().unwrap();
+            Ok(vec![RValue::scalar(a[0] + b[0])])
+        }));
+        let (elapsed, _) = time_once(|| {
+            let outs: Vec<_> = (0..producers)
+                .map(|i| rt.submit(&mk, &[(i as f64).into()]).unwrap())
+                .collect();
+            // Cross pairing: out[i] with out[i + half] — under any routing
+            // the two halves of most pairs sit on different nodes.
+            let half = producers / 2;
+            for i in 0..half {
+                rt.submit(&combine, &[outs[i].into(), outs[i + half].into()])
+                    .unwrap();
+            }
+            rt.barrier().unwrap();
+        });
+        let stats = rt.stop().unwrap();
+        let n_tasks = producers + producers / 2;
+        let per_task = elapsed / n_tasks as f64 * 1e6;
+        let overlap = stats.transfers_prefetched as f64
+            / (stats.transfers_prefetched + stats.transfers_waited).max(1) as f64;
+        println!(
+            "  router {router:5}: {n_tasks} tasks -> {per_task:.1} µs/task | transfers: \
+             {} requested, {} prefetched, {} waited, {} dropped ({:.0}% overlap), sync decodes {}",
+            stats.transfers_requested,
+            stats.transfers_prefetched,
+            stats.transfers_waited,
+            stats.transfers_dropped,
+            overlap * 100.0,
+            stats.sync_transfer_decodes,
+        );
+        record_result(
+            "hotpath_routing",
+            vec![
+                ("router", Json::Str(router.into())),
+                ("us_per_task", Json::Num(per_task)),
+                ("transfers_requested", Json::Num(stats.transfers_requested as f64)),
+                ("prefetch_overlap", Json::Num(overlap)),
+            ],
+        );
+        summary.push(obj(vec![
+            ("metric", Json::Str("routing_us_per_task".into())),
+            ("router", Json::Str(router.into())),
+            ("n_tasks", Json::Num(n_tasks as f64)),
+            ("us_per_task", Json::Num(per_task)),
+            ("prefetch_overlap", Json::Num(overlap)),
+        ]));
+    }
+    println!();
+}
+
 fn pure_structures() {
     println!("[5] pure coordination structures");
     // Scheduler ops.
@@ -396,12 +477,14 @@ fn main() {
     gemm_ratio();
     unit_costs();
     codec_throughput();
-    // Cases [4] and [6] share one committed summary file; it is written
-    // only after both ran, so a measured BENCH_hotpath.json always carries
-    // the dispatch *and* batched-submit metrics the projected copy has.
+    // Cases [4], [6], and [7] share one committed summary file; it is
+    // written only after all three ran, so a measured BENCH_hotpath.json
+    // always carries the dispatch, batched-submit, *and* routing metrics
+    // the projected copy has.
     let mut summary: Vec<Json> = Vec::new();
     dispatch_overhead(&mut summary);
     batched_submission(&mut summary);
+    routing_models(&mut summary);
     rcompss::bench_harness::write_json_summary("hotpath", summary);
     pure_structures();
 }

@@ -90,7 +90,7 @@ impl TaskDef {
     ) -> TaskDef {
         TaskDef {
             spec: Arc::new(TaskSpec {
-                name: name.to_string(),
+                name: name.into(),
                 arity,
                 n_outputs: 1,
                 directions: vec![Direction::In; arity],
@@ -228,6 +228,15 @@ impl CompssRuntime {
         self.coord.wait_on(r.0)
     }
 
+    /// Pin a handle so the version GC never reclaims it, without waiting.
+    /// `wait_on` pins implicitly — but only at fetch time. If the program
+    /// submits consumers of a value and fetches the same handle *after*
+    /// they may have finished, pin it first (at submission time), or the
+    /// GC may legitimately reclaim it the moment its last consumer drains.
+    pub fn pin(&self, r: &DataRef) -> Result<()> {
+        self.coord.pin(r.0)
+    }
+
     /// `compss_barrier`: block until all submitted tasks finished.
     pub fn barrier(&self) -> Result<()> {
         self.coord.barrier()
@@ -360,8 +369,13 @@ mod tests {
     #[test]
     fn memory_plane_spills_under_pressure_and_reloads() {
         // A budget far below the working set forces LRU spills through the
-        // codec; reloads must still produce exact results.
-        let config = RuntimeConfig::local(2).with_memory_budget(64).with_spill("lru");
+        // codec; reloads must still produce exact results. GC pinned off:
+        // with it on, drained intermediates would be reclaimed instead of
+        // spilled and the pressure this test depends on would vanish.
+        let config = RuntimeConfig::local(2)
+            .with_memory_budget(64)
+            .with_spill("lru")
+            .with_gc(false);
         let rt = CompssRuntime::start(config).unwrap();
         let add = rt.register_task(add_task());
         let mut acc = rt.submit(&add, &[0.0.into(), 0.0.into()]).unwrap();

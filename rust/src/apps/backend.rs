@@ -590,8 +590,8 @@ pub fn knn_task_defs(s: Shapes, backend: Backend) -> Vec<(&'static str, TaskDef)
         (
             "KNN_fill_test",
             TaskDef::new("KNN_fill_test", 2, move |a| {
-                let (x, y) =
-                    gen_knn_points(arg_u64(a, 0)?.wrapping_add(0xF00D), arg_u64(a, 1)?, tb, d, classes);
+                let seed = arg_u64(a, 0)?.wrapping_add(0xF00D);
+                let (x, y) = gen_knn_points(seed, arg_u64(a, 1)?, tb, d, classes);
                 Ok(vec![x, y])
             })
             .with_outputs(2),
@@ -600,8 +600,12 @@ pub fn knn_task_defs(s: Shapes, backend: Backend) -> Vec<(&'static str, TaskDef)
             "KNN_frag",
             TaskDef::new("KNN_frag", 3, move |a| {
                 let (dd, ll) = match backend {
-                    Backend::Pjrt => pjrt_knn_frag(a[0].as_ref(), a[1].as_ref(), a[2].as_ref(), tb, k)?,
-                    Backend::Native => native_knn_frag(a[0].as_ref(), a[1].as_ref(), a[2].as_ref(), k)?,
+                    Backend::Pjrt => {
+                        pjrt_knn_frag(a[0].as_ref(), a[1].as_ref(), a[2].as_ref(), tb, k)?
+                    }
+                    Backend::Native => {
+                        native_knn_frag(a[0].as_ref(), a[1].as_ref(), a[2].as_ref(), k)?
+                    }
                 };
                 Ok(vec![dd, ll])
             })
@@ -611,8 +615,20 @@ pub fn knn_task_defs(s: Shapes, backend: Backend) -> Vec<(&'static str, TaskDef)
             "KNN_merge",
             TaskDef::new("KNN_merge", 4, move |a| {
                 let (dd, ll) = match backend {
-                    Backend::Pjrt => pjrt_knn_merge(a[0].as_ref(), a[1].as_ref(), a[2].as_ref(), a[3].as_ref(), tb, k)?,
-                    Backend::Native => native_knn_merge(a[0].as_ref(), a[1].as_ref(), a[2].as_ref(), a[3].as_ref())?,
+                    Backend::Pjrt => pjrt_knn_merge(
+                        a[0].as_ref(),
+                        a[1].as_ref(),
+                        a[2].as_ref(),
+                        a[3].as_ref(),
+                        tb,
+                        k,
+                    )?,
+                    Backend::Native => native_knn_merge(
+                        a[0].as_ref(),
+                        a[1].as_ref(),
+                        a[2].as_ref(),
+                        a[3].as_ref(),
+                    )?,
                 };
                 Ok(vec![dd, ll])
             })
@@ -660,9 +676,10 @@ pub fn kmeans_task_defs(s: Shapes, backend: Backend) -> Vec<(&'static str, TaskD
                         pjrt_merge_add("merge_add2_kmsums", a[0].as_ref(), a[2].as_ref())?,
                         pjrt_merge_add("merge_add2_kmcounts", a[1].as_ref(), a[3].as_ref())?,
                     ),
-                    Backend::Native => {
-                        (elementwise_add(a[0].as_ref(), a[2].as_ref())?, elementwise_add(a[1].as_ref(), a[3].as_ref())?)
-                    }
+                    Backend::Native => (
+                        elementwise_add(a[0].as_ref(), a[2].as_ref())?,
+                        elementwise_add(a[1].as_ref(), a[3].as_ref())?,
+                    ),
                 };
                 Ok(vec![s2, c2])
             })
@@ -672,8 +689,12 @@ pub fn kmeans_task_defs(s: Shapes, backend: Backend) -> Vec<(&'static str, TaskD
             "update_centroids",
             TaskDef::new("update_centroids", 3, move |a| {
                 let out = match backend {
-                    Backend::Pjrt => pjrt_kmeans_update(a[0].as_ref(), a[1].as_ref(), a[2].as_ref(), k, d)?,
-                    Backend::Native => native_kmeans_update(a[0].as_ref(), a[1].as_ref(), a[2].as_ref())?,
+                    Backend::Pjrt => {
+                        pjrt_kmeans_update(a[0].as_ref(), a[1].as_ref(), a[2].as_ref(), k, d)?
+                    }
+                    Backend::Native => {
+                        native_kmeans_update(a[0].as_ref(), a[1].as_ref(), a[2].as_ref())?
+                    }
                 };
                 Ok(vec![out])
             }),
@@ -726,7 +747,9 @@ pub fn linreg_task_defs(s: Shapes, backend: Backend) -> Vec<(&'static str, TaskD
             "merge_ztz",
             TaskDef::new("merge_ztz", 2, move |a| {
                 let out = match backend {
-                    Backend::Pjrt => pjrt_merge_add("merge_add2_ztz", a[0].as_ref(), a[1].as_ref())?,
+                    Backend::Pjrt => {
+                        pjrt_merge_add("merge_add2_ztz", a[0].as_ref(), a[1].as_ref())?
+                    }
                     Backend::Native => elementwise_add(a[0].as_ref(), a[1].as_ref())?,
                 };
                 Ok(vec![out])
@@ -736,7 +759,9 @@ pub fn linreg_task_defs(s: Shapes, backend: Backend) -> Vec<(&'static str, TaskD
             "merge_zty",
             TaskDef::new("merge_zty", 2, move |a| {
                 let out = match backend {
-                    Backend::Pjrt => pjrt_merge_add("merge_add2_zty", a[0].as_ref(), a[1].as_ref())?,
+                    Backend::Pjrt => {
+                        pjrt_merge_add("merge_add2_zty", a[0].as_ref(), a[1].as_ref())?
+                    }
                     Backend::Native => elementwise_add(a[0].as_ref(), a[1].as_ref())?,
                 };
                 Ok(vec![out])

@@ -162,7 +162,11 @@ pub struct KmeansResult {
 }
 
 /// Live execution with optional early stopping via `tol`.
-pub fn run_kmeans(rt: &CompssRuntime, cfg: &KmeansConfig, backend: Backend) -> Result<KmeansResult> {
+pub fn run_kmeans(
+    rt: &CompssRuntime,
+    cfg: &KmeansConfig,
+    backend: Backend,
+) -> Result<KmeansResult> {
     let mut defs = backend::kmeans_task_defs(cfg.shapes, backend);
     // init_centroids body (shared generation, deterministic).
     let s = cfg.shapes;
@@ -248,7 +252,11 @@ pub fn centroid_shift(a: &RValue, b: &RValue) -> Result<f64> {
     Ok(total / k as f64)
 }
 
-pub fn run_kmeans_local(cfg: &KmeansConfig, workers: u32, backend: Backend) -> Result<KmeansResult> {
+pub fn run_kmeans_local(
+    cfg: &KmeansConfig,
+    workers: u32,
+    backend: Backend,
+) -> Result<KmeansResult> {
     let rt = CompssRuntime::start(RuntimeConfig::local(workers))?;
     let out = run_kmeans(&rt, cfg, backend);
     rt.stop()?;

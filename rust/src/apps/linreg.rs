@@ -140,6 +140,12 @@ pub fn plan_linreg(sink: &mut dyn TaskSink, cfg: &LinregConfig) -> Result<Linreg
         gemm_class: true,
     })?[0];
 
+    // Beta is consumed by every prediction task below *and* fetched by the
+    // application afterwards: pin it before the consumers are submitted,
+    // or the version GC could reclaim it the moment the last prediction
+    // finishes (racing the fetch).
+    sink.pin(beta)?;
+
     // Prediction blocks (white LR_genpred, yellow compute_prediction).
     let mut predictions = Vec::with_capacity(cfg.pred_blocks);
     for b in 0..cfg.pred_blocks {
@@ -176,7 +182,11 @@ pub struct LinregResult {
     pub r2: f64,
 }
 
-pub fn run_linreg(rt: &CompssRuntime, cfg: &LinregConfig, backend: Backend) -> Result<LinregResult> {
+pub fn run_linreg(
+    rt: &CompssRuntime,
+    cfg: &LinregConfig,
+    backend: Backend,
+) -> Result<LinregResult> {
     let mut sink = LiveSink::new(rt, backend::linreg_task_defs(cfg.shapes, backend));
     let plan = plan_linreg(&mut sink, cfg)?;
 
@@ -221,7 +231,11 @@ pub fn run_linreg(rt: &CompssRuntime, cfg: &LinregConfig, backend: Backend) -> R
     })
 }
 
-pub fn run_linreg_local(cfg: &LinregConfig, workers: u32, backend: Backend) -> Result<LinregResult> {
+pub fn run_linreg_local(
+    cfg: &LinregConfig,
+    workers: u32,
+    backend: Backend,
+) -> Result<LinregResult> {
     let rt = CompssRuntime::start(RuntimeConfig::local(workers))?;
     let out = run_linreg(&rt, cfg, backend);
     rt.stop()?;

@@ -85,6 +85,14 @@ pub trait TaskSink {
     }
     /// Synchronization point on one datum (`compss_wait_on` in the DAGs).
     fn sync(&mut self, r: SinkRef) -> Result<()>;
+    /// Declare that `r` will be fetched after planning. The live sink pins
+    /// the version so the (default-on) version GC never reclaims it, even
+    /// once every task consumer has drained; pure-DAG sinks ignore it, so
+    /// live/sim DAG parity is unaffected. Call it *before* submitting the
+    /// consumers — a later `sync`/`fetch` pins too late to be safe.
+    fn pin(&mut self, _r: SinkRef) -> Result<()> {
+        Ok(())
+    }
     /// Global barrier (end-of-app `sync` node).
     fn barrier(&mut self) -> Result<()>;
 }
@@ -219,6 +227,14 @@ impl TaskSink for LiveSink<'_> {
         let v = self.fetch(r)?;
         self.fetched.insert(r, v);
         Ok(())
+    }
+
+    fn pin(&mut self, r: SinkRef) -> Result<()> {
+        let dref = self
+            .refs
+            .get(&r)
+            .ok_or_else(|| anyhow::anyhow!("unknown sink ref {r:?}"))?;
+        self.rt.pin(dref)
     }
 
     fn barrier(&mut self) -> Result<()> {

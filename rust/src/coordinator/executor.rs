@@ -117,7 +117,10 @@ pub(crate) fn acquire_input(
         return fetch_resident(shared, key);
     }
     if shared.transfers.enabled() {
-        match shared.transfers.await_staged(key, node) {
+        // A stolen task can need bytes the router never prefetched here;
+        // the size estimate keeps the in-flight gauge honest either way.
+        let bytes = shared.table.info(key).map(|i| i.bytes).unwrap_or(0);
+        match shared.transfers.await_staged(key, node, bytes) {
             Ok(()) => return fetch_resident(shared, key),
             Err(e) => eprintln!(
                 "[rcompss] transfer of {key} to node {} failed ({e}); \
@@ -227,7 +230,7 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
         let exec_end = shared.tracer.now();
         shared.tracer.record_at(
             wid,
-            EventKind::TaskExec(meta.spec.name.clone()),
+            EventKind::TaskExec(Arc::clone(&meta.spec.name)),
             Some(id),
             exec_start,
             exec_end,
@@ -308,11 +311,22 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
                         core.stats.deserialize_s += deser_end - deser_start;
                         core.stats.serialize_s += ser_end - ser_start;
                         core.stats.exec_s += exec_end - exec_start;
+                        // String-keyed public map, Arc<str>-interned name:
+                        // allocate the key only on the first completion of
+                        // each type. (The two-step lookup is deliberate —
+                        // `match get_mut { None => insert }` is the
+                        // get-or-insert shape stable borrowck rejects, and
+                        // `entry()` would allocate a String per call.)
+                        if !core.stats.per_type.contains_key(meta.spec.name.as_ref()) {
+                            core.stats
+                                .per_type
+                                .insert(meta.spec.name.to_string(), (0, 0.0));
+                        }
                         let per = core
                             .stats
                             .per_type
-                            .entry(meta.spec.name.clone())
-                            .or_insert((0, 0.0));
+                            .get_mut(meta.spec.name.as_ref())
+                            .expect("per-type entry just ensured");
                         per.0 += 1;
                         per.1 += exec_end - exec_start;
                         core.stats.tasks_done += 1;

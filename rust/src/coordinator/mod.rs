@@ -17,6 +17,11 @@
 //! * [`scheduler`] — pluggable policies: FIFO, LIFO, data-locality, plus
 //!   [`scheduler::ShardedReady`], the per-node dispatch fabric with work
 //!   stealing that the live executor drives;
+//! * [`placement`] — the unified placement engine: one
+//!   [`placement::PlacementModel`] (`bytes` | `cost` | `roundrobin`)
+//!   routes ready tasks for the dispatch fabric, the schedule-time
+//!   prefetcher, *and* the simulator, so all three agree on where a task
+//!   belongs;
 //! * [`executor`] — the persistent worker pool (threads) for real local
 //!   execution, with memory- or file-based parameter passing;
 //! * [`fault`] — task resubmission on failure and failure injection;
@@ -63,21 +68,24 @@
 //! narrative, the lifecycle diagram, and the locking rules.
 //!
 //! **Data-plane knobs** (`runtime::CoordinatorConfig`): `memory_budget`
-//! (bytes; 0 = file plane, byte-identical to the seed runtime), `spill`
-//! (`"lru"` | `"largest"`), `transfer_threads` (movers per emulated node;
-//! 0 = synchronous seed-style cross-node reloads), and `gc` (reference-
-//! counted version GC). With the memory plane on, the configured codec
-//! runs only at spill boundaries: memory pressure, cross-node transfer,
-//! and reloads of spilled values — and with `transfer_threads > 0` the
-//! cross-node boundary runs on mover threads, never on a claiming
-//! worker's critical path. A node-local RAW chain therefore executes with
-//! zero file I/O and zero serialization.
+//! (bytes; default [`runtime::DEFAULT_MEMORY_BUDGET`] = 256 MiB; 0 = file
+//! plane, byte-identical to the seed runtime), `spill` (`"lru"` |
+//! `"largest"`), `transfer_threads` (movers per emulated node; 0 =
+//! synchronous seed-style cross-node reloads), `gc` (reference-counted
+//! version GC, default on), and `router` (placement model: `"bytes"` |
+//! `"cost"` | `"roundrobin"`). With the memory plane on, the configured
+//! codec runs only at spill boundaries: memory pressure, cross-node
+//! transfer, and reloads of spilled values — and with
+//! `transfer_threads > 0` the cross-node boundary runs on mover threads,
+//! never on a claiming worker's critical path. A node-local RAW chain
+//! therefore executes with zero file I/O and zero serialization.
 
 pub mod access;
 pub mod dag;
 pub mod datastore;
 pub mod executor;
 pub mod fault;
+pub mod placement;
 pub mod registry;
 pub mod runtime;
 pub mod scheduler;
@@ -86,6 +94,7 @@ pub mod transfer;
 pub use access::Direction;
 pub use dag::{EdgeKind, TaskGraph, TaskId, TaskState};
 pub use datastore::{DataStore, SpillPolicy};
+pub use placement::{placement_by_name, PlacementModel, RoutedReady};
 pub use registry::{DataKey, DataRegistry, NodeId, VersionTable};
 pub use runtime::{Coordinator, CoordinatorConfig, SubmitOutcome};
 pub use transfer::TransferService;

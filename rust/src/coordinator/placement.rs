@@ -1,0 +1,519 @@
+//! The unified placement engine: one routing verdict shared by the live
+//! dispatch fabric, the schedule-time prefetcher, and the simulator.
+//!
+//! The paper attributes RCOMPSs' 70%+ efficiency at 128 cores to
+//! runtime-aware placement — "data-locality-aware strategies" that keep
+//! tasks next to their inputs while keeping workers busy (§3.1, §4).
+//! Before this layer existed, the runtime had three disconnected
+//! approximations of that idea: `ShardedReady` did a private most-bytes
+//! scan, the simulator charged its own transfer costs, and the prefetcher
+//! could actively fight the router (a replica already moving toward a node
+//! counted for nothing). A [`PlacementModel`] is now the single authority:
+//!
+//! * [`ShardedReady`](super::scheduler::ShardedReady) consults an injected
+//!   `Arc<dyn PlacementModel>` on every push — there is no private routing
+//!   logic left in the dispatch fabric;
+//! * `Shared::enqueue_ready` derives its prefetch targets from the *same*
+//!   verdict (and the same locality snapshot) it routed with — one
+//!   decision, not two;
+//! * the simulator drives the identical model through [`RoutedReady`], so
+//!   simulated and live placements provably agree for the same push
+//!   sequence and the same signals (see the placement-equivalence
+//!   property test; the simulator's in-flight pressure is always zero —
+//!   it charges transfers at claim time).
+//!
+//! # Model inputs
+//!
+//! A model sees, per decision:
+//!
+//! * the task's **locality snapshot** — `(bytes, replica nodes)` per input,
+//!   read once from the `VersionTable` at enqueue time ([`ReadyTask`]);
+//! * **in-flight transfer pressure** — bytes queued or moving toward each
+//!   node, from [`PlacementSignals::inflight_toward`] (backed by
+//!   `TransferService::inflight_toward` in the live runtime);
+//! * **queue depth** — ready tasks already waiting on each node's shard,
+//!   from [`PlacementSignals::queue_depth`].
+//!
+//! # Models
+//!
+//! | name | verdict |
+//! |------|---------|
+//! | `bytes` | node holding the most resident input bytes, else round-robin (the historical `ShardedReady::route`) |
+//! | `cost` | node minimizing *bytes still to move* (in-flight transfers count as already local) plus a queue-depth load penalty |
+//! | `roundrobin` | strict rotation, ignoring locality (baseline / ablation) |
+//!
+//! Selected via `CoordinatorConfig.router` / `--router` (live) and
+//! `SimEngine::with_router` (simulator).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use super::dag::TaskId;
+use super::registry::NodeId;
+use super::scheduler::{scheduler_by_name, ReadyTask, Scheduler};
+
+/// Stack-allocated score buffer for typical node counts: routing a push
+/// must not allocate (the historical implementation built a
+/// `vec![0u64; nodes]` per task).
+const INLINE_NODES: usize = 16;
+
+/// Dynamic per-node signals a model may consult beyond the task's own
+/// locality snapshot. Both callbacks must be cheap (atomic loads): they
+/// run on the push hot path, once per node per decision.
+pub trait PlacementSignals {
+    /// Serialized bytes queued or in flight toward `node` (asynchronous
+    /// transfer service). Zero when no transfer plane exists (simulator,
+    /// file plane, `--transfer-threads 0`).
+    fn inflight_toward(&self, node: NodeId) -> u64;
+
+    /// Ready tasks currently queued on `node`'s shard.
+    fn queue_depth(&self, node: NodeId) -> usize;
+}
+
+/// All-zero signals: locality-snapshot-only placement (unit tests, pure
+/// structures).
+pub struct NoSignals;
+
+impl PlacementSignals for NoSignals {
+    fn inflight_toward(&self, _node: NodeId) -> u64 {
+        0
+    }
+
+    fn queue_depth(&self, _node: NodeId) -> usize {
+        0
+    }
+}
+
+/// Source of in-flight transfer pressure. Implemented by
+/// `TransferService`; tests inject stubs to drive the `cost` model
+/// deterministically.
+pub trait InflightSource: Send + Sync {
+    /// Serialized bytes queued or moving toward `node`.
+    fn inflight_toward(&self, node: NodeId) -> u64;
+}
+
+/// A placement model: given a ready task and the per-node signals, pick
+/// the node (shard) the task should run on. Implementations carry their
+/// own round-robin cursors, so the verdict sequence is deterministic for a
+/// given push order — the property the live-vs-sim equivalence test pins.
+pub trait PlacementModel: Send + Sync {
+    /// Model name for configs/CLI (`bytes`, `cost`, `roundrobin`).
+    fn name(&self) -> &'static str;
+
+    /// The node `task` should land on, in `0..nodes`.
+    fn place(&self, task: &ReadyTask, nodes: usize, signals: &dyn PlacementSignals) -> usize;
+}
+
+/// Construct a model by name.
+pub fn placement_by_name(name: &str) -> Option<Arc<dyn PlacementModel>> {
+    match name {
+        "bytes" => Some(Arc::new(BytesPlacement::new())),
+        "cost" => Some(Arc::new(CostPlacement::new())),
+        "roundrobin" => Some(Arc::new(RoundRobinPlacement::new())),
+        _ => None,
+    }
+}
+
+/// Run `f` over a zeroed per-node score slice without heap allocation for
+/// up to [`INLINE_NODES`] nodes (the common case; larger clusters pay one
+/// short-lived vec).
+fn with_scores<R>(nodes: usize, f: impl FnOnce(&mut [u64]) -> R) -> R {
+    if nodes <= INLINE_NODES {
+        let mut buf = [0u64; INLINE_NODES];
+        f(&mut buf[..nodes])
+    } else {
+        let mut buf = vec![0u64; nodes];
+        f(&mut buf)
+    }
+}
+
+/// Sum each node's resident input bytes into `scores` (length `nodes`).
+fn resident_per_node(task: &ReadyTask, scores: &mut [u64]) {
+    for (bytes, locs) in &task.inputs {
+        for n in locs {
+            if let Some(slot) = scores.get_mut(n.0 as usize) {
+                *slot += *bytes;
+            }
+        }
+    }
+}
+
+/// The historical `ShardedReady::route` behavior: the node holding the
+/// most resident input bytes wins (last index on ties, matching the old
+/// `max_by_key` scan); tasks with no resident bytes round-robin.
+pub struct BytesPlacement {
+    rr: AtomicUsize,
+}
+
+impl BytesPlacement {
+    pub fn new() -> BytesPlacement {
+        BytesPlacement {
+            rr: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl Default for BytesPlacement {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PlacementModel for BytesPlacement {
+    fn name(&self) -> &'static str {
+        "bytes"
+    }
+
+    fn place(&self, task: &ReadyTask, nodes: usize, _signals: &dyn PlacementSignals) -> usize {
+        with_scores(nodes, |scores| {
+            resident_per_node(task, scores);
+            scores
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, b)| **b)
+                .filter(|(_, b)| **b > 0)
+                .map(|(i, _)| i)
+                .unwrap_or_else(|| self.rr.fetch_add(1, Ordering::Relaxed) % nodes.max(1))
+        })
+    }
+}
+
+/// Transfer-aware cost model: pick the node with the fewest bytes still
+/// to move, counting a replica already queued/moving toward a node as
+/// local (so the router rides the prefetcher instead of fighting it), and
+/// penalizing deep ready queues so locality never starves a node.
+///
+/// cost(N) = missing(N) − credit(N) + depth(N) × (total/8 + 1)
+///
+/// where `missing(N)` is the task's input bytes without a replica on N,
+/// `credit(N)` caps the node's in-flight bytes at `missing(N)`, and the
+/// per-queued-task penalty scales with the task's own footprint — a node
+/// must be ahead by ~an eighth of the inputs per queued task to win. Ties
+/// break toward the shallower queue, then the lower index. A task with no
+/// inputs costs only the depth term, so locality-free work spreads to the
+/// shallowest queue.
+///
+/// The in-flight gauge is a per-node *aggregate* (cheap atomic, no board
+/// lock on the push path), so credit is an optimistic approximation: a
+/// transfer of an unrelated version toward N also counts. Two guards keep
+/// the approximation safe — credit is capped at `missing(N)`, and it only
+/// participates in the cost (never in tie-breaks), so in-flight pressure
+/// can at best make a node *tie* a fully-local home, and ties resolve by
+/// load and index, never by credit. Unrelated traffic therefore cannot
+/// hijack a task whose bytes are already resident somewhere idle.
+pub struct CostPlacement;
+
+impl CostPlacement {
+    pub fn new() -> CostPlacement {
+        CostPlacement
+    }
+}
+
+impl Default for CostPlacement {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PlacementModel for CostPlacement {
+    fn name(&self) -> &'static str {
+        "cost"
+    }
+
+    fn place(&self, task: &ReadyTask, nodes: usize, signals: &dyn PlacementSignals) -> usize {
+        with_scores(nodes, |scores| {
+            resident_per_node(task, scores);
+            let total = task.total_bytes();
+            let penalty_per_task = total / 8 + 1;
+            let mut best: Option<(u128, usize, usize)> = None;
+            for (i, resident) in scores.iter().enumerate() {
+                let missing = total.saturating_sub(*resident);
+                let credit = signals.inflight_toward(NodeId(i as u32)).min(missing);
+                let depth = signals.queue_depth(NodeId(i as u32));
+                let cost = u128::from(missing - credit)
+                    + u128::from(depth as u64) * u128::from(penalty_per_task);
+                let key = (cost, depth, i);
+                if best.map(|b| key < b).unwrap_or(true) {
+                    best = Some(key);
+                }
+            }
+            best.map(|(_, _, i)| i).unwrap_or(0)
+        })
+    }
+}
+
+/// Strict rotation, blind to locality — the load-spreading baseline the
+/// scheduler ablations compare against.
+pub struct RoundRobinPlacement {
+    rr: AtomicUsize,
+}
+
+impl RoundRobinPlacement {
+    pub fn new() -> RoundRobinPlacement {
+        RoundRobinPlacement {
+            rr: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl Default for RoundRobinPlacement {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PlacementModel for RoundRobinPlacement {
+    fn name(&self) -> &'static str {
+        "roundrobin"
+    }
+
+    fn place(&self, _task: &ReadyTask, nodes: usize, _signals: &dyn PlacementSignals) -> usize {
+        self.rr.fetch_add(1, Ordering::Relaxed) % nodes.max(1)
+    }
+}
+
+/// Single-threaded sibling of
+/// [`ShardedReady`](super::scheduler::ShardedReady): one policy instance
+/// per node, pushes routed by the injected [`PlacementModel`], pops
+/// preferring the worker's own shard and stealing in ring order. The
+/// discrete-event simulator drives this, so a simulated run makes exactly
+/// the placement decisions the live dispatch fabric would make for the
+/// same push sequence — the live-vs-sim equivalence property.
+pub struct RoutedReady {
+    shards: Vec<Box<dyn Scheduler>>,
+    model: Arc<dyn PlacementModel>,
+}
+
+/// Queue-depth view over `RoutedReady`'s shards (no transfer plane in the
+/// simulator: transfers are charged at claim time, so nothing is ever "in
+/// flight" between events).
+struct ShardDepths<'a> {
+    shards: &'a [Box<dyn Scheduler>],
+}
+
+impl PlacementSignals for ShardDepths<'_> {
+    fn inflight_toward(&self, _node: NodeId) -> u64 {
+        0
+    }
+
+    fn queue_depth(&self, node: NodeId) -> usize {
+        self.shards
+            .get(node.0 as usize)
+            .map(|s| s.queue_len())
+            .unwrap_or(0)
+    }
+}
+
+impl RoutedReady {
+    /// One shard per node, each running the named policy, routed by
+    /// `model`. `None` for an unknown policy name.
+    pub fn new(policy: &str, nodes: u32, model: Arc<dyn PlacementModel>) -> Option<RoutedReady> {
+        let shards = (0..nodes.max(1))
+            .map(|_| scheduler_by_name(policy))
+            .collect::<Option<Vec<_>>>()?;
+        Some(RoutedReady { shards, model })
+    }
+
+    pub fn nodes(&self) -> u32 {
+        self.shards.len() as u32
+    }
+
+    /// Route and enqueue a ready task; returns the chosen node index.
+    pub fn push(&mut self, task: ReadyTask) -> usize {
+        let shard = self.model.place(
+            &task,
+            self.shards.len(),
+            &ShardDepths {
+                shards: &self.shards,
+            },
+        );
+        self.shards[shard].push(task);
+        shard
+    }
+
+    /// Pop for a worker on `node`: own shard first, then steal in ring
+    /// order. `None` when every shard is empty.
+    pub fn pop_for(&mut self, node: NodeId) -> Option<TaskId> {
+        let nodes = self.shards.len();
+        let home = (node.0 as usize) % nodes;
+        for i in 0..nodes {
+            let shard = (home + i) % nodes;
+            if let Some(id) = self.shards[shard].pop_for(node) {
+                return Some(id);
+            }
+        }
+        None
+    }
+
+    /// Tasks currently queued (all shards).
+    pub fn queue_len(&self) -> usize {
+        self.shards.iter().map(|s| s.queue_len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt(id: u64, inputs: Vec<(u64, Vec<NodeId>)>) -> ReadyTask {
+        ReadyTask {
+            id: TaskId(id),
+            inputs,
+            type_name: "t".into(),
+        }
+    }
+
+    /// Scriptable signals: fixed inflight/depth vectors.
+    struct Stub {
+        inflight: Vec<u64>,
+        depth: Vec<usize>,
+    }
+
+    impl PlacementSignals for Stub {
+        fn inflight_toward(&self, node: NodeId) -> u64 {
+            self.inflight.get(node.0 as usize).copied().unwrap_or(0)
+        }
+
+        fn queue_depth(&self, node: NodeId) -> usize {
+            self.depth.get(node.0 as usize).copied().unwrap_or(0)
+        }
+    }
+
+    #[test]
+    fn by_name_resolves_all_models() {
+        for n in ["bytes", "cost", "roundrobin"] {
+            assert_eq!(placement_by_name(n).unwrap().name(), n);
+        }
+        assert!(placement_by_name("zzz").is_none());
+    }
+
+    #[test]
+    fn bytes_picks_most_resident_and_round_robins_without_signal() {
+        let m = BytesPlacement::new();
+        // Most resident bytes win.
+        let t = rt(1, vec![(100, vec![NodeId(0)]), (300, vec![NodeId(2)])]);
+        assert_eq!(m.place(&t, 3, &NoSignals), 2);
+        // Locality-free tasks rotate.
+        let free = rt(2, vec![]);
+        assert_eq!(m.place(&free, 3, &NoSignals), 0);
+        assert_eq!(m.place(&free, 3, &NoSignals), 1);
+        assert_eq!(m.place(&free, 3, &NoSignals), 2);
+        assert_eq!(m.place(&free, 3, &NoSignals), 0);
+    }
+
+    #[test]
+    fn bytes_ignores_out_of_range_replicas() {
+        let m = BytesPlacement::new();
+        // A replica on a node beyond the cluster (stale location) cannot
+        // panic or win.
+        let t = rt(1, vec![(100, vec![NodeId(7)]), (10, vec![NodeId(1)])]);
+        assert_eq!(m.place(&t, 2, &NoSignals), 1);
+    }
+
+    #[test]
+    fn roundrobin_rotates_regardless_of_locality() {
+        let m = RoundRobinPlacement::new();
+        let t = rt(1, vec![(1 << 30, vec![NodeId(1)])]);
+        assert_eq!(m.place(&t, 2, &NoSignals), 0);
+        assert_eq!(m.place(&t, 2, &NoSignals), 1);
+        assert_eq!(m.place(&t, 2, &NoSignals), 0);
+    }
+
+    #[test]
+    fn cost_prefers_resident_bytes_like_bytes_model() {
+        let m = CostPlacement::new();
+        let t = rt(1, vec![(100, vec![NodeId(0)]), (300, vec![NodeId(2)])]);
+        assert_eq!(m.place(&t, 3, &NoSignals), 2);
+    }
+
+    #[test]
+    fn cost_counts_inflight_transfers_as_local() {
+        // The regression the tentpole demands: a version mid-transfer
+        // toward node 1 (prefetched there for an earlier consumer, whose
+        // routing also queued work on node 0) routes the next consumer to
+        // node 1 under `cost` — and not under `bytes`, which only ever
+        // chases the resident replica.
+        let t = rt(1, vec![(1000, vec![NodeId(0)])]);
+        let signals = Stub {
+            inflight: vec![0, 1000],
+            depth: vec![1, 0],
+        };
+        assert_eq!(CostPlacement::new().place(&t, 2, &signals), 1);
+        assert_eq!(BytesPlacement::new().place(&t, 2, &signals), 0);
+    }
+
+    #[test]
+    fn cost_unrelated_inflight_cannot_hijack_a_fully_local_task() {
+        // Aggregate in-flight pressure toward node 1 (some other value's
+        // transfer) can at best tie a fully-local node 0 — and ties never
+        // resolve by credit, so the task stays home instead of forcing a
+        // brand-new transfer.
+        let t = rt(1, vec![(1000, vec![NodeId(0)])]);
+        let signals = Stub {
+            inflight: vec![0, 1 << 20],
+            depth: vec![0, 0],
+        };
+        assert_eq!(CostPlacement::new().place(&t, 2, &signals), 0);
+    }
+
+    #[test]
+    fn cost_load_penalty_overrides_thin_locality() {
+        // Node 0 holds 1/8 of the inputs but has a deep queue; node 1 is
+        // idle. One queued task costs total/8+1, so depth 2 outweighs the
+        // 125-byte locality edge.
+        let t = rt(1, vec![(125, vec![NodeId(0)]), (875, vec![])]);
+        let signals = Stub {
+            inflight: vec![0, 0],
+            depth: vec![2, 0],
+        };
+        assert_eq!(CostPlacement::new().place(&t, 2, &signals), 1);
+    }
+
+    #[test]
+    fn cost_spreads_locality_free_tasks_to_shallow_queues() {
+        let t = rt(1, vec![]);
+        let signals = Stub {
+            inflight: vec![0, 0, 0],
+            depth: vec![3, 1, 2],
+        };
+        assert_eq!(CostPlacement::new().place(&t, 3, &signals), 1);
+    }
+
+    #[test]
+    fn cost_partial_inflight_cannot_beat_fully_local() {
+        // A transfer covering only part of the missing bytes leaves node 1
+        // with a positive cost; the fully-local node 0 wins outright.
+        let t = rt(1, vec![(1000, vec![NodeId(0)])]);
+        let signals = Stub {
+            inflight: vec![0, 400],
+            depth: vec![0, 0],
+        };
+        assert_eq!(CostPlacement::new().place(&t, 2, &signals), 0);
+    }
+
+    #[test]
+    fn models_handle_more_nodes_than_inline_buffer() {
+        let nodes = INLINE_NODES + 8;
+        let t = rt(1, vec![(64, vec![NodeId((nodes - 1) as u32)])]);
+        assert_eq!(
+            BytesPlacement::new().place(&t, nodes, &NoSignals),
+            nodes - 1
+        );
+        assert_eq!(CostPlacement::new().place(&t, nodes, &NoSignals), nodes - 1);
+    }
+
+    #[test]
+    fn routed_ready_routes_pops_and_steals() {
+        let model = placement_by_name("bytes").unwrap();
+        let mut q = RoutedReady::new("fifo", 2, model).unwrap();
+        assert_eq!(q.push(rt(1, vec![(100, vec![NodeId(1)])])), 1);
+        assert_eq!(q.push(rt(2, vec![(100, vec![NodeId(0)])])), 0);
+        assert_eq!(q.queue_len(), 2);
+        // Own shard first...
+        assert_eq!(q.pop_for(NodeId(1)), Some(TaskId(1)));
+        // ...then ring-order stealing keeps workers busy.
+        assert_eq!(q.pop_for(NodeId(1)), Some(TaskId(2)));
+        assert_eq!(q.pop_for(NodeId(1)), None);
+        assert!(RoutedReady::new("zzz", 2, placement_by_name("cost").unwrap()).is_none());
+    }
+}

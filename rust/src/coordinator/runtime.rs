@@ -33,6 +33,7 @@ use crate::coordinator::dag::{EdgeKind, TaskGraph, TaskId, TaskState};
 use crate::coordinator::datastore::{DataStore, SpillPolicy};
 use crate::coordinator::executor;
 use crate::coordinator::fault::{FailureInjector, RetryPolicy};
+use crate::coordinator::placement::{placement_by_name, InflightSource};
 use crate::coordinator::registry::{CollectAction, DataKey, DataRegistry, NodeId, VersionTable};
 use crate::coordinator::scheduler::{ReadyTask, ShardedReady};
 use crate::coordinator::transfer::{self, TransferService};
@@ -48,7 +49,10 @@ pub type TaskBody = Arc<dyn Fn(&[Arc<RValue>]) -> Result<Vec<RValue>> + Send + S
 
 /// Registered task metadata (the product of the R-level `task()` call).
 pub struct TaskSpec {
-    pub name: String,
+    /// Task type name, interned: every `ReadyTask`, trace event, and sim
+    /// meta shares this allocation instead of cloning a `String` per
+    /// push/steal.
+    pub name: Arc<str>,
     pub arity: usize,
     pub n_outputs: usize,
     /// Per-argument directions; length == arity.
@@ -108,6 +112,10 @@ pub struct CoordinatorConfig {
     pub workers_per_node: u32,
     /// Scheduling policy: "fifo" | "lifo" | "locality".
     pub scheduler: String,
+    /// Placement model routing ready tasks to node shards (and prefetches
+    /// with them): "bytes" (default) | "cost" | "roundrobin". See
+    /// `coordinator::placement`.
+    pub router: String,
     /// Parameter codec (Table 1): "rmvl" (default) | "qs" | ...
     pub codec: String,
     /// Directory for serialized parameter files.
@@ -117,9 +125,10 @@ pub struct CoordinatorConfig {
     pub trace: bool,
     /// Failure injection (tests/chaos benches).
     pub injector: Arc<FailureInjector>,
-    /// Byte budget of the in-memory data plane. 0 (the default) disables
-    /// the store entirely: every parameter goes through the codec and the
-    /// workdir, byte-identical to the original file-based runtime.
+    /// Byte budget of the in-memory data plane (default
+    /// [`DEFAULT_MEMORY_BUDGET`], 256 MiB). 0 disables the store entirely:
+    /// every parameter goes through the codec and the workdir,
+    /// byte-identical to the original file-based runtime.
     pub memory_budget: u64,
     /// Spill victim selection when over budget: "lru" | "largest".
     pub spill: String,
@@ -128,24 +137,39 @@ pub struct CoordinatorConfig {
     /// worker runs the codec round-trip synchronously. Only meaningful on
     /// the memory plane (`memory_budget > 0`).
     pub transfer_threads: u32,
-    /// Reference-counted version GC (default off). When on, a `dXvY`
+    /// Reference-counted version GC (default on). When on, a `dXvY`
     /// version whose last registered consumer finishes is reclaimed
     /// immediately — the store frees its bytes and any spill file is
     /// deleted — instead of lingering until pressure eviction. Versions
-    /// fetched with `wait_on` are pinned and never reclaimed; fetching a
-    /// *different* handle after its last consumer already finished is an
-    /// error under GC (fetch before the last consumer, or keep GC off).
+    /// fetched with `wait_on` (or pinned with `Coordinator::pin`) are
+    /// never reclaimed; fetching a *different* handle after its last
+    /// consumer already finished is an error under GC (pin or fetch
+    /// before the last consumer, or disable GC).
     pub gc: bool,
 }
 
+/// Default byte budget of the in-memory data plane — the single source of
+/// truth shared by [`CoordinatorConfig::local`], the CLI's
+/// `--memory-budget` default, and the docs.
+pub const DEFAULT_MEMORY_BUDGET: u64 = 256 << 20;
+
 impl CoordinatorConfig {
     /// Sensible local defaults: one node, `workers` executors, RMVL codec,
-    /// FIFO policy, workdir under the system temp dir, file data plane.
+    /// FIFO policy, workdir under the system temp dir, the in-memory data
+    /// plane ([`DEFAULT_MEMORY_BUDGET`]) with the version GC on.
+    /// `with_memory_budget(0).with_gc(false)` restores the seed-identical
+    /// file plane.
+    ///
+    /// The `RCOMPSS_SCHEDULER` and `RCOMPSS_ROUTER` environment variables
+    /// override the scheduler/router *defaults* (explicit `with_*` calls
+    /// still win) — this is how CI sweeps the placement × policy matrix
+    /// over the unmodified test suite.
     pub fn local(workers: u32) -> CoordinatorConfig {
         CoordinatorConfig {
             nodes: 1,
             workers_per_node: workers.max(1),
-            scheduler: "fifo".into(),
+            scheduler: std::env::var("RCOMPSS_SCHEDULER").unwrap_or_else(|_| "fifo".into()),
+            router: std::env::var("RCOMPSS_ROUTER").unwrap_or_else(|_| "bytes".into()),
             codec: "rmvl".into(),
             workdir: std::env::temp_dir().join(format!(
                 "rcompss_{}_{}",
@@ -155,20 +179,28 @@ impl CoordinatorConfig {
             retry: RetryPolicy::default(),
             trace: false,
             injector: Arc::new(FailureInjector::none()),
-            memory_budget: 0,
+            memory_budget: DEFAULT_MEMORY_BUDGET,
             spill: "lru".into(),
             transfer_threads: 1,
-            gc: false,
+            gc: true,
         }
     }
 
-    /// Local defaults plus the in-memory data plane (256 MiB budget).
+    /// Alias of [`CoordinatorConfig::local`], kept for source
+    /// compatibility from when the memory plane was opt-in (its 256 MiB
+    /// budget is now the `local` default).
     pub fn local_in_memory(workers: u32) -> CoordinatorConfig {
-        CoordinatorConfig::local(workers).with_memory_budget(256 << 20)
+        CoordinatorConfig::local(workers)
     }
 
     pub fn with_scheduler(mut self, name: &str) -> Self {
         self.scheduler = name.into();
+        self
+    }
+
+    /// Placement model: "bytes" | "cost" | "roundrobin".
+    pub fn with_router(mut self, name: &str) -> Self {
+        self.router = name.into();
         self
     }
 
@@ -306,8 +338,10 @@ pub(crate) struct Shared {
     /// The in-memory data plane (disabled at budget 0).
     pub store: DataStore,
     /// Asynchronous cross-node transfer board (movers disabled at
-    /// `transfer_threads` 0 or on the file plane).
-    pub transfers: TransferService,
+    /// `transfer_threads` 0 or on the file plane). Shared (`Arc`) with the
+    /// dispatch fabric, whose placement model reads the per-node in-flight
+    /// gauge on every routing decision.
+    pub transfers: Arc<TransferService>,
     /// Reference-counted version GC knob.
     pub gc_enabled: bool,
     /// GC accounting: versions reclaimed / recorded bytes / files deleted.
@@ -329,31 +363,39 @@ impl Shared {
         self.workdir.join(format!("{key}.par"))
     }
 
-    /// Push a newly-ready task to the dispatch fabric with locality
-    /// metadata (input sizes and replica locations from the version
-    /// table), then prefetch: every input the routed node does not hold
-    /// yet is handed to the transfer service at *schedule* time, so by the
-    /// time a worker claims the task the bytes are usually staged already.
+    /// Push a newly-ready task to the dispatch fabric and prefetch its
+    /// remote inputs — one placement verdict drives both. The version
+    /// table is read *once* per input into a locality snapshot; the
+    /// placement model routes on that snapshot, and every input the
+    /// snapshot shows missing from the routed node is handed to the
+    /// transfer service at *schedule* time (so by the time a worker claims
+    /// the task the bytes are usually staged already). Routing and
+    /// prefetch can therefore never disagree about where a replica lives —
+    /// the split-brain the old two-read path allowed.
     pub(crate) fn enqueue_ready(&self, core: &mut Core, id: TaskId) {
         let meta = Arc::clone(&core.meta[&id]);
-        let inputs = meta
+        let snapshot: Vec<(DataKey, u64, Vec<NodeId>)> = meta
             .inputs
             .iter()
             .map(|k| {
                 let info = self.table.info(*k).expect("input version missing");
-                (info.bytes, info.locations)
+                (*k, info.bytes, info.locations)
             })
+            .collect();
+        let inputs = snapshot
+            .iter()
+            .map(|(_, bytes, locs)| (*bytes, locs.clone()))
             .collect();
         let node = self.ready.push(ReadyTask {
             id,
             inputs,
-            type_name: meta.spec.name.clone(),
+            type_name: Arc::clone(&meta.spec.name),
         });
         if self.ready.nodes() > 1 && self.store.enabled() && self.transfers.enabled() {
             let dst = NodeId(node as u32);
-            for k in &meta.inputs {
-                if !self.table.is_local(*k, dst) {
-                    self.transfers.request(*k, dst);
+            for (k, bytes, locs) in &snapshot {
+                if !locs.contains(&dst) {
+                    self.transfers.request(*k, dst, *bytes);
                 }
             }
         }
@@ -465,8 +507,13 @@ impl Coordinator {
     pub fn start(config: CoordinatorConfig) -> Result<Coordinator> {
         std::fs::create_dir_all(&config.workdir)
             .with_context(|| format!("create workdir {}", config.workdir.display()))?;
-        let ready = ShardedReady::new(&config.scheduler, config.nodes)
-            .ok_or_else(|| anyhow!("unknown scheduler '{}'", config.scheduler))?;
+        let model = placement_by_name(&config.router).ok_or_else(|| {
+            anyhow!(
+                "unknown router '{}' (bytes|cost|roundrobin; set via --router, \
+                 with_router, or the RCOMPSS_ROUTER default override)",
+                config.router
+            )
+        })?;
         let codec = codec_by_name(&config.codec)
             .ok_or_else(|| anyhow!("unknown codec '{}'", config.codec))?;
         let spill = SpillPolicy::by_name(&config.spill)
@@ -479,6 +526,23 @@ impl Coordinator {
         } else {
             0
         };
+        let transfers = Arc::new(TransferService::new(movers_per_node, config.nodes));
+        // The fabric routes with the configured placement model and reads
+        // the transfer board's in-flight gauge — the same verdict the
+        // prefetcher and the simulator consult.
+        let ready = ShardedReady::new(
+            &config.scheduler,
+            config.nodes,
+            model,
+            Some(Arc::clone(&transfers) as Arc<dyn InflightSource>),
+        )
+        .ok_or_else(|| {
+            anyhow!(
+                "unknown scheduler '{}' (fifo|lifo|locality; set via --scheduler, \
+                 with_scheduler, or the RCOMPSS_SCHEDULER default override)",
+                config.scheduler
+            )
+        })?;
         let shared = Arc::new(Shared {
             core: Mutex::new(Core {
                 graph: TaskGraph::new(),
@@ -490,7 +554,7 @@ impl Coordinator {
             table,
             ready,
             store: DataStore::new(config.memory_budget, spill),
-            transfers: TransferService::new(movers_per_node, config.nodes),
+            transfers,
             gc_enabled: config.gc,
             gc_collected: AtomicU64::new(0),
             gc_bytes: AtomicU64::new(0),
@@ -758,6 +822,18 @@ impl Coordinator {
         (SubmitOutcome { returns, updated }, cancelled)
     }
 
+    /// Pin a version so the GC never reclaims it, without waiting for it.
+    /// Call this before the value's last task consumer may finish when the
+    /// application plans to fetch the handle later — `wait_on` pins
+    /// implicitly, but only at fetch time, which is too late for a value
+    /// whose consumers were submitted (and may drain) first.
+    pub fn pin(&self, key: DataKey) -> Result<()> {
+        if !self.shared.table.pin(key) {
+            bail!("unknown datum {key}");
+        }
+        Ok(())
+    }
+
     /// Block until `key` is produced, then fetch and return it
     /// (`compss_wait_on`). Fails if the producing task failed or was
     /// cancelled. On the memory plane this is a store lookup (plus one
@@ -948,7 +1024,7 @@ mod tests {
         let key = seed_value(&coord, 64);
         // Exactly what enqueue_ready issues when it routes a consumer of
         // `key` to node 1.
-        coord.shared.transfers.request(key, NodeId(1));
+        coord.shared.transfers.request(key, NodeId(1), 64 * 8);
         // A mover stages the replica with no claimant anywhere near; the
         // completion counter flips once the transfer is fully published.
         let t0 = Instant::now();
@@ -978,7 +1054,7 @@ mod tests {
         let config = mem_config(2, 1);
         let coord = Coordinator::start(config.clone()).unwrap();
         let key = seed_value(&coord, 256);
-        coord.shared.transfers.request(key, NodeId(1));
+        coord.shared.transfers.request(key, NodeId(1), 256 * 8);
         // Claim immediately, racing the mover: the claimant either finds
         // the replica staged (prefetched) or parks mid-transfer (waited) —
         // never a synchronous claim-path decode, always the right bytes.

@@ -17,12 +17,15 @@
 use super::{ReadyTask, Scheduler};
 use crate::coordinator::dag::TaskId;
 use crate::coordinator::registry::NodeId;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 
 #[derive(Default)]
 pub struct LocalityScheduler {
-    /// Tasks whose inputs are dominantly resident on one node.
-    buckets: HashMap<NodeId, VecDeque<ReadyTask>>,
+    /// Tasks whose inputs are dominantly resident on one node. Ordered map
+    /// so victim selection on steals is deterministic across instances —
+    /// the live fabric and the simulator's router must make identical
+    /// decisions for identical content (placement-equivalence property).
+    buckets: BTreeMap<NodeId, VecDeque<ReadyTask>>,
     /// Tasks with no locality signal (literals only, empty inputs).
     anywhere: VecDeque<ReadyTask>,
     len: usize,

@@ -8,10 +8,12 @@
 //! Policies are pure data structures driven identically by the live
 //! executor and the discrete-event simulator. The live executor no longer
 //! drives a single policy instance behind the global lock: it instantiates
-//! one per node inside [`ShardedReady`], which adds locality routing, work
-//! stealing, and lock-free worker parking around the unchanged policies
-//! (see `coordinator/mod.rs` § *Data plane & locking*). The simulator keeps
-//! driving a single instance directly.
+//! one per node inside [`ShardedReady`], which adds placement routing
+//! (via the injected [`PlacementModel`](crate::coordinator::placement::PlacementModel)),
+//! work stealing, and lock-free worker parking around the unchanged
+//! policies (see `coordinator/mod.rs` § *Data plane & locking*). The
+//! simulator drives the same per-node layout single-threaded through
+//! [`RoutedReady`](crate::coordinator::placement::RoutedReady).
 
 mod fifo;
 mod lifo;
@@ -23,6 +25,8 @@ pub use lifo::LifoScheduler;
 pub use locality::LocalityScheduler;
 pub use sharded::ShardedReady;
 
+use std::sync::Arc;
+
 use crate::coordinator::dag::TaskId;
 use crate::coordinator::registry::NodeId;
 
@@ -32,8 +36,9 @@ pub struct ReadyTask {
     pub id: TaskId,
     /// (bytes, nodes-holding-a-replica) per input.
     pub inputs: Vec<(u64, Vec<NodeId>)>,
-    /// Task type, for policies that classify by type.
-    pub type_name: String,
+    /// Task type, for policies that classify by type. Interned: the spec's
+    /// `Arc<str>` is shared, never deep-copied per push/steal.
+    pub type_name: Arc<str>,
 }
 
 impl ReadyTask {

@@ -9,9 +9,11 @@
 //!
 //! * one policy instance ([`Scheduler`]) per emulated node, each behind its
 //!   own mutex — a worker's common-case pop touches only its node's shard;
-//! * pushes are routed to the node holding the most input bytes (falling
-//!   back to round-robin), so the configured policy keeps making its
-//!   locality/order decisions *within* a shard;
+//! * pushes are routed by the injected
+//!   [`PlacementModel`](crate::coordinator::placement::PlacementModel) —
+//!   the same engine the prefetcher and the simulator consult, so the
+//!   fabric holds no private routing logic — while the configured policy
+//!   keeps making its locality/order decisions *within* a shard;
 //! * a worker that finds its shard empty steals from the other shards in
 //!   ring order before parking — stealing trades strict policy order for
 //!   utilization, exactly as COMPSs does;
@@ -25,18 +27,27 @@
 //! the notification fires.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use super::{scheduler_by_name, ReadyTask, Scheduler};
 use crate::coordinator::dag::TaskId;
+use crate::coordinator::placement::{InflightSource, PlacementModel, PlacementSignals};
 use crate::coordinator::registry::NodeId;
 
 pub struct ShardedReady {
     shards: Vec<Mutex<Box<dyn Scheduler>>>,
+    /// Ready tasks per shard — the placement model's load signal. Kept
+    /// beside (not inside) the shard mutexes so routing reads them without
+    /// taking any lock.
+    depths: Vec<AtomicUsize>,
     /// Total tasks currently queued across all shards.
     queued: AtomicU64,
-    /// Round-robin cursor for tasks with no locality signal.
-    rr: AtomicUsize,
+    /// The routing authority (shared with `enqueue_ready`'s prefetcher and
+    /// the simulator's `RoutedReady`).
+    model: Arc<dyn PlacementModel>,
+    /// In-flight transfer pressure for the `cost` model; `None` means no
+    /// transfer plane (file plane, movers disabled, unit tests).
+    inflight: Option<Arc<dyn InflightSource>>,
     /// Workers registered as parked (or about to park). Lets the push hot
     /// path skip the park lock entirely while everyone is busy.
     sleepers: AtomicUsize,
@@ -45,16 +56,45 @@ pub struct ShardedReady {
     shutdown: AtomicBool,
 }
 
+/// Lock-free signals view handed to the model on each push.
+struct LiveSignals<'a> {
+    depths: &'a [AtomicUsize],
+    inflight: Option<&'a dyn InflightSource>,
+}
+
+impl PlacementSignals for LiveSignals<'_> {
+    fn inflight_toward(&self, node: NodeId) -> u64 {
+        self.inflight.map(|s| s.inflight_toward(node)).unwrap_or(0)
+    }
+
+    fn queue_depth(&self, node: NodeId) -> usize {
+        self.depths
+            .get(node.0 as usize)
+            .map(|d| d.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+}
+
 impl ShardedReady {
-    /// One shard per node, each running the named policy.
-    pub fn new(policy: &str, nodes: u32) -> Option<ShardedReady> {
-        let shards = (0..nodes.max(1))
+    /// One shard per node, each running the named policy, routed by
+    /// `model`. `inflight` feeds the model's transfer-pressure signal
+    /// (pass the runtime's `TransferService`; `None` reads as zero).
+    pub fn new(
+        policy: &str,
+        nodes: u32,
+        model: Arc<dyn PlacementModel>,
+        inflight: Option<Arc<dyn InflightSource>>,
+    ) -> Option<ShardedReady> {
+        let n = nodes.max(1);
+        let shards = (0..n)
             .map(|_| scheduler_by_name(policy).map(Mutex::new))
             .collect::<Option<Vec<_>>>()?;
         Some(ShardedReady {
             shards,
+            depths: (0..n).map(|_| AtomicUsize::new(0)).collect(),
             queued: AtomicU64::new(0),
-            rr: AtomicUsize::new(0),
+            model,
+            inflight,
             sleepers: AtomicUsize::new(0),
             park: Mutex::new(()),
             cv: Condvar::new(),
@@ -66,32 +106,19 @@ impl ShardedReady {
         self.shards.len() as u32
     }
 
-    /// The shard a task should land on: the node holding the most input
-    /// bytes, else round-robin.
-    fn route(&self, task: &ReadyTask) -> usize {
-        let nodes = self.shards.len();
-        let mut per_node = vec![0u64; nodes];
-        for (bytes, locs) in &task.inputs {
-            for n in locs {
-                if (n.0 as usize) < nodes {
-                    per_node[n.0 as usize] += *bytes;
-                }
-            }
-        }
-        let best = per_node
-            .iter()
-            .enumerate()
-            .max_by_key(|(_, b)| **b)
-            .filter(|(_, b)| **b > 0)
-            .map(|(i, _)| i);
-        best.unwrap_or_else(|| self.rr.fetch_add(1, Ordering::Relaxed) % nodes)
-    }
-
     /// Enqueue a ready task and wake one parked worker. Returns the shard
-    /// (node) index the task was routed to, so the caller can prefetch the
-    /// task's remote inputs toward that node at schedule time.
+    /// (node) index the placement model routed the task to, so the caller
+    /// can prefetch the task's remote inputs toward that node at schedule
+    /// time — one verdict drives both decisions.
     pub fn push(&self, task: ReadyTask) -> usize {
-        let shard = self.route(&task);
+        let shard = self.model.place(
+            &task,
+            self.shards.len(),
+            &LiveSignals {
+                depths: &self.depths,
+                inflight: self.inflight.as_deref(),
+            },
+        );
         {
             // Increment while holding the shard lock so a concurrent pop of
             // this very task (its matching decrement also runs under the
@@ -99,6 +126,7 @@ impl ShardedReady {
             // increment and underflow it.
             let mut s = self.shards[shard].lock().unwrap();
             s.push(task);
+            self.depths[shard].fetch_add(1, Ordering::Relaxed);
             self.queued.fetch_add(1, Ordering::SeqCst);
         }
         // Counted before reading `sleepers`: see the module-level wakeup
@@ -123,7 +151,8 @@ impl ShardedReady {
                 let mut s = self.shards[shard].lock().unwrap();
                 if let Some(id) = s.pop_for(node) {
                     // Decrement under the same shard lock as the push's
-                    // increment: the counter can never underflow.
+                    // increment: the counters can never underflow.
+                    self.depths[shard].fetch_sub(1, Ordering::Relaxed);
                     self.queued.fetch_sub(1, Ordering::SeqCst);
                     return Some(id);
                 }
@@ -166,7 +195,11 @@ impl ShardedReady {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::Arc;
+    use crate::coordinator::placement::placement_by_name;
+
+    fn fabric(policy: &str, nodes: u32, model: &str) -> ShardedReady {
+        ShardedReady::new(policy, nodes, placement_by_name(model).unwrap(), None).unwrap()
+    }
 
     fn rt(id: u64, inputs: Vec<(u64, Vec<NodeId>)>) -> ReadyTask {
         ReadyTask {
@@ -178,7 +211,7 @@ mod tests {
 
     #[test]
     fn routes_by_locality_and_round_robin() {
-        let q = ShardedReady::new("fifo", 2).unwrap();
+        let q = fabric("fifo", 2, "bytes");
         // Task with bytes on node 1 lands on shard 1 (push reports the
         // routed shard for schedule-time prefetching).
         assert_eq!(q.push(rt(1, vec![(100, vec![NodeId(1)])])), 1);
@@ -197,7 +230,7 @@ mod tests {
 
     #[test]
     fn single_node_fifo_preserves_seed_order() {
-        let q = ShardedReady::new("fifo", 1).unwrap();
+        let q = fabric("fifo", 1, "bytes");
         for i in 1..=6 {
             q.push(rt(i, vec![]));
         }
@@ -207,7 +240,7 @@ mod tests {
 
     #[test]
     fn stealing_keeps_workers_busy() {
-        let q = ShardedReady::new("locality", 4).unwrap();
+        let q = fabric("locality", 4, "bytes");
         q.push(rt(1, vec![(10, vec![NodeId(3)])]));
         q.push(rt(2, vec![(10, vec![NodeId(2)])]));
         // A node-0 worker has no local work but must not park.
@@ -216,8 +249,58 @@ mod tests {
     }
 
     #[test]
+    fn cost_model_follows_inflight_transfers() {
+        // Regression for transfer-aware routing: a version mid-transfer
+        // toward node 1 routes its consumer to shard 1 under `cost` (the
+        // in-flight bytes erase node 1's transfer cost while shard 0
+        // already has queued work), while `bytes` keeps chasing the
+        // resident replica on node 0 regardless of either signal.
+        struct Toward1;
+        impl InflightSource for Toward1 {
+            fn inflight_toward(&self, node: NodeId) -> u64 {
+                if node == NodeId(1) {
+                    1000
+                } else {
+                    0
+                }
+            }
+        }
+        let consumer = || rt(2, vec![(1000, vec![NodeId(0)])]);
+        let cost = ShardedReady::new(
+            "fifo",
+            2,
+            placement_by_name("cost").unwrap(),
+            Some(Arc::new(Toward1)),
+        )
+        .unwrap();
+        // Earlier routing left a task queued on shard 0 (no locality, no
+        // pressure toward node 0: the cost model parks it there first).
+        assert_eq!(cost.push(rt(1, vec![(8, vec![NodeId(0)])])), 0);
+        assert_eq!(cost.push(consumer()), 1);
+        let bytes = ShardedReady::new(
+            "fifo",
+            2,
+            placement_by_name("bytes").unwrap(),
+            Some(Arc::new(Toward1)),
+        )
+        .unwrap();
+        assert_eq!(bytes.push(rt(1, vec![(8, vec![NodeId(0)])])), 0);
+        assert_eq!(bytes.push(consumer()), 0);
+    }
+
+    #[test]
+    fn cost_model_balances_by_shard_depth() {
+        let q = fabric("fifo", 2, "cost");
+        // Locality-free pushes spread to the shallowest shard.
+        assert_eq!(q.push(rt(1, vec![])), 0);
+        assert_eq!(q.push(rt(2, vec![])), 1);
+        assert_eq!(q.push(rt(3, vec![])), 0);
+        assert_eq!(q.push(rt(4, vec![])), 1);
+    }
+
+    #[test]
     fn stop_releases_parked_workers() {
-        let q = Arc::new(ShardedReady::new("fifo", 1).unwrap());
+        let q = Arc::new(fabric("fifo", 1, "bytes"));
         let mut handles = Vec::new();
         for _ in 0..4 {
             let q = Arc::clone(&q);
@@ -232,7 +315,7 @@ mod tests {
 
     #[test]
     fn concurrent_producers_and_consumers_drain_exactly() {
-        let q = Arc::new(ShardedReady::new("lifo", 3).unwrap());
+        let q = Arc::new(fabric("lifo", 3, "bytes"));
         let total = 3 * 500u64;
         let mut producers = Vec::new();
         for p in 0..3u64 {
@@ -270,6 +353,8 @@ mod tests {
 
     #[test]
     fn unknown_policy_is_rejected() {
-        assert!(ShardedReady::new("zzz", 2).is_none());
+        assert!(
+            ShardedReady::new("zzz", 2, placement_by_name("bytes").unwrap(), None).is_none()
+        );
     }
 }

@@ -38,14 +38,17 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
+use crate::coordinator::placement::InflightSource;
 use crate::coordinator::registry::{DataKey, NodeId};
 use crate::coordinator::runtime::{spill_victims, Shared};
 
-/// State of one `(version, destination-node)` transfer.
+/// State of one `(version, destination-node)` transfer. Queued/Running
+/// carry the requester's byte estimate so completion can settle the
+/// per-node in-flight gauge the placement engine reads.
 #[derive(Clone, Debug)]
 enum TransferState {
-    Queued,
-    Running,
+    Queued(u64),
+    Running(u64),
     /// Replica cached in the store and the location published.
     Done,
     Failed(String),
@@ -77,6 +80,10 @@ pub struct TransferService {
     /// Claimants park here for completions.
     cv_done: Condvar,
     shutdown: AtomicBool,
+    /// Estimated serialized bytes queued or moving toward each node — the
+    /// placement engine's transfer-pressure signal (`--router cost`). Kept
+    /// as atomics beside the board mutex so routing never takes the lock.
+    inflight: Vec<AtomicU64>,
     requested: AtomicU64,
     prefetched: AtomicU64,
     waited: AtomicU64,
@@ -100,6 +107,7 @@ impl TransferService {
             cv_work: Condvar::new(),
             cv_done: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            inflight: (0..nodes).map(|_| AtomicU64::new(0)).collect(),
             requested: AtomicU64::new(0),
             prefetched: AtomicU64::new(0),
             waited: AtomicU64::new(0),
@@ -119,29 +127,31 @@ impl TransferService {
         self.movers_per_node
     }
 
-    /// Ask for `key` to be staged on `node` (the schedule-time prefetch).
-    /// Duplicate requests for a pair already queued, running, or finished
-    /// are no-ops.
-    pub fn request(&self, key: DataKey, node: NodeId) {
+    /// Ask for `key` (an estimated `bytes` large) to be staged on `node`
+    /// (the schedule-time prefetch). Duplicate requests for a pair already
+    /// queued, running, or finished are no-ops.
+    pub fn request(&self, key: DataKey, node: NodeId, bytes: u64) {
         if !self.enabled() {
             return;
         }
         let mut inner = self.inner.lock().unwrap();
-        self.enqueue_request(&mut inner, key, node);
+        self.enqueue_request(&mut inner, key, node, bytes);
     }
 
     /// Shared enqueue (board lock held): dedup by pair, queue toward the
-    /// destination node, count, and wake a mover. Notifying under the lock
-    /// means a mover is either about to re-scan the queues (and will see
-    /// this request) or provably parked.
-    fn enqueue_request(&self, inner: &mut Inner, key: DataKey, node: NodeId) {
+    /// destination node, count, raise the destination's in-flight gauge,
+    /// and wake a mover. Notifying under the lock means a mover is either
+    /// about to re-scan the queues (and will see this request) or provably
+    /// parked.
+    fn enqueue_request(&self, inner: &mut Inner, key: DataKey, node: NodeId, bytes: u64) {
         let pair = (key, node.0);
         if inner.states.contains_key(&pair) {
             return;
         }
-        inner.states.insert(pair, TransferState::Queued);
+        inner.states.insert(pair, TransferState::Queued(bytes));
         let qi = (node.0 as usize) % inner.queues.len();
         inner.queues[qi].push_back((key, node));
+        self.inflight[qi].fetch_add(bytes, Ordering::Relaxed);
         self.requested.fetch_add(1, Ordering::Relaxed);
         self.cv_work.notify_one();
     }
@@ -157,7 +167,12 @@ impl TransferService {
             for i in 0..n {
                 let qi = (start + i) % n;
                 if let Some((key, node)) = inner.queues[qi].pop_front() {
-                    inner.states.insert((key, node.0), TransferState::Running);
+                    let pair = (key, node.0);
+                    let bytes = match inner.states.get(&pair) {
+                        Some(TransferState::Queued(b)) => *b,
+                        _ => 0,
+                    };
+                    inner.states.insert(pair, TransferState::Running(bytes));
                     return Some((key, node));
                 }
             }
@@ -178,6 +193,14 @@ impl TransferService {
         let mut inner = self.inner.lock().unwrap();
         let pair = (key, node.0);
         let had_waiter = inner.waiting.get(&pair).copied().unwrap_or(0) > 0;
+        // Settle the in-flight gauge with the bytes the request was
+        // enqueued with (whatever the outcome — the pressure is gone).
+        let pending = match inner.states.get(&pair) {
+            Some(TransferState::Queued(b)) | Some(TransferState::Running(b)) => *b,
+            _ => 0,
+        };
+        self.inflight[(node.0 as usize) % inner.queues.len()]
+            .fetch_sub(pending, Ordering::Relaxed);
         match result {
             Ok(Some(nbytes)) => {
                 inner.states.insert(pair, TransferState::Done);
@@ -205,7 +228,7 @@ impl TransferService {
     /// the router never prefetched for). `Ok(())` means the replica's
     /// location is published; `Err` carries the transfer failure and the
     /// caller falls back to the synchronous path.
-    pub fn await_staged(&self, key: DataKey, node: NodeId) -> Result<(), String> {
+    pub fn await_staged(&self, key: DataKey, node: NodeId, bytes: u64) -> Result<(), String> {
         if !self.enabled() {
             return Err("transfer service disabled".into());
         }
@@ -213,12 +236,12 @@ impl TransferService {
         let mut inner = self.inner.lock().unwrap();
         // A stolen task can land on a node the router never prefetched
         // for; the dedup inside makes this a no-op otherwise.
-        self.enqueue_request(&mut inner, key, node);
+        self.enqueue_request(&mut inner, key, node, bytes);
         loop {
             match inner.states.get(&pair) {
                 Some(TransferState::Done) | None => return Ok(()),
                 Some(TransferState::Failed(e)) => return Err(e.clone()),
-                Some(TransferState::Queued) | Some(TransferState::Running) => {}
+                Some(TransferState::Queued(_)) | Some(TransferState::Running(_)) => {}
             }
             if self.shutdown.load(Ordering::SeqCst) {
                 return Err("runtime stopping".into());
@@ -245,6 +268,16 @@ impl TransferService {
         let _guard = self.inner.lock().unwrap();
         self.cv_work.notify_all();
         self.cv_done.notify_all();
+    }
+
+    /// Estimated serialized bytes currently queued or moving toward
+    /// `node` — the transfer-pressure input of the placement engine's
+    /// `cost` model (a replica already on its way counts as local).
+    pub fn inflight_toward(&self, node: NodeId) -> u64 {
+        self.inflight
+            .get(node.0 as usize)
+            .map(|b| b.load(Ordering::Relaxed))
+            .unwrap_or(0)
     }
 
     /// Transfers ever requested (deduplicated pairs).
@@ -288,6 +321,12 @@ impl TransferService {
             .get(&(key, node.0))
             .copied()
             .unwrap_or(0)
+    }
+}
+
+impl InflightSource for TransferService {
+    fn inflight_toward(&self, node: NodeId) -> u64 {
+        TransferService::inflight_toward(self, node)
     }
 }
 
@@ -365,35 +404,41 @@ mod tests {
     #[test]
     fn request_dedups_and_mover_drains() {
         let s = TransferService::new(1, 2);
-        s.request(key(1), NodeId(1));
-        s.request(key(1), NodeId(1)); // duplicate: no second queue entry
+        s.request(key(1), NodeId(1), 128);
+        s.request(key(1), NodeId(1), 128); // duplicate: no second queue entry
         assert_eq!(s.requested(), 1);
+        // The pending request registers as pressure toward node 1 only.
+        assert_eq!(s.inflight_toward(NodeId(1)), 128);
+        assert_eq!(s.inflight_toward(NodeId(0)), 0);
         let (k, n) = s.next_request(NodeId(1)).unwrap();
         assert_eq!((k, n), (key(1), NodeId(1)));
+        assert_eq!(s.inflight_toward(NodeId(1)), 128, "running still counts");
         s.complete(k, n, Ok(Some(128)));
         // Completed with nobody parked: a prefetch that fully overlapped.
         assert_eq!(s.prefetched(), 1);
         assert_eq!(s.waited(), 0);
         assert_eq!(s.transfer_bytes(), 128);
+        assert_eq!(s.inflight_toward(NodeId(1)), 0, "completion settles the gauge");
         // Done tombstone: claimants return immediately.
-        assert_eq!(s.await_staged(key(1), NodeId(1)), Ok(()));
+        assert_eq!(s.await_staged(key(1), NodeId(1), 128), Ok(()));
         assert_eq!(s.waited(), 0);
         // A dropped transfer (already local / reclaimed) is Done for
         // claimants but inflates neither overlap counter.
-        s.request(key(2), NodeId(0));
+        s.request(key(2), NodeId(0), 64);
         let (k2, n2) = s.next_request(NodeId(0)).unwrap();
         s.complete(k2, n2, Ok(None));
         assert_eq!(s.dropped(), 1);
         assert_eq!(s.prefetched(), 1);
-        assert_eq!(s.await_staged(key(2), NodeId(0)), Ok(()));
+        assert_eq!(s.inflight_toward(NodeId(0)), 0);
+        assert_eq!(s.await_staged(key(2), NodeId(0), 64), Ok(()));
     }
 
     #[test]
     fn claimant_parks_until_completion_and_counts_waited() {
         let s = Arc::new(TransferService::new(1, 2));
-        s.request(key(7), NodeId(1));
+        s.request(key(7), NodeId(1), 64);
         let s2 = Arc::clone(&s);
-        let waiter = std::thread::spawn(move || s2.await_staged(key(7), NodeId(1)));
+        let waiter = std::thread::spawn(move || s2.await_staged(key(7), NodeId(1), 64));
         // Deterministic: wait until the claimant is provably parked.
         let t0 = Instant::now();
         while s.waiting_count(key(7), NodeId(1)) == 0 {
@@ -411,7 +456,7 @@ mod tests {
     fn failed_transfer_reports_to_claimant() {
         let s = Arc::new(TransferService::new(1, 1));
         let s2 = Arc::clone(&s);
-        let waiter = std::thread::spawn(move || s2.await_staged(key(3), NodeId(0)));
+        let waiter = std::thread::spawn(move || s2.await_staged(key(3), NodeId(0), 32));
         let (k, n) = loop {
             // await_staged itself enqueues the request.
             if let Some(req) = s.next_request(NodeId(0)) {
@@ -422,15 +467,17 @@ mod tests {
         let err = waiter.join().unwrap().unwrap_err();
         assert!(err.contains("boom"), "{err}");
         assert_eq!(s.failed(), 1);
+        assert_eq!(s.inflight_toward(NodeId(0)), 0, "failure settles the gauge");
     }
 
     #[test]
     fn disabled_service_rejects_claims() {
         let s = TransferService::new(0, 4);
         assert!(!s.enabled());
-        assert!(s.await_staged(key(1), NodeId(0)).is_err());
-        s.request(key(1), NodeId(0)); // no-op
+        assert!(s.await_staged(key(1), NodeId(0), 8).is_err());
+        s.request(key(1), NodeId(0), 8); // no-op
         assert_eq!(s.requested(), 0);
+        assert_eq!(s.inflight_toward(NodeId(0)), 0);
     }
 
     #[test]
@@ -438,11 +485,11 @@ mod tests {
         let s = Arc::new(TransferService::new(1, 1));
         let s_mover = Arc::clone(&s);
         let mover = std::thread::spawn(move || s_mover.next_request(NodeId(0)));
-        s.request(key(9), NodeId(0));
+        s.request(key(9), NodeId(0), 16);
         // The mover takes the request but never completes it; a claimant
         // parks on it.
         let s_waiter = Arc::clone(&s);
-        let waiter = std::thread::spawn(move || s_waiter.await_staged(key(9), NodeId(0)));
+        let waiter = std::thread::spawn(move || s_waiter.await_staged(key(9), NodeId(0), 16));
         let t0 = Instant::now();
         while s.waiting_count(key(9), NodeId(0)) == 0 {
             assert!(t0.elapsed() < Duration::from_secs(5), "claimant never parked");
@@ -460,8 +507,8 @@ mod tests {
     #[test]
     fn per_node_queues_prefer_home_but_steal() {
         let s = TransferService::new(1, 2);
-        s.request(key(1), NodeId(0));
-        s.request(key(2), NodeId(1));
+        s.request(key(1), NodeId(0), 8);
+        s.request(key(2), NodeId(1), 8);
         // Node-1 mover prefers its own queue...
         let (k, _) = s.next_request(NodeId(1)).unwrap();
         assert_eq!(k, key(2));

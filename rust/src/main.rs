@@ -124,12 +124,13 @@ fn print_usage() {
 USAGE:
   rcompss run    --app knn|kmeans|linreg [--workers N] [--fragments F]
                  [--backend auto|pjrt|native] [--codec rmvl|qs|fst|rds|...]
-                 [--scheduler fifo|lifo|locality] [--trace]
-                 [--memory-budget BYTES] [--spill lru|largest]
-                 [--nodes N] [--transfer-threads T] [--gc]
+                 [--scheduler fifo|lifo|locality] [--router bytes|cost|roundrobin]
+                 [--trace] [--memory-budget BYTES (default 256 MiB; 0 = file plane)]
+                 [--spill lru|largest] [--nodes N] [--transfer-threads T]
+                 [--gc on|off (default on)]
   rcompss sim    --app knn|kmeans|linreg --machine shaheen3|marenostrum5
                  [--nodes N] [--workers-per-node W] [--fragments F]
-                 [--scheduler fifo|lifo|locality]
+                 [--scheduler fifo|lifo|locality] [--router bytes|cost|roundrobin]
   rcompss dag    --app add|knn|kmeans|linreg [--fragments F] [--out FILE.dot]
   rcompss trace  --app knn|kmeans|linreg --machine shaheen3|marenostrum5
                  [--nodes N] [--workers-per-node W] [--width COLS]
@@ -145,25 +146,44 @@ fn cmd_run(opts: &Opts) -> anyhow::Result<()> {
     let workers = opts.get_usize("workers", 4)? as u32;
     let fragments = opts.get_usize("fragments", 4)?;
     let backend = backend_from(opts)?;
-    let memory_budget = opts.get_usize("memory-budget", 0)? as u64;
+    let memory_budget = opts.get_usize(
+        "memory-budget",
+        rcompss::coordinator::runtime::DEFAULT_MEMORY_BUDGET as usize,
+    )? as u64;
     let nodes = opts.get_usize("nodes", 1)?.max(1) as u32;
     let transfer_threads = opts.get_usize("transfer-threads", 1)? as u32;
-    let gc = opts.has("gc");
+    // Default on; `--gc off` restores the seed behavior. (Bare `--gc`
+    // parses as "true".)
+    let gc = match opts.get("gc", "on").as_str() {
+        "on" | "true" => true,
+        "off" | "false" => false,
+        other => anyhow::bail!("--gc expects on|off, got '{other}'"),
+    };
     let mut config = RuntimeConfig::local(workers)
-        .with_scheduler(&opts.get("scheduler", "fifo"))
         .with_codec(&opts.get("codec", "rmvl"))
         .with_trace(opts.has("trace"))
         .with_memory_budget(memory_budget)
         .with_spill(&opts.get("spill", "lru"))
         .with_transfer_threads(transfer_threads)
         .with_gc(gc);
+    // Scheduler/router flags override the config defaults (which already
+    // honor the RCOMPSS_SCHEDULER / RCOMPSS_ROUTER environment matrix).
+    if opts.has("scheduler") {
+        config = config.with_scheduler(&opts.get("scheduler", "fifo"));
+    }
+    if opts.has("router") {
+        config = config.with_router(&opts.get("router", "bytes"));
+    }
     if nodes > 1 {
         config = config.with_nodes(nodes, workers);
     }
+    let scheduler = config.scheduler.clone();
+    let router = config.router.clone();
     let rt = CompssRuntime::start(config)?;
     println!(
         "rcompss run: app={app} nodes={nodes} workers/node={workers} fragments={fragments} \
-         backend={backend:?} data-plane={} transfer-threads={transfer_threads} gc={gc}",
+         backend={backend:?} data-plane={} scheduler={scheduler} router={router} \
+         transfer-threads={transfer_threads} gc={gc}",
         if memory_budget > 0 { "memory" } else { "file" }
     );
     let t0 = std::time::Instant::now();
@@ -249,7 +269,11 @@ fn cmd_run(opts: &Opts) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn build_plan(app: &str, fragments: usize, opts: &Opts) -> anyhow::Result<rcompss::sim::sink::SimPlan> {
+fn build_plan(
+    app: &str,
+    fragments: usize,
+    opts: &Opts,
+) -> anyhow::Result<rcompss::sim::sink::SimPlan> {
     let mut sink = SimSink::new();
     match app {
         "knn" => {
@@ -295,14 +319,16 @@ fn cmd_sim(opts: &Opts) -> anyhow::Result<()> {
     let n_tasks = plan.graph.len();
     let cp = plan.graph.critical_path_len();
     let engine = SimEngine::new(spec.clone(), CostModel::default())
-        .with_scheduler(&opts.get("scheduler", "fifo"));
+        .with_scheduler(&opts.get("scheduler", "fifo"))
+        .with_router(&opts.get("router", "bytes"));
     let report = engine.run(plan, &format!("{app}@{}", spec.profile.name))?;
     println!(
-        "sim: app={app} machine={} nodes={} workers/node={} scheduler={}",
+        "sim: app={app} machine={} nodes={} workers/node={} scheduler={} router={}",
         spec.profile.name,
         spec.nodes,
         spec.workers_per_node,
-        opts.get("scheduler", "fifo")
+        opts.get("scheduler", "fifo"),
+        opts.get("router", "bytes")
     );
     println!(
         "  tasks={n_tasks} critical_path={cp} makespan={:.3}s utilization={:.0}% io={:.3}s transfer={:.3}s",
@@ -358,6 +384,7 @@ fn cmd_trace(opts: &Opts) -> anyhow::Result<()> {
     let plan = build_plan(&app, fragments, opts)?;
     let engine = SimEngine::new(spec.clone(), CostModel::default())
         .with_scheduler(&opts.get("scheduler", "fifo"))
+        .with_router(&opts.get("router", "bytes"))
         .with_trace(true);
     let report = engine.run(plan, &format!("{app}@{}", spec.profile.name))?;
     println!("{}", report.trace.ascii_timeline(opts.get_usize("width", 110)?));

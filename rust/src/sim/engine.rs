@@ -1,13 +1,24 @@
 //! The virtual-time execution engine.
 //!
-//! A list-scheduling discrete-event simulation: workers become available
-//! per the profile's staggered init; when a worker idles, the *real*
-//! `Scheduler` policy picks the next ready task for its node; the task's
-//! timeline is assembled from the cost model (transfers for non-local
-//! inputs, FCFS per-node disk I/O for deserialization/serialization,
-//! compute scaled by BLAS class); completions feed the *real* `TaskGraph`
-//! readiness propagation. Every interval is recorded through the ordinary
-//! tracer, so `Trace::ascii_timeline` renders simulated Figure-10 views.
+//! A list-scheduling discrete-event simulation: ready tasks are routed to
+//! per-node shards by the *same* [`PlacementModel`] the live dispatch
+//! fabric runs (via [`RoutedReady`], the single-threaded sibling of
+//! `ShardedReady`); workers become available per the profile's staggered
+//! init; when a worker idles, the *real* `Scheduler` policy picks the next
+//! ready task from its node's shard (stealing in the live fabric's ring
+//! order); the task's timeline is assembled from the cost model (transfers
+//! for non-local inputs, FCFS per-node disk I/O for
+//! deserialization/serialization, compute scaled by BLAS class);
+//! completions feed the *real* `TaskGraph` readiness propagation. Every
+//! interval is recorded through the ordinary tracer, so
+//! `Trace::ascii_timeline` renders simulated Figure-10 views. Because
+//! routing goes through the shared placement engine, a simulated placement
+//! is exactly what the live runtime would decide for the same push
+//! sequence *and the same signals* — the equivalence the placement
+//! property test pins. One signal differs by construction: the simulator
+//! charges transfers at claim time, so its in-flight pressure reads as
+//! zero, and a live `cost` run with movers mid-transfer can prefer the
+//! transfer's destination where the sim sees a tie.
 //!
 //! Tasks are simulated in two phases so the per-node disk server is only
 //! reserved when I/O actually happens: the read+compute phase is scheduled
@@ -18,13 +29,15 @@
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::cluster::ClusterSpec;
 use crate::coordinator::dag::TaskId;
+use crate::coordinator::placement::{placement_by_name, PlacementModel, RoutedReady};
 use crate::coordinator::registry::NodeId;
-use crate::coordinator::scheduler::{scheduler_by_name, ReadyTask, Scheduler};
+use crate::coordinator::scheduler::ReadyTask;
 use crate::sim::cost::CostModel;
 use crate::sim::sink::SimPlan;
 use crate::trace::{EventKind, Trace, Tracer, WorkerId};
@@ -87,13 +100,16 @@ pub struct SimEngine {
     pub cluster: ClusterSpec,
     pub cost: CostModel,
     pub scheduler_name: String,
+    /// Placement model routing ready tasks to node shards — the same
+    /// engine the live runtime's `--router` selects.
+    pub router_name: String,
     /// Collect a trace (disable for big sweeps to save memory).
     pub trace: bool,
 }
 
 struct RunState<'a> {
     plan: &'a mut SimPlan,
-    scheduler: Box<dyn Scheduler>,
+    router: RoutedReady,
     events: BinaryHeap<Reverse<(Time, u64, Event)>>,
     seq: u64,
     disk_free: Vec<f64>,
@@ -125,12 +141,20 @@ impl SimEngine {
             cluster,
             cost,
             scheduler_name: "fifo".into(),
+            router_name: "bytes".into(),
             trace: false,
         }
     }
 
     pub fn with_scheduler(mut self, name: &str) -> SimEngine {
         self.scheduler_name = name.into();
+        self
+    }
+
+    /// Placement model: "bytes" | "cost" | "roundrobin" (the live
+    /// `--router` knob).
+    pub fn with_router(mut self, name: &str) -> SimEngine {
+        self.router_name = name.into();
         self
     }
 
@@ -144,13 +168,20 @@ impl SimEngine {
         let profile = &self.cluster.profile;
         let nodes = self.cluster.nodes as usize;
         let wpn = self.cluster.workers_per_node as usize;
-        let scheduler: Box<dyn Scheduler> = scheduler_by_name(&self.scheduler_name)
+        let model: Arc<dyn PlacementModel> =
+            placement_by_name(&self.router_name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown router '{}' (bytes|cost|roundrobin)",
+                    self.router_name
+                )
+            })?;
+        let router = RoutedReady::new(&self.scheduler_name, nodes as u32, model)
             .ok_or_else(|| anyhow::anyhow!("unknown scheduler '{}'", self.scheduler_name))?;
 
         let ready0 = plan.initially_ready.clone();
         let mut st = RunState {
             plan: &mut plan,
-            scheduler,
+            router,
             events: BinaryHeap::new(),
             seq: 0,
             disk_free: vec![0.0; nodes],
@@ -166,7 +197,7 @@ impl SimEngine {
             wpn,
         };
         for id in ready0 {
-            push_ready(st.plan, &mut *st.scheduler, id);
+            push_ready(st.plan, &mut st.router, id);
         }
         for node in 0..nodes {
             for slot in 0..wpn {
@@ -187,7 +218,7 @@ impl SimEngine {
             makespan = makespan.max(now);
             match ev {
                 Event::WorkerIdle(wid) => {
-                    if let Some(tid) = st.scheduler.pop_for(wid.node) {
+                    if let Some(tid) = st.router.pop_for(wid.node) {
                         self.begin_task(&mut st, tid, wid, now);
                     } else {
                         st.idle.push(wid);
@@ -200,12 +231,12 @@ impl SimEngine {
                     tasks_done += 1;
                     let newly = st.plan.graph.complete(tid);
                     for t in newly {
-                        push_ready(st.plan, &mut *st.scheduler, t);
+                        push_ready(st.plan, &mut st.router, t);
                     }
                     // Put parked workers onto the fresh tasks.
                     let parked: Vec<WorkerId> = std::mem::take(&mut st.idle);
                     for wid in parked {
-                        if let Some(next) = st.scheduler.pop_for(wid.node) {
+                        if let Some(next) = st.router.pop_for(wid.node) {
                             self.begin_task(&mut st, next, wid, now);
                         } else {
                             st.idle.push(wid);
@@ -303,7 +334,16 @@ impl SimEngine {
             t + exec,
         );
         t += exec;
-        let e = st.per_type.entry(meta.ty.clone()).or_insert((0, 0.0));
+        // Interned Arc<str> name against a String-keyed map: allocate the
+        // key only on the first completion of each type (big DES sweeps
+        // run millions of tasks through here).
+        if !st.per_type.contains_key(meta.ty.as_ref()) {
+            st.per_type.insert(meta.ty.to_string(), (0, 0.0));
+        }
+        let e = st
+            .per_type
+            .get_mut(meta.ty.as_ref())
+            .expect("per-type entry just ensured");
         e.0 += 1;
         e.1 += exec;
         st.push_event(t, Event::ExecDone(id, wid));
@@ -345,7 +385,9 @@ impl SimEngine {
     }
 }
 
-fn push_ready(plan: &SimPlan, scheduler: &mut dyn Scheduler, id: TaskId) {
+/// Route one newly-ready task through the shared placement engine, with
+/// the same locality snapshot the live `enqueue_ready` would take.
+fn push_ready(plan: &SimPlan, router: &mut RoutedReady, id: TaskId) {
     let meta = plan.meta.get(&id).expect("meta for ready task");
     let inputs = meta
         .inputs
@@ -355,10 +397,10 @@ fn push_ready(plan: &SimPlan, scheduler: &mut dyn Scheduler, id: TaskId) {
             (info.bytes, info.locations)
         })
         .collect();
-    scheduler.push(ReadyTask {
+    router.push(ReadyTask {
         id,
         inputs,
-        type_name: meta.ty.clone(),
+        type_name: Arc::clone(&meta.ty),
     });
 }
 
@@ -493,6 +535,28 @@ mod tests {
         assert!(art.contains('A'), "task letters visible:\n{art}");
         let prv = report.trace.to_prv();
         assert!(prv.starts_with("#Paraver"));
+    }
+
+    #[test]
+    fn every_router_model_runs_to_completion() {
+        // The simulator drives the shared placement engine: all three
+        // models must drain the same DAG, whatever they decide.
+        for router in ["bytes", "cost", "roundrobin"] {
+            let plan = knn_plan(8, 2);
+            let n = plan.graph.len();
+            let spec = ClusterSpec::new(MachineProfile::shaheen3(), 3).with_workers_per_node(2);
+            let report = SimEngine::new(spec, CostModel::default())
+                .with_router(router)
+                .run(plan, router)
+                .unwrap();
+            assert_eq!(report.tasks_done, n, "router {router}");
+        }
+        let plan = knn_plan(2, 1);
+        let spec = ClusterSpec::new(MachineProfile::shaheen3(), 1);
+        assert!(SimEngine::new(spec, CostModel::default())
+            .with_router("zzz")
+            .run(plan, "bad")
+            .is_err());
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! `SimPlan` the engine executes in virtual time.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -14,7 +15,9 @@ use crate::coordinator::registry::{DataKey, DataRegistry, NodeId};
 /// Per-task metadata the engine needs.
 #[derive(Clone, Debug)]
 pub struct SimTaskMeta {
-    pub ty: String,
+    /// Interned task type name, shared with every `ReadyTask` and trace
+    /// event the engine emits for this task.
+    pub ty: Arc<str>,
     pub cost_units: f64,
     pub gemm_class: bool,
     pub inputs: Vec<DataKey>,
@@ -135,7 +138,7 @@ impl TaskSink for SimSink {
         self.meta.insert(
             id,
             SimTaskMeta {
-                ty: spec.ty.to_string(),
+                ty: spec.ty.into(),
                 cost_units: spec.cost_units,
                 gemm_class: spec.gemm_class,
                 inputs: reads.clone(),

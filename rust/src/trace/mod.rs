@@ -16,7 +16,7 @@
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::coordinator::dag::TaskId;
@@ -40,8 +40,10 @@ impl std::fmt::Display for WorkerId {
 pub enum EventKind {
     /// Worker process/interpreter initialization.
     WorkerInit,
-    /// Task body execution; payload is the task type name.
-    TaskExec(String),
+    /// Task body execution; payload is the (interned) task type name — the
+    /// executor and the simulator share the spec's allocation instead of
+    /// cloning a `String` per event.
+    TaskExec(Arc<str>),
     /// Parameter serialization (master or worker side).
     Serialize,
     /// Parameter deserialization.
@@ -239,9 +241,9 @@ impl Trace {
         let mut letters: BTreeMap<String, char> = BTreeMap::new();
         for e in &self.events {
             if let EventKind::TaskExec(ty) = &e.kind {
-                if !letters.contains_key(ty) {
+                if !letters.contains_key(ty.as_ref()) {
                     let c = (b'A' + (letters.len() as u8 % 26)) as char;
-                    letters.insert(ty.clone(), c);
+                    letters.insert(ty.to_string(), c);
                 }
             }
         }
@@ -252,7 +254,7 @@ impl Trace {
             let row = widx[&e.worker];
             let glyph = match &e.kind {
                 EventKind::WorkerInit => '#',
-                EventKind::TaskExec(ty) => letters[ty],
+                EventKind::TaskExec(ty) => letters[ty.as_ref()],
                 EventKind::Serialize => 's',
                 EventKind::Deserialize => 'd',
                 EventKind::Transfer => '>',

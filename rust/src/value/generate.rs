@@ -103,7 +103,11 @@ impl<'a> Gen<'a> {
                 let len = self.rng.below_usize(10);
                 self.str_vec(len)
             }
-            5 => RValue::Raw((0..self.rng.below_usize(40)).map(|_| self.rng.next_u64() as u8).collect()),
+            5 => RValue::Raw(
+                (0..self.rng.below_usize(40))
+                    .map(|_| self.rng.next_u64() as u8)
+                    .collect(),
+            ),
             6 => {
                 let nrow = 1 + self.rng.below_usize(6);
                 let ncol = 1 + self.rng.below_usize(6);

@@ -33,21 +33,28 @@ fn tiny_shapes() -> Shapes {
 
 #[test]
 fn knn_is_deterministic_across_codecs_and_policies() {
+    // Pinned to the seed-identical file plane (budget 0, GC off): this
+    // test is the codec coverage — every parameter must actually round-
+    // trip through each codec, which the default memory plane would elide.
     let mut reference: Option<Vec<i32>> = None;
     for codec in ["rmvl", "qs", "fst", "rawbin", "serialize_rcpp"] {
         for policy in ["fifo", "locality"] {
             let rt = CompssRuntime::start(
                 RuntimeConfig::local(3)
                     .with_codec(codec)
-                    .with_scheduler(policy),
+                    .with_scheduler(policy)
+                    .with_memory_budget(0)
+                    .with_gc(false),
             )
             .unwrap();
             let mut cfg = KnnConfig::small(5);
             cfg.shapes = tiny_shapes();
             cfg.train_fragments = 3;
             cfg.test_blocks = 1;
-            let mut sink =
-                LiveSink::new(&rt, rcompss::apps::backend::knn_task_defs(cfg.shapes, Backend::Native));
+            let mut sink = LiveSink::new(
+                &rt,
+                rcompss::apps::backend::knn_task_defs(cfg.shapes, Backend::Native),
+            );
             let plan = knn::plan_knn(&mut sink, &cfg).unwrap();
             let classes = sink.fetch(plan.classes[0]).unwrap();
             let got = classes.as_int().unwrap().to_vec();
@@ -246,7 +253,7 @@ fn trace_of_live_run_covers_all_task_types() {
         .events
         .iter()
         .filter_map(|e| match &e.kind {
-            rcompss::trace::EventKind::TaskExec(ty) => Some(ty.clone()),
+            rcompss::trace::EventKind::TaskExec(ty) => Some(ty.to_string()),
             _ => None,
         })
         .collect();
@@ -295,6 +302,65 @@ fn memory_plane_matches_file_plane_results() {
 }
 
 #[test]
+fn flipped_defaults_run_memory_plane_with_gc_and_stay_clean() {
+    // The data-plane defaults are now ON: a plain `local()` config must
+    // run the 256 MiB memory plane with the version GC, finish with zero
+    // dead-version bytes, and never decode a transfer synchronously.
+    let mut cfg = KmeansConfig::small(11);
+    cfg.shapes = tiny_shapes();
+    cfg.fragments = 3;
+    cfg.iterations = 3;
+    cfg.tol = None;
+    let config = RuntimeConfig::local(3);
+    assert_eq!(
+        config.memory_budget,
+        rcompss::coordinator::runtime::DEFAULT_MEMORY_BUDGET,
+        "single source of truth for the default budget"
+    );
+    assert!(config.gc, "version GC defaults on");
+    let rt = CompssRuntime::start(config).unwrap();
+    kmeans::run_kmeans(&rt, &cfg, Backend::Native).unwrap();
+    let stats = rt.stop().unwrap();
+    assert!(stats.store_hits > 0, "memory plane active: {stats:?}");
+    assert!(stats.gc_collected > 0, "GC active: {stats:?}");
+    assert_eq!(stats.dead_version_bytes, 0, "{stats:?}");
+    assert_eq!(stats.sync_transfer_decodes, 0, "{stats:?}");
+}
+
+#[test]
+fn every_router_produces_identical_results() {
+    // Placement is a performance decision, never a semantic one: the same
+    // 2-node KNN run must classify identically under every model.
+    let mut cfg = KnnConfig::small(5);
+    cfg.shapes = tiny_shapes();
+    cfg.train_fragments = 4;
+    cfg.test_blocks = 2;
+    let mut reference: Option<Vec<i32>> = None;
+    for router in ["bytes", "cost", "roundrobin"] {
+        let rt = CompssRuntime::start(
+            RuntimeConfig::local(2).with_nodes(2, 2).with_router(router),
+        )
+        .unwrap();
+        let mut sink = LiveSink::new(
+            &rt,
+            rcompss::apps::backend::knn_task_defs(cfg.shapes, Backend::Native),
+        );
+        let plan = knn::plan_knn(&mut sink, &cfg).unwrap();
+        let classes = sink.fetch(plan.classes[0]).unwrap();
+        let got = classes.as_int().unwrap().to_vec();
+        let stats = rt.stop().unwrap();
+        assert_eq!(stats.sync_transfer_decodes, 0, "router {router}: {stats:?}");
+        assert_eq!(stats.dead_version_bytes, 0, "router {router}: {stats:?}");
+        match &reference {
+            None => reference = Some(got),
+            Some(want) => assert_eq!(&got, want, "router {router} changed results"),
+        }
+    }
+    // Unknown models are rejected at startup.
+    assert!(CompssRuntime::start(RuntimeConfig::local(1).with_router("zzz")).is_err());
+}
+
+#[test]
 fn node_local_chain_performs_zero_file_io() {
     // Regression test for the zero-copy data plane: a node-local RAW chain
     // with a comfortable budget must never touch the codec or the workdir.
@@ -328,11 +394,14 @@ fn node_local_chain_performs_zero_file_io() {
 fn spill_reload_roundtrips_through_every_codec() {
     // LRU spill + reload must be exact for each Table-1 codec: a tiny
     // budget forces every intermediate out through the codec and back.
+    // GC pinned off — reclaiming drained intermediates would relieve the
+    // memory pressure this test depends on.
     for codec in ["rmvl", "qs", "fst", "rawbin", "serialize_rcpp", "rds", "csv"] {
         let config = RuntimeConfig::local(2)
             .with_codec(codec)
             .with_memory_budget(96)
-            .with_spill("lru");
+            .with_spill("lru")
+            .with_gc(false);
         let rt = CompssRuntime::start(config).unwrap();
         let add = rt.register_task(rcompss::api::TaskDef::new("add", 2, |a| {
             let x = a[0].as_f64().unwrap();
@@ -481,7 +550,7 @@ fn gc_deletes_spill_files_of_collected_versions() {
 fn gc_file_plane_deletes_consumed_parameter_files() {
     // The GC also applies to the pure file plane: a consumed dXvY's
     // parameter file is deleted instead of accumulating in the workdir.
-    let config = RuntimeConfig::local(2).with_gc(true);
+    let config = RuntimeConfig::local(2).with_memory_budget(0).with_gc(true);
     let workdir = config.workdir.clone();
     let rt = CompssRuntime::start(config).unwrap();
     let double = rt.register_task(rcompss::api::TaskDef::new("double", 1, |a| {
@@ -592,8 +661,10 @@ fn two_node_memory_plane_claims_never_run_codec_synchronously() {
 
 #[test]
 fn workdir_files_use_dxvy_naming() {
-    // The on-disk parameter files carry the paper's dXvY labels.
-    let config = RuntimeConfig::local(2);
+    // The on-disk parameter files carry the paper's dXvY labels. Pinned
+    // to the seed-identical file plane: budget 0 so every parameter gets
+    // a file, GC off so none of them is deleted before the scan.
+    let config = RuntimeConfig::local(2).with_memory_budget(0).with_gc(false);
     let workdir = config.workdir.clone();
     let rt = CompssRuntime::start(config).unwrap();
     let mut cfg = KnnConfig::small(8);

@@ -10,8 +10,9 @@ use std::collections::{HashMap, HashSet};
 
 use rcompss::api::{CompssRuntime, RuntimeConfig, TaskArg, TaskDef};
 use rcompss::coordinator::dag::{EdgeKind, TaskGraph, TaskId, TaskState};
+use rcompss::coordinator::placement::{placement_by_name, RoutedReady};
 use rcompss::coordinator::registry::{DataKey, DataRegistry, NodeId};
-use rcompss::coordinator::scheduler::{scheduler_by_name, ReadyTask};
+use rcompss::coordinator::scheduler::{scheduler_by_name, ReadyTask, ShardedReady};
 use rcompss::util::propcheck::{check, Config};
 use rcompss::util::prng::Pcg64;
 use rcompss::value::RValue;
@@ -291,6 +292,99 @@ fn prop_multi_node_transfers_and_gc_preserve_results() {
     );
 }
 
+/// One frontier event of a random DAG replay: a push with random locality
+/// metadata, or a pop by a worker on a random node.
+#[derive(Debug, Clone)]
+enum FrontierOp {
+    Push { inputs: Vec<(u64, Vec<NodeId>)> },
+    Pop { node: NodeId },
+}
+
+/// Placement-equivalence property: for the same ready-frontier sequence
+/// (same DAG, same seed), the live dispatch fabric (`ShardedReady`) and
+/// the simulator's router (`RoutedReady`) — both driving the same
+/// `PlacementModel` type — make *identical* placement decisions and hand
+/// out *identical* tasks. This is what makes simulated placements a
+/// faithful stand-in for live ones.
+#[test]
+fn prop_live_sharded_routing_equals_sim_placement() {
+    check(
+        "ShardedReady routing == RoutedReady placement",
+        &Config::default(),
+        |rng| {
+            let nodes = 1 + rng.below(4) as u32;
+            let policy = ["fifo", "lifo", "locality"][rng.below_usize(3)];
+            let model = ["bytes", "cost", "roundrobin"][rng.below_usize(3)];
+            let n_ops = 5 + rng.below_usize(60);
+            let mut ops = Vec::with_capacity(n_ops);
+            for _ in 0..n_ops {
+                if rng.below(3) == 0 {
+                    ops.push(FrontierOp::Pop {
+                        node: NodeId(rng.below(nodes as u64) as u32),
+                    });
+                } else {
+                    let n_inputs = rng.below_usize(4);
+                    let inputs = (0..n_inputs)
+                        .map(|_| {
+                            let bytes = rng.below(10_000);
+                            let n_locs = rng.below_usize(3);
+                            let locs = (0..n_locs)
+                                .map(|_| NodeId(rng.below(nodes as u64) as u32))
+                                .collect();
+                            (bytes, locs)
+                        })
+                        .collect();
+                    ops.push(FrontierOp::Push { inputs });
+                }
+            }
+            (nodes, policy, model, ops)
+        },
+        |(nodes, policy, model, ops)| {
+            let live = ShardedReady::new(policy, *nodes, placement_by_name(model).unwrap(), None)
+                .expect("live fabric");
+            let mut sim = RoutedReady::new(policy, *nodes, placement_by_name(model).unwrap())
+                .expect("sim router");
+            let mut next_id = 0u64;
+            for (i, op) in ops.iter().enumerate() {
+                match op {
+                    FrontierOp::Push { inputs } => {
+                        next_id += 1;
+                        let mk = || ReadyTask {
+                            id: TaskId(next_id),
+                            inputs: inputs.clone(),
+                            type_name: "t".into(),
+                        };
+                        let l = live.push(mk());
+                        let s = sim.push(mk());
+                        if l != s {
+                            return Err(format!(
+                                "op {i}: live routed task {next_id} to {l}, sim to {s} \
+                                 [{model}/{policy}, {nodes} nodes]"
+                            ));
+                        }
+                    }
+                    FrontierOp::Pop { node } => {
+                        // Never pop an empty fabric: ShardedReady::pop
+                        // parks (it is the worker-side blocking API).
+                        if live.queue_len() == 0 {
+                            continue;
+                        }
+                        let l = live.pop(*node);
+                        let s = sim.pop_for(*node);
+                        if l != s {
+                            return Err(format!(
+                                "op {i}: pop on node {} returned {l:?} live vs {s:?} sim",
+                                node.0
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Live-runtime property: random reduction trees over addition always
 /// compute the exact total, under any scheduler, any codec, any worker
 /// count.
@@ -311,10 +405,14 @@ fn prop_live_reduction_trees_are_exact() {
             (values, workers, policy, codec)
         },
         |(values, workers, policy, codec)| {
+            // File plane pinned (budget 0, GC off): this property is the
+            // codec soak — the default memory plane would bypass it.
             let rt = CompssRuntime::start(
                 RuntimeConfig::local(*workers)
                     .with_scheduler(policy)
-                    .with_codec(codec),
+                    .with_codec(codec)
+                    .with_memory_budget(0)
+                    .with_gc(false),
             )
             .map_err(|e| e.to_string())?;
             let add = rt.register_task(TaskDef::new("add", 2, |a| {
