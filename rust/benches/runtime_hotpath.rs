@@ -17,7 +17,10 @@
 //!    structures;
 //! 6. **Batched vs sequential submission** — control-lock amortization;
 //! 7. **`bytes` vs `cost` routing** — transfer-heavy 2-node workload
-//!    through the placement engine (prefetch overlap split).
+//!    through the placement engine (prefetch overlap split);
+//! 8. **`cost` vs `adaptive` routing** — the same workload under a
+//!    bandwidth-skewed observation profile (the feedback-driven model
+//!    routes on observed throughput, the byte heuristic cannot).
 //!
 //! Run: `cargo bench --bench runtime_hotpath`
 
@@ -413,6 +416,86 @@ fn routing_models(summary: &mut Vec<Json>) {
     println!();
 }
 
+/// Case [8]: `cost` vs `adaptive` routing under a bandwidth-skewed 2-node
+/// workload. A single box cannot physically skew a link, so the skew is
+/// injected as *observations*: the adaptive router's feedback sink is
+/// pre-seeded so node 0 looks ~1 MB/s away while node 1 looks ~1 GB/s
+/// away (live mover observations keep folding in on top). `cost` ignores
+/// bandwidth by construction; the case reports wall time per task and the
+/// prefetch-overlap split for both models on the case-[7] workload.
+fn adaptive_routing(summary: &mut Vec<Json>) {
+    println!("[8] cost vs adaptive routing (bandwidth-skewed observations, 2 nodes x 2 workers)");
+    let producers = 64usize;
+    let payload = 32 * 1024usize; // 256 KiB per produced vector
+    for router in ["cost", "adaptive"] {
+        let config = RuntimeConfig::local(2)
+            .with_nodes(2, 2)
+            .with_router(router)
+            .with_transfer_threads(1);
+        let rt = CompssRuntime::start(config).unwrap();
+        if let Some(fb) = rt.feedback_stats() {
+            // Observed skew, past the warm gate: reaching node 0 crawls,
+            // reaching node 1 flies; combiners take ~1 ms.
+            for _ in 0..4 {
+                fb.record_transfer(NodeId(0), 1 << 20, 1.0);
+                fb.record_transfer(NodeId(1), 1 << 30, 1.0);
+            }
+            fb.record_task("combine", 0.001);
+        }
+        let mk = rt.register_task(TaskDef::new("mk", 1, move |args| {
+            let seed = args[0].as_f64().unwrap_or(0.0);
+            Ok(vec![RValue::Real(vec![seed; payload])])
+        }));
+        let combine = rt.register_task(TaskDef::new("combine", 2, |args| {
+            let a = args[0].as_real().unwrap();
+            let b = args[1].as_real().unwrap();
+            Ok(vec![RValue::scalar(a[0] + b[0])])
+        }));
+        let (elapsed, _) = time_once(|| {
+            let outs: Vec<_> = (0..producers)
+                .map(|i| rt.submit(&mk, &[(i as f64).into()]).unwrap())
+                .collect();
+            let half = producers / 2;
+            for i in 0..half {
+                rt.submit(&combine, &[outs[i].into(), outs[i + half].into()])
+                    .unwrap();
+            }
+            rt.barrier().unwrap();
+        });
+        let stats = rt.stop().unwrap();
+        let n_tasks = producers + producers / 2;
+        let per_task = elapsed / n_tasks as f64 * 1e6;
+        let overlap = stats.transfers_prefetched as f64
+            / (stats.transfers_prefetched + stats.transfers_waited).max(1) as f64;
+        println!(
+            "  router {router:8}: {n_tasks} tasks -> {per_task:.1} µs/task | transfers: \
+             {} requested, {} prefetched, {} waited ({:.0}% overlap), sync decodes {}",
+            stats.transfers_requested,
+            stats.transfers_prefetched,
+            stats.transfers_waited,
+            overlap * 100.0,
+            stats.sync_transfer_decodes,
+        );
+        record_result(
+            "hotpath_adaptive_routing",
+            vec![
+                ("router", Json::Str(router.into())),
+                ("us_per_task", Json::Num(per_task)),
+                ("transfers_requested", Json::Num(stats.transfers_requested as f64)),
+                ("prefetch_overlap", Json::Num(overlap)),
+            ],
+        );
+        summary.push(obj(vec![
+            ("metric", Json::Str("adaptive_routing_us_per_task".into())),
+            ("router", Json::Str(router.into())),
+            ("n_tasks", Json::Num(n_tasks as f64)),
+            ("us_per_task", Json::Num(per_task)),
+            ("prefetch_overlap", Json::Num(overlap)),
+        ]));
+    }
+    println!();
+}
+
 fn pure_structures() {
     println!("[5] pure coordination structures");
     // Scheduler ops.
@@ -477,14 +560,15 @@ fn main() {
     gemm_ratio();
     unit_costs();
     codec_throughput();
-    // Cases [4], [6], and [7] share one committed summary file; it is
-    // written only after all three ran, so a measured BENCH_hotpath.json
-    // always carries the dispatch, batched-submit, *and* routing metrics
-    // the projected copy has.
+    // Cases [4], [6], [7], and [8] share one committed summary file; it
+    // is written only after all four ran, so a measured BENCH_hotpath.json
+    // always carries the dispatch, batched-submit, and both routing
+    // metrics the projected copy has.
     let mut summary: Vec<Json> = Vec::new();
     dispatch_overhead(&mut summary);
     batched_submission(&mut summary);
     routing_models(&mut summary);
+    adaptive_routing(&mut summary);
     rcompss::bench_harness::write_json_summary("hotpath", summary);
     pure_structures();
 }

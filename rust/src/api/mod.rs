@@ -17,6 +17,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::coordinator::access::Direction;
+use crate::coordinator::feedback::FeedbackStats;
 use crate::coordinator::registry::DataKey;
 use crate::coordinator::runtime::{Arg, Coordinator, CoordinatorConfig, TaskSpec};
 use crate::value::RValue;
@@ -263,6 +264,15 @@ impl CompssRuntime {
     /// Runtime statistics snapshot.
     pub fn stats(&self) -> RuntimeStats {
         self.coord.stats()
+    }
+
+    /// The observation sink behind `--router adaptive` (`None` for the
+    /// static models): per-destination transfer-bandwidth and
+    /// per-task-type duration EWMAs fed by the mover threads and the
+    /// executors. Benches and tests use it to pre-seed skewed
+    /// observations or inspect what the model has learned.
+    pub fn feedback_stats(&self) -> Option<Arc<FeedbackStats>> {
+        self.coord.feedback_stats()
     }
 
     /// DAG critical-path length.

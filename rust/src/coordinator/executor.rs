@@ -235,6 +235,14 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
             exec_start,
             exec_end,
         );
+        // Feed the adaptive router's duration signal: one per-type EWMA
+        // sample per successful execution (failures would poison the
+        // estimate with injector/retry noise).
+        if result.is_ok() {
+            if let Some(fb) = &shared.feedback {
+                fb.record_task(&meta.spec.name, exec_end - exec_start);
+            }
+        }
 
         match result {
             Ok(outputs) => {

@@ -1,0 +1,442 @@
+//! Runtime-observation feedback — the learned half of the placement
+//! engine.
+//!
+//! The `cost` model routes on *byte counts*: bytes still to move, bytes
+//! already in flight, queue depth. That is the right heuristic when every
+//! link and every task behave identically — and exactly the assumption the
+//! pbdR line of work (Ostrouchov et al.) shows breaking down on real
+//! machines, where the win comes from adapting data movement to *observed*
+//! behavior. This module closes the loop:
+//!
+//! * **observe** — mover threads record per-destination transfer
+//!   throughput (serialized bytes ÷ wall time) into [`FeedbackStats`] as
+//!   each transfer completes, and the executor records per-task-type
+//!   execution durations; the simulator feeds the identical sink from its
+//!   simulated transfer timings, so a simulated `adaptive` run learns the
+//!   way a live one does;
+//! * **decay** — every signal is a decay-weighted EWMA
+//!   ([`EWMA_ALPHA`] = 0.25): new observations dominate quickly, stale
+//!   ones fade, and a mid-run bandwidth shift re-routes within a few
+//!   transfers;
+//! * **score** — [`AdaptivePlacement`] ranks nodes in estimated *time*:
+//!   bytes still to move ÷ observed bandwidth toward the node, plus queue
+//!   depth × the observed duration of this task's type. Until enough
+//!   transfers have been observed ([`WARM_TRANSFER_OBS`]) it degrades
+//!   gracefully to the `cost` model's byte heuristic, verdict-for-verdict.
+//!
+//! The per-node signals the push hot path reads (bandwidth EWMAs, the
+//! global duration EWMA) are plain atomics — no lock is ever taken while
+//! routing. The per-task-type duration map sits behind an `RwLock` that is
+//! written once per task completion and read at most once per placement
+//! decision.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use super::placement::{
+    resident_per_node, with_scores, CostPlacement, PlacementModel, PlacementSignals,
+};
+use super::registry::NodeId;
+use super::scheduler::ReadyTask;
+
+/// Weight of the newest observation in every EWMA. At 0.25 an
+/// observation's influence halves in ~2.4 samples — fast enough to track a
+/// mid-run bandwidth shift, slow enough to ride out a single outlier.
+pub const EWMA_ALPHA: f64 = 0.25;
+
+/// Destination slots tracked. Nodes map as `node.0 % FEEDBACK_SLOTS`, so
+/// this sink reads and writes one consistent slot per node for any
+/// cluster up to 64 nodes (larger clusters alias slots — an approximation,
+/// never an out-of-bounds access). Placement only ever queries real node
+/// indices in `0..nodes`.
+const FEEDBACK_SLOTS: usize = 64;
+
+/// Completed-transfer observations required before [`AdaptivePlacement`]
+/// trusts its time estimates; below this it delegates to the `cost` byte
+/// heuristic (cold start).
+pub const WARM_TRANSFER_OBS: u64 = 3;
+
+/// Seconds charged per queued task until any duration has been observed.
+const DEFAULT_TASK_SECONDS: f64 = 1e-3;
+
+/// Lock-free (on the read/route path) runtime-observation sink shared by
+/// the mover threads, the executor, the simulator, and the `adaptive`
+/// placement model.
+pub struct FeedbackStats {
+    /// Per-destination-slot bandwidth EWMA (bytes/second), stored as f64
+    /// bits so movers on different nodes can fold observations in without
+    /// a lock.
+    bw: Vec<AtomicU64>,
+    /// Observations per slot; 0 means the slot has no signal yet.
+    bw_obs: Vec<AtomicU64>,
+    /// Cross-destination bandwidth EWMA — the estimate for nodes without
+    /// observations of their own.
+    bw_all: AtomicU64,
+    /// Completed-transfer observations (drives the warm gate).
+    transfer_obs: AtomicU64,
+    /// Global task-duration EWMA (seconds, f64 bits).
+    task_all: AtomicU64,
+    task_obs: AtomicU64,
+    /// Per-task-type duration EWMAs. Written once per completion, read at
+    /// most once per placement decision — every per-node hot signal above
+    /// stays a plain atomic.
+    per_type: RwLock<HashMap<String, f64>>,
+}
+
+impl FeedbackStats {
+    pub fn new() -> FeedbackStats {
+        FeedbackStats {
+            bw: (0..FEEDBACK_SLOTS).map(|_| AtomicU64::new(0)).collect(),
+            bw_obs: (0..FEEDBACK_SLOTS).map(|_| AtomicU64::new(0)).collect(),
+            bw_all: AtomicU64::new(0),
+            transfer_obs: AtomicU64::new(0),
+            task_all: AtomicU64::new(0),
+            task_obs: AtomicU64::new(0),
+            per_type: RwLock::new(HashMap::new()),
+        }
+    }
+
+    /// Fold `sample` into the EWMA cell. `first` seeds the cell instead of
+    /// decaying toward the zero-initialized bits. Two racing first
+    /// observations can at worst under-weight one sample — benign, and the
+    /// price of keeping the fold lock-free.
+    fn fold(cell: &AtomicU64, first: bool, sample: f64) {
+        let _ = cell.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+            let next = if first {
+                sample
+            } else {
+                EWMA_ALPHA * sample + (1.0 - EWMA_ALPHA) * f64::from_bits(bits)
+            };
+            Some(next.to_bits())
+        });
+    }
+
+    fn slot(&self, node: NodeId) -> usize {
+        (node.0 as usize) % self.bw.len()
+    }
+
+    /// Record one completed transfer of `bytes` serialized bytes toward
+    /// `node` that took `seconds` of wall (live) or virtual (sim) time.
+    pub fn record_transfer(&self, node: NodeId, bytes: u64, seconds: f64) {
+        if bytes == 0 || !seconds.is_finite() {
+            return;
+        }
+        let sample = bytes as f64 / seconds.max(1e-9);
+        let slot = self.slot(node);
+        let first = self.bw_obs[slot].fetch_add(1, Ordering::Relaxed) == 0;
+        Self::fold(&self.bw[slot], first, sample);
+        let first_all = self.transfer_obs.fetch_add(1, Ordering::Relaxed) == 0;
+        Self::fold(&self.bw_all, first_all, sample);
+    }
+
+    /// Record one execution of task type `ty` taking `seconds`.
+    pub fn record_task(&self, ty: &str, seconds: f64) {
+        if !seconds.is_finite() || seconds < 0.0 {
+            return;
+        }
+        let first = self.task_obs.fetch_add(1, Ordering::Relaxed) == 0;
+        Self::fold(&self.task_all, first, seconds);
+        let mut map = self.per_type.write().unwrap();
+        match map.get_mut(ty) {
+            Some(e) => *e = EWMA_ALPHA * seconds + (1.0 - EWMA_ALPHA) * *e,
+            None => {
+                map.insert(ty.to_string(), seconds);
+            }
+        }
+    }
+
+    /// Observed bandwidth toward `node` (bytes/s), if any observation has
+    /// landed on its slot.
+    pub fn bandwidth_toward(&self, node: NodeId) -> Option<f64> {
+        let slot = self.slot(node);
+        if self.bw_obs[slot].load(Ordering::Relaxed) == 0 {
+            return None;
+        }
+        Some(f64::from_bits(self.bw[slot].load(Ordering::Relaxed)))
+    }
+
+    /// Cross-destination bandwidth EWMA — the fallback estimate for nodes
+    /// the movers have not reached yet.
+    pub fn mean_bandwidth(&self) -> Option<f64> {
+        if self.transfer_obs.load(Ordering::Relaxed) == 0 {
+            return None;
+        }
+        Some(f64::from_bits(self.bw_all.load(Ordering::Relaxed)))
+    }
+
+    /// Duration estimate for task type `ty`: the per-type EWMA when one
+    /// exists, else the global EWMA, else a 1 ms default.
+    pub fn task_seconds(&self, ty: &str) -> f64 {
+        if let Some(d) = self.per_type.read().unwrap().get(ty) {
+            return *d;
+        }
+        if self.task_obs.load(Ordering::Relaxed) > 0 {
+            return f64::from_bits(self.task_all.load(Ordering::Relaxed));
+        }
+        DEFAULT_TASK_SECONDS
+    }
+
+    /// Completed-transfer observations folded in so far.
+    pub fn transfer_observations(&self) -> u64 {
+        self.transfer_obs.load(Ordering::Relaxed)
+    }
+
+    /// Has enough signal accumulated for time-based scoring?
+    pub fn warm(&self) -> bool {
+        self.transfer_observations() >= WARM_TRANSFER_OBS
+    }
+}
+
+impl Default for FeedbackStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Feedback-driven placement: rank nodes by estimated *time to start
+/// computing* instead of byte counts.
+///
+/// time(N) = (missing(N) − credit(N)) ÷ bandwidth(N) + depth(N) × dur(task)
+///
+/// where `missing(N)` is the task's input bytes without a replica on N,
+/// `credit(N)` caps N's in-flight bytes at `missing(N)` (a replica already
+/// moving does not need to move again), `bandwidth(N)` is the observed
+/// EWMA toward N (falling back to the cross-node mean), and `dur(task)` is
+/// the observed duration EWMA of this task's type (falling back to the
+/// global mean, then to 1 ms). Ties break toward the shallower queue, then
+/// the lower index — the model keeps no cursor, so two instances fed the
+/// same observations produce identical verdict sequences (the live-vs-sim
+/// equivalence property).
+///
+/// Cold start: until [`WARM_TRANSFER_OBS`] transfers have been observed,
+/// `place` delegates to an inner [`CostPlacement`], so `--router adaptive`
+/// begins exactly as `--router cost` and only diverges once it has
+/// evidence.
+pub struct AdaptivePlacement {
+    stats: Arc<FeedbackStats>,
+    fallback: CostPlacement,
+}
+
+impl AdaptivePlacement {
+    /// A model with a fresh, cold observation sink.
+    pub fn new() -> AdaptivePlacement {
+        Self::with_stats(Arc::new(FeedbackStats::new()))
+    }
+
+    /// Build around an existing sink. Tests share one sink between the
+    /// live fabric's model and the sim router's model to pin warm-path
+    /// placement equivalence.
+    pub fn with_stats(stats: Arc<FeedbackStats>) -> AdaptivePlacement {
+        AdaptivePlacement {
+            stats,
+            fallback: CostPlacement::new(),
+        }
+    }
+
+    /// The model's observation sink.
+    pub fn stats(&self) -> &Arc<FeedbackStats> {
+        &self.stats
+    }
+}
+
+impl Default for AdaptivePlacement {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PlacementModel for AdaptivePlacement {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn feedback(&self) -> Option<Arc<FeedbackStats>> {
+        Some(Arc::clone(&self.stats))
+    }
+
+    fn place(&self, task: &ReadyTask, nodes: usize, signals: &dyn PlacementSignals) -> usize {
+        if !self.stats.warm() {
+            return self.fallback.place(task, nodes, signals);
+        }
+        let total = task.total_bytes();
+        let dur = self.stats.task_seconds(&task.type_name);
+        with_scores(nodes, |resident| {
+            resident_per_node(task, resident);
+            let mut best: Option<(f64, usize, usize)> = None;
+            for (i, res) in resident.iter().enumerate() {
+                let node = NodeId(i as u32);
+                let missing = total.saturating_sub(*res);
+                let credit = signals.inflight_toward(node).min(missing);
+                let bw = self
+                    .stats
+                    .bandwidth_toward(node)
+                    .or_else(|| self.stats.mean_bandwidth())
+                    .unwrap_or(1.0)
+                    .max(1.0);
+                let move_s = (missing - credit) as f64 / bw;
+                let depth = signals.queue_depth(node);
+                let score = move_s + depth as f64 * dur;
+                let better = match &best {
+                    None => true,
+                    Some((bs, bd, _)) => score < *bs || (score == *bs && depth < *bd),
+                };
+                if better {
+                    best = Some((score, depth, i));
+                }
+            }
+            best.map(|(_, _, i)| i).unwrap_or(0)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::dag::TaskId;
+    use crate::coordinator::placement::{placement_by_name, NoSignals};
+
+    fn rt(id: u64, inputs: Vec<(u64, Vec<NodeId>)>) -> ReadyTask {
+        ReadyTask {
+            id: TaskId(id),
+            inputs,
+            type_name: "t".into(),
+        }
+    }
+
+    /// Scriptable signals: fixed inflight/depth vectors.
+    struct Stub {
+        inflight: Vec<u64>,
+        depth: Vec<usize>,
+    }
+
+    impl PlacementSignals for Stub {
+        fn inflight_toward(&self, node: NodeId) -> u64 {
+            self.inflight.get(node.0 as usize).copied().unwrap_or(0)
+        }
+
+        fn queue_depth(&self, node: NodeId) -> usize {
+            self.depth.get(node.0 as usize).copied().unwrap_or(0)
+        }
+    }
+
+    #[test]
+    fn ewma_decays_deterministically() {
+        let s = FeedbackStats::new();
+        s.record_transfer(NodeId(1), 1000, 1.0); // 1000 B/s seed
+        assert_eq!(s.bandwidth_toward(NodeId(1)), Some(1000.0));
+        s.record_transfer(NodeId(1), 2000, 1.0); // 0.25*2000 + 0.75*1000
+        assert_eq!(s.bandwidth_toward(NodeId(1)), Some(1250.0));
+        s.record_transfer(NodeId(1), 1250, 1.0); // fixed point
+        assert_eq!(s.bandwidth_toward(NodeId(1)), Some(1250.0));
+        assert_eq!(s.bandwidth_toward(NodeId(0)), None, "no observation, no signal");
+        assert_eq!(s.transfer_observations(), 3);
+        // Task durations: the per-type EWMA decays the same way, and an
+        // unseen type falls back to the global EWMA.
+        s.record_task("gemm", 4.0);
+        s.record_task("gemm", 8.0); // 0.25*8 + 0.75*4 = 5
+        assert_eq!(s.task_seconds("gemm"), 5.0);
+        s.record_task("tiny", 1.0); // global: 4 -> 5 -> 0.25*1 + 0.75*5 = 4
+        assert_eq!(s.task_seconds("unseen"), 4.0);
+        // Degenerate observations are discarded, not folded.
+        s.record_transfer(NodeId(1), 0, 1.0);
+        s.record_transfer(NodeId(1), 10, f64::NAN);
+        assert_eq!(s.transfer_observations(), 3);
+    }
+
+    #[test]
+    fn out_of_range_nodes_wrap_to_one_slot() {
+        let s = FeedbackStats::new();
+        s.record_transfer(NodeId(FEEDBACK_SLOTS as u32 + 1), 500, 1.0);
+        assert_eq!(s.bandwidth_toward(NodeId(1)), Some(500.0));
+    }
+
+    #[test]
+    fn cold_start_falls_back_to_cost_verdicts() {
+        let adaptive = AdaptivePlacement::new();
+        let cost = placement_by_name("cost").unwrap();
+        assert!(!adaptive.stats().warm());
+        let tasks = [
+            rt(1, vec![(100, vec![NodeId(0)]), (300, vec![NodeId(2)])]),
+            rt(2, vec![]),
+            rt(3, vec![(125, vec![NodeId(0)]), (875, vec![])]),
+        ];
+        let signals = Stub {
+            inflight: vec![0, 400, 0],
+            depth: vec![2, 0, 1],
+        };
+        for t in &tasks {
+            assert_eq!(
+                adaptive.place(t, 3, &signals),
+                cost.place(t, 3, &signals),
+                "cold adaptive must be verdict-identical to cost"
+            );
+        }
+    }
+
+    #[test]
+    fn bandwidth_skew_flips_the_byte_verdict() {
+        // `cost` chases the fewest missing bytes (node 0); observed
+        // bandwidth says node 0's link crawls while node 1's flies, so the
+        // adaptive model routes where the *time* is lower — node 1. This is
+        // the mid-run regression: stub observations flip the verdict away
+        // from the byte heuristic.
+        let adaptive = AdaptivePlacement::new();
+        adaptive.stats().record_transfer(NodeId(0), 10_000, 10.0); // 1 KB/s
+        adaptive.stats().record_transfer(NodeId(1), 1 << 30, 1.0); // 1 GB/s
+        adaptive.stats().record_transfer(NodeId(1), 1 << 30, 1.0);
+        assert!(adaptive.stats().warm());
+        let t = rt(1, vec![(800, vec![NodeId(0)]), (200, vec![NodeId(1)])]);
+        assert_eq!(placement_by_name("cost").unwrap().place(&t, 2, &NoSignals), 0);
+        assert_eq!(adaptive.place(&t, 2, &NoSignals), 1);
+    }
+
+    #[test]
+    fn observed_durations_price_queue_depth() {
+        // A locality edge worth 0.1 s of movement loses to an idle node
+        // once two queued ~1 s tasks are priced in; with an idle home the
+        // resident bytes win outright.
+        let adaptive = AdaptivePlacement::new();
+        for _ in 0..3 {
+            adaptive.stats().record_transfer(NodeId(0), 1_000, 1.0); // 1 KB/s
+        }
+        adaptive.stats().record_task("t", 1.0);
+        let t = rt(1, vec![(100, vec![NodeId(0)])]);
+        let busy = Stub {
+            inflight: vec![0, 0],
+            depth: vec![2, 0],
+        };
+        assert_eq!(adaptive.place(&t, 2, &busy), 1);
+        let idle = Stub {
+            inflight: vec![0, 0],
+            depth: vec![0, 0],
+        };
+        assert_eq!(adaptive.place(&t, 2, &idle), 0);
+    }
+
+    #[test]
+    fn inflight_credit_erases_move_time() {
+        // Bytes already moving toward node 1 cost nothing more to move:
+        // the adaptive model rides the prefetcher exactly as `cost` does.
+        let adaptive = AdaptivePlacement::new();
+        for _ in 0..3 {
+            adaptive.stats().record_transfer(NodeId(0), 1_000, 1.0);
+        }
+        let t = rt(1, vec![(1000, vec![NodeId(0)])]);
+        let signals = Stub {
+            inflight: vec![0, 1000],
+            depth: vec![1, 0],
+        };
+        assert_eq!(adaptive.place(&t, 2, &signals), 1);
+    }
+
+    #[test]
+    fn by_name_constructs_adaptive_with_its_own_sink() {
+        let m = placement_by_name("adaptive").unwrap();
+        assert_eq!(m.name(), "adaptive");
+        let fb = m.feedback().expect("adaptive exposes its sink");
+        assert!(!fb.warm());
+        assert!(placement_by_name("cost").unwrap().feedback().is_none());
+        assert!(placement_by_name("bytes").unwrap().feedback().is_none());
+    }
+}

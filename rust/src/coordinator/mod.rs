@@ -18,10 +18,14 @@
 //!   [`scheduler::ShardedReady`], the per-node dispatch fabric with work
 //!   stealing that the live executor drives;
 //! * [`placement`] — the unified placement engine: one
-//!   [`placement::PlacementModel`] (`bytes` | `cost` | `roundrobin`)
-//!   routes ready tasks for the dispatch fabric, the schedule-time
-//!   prefetcher, *and* the simulator, so all three agree on where a task
-//!   belongs;
+//!   [`placement::PlacementModel`] (`bytes` | `cost` | `roundrobin` |
+//!   `adaptive`) routes ready tasks for the dispatch fabric, the
+//!   schedule-time prefetcher, *and* the simulator, so all three agree on
+//!   where a task belongs;
+//! * [`feedback`] — the runtime-observation loop behind the `adaptive`
+//!   model: movers record per-node transfer bandwidth, workers per-type
+//!   task durations (decay-weighted EWMAs), and placement scores nodes in
+//!   estimated *time* once the signal is warm;
 //! * [`executor`] — the persistent worker pool (threads) for real local
 //!   execution, with memory- or file-based parameter passing;
 //! * [`fault`] — task resubmission on failure and failure injection;
@@ -73,7 +77,7 @@
 //! `"largest"`), `transfer_threads` (movers per emulated node; 0 =
 //! synchronous seed-style cross-node reloads), `gc` (reference-counted
 //! version GC, default on), and `router` (placement model: `"bytes"` |
-//! `"cost"` | `"roundrobin"`). With the memory plane on, the configured
+//! `"cost"` | `"roundrobin"` | `"adaptive"`). With the memory plane on, the configured
 //! codec runs only at spill boundaries: memory pressure, cross-node
 //! transfer, and reloads of spilled values — and with
 //! `transfer_threads > 0` the cross-node boundary runs on mover threads,
@@ -85,6 +89,7 @@ pub mod dag;
 pub mod datastore;
 pub mod executor;
 pub mod fault;
+pub mod feedback;
 pub mod placement;
 pub mod registry;
 pub mod runtime;
@@ -94,6 +99,7 @@ pub mod transfer;
 pub use access::Direction;
 pub use dag::{EdgeKind, TaskGraph, TaskId, TaskState};
 pub use datastore::{DataStore, SpillPolicy};
+pub use feedback::{AdaptivePlacement, FeedbackStats};
 pub use placement::{placement_by_name, PlacementModel, RoutedReady};
 pub use registry::{DataKey, DataRegistry, NodeId, VersionTable};
 pub use runtime::{Coordinator, CoordinatorConfig, SubmitOutcome};

@@ -40,6 +40,7 @@
 //! |------|---------|
 //! | `bytes` | node holding the most resident input bytes, else round-robin (the historical `ShardedReady::route`) |
 //! | `cost` | node minimizing *bytes still to move* (in-flight transfers count as already local) plus a queue-depth load penalty |
+//! | `adaptive` | feedback-driven: minimizes estimated *time* — bytes still to move ÷ observed transfer bandwidth plus queue depth × observed task duration; cold-starts as `cost` (see [`feedback`](super::feedback)) |
 //! | `roundrobin` | strict rotation, ignoring locality (baseline / ablation) |
 //!
 //! Selected via `CoordinatorConfig.router` / `--router` (live) and
@@ -49,6 +50,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use super::dag::TaskId;
+use super::feedback::{AdaptivePlacement, FeedbackStats};
 use super::registry::NodeId;
 use super::scheduler::{scheduler_by_name, ReadyTask, Scheduler};
 
@@ -97,11 +99,20 @@ pub trait InflightSource: Send + Sync {
 /// own round-robin cursors, so the verdict sequence is deterministic for a
 /// given push order — the property the live-vs-sim equivalence test pins.
 pub trait PlacementModel: Send + Sync {
-    /// Model name for configs/CLI (`bytes`, `cost`, `roundrobin`).
+    /// Model name for configs/CLI (`bytes`, `cost`, `roundrobin`,
+    /// `adaptive`).
     fn name(&self) -> &'static str;
 
     /// The node `task` should land on, in `0..nodes`.
     fn place(&self, task: &ReadyTask, nodes: usize, signals: &dyn PlacementSignals) -> usize;
+
+    /// The model's runtime-observation sink, when it learns from feedback
+    /// (`adaptive`). The live runtime's movers and executor — and the
+    /// simulator, from its virtual timings — feed it observed transfer
+    /// throughput and task durations. Static models return `None`.
+    fn feedback(&self) -> Option<Arc<FeedbackStats>> {
+        None
+    }
 }
 
 /// Construct a model by name.
@@ -109,6 +120,7 @@ pub fn placement_by_name(name: &str) -> Option<Arc<dyn PlacementModel>> {
     match name {
         "bytes" => Some(Arc::new(BytesPlacement::new())),
         "cost" => Some(Arc::new(CostPlacement::new())),
+        "adaptive" => Some(Arc::new(AdaptivePlacement::new())),
         "roundrobin" => Some(Arc::new(RoundRobinPlacement::new())),
         _ => None,
     }
@@ -117,7 +129,7 @@ pub fn placement_by_name(name: &str) -> Option<Arc<dyn PlacementModel>> {
 /// Run `f` over a zeroed per-node score slice without heap allocation for
 /// up to [`INLINE_NODES`] nodes (the common case; larger clusters pay one
 /// short-lived vec).
-fn with_scores<R>(nodes: usize, f: impl FnOnce(&mut [u64]) -> R) -> R {
+pub(crate) fn with_scores<R>(nodes: usize, f: impl FnOnce(&mut [u64]) -> R) -> R {
     if nodes <= INLINE_NODES {
         let mut buf = [0u64; INLINE_NODES];
         f(&mut buf[..nodes])
@@ -128,7 +140,7 @@ fn with_scores<R>(nodes: usize, f: impl FnOnce(&mut [u64]) -> R) -> R {
 }
 
 /// Sum each node's resident input bytes into `scores` (length `nodes`).
-fn resident_per_node(task: &ReadyTask, scores: &mut [u64]) {
+pub(crate) fn resident_per_node(task: &ReadyTask, scores: &mut [u64]) {
     for (bytes, locs) in &task.inputs {
         for n in locs {
             if let Some(slot) = scores.get_mut(n.0 as usize) {
@@ -381,7 +393,7 @@ mod tests {
 
     #[test]
     fn by_name_resolves_all_models() {
-        for n in ["bytes", "cost", "roundrobin"] {
+        for n in ["bytes", "cost", "roundrobin", "adaptive"] {
             assert_eq!(placement_by_name(n).unwrap().name(), n);
         }
         assert!(placement_by_name("zzz").is_none());

@@ -33,6 +33,7 @@ use crate::coordinator::dag::{EdgeKind, TaskGraph, TaskId, TaskState};
 use crate::coordinator::datastore::{DataStore, SpillPolicy};
 use crate::coordinator::executor;
 use crate::coordinator::fault::{FailureInjector, RetryPolicy};
+use crate::coordinator::feedback::FeedbackStats;
 use crate::coordinator::placement::{placement_by_name, InflightSource};
 use crate::coordinator::registry::{CollectAction, DataKey, DataRegistry, NodeId, VersionTable};
 use crate::coordinator::scheduler::{ReadyTask, ShardedReady};
@@ -113,8 +114,9 @@ pub struct CoordinatorConfig {
     /// Scheduling policy: "fifo" | "lifo" | "locality".
     pub scheduler: String,
     /// Placement model routing ready tasks to node shards (and prefetches
-    /// with them): "bytes" (default) | "cost" | "roundrobin". See
-    /// `coordinator::placement`.
+    /// with them): "bytes" (default) | "cost" | "roundrobin" | "adaptive"
+    /// (feedback-driven: observed transfer bandwidth + task durations).
+    /// See `coordinator::placement` and `coordinator::feedback`.
     pub router: String,
     /// Parameter codec (Table 1): "rmvl" (default) | "qs" | ...
     pub codec: String,
@@ -198,7 +200,7 @@ impl CoordinatorConfig {
         self
     }
 
-    /// Placement model: "bytes" | "cost" | "roundrobin".
+    /// Placement model: "bytes" | "cost" | "roundrobin" | "adaptive".
     pub fn with_router(mut self, name: &str) -> Self {
         self.router = name.into();
         self
@@ -292,9 +294,17 @@ pub struct RuntimeStats {
     /// Async transfers dropped without moving bytes (destination already
     /// held a replica, or the version was reclaimed mid-flight).
     pub transfers_dropped: u64,
-    /// Async transfers that failed (claimants fell back to the
-    /// synchronous path).
+    /// Async transfer attempts that failed (retried within the bounded
+    /// per-pair budget; claimants fall back to the synchronous path only
+    /// once it is exhausted).
     pub transfers_failed: u64,
+    /// Failed transfers re-queued by the bounded retry.
+    pub transfers_retried: u64,
+    /// Transfer-board state entries at snapshot time (in-flight +
+    /// Done/Failed tombstones). The version GC purges a version's entries
+    /// when it collects it, so at quiescence this tracks live versions —
+    /// not the tasks x inputs history.
+    pub transfer_states: u64,
     /// Serialized bytes moved by the mover threads.
     pub transfer_bytes: u64,
     /// Cross-node consumptions that ran the codec synchronously on the
@@ -342,6 +352,10 @@ pub(crate) struct Shared {
     /// dispatch fabric, whose placement model reads the per-node in-flight
     /// gauge on every routing decision.
     pub transfers: Arc<TransferService>,
+    /// Observation sink of an `adaptive` router (`None` for the static
+    /// models): movers feed per-node transfer throughput, workers feed
+    /// per-task-type durations, the model reads both on every verdict.
+    pub feedback: Option<Arc<FeedbackStats>>,
     /// Reference-counted version GC knob.
     pub gc_enabled: bool,
     /// GC accounting: versions reclaimed / recorded bytes / files deleted.
@@ -436,6 +450,9 @@ fn collect_version(shared: &Shared, act: &CollectAction) {
             shared.gc_files.fetch_add(1, Ordering::Relaxed);
         }
     }
+    // Drop the collected version's transfer-board entries (tombstones and
+    // never-run requests) so the board tracks live versions only.
+    shared.transfers.purge_version(act.key);
     shared.gc_collected.fetch_add(1, Ordering::Relaxed);
     shared.gc_bytes.fetch_add(act.bytes, Ordering::Relaxed);
 }
@@ -509,11 +526,14 @@ impl Coordinator {
             .with_context(|| format!("create workdir {}", config.workdir.display()))?;
         let model = placement_by_name(&config.router).ok_or_else(|| {
             anyhow!(
-                "unknown router '{}' (bytes|cost|roundrobin; set via --router, \
+                "unknown router '{}' (bytes|cost|roundrobin|adaptive; set via --router, \
                  with_router, or the RCOMPSS_ROUTER default override)",
                 config.router
             )
         })?;
+        // An adaptive model shares its observation sink with the runtime:
+        // movers and workers feed it, the model reads it on every verdict.
+        let feedback = model.feedback();
         let codec = codec_by_name(&config.codec)
             .ok_or_else(|| anyhow!("unknown codec '{}'", config.codec))?;
         let spill = SpillPolicy::by_name(&config.spill)
@@ -555,6 +575,7 @@ impl Coordinator {
             ready,
             store: DataStore::new(config.memory_budget, spill),
             transfers,
+            feedback,
             gc_enabled: config.gc,
             gc_collected: AtomicU64::new(0),
             gc_bytes: AtomicU64::new(0),
@@ -956,7 +977,16 @@ impl Coordinator {
         stats.transfers_waited = shared.transfers.waited();
         stats.transfers_dropped = shared.transfers.dropped();
         stats.transfers_failed = shared.transfers.failed();
+        stats.transfers_retried = shared.transfers.retried();
+        stats.transfer_states = shared.transfers.state_count() as u64;
         stats.transfer_bytes = shared.transfers.transfer_bytes();
+    }
+
+    /// The observation sink behind an `adaptive` router (`None` for the
+    /// static models). Benches and tests use it to pre-seed or inspect
+    /// bandwidth/duration observations.
+    pub fn feedback_stats(&self) -> Option<Arc<FeedbackStats>> {
+        self.shared.feedback.as_ref().map(Arc::clone)
     }
 
     /// Snapshot statistics without stopping.
@@ -1074,6 +1104,72 @@ mod tests {
         assert_eq!(coord.shared.store.sync_transfer_decode_count(), 0);
         coord.stop().unwrap();
         Coordinator::cleanup_workdir(&config);
+    }
+
+    #[test]
+    fn failed_transfer_is_restaged_without_sync_decode() {
+        // Acceptance: after one injected mover failure, a later
+        // await_staged for the same (version, node) pair succeeds via a
+        // retried mover transfer — the claim path never runs the codec.
+        let mut config = mem_config(2, 1);
+        config.injector = Arc::new(FailureInjector::new(1.0, "__transfer__", 1, 5));
+        let coord = Coordinator::start(config.clone()).unwrap();
+        let key = seed_value(&coord, 64);
+        coord.shared.transfers.request(key, NodeId(1), 64 * 8);
+        // The injector fails exactly the first attempt.
+        let t0 = Instant::now();
+        while coord.shared.transfers.failed() == 0 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "injected failure never fired"
+            );
+            std::thread::yield_now();
+        }
+        // The pair is re-stageable: await_staged clears the tombstone,
+        // re-queues, and the second mover attempt stages the replica.
+        coord
+            .shared
+            .transfers
+            .await_staged(key, NodeId(1), 64 * 8)
+            .expect("retried transfer must stage");
+        assert!(coord.shared.table.is_local(key, NodeId(1)));
+        assert_eq!(coord.shared.transfers.retried(), 1);
+        let (v, decoded, _) =
+            executor::acquire_input(&coord.shared, key, NodeId(1), false).unwrap();
+        assert!(!decoded, "claim of the restaged replica must not decode");
+        assert_eq!(v.as_real().unwrap()[0], 1.5);
+        assert_eq!(coord.shared.store.sync_transfer_decode_count(), 0);
+        coord.stop().unwrap();
+        Coordinator::cleanup_workdir(&config);
+    }
+
+    #[test]
+    fn adaptive_router_learns_from_live_transfers() {
+        // The movers feed the adaptive model's sink: after a staged
+        // transfer the bandwidth EWMA toward the destination is live.
+        let config = mem_config(2, 1).with_router("adaptive");
+        let coord = Coordinator::start(config.clone()).unwrap();
+        let fb = coord.feedback_stats().expect("adaptive exposes its sink");
+        assert_eq!(fb.transfer_observations(), 0);
+        let key = seed_value(&coord, 256);
+        coord.shared.transfers.request(key, NodeId(1), 256 * 8);
+        let t0 = Instant::now();
+        while fb.transfer_observations() == 0 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "mover never recorded an observation"
+            );
+            std::thread::yield_now();
+        }
+        assert!(fb.bandwidth_toward(NodeId(1)).unwrap_or(0.0) > 0.0);
+        // Static routers expose no sink.
+        coord.stop().unwrap();
+        Coordinator::cleanup_workdir(&config);
+        let plain_config = mem_config(1, 1).with_router("bytes");
+        let plain = Coordinator::start(plain_config.clone()).unwrap();
+        assert!(plain.feedback_stats().is_none());
+        plain.stop().unwrap();
+        Coordinator::cleanup_workdir(&plain_config);
     }
 
     #[test]

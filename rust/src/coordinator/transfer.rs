@@ -30,9 +30,10 @@
 //! [`DataStore`](super::datastore::DataStore)'s `sync_transfer_decodes`
 //! counter stays zero whenever the service is enabled (no codec on the
 //! claim path). Requests are deduplicated per `(version, destination)`
-//! pair, and a failed transfer degrades to the seed-style synchronous
-//! fallback on the claimant — robustness, not correctness, is what the
-//! mover threads add.
+//! pair; a failed pair is re-queued on the next `request`/`await_staged`
+//! (bounded retry, `MAX_TRANSFER_ATTEMPTS` = 3) and only degrades to the
+//! seed-style synchronous fallback once the budget is exhausted —
+//! robustness, not correctness, is what the mover threads add.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -42,16 +43,23 @@ use crate::coordinator::placement::InflightSource;
 use crate::coordinator::registry::{DataKey, NodeId};
 use crate::coordinator::runtime::{spill_victims, Shared};
 
+/// Total attempts allowed per `(version, node)` pair. A `Failed` entry
+/// with fewer failures is a *retryable* tombstone: the next
+/// `request`/`await_staged` clears it and re-queues. At the budget the
+/// tombstone is permanent and claimants fall back to the synchronous path.
+const MAX_TRANSFER_ATTEMPTS: u32 = 3;
+
 /// State of one `(version, destination-node)` transfer. Queued/Running
 /// carry the requester's byte estimate so completion can settle the
-/// per-node in-flight gauge the placement engine reads.
+/// per-node in-flight gauge the placement engine reads, plus the failure
+/// count driving the bounded retry.
 #[derive(Clone, Debug)]
 enum TransferState {
-    Queued(u64),
-    Running(u64),
+    Queued { bytes: u64, attempts: u32 },
+    Running { bytes: u64, attempts: u32 },
     /// Replica cached in the store and the location published.
     Done,
-    Failed(String),
+    Failed { error: String, attempts: u32 },
 }
 
 struct Inner {
@@ -59,8 +67,9 @@ struct Inner {
     /// own queue and steal from the others when idle.
     queues: Vec<VecDeque<(DataKey, NodeId)>>,
     /// State per `(version, destination-node)` pair. Done/Failed entries
-    /// are kept as tombstones (bounded by the number of distinct
-    /// transfers, i.e. by tasks x inputs).
+    /// are tombstones; [`TransferService::purge_version`] removes a
+    /// version's entries when the GC collects it, so the map tracks *live*
+    /// versions, not the full tasks x inputs history.
     states: HashMap<(DataKey, u32), TransferState>,
     /// Claimants currently parked per pair — drives the prefetched/waited
     /// accounting in [`TransferService::complete`].
@@ -89,6 +98,7 @@ pub struct TransferService {
     waited: AtomicU64,
     dropped: AtomicU64,
     failed: AtomicU64,
+    retried: AtomicU64,
     bytes: AtomicU64,
 }
 
@@ -113,8 +123,21 @@ impl TransferService {
             waited: AtomicU64::new(0),
             dropped: AtomicU64::new(0),
             failed: AtomicU64::new(0),
+            retried: AtomicU64::new(0),
             bytes: AtomicU64::new(0),
         }
+    }
+
+    /// Node → queue/gauge slot. The one mapping shared by
+    /// [`TransferService::enqueue_request`], [`TransferService::complete`],
+    /// and [`TransferService::inflight_toward`]: an out-of-range `NodeId`
+    /// (stale location, test stub) wraps to the same slot everywhere
+    /// instead of inflating a gauge the reader never consults — the
+    /// phantom-pressure leak that used to mislead the `cost`/`adaptive`
+    /// routers. (`inflight` and the queue vector are always the same
+    /// length.)
+    fn slot(&self, node: NodeId) -> usize {
+        (node.0 as usize) % self.inflight.len()
     }
 
     /// Is the asynchronous transfer path active?
@@ -140,16 +163,25 @@ impl TransferService {
 
     /// Shared enqueue (board lock held): dedup by pair, queue toward the
     /// destination node, count, raise the destination's in-flight gauge,
-    /// and wake a mover. Notifying under the lock means a mover is either
-    /// about to re-scan the queues (and will see this request) or provably
+    /// and wake a mover. A `Failed` entry with attempts left is *not* an
+    /// in-flight state: the tombstone is cleared and the pair re-queued
+    /// (the old behavior kept it forever, so one failed transfer condemned
+    /// every later consumer on that node to the synchronous-decode
+    /// fallback). Notifying under the lock means a mover is either about
+    /// to re-scan the queues (and will see this request) or provably
     /// parked.
     fn enqueue_request(&self, inner: &mut Inner, key: DataKey, node: NodeId, bytes: u64) {
         let pair = (key, node.0);
-        if inner.states.contains_key(&pair) {
-            return;
-        }
-        inner.states.insert(pair, TransferState::Queued(bytes));
-        let qi = (node.0 as usize) % inner.queues.len();
+        let attempts = match inner.states.get(&pair) {
+            Some(TransferState::Failed { attempts, .. }) if *attempts < MAX_TRANSFER_ATTEMPTS => {
+                self.retried.fetch_add(1, Ordering::Relaxed);
+                *attempts
+            }
+            Some(_) => return,
+            None => 0,
+        };
+        inner.states.insert(pair, TransferState::Queued { bytes, attempts });
+        let qi = self.slot(node);
         inner.queues[qi].push_back((key, node));
         self.inflight[qi].fetch_add(bytes, Ordering::Relaxed);
         self.requested.fetch_add(1, Ordering::Relaxed);
@@ -158,7 +190,8 @@ impl TransferService {
 
     /// Mover side: block for the next request, preferring `home`'s queue
     /// and stealing from the other nodes' queues otherwise. Returns `None`
-    /// only at shutdown.
+    /// only at shutdown. Queue entries whose state was purged (version GC
+    /// collected the version mid-queue) are skipped, never handed out.
     pub(crate) fn next_request(&self, home: NodeId) -> Option<(DataKey, NodeId)> {
         let mut inner = self.inner.lock().unwrap();
         loop {
@@ -166,13 +199,15 @@ impl TransferService {
             let start = (home.0 as usize) % n;
             for i in 0..n {
                 let qi = (start + i) % n;
-                if let Some((key, node)) = inner.queues[qi].pop_front() {
+                while let Some((key, node)) = inner.queues[qi].pop_front() {
                     let pair = (key, node.0);
-                    let bytes = match inner.states.get(&pair) {
-                        Some(TransferState::Queued(b)) => *b,
-                        _ => 0,
+                    let (bytes, attempts) = match inner.states.get(&pair) {
+                        Some(TransferState::Queued { bytes, attempts }) => (*bytes, *attempts),
+                        // Purged (collected mid-queue) or superseded:
+                        // stale entry, nothing to move.
+                        _ => continue,
                     };
-                    inner.states.insert(pair, TransferState::Running(bytes));
+                    inner.states.insert(pair, TransferState::Running { bytes, attempts });
                     return Some((key, node));
                 }
             }
@@ -194,16 +229,22 @@ impl TransferService {
         let pair = (key, node.0);
         let had_waiter = inner.waiting.get(&pair).copied().unwrap_or(0) > 0;
         // Settle the in-flight gauge with the bytes the request was
-        // enqueued with (whatever the outcome — the pressure is gone).
-        let pending = match inner.states.get(&pair) {
-            Some(TransferState::Queued(b)) | Some(TransferState::Running(b)) => *b,
-            _ => 0,
+        // enqueued with (whatever the outcome — the pressure is gone). A
+        // purged pair (version collected mid-flight) already settled its
+        // gauge and must not grow a fresh tombstone.
+        let state = inner.states.get(&pair).cloned();
+        let (pending, attempts) = match &state {
+            Some(TransferState::Queued { bytes, attempts })
+            | Some(TransferState::Running { bytes, attempts }) => (*bytes, *attempts),
+            _ => (0, 0),
         };
-        self.inflight[(node.0 as usize) % inner.queues.len()]
-            .fetch_sub(pending, Ordering::Relaxed);
+        let purged = state.is_none();
+        self.inflight[self.slot(node)].fetch_sub(pending, Ordering::Relaxed);
         match result {
             Ok(Some(nbytes)) => {
-                inner.states.insert(pair, TransferState::Done);
+                if !purged {
+                    inner.states.insert(pair, TransferState::Done);
+                }
                 self.bytes.fetch_add(nbytes, Ordering::Relaxed);
                 if had_waiter {
                     self.waited.fetch_add(1, Ordering::Relaxed);
@@ -212,11 +253,21 @@ impl TransferService {
                 }
             }
             Ok(None) => {
-                inner.states.insert(pair, TransferState::Done);
+                if !purged {
+                    inner.states.insert(pair, TransferState::Done);
+                }
                 self.dropped.fetch_add(1, Ordering::Relaxed);
             }
             Err(e) => {
-                inner.states.insert(pair, TransferState::Failed(format!("{e:#}")));
+                if !purged {
+                    inner.states.insert(
+                        pair,
+                        TransferState::Failed {
+                            error: format!("{e:#}"),
+                            attempts: attempts + 1,
+                        },
+                    );
+                }
                 self.failed.fetch_add(1, Ordering::Relaxed);
             }
         }
@@ -225,9 +276,13 @@ impl TransferService {
 
     /// Claimant side: block until `key` is staged on `node`, requesting
     /// the transfer first if nobody did (a stolen task can land on a node
-    /// the router never prefetched for). `Ok(())` means the replica's
-    /// location is published; `Err` carries the transfer failure and the
-    /// caller falls back to the synchronous path.
+    /// the router never prefetched for). A retryable `Failed` tombstone is
+    /// cleared and re-queued rather than surfaced — `Err` is returned only
+    /// once the pair's attempt budget is exhausted, and the caller falls
+    /// back to the synchronous path. `Ok(())` means the replica's location
+    /// is published — or the version was GC-collected mid-wait (its
+    /// entries purged), in which case the caller's store fetch surfaces
+    /// the precise reclamation error.
     pub fn await_staged(&self, key: DataKey, node: NodeId, bytes: u64) -> Result<(), String> {
         if !self.enabled() {
             return Err("transfer service disabled".into());
@@ -235,13 +290,21 @@ impl TransferService {
         let pair = (key, node.0);
         let mut inner = self.inner.lock().unwrap();
         // A stolen task can land on a node the router never prefetched
-        // for; the dedup inside makes this a no-op otherwise.
+        // for; the dedup inside makes this a no-op otherwise, and a
+        // retryable failure is re-queued here.
         self.enqueue_request(&mut inner, key, node, bytes);
         loop {
-            match inner.states.get(&pair) {
+            match inner.states.get(&pair).cloned() {
                 Some(TransferState::Done) | None => return Ok(()),
-                Some(TransferState::Failed(e)) => return Err(e.clone()),
-                Some(TransferState::Queued(_)) | Some(TransferState::Running(_)) => {}
+                Some(TransferState::Failed { error, attempts }) => {
+                    if attempts >= MAX_TRANSFER_ATTEMPTS {
+                        return Err(error);
+                    }
+                    // A retryable failure landed while we were parked:
+                    // clear the tombstone, re-queue, keep waiting.
+                    self.enqueue_request(&mut inner, key, node, bytes);
+                }
+                Some(TransferState::Queued { .. }) | Some(TransferState::Running { .. }) => {}
             }
             if self.shutdown.load(Ordering::SeqCst) {
                 return Err("runtime stopping".into());
@@ -272,17 +335,74 @@ impl TransferService {
 
     /// Estimated serialized bytes currently queued or moving toward
     /// `node` — the transfer-pressure input of the placement engine's
-    /// `cost` model (a replica already on its way counts as local).
+    /// `cost`/`adaptive` models (a replica already on its way counts as
+    /// local). Reads the same wrapped slot the enqueue/complete paths
+    /// write, so pressure always drains back to zero.
     pub fn inflight_toward(&self, node: NodeId) -> u64 {
-        self.inflight
-            .get(node.0 as usize)
-            .map(|b| b.load(Ordering::Relaxed))
-            .unwrap_or(0)
+        self.inflight[self.slot(node)].load(Ordering::Relaxed)
     }
 
-    /// Transfers ever requested (deduplicated pairs).
+    /// Drop every state entry of a version the GC just collected (any
+    /// destination), settling the in-flight gauges of entries that never
+    /// ran. Without this, Done/Failed tombstones accumulate for the
+    /// lifetime of the service — "bounded by tasks x inputs" is a leak for
+    /// a long-running runtime. A purged Queued request counts as *dropped*
+    /// (its queue entry is skipped by `next_request`, so no completion
+    /// will ever account for it); a purged Running request is accounted by
+    /// the mover's own completion, which then settles nothing and
+    /// re-creates no tombstone.
+    pub(crate) fn purge_version(&self, key: DataKey) {
+        if !self.enabled() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let slots = self.inflight.len();
+        let inflight = &self.inflight;
+        let dropped = &self.dropped;
+        let before = inner.states.len();
+        inner.states.retain(|&(k, n), state| {
+            if k != key {
+                return true;
+            }
+            match state {
+                TransferState::Queued { bytes, .. } => {
+                    inflight[(n as usize) % slots].fetch_sub(*bytes, Ordering::Relaxed);
+                    dropped.fetch_add(1, Ordering::Relaxed);
+                }
+                TransferState::Running { bytes, .. } => {
+                    inflight[(n as usize) % slots].fetch_sub(*bytes, Ordering::Relaxed);
+                }
+                TransferState::Done | TransferState::Failed { .. } => {}
+            }
+            false
+        });
+        if inner.states.len() != before {
+            // Nobody should be parked on a collected version (a parked
+            // claimant holds a consumer reference, which keeps the version
+            // uncollected), but waking claimants is cheap. A woken claimant
+            // sees the entry gone, returns Ok, and its subsequent store
+            // fetch surfaces the precise "reclaimed by the version GC"
+            // error — never a hang.
+            self.cv_done.notify_all();
+        }
+    }
+
+    /// Entries alive in the state map: in-flight transfers plus
+    /// Done/Failed tombstones. The GC purge keeps this bounded by live
+    /// versions at quiescence, not by the tasks x inputs history.
+    pub fn state_count(&self) -> usize {
+        self.inner.lock().unwrap().states.len()
+    }
+
+    /// Transfer requests ever enqueued (deduplicated per in-flight pair; a
+    /// bounded retry of a failed pair counts again).
     pub fn requested(&self) -> u64 {
         self.requested.load(Ordering::Relaxed)
+    }
+
+    /// Failed pairs re-queued by the bounded retry.
+    pub fn retried(&self) -> u64 {
+        self.retried.load(Ordering::Relaxed)
     }
 
     /// Transfers that completed before any claimant parked on them.
@@ -301,8 +421,9 @@ impl TransferService {
         self.dropped.load(Ordering::Relaxed)
     }
 
-    /// Transfers that failed (their claimants fell back to the
-    /// synchronous path).
+    /// Failed transfer attempts. Each is retried on the next
+    /// `request`/`await_staged` until the pair's attempt budget runs out;
+    /// only then do claimants fall back to the synchronous path.
     pub fn failed(&self) -> u64 {
         self.failed.load(Ordering::Relaxed)
     }
@@ -331,12 +452,24 @@ impl InflightSource for TransferService {
 }
 
 /// Body of a mover thread: drain transfer requests (preferring `home`'s
-/// queue) until shutdown. Spawned by `Coordinator::start`, joined by
-/// `Coordinator::stop`.
+/// queue) until shutdown, feeding the `adaptive` router's observation
+/// sink with per-destination throughput as transfers complete. Spawned by
+/// `Coordinator::start`, joined by `Coordinator::stop`.
 pub(crate) fn mover_loop(shared: Arc<Shared>, home: NodeId) {
     while let Some((key, node)) = shared.transfers.next_request(home) {
+        let t0 = std::time::Instant::now();
         let result = perform_transfer(&shared, key, node);
+        if let (Some(fb), Ok(Some(nbytes))) = (&shared.feedback, &result) {
+            fb.record_transfer(node, *nbytes, t0.elapsed().as_secs_f64());
+        }
+        // A request can race the GC: the version may have been collected
+        // after the purge ran (a late prefetch). Re-purging after the
+        // completion keeps the board free of tombstones for dead versions.
+        let collected = shared.table.is_collected(key);
         shared.transfers.complete(key, node, result);
+        if collected {
+            shared.transfers.purge_version(key);
+        }
     }
 }
 
@@ -362,6 +495,13 @@ fn perform_transfer(
     }
     if shared.table.is_collected(key) {
         return Ok(None);
+    }
+    // Deterministic fault injection for the retry tests. The pseudo-type
+    // only matches injectors that name it (or catch-all empty filters —
+    // for those, transfer failures are legitimate chaos: bounded retry
+    // degrades to the counted synchronous fallback, never to wrong data).
+    if shared.injector.should_fail("__transfer__") {
+        anyhow::bail!("injected transfer failure for {key} -> node {}", node.0);
     }
     match stage_replica(shared, key, node) {
         Ok(staged) => Ok(staged),
@@ -453,21 +593,92 @@ mod tests {
     }
 
     #[test]
-    fn failed_transfer_reports_to_claimant() {
+    fn failed_transfer_retries_then_reports_to_claimant() {
         let s = Arc::new(TransferService::new(1, 1));
         let s2 = Arc::clone(&s);
         let waiter = std::thread::spawn(move || s2.await_staged(key(3), NodeId(0), 32));
-        let (k, n) = loop {
-            // await_staged itself enqueues the request.
-            if let Some(req) = s.next_request(NodeId(0)) {
-                break req;
-            }
-        };
-        s.complete(k, n, Err(anyhow::anyhow!("boom")));
+        // await_staged enqueues; every failure is re-queued by the parked
+        // claimant until the attempt budget runs out (next_request blocks
+        // until each re-queue lands).
+        for _ in 0..MAX_TRANSFER_ATTEMPTS {
+            let (k, n) = s.next_request(NodeId(0)).unwrap();
+            assert_eq!((k, n), (key(3), NodeId(0)));
+            s.complete(k, n, Err(anyhow::anyhow!("boom")));
+        }
         let err = waiter.join().unwrap().unwrap_err();
         assert!(err.contains("boom"), "{err}");
+        assert_eq!(s.failed(), u64::from(MAX_TRANSFER_ATTEMPTS));
+        assert_eq!(s.retried(), u64::from(MAX_TRANSFER_ATTEMPTS) - 1);
+        assert_eq!(s.inflight_toward(NodeId(0)), 0, "failures settle the gauge");
+        // The exhausted tombstone is permanent: immediate error, no park.
+        assert!(s.await_staged(key(3), NodeId(0), 32).is_err());
+        assert_eq!(s.retried(), u64::from(MAX_TRANSFER_ATTEMPTS) - 1);
+    }
+
+    #[test]
+    fn failed_pair_is_restageable_on_next_request() {
+        // Regression: a Failed tombstone used to be treated like an
+        // in-flight state, so one failure made the pair permanently
+        // un-stageable. The next await_staged must clear it, re-queue, and
+        // succeed via the retried mover transfer.
+        let s = Arc::new(TransferService::new(1, 2));
+        s.request(key(4), NodeId(1), 64);
+        let (k, n) = s.next_request(NodeId(1)).unwrap();
+        s.complete(k, n, Err(anyhow::anyhow!("flaky link")));
         assert_eq!(s.failed(), 1);
-        assert_eq!(s.inflight_toward(NodeId(0)), 0, "failure settles the gauge");
+        assert_eq!(s.inflight_toward(NodeId(1)), 0);
+        let s2 = Arc::clone(&s);
+        let waiter = std::thread::spawn(move || s2.await_staged(key(4), NodeId(1), 64));
+        let (k, n) = s.next_request(NodeId(1)).unwrap();
+        assert_eq!((k, n), (key(4), NodeId(1)));
+        assert_eq!(s.inflight_toward(NodeId(1)), 64, "retry re-raises the gauge");
+        s.complete(k, n, Ok(Some(64)));
+        assert_eq!(waiter.join().unwrap(), Ok(()));
+        assert_eq!(s.retried(), 1);
+        // A later prefetch of the now-Done pair is a no-op again.
+        s.request(key(4), NodeId(1), 64);
+        assert_eq!(s.requested(), 2);
+    }
+
+    #[test]
+    fn out_of_range_node_maps_to_one_slot_consistently() {
+        // Regression: enqueue/complete wrapped the node index while the
+        // gauge read did not, so a stale out-of-range NodeId inflated a
+        // wrapped node's gauge that `inflight_toward` never read back — a
+        // permanent phantom-pressure leak. All three now share one slot
+        // mapping.
+        let s = TransferService::new(1, 2);
+        s.request(key(1), NodeId(5), 128);
+        assert_eq!(s.inflight_toward(NodeId(5)), 128);
+        assert_eq!(s.inflight_toward(NodeId(1)), 128, "5 % 2 == 1");
+        assert_eq!(s.inflight_toward(NodeId(0)), 0);
+        let (k, n) = s.next_request(NodeId(0)).unwrap();
+        s.complete(k, n, Ok(Some(128)));
+        assert_eq!(s.inflight_toward(NodeId(1)), 0, "completion settles the slot");
+        assert_eq!(s.inflight_toward(NodeId(5)), 0);
+    }
+
+    #[test]
+    fn purge_version_drains_tombstones_and_settles_gauges() {
+        let s = TransferService::new(1, 2);
+        // One Done tombstone and one still-queued request, same version.
+        s.request(key(1), NodeId(0), 32);
+        let (k, n) = s.next_request(NodeId(0)).unwrap();
+        s.complete(k, n, Ok(Some(32)));
+        s.request(key(1), NodeId(1), 32);
+        assert_eq!(s.state_count(), 2);
+        assert_eq!(s.inflight_toward(NodeId(1)), 32);
+        s.purge_version(key(1));
+        assert_eq!(s.state_count(), 0, "collected version leaves no entries");
+        assert_eq!(s.inflight_toward(NodeId(1)), 0, "purged request settles its gauge");
+        // The never-run request is accounted as dropped, keeping
+        // staged + dropped + failed == requested.
+        assert_eq!(s.dropped(), 1);
+        assert_eq!(s.prefetched() + s.dropped(), s.requested());
+        // The stale queue entry is skipped, never handed to a mover: after
+        // stop() the scan drains it and exits.
+        s.stop();
+        assert!(s.next_request(NodeId(1)).is_none());
     }
 
     #[test]

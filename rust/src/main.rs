@@ -124,13 +124,13 @@ fn print_usage() {
 USAGE:
   rcompss run    --app knn|kmeans|linreg [--workers N] [--fragments F]
                  [--backend auto|pjrt|native] [--codec rmvl|qs|fst|rds|...]
-                 [--scheduler fifo|lifo|locality] [--router bytes|cost|roundrobin]
+                 [--scheduler fifo|lifo|locality] [--router bytes|cost|roundrobin|adaptive]
                  [--trace] [--memory-budget BYTES (default 256 MiB; 0 = file plane)]
                  [--spill lru|largest] [--nodes N] [--transfer-threads T]
                  [--gc on|off (default on)]
   rcompss sim    --app knn|kmeans|linreg --machine shaheen3|marenostrum5
                  [--nodes N] [--workers-per-node W] [--fragments F]
-                 [--scheduler fifo|lifo|locality] [--router bytes|cost|roundrobin]
+                 [--scheduler fifo|lifo|locality] [--router bytes|cost|roundrobin|adaptive]
   rcompss dag    --app add|knn|kmeans|linreg [--fragments F] [--out FILE.dot]
   rcompss trace  --app knn|kmeans|linreg --machine shaheen3|marenostrum5
                  [--nodes N] [--workers-per-node W] [--width COLS]
@@ -247,12 +247,13 @@ fn cmd_run(opts: &Opts) -> anyhow::Result<()> {
             rcompss::util::table::fmt_bytes(stats.spill_bytes as usize),
         );
         println!(
-            "transfers: {} requested, {} prefetched, {} waited, {} dropped, {} failed, {} moved, {} sync claim decodes",
+            "transfers: {} requested, {} prefetched, {} waited, {} dropped, {} failed, {} retried, {} moved, {} sync claim decodes",
             stats.transfers_requested,
             stats.transfers_prefetched,
             stats.transfers_waited,
             stats.transfers_dropped,
             stats.transfers_failed,
+            stats.transfers_retried,
             rcompss::util::table::fmt_bytes(stats.transfer_bytes as usize),
             stats.sync_transfer_decodes,
         );

@@ -35,6 +35,7 @@ use anyhow::Result;
 
 use crate::cluster::ClusterSpec;
 use crate::coordinator::dag::TaskId;
+use crate::coordinator::feedback::FeedbackStats;
 use crate::coordinator::placement::{placement_by_name, PlacementModel, RoutedReady};
 use crate::coordinator::registry::NodeId;
 use crate::coordinator::scheduler::ReadyTask;
@@ -126,6 +127,10 @@ struct RunState<'a> {
     idle: Vec<WorkerId>,
     tracer: Tracer,
     wpn: usize,
+    /// Observation sink of an `adaptive` router: the simulator feeds it
+    /// its *virtual* transfer timings and task durations, so the model
+    /// learns in simulation exactly as it does live.
+    feedback: Option<Arc<FeedbackStats>>,
 }
 
 impl RunState<'_> {
@@ -151,8 +156,9 @@ impl SimEngine {
         self
     }
 
-    /// Placement model: "bytes" | "cost" | "roundrobin" (the live
-    /// `--router` knob).
+    /// Placement model: "bytes" | "cost" | "roundrobin" | "adaptive" (the
+    /// live `--router` knob). The adaptive model learns from the
+    /// simulator's virtual transfer timings and task durations.
     pub fn with_router(mut self, name: &str) -> SimEngine {
         self.router_name = name.into();
         self
@@ -171,10 +177,11 @@ impl SimEngine {
         let model: Arc<dyn PlacementModel> =
             placement_by_name(&self.router_name).ok_or_else(|| {
                 anyhow::anyhow!(
-                    "unknown router '{}' (bytes|cost|roundrobin)",
+                    "unknown router '{}' (bytes|cost|roundrobin|adaptive)",
                     self.router_name
                 )
             })?;
+        let feedback = model.feedback();
         let router = RoutedReady::new(&self.scheduler_name, nodes as u32, model)
             .ok_or_else(|| anyhow::anyhow!("unknown scheduler '{}'", self.scheduler_name))?;
 
@@ -195,6 +202,7 @@ impl SimEngine {
             idle: Vec::new(),
             tracer: Tracer::new(self.trace),
             wpn,
+            feedback,
         };
         for id in ready0 {
             push_ready(st.plan, &mut st.router, id);
@@ -299,6 +307,11 @@ impl SimEngine {
                 let tr = self.cost.transfer_time(bytes, profile);
                 st.tracer
                     .record_at(wid, EventKind::Transfer, Some(id), t, t + tr);
+                // The adaptive model observes simulated transfer timings —
+                // the same signal the live movers would record.
+                if let Some(fb) = &st.feedback {
+                    fb.record_transfer(wid.node, bytes, tr);
+                }
                 t += tr;
                 st.total_transfer += tr;
                 st.plan.registry.add_location(*key, wid.node);
@@ -333,6 +346,9 @@ impl SimEngine {
             t,
             t + exec,
         );
+        if let Some(fb) = &st.feedback {
+            fb.record_task(&meta.ty, exec);
+        }
         t += exec;
         // Interned Arc<str> name against a String-keyed map: allocate the
         // key only on the first completion of each type (big DES sweeps
@@ -539,9 +555,10 @@ mod tests {
 
     #[test]
     fn every_router_model_runs_to_completion() {
-        // The simulator drives the shared placement engine: all three
-        // models must drain the same DAG, whatever they decide.
-        for router in ["bytes", "cost", "roundrobin"] {
+        // The simulator drives the shared placement engine: every model
+        // must drain the same DAG, whatever it decides — including the
+        // adaptive model warming up from simulated transfer timings.
+        for router in ["bytes", "cost", "roundrobin", "adaptive"] {
             let plan = knn_plan(8, 2);
             let n = plan.graph.len();
             let spec = ClusterSpec::new(MachineProfile::shaheen3(), 3).with_workers_per_node(2);

@@ -336,7 +336,7 @@ fn every_router_produces_identical_results() {
     cfg.train_fragments = 4;
     cfg.test_blocks = 2;
     let mut reference: Option<Vec<i32>> = None;
-    for router in ["bytes", "cost", "roundrobin"] {
+    for router in ["bytes", "cost", "roundrobin", "adaptive"] {
         let rt = CompssRuntime::start(
             RuntimeConfig::local(2).with_nodes(2, 2).with_router(router),
         )
@@ -651,11 +651,23 @@ fn two_node_memory_plane_claims_never_run_codec_synchronously() {
     assert_eq!(stats.dead_version_bytes, 0, "{stats:?}");
     // Any data movement that did happen was performed by the movers, and
     // every request was drained before shutdown: staged (prefetched or
-    // waited-on) or dropped (replica raced ahead / version reclaimed).
+    // waited-on), dropped (replica raced ahead / version reclaimed), or
+    // failed (counted per attempt; zero here).
     assert_eq!(
-        stats.transfers_prefetched + stats.transfers_waited + stats.transfers_dropped,
+        stats.transfers_prefetched
+            + stats.transfers_waited
+            + stats.transfers_dropped
+            + stats.transfers_failed,
         stats.transfers_requested,
         "transfer accounting is consistent: {stats:?}"
+    );
+    // The GC purges a collected version's transfer-board entries, so the
+    // state map cannot grow with tasks x inputs: at quiescence only
+    // uncollected versions (pinned results, terminal outputs) may keep
+    // entries.
+    assert!(
+        stats.transfer_states <= 16,
+        "transfer tombstones must not accumulate: {stats:?}"
     );
 }
 
