@@ -20,7 +20,11 @@
 //!    through the placement engine (prefetch overlap split);
 //! 8. **`cost` vs `adaptive` routing** — the same workload under a
 //!    bandwidth-skewed observation profile (the feedback-driven model
-//!    routes on observed throughput, the byte heuristic cannot).
+//!    routes on observed throughput, the byte heuristic cannot);
+//! 9. **File-backed vs warm-tier fan-out staging** — an N-node fan-out of
+//!    memory-resident versions, `--warm-budget 0` (one encode + N file
+//!    round-trips per version) against the warm tier (one encode, zero
+//!    file I/O, blob shipped directly).
 //!
 //! Run: `cargo bench --bench runtime_hotpath`
 
@@ -496,6 +500,82 @@ fn adaptive_routing(summary: &mut Vec<Json>) {
     println!();
 }
 
+/// Case [9]: N-node fan-out transfer staging — file-backed vs warm tier.
+/// Each of 16 producers' outputs is consumed on every node of a 4-node
+/// fabric (round-robin spreads the consumers), so every version fans out
+/// to up to 3 remote destinations. With `--warm-budget 0` each staging
+/// publishes/rereads the spill file; with the warm tier on the mover
+/// ships the cached blob — the stats columns (encodes, file writes/reads)
+/// show the mechanism, the wall time the win.
+fn fanout_staging(summary: &mut Vec<Json>) {
+    println!("[9] fan-out transfer staging: file-backed vs warm tier (4 nodes x 1 worker)");
+    let producers = 16usize;
+    let consumers_per = 8usize;
+    let payload = 32 * 1024usize; // 256 KiB per produced vector
+    for (mode, warm) in [
+        ("file", 0u64),
+        ("warm", rcompss::coordinator::runtime::DEFAULT_WARM_BUDGET),
+    ] {
+        let config = RuntimeConfig::local(1)
+            .with_nodes(4, 1)
+            .with_router("roundrobin")
+            .with_transfer_threads(1)
+            .with_warm_budget(warm);
+        let rt = CompssRuntime::start(config).unwrap();
+        let mk = rt.register_task(TaskDef::new("mk", 1, move |args| {
+            let seed = args[0].as_f64().unwrap_or(0.0);
+            Ok(vec![RValue::Real(vec![seed; payload])])
+        }));
+        let consume = rt.register_task(TaskDef::new("consume", 1, |args| {
+            let a = args[0].as_real().unwrap();
+            Ok(vec![RValue::scalar(a[0] + a[a.len() - 1])])
+        }));
+        let (elapsed, _) = time_once(|| {
+            let outs: Vec<_> = (0..producers)
+                .map(|i| rt.submit(&mk, &[(i as f64).into()]).unwrap())
+                .collect();
+            for out in &outs {
+                for _ in 0..consumers_per {
+                    rt.submit(&consume, &[(*out).into()]).unwrap();
+                }
+            }
+            rt.barrier().unwrap();
+        });
+        let stats = rt.stop().unwrap();
+        let n_tasks = producers * (1 + consumers_per);
+        let per_task = elapsed / n_tasks as f64 * 1e6;
+        println!(
+            "  {mode:4} staging: {n_tasks} tasks -> {per_task:.1} µs/task | {} encodes, \
+             {} file writes, {} file reads, {} warm hits, {} moved",
+            stats.store_encodes,
+            stats.store_file_writes,
+            stats.store_file_reads,
+            stats.warm_hits,
+            fmt_bytes(stats.transfer_bytes as usize),
+        );
+        record_result(
+            "hotpath_fanout_staging",
+            vec![
+                ("mode", Json::Str(mode.into())),
+                ("us_per_task", Json::Num(per_task)),
+                ("store_encodes", Json::Num(stats.store_encodes as f64)),
+                ("file_writes", Json::Num(stats.store_file_writes as f64)),
+                ("file_reads", Json::Num(stats.store_file_reads as f64)),
+            ],
+        );
+        summary.push(obj(vec![
+            ("metric", Json::Str("fanout_staging_us_per_task".into())),
+            ("mode", Json::Str(mode.into())),
+            ("n_tasks", Json::Num(n_tasks as f64)),
+            ("us_per_task", Json::Num(per_task)),
+            ("store_encodes", Json::Num(stats.store_encodes as f64)),
+            ("file_writes", Json::Num(stats.store_file_writes as f64)),
+            ("file_reads", Json::Num(stats.store_file_reads as f64)),
+        ]));
+    }
+    println!();
+}
+
 fn pure_structures() {
     println!("[5] pure coordination structures");
     // Scheduler ops.
@@ -560,15 +640,16 @@ fn main() {
     gemm_ratio();
     unit_costs();
     codec_throughput();
-    // Cases [4], [6], [7], and [8] share one committed summary file; it
-    // is written only after all four ran, so a measured BENCH_hotpath.json
-    // always carries the dispatch, batched-submit, and both routing
-    // metrics the projected copy has.
+    // Cases [4], [6], [7], [8], and [9] share one committed summary file;
+    // it is written only after all five ran, so a measured
+    // BENCH_hotpath.json always carries the dispatch, batched-submit,
+    // routing, and fan-out-staging metrics the projected copy has.
     let mut summary: Vec<Json> = Vec::new();
     dispatch_overhead(&mut summary);
     batched_submission(&mut summary);
     routing_models(&mut summary);
     adaptive_routing(&mut summary);
+    fanout_staging(&mut summary);
     rcompss::bench_harness::write_json_summary("hotpath", summary);
     pure_structures();
 }

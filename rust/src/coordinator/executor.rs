@@ -10,10 +10,11 @@
 //! 2. flips the task to Running and grabs its metadata `Arc` — the only
 //!    touch of the control lock before execution; locality and paths are
 //!    resolved afterwards against the sharded version table,
-//! 3. gathers inputs: zero-copy `Arc` handles from the in-memory store for
-//!    node-local values, codec reads for file-plane values, spilled values,
-//!    and cross-node transfers (which force the value through the codec,
-//!    as on a real cluster),
+//! 3. gathers inputs: zero-copy `Arc` handles from the hot tier for
+//!    node-local values, in-memory decodes of warm-tier blobs for demoted
+//!    values, codec reads for file-plane and cold-spilled values, and
+//!    cross-node transfers (which force the value through the codec, as on
+//!    a real cluster),
 //! 4. executes the task body (with failure injection if configured),
 //! 5. publishes the outputs — into the store (memory plane, spilling under
 //!    pressure) or through `Codec::write_file` (file plane, byte-identical
@@ -25,19 +26,20 @@ use std::sync::Arc;
 
 use crate::coordinator::dag::TaskState;
 use crate::coordinator::registry::{DataKey, NodeId};
-use crate::coordinator::runtime::{
-    reap_if_drained, release_inputs, spill_victims, Core, Shared, TaskMeta,
-};
+use crate::coordinator::runtime::{reap_if_drained, release_inputs, Core, Shared, TaskMeta};
+use crate::coordinator::store::{self, cold};
 use crate::trace::{EventKind, WorkerId};
 use crate::value::RValue;
 
-/// Fetch an available value for a node-local consumer: a zero-copy handle
-/// when the store holds it, a codec reload of its spill file otherwise
-/// (re-caching the result). Returns `(value, decoded, file_bytes)`.
+/// Fetch an available value for a node-local consumer, climbing the tier
+/// ladder: a zero-copy handle when the hot tier holds it, an in-memory
+/// decode of the warm blob (no disk) when it was demoted, a codec reload
+/// of its spill file as the cold fallback (re-caching the result either
+/// way). Returns `(value, decoded, serialized_bytes)`.
 ///
 /// Only called for values already marked available, whose producer always
-/// publishes the store entry or the spill path first — the yield loop can
-/// only spin across the instants of a concurrent eviction. A version the
+/// publishes a tier entry or the spill path first — the yield loop can
+/// only spin across the instants of a concurrent demotion. A version the
 /// GC reclaimed is an error, never a hang (the refcount protocol makes
 /// this unreachable from a live claim path).
 pub(crate) fn fetch_resident(
@@ -45,44 +47,31 @@ pub(crate) fn fetch_resident(
     key: DataKey,
 ) -> anyhow::Result<(Arc<RValue>, bool, u64)> {
     loop {
-        if let Some(v) = shared.store.get(key) {
+        if let Some(v) = shared.store.hot().get(key) {
             return Ok((v, false, 0));
+        }
+        if let Some(blob) = shared.store.warm().get(key) {
+            // Warm promotion: decode the cached blob — zero file I/O. The
+            // hot entry carries `has_file` only when a cold file actually
+            // exists for this version (per-tier residency), so a later
+            // demotion is free exactly when it can be.
+            let v = Arc::new(shared.codec.decode(&blob)?);
+            let has_file = shared.table.path_of(key).is_some();
+            let victims = shared.store.hot().put(key, Arc::clone(&v), has_file);
+            store::demote_victims(shared, victims);
+            return Ok((v, true, blob.len() as u64));
         }
         if let Some(path) = shared.table.path_of(key) {
             let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+            shared.store.cold().note_read();
             let v = Arc::new(shared.codec.read_file(&path)?);
-            let victims = shared.store.put(key, Arc::clone(&v), true);
-            spill_victims(shared, victims);
+            let victims = shared.store.hot().put(key, Arc::clone(&v), true);
+            store::demote_victims(shared, victims);
             return Ok((v, true, bytes));
         }
         if shared.table.is_collected(key) {
             anyhow::bail!("datum {key} was reclaimed by the version GC");
         }
-        std::thread::yield_now();
-    }
-}
-
-/// Make sure a serialized file exists for `key` (cross-node transfer
-/// boundary): publish a spill file from the store if none does. Shared by
-/// the mover threads (the common path) and the synchronous fallback.
-pub(crate) fn ensure_file(shared: &Shared, key: DataKey) -> anyhow::Result<std::path::PathBuf> {
-    loop {
-        if let Some(p) = shared.table.path_of(key) {
-            return Ok(p);
-        }
-        if let Some(v) = shared.store.get(key) {
-            let (bytes, path) = crate::coordinator::runtime::write_spill_file(shared, key, &v)?;
-            if !shared.table.mark_spilled(key, bytes, path.clone()) {
-                let _ = std::fs::remove_file(&path);
-                anyhow::bail!("datum {key} was reclaimed by the version GC");
-            }
-            shared.store.note_file(key);
-            return Ok(path);
-        }
-        if shared.table.is_collected(key) {
-            anyhow::bail!("datum {key} was reclaimed by the version GC");
-        }
-        // Mid-eviction: the spill path is about to be published.
         std::thread::yield_now();
     }
 }
@@ -107,6 +96,7 @@ pub(crate) fn acquire_input(
     if !shared.store.enabled() {
         // File plane: byte-identical to the seed runtime.
         let path = shared.path_for(key);
+        shared.store.cold().note_read();
         let v = shared.codec.read_file(&path)?;
         let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
         return Ok((Arc::new(v), true, bytes));
@@ -132,12 +122,13 @@ pub(crate) fn acquire_input(
     // Synchronous fallback (the seed behavior): the claim path itself runs
     // the cross-node codec round-trip. Counted — the transfer tests assert
     // this stays zero while the service is on and healthy.
-    shared.store.note_sync_transfer_decode();
-    let path = ensure_file(shared, key)?;
+    shared.store.hot().note_sync_transfer_decode();
+    let path = cold::ensure_file(shared, key)?;
     let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    shared.store.cold().note_read();
     let v = Arc::new(shared.codec.read_file(&path)?);
-    let victims = shared.store.put(key, Arc::clone(&v), true);
-    spill_victims(shared, victims);
+    let victims = shared.store.hot().put(key, Arc::clone(&v), true);
+    store::demote_victims(shared, victims);
     shared.table.add_location(key, node);
     Ok((v, true, bytes))
 }
@@ -266,9 +257,9 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
                     for (key, value) in meta.outputs.iter().zip(outputs.into_iter()) {
                         let value = Arc::new(value);
                         let nbytes = value.byte_size() as u64;
-                        let victims = shared.store.put(*key, Arc::clone(&value), false);
+                        let victims = shared.store.hot().put(*key, Arc::clone(&value), false);
                         shared.table.mark_available_memory(*key, wid.node, nbytes);
-                        spill_victims(&shared, victims);
+                        store::demote_victims(&shared, victims);
                         reap_if_drained(&shared, *key);
                     }
                 } else {
@@ -278,6 +269,7 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
                         let path = shared.path_for(*key);
                         match shared.codec.write_file(value, &path) {
                             Ok(()) => {
+                                shared.store.cold().note_write();
                                 let bytes =
                                     std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
                                 produced.push((*key, bytes, path));

@@ -12,8 +12,11 @@
 //!   worker-side [`registry::VersionTable`];
 //! * [`dag`] — superscalar dependency analysis (RAW/WAR/WAW) and the task
 //!   graph, with DOT export reproducing Figures 2-5;
-//! * [`datastore`] — the in-memory zero-copy data plane: produced values
-//!   cached as `Arc<RValue>` with a byte budget and LRU/largest spill;
+//! * [`store`] — the tiered value store behind one [`store::ValueStore`]
+//!   facade: **hot** (decoded `Arc<RValue>`s with a byte budget and
+//!   LRU/largest demotion), **warm** (encoded `Arc<[u8]>` blobs under
+//!   `--warm-budget`, filled lazily by the first encode), **cold** (the
+//!   spill-file plane);
 //! * [`scheduler`] — pluggable policies: FIFO, LIFO, data-locality, plus
 //!   [`scheduler::ShardedReady`], the per-node dispatch fabric with work
 //!   stealing that the live executor drives;
@@ -52,7 +55,7 @@
 //! | control (DAG, dependency analysis, metadata, stats) | `Mutex<Core>` + `cv_done` | master on submit/wait; workers only to flip task states |
 //! | dispatch (ready tasks) | [`scheduler::ShardedReady`]: per-node policy shards + park lot | workers pop/steal; submit & completions push |
 //! | location (where each `dXvY` lives) | [`registry::VersionTable`]: 16 `RwLock` shards | workers on every claim/publish, lock-free of control |
-//! | values (the bytes themselves) | [`datastore::DataStore`]: mutexed `Arc<RValue>` cache | producers put, consumers get zero-copy handles |
+//! | values (the bytes themselves) | [`store::TieredStore`]: hot `Arc<RValue>` cache + warm `Arc<[u8]>` blob cache + cold spill files | producers put hot, consumers get zero-copy handles, demotion walks the tiers |
 //! | movement (cross-node staging) | [`transfer::TransferService`]: per-node request queues + mover threads | routing prefetches, movers stage, claimants park |
 //!
 //! Lock ordering: the control lock may be held while touching the leaf
@@ -73,20 +76,25 @@
 //!
 //! **Data-plane knobs** (`runtime::CoordinatorConfig`): `memory_budget`
 //! (bytes; default [`runtime::DEFAULT_MEMORY_BUDGET`] = 256 MiB; 0 = file
-//! plane, byte-identical to the seed runtime), `spill` (`"lru"` |
-//! `"largest"`), `transfer_threads` (movers per emulated node; 0 =
-//! synchronous seed-style cross-node reloads), `gc` (reference-counted
-//! version GC, default on), and `router` (placement model: `"bytes"` |
-//! `"cost"` | `"roundrobin"` | `"adaptive"`). With the memory plane on, the configured
-//! codec runs only at spill boundaries: memory pressure, cross-node
-//! transfer, and reloads of spilled values — and with
-//! `transfer_threads > 0` the cross-node boundary runs on mover threads,
-//! never on a claiming worker's critical path. A node-local RAW chain
-//! therefore executes with zero file I/O and zero serialization.
+//! plane, byte-identical to the seed runtime), `warm_budget` (bytes of
+//! encoded warm-tier blobs; default [`runtime::DEFAULT_WARM_BUDGET`] =
+//! 64 MiB; 0 = pre-tier hot→file demotion and file-backed transfer
+//! staging), `store` (tier preset for A/B runs: `"tiered"` | `"hot"` |
+//! `"file"`), `spill` (`"lru"` | `"largest"`), `transfer_threads` (movers
+//! per emulated node; 0 = synchronous seed-style cross-node reloads),
+//! `gc` (reference-counted version GC, default on), and `router`
+//! (placement model: `"bytes"` | `"cost"` | `"roundrobin"` |
+//! `"adaptive"`). With the memory plane on, the configured codec runs
+//! only at tier boundaries: memory pressure, cross-node transfer, and
+//! reloads of demoted values — and with `transfer_threads > 0` the
+//! cross-node boundary runs on mover threads, never on a claiming
+//! worker's critical path. A node-local RAW chain therefore executes with
+//! zero file I/O and zero serialization, and with the warm tier on a
+//! memory-resident version fanned out to N nodes costs exactly one encode
+//! and zero file I/O.
 
 pub mod access;
 pub mod dag;
-pub mod datastore;
 pub mod executor;
 pub mod fault;
 pub mod feedback;
@@ -94,13 +102,14 @@ pub mod placement;
 pub mod registry;
 pub mod runtime;
 pub mod scheduler;
+pub mod store;
 pub mod transfer;
 
 pub use access::Direction;
 pub use dag::{EdgeKind, TaskGraph, TaskId, TaskState};
-pub use datastore::{DataStore, SpillPolicy};
 pub use feedback::{AdaptivePlacement, FeedbackStats};
 pub use placement::{placement_by_name, PlacementModel, RoutedReady};
 pub use registry::{DataKey, DataRegistry, NodeId, VersionTable};
 pub use runtime::{Coordinator, CoordinatorConfig, SubmitOutcome};
+pub use store::{DataStore, SpillPolicy, Tier, TieredStore, ValueStore, WarmStore};
 pub use transfer::TransferService;

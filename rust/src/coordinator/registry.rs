@@ -61,7 +61,7 @@ pub struct VersionInfo {
     /// either as a serialized file or as a memory-resident object.
     pub available: bool,
     /// The value is held by the in-memory
-    /// [`DataStore`](super::datastore::DataStore); `path` may be empty
+    /// [`DataStore`](super::store::hot::DataStore); `path` may be empty
     /// until it spills.
     pub in_memory: bool,
     /// Nodes that currently hold a replica.
@@ -159,6 +159,22 @@ impl VersionTable {
             .unwrap_or(false)
     }
 
+    /// Atomically take a version's published file path *out* of the table
+    /// (clearing it under the shard lock, so no reader can reach the file
+    /// once the caller deletes it). Returns the path and the recorded
+    /// serialized size. Used by the cold tier's [`discard`] — the GC's own
+    /// collect path takes the path through `CollectAction` instead.
+    ///
+    /// [`discard`]: crate::coordinator::store::ValueStore::discard
+    pub fn take_path(&self, key: DataKey) -> Option<(PathBuf, u64)> {
+        let mut shard = self.shard(key).write().unwrap();
+        let info = shard.get_mut(&key)?;
+        if info.path.as_os_str().is_empty() {
+            return None;
+        }
+        Some((std::mem::take(&mut info.path), info.bytes))
+    }
+
     /// The spill/parameter file path, when one has been published.
     pub fn path_of(&self, key: DataKey) -> Option<PathBuf> {
         self.shard(key)
@@ -215,6 +231,21 @@ impl VersionTable {
         let info = shard.get_mut(&key).expect("unknown version");
         if !info.locations.contains(&node) {
             info.locations.push(node);
+        }
+    }
+
+    /// Record the exact serialized size of a version once its warm-tier
+    /// blob is built (the path stays untouched). Placement-engine byte
+    /// estimates and transfer-request gauges read `bytes`, so the first
+    /// encode upgrades them from payload estimates to real wire sizes —
+    /// which also sharpens the `cost`/`adaptive` feedback signal. A no-op
+    /// for unknown or collected versions.
+    pub fn update_bytes(&self, key: DataKey, bytes: u64) {
+        let mut shard = self.shard(key).write().unwrap();
+        if let Some(info) = shard.get_mut(&key) {
+            if !info.collected {
+                info.bytes = bytes;
+            }
         }
     }
 
@@ -308,6 +339,36 @@ impl VersionTable {
     /// Number of live versions (for stats).
     pub fn version_count(&self) -> usize {
         self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    /// Bytes of uncollected versions with a published file — the cold
+    /// tier's resident footprint (the table is the cold tier's index).
+    pub fn file_bytes(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| {
+                s.read()
+                    .unwrap()
+                    .values()
+                    .filter(|i| !i.collected && !i.path.as_os_str().is_empty())
+                    .map(|i| i.bytes)
+                    .sum::<u64>()
+            })
+            .sum()
+    }
+
+    /// Uncollected versions with a published file (cold-tier entry count).
+    pub fn file_count(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| {
+                s.read()
+                    .unwrap()
+                    .values()
+                    .filter(|i| !i.collected && !i.path.as_os_str().is_empty())
+                    .count()
+            })
+            .sum()
     }
 
     /// Total bytes across all versions.

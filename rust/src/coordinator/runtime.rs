@@ -17,7 +17,8 @@
 //! metadata, and stats. Ready-task dispatch lives in [`ShardedReady`],
 //! version locations in the sharded
 //! [`VersionTable`](crate::coordinator::registry::VersionTable), produced
-//! values in the [`DataStore`], and cross-node staging in the
+//! values in the tiered [`TieredStore`] (hot `Arc<RValue>`s, warm encoded
+//! blobs, cold spill files), and cross-node staging in the
 //! [`TransferService`] — workers touch the control lock only to flip task
 //! states.
 
@@ -30,13 +31,13 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::access::Direction;
 use crate::coordinator::dag::{EdgeKind, TaskGraph, TaskId, TaskState};
-use crate::coordinator::datastore::{DataStore, SpillPolicy};
 use crate::coordinator::executor;
 use crate::coordinator::fault::{FailureInjector, RetryPolicy};
 use crate::coordinator::feedback::FeedbackStats;
 use crate::coordinator::placement::{placement_by_name, InflightSource};
 use crate::coordinator::registry::{CollectAction, DataKey, DataRegistry, NodeId, VersionTable};
 use crate::coordinator::scheduler::{ReadyTask, ShardedReady};
+use crate::coordinator::store::{self, SpillPolicy, TieredStore};
 use crate::coordinator::transfer::{self, TransferService};
 use crate::serialization::{codec_by_name, Codec};
 use crate::trace::{EventKind, Tracer, WorkerId};
@@ -90,7 +91,8 @@ pub struct SubmitOutcome {
 /// use rcompss::value::RValue;
 ///
 /// let config = RuntimeConfig::local(2)
-///     .with_memory_budget(64 << 20) // in-memory zero-copy data plane
+///     .with_memory_budget(64 << 20) // hot tier: zero-copy Arc<RValue>s
+///     .with_warm_budget(16 << 20)   // warm tier: encoded blobs (no disk)
 ///     .with_transfer_threads(1)     // movers stage cross-node inputs
 ///     .with_gc(true);               // reclaim dead dXvY versions
 /// let rt = CompssRuntime::start(config).unwrap();
@@ -127,11 +129,22 @@ pub struct CoordinatorConfig {
     pub trace: bool,
     /// Failure injection (tests/chaos benches).
     pub injector: Arc<FailureInjector>,
-    /// Byte budget of the in-memory data plane (default
-    /// [`DEFAULT_MEMORY_BUDGET`], 256 MiB). 0 disables the store entirely:
-    /// every parameter goes through the codec and the workdir,
-    /// byte-identical to the original file-based runtime.
+    /// Byte budget of the in-memory data plane's **hot tier** (default
+    /// [`DEFAULT_MEMORY_BUDGET`], 256 MiB). 0 disables the store entirely
+    /// (the warm tier follows): every parameter goes through the codec and
+    /// the workdir, byte-identical to the original file-based runtime.
     pub memory_budget: u64,
+    /// Byte budget of the **warm tier** — encoded `Arc<[u8]>` blobs kept
+    /// after the first encode (default [`DEFAULT_WARM_BUDGET`], 64 MiB).
+    /// Hot-tier victims demote here instead of to disk, reloads decode in
+    /// memory, and cross-node transfers ship the blob directly (one encode
+    /// per N-node fan-out, zero file I/O). 0 disables the tier and
+    /// restores the pre-tier hot→file behavior byte for byte.
+    pub warm_budget: u64,
+    /// Tier preset for A/B runs: `"tiered"` (hot+warm+cold, the default),
+    /// `"hot"` (warm tier off), `"file"` (seed-identical file plane).
+    /// Presets override the budgets above at startup.
+    pub store: String,
     /// Spill victim selection when over budget: "lru" | "largest".
     pub spill: String,
     /// Mover threads per emulated node for asynchronous cross-node
@@ -155,6 +168,11 @@ pub struct CoordinatorConfig {
 /// `--memory-budget` default, and the docs.
 pub const DEFAULT_MEMORY_BUDGET: u64 = 256 << 20;
 
+/// Default byte budget of the warm (serialized-blob) tier — the single
+/// source of truth shared by [`CoordinatorConfig::local`], the CLI's
+/// `--warm-budget` default, and the docs.
+pub const DEFAULT_WARM_BUDGET: u64 = 64 << 20;
+
 impl CoordinatorConfig {
     /// Sensible local defaults: one node, `workers` executors, RMVL codec,
     /// FIFO policy, workdir under the system temp dir, the in-memory data
@@ -162,10 +180,11 @@ impl CoordinatorConfig {
     /// `with_memory_budget(0).with_gc(false)` restores the seed-identical
     /// file plane.
     ///
-    /// The `RCOMPSS_SCHEDULER` and `RCOMPSS_ROUTER` environment variables
-    /// override the scheduler/router *defaults* (explicit `with_*` calls
-    /// still win) — this is how CI sweeps the placement × policy matrix
-    /// over the unmodified test suite.
+    /// The `RCOMPSS_SCHEDULER`, `RCOMPSS_ROUTER`, and
+    /// `RCOMPSS_WARM_BUDGET` environment variables override the
+    /// scheduler/router/warm-budget *defaults* (explicit `with_*` calls
+    /// still win) — this is how CI sweeps the placement × policy × warm
+    /// matrix over the unmodified test suite.
     pub fn local(workers: u32) -> CoordinatorConfig {
         CoordinatorConfig {
             nodes: 1,
@@ -182,6 +201,11 @@ impl CoordinatorConfig {
             trace: false,
             injector: Arc::new(FailureInjector::none()),
             memory_budget: DEFAULT_MEMORY_BUDGET,
+            warm_budget: std::env::var("RCOMPSS_WARM_BUDGET")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(DEFAULT_WARM_BUDGET),
+            store: "tiered".into(),
             spill: "lru".into(),
             transfer_threads: 1,
             gc: true,
@@ -229,6 +253,21 @@ impl CoordinatorConfig {
         self
     }
 
+    /// Byte budget of the warm (serialized-blob) tier; 0 disables it and
+    /// restores the pre-tier hot→file demotion and file-backed transfer
+    /// staging byte for byte.
+    pub fn with_warm_budget(mut self, bytes: u64) -> Self {
+        self.warm_budget = bytes;
+        self
+    }
+
+    /// Tier preset for A/B runs: `"tiered"` | `"hot"` | `"file"`.
+    /// Validated at [`Coordinator::start`]; overrides the budgets.
+    pub fn with_store(mut self, preset: &str) -> Self {
+        self.store = preset.into();
+        self
+    }
+
     /// Spill policy of the in-memory plane: "lru" | "largest".
     pub fn with_spill(mut self, policy: &str) -> Self {
         self.spill = policy.into();
@@ -249,7 +288,7 @@ impl CoordinatorConfig {
     }
 }
 
-fn unique_run_id() -> u64 {
+pub(crate) fn unique_run_id() -> u64 {
     use std::sync::atomic::AtomicU64;
     static NEXT: AtomicU64 = AtomicU64::new(1);
     NEXT.fetch_add(1, Ordering::Relaxed)
@@ -270,14 +309,39 @@ pub struct RuntimeStats {
     pub exec_s: f64,
     /// Per task type: (count, total execution seconds).
     pub per_type: HashMap<String, (u64, f64)>,
-    /// In-memory data plane: zero-copy consumptions served by the store.
+    /// Hot tier: zero-copy consumptions served by the store.
     pub store_hits: u64,
-    /// In-memory data plane: consumptions that fell back to a file read.
+    /// Hot tier: consumptions that fell back to a lower tier.
     pub store_misses: u64,
-    /// Values pushed through the codec by memory pressure.
+    /// Values pushed through the codec by memory pressure (hot-tier
+    /// demotions — into the warm tier when it is on, to a spill file
+    /// otherwise).
     pub spills: u64,
-    /// Bytes written by those spills.
+    /// Serialized bytes produced by those demotions.
     pub spill_bytes: u64,
+    /// Warm tier: reloads/transfer stagings served from a cached blob
+    /// (each one is a decode with zero file I/O).
+    pub warm_hits: u64,
+    /// Warm tier: lookups that found no blob.
+    pub warm_misses: u64,
+    /// Warm tier: blobs created (pressure demotions + lazy first-encode
+    /// transfer fills).
+    pub warm_fills: u64,
+    /// Warm tier: blobs flushed to cold spill files by warm-budget
+    /// pressure.
+    pub warm_evictions: u64,
+    /// Warm tier: blob bytes resident at snapshot time. With the GC on
+    /// this drains to ~0 at quiescence alongside `transfer_states` — a
+    /// collected version's blob is reclaimed with its other tiers.
+    pub warm_resident_bytes: u64,
+    /// Codec `encode` invocations by the data plane (demotions, transfer
+    /// fills, spill writes). A memory-resident N-node fan-out transfer
+    /// performs exactly one with the warm tier on.
+    pub store_encodes: u64,
+    /// Cold tier: parameter/spill files read.
+    pub store_file_reads: u64,
+    /// Cold tier: parameter/spill files written.
+    pub store_file_writes: u64,
     /// Version GC: dead `dXvY` versions reclaimed.
     pub gc_collected: u64,
     /// Version GC: recorded bytes of the reclaimed versions.
@@ -345,8 +409,9 @@ pub(crate) struct Shared {
     pub table: Arc<VersionTable>,
     /// Per-node ready queues with stealing and parking.
     pub ready: ShardedReady,
-    /// The in-memory data plane (disabled at budget 0).
-    pub store: DataStore,
+    /// The tiered value store: hot `Arc<RValue>` cache (disabled at
+    /// budget 0), warm encoded-blob cache, cold spill-file accounting.
+    pub store: TieredStore,
     /// Asynchronous cross-node transfer board (movers disabled at
     /// `transfer_threads` 0 or on the file plane). Shared (`Arc`) with the
     /// dispatch fabric, whose placement model reads the per-node in-flight
@@ -440,13 +505,17 @@ pub(crate) fn reap_if_drained(shared: &Shared, key: DataKey) {
     }
 }
 
-/// Free what a collected version held: its store entry and its spill
-/// file. The version table entry stays (marked collected) so diagnostics
-/// and late `wait_on`s get a precise error instead of a hang.
+/// Free what a collected version held across **all three tiers**: the hot
+/// entry, the warm blob, and the published spill file (deleted loudly —
+/// per-tier residency tracking means the path is only present when a file
+/// was actually published, so a failed delete is a reported leak, never a
+/// silently swallowed error). The version table entry stays (marked
+/// collected) so diagnostics and late `wait_on`s get a precise error
+/// instead of a hang.
 fn collect_version(shared: &Shared, act: &CollectAction) {
-    shared.store.remove(act.key);
+    shared.store.discard_resident(act.key);
     if let Some(path) = &act.path {
-        if std::fs::remove_file(path).is_ok() {
+        if shared.store.cold().delete_file(path) {
             shared.gc_files.fetch_add(1, Ordering::Relaxed);
         }
     }
@@ -455,59 +524,6 @@ fn collect_version(shared: &Shared, act: &CollectAction) {
     shared.transfers.purge_version(act.key);
     shared.gc_collected.fetch_add(1, Ordering::Relaxed);
     shared.gc_bytes.fetch_add(act.bytes, Ordering::Relaxed);
-}
-
-/// Atomically publish a spill file for `key`: encode into a uniquely-named
-/// temp file and rename it over the final `dXvY.par` path. Racing spillers
-/// (an eviction and a spill-for-transfer of the same version) then each
-/// publish a complete, identical file — a reader of a published path can
-/// never observe a torn truncate-then-write.
-pub(crate) fn write_spill_file(
-    shared: &Shared,
-    key: DataKey,
-    value: &RValue,
-) -> Result<(u64, PathBuf)> {
-    let final_path = shared.path_for(key);
-    let tmp = shared.workdir.join(format!("{key}.par.{}.tmp", unique_run_id()));
-    shared.codec.write_file(value, &tmp)?;
-    let bytes = std::fs::metadata(&tmp).map(|m| m.len()).unwrap_or(0);
-    std::fs::rename(&tmp, &final_path)
-        .with_context(|| format!("publish spill {}", final_path.display()))?;
-    Ok((bytes, final_path))
-}
-
-/// Serialize spill victims to the workdir and publish their paths. Spill
-/// failures do not fail tasks: the value stays resident (over budget) and
-/// the store keeps it evictable, which degrades memory use, not results.
-pub(crate) fn spill_victims(
-    shared: &Shared,
-    victims: Vec<crate::coordinator::datastore::SpillVictim>,
-) {
-    for v in victims {
-        if v.has_file {
-            // An up-to-date file already exists (the value was reloaded
-            // from one, or spilled for a transfer): eviction is free.
-            shared.store.finish_spill(v.key, false, 0);
-            continue;
-        }
-        match write_spill_file(shared, v.key, &v.value) {
-            Ok((bytes, path)) => {
-                if shared.table.mark_spilled(v.key, bytes, path.clone()) {
-                    shared.store.finish_spill(v.key, true, bytes);
-                } else {
-                    // The GC collected the version while we were encoding
-                    // it: the file is an orphan — delete instead of
-                    // publishing, and drop the (already removed) entry.
-                    let _ = std::fs::remove_file(&path);
-                    shared.store.finish_spill(v.key, false, 0);
-                }
-            }
-            Err(e) => {
-                eprintln!("[rcompss] spill of {} failed ({e:#}); keeping it resident", v.key);
-                shared.store.abort_spill(v.key);
-            }
-        }
-    }
 }
 
 /// The coordinator: one per application run (`compss_start` .. `compss_stop`).
@@ -538,10 +554,21 @@ impl Coordinator {
             .ok_or_else(|| anyhow!("unknown codec '{}'", config.codec))?;
         let spill = SpillPolicy::by_name(&config.spill)
             .ok_or_else(|| anyhow!("unknown spill policy '{}' (lru|largest)", config.spill))?;
+        // The `--store` preset resolves the effective tier budgets for A/B
+        // runs: "tiered" keeps the configured budgets, "hot" switches the
+        // warm tier off, "file" restores the seed-identical file plane.
+        let (memory_budget, warm_budget) = match config.store.as_str() {
+            "tiered" => (config.memory_budget, config.warm_budget),
+            "hot" => (config.memory_budget, 0),
+            "file" => (0, 0),
+            other => bail!(
+                "unknown store preset '{other}' (tiered|hot|file; set via --store or with_store)"
+            ),
+        };
         let table = Arc::new(VersionTable::new());
         // Async transfers exist only on the memory plane: the file plane
         // reads every parameter from its file anyway.
-        let movers_per_node = if config.memory_budget > 0 {
+        let movers_per_node = if memory_budget > 0 {
             config.transfer_threads
         } else {
             0
@@ -571,9 +598,9 @@ impl Coordinator {
                 stats: RuntimeStats::default(),
             }),
             cv_done: Condvar::new(),
-            table,
+            table: Arc::clone(&table),
             ready,
-            store: DataStore::new(config.memory_budget, spill),
+            store: TieredStore::new(memory_budget, spill, warm_budget, table),
             transfers,
             feedback,
             gc_enabled: config.gc,
@@ -725,9 +752,9 @@ impl Coordinator {
                         let mut core = self.shared.core.lock().unwrap();
                         core.registry.new_literal(nbytes, NodeId(0))
                     };
-                    let victims = self.shared.store.put(key, value, false);
+                    let victims = self.shared.store.hot().put(key, value, false);
                     self.shared.table.mark_available_memory(key, NodeId(0), nbytes);
-                    spill_victims(&self.shared, victims);
+                    store::demote_victims(&self.shared, victims);
                     literal_keys[i] = Some(key);
                 } else {
                     let start = self.shared.tracer.now();
@@ -742,6 +769,7 @@ impl Coordinator {
                     let path = self.shared.path_for(key);
                     std::fs::write(&path, &bytes)
                         .with_context(|| format!("write literal {}", path.display()))?;
+                    self.shared.store.cold().note_write();
                     self.shared.table.mark_available(key, NodeId(0), nbytes, path);
                     {
                         let mut core = self.shared.core.lock().unwrap();
@@ -906,6 +934,7 @@ impl Coordinator {
         }
         let path = self.shared.path_for(key);
         let start = self.shared.tracer.now();
+        self.shared.store.cold().note_read();
         let v = self.shared.codec.read_file(&path)?;
         self.shared.tracer.record_at(
             self.master_wid(),
@@ -962,12 +991,20 @@ impl Coordinator {
     }
 
     fn fill_shared_stats(shared: &Shared, stats: &mut RuntimeStats) {
-        stats.store_hits = shared.store.hit_count();
-        stats.store_misses = shared.store.miss_count();
-        stats.spills = shared.store.spill_count();
-        stats.spill_bytes = shared.store.spilled_bytes();
-        stats.sync_transfer_decodes = shared.store.sync_transfer_decode_count();
-        stats.store_resident_bytes = shared.store.resident_bytes();
+        stats.store_hits = shared.store.hot().hit_count();
+        stats.store_misses = shared.store.hot().miss_count();
+        stats.spills = shared.store.hot().spill_count();
+        stats.spill_bytes = shared.store.hot().spilled_bytes();
+        stats.warm_hits = shared.store.warm().hit_count();
+        stats.warm_misses = shared.store.warm().miss_count();
+        stats.warm_fills = shared.store.warm().fill_count();
+        stats.warm_evictions = shared.store.warm().eviction_count();
+        stats.warm_resident_bytes = shared.store.warm().resident_bytes();
+        stats.store_encodes = shared.store.encode_count();
+        stats.store_file_reads = shared.store.cold().file_read_count();
+        stats.store_file_writes = shared.store.cold().file_write_count();
+        stats.sync_transfer_decodes = shared.store.hot().sync_transfer_decode_count();
+        stats.store_resident_bytes = shared.store.hot().resident_bytes();
         stats.dead_version_bytes = shared.table.dead_bytes();
         stats.gc_collected = shared.gc_collected.load(Ordering::Relaxed);
         stats.gc_bytes = shared.gc_bytes.load(Ordering::Relaxed);
@@ -1038,7 +1075,7 @@ mod tests {
             let mut core = coord.shared.core.lock().unwrap();
             core.registry.new_literal(nbytes, NodeId(0))
         };
-        let victims = coord.shared.store.put(key, value, false);
+        let victims = coord.shared.store.hot().put(key, value, false);
         assert!(victims.is_empty(), "budget must fit the seed value");
         coord
             .shared
@@ -1074,7 +1111,7 @@ mod tests {
             executor::acquire_input(&coord.shared, key, NodeId(1), false).unwrap();
         assert!(!decoded, "claim of a staged replica must not decode");
         assert_eq!(v.as_real().unwrap()[0], 1.5);
-        assert_eq!(coord.shared.store.sync_transfer_decode_count(), 0);
+        assert_eq!(coord.shared.store.hot().sync_transfer_decode_count(), 0);
         coord.stop().unwrap();
         Coordinator::cleanup_workdir(&config);
     }
@@ -1101,7 +1138,7 @@ mod tests {
             std::thread::yield_now();
         }
         assert_eq!(t.prefetched() + t.waited(), 1);
-        assert_eq!(coord.shared.store.sync_transfer_decode_count(), 0);
+        assert_eq!(coord.shared.store.hot().sync_transfer_decode_count(), 0);
         coord.stop().unwrap();
         Coordinator::cleanup_workdir(&config);
     }
@@ -1138,7 +1175,7 @@ mod tests {
             executor::acquire_input(&coord.shared, key, NodeId(1), false).unwrap();
         assert!(!decoded, "claim of the restaged replica must not decode");
         assert_eq!(v.as_real().unwrap()[0], 1.5);
-        assert_eq!(coord.shared.store.sync_transfer_decode_count(), 0);
+        assert_eq!(coord.shared.store.hot().sync_transfer_decode_count(), 0);
         coord.stop().unwrap();
         Coordinator::cleanup_workdir(&config);
     }
@@ -1173,6 +1210,68 @@ mod tests {
     }
 
     #[test]
+    fn fanout_transfer_encodes_once_with_zero_file_io() {
+        // Tiered-store acceptance at the transfer plane: a memory-resident
+        // version fanned out to N nodes costs exactly one `codec.encode`
+        // (the lazy warm fill — racing movers park on it) and zero file
+        // reads/writes; the movers ship the blob. Warm budget pinned
+        // explicitly so the CI env matrix (RCOMPSS_WARM_BUDGET=0) cannot
+        // turn the tier off under this test.
+        let config = mem_config(4, 1).with_warm_budget(DEFAULT_WARM_BUDGET);
+        let coord = Coordinator::start(config.clone()).unwrap();
+        assert!(coord.shared.store.warm().enabled());
+        let key = seed_value(&coord, 512);
+        for node in 1..4u32 {
+            coord.shared.transfers.request(key, NodeId(node), 512 * 8);
+        }
+        for node in 1..4u32 {
+            coord
+                .shared
+                .transfers
+                .await_staged(key, NodeId(node), 512 * 8)
+                .expect("warm staging");
+            assert!(coord.shared.table.is_local(key, NodeId(node)));
+        }
+        assert_eq!(coord.shared.store.encode_count(), 1, "one encode per fan-out");
+        assert_eq!(coord.shared.store.cold().file_read_count(), 0);
+        assert_eq!(coord.shared.store.cold().file_write_count(), 0);
+        assert_eq!(coord.shared.store.warm().miss_count(), 1, "first transfer fills");
+        assert_eq!(coord.shared.store.warm().hit_count(), 2, "N-1 replicas hit warm");
+        assert_eq!(coord.shared.store.hot().sync_transfer_decode_count(), 0);
+        // The fill upgraded the byte estimate to the real serialized size.
+        let info = coord.shared.table.info(key).unwrap();
+        assert_eq!(info.bytes, coord.shared.store.warm().resident_bytes());
+        coord.stop().unwrap();
+        Coordinator::cleanup_workdir(&config);
+    }
+
+    #[test]
+    fn warm_budget_zero_stages_through_files_as_before() {
+        // `--warm-budget 0` must reproduce the pre-tier file staging path
+        // byte for byte: the mover publishes a spill file, reads it back,
+        // and the warm tier never sees traffic.
+        let config = mem_config(2, 1).with_warm_budget(0);
+        let coord = Coordinator::start(config.clone()).unwrap();
+        assert!(!coord.shared.store.warm().enabled());
+        let key = seed_value(&coord, 64);
+        coord.shared.transfers.request(key, NodeId(1), 64 * 8);
+        coord
+            .shared
+            .transfers
+            .await_staged(key, NodeId(1), 64 * 8)
+            .expect("file staging");
+        assert!(coord.shared.table.is_local(key, NodeId(1)));
+        assert_eq!(coord.shared.store.cold().file_write_count(), 1, "spill published");
+        assert!(coord.shared.store.cold().file_read_count() >= 1, "staged from the file");
+        assert_eq!(coord.shared.store.encode_count(), 1);
+        assert_eq!(coord.shared.store.warm().fill_count(), 0);
+        assert_eq!(coord.shared.store.warm().hit_count(), 0);
+        assert!(coord.shared.table.path_of(key).is_some(), "file remains published");
+        coord.stop().unwrap();
+        Coordinator::cleanup_workdir(&config);
+    }
+
+    #[test]
     fn transfer_threads_zero_falls_back_to_synchronous_decode() {
         let config = mem_config(2, 1).with_transfer_threads(0);
         let coord = Coordinator::start(config.clone()).unwrap();
@@ -1184,7 +1283,7 @@ mod tests {
             executor::acquire_input(&coord.shared, key, NodeId(1), false).unwrap();
         assert!(decoded, "synchronous fallback decodes on the claim path");
         assert_eq!(v.as_real().unwrap()[0], 1.5);
-        assert_eq!(coord.shared.store.sync_transfer_decode_count(), 1);
+        assert_eq!(coord.shared.store.hot().sync_transfer_decode_count(), 1);
         assert!(coord.shared.table.is_local(key, NodeId(1)));
         coord.stop().unwrap();
         Coordinator::cleanup_workdir(&config);

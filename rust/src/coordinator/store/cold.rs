@@ -1,0 +1,200 @@
+//! The **cold tier**: the spill-file plane, plus its I/O accounting.
+//!
+//! Cold is where bytes go when neither in-memory tier may hold them: the
+//! warm tier is off, its budget overflowed, or the runtime runs the pure
+//! file plane (`--memory-budget 0`, byte-identical to the seed runtime).
+//! The tier has no in-memory index of its own — a version's file path and
+//! serialized size live in the
+//! [`VersionTable`](crate::coordinator::registry::VersionTable) (published
+//! under the owning shard lock, so a reader of a path can never observe a
+//! torn write) — but it *does* own the file I/O counters the acceptance
+//! tests pin: a memory-resident N-node fan-out transfer with the warm tier
+//! on performs **zero** cold reads and writes.
+//!
+//! `ensure_file` is the demotion endpoint and the transfer plane's
+//! fallback: it publishes a spill file from whichever tier holds the value
+//! — warm blobs are written verbatim (the encode already happened), hot
+//! values go through the codec.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::registry::{DataKey, VersionTable};
+use crate::coordinator::runtime::Shared;
+use crate::coordinator::store::{Tier, ValueStore};
+use crate::value::RValue;
+
+/// Cold-tier handle: file I/O counters plus a view of the version table
+/// (which indexes the published files). All methods take `&self`.
+pub struct ColdStore {
+    table: Arc<VersionTable>,
+    file_reads: AtomicU64,
+    file_writes: AtomicU64,
+}
+
+impl ColdStore {
+    pub fn new(table: Arc<VersionTable>) -> ColdStore {
+        ColdStore {
+            table,
+            file_reads: AtomicU64::new(0),
+            file_writes: AtomicU64::new(0),
+        }
+    }
+
+    /// Count one parameter/spill-file read.
+    pub(crate) fn note_read(&self) {
+        self.file_reads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one parameter/spill-file write.
+    pub(crate) fn note_write(&self) {
+        self.file_writes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Parameter/spill files read since startup.
+    pub fn file_read_count(&self) -> u64 {
+        self.file_reads.load(Ordering::Relaxed)
+    }
+
+    /// Parameter/spill files written since startup.
+    pub fn file_write_count(&self) -> u64 {
+        self.file_writes.load(Ordering::Relaxed)
+    }
+
+    /// Delete a published file (version GC). Per-tier residency tracking
+    /// means the GC only asks for files that were actually published, so a
+    /// failure here is a real leak and is reported loudly instead of being
+    /// silently swallowed (the pre-tier runtime ignored the error).
+    pub(crate) fn delete_file(&self, path: &Path) -> bool {
+        match std::fs::remove_file(path) {
+            Ok(()) => true,
+            Err(e) => {
+                eprintln!(
+                    "[rcompss] gc: published spill file {} could not be deleted: {e}",
+                    path.display()
+                );
+                false
+            }
+        }
+    }
+}
+
+impl ValueStore for ColdStore {
+    fn tier(&self) -> Tier {
+        Tier::Cold
+    }
+
+    /// The filesystem is always there; "off" is not a cold-tier state.
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        self.table.file_bytes()
+    }
+
+    fn entry_count(&self) -> usize {
+        self.table.file_count()
+    }
+
+    fn contains(&self, key: DataKey) -> bool {
+        self.table.path_of(key).is_some()
+    }
+
+    /// Trait-level discard: atomically take the version's published path
+    /// out of the table (no reader can reach the file through a stale
+    /// entry afterwards) and delete the file. The runtime GC does *not*
+    /// route through this — it takes the path through `CollectAction` at
+    /// collect time and calls [`ColdStore::delete_file`] directly.
+    fn discard(&self, key: DataKey) -> Option<u64> {
+        let (path, bytes) = self.table.take_path(key)?;
+        if self.delete_file(&path) {
+            Some(bytes)
+        } else {
+            None
+        }
+    }
+}
+
+/// Atomically publish a spill file for `key` through the codec: encode
+/// into a uniquely-named temp file and rename it over the final `dXvY.par`
+/// path. Racing spillers (an eviction and a spill-for-transfer of the
+/// same version) then each publish a complete, identical file — a reader
+/// of a published path can never observe a torn truncate-then-write.
+pub(crate) fn write_spill_file(
+    shared: &Shared,
+    key: DataKey,
+    value: &RValue,
+) -> Result<(u64, PathBuf)> {
+    let final_path = shared.path_for(key);
+    let tmp = shared
+        .workdir
+        .join(format!("{key}.par.{}.tmp", crate::coordinator::runtime::unique_run_id()));
+    shared.codec.write_file(value, &tmp)?;
+    shared.store.note_encode();
+    shared.store.cold().note_write();
+    let bytes = std::fs::metadata(&tmp).map(|m| m.len()).unwrap_or(0);
+    std::fs::rename(&tmp, &final_path)
+        .with_context(|| format!("publish spill {}", final_path.display()))?;
+    Ok((bytes, final_path))
+}
+
+/// Atomically publish a spill file from an already-encoded warm blob: the
+/// bytes go down verbatim — the warm tier paid the codec, the cold tier
+/// only pays the I/O. Same temp-and-rename protocol as
+/// [`write_spill_file`].
+pub(crate) fn publish_blob_file(
+    shared: &Shared,
+    key: DataKey,
+    blob: &[u8],
+) -> Result<(u64, PathBuf)> {
+    let final_path = shared.path_for(key);
+    let tmp = shared
+        .workdir
+        .join(format!("{key}.par.{}.tmp", crate::coordinator::runtime::unique_run_id()));
+    std::fs::write(&tmp, blob).with_context(|| format!("write blob {}", tmp.display()))?;
+    shared.store.cold().note_write();
+    std::fs::rename(&tmp, &final_path)
+        .with_context(|| format!("publish spill {}", final_path.display()))?;
+    Ok((blob.len() as u64, final_path))
+}
+
+/// Make sure a serialized file exists for `key` and return its path: the
+/// cold-tier fallback of the transfer plane (warm tier off) and the
+/// synchronous claim-path reload. The file is published from the cheapest
+/// tier that holds the value — a warm blob is written verbatim, a hot
+/// value runs the codec.
+pub(crate) fn ensure_file(shared: &Shared, key: DataKey) -> Result<PathBuf> {
+    loop {
+        if let Some(p) = shared.table.path_of(key) {
+            return Ok(p);
+        }
+        if let Some(blob) = shared.store.warm().get(key) {
+            let (bytes, path) = publish_blob_file(shared, key, &blob)?;
+            if !shared.table.mark_spilled(key, bytes, path.clone()) {
+                let _ = std::fs::remove_file(&path);
+                anyhow::bail!("datum {key} was reclaimed by the version GC");
+            }
+            shared.store.hot().note_file(key);
+            shared.store.warm().note_file(key);
+            return Ok(path);
+        }
+        if let Some(v) = shared.store.hot().get(key) {
+            let (bytes, path) = write_spill_file(shared, key, &v)?;
+            if !shared.table.mark_spilled(key, bytes, path.clone()) {
+                let _ = std::fs::remove_file(&path);
+                anyhow::bail!("datum {key} was reclaimed by the version GC");
+            }
+            shared.store.hot().note_file(key);
+            return Ok(path);
+        }
+        if shared.table.is_collected(key) {
+            anyhow::bail!("datum {key} was reclaimed by the version GC");
+        }
+        // Mid-demotion: the spill path is about to be published.
+        std::thread::yield_now();
+    }
+}

@@ -1,4 +1,4 @@
-//! The in-memory data plane: a byte-budgeted cache of produced values.
+//! The **hot tier**: a byte-budgeted cache of decoded `Arc<RValue>`s.
 //!
 //! COMPSs (and the seed version of this runtime) passes *every* task
 //! parameter through a serialized file, even when producer and consumer are
@@ -8,37 +8,40 @@
 //! round-trip *is* the overhead. The [`DataStore`] removes it: produced
 //! values are kept as `Arc<RValue>` keyed by their `dXvY` [`DataKey`], so a
 //! node-local consumer receives a zero-copy handle and the configured codec
-//! runs only at *spill boundaries*:
+//! runs only at *tier boundaries*:
 //!
 //! * **memory pressure** — the store holds at most `budget` bytes; overflow
 //!   evicts victims (LRU or largest-first per [`SpillPolicy`]) which are
-//!   serialized to the workdir exactly like the file plane would have done;
+//!   demoted down the tier ladder by `super::demote_victims`: encoded
+//!   into the warm tier when it is on, serialized to a cold spill file
+//!   otherwise (exactly what the pre-tier runtime did);
 //! * **cross-node transfer** — a consumer on another (emulated) node forces
 //!   the value through the codec, keeping multi-node runs honest;
-//! * **explicit fetch** — `wait_on` of an evicted value reloads it from its
-//!   spill file.
+//! * **explicit fetch** — `wait_on` of an evicted value reloads it from the
+//!   warm blob (no disk) or its spill file.
 //!
-//! A budget of 0 disables the store entirely, restoring the seed's
-//! byte-identical file-based behavior (every codec round-trip property test
-//! runs against that path unchanged).
+//! A budget of 0 disables the store entirely (the warm tier follows),
+//! restoring the seed's byte-identical file-based behavior (every codec
+//! round-trip property test runs against that path unchanged).
 //!
 //! ## Concurrency protocol
 //!
 //! The store is a sharded-lock-free *consumer* but a mutexed *container*:
 //! `get` clones an `Arc` under a short lock; eviction is two-phase so a
 //! value is always reachable. `put` selects victims and marks them
-//! `spilling` (still readable), the caller serializes them to disk *outside*
-//! the lock, publishes the file path in the
-//! [`VersionTable`](super::registry::VersionTable), and only then calls
-//! [`DataStore::finish_spill`] to drop the cached copy. A concurrent reader
-//! therefore always finds the value in the store or a published path —
-//! never neither.
+//! `spilling` (still readable), the caller runs the codec *outside* the
+//! lock, publishes the warm blob or the file path in the
+//! [`VersionTable`](crate::coordinator::registry::VersionTable), and only
+//! then calls [`DataStore::finish_spill`] to drop the cached copy. A
+//! concurrent reader therefore always finds the value in a tier or at a
+//! published path — never nowhere.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::registry::DataKey;
+use crate::coordinator::store::{Tier, ValueStore};
 use crate::value::RValue;
 
 /// Which victim the store picks when over budget.
@@ -68,8 +71,9 @@ impl SpillPolicy {
     }
 }
 
-/// A value selected for spilling: still readable in the store until the
-/// caller publishes its file and calls [`DataStore::finish_spill`].
+/// A value selected for demotion: still readable in the store until the
+/// caller lands its bytes in a lower tier and calls
+/// [`DataStore::finish_spill`].
 pub struct SpillVictim {
     pub key: DataKey,
     pub value: Arc<RValue>,
@@ -96,7 +100,7 @@ struct Inner {
     resident: u64,
 }
 
-/// The in-memory object store. All methods take `&self`; a budget of 0
+/// The hot in-memory object store. All methods take `&self`; a budget of 0
 /// makes every operation a cheap no-op (file plane).
 pub struct DataStore {
     budget: u64,
@@ -142,14 +146,16 @@ impl DataStore {
         self.budget
     }
 
-    /// Insert a produced value and return any victims that must be spilled
+    /// Insert a produced value and return any victims that must be demoted
     /// to stay within budget (possibly including the value just inserted,
-    /// when it alone exceeds the budget). The caller must serialize each
-    /// victim, publish its path, then call [`DataStore::finish_spill`].
+    /// when it alone exceeds the budget). The caller must land each victim
+    /// in a lower tier (see `super::demote_victims`), then call
+    /// [`DataStore::finish_spill`].
     ///
-    /// `has_file` marks values reloaded from an existing spill file, whose
-    /// eviction is free.
-    #[must_use = "victims must be spilled and finish_spill()ed"]
+    /// `has_file` marks values whose serialized file already exists (a
+    /// reload, or a replica staged from a version that also has a cold
+    /// file), whose eviction is free.
+    #[must_use = "victims must be demoted and finish_spill()ed"]
     pub fn put(&self, key: DataKey, value: Arc<RValue>, has_file: bool) -> Vec<SpillVictim> {
         if !self.enabled() {
             return Vec::new();
@@ -231,27 +237,29 @@ impl DataStore {
         self.enabled() && self.inner.lock().unwrap().map.contains_key(&key)
     }
 
-    /// Drop a spilled entry once its file path is published. Counts the
-    /// spill (unless the file already existed, i.e. a free eviction). If a
-    /// concurrent `put` re-inserted a fresh (non-spilling) entry for the
-    /// same version in the meantime — a cross-node reload racing the
-    /// eviction — that entry is left in place: it is separately accounted
-    /// in `resident` and removing it would both leak the counter and drop
-    /// a live cache line.
-    pub fn finish_spill(&self, key: DataKey, wrote_file: bool, file_bytes: u64) {
+    /// Drop a demoted entry once its bytes landed in a lower tier (warm
+    /// blob inserted or file path published). `encoded` marks demotions
+    /// that actually ran the codec — counted as a spill of
+    /// `encoded_bytes` serialized bytes — as opposed to free evictions
+    /// whose bytes were already down-tier. If a concurrent `put`
+    /// re-inserted a fresh (non-spilling) entry for the same version in
+    /// the meantime — a cross-node reload racing the eviction — that entry
+    /// is left in place: it is separately accounted in `resident` and
+    /// removing it would both leak the counter and drop a live cache line.
+    pub fn finish_spill(&self, key: DataKey, encoded: bool, encoded_bytes: u64) {
         {
             let mut inner = self.inner.lock().unwrap();
             if inner.map.get(&key).map(|e| e.spilling).unwrap_or(false) {
                 inner.map.remove(&key);
             }
         }
-        if wrote_file {
+        if encoded {
             self.spills.fetch_add(1, Ordering::Relaxed);
-            self.spill_bytes.fetch_add(file_bytes, Ordering::Relaxed);
+            self.spill_bytes.fetch_add(encoded_bytes, Ordering::Relaxed);
         }
     }
 
-    /// Undo a victim selection after a failed spill write, so the value
+    /// Undo a victim selection after a failed demotion, so the value
     /// stays reachable and evictable.
     pub fn abort_spill(&self, key: DataKey) {
         let mut inner = self.inner.lock().unwrap();
@@ -267,7 +275,7 @@ impl DataStore {
     /// Drop a version the GC reclaimed: the entry disappears immediately
     /// (no two-phase dance — the caller guarantees no consumer reference
     /// remains). Returns the payload bytes freed. An entry mid-spill is
-    /// removed too; its in-flight spill writer finishes harmlessly against
+    /// removed too; its in-flight demotion finishes harmlessly against
     /// a missing entry.
     pub fn remove(&self, key: DataKey) -> Option<u64> {
         if !self.enabled() {
@@ -333,6 +341,32 @@ impl DataStore {
 
     pub fn spilled_bytes(&self) -> u64 {
         self.spill_bytes.load(Ordering::Relaxed)
+    }
+}
+
+impl ValueStore for DataStore {
+    fn tier(&self) -> Tier {
+        Tier::Hot
+    }
+
+    fn enabled(&self) -> bool {
+        DataStore::enabled(self)
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        DataStore::resident_bytes(self)
+    }
+
+    fn entry_count(&self) -> usize {
+        self.len()
+    }
+
+    fn contains(&self, key: DataKey) -> bool {
+        DataStore::contains(self, key)
+    }
+
+    fn discard(&self, key: DataKey) -> Option<u64> {
+        self.remove(key)
     }
 }
 
@@ -506,7 +540,7 @@ mod tests {
                     if (u64::from(v) % 4) == t {
                         let value = Arc::new(RValue::Real(vec![f64::from(v); 32]));
                         for victim in s.put(key(data, v), value, false) {
-                            // Test stand-in for the runtime's codec spill.
+                            // Test stand-in for the runtime's codec demotion.
                             s.finish_spill(victim.key, true, victim.value.byte_size() as u64);
                         }
                     }

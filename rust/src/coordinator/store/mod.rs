@@ -1,0 +1,317 @@
+//! The tiered value store: hot / warm / cold backends behind one facade.
+//!
+//! The paper keeps task data in memory and crosses the serialization
+//! boundary only when a value actually leaves a node; Eddelbuettel's
+//! parallel-R review (PAPERS.md) identifies that boundary — R-object
+//! serialization — as the dominant fixed cost of every R parallel
+//! backend. This module organizes the data plane around it. Every `dXvY`
+//! version lives in (at most) three representations, one per tier:
+//!
+//! | tier | backend | representation | codec cost to reach |
+//! |------|---------|----------------|---------------------|
+//! | **hot** | [`hot::DataStore`] | decoded `Arc<RValue>` | none (zero-copy) |
+//! | **warm** | [`warm::WarmStore`] | encoded `Arc<[u8]>` blob | one decode |
+//! | **cold** | [`cold::ColdStore`] + workdir | spill file | one decode + one file read |
+//!
+//! Demotion flows **hot → warm → cold** (`demote_victims`): memory
+//! pressure encodes the victim into the warm tier (one codec call, no
+//! disk), and only warm-budget pressure flushes blobs to spill files —
+//! written verbatim, the codec never runs twice. Promotion climbs back
+//! without touching a lower tier than needed: a warm hit decodes in
+//! memory, only a cold miss reads a file. The transfer plane ships warm
+//! blobs directly (`stage_blob`): an N-node fan-out of a memory-resident
+//! version costs exactly one encode and zero file I/O, where the pre-tier
+//! runtime paid one encode plus N file write/read round-trips
+//! (`stage_replica → ensure_file → codec.read_file`). The
+//! `cold::ensure_file` path survives only as the cold-tier fallback.
+//!
+//! Each backend implements [`ValueStore`]; the [`TieredStore`] facade owns
+//! one of each plus the cross-tier counters (`encode_count` is the
+//! headline: the fan-out acceptance test pins it to 1). The version GC
+//! drains **all three tiers** when it collects a version — see
+//! `runtime::collect_version`, which iterates the resident tiers and
+//! deletes the published file, loudly, only when one actually exists
+//! (per-tier residency is tracked, so a missing file is a reported leak,
+//! not a swallowed error).
+//!
+//! Configuration: `--memory-budget` sizes hot, `--warm-budget` sizes warm
+//! (0 = off: pre-tier behavior byte for byte), `--store tiered|hot|file`
+//! picks a preset for A/B runs. With the memory plane off the warm tier is
+//! forced off too — a serialized-bytes cache would shadow the
+//! seed-identical file plane the codec tests pin.
+
+pub mod cold;
+pub mod hot;
+pub mod warm;
+
+pub use cold::ColdStore;
+pub use hot::{DataStore, SpillPolicy, SpillVictim};
+pub use warm::{WarmStore, WarmVictim};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::Context;
+
+use crate::coordinator::registry::{DataKey, VersionTable};
+use crate::coordinator::runtime::Shared;
+
+/// The three storage tiers, cheapest-to-reach first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Decoded values, zero-copy consumption.
+    Hot,
+    /// Encoded blobs, one decode away.
+    Warm,
+    /// Spill files, a file read plus a decode away.
+    Cold,
+}
+
+impl Tier {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tier::Hot => "hot",
+            Tier::Warm => "warm",
+            Tier::Cold => "cold",
+        }
+    }
+}
+
+/// One backend tier of the tiered value store. The facade
+/// ([`TieredStore`]) owns one implementation per tier; the version GC and
+/// the stats surface iterate [`TieredStore::tiers`], so a new backend can
+/// be forgotten by neither.
+pub trait ValueStore: Send + Sync {
+    /// Which tier this backend implements.
+    fn tier(&self) -> Tier;
+    /// Is the tier active under the current configuration?
+    fn enabled(&self) -> bool;
+    /// Payload bytes currently resident in this tier.
+    fn resident_bytes(&self) -> u64;
+    /// Number of versions with an entry in this tier.
+    fn entry_count(&self) -> usize;
+    /// Does this tier hold `key`?
+    fn contains(&self, key: DataKey) -> bool;
+    /// Drop `key`'s entry from this tier (version GC / explicit removal).
+    /// Returns the payload bytes freed, `None` when the tier held nothing.
+    fn discard(&self, key: DataKey) -> Option<u64>;
+}
+
+/// The facade over the three tiers. The runtime holds exactly one; hot-
+/// and warm-tier operations go through the [`TieredStore::hot`] /
+/// [`TieredStore::warm`] accessors (tier residency stays explicit at the
+/// call sites), cross-tier flows through the free functions of this
+/// module, and the cross-tier counters live here.
+pub struct TieredStore {
+    hot: DataStore,
+    warm: WarmStore,
+    cold: ColdStore,
+    /// Codec `encode` invocations by the data plane (demotions, transfer
+    /// fills, spill-file writes). The fan-out acceptance test pins this to
+    /// exactly 1 for an N-node transfer of a memory-resident version.
+    encodes: AtomicU64,
+}
+
+impl TieredStore {
+    /// Build the tier stack. A `memory_budget` of 0 (file plane) forces
+    /// the warm tier off as well: with every parameter on disk, a
+    /// serialized-bytes cache would shadow the seed-identical behavior the
+    /// codec tests pin.
+    pub fn new(
+        memory_budget: u64,
+        policy: SpillPolicy,
+        warm_budget: u64,
+        table: Arc<VersionTable>,
+    ) -> TieredStore {
+        let warm_budget = if memory_budget == 0 { 0 } else { warm_budget };
+        TieredStore {
+            hot: DataStore::new(memory_budget, policy),
+            warm: WarmStore::new(warm_budget),
+            cold: ColdStore::new(table),
+            encodes: AtomicU64::new(0),
+        }
+    }
+
+    pub fn hot(&self) -> &DataStore {
+        &self.hot
+    }
+
+    pub fn warm(&self) -> &WarmStore {
+        &self.warm
+    }
+
+    pub fn cold(&self) -> &ColdStore {
+        &self.cold
+    }
+
+    /// Every tier, hottest first — the iteration surface for the GC drain
+    /// and the stats snapshot.
+    pub fn tiers(&self) -> [&dyn ValueStore; 3] {
+        [&self.hot, &self.warm, &self.cold]
+    }
+
+    /// Memory plane on? (Hot-tier budget > 0 — the facade-level switch the
+    /// claim/publish paths branch on.)
+    pub fn enabled(&self) -> bool {
+        self.hot.enabled()
+    }
+
+    /// Count one codec `encode` run by the data plane.
+    pub(crate) fn note_encode(&self) {
+        self.encodes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Codec `encode` invocations by the data plane.
+    pub fn encode_count(&self) -> u64 {
+        self.encodes.load(Ordering::Relaxed)
+    }
+
+    /// GC: drop a collected version from the resident tiers (hot + warm),
+    /// through the [`ValueStore`] trait so a future backend cannot be
+    /// skipped. The cold file is handled by the caller: the collect path
+    /// already took the version's file path out of the table (see
+    /// `CollectAction`), so the cold tier's own `discard` would find
+    /// nothing — deleting through it here would be dead weight, not a
+    /// second delete.
+    pub(crate) fn discard_resident(&self, key: DataKey) {
+        for tier in self.tiers() {
+            if tier.tier() != Tier::Cold {
+                tier.discard(key);
+            }
+        }
+    }
+}
+
+/// Demote hot-tier spill victims down the tier ladder: **hot → warm** when
+/// the warm tier is on (one encode, no disk), **hot → cold** otherwise
+/// (the pre-tier spill file, byte-identical). A victim whose bytes already
+/// sit in a lower tier (`has_file`, or a live warm blob) drops for free.
+/// Demotion failures never fail tasks: the value stays resident (over
+/// budget) and the store keeps it evictable, which degrades memory use,
+/// not results.
+pub(crate) fn demote_victims(shared: &Shared, victims: Vec<SpillVictim>) {
+    for v in victims {
+        if v.has_file || shared.store.warm().contains(v.key) {
+            // An up-to-date file or blob already holds the bytes (the
+            // value was promoted from one, or spilled for a transfer):
+            // eviction is free.
+            shared.store.hot().finish_spill(v.key, false, 0);
+            continue;
+        }
+        if shared.store.warm().enabled() {
+            match shared.codec.encode(&v.value) {
+                Ok(bytes) => {
+                    shared.store.note_encode();
+                    let nbytes = bytes.len() as u64;
+                    let blob: Arc<[u8]> = bytes.into();
+                    // Real serialized size sharpens every later byte
+                    // estimate (transfer requests, cost/adaptive routing).
+                    shared.table.update_bytes(v.key, nbytes);
+                    let evicted = shared.store.warm().put(v.key, blob, false);
+                    write_warm_victims(shared, evicted);
+                    if shared.table.is_collected(v.key) {
+                        // The GC collected the version mid-encode:
+                        // whichever of the two removals runs last clears
+                        // the blob.
+                        shared.store.warm().remove(v.key);
+                    }
+                    shared.store.hot().finish_spill(v.key, true, nbytes);
+                }
+                Err(e) => {
+                    eprintln!(
+                        "[rcompss] warm demotion of {} failed ({e:#}); keeping it resident",
+                        v.key
+                    );
+                    shared.store.hot().abort_spill(v.key);
+                }
+            }
+            continue;
+        }
+        match cold::write_spill_file(shared, v.key, &v.value) {
+            Ok((bytes, path)) => {
+                if shared.table.mark_spilled(v.key, bytes, path.clone()) {
+                    shared.store.hot().finish_spill(v.key, true, bytes);
+                } else {
+                    // The GC collected the version while we were encoding
+                    // it: the file is an orphan — delete instead of
+                    // publishing, and drop the (already removed) entry.
+                    let _ = std::fs::remove_file(&path);
+                    shared.store.hot().finish_spill(v.key, false, 0);
+                }
+            }
+            Err(e) => {
+                eprintln!("[rcompss] spill of {} failed ({e:#}); keeping it resident", v.key);
+                shared.store.hot().abort_spill(v.key);
+            }
+        }
+    }
+}
+
+/// Flush warm-tier eviction victims to the cold tier: the blob bytes go to
+/// the spill file verbatim (the warm tier already paid the encode), the
+/// path is published, and the two-phase eviction completes.
+pub(crate) fn write_warm_victims(shared: &Shared, victims: Vec<WarmVictim>) {
+    for v in victims {
+        if v.has_file {
+            shared.store.warm().finish_evict(v.key, false);
+            continue;
+        }
+        match cold::publish_blob_file(shared, v.key, &v.blob) {
+            Ok((bytes, path)) => {
+                if shared.table.mark_spilled(v.key, bytes, path.clone()) {
+                    shared.store.hot().note_file(v.key);
+                    shared.store.warm().finish_evict(v.key, true);
+                } else {
+                    let _ = std::fs::remove_file(&path);
+                    shared.store.warm().finish_evict(v.key, false);
+                }
+            }
+            Err(e) => {
+                eprintln!(
+                    "[rcompss] warm eviction of {} failed ({e:#}); keeping the blob resident",
+                    v.key
+                );
+                shared.store.warm().abort_evict(v.key);
+            }
+        }
+    }
+}
+
+/// Get-or-build the serialized blob the transfer movers ship: a warm hit
+/// reuses the cached encode; a miss encodes the hot value — or slurps an
+/// existing spill file, one raw read for the whole fan-out — exactly once
+/// per version (racing movers park on the fill). `Ok(None)` means the
+/// warm tier is off or the bytes were transiently unreachable; the caller
+/// falls back to [`cold::ensure_file`].
+pub(crate) fn stage_blob(shared: &Shared, key: DataKey) -> anyhow::Result<Option<Arc<[u8]>>> {
+    if !shared.store.warm().enabled() {
+        return Ok(None);
+    }
+    let (blob, victims) = shared.store.warm().get_or_fill(key, || {
+        if let Some(v) = shared.store.hot().get(key) {
+            let bytes = shared.codec.encode(&v)?;
+            shared.store.note_encode();
+            // Real serialized size sharpens every later byte estimate
+            // (transfer requests, cost/adaptive routing).
+            shared.table.update_bytes(key, bytes.len() as u64);
+            return Ok(Some((bytes.into(), false)));
+        }
+        if let Some(path) = shared.table.path_of(key) {
+            // Cold-resident: one raw file read fills the blob (marked
+            // `has_file`, so even an immediate eviction never rewrites the
+            // very file it came from); the remaining N-1 fan-out transfers
+            // hit warm.
+            let bytes = std::fs::read(&path)
+                .with_context(|| format!("read spill {}", path.display()))?;
+            shared.store.cold().note_read();
+            return Ok(Some((bytes.into(), true)));
+        }
+        Ok(None)
+    })?;
+    write_warm_victims(shared, victims);
+    if blob.is_some() && shared.table.is_collected(key) {
+        // A fill racing the GC: whichever removal runs last clears it.
+        shared.store.warm().remove(key);
+    }
+    Ok(blob)
+}

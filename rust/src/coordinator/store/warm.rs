@@ -1,0 +1,538 @@
+//! The **warm tier**: a byte-budgeted cache of *serialized* value blobs.
+//!
+//! Eddelbuettel's review of parallel R (PAPERS.md) identifies R-object
+//! serialization as the dominant fixed cost of every R parallel backend;
+//! the RCOMPSs paper's answer is to cross the serialization boundary only
+//! when a value actually leaves a node. The warm tier takes that one step
+//! further: once a value *is* encoded — by memory pressure demoting it out
+//! of the hot tier, or by the first cross-node transfer — the encoded
+//! bytes are worth keeping. A [`WarmStore`] entry is an `Arc<[u8]>` blob
+//! keyed by the `dXvY` [`DataKey`]:
+//!
+//! * **demotion** (hot → warm) parks the encoded bytes here instead of on
+//!   disk, so a later reload is a pure in-memory decode — zero file I/O;
+//! * **transfer staging** ships the blob directly: an N-node fan-out of a
+//!   memory-resident version costs exactly **one** encode (the fill) and
+//!   N−1 warm hits, where the file-backed path paid one encode plus N file
+//!   write/read round-trips;
+//! * **eviction** (warm → cold) writes the blob bytes verbatim to the
+//!   spill file — the codec never runs again on the way down.
+//!
+//! Entries are filled lazily by the first encode ([`WarmStore::get_or_fill`]
+//! runs the caller's encode exactly once per version; racing movers park on
+//! the fill) and evicted LRU-first under the `--warm-budget` byte budget.
+//! A budget of 0 disables the tier: every path degrades to the pre-tier
+//! hot→file behavior, byte for byte.
+//!
+//! The two-phase eviction protocol mirrors the hot tier's: `put` marks
+//! victims `evicting` (still readable), the caller publishes their file
+//! path, and only [`WarmStore::finish_evict`] drops the blob — a reader
+//! always finds the bytes in a tier or at a published path.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::coordinator::registry::DataKey;
+use crate::coordinator::store::{Tier, ValueStore};
+
+/// A blob selected for eviction to the cold tier: still readable in the
+/// warm store until the caller publishes its file and calls
+/// [`WarmStore::finish_evict`].
+pub struct WarmVictim {
+    pub key: DataKey,
+    pub blob: Arc<[u8]>,
+    /// An up-to-date spill file already exists (the blob was slurped from
+    /// one, or an earlier eviction published it): dropping the entry is
+    /// free — no file write needed.
+    pub has_file: bool,
+}
+
+struct Entry {
+    blob: Arc<[u8]>,
+    last_used: u64,
+    /// Selected as an eviction victim; excluded from further selection and
+    /// from the resident-byte total, but still served by `get`.
+    evicting: bool,
+    /// An up-to-date spill file for this version already exists on disk.
+    has_file: bool,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<DataKey, Entry>,
+    /// Bytes held by entries not currently being evicted.
+    resident: u64,
+    /// Versions whose first blob is being encoded by a caller of
+    /// [`WarmStore::get_or_fill`]; racing callers park on `cv_fill` so a
+    /// fan-out transfer encodes each version exactly once.
+    filling: HashSet<DataKey>,
+}
+
+/// The warm serialized-bytes store. All methods take `&self`; a budget of
+/// 0 makes every operation a cheap no-op (the tier is off).
+pub struct WarmStore {
+    budget: u64,
+    tick: AtomicU64,
+    inner: Mutex<Inner>,
+    /// Fill waiters park here (see [`WarmStore::get_or_fill`]).
+    cv_fill: Condvar,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    fills: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl WarmStore {
+    pub fn new(budget: u64) -> WarmStore {
+        WarmStore {
+            budget,
+            tick: AtomicU64::new(0),
+            inner: Mutex::new(Inner::default()),
+            cv_fill: Condvar::new(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            fills: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Is the warm tier active?
+    pub fn enabled(&self) -> bool {
+        self.budget > 0
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Zero-copy blob lookup; bumps recency and the hit/miss counters.
+    pub fn get(&self, key: DataKey) -> Option<Arc<[u8]>> {
+        if !self.enabled() {
+            return None;
+        }
+        let now = self.tick.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        match inner.map.get_mut(&key) {
+            Some(e) => {
+                e.last_used = now;
+                let b = Arc::clone(&e.blob);
+                drop(inner);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(b)
+            }
+            None => {
+                drop(inner);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Peek without touching recency or counters (tests, demotion checks).
+    pub fn contains(&self, key: DataKey) -> bool {
+        self.enabled() && self.inner.lock().unwrap().map.contains_key(&key)
+    }
+
+    /// Insert an encoded blob (a hot-tier demotion) and return any victims
+    /// that must be flushed to the cold tier to stay within budget. The
+    /// caller must write each victim's file, publish its path, then call
+    /// [`WarmStore::finish_evict`].
+    #[must_use = "victims must be flushed to cold and finish_evict()ed"]
+    pub fn put(&self, key: DataKey, blob: Arc<[u8]>, has_file: bool) -> Vec<WarmVictim> {
+        if !self.enabled() {
+            return Vec::new();
+        }
+        let now = self.tick.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        self.insert_locked(&mut inner, key, blob, has_file, now)
+    }
+
+    /// Shared insert + victim selection (lock held).
+    fn insert_locked(
+        &self,
+        inner: &mut Inner,
+        key: DataKey,
+        blob: Arc<[u8]>,
+        has_file: bool,
+        now: u64,
+    ) -> Vec<WarmVictim> {
+        let bytes = blob.len() as u64;
+        let entry = Entry {
+            blob,
+            last_used: now,
+            evicting: false,
+            has_file,
+        };
+        if let Some(old) = inner.map.insert(key, entry) {
+            // Re-insert of the same version: keep the byte accounting
+            // consistent (mirrors the hot tier).
+            if !old.evicting {
+                inner.resident = inner.resident.saturating_sub(old.blob.len() as u64);
+            }
+        }
+        inner.resident += bytes;
+        self.fills.fetch_add(1, Ordering::Relaxed);
+
+        let mut victims = Vec::new();
+        while inner.resident > self.budget {
+            let pick = inner
+                .map
+                .iter()
+                .filter(|(_, e)| !e.evicting)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k);
+            let Some(k) = pick else { break };
+            let e = inner.map.get_mut(&k).expect("victim entry");
+            e.evicting = true;
+            inner.resident = inner.resident.saturating_sub(e.blob.len() as u64);
+            victims.push(WarmVictim {
+                key: k,
+                blob: Arc::clone(&e.blob),
+                has_file: e.has_file,
+            });
+        }
+        victims
+    }
+
+    /// Look the blob up, or build it exactly once: when `key` has no entry
+    /// and nobody is filling it, `make` runs (outside the store lock) and
+    /// its result is inserted — the returned `has_file` flag marks blobs
+    /// slurped from an existing spill file, whose eviction is free (an
+    /// oversized fill must not rewrite the very file it was read from).
+    /// Racing callers for the same key park until the fill completes and
+    /// then take the hit path. `make` returning `Ok(None)` means the bytes
+    /// are not reachable without the cold tier — nothing is inserted and
+    /// every parked caller retries for itself.
+    ///
+    /// Returns the blob (if any) plus eviction victims the caller must
+    /// flush to the cold tier (see [`WarmStore::put`]).
+    pub fn get_or_fill(
+        &self,
+        key: DataKey,
+        make: impl FnOnce() -> anyhow::Result<Option<(Arc<[u8]>, bool)>>,
+    ) -> anyhow::Result<(Option<Arc<[u8]>>, Vec<WarmVictim>)> {
+        if !self.enabled() {
+            return Ok((None, Vec::new()));
+        }
+        {
+            let mut inner = self.inner.lock().unwrap();
+            loop {
+                if inner.map.contains_key(&key) {
+                    let now = self.tick.fetch_add(1, Ordering::Relaxed);
+                    let e = inner.map.get_mut(&key).expect("entry just seen");
+                    e.last_used = now;
+                    let b = Arc::clone(&e.blob);
+                    drop(inner);
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok((Some(b), Vec::new()));
+                }
+                if !inner.filling.contains(&key) {
+                    break;
+                }
+                inner = self.cv_fill.wait(inner).unwrap();
+            }
+            inner.filling.insert(key);
+        }
+        // The encode runs outside the lock; racing callers of this key are
+        // parked above until `filling` clears.
+        let made = make();
+        let mut inner = self.inner.lock().unwrap();
+        inner.filling.remove(&key);
+        self.cv_fill.notify_all();
+        match made {
+            Ok(Some((blob, has_file))) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                let now = self.tick.fetch_add(1, Ordering::Relaxed);
+                let victims =
+                    self.insert_locked(&mut inner, key, Arc::clone(&blob), has_file, now);
+                Ok((Some(blob), victims))
+            }
+            Ok(None) => Ok((None, Vec::new())),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Drop an evicted blob once its file path is published. Counts the
+    /// eviction (unless the file already existed, i.e. a free drop). If a
+    /// concurrent insert replaced the entry with a fresh (non-evicting)
+    /// blob in the meantime, that entry is left in place — it is
+    /// separately accounted and still live.
+    pub fn finish_evict(&self, key: DataKey, wrote_file: bool) {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if inner.map.get(&key).map(|e| e.evicting).unwrap_or(false) {
+                inner.map.remove(&key);
+            }
+        }
+        if wrote_file {
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Undo a victim selection after a failed cold write, so the blob
+    /// stays reachable and evictable.
+    pub fn abort_evict(&self, key: DataKey) {
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        if let Some(e) = inner.map.get_mut(&key) {
+            if e.evicting {
+                e.evicting = false;
+                inner.resident += e.blob.len() as u64;
+            }
+        }
+    }
+
+    /// Mark that an up-to-date spill file now exists for a cached blob
+    /// (publish-for-sync-fallback keeps the blob resident).
+    pub fn note_file(&self, key: DataKey) {
+        if !self.enabled() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(e) = inner.map.get_mut(&key) {
+            e.has_file = true;
+        }
+    }
+
+    /// Drop a version the GC reclaimed. Returns the blob bytes freed. An
+    /// entry mid-eviction is removed too; its in-flight cold write
+    /// finishes harmlessly against a missing entry.
+    pub fn remove(&self, key: DataKey) -> Option<u64> {
+        if !self.enabled() {
+            return None;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        match inner.map.remove(&key) {
+            Some(e) => {
+                let bytes = e.blob.len() as u64;
+                if !e.evicting {
+                    inner.resident = inner.resident.saturating_sub(bytes);
+                }
+                Some(bytes)
+            }
+            None => None,
+        }
+    }
+
+    pub fn resident_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().resident
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hit_count(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn miss_count(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Entries ever created (pressure demotions + lazy transfer fills).
+    pub fn fill_count(&self) -> u64 {
+        self.fills.load(Ordering::Relaxed)
+    }
+
+    /// Blobs flushed to cold spill files by warm-budget pressure.
+    pub fn eviction_count(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+}
+
+impl ValueStore for WarmStore {
+    fn tier(&self) -> Tier {
+        Tier::Warm
+    }
+
+    fn enabled(&self) -> bool {
+        WarmStore::enabled(self)
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        WarmStore::resident_bytes(self)
+    }
+
+    fn entry_count(&self) -> usize {
+        self.len()
+    }
+
+    fn contains(&self, key: DataKey) -> bool {
+        WarmStore::contains(self, key)
+    }
+
+    fn discard(&self, key: DataKey) -> Option<u64> {
+        self.remove(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::registry::DataId;
+    use std::sync::atomic::AtomicUsize;
+
+    fn key(d: u64) -> DataKey {
+        DataKey {
+            data: DataId(d),
+            version: 1,
+        }
+    }
+
+    fn blob(n: usize) -> Arc<[u8]> {
+        vec![7u8; n].into()
+    }
+
+    #[test]
+    fn disabled_store_is_inert() {
+        let s = WarmStore::new(0);
+        assert!(!s.enabled());
+        assert!(s.put(key(1), blob(8), false).is_empty());
+        assert!(s.get(key(1)).is_none());
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.hit_count() + s.miss_count(), 0);
+        // get_or_fill must not run the encode for a disabled tier.
+        let (b, v) = s.get_or_fill(key(1), || panic!("encode on disabled tier")).unwrap();
+        assert!(b.is_none() && v.is_empty());
+    }
+
+    #[test]
+    fn put_get_returns_same_allocation() {
+        let s = WarmStore::new(1 << 20);
+        let b = blob(16);
+        assert!(s.put(key(1), Arc::clone(&b), false).is_empty());
+        let got = s.get(key(1)).unwrap();
+        assert!(Arc::ptr_eq(&b, &got), "get must return the same blob");
+        assert_eq!(s.hit_count(), 1);
+        assert!(s.get(key(9)).is_none());
+        assert_eq!(s.miss_count(), 1);
+        assert_eq!(s.resident_bytes(), 16);
+    }
+
+    #[test]
+    fn lru_evicts_the_oldest_untouched_blob() {
+        let s = WarmStore::new(40);
+        assert!(s.put(key(1), blob(16), false).is_empty());
+        assert!(s.put(key(2), blob(16), false).is_empty());
+        // Touch 1 so 2 becomes the LRU victim.
+        s.get(key(1)).unwrap();
+        let victims = s.put(key(3), blob(16), false);
+        assert_eq!(victims.len(), 1);
+        assert_eq!(victims[0].key, key(2));
+        // Two-phase: the victim stays readable until finish_evict.
+        assert!(s.get(key(2)).is_some());
+        s.finish_evict(key(2), true);
+        assert!(s.get(key(2)).is_none());
+        assert_eq!(s.eviction_count(), 1);
+        assert!(s.resident_bytes() <= 40);
+    }
+
+    #[test]
+    fn abort_evict_restores_the_blob() {
+        let s = WarmStore::new(10);
+        let victims = s.put(key(1), blob(32), false);
+        assert_eq!(victims.len(), 1, "oversized blob evicts itself");
+        s.abort_evict(key(1));
+        assert_eq!(s.resident_bytes(), 32);
+        // Candidate again on the next overflow.
+        let victims = s.put(key(2), blob(4), false);
+        assert!(victims.iter().any(|v| v.key == key(1)));
+        for v in victims {
+            s.finish_evict(v.key, true);
+        }
+    }
+
+    #[test]
+    fn has_file_blobs_drop_for_free() {
+        let s = WarmStore::new(10);
+        let victims = s.put(key(1), blob(32), true);
+        assert_eq!(victims.len(), 1);
+        assert!(victims[0].has_file, "file mark rides the victim");
+        s.finish_evict(key(1), false);
+        assert_eq!(s.eviction_count(), 0, "free drop: no cold write counted");
+    }
+
+    #[test]
+    fn remove_frees_bytes_even_mid_eviction() {
+        let s = WarmStore::new(1 << 20);
+        assert!(s.put(key(1), blob(64), false).is_empty());
+        assert_eq!(s.remove(key(1)), Some(64));
+        assert_eq!(s.resident_bytes(), 0);
+        assert_eq!(s.remove(key(1)), None);
+        // Mid-eviction removal never underflows the resident gauge.
+        let s = WarmStore::new(10);
+        let victims = s.put(key(2), blob(32), false);
+        assert_eq!(victims.len(), 1);
+        assert_eq!(s.remove(key(2)), Some(32));
+        assert_eq!(s.resident_bytes(), 0);
+        s.finish_evict(key(2), true);
+        assert_eq!(s.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn get_or_fill_runs_the_encode_exactly_once() {
+        // N racing threads get_or_fill the same key; the encode must run
+        // once and everyone must see the same blob.
+        let s = Arc::new(WarmStore::new(1 << 20));
+        let encodes = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let s = Arc::clone(&s);
+            let encodes = Arc::clone(&encodes);
+            handles.push(std::thread::spawn(move || {
+                let (b, victims) = s
+                    .get_or_fill(key(5), || {
+                        encodes.fetch_add(1, Ordering::SeqCst);
+                        // Give racers time to pile onto the fill.
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                        Ok(Some((blob(128), false)))
+                    })
+                    .unwrap();
+                assert!(victims.is_empty());
+                b.unwrap().len()
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 128);
+        }
+        assert_eq!(encodes.load(Ordering::SeqCst), 1, "fill must be once-only");
+        assert_eq!(s.miss_count(), 1);
+        assert_eq!(s.hit_count(), 7);
+    }
+
+    #[test]
+    fn get_or_fill_none_inserts_nothing_and_unblocks_racers() {
+        let s = Arc::new(WarmStore::new(1 << 20));
+        let (b, v) = s.get_or_fill(key(1), || Ok(None)).unwrap();
+        assert!(b.is_none() && v.is_empty());
+        assert_eq!(s.len(), 0);
+        // A later fill still works (no stuck `filling` marker).
+        let (b, _) = s.get_or_fill(key(1), || Ok(Some((blob(8), false)))).unwrap();
+        assert_eq!(b.unwrap().len(), 8);
+        // Errors propagate and clear the marker too.
+        assert!(s.get_or_fill(key(2), || anyhow::bail!("boom")).is_err());
+        let (b, _) = s.get_or_fill(key(2), || Ok(Some((blob(4), false)))).unwrap();
+        assert_eq!(b.unwrap().len(), 4);
+    }
+
+    #[test]
+    fn oversized_fill_from_file_evicts_for_free() {
+        // A blob slurped from an existing spill file carries `has_file`
+        // through the fill: even when it overflows the budget immediately,
+        // the eviction must not ask the caller to rewrite the file.
+        let s = WarmStore::new(16);
+        let (b, victims) = s.get_or_fill(key(1), || Ok(Some((blob(64), true)))).unwrap();
+        assert_eq!(b.unwrap().len(), 64);
+        assert_eq!(victims.len(), 1, "oversized fill self-evicts");
+        assert!(victims[0].has_file, "file mark must ride the fill");
+        s.finish_evict(key(1), false);
+        assert_eq!(s.eviction_count(), 0, "free drop: no cold write");
+    }
+}

@@ -15,9 +15,13 @@
 //! * **movers** — `transfer_threads` dedicated threads per emulated node —
 //!   drain the per-node request queues (stealing from other nodes' queues
 //!   when idle), run the codec boundary off the critical path, cache the
-//!   decoded replica in the [`DataStore`](super::datastore::DataStore), and
-//!   publish the new location in the
-//!   [`VersionTable`](super::registry::VersionTable);
+//!   decoded replica in the hot tier of the
+//!   [`TieredStore`](super::store::TieredStore), and publish the new
+//!   location in the [`VersionTable`](super::registry::VersionTable).
+//!   With the warm tier on, movers ship the cached serialized blob
+//!   directly (`super::store::stage_blob`): an N-node fan-out of a
+//!   memory-resident version costs exactly one encode and zero file I/O —
+//!   the `ensure_file` spill path survives only as the cold-tier fallback;
 //! * **claimants** call [`TransferService::await_staged`] only when the
 //!   bytes are not yet local at the moment they are actually needed —
 //!   parking on a condvar until the mover finishes (futures-by-parking). A
@@ -27,7 +31,7 @@
 //! The split is observable: `transfers_prefetched` counts transfers that
 //! completed before any claimant had to wait, `transfers_waited` the ones a
 //! claimant parked on, and the
-//! [`DataStore`](super::datastore::DataStore)'s `sync_transfer_decodes`
+//! [`DataStore`](super::store::hot::DataStore)'s `sync_transfer_decodes`
 //! counter stays zero whenever the service is enabled (no codec on the
 //! claim path). Requests are deduplicated per `(version, destination)`
 //! pair; a failed pair is re-queued on the next `request`/`await_staged`
@@ -41,7 +45,8 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use crate::coordinator::placement::InflightSource;
 use crate::coordinator::registry::{DataKey, NodeId};
-use crate::coordinator::runtime::{spill_victims, Shared};
+use crate::coordinator::runtime::Shared;
+use crate::coordinator::store::{self, cold};
 
 /// Total attempts allowed per `(version, node)` pair. A `Failed` entry
 /// with fewer failures is a *retryable* tombstone: the next
@@ -473,10 +478,10 @@ pub(crate) fn mover_loop(shared: Arc<Shared>, home: NodeId) {
     }
 }
 
-/// Move one version to `node`: make sure a serialized file exists (the
-/// cross-node codec boundary, run on the mover — not the claimant), decode
-/// it, cache the replica zero-copy for the destination's consumers, and
-/// publish the location. Returns the serialized byte count.
+/// Move one version to `node`: cross the serialization boundary on the
+/// mover — not the claimant — decode, cache the replica zero-copy for the
+/// destination's consumers, and publish the location. Returns the
+/// serialized byte count.
 ///
 /// A version the GC reclaimed mid-transfer is *dropped* (`Ok(None)`), not
 /// failed: the refcount protocol keeps any version with a live (or
@@ -511,17 +516,41 @@ fn perform_transfer(
     }
 }
 
+/// Stage one replica of `key` on `node`, warm-first: the mover ships the
+/// warm tier's serialized blob — built lazily by the first transfer, so an
+/// N-node fan-out of a memory-resident version runs `codec.encode` exactly
+/// once and touches no file — and decodes it into the destination's hot
+/// tier. Only when the warm tier is off (or the bytes were transiently
+/// unreachable) does the old file-staging path run: publish a spill file,
+/// read it back, decode (`ensure_file` is now the cold-tier fallback).
 fn stage_replica(shared: &Shared, key: DataKey, node: NodeId) -> anyhow::Result<Option<u64>> {
-    let path = crate::coordinator::executor::ensure_file(shared, key)?;
+    if let Some(blob) = store::stage_blob(shared, key)? {
+        let nbytes = blob.len() as u64;
+        let value = Arc::new(shared.codec.decode(&blob)?);
+        // Per-tier residency: the replica entry claims a cold file only
+        // when one was actually published for this version — the GC must
+        // only ever delete files that exist.
+        let has_file = shared.table.path_of(key).is_some();
+        let victims = shared.store.hot().put(key, value, has_file);
+        store::demote_victims(shared, victims);
+        if shared.table.is_collected(key) {
+            // The GC ran between our decode and this publish: whichever
+            // removal runs last clears the replica; never publish the
+            // location of a reclaimed version.
+            shared.store.discard_resident(key);
+            return Ok(None);
+        }
+        shared.table.add_location(key, node);
+        return Ok(Some(nbytes));
+    }
+    let path = cold::ensure_file(shared, key)?;
     let nbytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    shared.store.cold().note_read();
     let value = Arc::new(shared.codec.read_file(&path)?);
-    let victims = shared.store.put(key, value, true);
-    spill_victims(shared, victims);
+    let victims = shared.store.hot().put(key, value, true);
+    store::demote_victims(shared, victims);
     if shared.table.is_collected(key) {
-        // The GC ran between our decode and this publish: whichever of the
-        // two `store.remove`s runs last clears the replica; never publish
-        // the location of a reclaimed version.
-        shared.store.remove(key);
+        shared.store.discard_resident(key);
         return Ok(None);
     }
     shared.table.add_location(key, node);

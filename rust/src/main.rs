@@ -126,11 +126,14 @@ USAGE:
                  [--backend auto|pjrt|native] [--codec rmvl|qs|fst|rds|...]
                  [--scheduler fifo|lifo|locality] [--router bytes|cost|roundrobin|adaptive]
                  [--trace] [--memory-budget BYTES (default 256 MiB; 0 = file plane)]
+                 [--warm-budget BYTES (default 64 MiB; 0 = file-backed staging)]
+                 [--store tiered|hot|file (tier preset for A/B runs)]
                  [--spill lru|largest] [--nodes N] [--transfer-threads T]
                  [--gc on|off (default on)]
   rcompss sim    --app knn|kmeans|linreg --machine shaheen3|marenostrum5
                  [--nodes N] [--workers-per-node W] [--fragments F]
                  [--scheduler fifo|lifo|locality] [--router bytes|cost|roundrobin|adaptive]
+                 [--warm on|off (warm-tier transfer staging, default on)]
   rcompss dag    --app add|knn|kmeans|linreg [--fragments F] [--out FILE.dot]
   rcompss trace  --app knn|kmeans|linreg --machine shaheen3|marenostrum5
                  [--nodes N] [--workers-per-node W] [--width COLS]
@@ -166,24 +169,40 @@ fn cmd_run(opts: &Opts) -> anyhow::Result<()> {
         .with_spill(&opts.get("spill", "lru"))
         .with_transfer_threads(transfer_threads)
         .with_gc(gc);
-    // Scheduler/router flags override the config defaults (which already
-    // honor the RCOMPSS_SCHEDULER / RCOMPSS_ROUTER environment matrix).
+    // Scheduler/router/warm flags override the config defaults (which
+    // already honor the RCOMPSS_SCHEDULER / RCOMPSS_ROUTER /
+    // RCOMPSS_WARM_BUDGET environment matrix).
     if opts.has("scheduler") {
         config = config.with_scheduler(&opts.get("scheduler", "fifo"));
     }
     if opts.has("router") {
         config = config.with_router(&opts.get("router", "bytes"));
     }
+    if opts.has("warm-budget") {
+        config = config.with_warm_budget(opts.get_usize("warm-budget", 0)? as u64);
+    }
+    if opts.has("store") {
+        config = config.with_store(&opts.get("store", "tiered"));
+    }
     if nodes > 1 {
         config = config.with_nodes(nodes, workers);
     }
     let scheduler = config.scheduler.clone();
     let router = config.router.clone();
+    let store = config.store.clone();
+    // Report the budgets the runtime actually runs with: the `--store`
+    // preset overrides them at startup (same resolution as
+    // `Coordinator::start`; unknown presets error there, before this).
+    let (memory_budget, warm_budget) = match store.as_str() {
+        "hot" => (config.memory_budget, 0),
+        "file" => (0, 0),
+        _ => (config.memory_budget, config.warm_budget),
+    };
     let rt = CompssRuntime::start(config)?;
     println!(
         "rcompss run: app={app} nodes={nodes} workers/node={workers} fragments={fragments} \
-         backend={backend:?} data-plane={} scheduler={scheduler} router={router} \
-         transfer-threads={transfer_threads} gc={gc}",
+         backend={backend:?} data-plane={} store={store} warm-budget={warm_budget} \
+         scheduler={scheduler} router={router} transfer-threads={transfer_threads} gc={gc}",
         if memory_budget > 0 { "memory" } else { "file" }
     );
     let t0 = std::time::Instant::now();
@@ -245,6 +264,17 @@ fn cmd_run(opts: &Opts) -> anyhow::Result<()> {
             stats.store_misses,
             stats.spills,
             rcompss::util::table::fmt_bytes(stats.spill_bytes as usize),
+        );
+        println!(
+            "tiers: warm {} hits / {} fills / {} evictions ({} resident), \
+             {} encodes, {} file reads, {} file writes",
+            stats.warm_hits,
+            stats.warm_fills,
+            stats.warm_evictions,
+            rcompss::util::table::fmt_bytes(stats.warm_resident_bytes as usize),
+            stats.store_encodes,
+            stats.store_file_reads,
+            stats.store_file_writes,
         );
         println!(
             "transfers: {} requested, {} prefetched, {} waited, {} dropped, {} failed, {} retried, {} moved, {} sync claim decodes",
@@ -321,22 +351,26 @@ fn cmd_sim(opts: &Opts) -> anyhow::Result<()> {
     let cp = plan.graph.critical_path_len();
     let engine = SimEngine::new(spec.clone(), CostModel::default())
         .with_scheduler(&opts.get("scheduler", "fifo"))
-        .with_router(&opts.get("router", "bytes"));
+        .with_router(&opts.get("router", "bytes"))
+        .with_warm(opts.get("warm", "on") != "off");
     let report = engine.run(plan, &format!("{app}@{}", spec.profile.name))?;
     println!(
-        "sim: app={app} machine={} nodes={} workers/node={} scheduler={} router={}",
+        "sim: app={app} machine={} nodes={} workers/node={} scheduler={} router={} warm={}",
         spec.profile.name,
         spec.nodes,
         spec.workers_per_node,
         opts.get("scheduler", "fifo"),
-        opts.get("router", "bytes")
+        opts.get("router", "bytes"),
+        opts.get("warm", "on")
     );
     println!(
-        "  tasks={n_tasks} critical_path={cp} makespan={:.3}s utilization={:.0}% io={:.3}s transfer={:.3}s",
+        "  tasks={n_tasks} critical_path={cp} makespan={:.3}s utilization={:.0}% io={:.3}s \
+         transfer={:.3}s warm-hits={}",
         report.makespan_s,
         report.utilization * 100.0,
         report.total_io_s,
-        report.total_transfer_s
+        report.total_transfer_s,
+        report.transfer_warm_hits
     );
     let mut types: Vec<_> = report.per_type.iter().collect();
     types.sort_by(|a, b| b.1 .1.partial_cmp(&a.1 .1).unwrap());
@@ -386,6 +420,7 @@ fn cmd_trace(opts: &Opts) -> anyhow::Result<()> {
     let engine = SimEngine::new(spec.clone(), CostModel::default())
         .with_scheduler(&opts.get("scheduler", "fifo"))
         .with_router(&opts.get("router", "bytes"))
+        .with_warm(opts.get("warm", "on") != "off")
         .with_trace(true);
     let report = engine.run(plan, &format!("{app}@{}", spec.profile.name))?;
     println!("{}", report.trace.ascii_timeline(opts.get_usize("width", 110)?));

@@ -28,7 +28,7 @@
 //! every other worker on the node behind it.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BinaryHeap, HashMap, HashSet};
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -37,7 +37,7 @@ use crate::cluster::ClusterSpec;
 use crate::coordinator::dag::TaskId;
 use crate::coordinator::feedback::FeedbackStats;
 use crate::coordinator::placement::{placement_by_name, PlacementModel, RoutedReady};
-use crate::coordinator::registry::NodeId;
+use crate::coordinator::registry::{DataKey, NodeId};
 use crate::coordinator::scheduler::ReadyTask;
 use crate::sim::cost::CostModel;
 use crate::sim::sink::SimPlan;
@@ -91,6 +91,9 @@ pub struct SimReport {
     pub per_type: HashMap<String, (usize, f64)>,
     pub total_io_s: f64,
     pub total_transfer_s: f64,
+    /// Transfers staged from the warm tier's cached blob (2nd..Nth replica
+    /// of a fan-out): link time only, no disk materialization charged.
+    pub transfer_warm_hits: usize,
     pub trace: Trace,
     /// Mean worker utilization (busy / span).
     pub utilization: f64,
@@ -104,6 +107,15 @@ pub struct SimEngine {
     /// Placement model routing ready tasks to node shards — the same
     /// engine the live runtime's `--router` selects.
     pub router_name: String,
+    /// Model the live runtime's warm (serialized-blob) tier in the
+    /// virtual transfer timing (default on, matching the live default):
+    /// the first transfer of a version is a cold miss — it materializes
+    /// the serialized bytes, charged against the destination's disk
+    /// server, exactly the file-staging round-trip — while every later
+    /// transfer of the same version ships the cached blob and pays link
+    /// time only. Off = every transfer pays the file-staging cost (the
+    /// pre-tier behavior, `--warm-budget 0`).
+    pub warm_staging: bool,
     /// Collect a trace (disable for big sweeps to save memory).
     pub trace: bool,
 }
@@ -127,6 +139,10 @@ struct RunState<'a> {
     idle: Vec<WorkerId>,
     tracer: Tracer,
     wpn: usize,
+    /// Versions whose serialized blob already exists (first transfer done):
+    /// the sim's stand-in for the live warm tier's lazy fill.
+    warm_staged: HashSet<DataKey>,
+    warm_hits: usize,
     /// Observation sink of an `adaptive` router: the simulator feeds it
     /// its *virtual* transfer timings and task durations, so the model
     /// learns in simulation exactly as it does live.
@@ -147,6 +163,7 @@ impl SimEngine {
             cost,
             scheduler_name: "fifo".into(),
             router_name: "bytes".into(),
+            warm_staging: true,
             trace: false,
         }
     }
@@ -161,6 +178,14 @@ impl SimEngine {
     /// simulator's virtual transfer timings and task durations.
     pub fn with_router(mut self, name: &str) -> SimEngine {
         self.router_name = name.into();
+        self
+    }
+
+    /// Warm-tier transfer staging (the live `--warm-budget` knob's timing
+    /// consequence): `false` reproduces file-backed staging for every
+    /// transfer.
+    pub fn with_warm(mut self, on: bool) -> SimEngine {
+        self.warm_staging = on;
         self
     }
 
@@ -202,6 +227,8 @@ impl SimEngine {
             idle: Vec::new(),
             tracer: Tracer::new(self.trace),
             wpn,
+            warm_staged: HashSet::new(),
+            warm_hits: 0,
             feedback,
         };
         for id in ready0 {
@@ -271,6 +298,7 @@ impl SimEngine {
             per_type: st.per_type,
             total_io_s: st.total_io,
             total_transfer_s: st.total_transfer,
+            transfer_warm_hits: st.warm_hits,
             trace: st.tracer.finish(label),
             utilization,
         })
@@ -302,8 +330,8 @@ impl SimEngine {
                 st.total_io += io;
                 t += io;
             } else {
-                // Remote version: inter-node transfer, then a client-link
-                // read charged against this node's I/O server.
+                // Remote version: inter-node transfer, then staging on the
+                // destination.
                 let tr = self.cost.transfer_time(bytes, profile);
                 st.tracer
                     .record_at(wid, EventKind::Transfer, Some(id), t, t + tr);
@@ -315,12 +343,28 @@ impl SimEngine {
                 t += tr;
                 st.total_transfer += tr;
                 st.plan.registry.add_location(*key, wid.node);
-                let io = self.cost.io_time(bytes, profile);
-                let start = t.max(st.disk_free[node]);
-                let end = start + io;
-                st.disk_free[node] = end;
-                st.total_io += io;
-                t = end;
+                if self.warm_staging && st.warm_staged.contains(key) {
+                    // Warm hit: the cached serialized blob ships as-is —
+                    // no file materialization, no disk-server time (the
+                    // live mover decodes the blob straight into the hot
+                    // tier).
+                    st.warm_hits += 1;
+                } else {
+                    // Cold miss (or warm tier off): the serialized bytes
+                    // are materialized through the destination's I/O
+                    // server — the file-staging round-trip. The first
+                    // transfer also fills the warm blob for later fan-out
+                    // replicas.
+                    if self.warm_staging {
+                        st.warm_staged.insert(*key);
+                    }
+                    let io = self.cost.io_time(bytes, profile);
+                    let start = t.max(st.disk_free[node]);
+                    let end = start + io;
+                    st.disk_free[node] = end;
+                    st.total_io += io;
+                    t = end;
+                }
             }
         }
         if !meta.inputs.is_empty() && t > deser_start {
@@ -574,6 +618,42 @@ mod tests {
             .with_router("zzz")
             .run(plan, "bad")
             .is_err());
+    }
+
+    #[test]
+    fn warm_staging_distinguishes_hits_from_cold_misses() {
+        // K-means broadcasts each centroid version to every node per
+        // iteration — a fan-out. With warm staging (the default) only the
+        // first replica of a version materializes the serialized bytes
+        // through the disk server; later replicas ship the cached blob and
+        // count as warm hits. With the tier off (the live
+        // `--warm-budget 0`), every transfer pays the file-staging cost
+        // and the counter stays zero.
+        let make = || {
+            let mut cfg = KmeansConfig::small(3);
+            cfg.fragments = 8;
+            cfg.iterations = 2;
+            let mut sink = SimSink::new();
+            plan_kmeans(&mut sink, &cfg).unwrap();
+            sink.finish()
+        };
+        let spec = ClusterSpec::new(MachineProfile::shaheen3(), 4).with_workers_per_node(2);
+        let n = make().graph.len();
+        let warm = SimEngine::new(spec.clone(), CostModel::default())
+            .run(make(), "warm")
+            .unwrap();
+        let cold = SimEngine::new(spec, CostModel::default())
+            .with_warm(false)
+            .run(make(), "cold")
+            .unwrap();
+        assert_eq!(warm.tasks_done, n);
+        assert_eq!(cold.tasks_done, n);
+        assert!(warm.total_transfer_s > 0.0, "multi-node run must transfer");
+        assert!(
+            warm.transfer_warm_hits > 0,
+            "fan-out must produce warm-hit stagings"
+        );
+        assert_eq!(cold.transfer_warm_hits, 0, "warm off never counts a hit");
     }
 
     #[test]

@@ -395,11 +395,14 @@ fn spill_reload_roundtrips_through_every_codec() {
     // LRU spill + reload must be exact for each Table-1 codec: a tiny
     // budget forces every intermediate out through the codec and back.
     // GC pinned off — reclaiming drained intermediates would relieve the
-    // memory pressure this test depends on.
+    // memory pressure this test depends on — and the warm tier pinned off
+    // so demotions land on actual files (the warm-tier sibling of this
+    // coverage is `warm_tier_roundtrips_through_every_codec`).
     for codec in ["rmvl", "qs", "fst", "rawbin", "serialize_rcpp", "rds", "csv"] {
         let config = RuntimeConfig::local(2)
             .with_codec(codec)
             .with_memory_budget(96)
+            .with_warm_budget(0)
             .with_spill("lru")
             .with_gc(false);
         let rt = CompssRuntime::start(config).unwrap();
@@ -507,9 +510,11 @@ fn gc_deletes_spill_files_of_collected_versions() {
     // A tiny budget forces intermediates through the codec onto disk; the
     // GC must delete those spill files as the versions drain, not leave
     // them for pressure-era cleanup. (10 bytes: even two scalars overflow,
-    // so spilling is deterministic regardless of how fast the GC drains.)
+    // so spilling is deterministic regardless of how fast the GC drains.
+    // Warm tier pinned off so demotions actually reach the cold tier.)
     let config = RuntimeConfig::local(2)
         .with_memory_budget(10)
+        .with_warm_budget(0)
         .with_spill("lru")
         .with_gc(true);
     let workdir = config.workdir.clone();
@@ -669,6 +674,142 @@ fn two_node_memory_plane_claims_never_run_codec_synchronously() {
         stats.transfer_states <= 16,
         "transfer tombstones must not accumulate: {stats:?}"
     );
+}
+
+#[test]
+fn warm_fanout_transfers_encode_once_with_zero_file_io() {
+    // Tiered-store acceptance (public stats surface): one producer's
+    // output consumed across a 4-node fabric performs exactly 1 encode and
+    // 0 file reads/writes with the warm tier on — the movers ship the
+    // cached blob — while `--warm-budget 0` reproduces the file-staging
+    // behavior (spill file written, read back per destination) with
+    // identical results. Round-robin routing spreads the consumers so the
+    // fan-out is guaranteed; warm budget pinned explicitly so the CI env
+    // matrix cannot flip it under the test.
+    use rcompss::api::TaskDef;
+    use rcompss::value::RValue;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::time::{Duration, Instant};
+    let run = |warm: u64| {
+        let rt = CompssRuntime::start(
+            RuntimeConfig::local(1)
+                .with_nodes(4, 1)
+                .with_router("roundrobin")
+                .with_warm_budget(warm),
+        )
+        .unwrap();
+        let mk = rt.register_task(TaskDef::new("mk", 0, |_| {
+            Ok(vec![RValue::Real(vec![1.25; 4096])])
+        }));
+        // Consumers block on the gate until every remote replica is
+        // staged: the transfer counts below are then deterministic — no
+        // steal/GC race can drop a queued transfer, because the blocked
+        // consumers hold their input references the whole time.
+        let gate = Arc::new(AtomicBool::new(false));
+        let consume = {
+            let gate = Arc::clone(&gate);
+            rt.register_task(TaskDef::new("consume", 1, move |a| {
+                while !gate.load(Ordering::Acquire) {
+                    std::thread::yield_now();
+                }
+                Ok(vec![RValue::scalar(a[0].as_real().unwrap().iter().sum())])
+            }))
+        };
+        let src = rt.submit(&mk, &[]).unwrap();
+        let outs: Vec<_> = (0..8)
+            .map(|_| rt.submit(&consume, &[src.into()]).unwrap())
+            .collect();
+        // Round-robin routes consumers to every node, so enqueue_ready
+        // prefetches `src` toward nodes 1..3 at schedule time; the movers
+        // stage those three replicas regardless of worker progress.
+        let t0 = Instant::now();
+        loop {
+            let s = rt.stats();
+            if s.transfers_prefetched + s.transfers_waited >= 3 {
+                break;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(30),
+                "fan-out staging never completed: {s:?}"
+            );
+            std::thread::yield_now();
+        }
+        gate.store(true, Ordering::Release);
+        let mut total = 0.0;
+        for o in &outs {
+            total += rt.wait_on(o).unwrap().as_f64().unwrap();
+        }
+        let stats = rt.stop().unwrap();
+        (total, stats)
+    };
+    let (warm_total, warm_stats) =
+        run(rcompss::coordinator::runtime::DEFAULT_WARM_BUDGET);
+    assert_eq!(warm_total, 8.0 * 1.25 * 4096.0);
+    assert_eq!(warm_stats.store_encodes, 1, "{warm_stats:?}");
+    assert_eq!(warm_stats.store_file_reads, 0, "{warm_stats:?}");
+    assert_eq!(warm_stats.store_file_writes, 0, "{warm_stats:?}");
+    assert!(warm_stats.warm_hits >= 1, "fan-out replicas hit warm: {warm_stats:?}");
+    assert_eq!(warm_stats.sync_transfer_decodes, 0, "{warm_stats:?}");
+    // The GC reclaimed the fanned-out version from every tier.
+    assert_eq!(warm_stats.warm_resident_bytes, 0, "{warm_stats:?}");
+    assert_eq!(warm_stats.dead_version_bytes, 0, "{warm_stats:?}");
+
+    let (file_total, file_stats) = run(0);
+    assert_eq!(file_total, warm_total, "staging path changed results");
+    assert!(
+        file_stats.store_file_writes >= 1,
+        "file staging must publish the spill file: {file_stats:?}"
+    );
+    assert!(
+        file_stats.store_file_reads >= 1,
+        "file staging must read it back: {file_stats:?}"
+    );
+    assert_eq!(
+        file_stats.warm_hits + file_stats.warm_fills,
+        0,
+        "warm tier off must see no traffic: {file_stats:?}"
+    );
+    assert_eq!(file_stats.sync_transfer_decodes, 0, "{file_stats:?}");
+}
+
+#[test]
+fn warm_tier_roundtrips_through_every_codec() {
+    // A hot budget far below the working set demotes every intermediate
+    // into the warm tier; reloads decode the cached blob. The chain must
+    // stay exact for each Table-1 codec and the filesystem must never be
+    // touched — the warm tier absorbs what used to be spill files.
+    for codec in ["rmvl", "qs", "fst", "rawbin", "serialize_rcpp", "rds", "csv"] {
+        let config = RuntimeConfig::local(2)
+            .with_codec(codec)
+            .with_memory_budget(96)
+            .with_warm_budget(rcompss::coordinator::runtime::DEFAULT_WARM_BUDGET)
+            .with_spill("lru")
+            .with_gc(false);
+        let workdir = config.workdir.clone();
+        let rt = CompssRuntime::start(config).unwrap();
+        let add = rt.register_task(rcompss::api::TaskDef::new("add", 2, |a| {
+            let x = a[0].as_f64().unwrap();
+            let y = a[1].as_f64().unwrap();
+            Ok(vec![rcompss::value::RValue::scalar(x + y)])
+        }));
+        let mut acc = rt.submit(&add, &[0.25.into(), 0.5.into()]).unwrap();
+        for i in 1..=8 {
+            acc = rt.submit(&add, &[acc.into(), (i as f64 + 0.125).into()]).unwrap();
+        }
+        let v = rt.wait_on(&acc).unwrap();
+        assert_eq!(v.as_f64(), Some(0.75 + 36.0 + 8.0 * 0.125), "codec {codec}");
+        let files: Vec<_> = std::fs::read_dir(&workdir).unwrap().collect();
+        assert!(
+            files.is_empty(),
+            "codec {codec}: warm tier must absorb demotions, found {} file(s)",
+            files.len()
+        );
+        let stats = rt.stop().unwrap();
+        assert!(stats.spills > 0, "codec {codec}: tiny hot budget must demote");
+        assert!(stats.warm_hits > 0, "codec {codec}: reloads must hit warm: {stats:?}");
+        assert_eq!(stats.store_file_writes, 0, "codec {codec}: {stats:?}");
+        assert_eq!(stats.store_file_reads, 0, "codec {codec}: {stats:?}");
+    }
 }
 
 #[test]

@@ -210,11 +210,14 @@ fn prop_version_monotonicity() {
 
 /// Multi-node value-lifecycle property: random reduction trees on 1-3
 /// emulated nodes with the memory plane, asynchronous transfers, and the
-/// version GC all enabled. Consumers race mover threads for every
-/// cross-node input (claim-mid-transfer), stealing moves tasks away from
-/// the prefetched node, and the GC reclaims each intermediate as its last
-/// reader finishes — the sum must stay exact, the claim path must never
-/// run the codec synchronously, and no dead bytes may remain.
+/// version GC all enabled — half the cases with the warm tier on, half
+/// with file-backed staging (`warm_budget` 0). Consumers race mover
+/// threads for every cross-node input (claim-mid-transfer), stealing
+/// moves tasks away from the prefetched node, and the GC reclaims each
+/// intermediate as its last reader finishes — the sum must stay exact,
+/// the claim path must never run the codec synchronously, no dead bytes
+/// may remain, and warm blob bytes must drain to zero at quiescence
+/// alongside `transfer_states`.
 #[test]
 fn prop_multi_node_transfers_and_gc_preserve_results() {
     check(
@@ -229,14 +232,20 @@ fn prop_multi_node_transfers_and_gc_preserve_results() {
             let nodes = 1 + rng.below(3) as u32;
             let wpn = 1 + rng.below(2) as u32;
             let policy = ["fifo", "locality"][rng.below_usize(2)];
-            (values, nodes, wpn, policy)
+            let warm = rng.below(2) == 0;
+            (values, nodes, wpn, policy, warm)
         },
-        |(values, nodes, wpn, policy)| {
+        |(values, nodes, wpn, policy, warm)| {
             let rt = CompssRuntime::start(
                 RuntimeConfig::local(*wpn)
                     .with_nodes(*nodes, *wpn)
                     .with_scheduler(policy)
                     .with_memory_budget(256 << 20)
+                    .with_warm_budget(if *warm {
+                        rcompss::coordinator::runtime::DEFAULT_WARM_BUDGET
+                    } else {
+                        0
+                    })
                     .with_transfer_threads(1)
                     .with_gc(true),
             )
@@ -298,6 +307,21 @@ fn prop_multi_node_transfers_and_gc_preserve_results() {
                     stats.transfer_states, stats.transfers_requested
                 ));
             }
+            // The GC drains all three tiers: every transferred (and thus
+            // warm-filled) version was consumed and collected, so no blob
+            // bytes may survive quiescence.
+            if stats.warm_resident_bytes != 0 {
+                return Err(format!(
+                    "{} warm blob bytes survived quiescence ({} fills)",
+                    stats.warm_resident_bytes, stats.warm_fills
+                ));
+            }
+            if !*warm && stats.warm_fills + stats.warm_hits != 0 {
+                return Err(format!(
+                    "warm tier off but saw traffic: {} fills, {} hits",
+                    stats.warm_fills, stats.warm_hits
+                ));
+            }
             Ok(())
         },
     );
@@ -318,7 +342,12 @@ enum FrontierOp {
 /// out *identical* tasks. This is what makes simulated placements a
 /// faithful stand-in for live ones. The `adaptive` model is exercised
 /// warm, both sides reading one shared feedback sink: identical
-/// observations must give identical verdicts.
+/// observations must give identical verdicts. Half the cases replay the
+/// warm tier's byte signal: once a version's blob is built, the locality
+/// snapshot carries its *real serialized size* instead of the payload
+/// estimate (`VersionTable::update_bytes`) — equivalence must hold
+/// whichever source filled the byte column, since both fabrics route on
+/// the same snapshot.
 #[test]
 fn prop_live_sharded_routing_equals_sim_placement() {
     check(
@@ -328,6 +357,9 @@ fn prop_live_sharded_routing_equals_sim_placement() {
             let nodes = 1 + rng.below(4) as u32;
             let policy = ["fifo", "lifo", "locality"][rng.below_usize(3)];
             let model = ["bytes", "cost", "roundrobin", "adaptive"][rng.below_usize(4)];
+            // Warm-tier byte signal: serialized sizes instead of payload
+            // estimates (a deterministic encode-overhead transform).
+            let warm_sizes = rng.below(2) == 0;
             let n_ops = 5 + rng.below_usize(60);
             let mut ops = Vec::with_capacity(n_ops);
             for _ in 0..n_ops {
@@ -339,7 +371,12 @@ fn prop_live_sharded_routing_equals_sim_placement() {
                     let n_inputs = rng.below_usize(4);
                     let inputs = (0..n_inputs)
                         .map(|_| {
-                            let bytes = rng.below(10_000);
+                            let payload = rng.below(10_000);
+                            let bytes = if warm_sizes {
+                                payload + payload / 8 + 32
+                            } else {
+                                payload
+                            };
                             let n_locs = rng.below_usize(3);
                             let locs = (0..n_locs)
                                 .map(|_| NodeId(rng.below(nodes as u64) as u32))
