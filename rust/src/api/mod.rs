@@ -279,6 +279,22 @@ impl CompssRuntime {
     pub fn critical_path_len(&self) -> usize {
         self.coord.critical_path_len()
     }
+
+    /// Kill an emulated node mid-run (fault injection / chaos testing):
+    /// its workers park, in-flight transfers toward it fail fast, and
+    /// every version it solely held is re-derived by lineage re-execution.
+    /// The last alive node is never killed. Returns `true` if the node was
+    /// alive.
+    pub fn kill_node(&self, node: u32) -> bool {
+        self.coord.kill_node(crate::coordinator::registry::NodeId(node))
+    }
+
+    /// Re-admit a previously-killed node (elasticity): its shard re-opens
+    /// for placement and stealing and its workers resume. Returns `true`
+    /// if the node was dead.
+    pub fn add_node(&self, node: u32) -> bool {
+        self.coord.add_node(crate::coordinator::registry::NodeId(node))
+    }
 }
 
 #[cfg(test)]

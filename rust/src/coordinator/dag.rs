@@ -9,7 +9,7 @@
 use std::collections::{HashMap, HashSet};
 use std::fmt;
 
-use crate::coordinator::registry::DataKey;
+use crate::coordinator::registry::{DataKey, NodeId};
 
 /// Task identity, in submission order (node "1", "2", ... in Figure 2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -88,6 +88,13 @@ pub struct TaskNode {
     pub dependents: Vec<TaskId>,
     /// Execution attempts so far (fault tolerance).
     pub attempts: u32,
+    /// Node the final failed attempt ran on (root-cause reporting).
+    pub failed_on: Option<NodeId>,
+    /// Error message of the final failed attempt.
+    pub fail_error: Option<String>,
+    /// For cancelled tasks: the permanently-failed ancestor that doomed
+    /// them (root-cause reporting for `wait_on`/`barrier`).
+    pub cancelled_by: Option<TaskId>,
 }
 
 /// The task graph.
@@ -101,6 +108,9 @@ pub struct TaskGraph {
     done_count: usize,
     failed_count: usize,
     cancelled_count: usize,
+    /// First task to fail permanently — the root cause reported by
+    /// `wait_on`/`barrier` errors.
+    first_failed: Option<TaskId>,
 }
 
 impl TaskGraph {
@@ -170,19 +180,28 @@ impl TaskGraph {
                 pending_deps: pending,
                 dependents: Vec::new(),
                 attempts: 0,
+                failed_on: None,
+                fail_error: None,
+                cancelled_by: None,
             },
         );
         self.order.push(id);
-        // If any predecessor already failed, cancel immediately.
-        let dead = self.edges.iter().any(|e| {
-            e.to == id
-                && matches!(
-                    self.nodes.get(&e.from).map(|n| n.state),
-                    Some(TaskState::Failed) | Some(TaskState::Cancelled)
-                )
+        // If any predecessor already failed, cancel immediately (naming
+        // the failed ancestor as the root cause).
+        let dead_root = self.edges.iter().find_map(|e| {
+            if e.to != id {
+                return None;
+            }
+            match self.nodes.get(&e.from) {
+                Some(n) if n.state == TaskState::Failed => Some(n.id),
+                Some(n) if n.state == TaskState::Cancelled => {
+                    Some(n.cancelled_by.unwrap_or(n.id))
+                }
+                _ => None,
+            }
         });
-        if dead {
-            self.cancel(id);
+        if let Some(root) = dead_root {
+            self.cancel(id, Some(root));
             return false;
         }
         ready
@@ -227,11 +246,25 @@ impl TaskGraph {
     /// Mark a running task as permanently failed; transitively cancels
     /// everything downstream. Returns the cancelled set.
     pub fn fail(&mut self, id: TaskId) -> Vec<TaskId> {
+        self.fail_with(id, None, "")
+    }
+
+    /// [`TaskGraph::fail`], recording the node the final attempt ran on
+    /// and its error so `wait_on`/`barrier` can report the root cause.
+    /// Every cancelled dependent names `id` as its failed ancestor.
+    pub fn fail_with(&mut self, id: TaskId, node: Option<NodeId>, error: &str) -> Vec<TaskId> {
         {
             let n = self.nodes.get_mut(&id).expect("fail of unknown task");
             n.state = TaskState::Failed;
+            n.failed_on = node;
+            if !error.is_empty() {
+                n.fail_error = Some(error.to_string());
+            }
         }
         self.failed_count += 1;
+        if self.first_failed.is_none() {
+            self.first_failed = Some(id);
+        }
         let mut cancelled = Vec::new();
         let mut stack: Vec<TaskId> = self
             .nodes
@@ -242,6 +275,7 @@ impl TaskGraph {
             let n = self.nodes.get_mut(&t).expect("dependent missing");
             if matches!(n.state, TaskState::Pending | TaskState::Ready) {
                 n.state = TaskState::Cancelled;
+                n.cancelled_by = Some(id);
                 self.cancelled_count += 1;
                 cancelled.push(t);
                 stack.extend(n.dependents.clone());
@@ -250,12 +284,97 @@ impl TaskGraph {
         cancelled
     }
 
-    fn cancel(&mut self, id: TaskId) {
+    fn cancel(&mut self, id: TaskId, root: Option<TaskId>) {
         if let Some(n) = self.nodes.get_mut(&id) {
             if n.state != TaskState::Cancelled {
                 n.state = TaskState::Cancelled;
+                n.cancelled_by = root;
                 self.cancelled_count += 1;
             }
+        }
+    }
+
+    /// Reopen a set of completed tasks for lineage re-execution after
+    /// node loss. States flip Done → Pending, intra-set dependency counts
+    /// and dependent lists are rebuilt (`complete` drained them), and
+    /// downstream tasks outside the set that have not started yet are
+    /// re-gated so they wait for the fresh outputs (a re-gated Ready task
+    /// leaves a stale queue entry behind; the executor's claim-time state
+    /// check discards it). Returns the reopened tasks that are
+    /// immediately ready.
+    pub fn reopen(&mut self, ids: &HashSet<TaskId>) -> Vec<TaskId> {
+        for id in ids {
+            let n = self.nodes.get_mut(id).expect("reopen of unknown task");
+            debug_assert_eq!(n.state, TaskState::Done, "reopen of non-done {id}");
+            n.state = TaskState::Pending;
+            n.pending_deps = 0;
+            self.done_count -= 1;
+        }
+        // One gate per distinct (producer-in-set → consumer) pair:
+        // consumers inside the set re-run after their producers; Pending/
+        // Ready consumers outside it must wait for the fresh output too.
+        let mut pairs: Vec<(TaskId, TaskId)> = Vec::new();
+        let mut seen: HashSet<(TaskId, TaskId)> = HashSet::new();
+        for e in &self.edges {
+            if !ids.contains(&e.from) || e.from == e.to {
+                continue;
+            }
+            let gates = ids.contains(&e.to)
+                || matches!(
+                    self.nodes.get(&e.to).map(|n| n.state),
+                    Some(TaskState::Pending) | Some(TaskState::Ready)
+                );
+            if gates && seen.insert((e.from, e.to)) {
+                pairs.push((e.from, e.to));
+            }
+        }
+        for (from, to) in pairs {
+            self.nodes
+                .get_mut(&from)
+                .expect("reopened producer")
+                .dependents
+                .push(to);
+            let n = self.nodes.get_mut(&to).expect("re-gated consumer");
+            n.pending_deps += 1;
+            if n.state == TaskState::Ready {
+                n.state = TaskState::Pending;
+            }
+        }
+        let mut ready = Vec::new();
+        for id in ids {
+            let n = self.nodes.get_mut(id).expect("reopened task");
+            if n.state == TaskState::Pending && n.pending_deps == 0 {
+                n.state = TaskState::Ready;
+                ready.push(*id);
+            }
+        }
+        ready.sort_unstable();
+        ready
+    }
+
+    /// The first permanently-failed task, for root-cause error reporting.
+    pub fn root_failure(&self) -> Option<&TaskNode> {
+        self.first_failed.and_then(|id| self.nodes.get(&id))
+    }
+
+    /// Human-readable root-cause blurb for a failed task:
+    /// `t7 (knn_partial, 3 attempts, node 1): <error>`.
+    pub fn failure_blurb(&self, id: TaskId) -> String {
+        match self.nodes.get(&id) {
+            Some(n) => {
+                let node = n
+                    .failed_on
+                    .map(|nd| format!("node {}", nd.0))
+                    .unwrap_or_else(|| "unknown node".to_string());
+                let mut s =
+                    format!("{} ({}, {} attempt(s), {})", n.id, n.type_name, n.attempts, node);
+                if let Some(e) = &n.fail_error {
+                    s.push_str(": ");
+                    s.push_str(e);
+                }
+                s
+            }
+            None => id.to_string(),
         }
     }
 
@@ -536,6 +655,97 @@ mod tests {
         assert!(dot.contains("-> sync"));
         assert!(dot.contains("d1v1"));
         assert!(dot.contains("digraph RCOMPSs"));
+    }
+
+    #[test]
+    fn fail_with_records_root_cause_and_cancelled_name_ancestor() {
+        let (mut g, t1, _t2, t3) = diamond();
+        let t4 = g.next_task_id();
+        g.insert_task(t4, "sink", vec![key(3, 1)], vec![], vec![(
+            t3,
+            EdgeKind::Raw,
+            key(3, 1),
+        )]);
+        g.start(t1);
+        let cancelled = g.fail_with(t1, Some(NodeId(2)), "boom");
+        assert!(cancelled.contains(&t3) && cancelled.contains(&t4));
+        let root = g.root_failure().expect("root failure recorded");
+        assert_eq!(root.id, t1);
+        assert_eq!(root.failed_on, Some(NodeId(2)));
+        assert_eq!(root.fail_error.as_deref(), Some("boom"));
+        assert_eq!(g.node(t3).unwrap().cancelled_by, Some(t1));
+        assert_eq!(g.node(t4).unwrap().cancelled_by, Some(t1));
+        let blurb = g.failure_blurb(t1);
+        assert!(blurb.contains("t1") && blurb.contains("add"));
+        assert!(blurb.contains("node 2") && blurb.contains("boom"));
+        // A task submitted under the cancelled t3 names t1 too.
+        let t5 = g.next_task_id();
+        g.insert_task(t5, "late", vec![key(3, 1)], vec![], vec![(
+            t3,
+            EdgeKind::Raw,
+            key(3, 1),
+        )]);
+        assert_eq!(g.node(t5).unwrap().cancelled_by, Some(t1));
+    }
+
+    #[test]
+    fn reopen_replays_a_done_subgraph_in_dependency_order() {
+        // t1 -> t3 <- t2, plus t4 reading t3: run everything, then reopen
+        // {t1, t3} (t1's output was lost, t3 consumed it).
+        let (mut g, t1, t2, t3) = diamond();
+        let t4 = g.next_task_id();
+        g.insert_task(t4, "sink", vec![key(3, 1)], vec![], vec![(
+            t3,
+            EdgeKind::Raw,
+            key(3, 1),
+        )]);
+        for t in [t1, t2, t3, t4] {
+            g.start(t);
+            g.complete(t);
+        }
+        assert_eq!(g.done_count(), 4);
+        let ids: HashSet<TaskId> = [t1, t3].into_iter().collect();
+        let ready = g.reopen(&ids);
+        assert_eq!(ready, vec![t1], "only the root of the lost subgraph");
+        assert_eq!(g.state(t1), Some(TaskState::Ready));
+        assert_eq!(g.state(t3), Some(TaskState::Pending));
+        assert_eq!(g.state(t2), Some(TaskState::Done), "t2 untouched");
+        assert_eq!(g.state(t4), Some(TaskState::Done), "done consumers untouched");
+        assert_eq!(g.done_count(), 2);
+        // Replay drives the normal readiness propagation.
+        g.start(t1);
+        assert_eq!(g.complete(t1), vec![t3]);
+        g.start(t3);
+        assert!(g.complete(t3).is_empty(), "t4 is already done");
+        assert!(g.quiescent());
+        assert_eq!(g.done_count(), 4);
+    }
+
+    #[test]
+    fn reopen_regates_unstarted_downstream_consumers() {
+        // t1 done, t2 (reads t1's output) still Ready and queued: reopening
+        // t1 must pull t2 back to Pending until the fresh output lands.
+        let mut g = TaskGraph::new();
+        let t1 = g.next_task_id();
+        g.insert_task(t1, "p", vec![], vec![key(1, 1)], vec![]);
+        g.start(t1);
+        g.complete(t1);
+        let t2 = g.next_task_id();
+        assert!(g.insert_task(t2, "c", vec![key(1, 1)], vec![], vec![(
+            t1,
+            EdgeKind::Raw,
+            key(1, 1),
+        )]));
+        assert_eq!(g.state(t2), Some(TaskState::Ready));
+        let ids: HashSet<TaskId> = [t1].into_iter().collect();
+        let ready = g.reopen(&ids);
+        assert_eq!(ready, vec![t1]);
+        assert_eq!(g.state(t2), Some(TaskState::Pending), "re-gated");
+        g.start(t1);
+        assert_eq!(g.complete(t1), vec![t2], "t2 becomes ready again");
+        g.start(t2);
+        g.complete(t2);
+        assert!(g.quiescent());
     }
 
     #[test]

@@ -22,14 +22,26 @@
 //!    dependents and waiters; on failure it resubmits within the retry
 //!    budget.
 
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use crate::coordinator::dag::TaskState;
 use crate::coordinator::registry::{DataKey, NodeId};
-use crate::coordinator::runtime::{reap_if_drained, release_inputs, Core, Shared, TaskMeta};
+use crate::coordinator::runtime::{
+    kill_node_now, reap_if_drained, release_inputs, Core, Shared, TaskMeta,
+};
 use crate::coordinator::store::{self, cold};
 use crate::trace::{EventKind, WorkerId};
 use crate::value::RValue;
+
+/// Assumed cold-tier write bandwidth (bytes/s) for the `--checkpoint cold`
+/// cost bound. Deliberately conservative: checkpointing is skipped only
+/// when the write would clearly cost more than re-deriving the value.
+const CHECKPOINT_BW: f64 = 100e6;
+/// A checkpoint is written when `re-execution cost × safety ≥ write cost`
+/// — re-running a task also replays its upstream staging, so the measured
+/// duration undercounts what a loss actually costs.
+const CHECKPOINT_SAFETY: f64 = 8.0;
 
 /// Fetch an available value for a node-local consumer, climbing the tier
 /// ladder: a zero-copy handle when the hot tier holds it, an in-memory
@@ -71,6 +83,12 @@ pub(crate) fn fetch_resident(
         }
         if shared.table.is_collected(key) {
             anyhow::bail!("datum {key} was reclaimed by the version GC");
+        }
+        if !shared.table.is_available(key) {
+            // Lost with a dead node: fail fast instead of spinning across
+            // the re-derivation window — the caller's failure path
+            // resubmits and the retry finds the recovered bytes.
+            anyhow::bail!("datum {key} is unavailable (lost with a dead node)");
         }
         std::thread::yield_now();
     }
@@ -139,10 +157,26 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
     while let Some(id) = shared.ready.pop(wid.node) {
         // ---- claim: the control lock covers only the state flip and an
         // Arc clone of the metadata (no per-input work under the lock).
-        let meta: Arc<TaskMeta> = {
+        let claim: Option<Arc<TaskMeta>> = {
             let mut core = shared.core.lock().unwrap();
-            core.graph.start(id);
-            Arc::clone(&core.meta[&id])
+            if core.graph.state(id) != Some(TaskState::Ready) {
+                // Stale queue entry: `reopen` re-gated this task (node-loss
+                // recovery) and the fresh entry is elsewhere — or another
+                // path already handled it. Discard.
+                None
+            } else if !shared.health.is_alive(wid.node) {
+                // Popped in the race window of a kill: a dead node runs
+                // nothing — hand the task back to the alive shards.
+                let core = &mut *core;
+                shared.enqueue_ready(core, id);
+                None
+            } else {
+                core.graph.start(id);
+                Some(Arc::clone(&core.meta[&id]))
+            }
+        };
+        let Some(meta) = claim else {
+            continue;
         };
         // Locality accounting against the sharded table, outside all locks.
         // On the memory plane the location of a cross-node input is
@@ -237,6 +271,20 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
 
         match result {
             Ok(outputs) => {
+                // The node died while this task was executing: its outputs
+                // are gone with it — discard them and resubmit so an alive
+                // node re-runs the attempt (inputs are consumed again by
+                // the retry; no references are released here).
+                if !shared.health.is_alive(wid.node) {
+                    let mut core = shared.core.lock().unwrap();
+                    if core.graph.state(id) == Some(TaskState::Running) {
+                        core.stats.resubmissions += 1;
+                        core.graph.resubmit(id);
+                        let core = &mut *core;
+                        shared.enqueue_ready(core, id);
+                    }
+                    continue;
+                }
                 // ---- publish outputs (outside the control lock) -----------
                 let ser_start = shared.tracer.now();
                 let mut ser_error: Option<anyhow::Error> = None;
@@ -301,6 +349,7 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
                 }
 
                 let mut success = false;
+                let mut done_count = 0u64;
                 let to_release = {
                     let mut core = shared.core.lock().unwrap();
                     if let Some(e) = ser_error {
@@ -330,6 +379,7 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
                         per.0 += 1;
                         per.1 += exec_end - exec_start;
                         core.stats.tasks_done += 1;
+                        done_count = core.stats.tasks_done;
                         let newly_ready = core.graph.complete(id);
                         let core = &mut *core;
                         for t in newly_ready {
@@ -347,6 +397,19 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
                 // The version GC reclaims whatever drained to zero.
                 if success {
                     release_inputs(&shared, &meta.inputs);
+                    if shared.checkpoint_cold
+                        && shared.ready.nodes() > 1
+                        && shared.store.enabled()
+                    {
+                        maybe_checkpoint(&shared, &meta, exec_end - exec_start);
+                    }
+                    // Armed chaos: the victim dies the instant the N-th
+                    // completion lands — a deterministic mid-run kill.
+                    if shared.injector.node_kill_due(done_count) {
+                        if let Some(victim) = shared.chaos_victim {
+                            kill_node_now(&shared, victim);
+                        }
+                    }
                 } else {
                     release_inputs(&shared, &to_release);
                 }
@@ -360,6 +423,33 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
                 };
                 release_inputs(&shared, &to_release);
             }
+        }
+    }
+}
+
+/// `--checkpoint cold`: after a successful publish, proactively write the
+/// task's **sole-replica, file-less** outputs through the cold tier so a
+/// node loss finds a surviving file instead of a lost version (the shared
+/// filesystem outlives any node). Bounded by this execution's measured
+/// cost: a value cheaper to re-derive than to write is left alone. Runs
+/// off every lock; `ensure_file` is idempotent and collected-safe.
+fn maybe_checkpoint(shared: &Shared, meta: &TaskMeta, exec_s: f64) {
+    let reexec = exec_s.max(1e-3);
+    for key in &meta.outputs {
+        let Some(info) = shared.table.info(*key) else {
+            continue;
+        };
+        if !info.available || info.locations.len() != 1 || !info.path.as_os_str().is_empty() {
+            continue;
+        }
+        let write_s = info.bytes as f64 / CHECKPOINT_BW;
+        if reexec * CHECKPOINT_SAFETY < write_s {
+            continue;
+        }
+        if cold::ensure_file(shared, *key).is_ok() {
+            let bytes = shared.table.info(*key).map(|i| i.bytes).unwrap_or(0);
+            shared.checkpoints_written.fetch_add(1, Ordering::Relaxed);
+            shared.checkpoint_bytes.fetch_add(bytes, Ordering::Relaxed);
         }
     }
 }
@@ -390,7 +480,7 @@ fn handle_failure(
         );
         Vec::new()
     } else {
-        let cancelled = core.graph.fail(id);
+        let cancelled = core.graph.fail_with(id, Some(wid.node), &format!("{err:#}"));
         core.stats.tasks_failed += 1;
         core.stats.tasks_cancelled += cancelled.len() as u64;
         debug_assert_eq!(core.graph.state(id), Some(TaskState::Failed));

@@ -12,7 +12,9 @@
 //! task types fail with a given probability on their first `n` attempts,
 //! letting the integration suite prove that resubmission preserves results.
 
+use crate::coordinator::registry::NodeId;
 use crate::util::prng::Pcg64;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Retry policy.
@@ -39,6 +41,144 @@ impl RetryPolicy {
     }
 }
 
+/// Liveness of every node in the virtual cluster.
+///
+/// The coordinator consults this plane on the hot paths (claim, publish,
+/// placement), so it is lock-free: one atomic per node plus a `degraded`
+/// summary bit that lets the common all-alive case skip the per-node scan
+/// entirely. Transitions happen under the core lock (in
+/// `Coordinator::kill_node`/`add_node`), so readers may observe a node
+/// flip at any point but never see torn state.
+#[derive(Debug)]
+pub struct NodeHealth {
+    alive: Vec<AtomicBool>,
+    dead_count: AtomicUsize,
+}
+
+impl NodeHealth {
+    pub fn new(nodes: usize) -> Self {
+        NodeHealth {
+            alive: (0..nodes).map(|_| AtomicBool::new(true)).collect(),
+            dead_count: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.alive.len()
+    }
+
+    pub fn is_alive(&self, node: NodeId) -> bool {
+        self.alive
+            .get(node.0 as usize)
+            .map(|a| a.load(Ordering::Acquire))
+            .unwrap_or(false)
+    }
+
+    /// Mark a node lost. Returns `false` if it was already dead (or out of
+    /// range), so callers can make kill idempotent.
+    pub fn mark_dead(&self, node: NodeId) -> bool {
+        let Some(a) = self.alive.get(node.0 as usize) else {
+            return false;
+        };
+        if a.swap(false, Ordering::AcqRel) {
+            self.dead_count.fetch_add(1, Ordering::AcqRel);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Mark a node (re)joined. Returns `false` if it was already alive.
+    pub fn mark_alive(&self, node: NodeId) -> bool {
+        let Some(a) = self.alive.get(node.0 as usize) else {
+            return false;
+        };
+        if !a.swap(true, Ordering::AcqRel) {
+            self.dead_count.fetch_sub(1, Ordering::AcqRel);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Any node currently dead? Cheap summary for hot paths.
+    pub fn any_dead(&self) -> bool {
+        self.dead_count.load(Ordering::Acquire) > 0
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.alive.len() - self.dead_count.load(Ordering::Acquire)
+    }
+
+    /// Lowest-numbered live node (re-publish target for lost literals).
+    pub fn first_alive(&self) -> Option<NodeId> {
+        self.alive
+            .iter()
+            .position(|a| a.load(Ordering::Acquire))
+            .map(|i| NodeId(i as u32))
+    }
+}
+
+/// Parsed `--chaos` / `RCOMPSS_CHAOS` directive.
+///
+/// Grammar: comma-separated terms out of
+/// `task-fail:<p>` (each execution fails with probability `p`),
+/// `node-kill` / `node-kill:<seed>` (one node dies at a seeded random
+/// point mid-run), and `seed:<n>` (seeds both). `none` or the empty
+/// string disables chaos.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChaosSpec {
+    pub task_fail_p: f64,
+    pub node_kill: bool,
+    pub seed: u64,
+}
+
+impl ChaosSpec {
+    pub fn parse(s: &str) -> Result<ChaosSpec, String> {
+        let mut spec = ChaosSpec::default();
+        for term in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            if term == "none" {
+                continue;
+            }
+            let (head, arg) = match term.split_once(':') {
+                Some((h, a)) => (h, Some(a)),
+                None => (term, None),
+            };
+            match head {
+                "task-fail" => {
+                    let p: f64 = arg
+                        .ok_or_else(|| format!("task-fail needs a probability: {term}"))?
+                        .parse()
+                        .map_err(|_| format!("bad task-fail probability: {term}"))?;
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(format!("task-fail probability out of [0,1]: {term}"));
+                    }
+                    spec.task_fail_p = p;
+                }
+                "node-kill" => {
+                    spec.node_kill = true;
+                    if let Some(a) = arg {
+                        spec.seed =
+                            a.parse().map_err(|_| format!("bad node-kill seed: {term}"))?;
+                    }
+                }
+                "seed" => {
+                    spec.seed = arg
+                        .ok_or_else(|| format!("seed needs a value: {term}"))?
+                        .parse()
+                        .map_err(|_| format!("bad seed: {term}"))?;
+                }
+                _ => return Err(format!("unknown chaos term: {term}")),
+            }
+        }
+        Ok(spec)
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.task_fail_p > 0.0 || self.node_kill
+    }
+}
+
 /// Deterministic failure injector for tests and chaos benches.
 pub struct FailureInjector {
     inner: Mutex<InjectorState>,
@@ -53,6 +193,9 @@ struct InjectorState {
     /// Stop injecting after this many injected failures (u32::MAX = never).
     budget: u32,
     injected: u32,
+    /// `--chaos node-kill`: kill a node once this many tasks completed.
+    node_kill_after: Option<u64>,
+    node_killed: bool,
 }
 
 impl FailureInjector {
@@ -69,7 +212,32 @@ impl FailureInjector {
                 type_filter: type_filter.to_string(),
                 budget,
                 injected: 0,
+                node_kill_after: None,
+                node_killed: false,
             }),
+        }
+    }
+
+    /// Arm the `--chaos node-kill` hook: [`FailureInjector::node_kill_due`]
+    /// fires once, after `after_completions` tasks have finished. The
+    /// trigger point is chosen by the caller from the chaos seed so the
+    /// kill lands at a deterministic (but run-specific) point mid-run.
+    pub fn arm_node_kill(&self, after_completions: u64) {
+        let mut s = self.inner.lock().unwrap();
+        s.node_kill_after = Some(after_completions);
+        s.node_killed = false;
+    }
+
+    /// One-shot trigger: true exactly once, at the first call where
+    /// `completed` reaches the armed threshold.
+    pub fn node_kill_due(&self, completed: u64) -> bool {
+        let mut s = self.inner.lock().unwrap();
+        match s.node_kill_after {
+            Some(after) if !s.node_killed && completed >= after => {
+                s.node_killed = true;
+                true
+            }
+            _ => false,
         }
     }
 
@@ -94,6 +262,16 @@ impl FailureInjector {
     /// Failures injected so far.
     pub fn injected(&self) -> u32 {
         self.inner.lock().unwrap().injected
+    }
+
+    /// True when this injector can never fire (the [`FailureInjector::none`]
+    /// default). The runtime uses this to tell an explicitly-configured
+    /// injector apart from the no-op default: an env/`--chaos` plan only
+    /// replaces the latter, so tests that pin their own injector keep it
+    /// even under a chaos-matrix environment.
+    pub fn is_noop(&self) -> bool {
+        let s = self.inner.lock().unwrap();
+        s.probability <= 0.0 && s.node_kill_after.is_none()
     }
 }
 
@@ -134,6 +312,58 @@ mod tests {
     fn none_injector_never_fails() {
         let inj = FailureInjector::none();
         assert!((0..100).all(|_| !inj.should_fail("x")));
+    }
+
+    #[test]
+    fn node_health_tracks_kill_and_join() {
+        let h = NodeHealth::new(4);
+        assert!(!h.any_dead());
+        assert_eq!(h.alive_count(), 4);
+        assert!(h.mark_dead(NodeId(2)));
+        assert!(!h.mark_dead(NodeId(2)), "kill is idempotent");
+        assert!(h.any_dead());
+        assert_eq!(h.alive_count(), 3);
+        assert!(!h.is_alive(NodeId(2)));
+        assert!(h.is_alive(NodeId(0)));
+        assert_eq!(h.first_alive(), Some(NodeId(0)));
+        assert!(h.mark_dead(NodeId(0)));
+        assert_eq!(h.first_alive(), Some(NodeId(1)));
+        assert!(h.mark_alive(NodeId(2)));
+        assert!(!h.mark_alive(NodeId(2)), "join is idempotent");
+        assert!(h.is_alive(NodeId(2)));
+        assert!(h.any_dead(), "node 0 still down");
+        assert!(h.mark_alive(NodeId(0)));
+        assert!(!h.any_dead());
+        assert!(!h.is_alive(NodeId(9)), "out of range reads as dead");
+        assert!(!h.mark_dead(NodeId(9)));
+    }
+
+    #[test]
+    fn chaos_spec_parses_terms() {
+        assert_eq!(ChaosSpec::parse("").unwrap(), ChaosSpec::default());
+        assert_eq!(ChaosSpec::parse("none").unwrap(), ChaosSpec::default());
+        assert!(!ChaosSpec::parse("none").unwrap().is_active());
+        let s = ChaosSpec::parse("task-fail:0.1").unwrap();
+        assert!(s.is_active() && (s.task_fail_p - 0.1).abs() < 1e-12 && !s.node_kill);
+        let s = ChaosSpec::parse("node-kill").unwrap();
+        assert!(s.node_kill && s.task_fail_p == 0.0);
+        let s = ChaosSpec::parse("task-fail:0.05, node-kill:77").unwrap();
+        assert!(s.node_kill && s.seed == 77 && (s.task_fail_p - 0.05).abs() < 1e-12);
+        let s = ChaosSpec::parse("node-kill,seed:9").unwrap();
+        assert_eq!(s.seed, 9);
+        assert!(ChaosSpec::parse("task-fail").is_err());
+        assert!(ChaosSpec::parse("task-fail:1.5").is_err());
+        assert!(ChaosSpec::parse("explode").is_err());
+    }
+
+    #[test]
+    fn node_kill_hook_fires_once_at_threshold() {
+        let inj = FailureInjector::none();
+        assert!(!inj.node_kill_due(100), "unarmed never fires");
+        inj.arm_node_kill(5);
+        assert!(!inj.node_kill_due(4));
+        assert!(inj.node_kill_due(5));
+        assert!(!inj.node_kill_due(6), "one-shot");
     }
 
     #[test]

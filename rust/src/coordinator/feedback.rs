@@ -266,6 +266,9 @@ impl PlacementModel for AdaptivePlacement {
             let mut best: Option<(f64, usize, usize)> = None;
             for (i, res) in resident.iter().enumerate() {
                 let node = NodeId(i as u32);
+                if !signals.alive(node) {
+                    continue;
+                }
                 let missing = total.saturating_sub(*res);
                 let credit = signals.inflight_toward(node).min(missing);
                 let bw = self
@@ -428,6 +431,31 @@ mod tests {
             depth: vec![1, 0],
         };
         assert_eq!(adaptive.place(&t, 2, &signals), 1);
+    }
+
+    #[test]
+    fn warm_adaptive_skips_dead_nodes() {
+        // Node 0 has the fastest observed link and all the resident bytes,
+        // but is dead: the warm scorer must not pick it.
+        struct DeadZero;
+        impl PlacementSignals for DeadZero {
+            fn inflight_toward(&self, _node: NodeId) -> u64 {
+                0
+            }
+            fn queue_depth(&self, _node: NodeId) -> usize {
+                0
+            }
+            fn alive(&self, node: NodeId) -> bool {
+                node.0 != 0
+            }
+        }
+        let adaptive = AdaptivePlacement::new();
+        for _ in 0..3 {
+            adaptive.stats().record_transfer(NodeId(0), 1 << 30, 1.0);
+        }
+        assert!(adaptive.stats().warm());
+        let t = rt(1, vec![(1000, vec![NodeId(0)])]);
+        assert_eq!(adaptive.place(&t, 2, &DeadZero), 1);
     }
 
     #[test]

@@ -70,6 +70,14 @@ pub trait PlacementSignals {
 
     /// Ready tasks currently queued on `node`'s shard.
     fn queue_depth(&self, node: NodeId) -> usize;
+
+    /// Is `node` accepting work? Dead nodes (lost mid-run, see
+    /// `NodeHealth`) are poisoned out of every model's scan so nothing new
+    /// routes toward a machine that cannot execute it. Defaults to `true`:
+    /// signal sources that predate node-loss recovery never kill anything.
+    fn alive(&self, _node: NodeId) -> bool {
+        true
+    }
 }
 
 /// All-zero signals: locality-snapshot-only placement (unit tests, pure
@@ -139,6 +147,27 @@ pub(crate) fn with_scores<R>(nodes: usize, f: impl FnOnce(&mut [u64]) -> R) -> R
     }
 }
 
+/// Round-robin cursor advance that lands on the next *alive* node: the
+/// shared fallback for locality-free placement. With every node alive this
+/// degenerates to the historical `fetch_add % nodes`, so verdict sequences
+/// (and the tests pinning them) are unchanged until a node actually dies.
+/// All-dead clusters fall back to the raw rotation — the push cannot block.
+pub(crate) fn rr_next_alive(
+    rr: &AtomicUsize,
+    nodes: usize,
+    signals: &dyn PlacementSignals,
+) -> usize {
+    let n = nodes.max(1);
+    let start = rr.fetch_add(1, Ordering::Relaxed);
+    for off in 0..n {
+        let i = (start + off) % n;
+        if signals.alive(NodeId(i as u32)) {
+            return i;
+        }
+    }
+    start % n
+}
+
 /// Sum each node's resident input bytes into `scores` (length `nodes`).
 pub(crate) fn resident_per_node(task: &ReadyTask, scores: &mut [u64]) {
     for (bytes, locs) in &task.inputs {
@@ -176,16 +205,17 @@ impl PlacementModel for BytesPlacement {
         "bytes"
     }
 
-    fn place(&self, task: &ReadyTask, nodes: usize, _signals: &dyn PlacementSignals) -> usize {
+    fn place(&self, task: &ReadyTask, nodes: usize, signals: &dyn PlacementSignals) -> usize {
         with_scores(nodes, |scores| {
             resident_per_node(task, scores);
             scores
                 .iter()
                 .enumerate()
+                .filter(|(i, _)| signals.alive(NodeId(*i as u32)))
                 .max_by_key(|(_, b)| **b)
                 .filter(|(_, b)| **b > 0)
                 .map(|(i, _)| i)
-                .unwrap_or_else(|| self.rr.fetch_add(1, Ordering::Relaxed) % nodes.max(1))
+                .unwrap_or_else(|| rr_next_alive(&self.rr, nodes, signals))
         })
     }
 }
@@ -239,6 +269,9 @@ impl PlacementModel for CostPlacement {
             let penalty_per_task = total / 8 + 1;
             let mut best: Option<(u128, usize, usize)> = None;
             for (i, resident) in scores.iter().enumerate() {
+                if !signals.alive(NodeId(i as u32)) {
+                    continue;
+                }
                 let missing = total.saturating_sub(*resident);
                 let credit = signals.inflight_toward(NodeId(i as u32)).min(missing);
                 let depth = signals.queue_depth(NodeId(i as u32));
@@ -279,8 +312,8 @@ impl PlacementModel for RoundRobinPlacement {
         "roundrobin"
     }
 
-    fn place(&self, _task: &ReadyTask, nodes: usize, _signals: &dyn PlacementSignals) -> usize {
-        self.rr.fetch_add(1, Ordering::Relaxed) % nodes.max(1)
+    fn place(&self, _task: &ReadyTask, nodes: usize, signals: &dyn PlacementSignals) -> usize {
+        rr_next_alive(&self.rr, nodes, signals)
     }
 }
 
@@ -294,6 +327,7 @@ impl PlacementModel for RoundRobinPlacement {
 pub struct RoutedReady {
     shards: Vec<Box<dyn Scheduler>>,
     model: Arc<dyn PlacementModel>,
+    alive: Vec<bool>,
 }
 
 /// Queue-depth view over `RoutedReady`'s shards (no transfer plane in the
@@ -301,6 +335,7 @@ pub struct RoutedReady {
 /// flight" between events).
 struct ShardDepths<'a> {
     shards: &'a [Box<dyn Scheduler>],
+    alive: &'a [bool],
 }
 
 impl PlacementSignals for ShardDepths<'_> {
@@ -314,6 +349,10 @@ impl PlacementSignals for ShardDepths<'_> {
             .map(|s| s.queue_len())
             .unwrap_or(0)
     }
+
+    fn alive(&self, node: NodeId) -> bool {
+        self.alive.get(node.0 as usize).copied().unwrap_or(false)
+    }
 }
 
 impl RoutedReady {
@@ -323,22 +362,57 @@ impl RoutedReady {
         let shards = (0..nodes.max(1))
             .map(|_| scheduler_by_name(policy))
             .collect::<Option<Vec<_>>>()?;
-        Some(RoutedReady { shards, model })
+        let alive = vec![true; shards.len()];
+        Some(RoutedReady {
+            shards,
+            model,
+            alive,
+        })
     }
 
     pub fn nodes(&self) -> u32 {
         self.shards.len() as u32
     }
 
+    /// Mark a node dead (false) or rejoined (true) for routing. Dead
+    /// shards take no new pushes; tasks already queued there stay stealable
+    /// through [`RoutedReady::pop_for`]'s ring scan, mirroring the live
+    /// fabric's drain-by-stealing behavior.
+    pub fn set_alive(&mut self, node: NodeId, alive: bool) {
+        if let Some(slot) = self.alive.get_mut(node.0 as usize) {
+            *slot = alive;
+        }
+    }
+
+    /// Is `node` currently accepting work?
+    pub fn is_alive(&self, node: NodeId) -> bool {
+        self.alive.get(node.0 as usize).copied().unwrap_or(false)
+    }
+
     /// Route and enqueue a ready task; returns the chosen node index.
     pub fn push(&mut self, task: ReadyTask) -> usize {
-        let shard = self.model.place(
+        let mut shard = self.model.place(
             &task,
             self.shards.len(),
             &ShardDepths {
                 shards: &self.shards,
+                alive: &self.alive,
             },
         );
+        // Belt guard: a model that ignores the alive signal must still not
+        // strand work on a dead shard nothing will ever pop from first.
+        if !self.alive.get(shard).copied().unwrap_or(false) {
+            if let Some(fallback) = self
+                .alive
+                .iter()
+                .enumerate()
+                .filter(|(_, a)| **a)
+                .map(|(i, _)| i)
+                .min_by_key(|i| self.shards[*i].queue_len())
+            {
+                shard = fallback;
+            }
+        }
         self.shards[shard].push(task);
         shard
     }
@@ -527,5 +601,64 @@ mod tests {
         assert_eq!(q.pop_for(NodeId(1)), Some(TaskId(2)));
         assert_eq!(q.pop_for(NodeId(1)), None);
         assert!(RoutedReady::new("zzz", 2, placement_by_name("cost").unwrap()).is_none());
+    }
+
+    /// Signals with a dead-node mask and no other pressure.
+    struct Mask {
+        alive: Vec<bool>,
+    }
+
+    impl PlacementSignals for Mask {
+        fn inflight_toward(&self, _node: NodeId) -> u64 {
+            0
+        }
+
+        fn queue_depth(&self, _node: NodeId) -> usize {
+            0
+        }
+
+        fn alive(&self, node: NodeId) -> bool {
+            self.alive.get(node.0 as usize).copied().unwrap_or(false)
+        }
+    }
+
+    #[test]
+    fn dead_nodes_are_poisoned_out_of_every_model() {
+        // All the resident bytes live on node 1 — but node 1 is dead, so
+        // every model must route elsewhere.
+        let dead1 = Mask {
+            alive: vec![true, false, true],
+        };
+        let t = rt(1, vec![(1000, vec![NodeId(1)])]);
+        assert_ne!(BytesPlacement::new().place(&t, 3, &dead1), 1);
+        assert_ne!(CostPlacement::new().place(&t, 3, &dead1), 1);
+        // Round-robin rotates over the survivors only.
+        let m = RoundRobinPlacement::new();
+        assert_eq!(m.place(&t, 3, &dead1), 0);
+        assert_eq!(m.place(&t, 3, &dead1), 2);
+        assert_eq!(m.place(&t, 3, &dead1), 2);
+        assert_eq!(m.place(&t, 3, &dead1), 0);
+        // With nobody alive the rotation still terminates.
+        let none = Mask {
+            alive: vec![false, false],
+        };
+        let free = rt(2, vec![]);
+        let i = BytesPlacement::new().place(&free, 2, &none);
+        assert!(i < 2);
+    }
+
+    #[test]
+    fn routed_ready_reroutes_off_dead_shards_and_back_on_join() {
+        let model = placement_by_name("bytes").unwrap();
+        let mut q = RoutedReady::new("fifo", 2, model).unwrap();
+        q.set_alive(NodeId(1), false);
+        assert!(!q.is_alive(NodeId(1)));
+        // Locality points at the dead node; the verdict must not.
+        assert_eq!(q.push(rt(1, vec![(100, vec![NodeId(1)])])), 0);
+        // Rejoin re-opens the shard for placement.
+        q.set_alive(NodeId(1), true);
+        assert_eq!(q.push(rt(2, vec![(100, vec![NodeId(1)])])), 1);
+        assert_eq!(q.pop_for(NodeId(0)), Some(TaskId(1)));
+        assert_eq!(q.pop_for(NodeId(0)), Some(TaskId(2)));
     }
 }

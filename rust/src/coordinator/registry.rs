@@ -28,6 +28,7 @@ use std::path::PathBuf;
 use std::sync::{Arc, RwLock};
 
 use crate::coordinator::dag::TaskId;
+use crate::value::RValue;
 
 /// A cluster node index. Node 0 also hosts the master, as in COMPSs
 /// deployments where the leader process shares the first allocation.
@@ -100,6 +101,20 @@ pub struct CollectAction {
     pub path: Option<PathBuf>,
     /// Recorded size of the version (serialized size or payload estimate).
     pub bytes: u64,
+}
+
+/// Outcome of [`VersionTable::drop_node`] — the location-half of losing a
+/// node.
+#[derive(Debug, Default)]
+pub struct NodeDropReport {
+    /// Versions whose *only* replica lived on the dead node and that have
+    /// no published cold-tier file: their bytes are gone and must be
+    /// re-derived from lineage (or re-materialized, for literals).
+    pub lost: Vec<DataKey>,
+    /// Versions that lost their last node replica but keep a cold-tier
+    /// file on the shared filesystem: recoverable without re-execution
+    /// (this is what `--checkpoint cold` buys).
+    pub survivable: usize,
 }
 
 /// Sharded version/location table. Every method takes `&self`; shard locks
@@ -378,6 +393,53 @@ impl VersionTable {
             .map(|s| s.read().unwrap().values().map(|v| v.bytes).sum::<u64>())
             .sum()
     }
+
+    /// Drop a dead node from every version's location set (node-loss
+    /// recovery, step one). A version whose only replica lived there
+    /// becomes *lost* — unavailable, to be re-derived from lineage —
+    /// unless a cold-tier file was published for it (the shared
+    /// filesystem survives the node), in which case it stays available
+    /// and future consumers stage it from the file.
+    pub fn drop_node(&self, node: NodeId) -> NodeDropReport {
+        let mut report = NodeDropReport::default();
+        for s in &self.shards {
+            let mut shard = s.write().unwrap();
+            for (key, info) in shard.iter_mut() {
+                if !info.locations.contains(&node) {
+                    continue;
+                }
+                info.locations.retain(|n| *n != node);
+                if info.collected || !info.available || !info.locations.is_empty() {
+                    continue;
+                }
+                info.in_memory = false;
+                if info.path.as_os_str().is_empty() {
+                    info.available = false;
+                    report.lost.push(*key);
+                } else {
+                    report.survivable += 1;
+                }
+            }
+        }
+        report
+    }
+
+    /// Reset a version so its producer can re-derive it (lineage
+    /// recovery): availability, residency, locations, and — for a version
+    /// the GC already collected — the `collected` mark are cleared, so the
+    /// re-execution's publish and the re-registered consumers drive the
+    /// normal lifecycle again. The path is cleared too (a collected
+    /// version's file is already deleted; a lost one never had a file).
+    pub fn reset_for_recovery(&self, key: DataKey) {
+        let mut shard = self.shard(key).write().unwrap();
+        if let Some(info) = shard.get_mut(&key) {
+            info.available = false;
+            info.in_memory = false;
+            info.collected = false;
+            info.locations.clear();
+            info.path = PathBuf::new();
+        }
+    }
 }
 
 /// Shared collection gate (called under the owning shard's write lock):
@@ -427,6 +489,12 @@ pub struct DataRegistry {
     latest: HashMap<DataId, u32>,
     history: HashMap<DataId, AccessHistory>,
     table: Arc<VersionTable>,
+    /// Lineage retention for master-materialized values: a memory-plane
+    /// literal has no producer task to re-run, so node-loss recovery
+    /// re-publishes it from this map instead. (File-plane literals live on
+    /// the shared filesystem and never need it.) Retained for the whole
+    /// run — literals are the leaves of every lineage chain.
+    literals: HashMap<DataKey, Arc<RValue>>,
 }
 
 impl Default for DataRegistry {
@@ -447,7 +515,20 @@ impl DataRegistry {
             latest: HashMap::new(),
             history: HashMap::new(),
             table,
+            literals: HashMap::new(),
         }
+    }
+
+    /// Retain a memory-plane literal's value for node-loss recovery (see
+    /// the `literals` field). The runtime calls this right after
+    /// materializing a literal into the hot tier.
+    pub fn retain_literal(&mut self, key: DataKey, value: Arc<RValue>) {
+        self.literals.insert(key, value);
+    }
+
+    /// The retained value of a master-materialized literal, if any.
+    pub fn literal_value(&self, key: DataKey) -> Option<Arc<RValue>> {
+        self.literals.get(&key).cloned()
     }
 
     /// The shared location half.
@@ -814,6 +895,74 @@ mod tests {
         assert_eq!(act.path.as_deref(), Some(std::path::Path::new("/tmp/d1v1.par")));
         // The path is cleared so no reader can reach the deleted file.
         assert!(table.path_of(key).is_none());
+    }
+
+    #[test]
+    fn drop_node_distinguishes_lost_replicated_and_survivable() {
+        let table = Arc::new(VersionTable::new());
+        let mut reg = DataRegistry::with_table(Arc::clone(&table));
+        // Sole memory replica on the dead node: lost.
+        let lost = reg.new_future(T1);
+        table.mark_available_memory(lost, NodeId(2), 64);
+        // Replicated on another node: survives with the other replica.
+        let replicated = reg.new_future(T1);
+        table.mark_available_memory(replicated, NodeId(2), 32);
+        table.add_location(replicated, NodeId(0));
+        // Sole replica but a cold file was published: survivable.
+        let spilled = reg.new_future(T1);
+        table.mark_available_memory(spilled, NodeId(2), 16);
+        table.mark_spilled(spilled, 20, PathBuf::from("/tmp/d3v1.par"));
+        // Not on the dead node at all: untouched.
+        let elsewhere = reg.new_future(T1);
+        table.mark_available_memory(elsewhere, NodeId(0), 8);
+
+        let report = table.drop_node(NodeId(2));
+        assert_eq!(report.lost, vec![lost]);
+        assert_eq!(report.survivable, 1);
+        assert!(!table.is_available(lost), "lost version is unavailable");
+        assert!(table.is_available(replicated));
+        assert!(table.is_local(replicated, NodeId(0)));
+        assert!(!table.is_local(replicated, NodeId(2)));
+        assert!(table.is_available(spilled), "cold file keeps it available");
+        assert!(table.info(spilled).unwrap().locations.is_empty());
+        assert!(table.is_available(elsewhere));
+        // Idempotent: a second drop finds nothing.
+        let again = table.drop_node(NodeId(2));
+        assert!(again.lost.is_empty());
+        assert_eq!(again.survivable, 0);
+    }
+
+    #[test]
+    fn reset_for_recovery_revives_collected_versions() {
+        let table = Arc::new(VersionTable::new());
+        let mut reg = DataRegistry::with_table(Arc::clone(&table));
+        let key = reg.new_future(T1);
+        table.mark_available_memory(key, NodeId(0), 64);
+        reg.record_read(key.data, T2);
+        table.release_consumer(key, true).expect("collected");
+        assert!(table.is_collected(key));
+        // A reopened consumer re-registers, then recovery resets the
+        // version; the re-executed producer's publish restarts the cycle.
+        table.add_consumer(key);
+        table.reset_for_recovery(key);
+        let info = table.info(key).unwrap();
+        assert!(!info.collected && !info.available && !info.in_memory);
+        assert!(info.locations.is_empty());
+        assert_eq!(info.consumers_left, 1);
+        table.mark_available_memory(key, NodeId(1), 64);
+        let act = table.release_consumer(key, true).expect("collects again");
+        assert_eq!(act.bytes, 64);
+    }
+
+    #[test]
+    fn literal_retention_round_trips() {
+        let mut reg = DataRegistry::new();
+        let key = reg.new_literal(16, NodeId(0));
+        assert!(reg.literal_value(key).is_none());
+        let v = Arc::new(RValue::scalar(7.0));
+        reg.retain_literal(key, Arc::clone(&v));
+        let got = reg.literal_value(key).expect("retained");
+        assert!(Arc::ptr_eq(&v, &got));
     }
 
     #[test]

@@ -22,7 +22,7 @@
 //! [`TransferService`] — workers touch the control lock only to flip task
 //! states.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -32,7 +32,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::access::Direction;
 use crate::coordinator::dag::{EdgeKind, TaskGraph, TaskId, TaskState};
 use crate::coordinator::executor;
-use crate::coordinator::fault::{FailureInjector, RetryPolicy};
+use crate::coordinator::fault::{ChaosSpec, FailureInjector, NodeHealth, RetryPolicy};
 use crate::coordinator::feedback::FeedbackStats;
 use crate::coordinator::placement::{placement_by_name, InflightSource};
 use crate::coordinator::registry::{CollectAction, DataKey, DataRegistry, NodeId, VersionTable};
@@ -161,6 +161,17 @@ pub struct CoordinatorConfig {
     /// consumer already finished is an error under GC (pin or fetch
     /// before the last consumer, or disable GC).
     pub gc: bool,
+    /// Chaos plan (`--chaos` / `RCOMPSS_CHAOS`): probabilistic task
+    /// failures and/or a seeded one-shot node kill mid-run. Default: no
+    /// chaos. `with_chaos` with a positive task-fail probability also
+    /// raises the retry budget floor to 6 so chaos exercises recovery, not
+    /// spurious permanent failures.
+    pub chaos: ChaosSpec,
+    /// Checkpoint policy (`--checkpoint`): `"none"` (default) or `"cold"`
+    /// — proactively publish sole-replica hot/warm versions through the
+    /// cold tier (bounded by measured re-execution cost) so a node loss
+    /// replays *tasks, not runs*.
+    pub checkpoint: String,
 }
 
 /// Default byte budget of the in-memory data plane — the single source of
@@ -209,6 +220,11 @@ impl CoordinatorConfig {
             spill: "lru".into(),
             transfer_threads: 1,
             gc: true,
+            chaos: std::env::var("RCOMPSS_CHAOS")
+                .ok()
+                .and_then(|v| ChaosSpec::parse(&v).ok())
+                .unwrap_or_default(),
+            checkpoint: std::env::var("RCOMPSS_CHECKPOINT").unwrap_or_else(|_| "none".into()),
         }
     }
 
@@ -284,6 +300,32 @@ impl CoordinatorConfig {
     /// Enable the reference-counted version GC.
     pub fn with_gc(mut self, on: bool) -> Self {
         self.gc = on;
+        self
+    }
+
+    /// Install a chaos plan (see [`ChaosSpec::parse`] for the `--chaos`
+    /// grammar). A positive task-fail probability raises the retry budget
+    /// floor to 6 so injected failures exercise resubmission rather than
+    /// instantly exhausting the default budget.
+    pub fn with_chaos(mut self, chaos: ChaosSpec) -> Self {
+        if chaos.task_fail_p > 0.0 {
+            self.retry.max_retries = self.retry.max_retries.max(6);
+        }
+        self.chaos = chaos;
+        self
+    }
+
+    /// Checkpoint policy: `"none"` | `"cold"`. Validated at
+    /// [`Coordinator::start`].
+    pub fn with_checkpoint(mut self, policy: &str) -> Self {
+        self.checkpoint = policy.into();
+        self
+    }
+
+    /// Per-task retry budget (`--max-retries`): how many times a failed
+    /// execution is resubmitted before the task fails permanently.
+    pub fn with_max_retries(mut self, retries: u32) -> Self {
+        self.retry.max_retries = retries;
         self
     }
 }
@@ -379,6 +421,19 @@ pub struct RuntimeStats {
     /// Bytes of dead versions (fully consumed, unpinned, unreclaimed) at
     /// snapshot time — zero at quiescence when the GC is on.
     pub dead_version_bytes: u64,
+    /// Node-loss recovery: tasks whose Done state was reopened and
+    /// re-executed to re-derive versions lost with a node. Strictly less
+    /// than `tasks_submitted` when recovery replays only the lost subgraph.
+    pub lineage_resubmissions: u64,
+    /// Checkpoint policy: sole-replica versions proactively published
+    /// through the cold tier.
+    pub checkpoints_written: u64,
+    /// Serialized bytes those checkpoints wrote.
+    pub checkpoint_bytes: u64,
+    /// Nodes lost (`kill_node` / `--chaos node-kill`).
+    pub nodes_killed: u64,
+    /// Nodes rejoined (`add_node`).
+    pub nodes_joined: u64,
 }
 
 /// Per-task metadata kept by the coordinator; shared with claimants as an
@@ -433,6 +488,20 @@ pub(crate) struct Shared {
     pub retry: RetryPolicy,
     pub injector: Arc<FailureInjector>,
     pub stopping: AtomicBool,
+    /// Node liveness plane: one flag per emulated node, read by the
+    /// dispatch fabric, the placement models, the movers, and the claim
+    /// path. `kill_node` flips a flag dead; `add_node` flips it back.
+    pub health: Arc<NodeHealth>,
+    /// `--checkpoint cold`: proactively publish sole-replica versions
+    /// through the cold tier after execution (bounded by measured
+    /// re-execution cost).
+    pub checkpoint_cold: bool,
+    /// `--chaos node-kill` victim (highest-numbered node), killed once the
+    /// armed completion count is reached.
+    pub chaos_victim: Option<NodeId>,
+    /// Checkpoint accounting: versions written / serialized bytes.
+    pub checkpoints_written: AtomicU64,
+    pub checkpoint_bytes: AtomicU64,
 }
 
 impl Shared {
@@ -526,6 +595,151 @@ fn collect_version(shared: &Shared, act: &CollectAction) {
     shared.gc_bytes.fetch_add(act.bytes, Ordering::Relaxed);
 }
 
+/// Kill a node: mark it dead in the health plane (dispatch, placement, and
+/// the movers all stop routing toward it), fast-fail its in-flight
+/// transfers, drop it from every version's location set, and re-derive the
+/// versions it was the sole holder of by reopening their producing tasks
+/// (transitively — a producer whose own inputs died with the node reopens
+/// too). Refuses to kill the last alive node. Returns whether the node was
+/// alive (idempotent).
+pub(crate) fn kill_node_now(shared: &Shared, node: NodeId) -> bool {
+    if shared.health.alive_count() <= 1 {
+        return false;
+    }
+    if !shared.health.mark_dead(node) {
+        return false;
+    }
+    // Fail in-flight and queued transfers toward/from the dead node fast —
+    // claimants get an immediate error instead of a 3-attempt grind.
+    shared.transfers.fail_node(node);
+    let report = shared.table.drop_node(node);
+    {
+        let mut core = shared.core.lock().unwrap();
+        core.stats.nodes_killed += 1;
+        recover_lost_versions(shared, &mut core, &report.lost);
+    }
+    // Dead workers park; waiters may be blocked on a version that just got
+    // rewired to a reopened producer.
+    shared.ready.wake_all();
+    shared.cv_done.notify_all();
+    true
+}
+
+/// Re-admit a node: mark it alive (its shard re-opens for placement and
+/// stealing, its parked workers resume) and clear the transfer board's
+/// dead-node tombstones. Returns whether the node was dead (idempotent).
+pub(crate) fn rejoin_node(shared: &Shared, node: NodeId) -> bool {
+    if !shared.health.mark_alive(node) {
+        return false;
+    }
+    shared.transfers.revive_node(node);
+    {
+        let mut core = shared.core.lock().unwrap();
+        core.stats.nodes_joined += 1;
+    }
+    shared.ready.wake_all();
+    true
+}
+
+/// Lineage re-execution: given the versions that became unavailable with a
+/// dead node, walk producers transitively, reopen every completed task
+/// whose output was lost, re-seed lost literal arguments from the
+/// registry's retained copies, and resubmit the ready frontier. Runs under
+/// the held control lock so no claim can interleave between the consumer
+/// re-registration, the version resets, and the reopen.
+fn recover_lost_versions(shared: &Shared, core: &mut Core, lost: &[DataKey]) {
+    let mut stack: Vec<DataKey> = lost.to_vec();
+    let mut seen: HashSet<DataKey> = lost.iter().copied().collect();
+    let mut reopen: HashSet<TaskId> = HashSet::new();
+    let mut lost_literals: Vec<DataKey> = Vec::new();
+    while let Some(key) = stack.pop() {
+        // The store may still hold a stale hot/warm entry for the lost
+        // replica (residency is emulated per node); drop it and the
+        // version's transfer-board entries so nothing serves stale bytes.
+        shared.store.discard_resident(key);
+        shared.transfers.purge_version(key);
+        let Some(info) = shared.table.info(key) else {
+            continue;
+        };
+        match info.producer {
+            None => lost_literals.push(key),
+            Some(tid) => {
+                if core.graph.state(tid) == Some(TaskState::Done) && reopen.insert(tid) {
+                    // The producer must re-run: every input it consumed is
+                    // needed again. Inputs that are themselves gone
+                    // (collected by the GC, or lost with the node and not
+                    // replicated anywhere) recurse.
+                    let meta = Arc::clone(&core.meta[&tid]);
+                    for input in &meta.inputs {
+                        if seen.contains(input) {
+                            continue;
+                        }
+                        let gone = match shared.table.info(*input) {
+                            Some(i) => {
+                                i.collected
+                                    || !i.available
+                                    || (i.locations.is_empty() && i.path.as_os_str().is_empty())
+                            }
+                            None => true,
+                        };
+                        if gone {
+                            seen.insert(*input);
+                            stack.push(*input);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    if reopen.is_empty() && lost_literals.is_empty() {
+        return;
+    }
+    // Order matters, all under the one lock hold:
+    // (a) re-register a consumer count on every input of every reopened
+    //     task — before any reset, so the GC can never reclaim an input
+    //     between its reset and the re-execution that reads it;
+    for tid in &reopen {
+        let meta = Arc::clone(&core.meta[tid]);
+        for input in &meta.inputs {
+            shared.table.add_consumer(*input);
+        }
+    }
+    // (b) re-seed lost literals from the registry's retained values (the
+    //     master materialized them; no task can re-derive them);
+    for key in lost_literals {
+        let Some(value) = core.registry.literal_value(key) else {
+            eprintln!("rcompss: literal {key} lost with node and not retained; dependents will fail");
+            continue;
+        };
+        let home = shared.health.first_alive().unwrap_or(NodeId(0));
+        let nbytes = value.byte_size() as u64;
+        shared.table.reset_for_recovery(key);
+        let victims = shared.store.hot().put(key, value, false);
+        shared.table.mark_available_memory(key, home, nbytes);
+        store::demote_victims(shared, victims);
+    }
+    // (c) reset the reopened tasks' lost outputs to unavailable (never
+    //     clobbering a version that still has a live replica or file);
+    for tid in &reopen {
+        let meta = Arc::clone(&core.meta[tid]);
+        for output in &meta.outputs {
+            if let Some(i) = shared.table.info(*output) {
+                let still_there = i.available
+                    && (!i.locations.is_empty() || !i.path.as_os_str().is_empty());
+                if i.collected || !still_there {
+                    shared.table.reset_for_recovery(*output);
+                }
+            }
+        }
+    }
+    // (d) flip the DAG states and resubmit the ready frontier.
+    let ready = core.graph.reopen(&reopen);
+    core.stats.lineage_resubmissions += reopen.len() as u64;
+    for id in ready {
+        shared.enqueue_ready(core, id);
+    }
+}
+
 /// The coordinator: one per application run (`compss_start` .. `compss_stop`).
 pub struct Coordinator {
     pub(crate) shared: Arc<Shared>,
@@ -537,9 +751,17 @@ pub struct Coordinator {
 impl Coordinator {
     /// Start the runtime: create the workdir, spawn the persistent worker
     /// pool, and return the handle (the `compss_start()` of the paper).
-    pub fn start(config: CoordinatorConfig) -> Result<Coordinator> {
+    pub fn start(mut config: CoordinatorConfig) -> Result<Coordinator> {
         std::fs::create_dir_all(&config.workdir)
             .with_context(|| format!("create workdir {}", config.workdir.display()))?;
+        let checkpoint_requested = match config.checkpoint.as_str() {
+            "none" => false,
+            "cold" => true,
+            other => bail!(
+                "unknown checkpoint policy '{other}' (none|cold; set via --checkpoint or \
+                 with_checkpoint)"
+            ),
+        };
         let model = placement_by_name(&config.router).ok_or_else(|| {
             anyhow!(
                 "unknown router '{}' (bytes|cost|roundrobin|adaptive; set via --router, \
@@ -574,6 +796,30 @@ impl Coordinator {
             0
         };
         let transfers = Arc::new(TransferService::new(movers_per_node, config.nodes));
+        let health = Arc::new(NodeHealth::new(config.nodes as usize));
+        // Chaos plan: a positive task-fail probability installs a
+        // catch-all injector (and `with_chaos` already raised the retry
+        // floor); `node-kill` arms a one-shot seeded kill of the
+        // highest-numbered node after a few completions. An explicitly
+        // configured injector wins over the env/`--chaos` plan so tests
+        // that pin their own injection stay deterministic under a
+        // chaos-matrix environment.
+        if config.chaos.task_fail_p > 0.0 && config.injector.is_noop() {
+            config.retry.max_retries = config.retry.max_retries.max(6);
+            config.injector = Arc::new(FailureInjector::new(
+                config.chaos.task_fail_p,
+                "",
+                u32::MAX,
+                config.chaos.seed,
+            ));
+        }
+        let chaos_victim = if config.chaos.node_kill && config.nodes > 1 {
+            let mut rng = crate::util::prng::Pcg64::new(config.chaos.seed, 0xD1E);
+            config.injector.arm_node_kill(3 + rng.below(20));
+            Some(NodeId(config.nodes - 1))
+        } else {
+            None
+        };
         // The fabric routes with the configured placement model and reads
         // the transfer board's in-flight gauge — the same verdict the
         // prefetcher and the simulator consult.
@@ -589,7 +835,8 @@ impl Coordinator {
                  with_scheduler, or the RCOMPSS_SCHEDULER default override)",
                 config.scheduler
             )
-        })?;
+        })?
+        .with_health(Arc::clone(&health));
         let shared = Arc::new(Shared {
             core: Mutex::new(Core {
                 graph: TaskGraph::new(),
@@ -613,6 +860,13 @@ impl Coordinator {
             retry: config.retry,
             injector: config.injector.clone(),
             stopping: AtomicBool::new(false),
+            health,
+            // Checkpointing needs a cold tier to write through, which only
+            // exists on the memory plane.
+            checkpoint_cold: checkpoint_requested && memory_budget > 0,
+            chaos_victim,
+            checkpoints_written: AtomicU64::new(0),
+            checkpoint_bytes: AtomicU64::new(0),
         });
 
         // Persistent worker pool: `nodes * workers_per_node` executors that
@@ -750,7 +1004,11 @@ impl Coordinator {
                     let nbytes = value.byte_size() as u64;
                     let key = {
                         let mut core = self.shared.core.lock().unwrap();
-                        core.registry.new_literal(nbytes, NodeId(0))
+                        let key = core.registry.new_literal(nbytes, NodeId(0));
+                        // Retained so node-loss recovery can re-seed the
+                        // literal — no task can re-derive it.
+                        core.registry.retain_literal(key, Arc::clone(&value));
+                        key
                     };
                     let victims = self.shared.store.hot().put(key, value, false);
                     self.shared.table.mark_available_memory(key, NodeId(0), nbytes);
@@ -871,6 +1129,23 @@ impl Coordinator {
         (SubmitOutcome { returns, updated }, cancelled)
     }
 
+    /// Kill an emulated node mid-run: its workers park, its shard closes
+    /// for placement and stealing, in-flight transfers toward/from it fail
+    /// fast, and every version it was the sole holder of is re-derived by
+    /// lineage re-execution (the producing tasks — transitively — reopen
+    /// and re-enter the ready queue). Refuses to kill the last alive node.
+    /// Returns `true` if the node was alive.
+    pub fn kill_node(&self, node: NodeId) -> bool {
+        kill_node_now(&self.shared, node)
+    }
+
+    /// Re-admit a previously-killed node: its shard re-opens for placement
+    /// and stealing and its parked workers resume. Returns `true` if the
+    /// node was dead.
+    pub fn add_node(&self, node: NodeId) -> bool {
+        rejoin_node(&self.shared, node)
+    }
+
     /// Pin a version so the GC never reclaims it, without waiting for it.
     /// Call this before the value's last task consumer may finish when the
     /// application plans to fetch the handle later — `wait_on` pins
@@ -896,7 +1171,7 @@ impl Coordinator {
         if !self.shared.table.pin(key) {
             bail!("unknown datum {key}");
         }
-        {
+        loop {
             let mut core = self.shared.core.lock().unwrap();
             loop {
                 let info = self
@@ -918,32 +1193,54 @@ impl Coordinator {
                     .ok_or_else(|| anyhow!("unknown datum {key}"))?;
                 match core.graph.state(producer) {
                     Some(TaskState::Failed) => {
-                        bail!("task {producer} producing {key} failed permanently")
+                        bail!(
+                            "task producing {key} failed permanently: {}",
+                            core.graph.failure_blurb(producer)
+                        )
                     }
                     Some(TaskState::Cancelled) => {
-                        bail!("task {producer} producing {key} was cancelled")
+                        match core.graph.node(producer).and_then(|n| n.cancelled_by) {
+                            Some(root) => bail!(
+                                "task {producer} producing {key} was cancelled by failed \
+                                 ancestor {}",
+                                core.graph.failure_blurb(root)
+                            ),
+                            None => bail!("task {producer} producing {key} was cancelled"),
+                        }
                     }
                     _ => {}
                 }
                 core = self.shared.cv_done.wait(core).unwrap();
             }
+            drop(core);
+            if self.shared.store.enabled() {
+                match executor::fetch_resident(&self.shared, key) {
+                    Ok((value, _, _)) => return Ok((*value).clone()),
+                    // Lost with a node between the availability check and
+                    // the fetch: lineage recovery re-derives it — go back
+                    // to waiting, don't surface a transient error.
+                    Err(_)
+                        if !self.shared.table.is_available(key)
+                            && !self.shared.table.is_collected(key) =>
+                    {
+                        continue;
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            let path = self.shared.path_for(key);
+            let start = self.shared.tracer.now();
+            self.shared.store.cold().note_read();
+            let v = self.shared.codec.read_file(&path)?;
+            self.shared.tracer.record_at(
+                self.master_wid(),
+                EventKind::Deserialize,
+                None,
+                start,
+                self.shared.tracer.now(),
+            );
+            return Ok(v);
         }
-        if self.shared.store.enabled() {
-            let (value, _, _) = executor::fetch_resident(&self.shared, key)?;
-            return Ok((*value).clone());
-        }
-        let path = self.shared.path_for(key);
-        let start = self.shared.tracer.now();
-        self.shared.store.cold().note_read();
-        let v = self.shared.codec.read_file(&path)?;
-        self.shared.tracer.record_at(
-            self.master_wid(),
-            EventKind::Deserialize,
-            None,
-            start,
-            self.shared.tracer.now(),
-        );
-        Ok(v)
     }
 
     /// Block until every submitted task is in a terminal state
@@ -956,8 +1253,13 @@ impl Coordinator {
             .wait_while(core, |c| !c.graph.quiescent())
             .unwrap();
         if core.graph.failed_count() > 0 {
+            let root = core
+                .graph
+                .root_failure()
+                .map(|n| core.graph.failure_blurb(n.id))
+                .unwrap_or_else(|| "unknown".into());
             bail!(
-                "{} task(s) failed, {} cancelled",
+                "{} task(s) failed, {} cancelled; root cause: {root}",
                 core.graph.failed_count(),
                 core.graph.cancelled_count()
             );
@@ -1017,6 +1319,8 @@ impl Coordinator {
         stats.transfers_retried = shared.transfers.retried();
         stats.transfer_states = shared.transfers.state_count() as u64;
         stats.transfer_bytes = shared.transfers.transfer_bytes();
+        stats.checkpoints_written = shared.checkpoints_written.load(Ordering::Relaxed);
+        stats.checkpoint_bytes = shared.checkpoint_bytes.load(Ordering::Relaxed);
     }
 
     /// The observation sink behind an `adaptive` router (`None` for the
@@ -1267,6 +1571,47 @@ mod tests {
         assert_eq!(coord.shared.store.warm().fill_count(), 0);
         assert_eq!(coord.shared.store.warm().hit_count(), 0);
         assert!(coord.shared.table.path_of(key).is_some(), "file remains published");
+        coord.stop().unwrap();
+        Coordinator::cleanup_workdir(&config);
+    }
+
+    #[test]
+    fn kill_node_reseeds_lost_literals_and_join_is_idempotent() {
+        let config = mem_config(2, 1);
+        let coord = Coordinator::start(config.clone()).unwrap();
+        // A literal resident only on node 0, retained like submit() does.
+        let value = Arc::new(RValue::Real(vec![2.5; 32]));
+        let nbytes = value.byte_size() as u64;
+        let key = {
+            let mut core = coord.shared.core.lock().unwrap();
+            let key = core.registry.new_literal(nbytes, NodeId(0));
+            core.registry.retain_literal(key, Arc::clone(&value));
+            key
+        };
+        let victims = coord.shared.store.hot().put(key, value, false);
+        assert!(victims.is_empty());
+        coord.shared.table.mark_available_memory(key, NodeId(0), nbytes);
+        // Kill the sole holder: recovery re-seeds the literal on the
+        // surviving node — no task could re-derive it.
+        assert!(coord.kill_node(NodeId(0)));
+        assert!(!coord.kill_node(NodeId(0)), "kill is idempotent");
+        let info = coord.shared.table.info(key).unwrap();
+        assert!(info.available, "lost literal re-seeded");
+        assert_eq!(info.locations, vec![NodeId(1)]);
+        assert_eq!(
+            coord.shared.table.info(key).unwrap().bytes,
+            nbytes,
+            "re-seed keeps the byte estimate"
+        );
+        // The last alive node is never killable.
+        assert!(!coord.kill_node(NodeId(1)));
+        // Rejoin re-opens the shard; both transitions count once.
+        assert!(coord.add_node(NodeId(0)));
+        assert!(!coord.add_node(NodeId(0)), "join is idempotent");
+        let stats = coord.stats();
+        assert_eq!(stats.nodes_killed, 1);
+        assert_eq!(stats.nodes_joined, 1);
+        assert_eq!(stats.lineage_resubmissions, 0, "no tasks to replay");
         coord.stop().unwrap();
         Coordinator::cleanup_workdir(&config);
     }

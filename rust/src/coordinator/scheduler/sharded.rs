@@ -31,6 +31,7 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use super::{scheduler_by_name, ReadyTask, Scheduler};
 use crate::coordinator::dag::TaskId;
+use crate::coordinator::fault::NodeHealth;
 use crate::coordinator::placement::{InflightSource, PlacementModel, PlacementSignals};
 use crate::coordinator::registry::NodeId;
 
@@ -48,6 +49,10 @@ pub struct ShardedReady {
     /// In-flight transfer pressure for the `cost` model; `None` means no
     /// transfer plane (file plane, movers disabled, unit tests).
     inflight: Option<Arc<dyn InflightSource>>,
+    /// Node liveness plane; `None` (unit tests, simulator-owned fabrics)
+    /// reads as everyone-alive and keeps the historical behavior bit for
+    /// bit.
+    health: Option<Arc<NodeHealth>>,
     /// Workers registered as parked (or about to park). Lets the push hot
     /// path skip the park lock entirely while everyone is busy.
     sleepers: AtomicUsize,
@@ -60,6 +65,7 @@ pub struct ShardedReady {
 struct LiveSignals<'a> {
     depths: &'a [AtomicUsize],
     inflight: Option<&'a dyn InflightSource>,
+    health: Option<&'a NodeHealth>,
 }
 
 impl PlacementSignals for LiveSignals<'_> {
@@ -72,6 +78,10 @@ impl PlacementSignals for LiveSignals<'_> {
             .get(node.0 as usize)
             .map(|d| d.load(Ordering::Relaxed))
             .unwrap_or(0)
+    }
+
+    fn alive(&self, node: NodeId) -> bool {
+        self.health.map(|h| h.is_alive(node)).unwrap_or(true)
     }
 }
 
@@ -95,6 +105,7 @@ impl ShardedReady {
             queued: AtomicU64::new(0),
             model,
             inflight,
+            health: None,
             sleepers: AtomicUsize::new(0),
             park: Mutex::new(()),
             cv: Condvar::new(),
@@ -102,8 +113,25 @@ impl ShardedReady {
         })
     }
 
+    /// Attach the node-liveness plane: dead nodes stop receiving routing
+    /// verdicts and their workers park instead of spinning on shards they
+    /// can never drain.
+    pub fn with_health(mut self, health: Arc<NodeHealth>) -> ShardedReady {
+        self.health = Some(health);
+        self
+    }
+
     pub fn nodes(&self) -> u32 {
         self.shards.len() as u32
+    }
+
+    /// Is `node` accepting work? Health-less fabrics treat everyone as
+    /// alive.
+    fn node_alive(&self, node: NodeId) -> bool {
+        self.health
+            .as_ref()
+            .map(|h| h.is_alive(node))
+            .unwrap_or(true)
     }
 
     /// Enqueue a ready task and wake one parked worker. Returns the shard
@@ -111,14 +139,28 @@ impl ShardedReady {
     /// can prefetch the task's remote inputs toward that node at schedule
     /// time — one verdict drives both decisions.
     pub fn push(&self, task: ReadyTask) -> usize {
-        let shard = self.model.place(
+        let mut shard = self.model.place(
             &task,
             self.shards.len(),
             &LiveSignals {
                 depths: &self.depths,
                 inflight: self.inflight.as_deref(),
+                health: self.health.as_deref(),
             },
         );
+        // Belt guard: every model filters dead nodes, but a custom model
+        // (or a kill racing the verdict) must still not strand work on a
+        // shard whose own worker will never pop again. Stealing would
+        // eventually drain it, yet re-routing to the shallowest live shard
+        // is strictly better.
+        if !self.node_alive(NodeId(shard as u32)) {
+            if let Some(best) = (0..self.shards.len())
+                .filter(|i| self.node_alive(NodeId(*i as u32)))
+                .min_by_key(|i| self.depths[*i].load(Ordering::Relaxed))
+            {
+                shard = best;
+            }
+        }
         {
             // Increment while holding the shard lock so a concurrent pop of
             // this very task (its matching decrement also runs under the
@@ -134,9 +176,25 @@ impl ShardedReady {
         // so at least one of the two sides observes the other).
         if self.sleepers.load(Ordering::SeqCst) > 0 {
             let _guard = self.park.lock().unwrap();
-            self.cv.notify_one();
+            // With dead nodes in the cluster a `notify_one` could land on a
+            // dead node's worker, which re-parks without claiming anything —
+            // a lost wakeup. Wake everyone; live workers race for the task
+            // and the dead ones go straight back to sleep.
+            if self.health.as_ref().map(|h| h.any_dead()).unwrap_or(false) {
+                self.cv.notify_all();
+            } else {
+                self.cv.notify_one();
+            }
         }
         shard
+    }
+
+    /// Wake every parked worker so it re-evaluates liveness and the queues
+    /// — called after a node kill (its workers must park) or a join (its
+    /// workers must resume).
+    pub fn wake_all(&self) {
+        let _guard = self.park.lock().unwrap();
+        self.cv.notify_all();
     }
 
     /// Pop a task for a worker on `node`: own shard, then steal in ring
@@ -145,6 +203,24 @@ impl ShardedReady {
         let nodes = self.shards.len();
         let home = (node.0 as usize) % nodes;
         loop {
+            // A worker on a dead node must not claim (or steal) anything:
+            // park until the node rejoins or the runtime stops. It skips
+            // the `queued > 0` re-check below on purpose — queued work it
+            // can never pop would turn that re-check into a busy spin.
+            if !self.node_alive(node) {
+                if self.shutdown.load(Ordering::SeqCst) {
+                    return None;
+                }
+                let guard = self.park.lock().unwrap();
+                self.sleepers.fetch_add(1, Ordering::SeqCst);
+                if self.shutdown.load(Ordering::SeqCst) || self.node_alive(node) {
+                    self.sleepers.fetch_sub(1, Ordering::SeqCst);
+                    continue;
+                }
+                let _unused = self.cv.wait(guard).unwrap();
+                self.sleepers.fetch_sub(1, Ordering::SeqCst);
+                continue;
+            }
             // Scan own shard first, then the others (work stealing).
             for i in 0..nodes {
                 let shard = (home + i) % nodes;
@@ -356,5 +432,58 @@ mod tests {
         assert!(
             ShardedReady::new("zzz", 2, placement_by_name("bytes").unwrap(), None).is_none()
         );
+    }
+
+    #[test]
+    fn dead_node_takes_no_pushes_and_its_queue_is_stealable() {
+        let health = Arc::new(NodeHealth::new(2));
+        let q = fabric("fifo", 2, "bytes").with_health(Arc::clone(&health));
+        // Seed a task onto shard 1 while it is alive, then kill the node.
+        assert_eq!(q.push(rt(1, vec![(100, vec![NodeId(1)])])), 1);
+        health.mark_dead(NodeId(1));
+        // Locality still points at node 1; routing must not.
+        assert_eq!(q.push(rt(2, vec![(100, vec![NodeId(1)])])), 0);
+        // The survivor drains both its own shard and the dead one's.
+        let mut got: Vec<u64> = (0..2).map(|_| q.pop(NodeId(0)).unwrap().0).collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2]);
+    }
+
+    #[test]
+    fn dead_workers_park_and_stop_releases_them() {
+        let health = Arc::new(NodeHealth::new(2));
+        health.mark_dead(NodeId(1));
+        let q = Arc::new(fabric("fifo", 2, "bytes").with_health(Arc::clone(&health)));
+        // Queued work a dead worker could historically have stolen: it must
+        // park instead of claiming (or spinning on) it.
+        q.push(rt(1, vec![]));
+        let dead = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || q.pop(NodeId(1)))
+        };
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert!(!dead.is_finished(), "dead worker must park, not claim");
+        // A live worker still gets the task; the dead one only returns at
+        // shutdown, and with `None`.
+        assert_eq!(q.pop(NodeId(0)), Some(TaskId(1)));
+        q.stop();
+        assert_eq!(dead.join().unwrap(), None);
+    }
+
+    #[test]
+    fn rejoined_worker_resumes_popping() {
+        let health = Arc::new(NodeHealth::new(2));
+        health.mark_dead(NodeId(1));
+        let q = Arc::new(fabric("fifo", 2, "bytes").with_health(Arc::clone(&health)));
+        let worker = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || q.pop(NodeId(1)))
+        };
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        health.mark_alive(NodeId(1));
+        q.wake_all();
+        q.push(rt(7, vec![]));
+        assert_eq!(worker.join().unwrap(), Some(TaskId(7)));
+        q.stop();
     }
 }

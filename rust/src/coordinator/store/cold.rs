@@ -194,6 +194,12 @@ pub(crate) fn ensure_file(shared: &Shared, key: DataKey) -> Result<PathBuf> {
         if shared.table.is_collected(key) {
             anyhow::bail!("datum {key} was reclaimed by the version GC");
         }
+        if !shared.table.is_available(key) {
+            // Lost with a dead node (no tier holds it, no file): error out
+            // so the caller fails fast instead of spinning — lineage
+            // recovery re-derives the version and retries converge.
+            anyhow::bail!("datum {key} is unavailable (lost with a dead node)");
+        }
         // Mid-demotion: the spill path is about to be published.
         std::thread::yield_now();
     }

@@ -54,6 +54,36 @@ use crate::coordinator::store::{self, cold};
 /// tombstone is permanent and claimants fall back to the synchronous path.
 const MAX_TRANSFER_ATTEMPTS: u32 = 3;
 
+/// Base delay of the retry backoff schedule (first retry).
+const BACKOFF_BASE_MS: u64 = 5;
+
+/// Cap on the backoff exponent: delays stop doubling past
+/// `BACKOFF_BASE_MS << BACKOFF_MAX_SHIFT`.
+const BACKOFF_MAX_SHIFT: u32 = 6;
+
+/// Deterministic backoff for retry number `attempt` (1-based) of the
+/// `(key, node)` pair: an exponential term (5 ms, 10 ms, 20 ms, ...,
+/// capped) plus a jitter of at most half the exponential term, derived by
+/// hashing the pair — not by a thread-local RNG — so two runs of the same
+/// failure schedule re-queue at identical offsets and different pairs
+/// failing together do not re-stampede the same link in lockstep.
+pub(crate) fn retry_backoff(key: DataKey, node: NodeId, attempt: u32) -> std::time::Duration {
+    let attempt = attempt.max(1);
+    let exp_ms = BACKOFF_BASE_MS << (attempt - 1).min(BACKOFF_MAX_SHIFT);
+    // splitmix64-style finalizer over the pair identity: cheap, stable
+    // across platforms, and unrelated keys decorrelate immediately.
+    let mut h = key.data.0
+        ^ (u64::from(key.version) << 32)
+        ^ (u64::from(node.0) << 17)
+        ^ u64::from(attempt);
+    h = h.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    h ^= h >> 29;
+    h = h.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    h ^= h >> 32;
+    let jitter_ms = h % (exp_ms / 2 + 1);
+    std::time::Duration::from_millis(exp_ms + jitter_ms)
+}
+
 /// State of one `(version, destination-node)` transfer. Queued/Running
 /// carry the requester's byte estimate so completion can settle the
 /// per-node in-flight gauge the placement engine reads, plus the failure
@@ -79,6 +109,13 @@ struct Inner {
     /// Claimants currently parked per pair — drives the prefetched/waited
     /// accounting in [`TransferService::complete`].
     waiting: HashMap<(DataKey, u32), u32>,
+    /// Retries parked until their backoff deadline; `next_request` promotes
+    /// due entries into the queues and sizes its park timeout by the
+    /// earliest remaining deadline.
+    delayed: Vec<(std::time::Instant, DataKey, NodeId)>,
+    /// Per-slot liveness: requests toward a dead node fast-fail with a
+    /// permanent tombstone instead of grinding through the retry budget.
+    dead: Vec<bool>,
 }
 
 /// The transfer request board shared by the master (prefetch requests),
@@ -118,6 +155,8 @@ impl TransferService {
                 queues: (0..nodes).map(|_| VecDeque::new()).collect(),
                 states: HashMap::new(),
                 waiting: HashMap::new(),
+                delayed: Vec::new(),
+                dead: vec![false; nodes],
             }),
             cv_work: Condvar::new(),
             cv_done: Condvar::new(),
@@ -177,6 +216,19 @@ impl TransferService {
     /// parked.
     fn enqueue_request(&self, inner: &mut Inner, key: DataKey, node: NodeId, bytes: u64) {
         let pair = (key, node.0);
+        let qi = self.slot(node);
+        if inner.dead.get(qi).copied().unwrap_or(false) {
+            // Dead destination: no queue entry, no gauge pressure, no retry
+            // grind — a permanent tombstone so claimants error immediately
+            // and fall back (or resubmit). `or_insert` keeps whatever
+            // `fail_node` already settled.
+            inner.states.entry(pair).or_insert(TransferState::Failed {
+                error: format!("node {} is down", node.0),
+                attempts: MAX_TRANSFER_ATTEMPTS,
+            });
+            self.cv_done.notify_all();
+            return;
+        }
         let attempts = match inner.states.get(&pair) {
             Some(TransferState::Failed { attempts, .. }) if *attempts < MAX_TRANSFER_ATTEMPTS => {
                 self.retried.fetch_add(1, Ordering::Relaxed);
@@ -186,8 +238,14 @@ impl TransferService {
             None => 0,
         };
         inner.states.insert(pair, TransferState::Queued { bytes, attempts });
-        let qi = self.slot(node);
-        inner.queues[qi].push_back((key, node));
+        if attempts > 0 {
+            // Retry: park behind the deterministic backoff instead of
+            // re-stampeding the pair immediately.
+            let due = std::time::Instant::now() + retry_backoff(key, node, attempts);
+            inner.delayed.push((due, key, node));
+        } else {
+            inner.queues[qi].push_back((key, node));
+        }
         self.inflight[qi].fetch_add(bytes, Ordering::Relaxed);
         self.requested.fetch_add(1, Ordering::Relaxed);
         self.cv_work.notify_one();
@@ -200,6 +258,19 @@ impl TransferService {
     pub(crate) fn next_request(&self, home: NodeId) -> Option<(DataKey, NodeId)> {
         let mut inner = self.inner.lock().unwrap();
         loop {
+            // Promote delayed retries whose backoff has elapsed.
+            let now = std::time::Instant::now();
+            let slots = self.inflight.len();
+            let mut i = 0;
+            while i < inner.delayed.len() {
+                if inner.delayed[i].0 <= now {
+                    let (_, key, node) = inner.delayed.swap_remove(i);
+                    let qi = (node.0 as usize) % slots;
+                    inner.queues[qi].push_back((key, node));
+                } else {
+                    i += 1;
+                }
+            }
             let n = inner.queues.len();
             let start = (home.0 as usize) % n;
             for i in 0..n {
@@ -208,8 +279,9 @@ impl TransferService {
                     let pair = (key, node.0);
                     let (bytes, attempts) = match inner.states.get(&pair) {
                         Some(TransferState::Queued { bytes, attempts }) => (*bytes, *attempts),
-                        // Purged (collected mid-queue) or superseded:
-                        // stale entry, nothing to move.
+                        // Purged (collected mid-queue), poisoned (node
+                        // died), or superseded: stale entry, nothing to
+                        // move.
                         _ => continue,
                     };
                     inner.states.insert(pair, TransferState::Running { bytes, attempts });
@@ -219,7 +291,22 @@ impl TransferService {
             if self.shutdown.load(Ordering::SeqCst) {
                 return None;
             }
-            inner = self.cv_work.wait(inner).unwrap();
+            // Park for work — or only until the earliest backoff deadline
+            // when retries are pending, so a delayed pair is picked up
+            // promptly even if no new request ever lands.
+            let until = inner
+                .delayed
+                .iter()
+                .map(|(due, _, _)| due.saturating_duration_since(now))
+                .min();
+            match until {
+                Some(d) => {
+                    let timeout = d.max(std::time::Duration::from_millis(1));
+                    let (guard, _) = self.cv_work.wait_timeout(inner, timeout).unwrap();
+                    inner = guard;
+                }
+                None => inner = self.cv_work.wait(inner).unwrap(),
+            }
         }
     }
 
@@ -244,10 +331,20 @@ impl TransferService {
             _ => (0, 0),
         };
         let purged = state.is_none();
+        // A pair `fail_node` poisoned while this transfer was in flight
+        // must keep its permanent tombstone: overwriting it with Done would
+        // advertise a replica on a dead node, and overwriting with a fresh
+        // low-attempt Failed would re-open the retry grind the poison
+        // exists to skip.
+        let poisoned = matches!(
+            &state,
+            Some(TransferState::Failed { attempts, .. }) if *attempts >= MAX_TRANSFER_ATTEMPTS
+        );
+        let keep = !purged && !poisoned;
         self.inflight[self.slot(node)].fetch_sub(pending, Ordering::Relaxed);
         match result {
             Ok(Some(nbytes)) => {
-                if !purged {
+                if keep {
                     inner.states.insert(pair, TransferState::Done);
                 }
                 self.bytes.fetch_add(nbytes, Ordering::Relaxed);
@@ -258,13 +355,13 @@ impl TransferService {
                 }
             }
             Ok(None) => {
-                if !purged {
+                if keep {
                     inner.states.insert(pair, TransferState::Done);
                 }
                 self.dropped.fetch_add(1, Ordering::Relaxed);
             }
             Err(e) => {
-                if !purged {
+                if keep {
                     inner.states.insert(
                         pair,
                         TransferState::Failed {
@@ -392,6 +489,73 @@ impl TransferService {
         }
     }
 
+    /// Node-loss fast path: mark `node`'s slot dead and poison every board
+    /// entry toward it. Queued/Running pairs settle their gauges and become
+    /// permanent `Failed` tombstones (no 3-attempt grind); `Done` entries
+    /// are removed outright — the location they advertised just left the
+    /// version table, so a post-rejoin consumer must restage, not trust a
+    /// stale tombstone. Parked claimants wake and error out immediately.
+    pub fn fail_node(&self, node: NodeId) {
+        if !self.enabled() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let qi = self.slot(node);
+        if let Some(flag) = inner.dead.get_mut(qi) {
+            *flag = true;
+        }
+        // Delayed retries toward the node would only promote into stale
+        // queue entries; drop them now.
+        inner
+            .delayed
+            .retain(|(_, _, n)| (n.0 as usize) % self.inflight.len() != qi);
+        let slots = self.inflight.len();
+        let inflight = &self.inflight;
+        let failed = &self.failed;
+        let error = format!("node {} is down", node.0);
+        inner.states.retain(|&(_, n), state| {
+            if n != node.0 {
+                return true;
+            }
+            match state {
+                TransferState::Queued { bytes, .. } | TransferState::Running { bytes, .. } => {
+                    inflight[(n as usize) % slots].fetch_sub(*bytes, Ordering::Relaxed);
+                    failed.fetch_add(1, Ordering::Relaxed);
+                    *state = TransferState::Failed {
+                        error: error.clone(),
+                        attempts: MAX_TRANSFER_ATTEMPTS,
+                    };
+                    true
+                }
+                TransferState::Failed { attempts, .. } => {
+                    *attempts = MAX_TRANSFER_ATTEMPTS;
+                    true
+                }
+                TransferState::Done => false,
+            }
+        });
+        self.cv_done.notify_all();
+        self.cv_work.notify_all();
+    }
+
+    /// Node-join: re-open `node`'s slot for staging and clear the
+    /// tombstones `fail_node` (or organic failures) left toward it, so the
+    /// first post-rejoin consumer restages instead of inheriting a
+    /// permanent error.
+    pub fn revive_node(&self, node: NodeId) {
+        if !self.enabled() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let qi = self.slot(node);
+        if let Some(flag) = inner.dead.get_mut(qi) {
+            *flag = false;
+        }
+        inner
+            .states
+            .retain(|&(_, n), state| n != node.0 || !matches!(state, TransferState::Failed { .. }));
+    }
+
     /// Entries alive in the state map: in-flight transfers plus
     /// Done/Failed tombstones. The GC purge keeps this bounded by live
     /// versions at quiescence, not by the tasks x inputs history.
@@ -501,6 +665,12 @@ fn perform_transfer(
     if shared.table.is_collected(key) {
         return Ok(None);
     }
+    if !shared.health.is_alive(node) {
+        // Destination died after this request was claimed: drop it rather
+        // than stage toward a machine that is gone. `fail_node` has (or
+        // will have) poisoned the pair; the completion keeps the tombstone.
+        return Ok(None);
+    }
     // Deterministic fault injection for the retry tests. The pseudo-type
     // only matches injectors that name it (or catch-all empty filters —
     // for those, transfer failures are legitimate chaos: bounded retry
@@ -540,6 +710,12 @@ fn stage_replica(shared: &Shared, key: DataKey, node: NodeId) -> anyhow::Result<
             shared.store.discard_resident(key);
             return Ok(None);
         }
+        if !shared.health.is_alive(node) {
+            // The destination died mid-stage: never advertise a replica on
+            // a dead node. The hot entry itself stays — in the emulated
+            // single-address-space store it still serves other nodes.
+            return Ok(None);
+        }
         shared.table.add_location(key, node);
         return Ok(Some(nbytes));
     }
@@ -551,6 +727,9 @@ fn stage_replica(shared: &Shared, key: DataKey, node: NodeId) -> anyhow::Result<
     store::demote_victims(shared, victims);
     if shared.table.is_collected(key) {
         shared.store.discard_resident(key);
+        return Ok(None);
+    }
+    if !shared.health.is_alive(node) {
         return Ok(None);
     }
     shared.table.add_location(key, node);
@@ -742,6 +921,99 @@ mod tests {
         // Post-stop, movers drain whatever is still queued, then exit.
         while s.next_request(NodeId(0)).is_some() {}
         assert!(s.next_request(NodeId(0)).is_none(), "post-stop movers exit");
+    }
+
+    #[test]
+    fn backoff_schedule_is_deterministic_with_bounded_jitter() {
+        // Same (pair, attempt) → identical delay, run after run.
+        assert_eq!(
+            retry_backoff(key(3), NodeId(1), 1),
+            retry_backoff(key(3), NodeId(1), 1)
+        );
+        // Exponential envelope: base << (attempt-1) plus at most half that
+        // again of jitter.
+        for attempt in 1..=4u32 {
+            let exp_ms = BACKOFF_BASE_MS << (attempt - 1);
+            let d = retry_backoff(key(3), NodeId(1), attempt).as_millis() as u64;
+            assert!(d >= exp_ms, "attempt {attempt}: {d} < {exp_ms}");
+            assert!(d <= exp_ms + exp_ms / 2, "attempt {attempt}: {d} > 1.5x{exp_ms}");
+        }
+        // The exponent caps instead of overflowing.
+        let capped = BACKOFF_BASE_MS << BACKOFF_MAX_SHIFT;
+        let d = retry_backoff(key(3), NodeId(1), 40).as_millis() as u64;
+        assert!((capped..=capped + capped / 2).contains(&d));
+        // Jitter decorrelates pairs: across a handful of keys at the same
+        // attempt, at least two distinct delays appear.
+        let mut seen = std::collections::HashSet::new();
+        for d in 0..8u64 {
+            seen.insert(retry_backoff(key(d), NodeId(1), 2).as_millis());
+        }
+        assert!(seen.len() > 1, "jitter never varied: {seen:?}");
+    }
+
+    #[test]
+    fn retries_wait_out_their_backoff_before_redelivery() {
+        let s = TransferService::new(1, 1);
+        s.request(key(6), NodeId(0), 16);
+        let (k, n) = s.next_request(NodeId(0)).unwrap();
+        s.complete(k, n, Err(anyhow::anyhow!("flaky")));
+        // Re-queue (attempt 1): the pair must not be redelivered before its
+        // deterministic delay elapses.
+        let t0 = Instant::now();
+        s.request(key(6), NodeId(0), 16);
+        let expect = retry_backoff(key(6), NodeId(0), 1);
+        let (k, _) = s.next_request(NodeId(0)).unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(k, key(6));
+        // Allow a little scheduler slop below the nominal deadline.
+        assert!(
+            waited + Duration::from_millis(1) >= expect,
+            "redelivered after {waited:?}, backoff was {expect:?}"
+        );
+    }
+
+    #[test]
+    fn fail_node_poisons_pairs_and_fast_fails_claimants() {
+        let s = TransferService::new(1, 2);
+        // One Running and one Queued pair toward node 1, one Done toward
+        // node 0 that must survive.
+        s.request(key(1), NodeId(1), 64);
+        let (k, n) = s.next_request(NodeId(1)).unwrap();
+        assert_eq!((k, n), (key(1), NodeId(1)));
+        s.request(key(2), NodeId(1), 32);
+        s.request(key(3), NodeId(0), 8);
+        let (k0, n0) = s.next_request(NodeId(0)).unwrap();
+        s.complete(k0, n0, Ok(Some(8)));
+        s.fail_node(NodeId(1));
+        // Gauges toward the dead node settle immediately.
+        assert_eq!(s.inflight_toward(NodeId(1)), 0);
+        // Claimants error out without the 3-attempt grind...
+        let err = s.await_staged(key(2), NodeId(1), 32).unwrap_err();
+        assert!(err.contains("down"), "{err}");
+        // ...and brand-new requests toward the dead node fast-fail too.
+        let err = s.await_staged(key(5), NodeId(1), 16).unwrap_err();
+        assert!(err.contains("down"), "{err}");
+        // The in-flight mover completing cannot resurrect the pair.
+        s.complete(key(1), NodeId(1), Ok(Some(64)));
+        assert!(s.await_staged(key(1), NodeId(1), 64).is_err());
+        // Node 0 is untouched.
+        assert_eq!(s.await_staged(key(3), NodeId(0), 8), Ok(()));
+    }
+
+    #[test]
+    fn revive_node_reopens_staging() {
+        let s = TransferService::new(1, 2);
+        s.fail_node(NodeId(1));
+        assert!(s.await_staged(key(4), NodeId(1), 64).is_err());
+        s.revive_node(NodeId(1));
+        // Tombstones are gone: the next request queues and stages normally.
+        let before = s.requested();
+        s.request(key(4), NodeId(1), 64);
+        assert_eq!(s.requested(), before + 1);
+        let (k, n) = s.next_request(NodeId(1)).unwrap();
+        assert_eq!((k, n), (key(4), NodeId(1)));
+        s.complete(k, n, Ok(Some(64)));
+        assert_eq!(s.await_staged(key(4), NodeId(1), 64), Ok(()));
     }
 
     #[test]

@@ -129,7 +129,9 @@ USAGE:
                  [--warm-budget BYTES (default 64 MiB; 0 = file-backed staging)]
                  [--store tiered|hot|file (tier preset for A/B runs)]
                  [--spill lru|largest] [--nodes N] [--transfer-threads T]
-                 [--gc on|off (default on)]
+                 [--gc on|off (default on)] [--max-retries N (default 3)]
+                 [--chaos task-fail:<p>,node-kill[:<seed>],seed:<n>|none]
+                 [--checkpoint none|cold (proactive sole-replica spills)]
   rcompss sim    --app knn|kmeans|linreg --machine shaheen3|marenostrum5
                  [--nodes N] [--workers-per-node W] [--fragments F]
                  [--scheduler fifo|lifo|locality] [--router bytes|cost|roundrobin|adaptive]
@@ -186,6 +188,17 @@ fn cmd_run(opts: &Opts) -> anyhow::Result<()> {
     }
     if nodes > 1 {
         config = config.with_nodes(nodes, workers);
+    }
+    if opts.has("max-retries") {
+        config = config.with_max_retries(opts.get_usize("max-retries", 3)? as u32);
+    }
+    if opts.has("checkpoint") {
+        config = config.with_checkpoint(&opts.get("checkpoint", "none"));
+    }
+    if opts.has("chaos") {
+        let spec = rcompss::coordinator::fault::ChaosSpec::parse(&opts.get("chaos", "none"))
+            .map_err(|e| anyhow::anyhow!("--chaos: {e}"))?;
+        config = config.with_chaos(spec);
     }
     let scheduler = config.scheduler.clone();
     let router = config.router.clone();
@@ -295,6 +308,21 @@ fn cmd_run(opts: &Opts) -> anyhow::Result<()> {
             rcompss::util::table::fmt_bytes(stats.gc_bytes as usize),
             stats.gc_files_deleted,
             stats.dead_version_bytes,
+        );
+    }
+    if stats.nodes_killed > 0
+        || stats.nodes_joined > 0
+        || stats.lineage_resubmissions > 0
+        || stats.checkpoints_written > 0
+    {
+        println!(
+            "recovery: {} node(s) killed, {} rejoined, {} lineage resubmissions, \
+             {} checkpoints / {}",
+            stats.nodes_killed,
+            stats.nodes_joined,
+            stats.lineage_resubmissions,
+            stats.checkpoints_written,
+            rcompss::util::table::fmt_bytes(stats.checkpoint_bytes as usize),
         );
     }
     Ok(())

@@ -34,7 +34,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::cluster::ClusterSpec;
-use crate::coordinator::dag::TaskId;
+use crate::coordinator::dag::{TaskId, TaskState};
 use crate::coordinator::feedback::FeedbackStats;
 use crate::coordinator::placement::{placement_by_name, PlacementModel, RoutedReady};
 use crate::coordinator::registry::{DataKey, NodeId};
@@ -63,12 +63,19 @@ impl Ord for Time {
 
 #[derive(Clone, Copy, PartialEq, Eq)]
 enum Event {
-    /// Worker finished init or its current task's write phase.
-    WorkerIdle(WorkerId),
+    /// Worker finished init or its current task's write phase. Carries
+    /// the node's liveness epoch at scheduling time: an event from before
+    /// a kill/join transition is stale and is dropped on arrival.
+    WorkerIdle(WorkerId, u32),
     /// A task's compute finished; reserve its output I/O now.
     ExecDone(TaskId, WorkerId),
     /// Task fully finished (outputs on disk): propagate readiness.
-    TaskDone(TaskId),
+    TaskDone(TaskId, WorkerId),
+    /// Node-loss chaos: the node's workers vanish, its replicas are
+    /// dropped, lost sole-replica versions are re-derived from lineage.
+    NodeKill(NodeId),
+    /// Elasticity: a previously-killed node rejoins (workers re-init).
+    NodeJoin(NodeId),
 }
 
 impl PartialOrd for Event {
@@ -118,6 +125,11 @@ pub struct SimEngine {
     pub warm_staging: bool,
     /// Collect a trace (disable for big sweeps to save memory).
     pub trace: bool,
+    /// Chaos: kill this node at the given virtual time (`(seconds, node)`).
+    pub node_kill: Option<(f64, u32)>,
+    /// Elasticity: rejoin this node at the given virtual time (its workers
+    /// pay the init stagger again).
+    pub node_join: Option<(f64, u32)>,
 }
 
 struct RunState<'a> {
@@ -136,6 +148,15 @@ struct RunState<'a> {
     total_transfer: f64,
     /// claim start per running task (for busy accounting).
     started_at: HashMap<TaskId, f64>,
+    /// Worker owning each in-flight task; the kill handler resubmits what
+    /// the dead node was running, and stale ExecDone/TaskDone events (their
+    /// task no longer maps to them) are dropped on arrival.
+    running_on: HashMap<TaskId, WorkerId>,
+    /// Per-node liveness (chaos); dead nodes take no pops and no pushes.
+    dead: Vec<bool>,
+    /// Per-node liveness epoch, bumped at every kill/join: worker events
+    /// scheduled under an older epoch are stale.
+    epoch: Vec<u32>,
     idle: Vec<WorkerId>,
     tracer: Tracer,
     wpn: usize,
@@ -165,7 +186,24 @@ impl SimEngine {
             router_name: "bytes".into(),
             warm_staging: true,
             trace: false,
+            node_kill: None,
+            node_join: None,
         }
+    }
+
+    /// Kill `node` at virtual time `at_s`: its workers vanish, running
+    /// tasks resubmit, lost sole-replica versions re-derive from lineage —
+    /// the simulated twin of the live `--chaos node-kill`.
+    pub fn with_node_kill(mut self, at_s: f64, node: u32) -> SimEngine {
+        self.node_kill = Some((at_s, node));
+        self
+    }
+
+    /// Rejoin a previously-killed `node` at virtual time `at_s` (the live
+    /// `Coordinator::add_node`).
+    pub fn with_node_join(mut self, at_s: f64, node: u32) -> SimEngine {
+        self.node_join = Some((at_s, node));
+        self
     }
 
     pub fn with_scheduler(mut self, name: &str) -> SimEngine {
@@ -224,6 +262,9 @@ impl SimEngine {
             total_io: 0.0,
             total_transfer: 0.0,
             started_at: HashMap::new(),
+            running_on: HashMap::new(),
+            dead: vec![false; nodes],
+            epoch: vec![0; nodes],
             idle: Vec::new(),
             tracer: Tracer::new(self.trace),
             wpn,
@@ -242,8 +283,14 @@ impl SimEngine {
                 };
                 let ready_at = profile.worker_ready_at(slot as u32);
                 st.tracer.record_at(wid, EventKind::WorkerInit, None, 0.0, ready_at);
-                st.push_event(ready_at, Event::WorkerIdle(wid));
+                st.push_event(ready_at, Event::WorkerIdle(wid, 0));
             }
+        }
+        if let Some((t, node)) = self.node_kill {
+            st.push_event(t.max(0.0), Event::NodeKill(NodeId(node)));
+        }
+        if let Some((t, node)) = self.node_join {
+            st.push_event(t.max(0.0), Event::NodeJoin(NodeId(node)));
         }
 
         let mut tasks_done = 0usize;
@@ -252,17 +299,28 @@ impl SimEngine {
         while let Some(Reverse((Time(now), _, ev))) = st.events.pop() {
             makespan = makespan.max(now);
             match ev {
-                Event::WorkerIdle(wid) => {
-                    if let Some(tid) = st.router.pop_for(wid.node) {
+                Event::WorkerIdle(wid, epoch) => {
+                    let node = wid.node.0 as usize;
+                    if st.dead[node] || st.epoch[node] != epoch {
+                        continue; // the worker died with its node
+                    }
+                    if let Some(tid) = pop_live(&mut st, wid.node) {
                         self.begin_task(&mut st, tid, wid, now);
                     } else {
                         st.idle.push(wid);
                     }
                 }
                 Event::ExecDone(tid, wid) => {
+                    if st.running_on.get(&tid) != Some(&wid) {
+                        continue; // stale: the attempt died with its node
+                    }
                     self.finish_task(&mut st, tid, wid, now);
                 }
-                Event::TaskDone(tid) => {
+                Event::TaskDone(tid, wid) => {
+                    if st.running_on.get(&tid) != Some(&wid) {
+                        continue; // stale: the attempt died with its node
+                    }
+                    st.running_on.remove(&tid);
                     tasks_done += 1;
                     let newly = st.plan.graph.complete(tid);
                     for t in newly {
@@ -271,10 +329,32 @@ impl SimEngine {
                     // Put parked workers onto the fresh tasks.
                     let parked: Vec<WorkerId> = std::mem::take(&mut st.idle);
                     for wid in parked {
-                        if let Some(next) = st.router.pop_for(wid.node) {
+                        if let Some(next) = pop_live(&mut st, wid.node) {
                             self.begin_task(&mut st, next, wid, now);
                         } else {
                             st.idle.push(wid);
+                        }
+                    }
+                }
+                Event::NodeKill(node) => {
+                    self.kill_node(&mut st, node, now);
+                }
+                Event::NodeJoin(node) => {
+                    let n = node.0 as usize;
+                    if n < st.dead.len() && st.dead[n] {
+                        st.dead[n] = false;
+                        st.epoch[n] += 1;
+                        st.router.set_alive(node, true);
+                        // Rejoining workers pay the init stagger again.
+                        for slot in 0..wpn {
+                            let wid = WorkerId {
+                                node,
+                                slot: slot as u32,
+                            };
+                            let ready_at = now + profile.worker_ready_at(slot as u32);
+                            st.tracer
+                                .record_at(wid, EventKind::WorkerInit, None, now, ready_at);
+                            st.push_event(ready_at, Event::WorkerIdle(wid, st.epoch[n]));
                         }
                     }
                 }
@@ -310,6 +390,7 @@ impl SimEngine {
         let profile = &self.cluster.profile;
         st.plan.graph.start(id);
         st.started_at.insert(id, now);
+        st.running_on.insert(id, wid);
         let meta = st.plan.meta.get(&id).expect("task meta").clone();
         let node = wid.node.0 as usize;
         // Dispatch goes through the single master: FCFS serial resource.
@@ -440,9 +521,124 @@ impl SimEngine {
         }
         let start = st.started_at.remove(&id).unwrap_or(now);
         st.busy[node * st.wpn + wid.slot as usize] += t - start;
-        st.push_event(t, Event::WorkerIdle(wid));
-        st.push_event(t, Event::TaskDone(id));
+        st.push_event(t, Event::WorkerIdle(wid, st.epoch[node]));
+        st.push_event(t, Event::TaskDone(id, wid));
     }
+
+    /// Chaos node kill in virtual time — the simulated twin of the live
+    /// recovery pipeline: the node's shard closes (`set_alive`), its idle
+    /// workers vanish, its running attempts resubmit, its replicas drop,
+    /// and sole-replica versions it held are re-derived by reopening their
+    /// (transitive) producers. Master-materialized inputs re-read from the
+    /// shared filesystem onto the first alive node. The last alive node is
+    /// never killed.
+    fn kill_node(&self, st: &mut RunState<'_>, node: NodeId, now: f64) {
+        let n = node.0 as usize;
+        if n >= st.dead.len() || st.dead[n] || st.dead.iter().filter(|d| !**d).count() <= 1 {
+            return;
+        }
+        st.dead[n] = true;
+        st.epoch[n] += 1;
+        st.router.set_alive(node, false);
+        st.idle.retain(|w| w.node != node);
+        // Running attempts on the node are lost: back to the ready queues
+        // (their pending ExecDone/TaskDone events go stale).
+        let lost_tasks: Vec<TaskId> = st
+            .running_on
+            .iter()
+            .filter(|(_, w)| w.node == node)
+            .map(|(t, _)| *t)
+            .collect();
+        for tid in lost_tasks {
+            st.running_on.remove(&tid);
+            st.started_at.remove(&tid);
+            st.plan.graph.resubmit(tid);
+            push_ready(st.plan, &mut st.router, tid);
+        }
+        // Sole-replica versions die with the node: lineage re-execution,
+        // exactly the live `recover_lost_versions` walk.
+        let report = st.plan.registry.table().drop_node(node);
+        let home = NodeId(
+            st.dead
+                .iter()
+                .position(|d| !*d)
+                .expect("an alive node remains") as u32,
+        );
+        let mut stack: Vec<DataKey> = report.lost.clone();
+        let mut seen: HashSet<DataKey> = stack.iter().copied().collect();
+        let mut reopen: HashSet<TaskId> = HashSet::new();
+        while let Some(key) = stack.pop() {
+            st.warm_staged.remove(&key);
+            let Some(info) = st.plan.registry.info(key) else {
+                continue;
+            };
+            match info.producer {
+                None => {
+                    // Master-materialized input: survives on the shared
+                    // filesystem — re-read it onto an alive node.
+                    st.plan
+                        .registry
+                        .mark_available(key, home, info.bytes, std::path::PathBuf::new());
+                }
+                Some(tid) => {
+                    if st.plan.graph.state(tid) == Some(TaskState::Done) && reopen.insert(tid) {
+                        let inputs = st.plan.meta.get(&tid).expect("task meta").inputs.clone();
+                        for input in inputs {
+                            if !seen.contains(&input)
+                                && st.plan.registry.info(input).map_or(true, |i| !i.available)
+                            {
+                                seen.insert(input);
+                                stack.push(input);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if !reopen.is_empty() {
+            for tid in &reopen {
+                let outputs = st.plan.meta.get(tid).expect("task meta").outputs.clone();
+                for (key, _) in outputs {
+                    let still = st
+                        .plan
+                        .registry
+                        .info(key)
+                        .map_or(false, |i| i.available && !i.locations.is_empty());
+                    if !still {
+                        st.plan.registry.table().reset_for_recovery(key);
+                        st.warm_staged.remove(&key);
+                    }
+                }
+            }
+            let ready = st.plan.graph.reopen(&reopen);
+            for t in ready {
+                push_ready(st.plan, &mut st.router, t);
+            }
+        }
+        // Survivors parked with nothing to do may now have work (reopened
+        // tasks, rerouted queue entries).
+        let parked: Vec<WorkerId> = std::mem::take(&mut st.idle);
+        for wid in parked {
+            if let Some(next) = pop_live(st, wid.node) {
+                self.begin_task(st, next, wid, now);
+            } else {
+                st.idle.push(wid);
+            }
+        }
+    }
+}
+
+/// Pop the next *claimable* task for a node's worker: a `reopen` re-gate
+/// (node-loss recovery) demotes a queued Ready task back to Pending and
+/// leaves its queue entry behind — exactly the live fabric's stale-entry
+/// protocol, discarded at claim time by this state check.
+fn pop_live(st: &mut RunState<'_>, node: NodeId) -> Option<TaskId> {
+    while let Some(tid) = st.router.pop_for(node) {
+        if st.plan.graph.state(tid) == Some(TaskState::Ready) {
+            return Some(tid);
+        }
+    }
+    None
 }
 
 /// Route one newly-ready task through the shared placement engine, with
@@ -654,6 +850,45 @@ mod tests {
             "fan-out must produce warm-hit stagings"
         );
         assert_eq!(cold.transfer_warm_hits, 0, "warm off never counts a hit");
+    }
+
+    #[test]
+    fn node_kill_mid_sim_recovers_and_completes() {
+        let make = || knn_plan(8, 4);
+        let n = make().graph.len();
+        let spec = || ClusterSpec::new(MachineProfile::shaheen3(), 4).with_workers_per_node(2);
+        let base = SimEngine::new(spec(), CostModel::default())
+            .run(make(), "base")
+            .unwrap();
+        assert_eq!(base.tasks_done, n);
+        // Kill node 3 mid-run: the DAG still drains — the engine's
+        // `ensure!(quiescent)` would fail otherwise — and lost work
+        // re-executes, so completions can only grow.
+        let kill_at = base.makespan_s * 0.5;
+        let killed = SimEngine::new(spec(), CostModel::default())
+            .with_node_kill(kill_at, 3)
+            .run(make(), "killed")
+            .unwrap();
+        assert!(
+            killed.tasks_done >= n,
+            "all tasks complete, re-runs included: {} vs {n}",
+            killed.tasks_done
+        );
+        // Kill + rejoin: the node comes back (workers re-init) and the
+        // run still drains.
+        let rejoined = SimEngine::new(spec(), CostModel::default())
+            .with_node_kill(kill_at, 3)
+            .with_node_join(kill_at + base.makespan_s * 0.2, 3)
+            .run(make(), "rejoined")
+            .unwrap();
+        assert!(rejoined.tasks_done >= n);
+        // Killing the only node is refused — the run completes untouched.
+        let solo = ClusterSpec::new(MachineProfile::shaheen3(), 1).with_workers_per_node(2);
+        let report = SimEngine::new(solo, CostModel::default())
+            .with_node_kill(0.001, 0)
+            .run(knn_plan(4, 2), "solo")
+            .unwrap();
+        assert!(report.tasks_done > 0);
     }
 
     #[test]

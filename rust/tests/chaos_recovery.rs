@@ -1,0 +1,294 @@
+//! Node-loss recovery acceptance tests: lineage re-execution after a
+//! mid-run kill, checkpoint-driven replay avoidance, elastic kill/join
+//! churn, and root-cause failure reporting.
+//!
+//! The deterministic tests neutralize any ambient `RCOMPSS_CHAOS` plan
+//! with an explicit `with_chaos(ChaosSpec::default())` — they stage their
+//! own chaos at exact points. The app-level tests install their own
+//! seeded node-kill plan and compare against a single-node baseline:
+//! losing a node must never change results.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use rcompss::api::{CompssRuntime, RuntimeConfig, TaskDef};
+use rcompss::apps::backend::Backend;
+use rcompss::apps::kmeans::{self, KmeansConfig};
+use rcompss::apps::knn::{self, KnnConfig};
+use rcompss::apps::{LiveSink, Shapes};
+use rcompss::coordinator::fault::{ChaosSpec, FailureInjector};
+use rcompss::coordinator::runtime::RuntimeStats;
+use rcompss::value::RValue;
+
+fn tiny_shapes() -> Shapes {
+    Shapes {
+        knn_train_n: 128,
+        knn_test_block: 32,
+        knn_d: 8,
+        knn_k: 3,
+        knn_classes: 3,
+        km_frag_n: 96,
+        km_d: 4,
+        km_k: 3,
+        ..Shapes::default()
+    }
+}
+
+/// Four gated producers — one per node of a 4-node fabric (the gate makes
+/// every worker hold one, so each node executes exactly one producer and
+/// owns its output as a sole replica). The caller then kills node 3 and a
+/// late consumer sums all four fragments. Returns the sum and the stats.
+fn gated_fragment_run(checkpoint: &str) -> (f64, RuntimeStats) {
+    let config = RuntimeConfig::local(1)
+        .with_nodes(4, 1)
+        .with_router("roundrobin")
+        .with_chaos(ChaosSpec::default())
+        .with_checkpoint(checkpoint);
+    let rt = CompssRuntime::start(config).unwrap();
+    let started = Arc::new(AtomicUsize::new(0));
+    let mk = {
+        let started = Arc::clone(&started);
+        rt.register_task(TaskDef::new("mk_fragment", 1, move |a| {
+            // Rendezvous: proceed only once all four producers are running
+            // (one per worker). A post-kill re-execution sees the count
+            // already past the gate and proceeds immediately.
+            started.fetch_add(1, Ordering::AcqRel);
+            while started.load(Ordering::Acquire) < 4 {
+                std::thread::yield_now();
+            }
+            let i = a[0].as_f64().unwrap();
+            Ok(vec![RValue::Real(vec![i + 0.5; 2048])])
+        }))
+    };
+    let outs: Vec<_> = (0..4)
+        .map(|i| rt.submit(&mk, &[(i as f64).into()]).unwrap())
+        .collect();
+    // Wait until every producer has completed — and, under `--checkpoint
+    // cold`, until their sole-replica outputs are actually on disk (the
+    // checkpoint write happens just after the completion is counted).
+    let t0 = Instant::now();
+    loop {
+        let s = rt.stats();
+        let settled =
+            s.tasks_done >= 4 && (checkpoint != "cold" || s.checkpoints_written >= 4);
+        if settled {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "producers never settled: {s:?}"
+        );
+        std::thread::yield_now();
+    }
+    assert!(rt.kill_node(3), "first kill of a live node must succeed");
+    // Consumed only now — no consumer existed before the kill, so no
+    // prefetch could have replicated node 3's fragment elsewhere.
+    let sum4 = rt.register_task(TaskDef::new("sum4", 4, |a| {
+        Ok(vec![RValue::scalar(
+            a.iter()
+                .map(|v| v.as_real().unwrap().iter().sum::<f64>())
+                .sum(),
+        )])
+    }));
+    let total = rt
+        .submit(
+            &sum4,
+            &[outs[0].into(), outs[1].into(), outs[2].into(), outs[3].into()],
+        )
+        .unwrap();
+    let v = rt.wait_on(&total).unwrap().as_f64().unwrap();
+    let stats = rt.stop().unwrap();
+    (v, stats)
+}
+
+#[test]
+fn kill_reexecutes_exactly_the_lost_subgraph() {
+    let (total, stats) = gated_fragment_run("none");
+    assert_eq!(total, 2048.0 * (0.5 + 1.5 + 2.5 + 3.5));
+    assert_eq!(stats.nodes_killed, 1, "{stats:?}");
+    // Node 3 held exactly one sole-replica fragment: lineage recovery must
+    // re-run its producer and nothing else.
+    assert_eq!(stats.lineage_resubmissions, 1, "{stats:?}");
+}
+
+#[test]
+fn checkpoint_cold_strictly_lowers_resubmissions() {
+    let (baseline_total, baseline) = gated_fragment_run("none");
+    let (total, stats) = gated_fragment_run("cold");
+    assert_eq!(total, baseline_total, "checkpointing changed the result");
+    assert_eq!(baseline.lineage_resubmissions, 1, "{baseline:?}");
+    // Every sole-replica fragment was proactively published through the
+    // cold tier, so the kill loses nothing: the lost node's fragment is
+    // re-read from its checkpoint file instead of re-derived.
+    assert!(stats.checkpoints_written >= 4, "{stats:?}");
+    assert!(stats.checkpoint_bytes > 0, "{stats:?}");
+    assert!(
+        stats.lineage_resubmissions < baseline.lineage_resubmissions,
+        "checkpointing must strictly lower replay: {} vs {}",
+        stats.lineage_resubmissions,
+        baseline.lineage_resubmissions
+    );
+}
+
+#[test]
+fn knn_losing_a_node_mid_run_matches_single_node_results() {
+    let mut cfg = KnnConfig::small(5);
+    cfg.shapes = tiny_shapes();
+    cfg.train_fragments = 4;
+    cfg.test_blocks = 2;
+    let run = |config: RuntimeConfig| {
+        let rt = CompssRuntime::start(config).unwrap();
+        let mut sink = LiveSink::new(
+            &rt,
+            rcompss::apps::backend::knn_task_defs(cfg.shapes, Backend::Native),
+        );
+        let plan = knn::plan_knn(&mut sink, &cfg).unwrap();
+        let classes = sink.fetch(plan.classes[0]).unwrap();
+        let got = classes.as_int().unwrap().to_vec();
+        let stats = rt.stop().unwrap();
+        (got, stats)
+    };
+    let (clean, _) = run(RuntimeConfig::local(2).with_chaos(ChaosSpec::default()));
+    // Seeded node-kill: node 3 dies after a deterministic number of task
+    // completions (mid-run for this DAG of 22 tasks).
+    let chaos = ChaosSpec::parse("node-kill,seed:11").unwrap();
+    let (survivor, stats) = run(
+        RuntimeConfig::local(2)
+            .with_nodes(4, 2)
+            .with_router("roundrobin")
+            .with_chaos(chaos),
+    );
+    assert_eq!(clean, survivor, "losing a node changed KNN classifications");
+    assert_eq!(stats.nodes_killed, 1, "{stats:?}");
+    // Recovery replays tasks, not runs: only the lost subgraph re-executes.
+    assert!(
+        stats.lineage_resubmissions < stats.tasks_done,
+        "{stats:?}"
+    );
+}
+
+#[test]
+fn kmeans_losing_a_node_mid_run_matches_single_node_results() {
+    let mut cfg = KmeansConfig::small(11);
+    cfg.shapes = tiny_shapes();
+    cfg.fragments = 4;
+    cfg.iterations = 3;
+    cfg.tol = None;
+    let run = |config: RuntimeConfig| {
+        let rt = CompssRuntime::start(config).unwrap();
+        let res = kmeans::run_kmeans(&rt, &cfg, Backend::Native).unwrap();
+        let stats = rt.stop().unwrap();
+        (res.centroids, stats)
+    };
+    let (clean, _) = run(RuntimeConfig::local(2).with_chaos(ChaosSpec::default()));
+    let chaos = ChaosSpec::parse("node-kill,seed:3").unwrap();
+    let (survivor, stats) = run(
+        RuntimeConfig::local(2)
+            .with_nodes(4, 2)
+            .with_router("roundrobin")
+            .with_chaos(chaos),
+    );
+    assert!(
+        clean.all_equal(&survivor, 1e-9),
+        "losing a node changed the K-means centroids"
+    );
+    assert_eq!(stats.nodes_killed, 1, "{stats:?}");
+    assert!(stats.lineage_resubmissions < stats.tasks_done, "{stats:?}");
+}
+
+#[test]
+fn kill_join_churn_quiesces_with_zero_dead_bytes() {
+    // Elasticity property: a reduction tree survives two kills and two
+    // rejoins at arbitrary points, the sum stays exact, and the store
+    // quiesces — no dead-version bytes, no accumulated transfer state.
+    let config = RuntimeConfig::local(2)
+        .with_nodes(3, 2)
+        .with_router("roundrobin")
+        .with_chaos(ChaosSpec::default());
+    let rt = CompssRuntime::start(config).unwrap();
+    let add = rt.register_task(TaskDef::new("add", 2, |a| {
+        Ok(vec![RValue::scalar(
+            a[0].as_f64().unwrap() + a[1].as_f64().unwrap(),
+        )])
+    }));
+    let values: Vec<f64> = (0..16).map(|i| (i * i) as f64).collect();
+    let mut layer: Vec<rcompss::api::TaskArg> =
+        values.iter().map(|v| rcompss::api::TaskArg::from(*v)).collect();
+    let mut round = 0;
+    while layer.len() > 1 {
+        let mut next = Vec::new();
+        let mut it = layer.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => {
+                    let r = rt.submit(&add, &[a, b]).unwrap();
+                    next.push(rcompss::api::TaskArg::from(r));
+                }
+                None => next.push(a),
+            }
+        }
+        layer = next;
+        // Churn between layers: kill a node with work in flight, bring it
+        // back one layer later, then lose a different one.
+        match round {
+            0 => assert!(rt.kill_node(2), "kill of live node 2"),
+            1 => {
+                assert!(rt.add_node(2), "rejoin of node 2");
+                assert!(rt.kill_node(1), "kill of live node 1");
+            }
+            2 => assert!(rt.add_node(1), "rejoin of node 1"),
+            _ => {}
+        }
+        round += 1;
+    }
+    let total = match layer.pop().unwrap() {
+        rcompss::api::TaskArg::Future(r) => rt.wait_on(&r).unwrap().as_f64().unwrap(),
+        rcompss::api::TaskArg::Value(v) => v.as_f64().unwrap(),
+    };
+    assert_eq!(total, values.iter().sum::<f64>(), "churn changed the sum");
+    let stats = rt.stop().unwrap();
+    assert_eq!(stats.nodes_killed, 2, "{stats:?}");
+    assert_eq!(stats.nodes_joined, 2, "{stats:?}");
+    assert_eq!(stats.dead_version_bytes, 0, "{stats:?}");
+    // Kill/join churn must not leak transfer-board entries: at quiescence
+    // only uncollected versions (the pinned final sum, terminal stragglers)
+    // may keep any.
+    assert!(
+        stats.transfer_states <= 32,
+        "transfer state survived churn: {stats:?}"
+    );
+}
+
+#[test]
+fn wait_on_and_barrier_report_the_root_cause() {
+    let mut config = RuntimeConfig::local(2).with_chaos(ChaosSpec::default());
+    config.injector = Arc::new(FailureInjector::new(1.0, "boom", u32::MAX, 5));
+    let rt = CompssRuntime::start(config).unwrap();
+    let boom = rt.register_task(TaskDef::new("boom_task", 0, |_| {
+        Ok(vec![RValue::scalar(1.0)])
+    }));
+    let double = rt.register_task(TaskDef::new("double", 1, |a| {
+        Ok(vec![RValue::scalar(2.0 * a[0].as_f64().unwrap())])
+    }));
+    let a = rt.submit(&boom, &[]).unwrap();
+    let b = rt.submit(&double, &[a.into()]).unwrap();
+
+    // The dependent's error names the failed ancestor, its type and its
+    // attempt count — not just "cancelled".
+    let err_b = rt.wait_on(&b).unwrap_err().to_string();
+    assert!(err_b.contains("cancelled by failed ancestor"), "{err_b}");
+    assert!(err_b.contains("boom_task"), "{err_b}");
+    assert!(err_b.contains("attempt"), "{err_b}");
+
+    // The root itself reports a permanent failure with its blurb.
+    let err_a = rt.wait_on(&a).unwrap_err().to_string();
+    assert!(err_a.contains("failed permanently"), "{err_a}");
+    assert!(err_a.contains("boom_task"), "{err_a}");
+
+    // Barrier appends the root cause of the failed DAG.
+    let err_bar = rt.barrier().unwrap_err().to_string();
+    assert!(err_bar.contains("root cause"), "{err_bar}");
+    assert!(err_bar.contains("boom_task"), "{err_bar}");
+    rt.stop().unwrap();
+}

@@ -14,6 +14,18 @@ use rcompss::cluster::{ClusterSpec, MachineProfile};
 use rcompss::coordinator::fault::FailureInjector;
 use rcompss::sim::{CostModel, SimEngine, SimSink};
 
+/// True when the CI chaos matrix is driving this run (`RCOMPSS_CHAOS`):
+/// injected task failures and node kills make strict performance-counter
+/// assertions (zero failed transfers, single encodes, ...) meaningless —
+/// the *result* assertions stay in force, which is the whole point of the
+/// matrix.
+fn chaos_active() -> bool {
+    std::env::var("RCOMPSS_CHAOS").map_or(false, |v| {
+        rcompss::coordinator::fault::ChaosSpec::parse(&v)
+            .map_or(false, |s| s.is_active())
+    })
+}
+
 fn tiny_shapes() -> Shapes {
     Shapes {
         knn_train_n: 128,
@@ -349,8 +361,10 @@ fn every_router_produces_identical_results() {
         let classes = sink.fetch(plan.classes[0]).unwrap();
         let got = classes.as_int().unwrap().to_vec();
         let stats = rt.stop().unwrap();
-        assert_eq!(stats.sync_transfer_decodes, 0, "router {router}: {stats:?}");
-        assert_eq!(stats.dead_version_bytes, 0, "router {router}: {stats:?}");
+        if !chaos_active() {
+            assert_eq!(stats.sync_transfer_decodes, 0, "router {router}: {stats:?}");
+            assert_eq!(stats.dead_version_bytes, 0, "router {router}: {stats:?}");
+        }
         match &reference {
             None => reference = Some(got),
             Some(want) => assert_eq!(&got, want, "router {router} changed results"),
@@ -648,6 +662,11 @@ fn two_node_memory_plane_claims_never_run_codec_synchronously() {
     let (single, _) = run(1);
     let (multi, stats) = run(2);
     assert_eq!(single, multi, "node count changed classification");
+    if chaos_active() {
+        // Injected transfer failures / node kills legitimately perturb the
+        // counters below; the result equality above is the chaos contract.
+        return;
+    }
     assert_eq!(
         stats.sync_transfer_decodes, 0,
         "claim paths must never run the codec for cross-node inputs: {stats:?}"
@@ -745,31 +764,35 @@ fn warm_fanout_transfers_encode_once_with_zero_file_io() {
     let (warm_total, warm_stats) =
         run(rcompss::coordinator::runtime::DEFAULT_WARM_BUDGET);
     assert_eq!(warm_total, 8.0 * 1.25 * 4096.0);
-    assert_eq!(warm_stats.store_encodes, 1, "{warm_stats:?}");
-    assert_eq!(warm_stats.store_file_reads, 0, "{warm_stats:?}");
-    assert_eq!(warm_stats.store_file_writes, 0, "{warm_stats:?}");
-    assert!(warm_stats.warm_hits >= 1, "fan-out replicas hit warm: {warm_stats:?}");
-    assert_eq!(warm_stats.sync_transfer_decodes, 0, "{warm_stats:?}");
-    // The GC reclaimed the fanned-out version from every tier.
-    assert_eq!(warm_stats.warm_resident_bytes, 0, "{warm_stats:?}");
-    assert_eq!(warm_stats.dead_version_bytes, 0, "{warm_stats:?}");
+    if !chaos_active() {
+        assert_eq!(warm_stats.store_encodes, 1, "{warm_stats:?}");
+        assert_eq!(warm_stats.store_file_reads, 0, "{warm_stats:?}");
+        assert_eq!(warm_stats.store_file_writes, 0, "{warm_stats:?}");
+        assert!(warm_stats.warm_hits >= 1, "fan-out replicas hit warm: {warm_stats:?}");
+        assert_eq!(warm_stats.sync_transfer_decodes, 0, "{warm_stats:?}");
+        // The GC reclaimed the fanned-out version from every tier.
+        assert_eq!(warm_stats.warm_resident_bytes, 0, "{warm_stats:?}");
+        assert_eq!(warm_stats.dead_version_bytes, 0, "{warm_stats:?}");
+    }
 
     let (file_total, file_stats) = run(0);
     assert_eq!(file_total, warm_total, "staging path changed results");
-    assert!(
-        file_stats.store_file_writes >= 1,
-        "file staging must publish the spill file: {file_stats:?}"
-    );
-    assert!(
-        file_stats.store_file_reads >= 1,
-        "file staging must read it back: {file_stats:?}"
-    );
-    assert_eq!(
-        file_stats.warm_hits + file_stats.warm_fills,
-        0,
-        "warm tier off must see no traffic: {file_stats:?}"
-    );
-    assert_eq!(file_stats.sync_transfer_decodes, 0, "{file_stats:?}");
+    if !chaos_active() {
+        assert!(
+            file_stats.store_file_writes >= 1,
+            "file staging must publish the spill file: {file_stats:?}"
+        );
+        assert!(
+            file_stats.store_file_reads >= 1,
+            "file staging must read it back: {file_stats:?}"
+        );
+        assert_eq!(
+            file_stats.warm_hits + file_stats.warm_fills,
+            0,
+            "warm tier off must see no traffic: {file_stats:?}"
+        );
+        assert_eq!(file_stats.sync_transfer_decodes, 0, "{file_stats:?}");
+    }
 }
 
 #[test]

@@ -19,6 +19,17 @@ use rcompss::util::propcheck::{check, Config};
 use rcompss::util::prng::Pcg64;
 use rcompss::value::RValue;
 
+/// True when the CI chaos matrix is driving this run (`RCOMPSS_CHAOS`):
+/// injected task/transfer failures and node kills perturb the performance
+/// counters, so strict counter checks step aside — result exactness stays
+/// in force, which is what the matrix is for.
+fn chaos_active() -> bool {
+    std::env::var("RCOMPSS_CHAOS").map_or(false, |v| {
+        rcompss::coordinator::fault::ChaosSpec::parse(&v)
+            .map_or(false, |s| s.is_active())
+    })
+}
+
 /// A random DAG description: for each task, the set of earlier tasks it
 /// reads from.
 #[derive(Debug, Clone)]
@@ -282,6 +293,11 @@ fn prop_multi_node_transfers_and_gc_preserve_results() {
             let want: f64 = values.iter().sum();
             if (total - want).abs() > 1e-9 {
                 return Err(format!("sum {total} != {want}"));
+            }
+            if chaos_active() {
+                // Exactness above is the chaos contract; the quiescence
+                // counters below assume failure-free transfers.
+                return Ok(());
             }
             if stats.sync_transfer_decodes != 0 {
                 return Err(format!(
