@@ -24,7 +24,10 @@
 //! 9. **File-backed vs warm-tier fan-out staging** — an N-node fan-out of
 //!    memory-resident versions, `--warm-budget 0` (one encode + N file
 //!    round-trips per version) against the warm tier (one encode, zero
-//!    file I/O, blob shipped directly).
+//!    file I/O, blob shipped directly);
+//! 10. **Fleet-scale DES throughput** — a 1,000-node, 10^6-task synthetic
+//!     plan (`sim::fleet_plan`) through the fuzzed event heap, in
+//!     events/sec — the schedule-fuzz sweep's per-seed capacity bar.
 //!
 //! Run: `cargo bench --bench runtime_hotpath`
 
@@ -632,6 +635,54 @@ fn pure_structures() {
     println!();
 }
 
+fn fleet_sim(summary: &mut Vec<Json>) {
+    println!("[10] fleet-scale DES throughput (1,000 nodes, 10^6 tasks, fuzzed heap)");
+    // The schedule-fuzz harness's capacity bar: a 1,000-node synthetic
+    // plan of 20,000 x 50 chained tasks (one million tasks, ~3 heap
+    // events each) must drain in single-digit seconds per seed. Runs
+    // *with* a fuzz seed so the measured number includes the perturbation
+    // layer's batching — the sweep's real cost, not a best case.
+    let nodes = 1_000u32;
+    let plan = plans::fleet_plan(20_000, 50);
+    let n_tasks = plan.graph.len();
+    let events = n_tasks * 3;
+    let spec = ClusterSpec::new(MachineProfile::shaheen3(), nodes).with_workers_per_node(4);
+    let (t, report) = time_once(|| {
+        SimEngine::new(spec, CostModel::default())
+            .with_router("roundrobin")
+            .with_fuzz_seed(1)
+            .run(plan, "fleet-bench")
+            .unwrap()
+    });
+    assert_eq!(report.tasks_done, n_tasks);
+    let eps = events as f64 / t;
+    println!(
+        "  fleet: {} tasks on {} nodes (~{} events) in {:.2}s -> {:.2} M events/s",
+        n_tasks,
+        nodes,
+        events,
+        t,
+        eps / 1e6
+    );
+    record_result(
+        "hotpath_fleet_sim",
+        vec![
+            ("nodes", Json::Num(nodes as f64)),
+            ("tasks", Json::Num(n_tasks as f64)),
+            ("wall_s", Json::Num(t)),
+            ("events_per_sec", Json::Num(eps)),
+        ],
+    );
+    summary.push(obj(vec![
+        ("metric", Json::Str("fleet_sim_events_per_sec".into())),
+        ("nodes", Json::Num(nodes as f64)),
+        ("tasks", Json::Num(n_tasks as f64)),
+        ("wall_s", Json::Num(t)),
+        ("events_per_sec", Json::Num(eps)),
+    ]));
+    println!();
+}
+
 fn main() {
     banner(
         "runtime_hotpath — calibration + hot-path microbenchmarks",
@@ -640,16 +691,18 @@ fn main() {
     gemm_ratio();
     unit_costs();
     codec_throughput();
-    // Cases [4], [6], [7], [8], and [9] share one committed summary file;
-    // it is written only after all five ran, so a measured
+    // Cases [4], [6], [7], [8], [9], and [10] share one committed summary
+    // file; it is written only after all six ran, so a measured
     // BENCH_hotpath.json always carries the dispatch, batched-submit,
-    // routing, and fan-out-staging metrics the projected copy has.
+    // routing, fan-out-staging, and fleet-sim metrics the projected copy
+    // has.
     let mut summary: Vec<Json> = Vec::new();
     dispatch_overhead(&mut summary);
     batched_submission(&mut summary);
     routing_models(&mut summary);
     adaptive_routing(&mut summary);
     fanout_staging(&mut summary);
+    fleet_sim(&mut summary);
     rcompss::bench_harness::write_json_summary("hotpath", summary);
     pure_structures();
 }

@@ -32,6 +32,9 @@
 //! * [`executor`] — the persistent worker pool (threads) for real local
 //!   execution, with memory- or file-based parameter passing;
 //! * [`fault`] — task resubmission on failure and failure injection;
+//! * [`schedfuzz`] — deterministic schedule-fuzzing yield points at the
+//!   concurrency planes' hazard windows (armed by `RCOMPSS_SCHED_FUZZ` or
+//!   `with_sched_fuzz`; a no-op branch otherwise);
 //! * [`runtime`] — the orchestrator gluing the above behind the API.
 //!
 //! The DAG, registry, and scheduler policies are *pure* (no threads, no
@@ -101,6 +104,7 @@ pub mod feedback;
 pub mod placement;
 pub mod registry;
 pub mod runtime;
+pub mod schedfuzz;
 pub mod scheduler;
 pub mod store;
 pub mod transfer;
@@ -111,5 +115,6 @@ pub use feedback::{AdaptivePlacement, FeedbackStats};
 pub use placement::{placement_by_name, PlacementModel, RoutedReady};
 pub use registry::{DataKey, DataRegistry, NodeId, VersionTable};
 pub use runtime::{Coordinator, CoordinatorConfig, SubmitOutcome};
+pub use schedfuzz::{FuzzController, FuzzSite};
 pub use store::{DataStore, SpillPolicy, Tier, TieredStore, ValueStore, WarmStore};
 pub use transfer::TransferService;

@@ -134,16 +134,27 @@ pub fn placement_by_name(name: &str) -> Option<Arc<dyn PlacementModel>> {
     }
 }
 
-/// Run `f` over a zeroed per-node score slice without heap allocation for
-/// up to [`INLINE_NODES`] nodes (the common case; larger clusters pay one
-/// short-lived vec).
+/// Run `f` over a zeroed per-node score slice without heap allocation:
+/// a stack array up to [`INLINE_NODES`] nodes (the common case), a
+/// thread-local scratch vec beyond that — at fleet scale (1,000 nodes) the
+/// historical per-push `vec![0u64; nodes]` was an 8 KiB allocation on
+/// every routing decision. `place` never nests inside itself, so the
+/// borrow of the thread-local is never re-entered.
 pub(crate) fn with_scores<R>(nodes: usize, f: impl FnOnce(&mut [u64]) -> R) -> R {
     if nodes <= INLINE_NODES {
         let mut buf = [0u64; INLINE_NODES];
         f(&mut buf[..nodes])
     } else {
-        let mut buf = vec![0u64; nodes];
-        f(&mut buf)
+        thread_local! {
+            static SCRATCH: std::cell::RefCell<Vec<u64>> =
+                const { std::cell::RefCell::new(Vec::new()) };
+        }
+        SCRATCH.with(|cell| {
+            let mut buf = cell.borrow_mut();
+            buf.clear();
+            buf.resize(nodes, 0);
+            f(&mut buf)
+        })
     }
 }
 

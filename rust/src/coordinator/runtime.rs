@@ -36,6 +36,7 @@ use crate::coordinator::fault::{ChaosSpec, FailureInjector, NodeHealth, RetryPol
 use crate::coordinator::feedback::FeedbackStats;
 use crate::coordinator::placement::{placement_by_name, InflightSource};
 use crate::coordinator::registry::{CollectAction, DataKey, DataRegistry, NodeId, VersionTable};
+use crate::coordinator::schedfuzz::{yield_point, FuzzController, FuzzSite};
 use crate::coordinator::scheduler::{ReadyTask, ShardedReady};
 use crate::coordinator::store::{self, SpillPolicy, TieredStore};
 use crate::coordinator::transfer::{self, TransferService};
@@ -172,6 +173,11 @@ pub struct CoordinatorConfig {
     /// cold tier (bounded by measured re-execution cost) so a node loss
     /// replays *tasks, not runs*.
     pub checkpoint: String,
+    /// Schedule-fuzz seed (`RCOMPSS_SCHED_FUZZ` / `with_sched_fuzz`):
+    /// arms deterministic yield points at the concurrency planes' hazard
+    /// windows (see [`crate::coordinator::schedfuzz`]). `None` (default)
+    /// leaves every hook a single no-op branch.
+    pub sched_fuzz: Option<u64>,
 }
 
 /// Default byte budget of the in-memory data plane — the single source of
@@ -225,6 +231,7 @@ impl CoordinatorConfig {
                 .and_then(|v| ChaosSpec::parse(&v).ok())
                 .unwrap_or_default(),
             checkpoint: std::env::var("RCOMPSS_CHECKPOINT").unwrap_or_else(|_| "none".into()),
+            sched_fuzz: FuzzController::seed_from_env(),
         }
     }
 
@@ -326,6 +333,14 @@ impl CoordinatorConfig {
     /// execution is resubmitted before the task fails permanently.
     pub fn with_max_retries(mut self, retries: u32) -> Self {
         self.retry.max_retries = retries;
+        self
+    }
+
+    /// Arm the schedule-fuzz plane with `seed`: every yield point executes
+    /// the deterministic perturbation stream `decision(seed, site, visit)`
+    /// — the replay knob for CI-found interleaving failures.
+    pub fn with_sched_fuzz(mut self, seed: u64) -> Self {
+        self.sched_fuzz = Some(seed);
         self
     }
 }
@@ -434,6 +449,9 @@ pub struct RuntimeStats {
     pub nodes_killed: u64,
     /// Nodes rejoined (`add_node`).
     pub nodes_joined: u64,
+    /// Schedule-fuzz plane: yield-point visits taken across all sites
+    /// (0 when the plane is disarmed — proof the hooks cost nothing).
+    pub sched_fuzz_perturbations: u64,
 }
 
 /// Per-task metadata kept by the coordinator; shared with claimants as an
@@ -502,6 +520,9 @@ pub(crate) struct Shared {
     /// Checkpoint accounting: versions written / serialized bytes.
     pub checkpoints_written: AtomicU64,
     pub checkpoint_bytes: AtomicU64,
+    /// Schedule-fuzz controller (shared with the dispatch fabric and the
+    /// transfer board); `None` in production.
+    pub fuzz: Option<Arc<FuzzController>>,
 }
 
 impl Shared {
@@ -582,6 +603,10 @@ pub(crate) fn reap_if_drained(shared: &Shared, key: DataKey) {
 /// collected) so diagnostics and late `wait_on`s get a precise error
 /// instead of a hang.
 fn collect_version(shared: &Shared, act: &CollectAction) {
+    // Hazard window: the version is marked collected but its residency,
+    // file, and board entries are still being torn down — a mover staging
+    // the same version races every step below.
+    yield_point(&shared.fuzz, FuzzSite::GcCollect);
     shared.store.discard_resident(act.key);
     if let Some(path) = &act.path {
         if shared.store.cold().delete_file(path) {
@@ -609,6 +634,10 @@ pub(crate) fn kill_node_now(shared: &Shared, node: NodeId) -> bool {
     if !shared.health.mark_dead(node) {
         return false;
     }
+    // Hazard window: the health plane says dead but the transfer board
+    // still accepts requests toward the node — routing verdicts and mover
+    // completions race the poison below.
+    yield_point(&shared.fuzz, FuzzSite::NodeKill);
     // Fail in-flight and queued transfers toward/from the dead node fast —
     // claimants get an immediate error instead of a 3-attempt grind.
     shared.transfers.fail_node(node);
@@ -632,6 +661,10 @@ pub(crate) fn rejoin_node(shared: &Shared, node: NodeId) -> bool {
     if !shared.health.mark_alive(node) {
         return false;
     }
+    // Hazard window: the node is alive for routing but its dead-node
+    // tombstones are still on the board — a first post-rejoin prefetch
+    // races the revive below.
+    yield_point(&shared.fuzz, FuzzSite::NodeJoin);
     shared.transfers.revive_node(node);
     {
         let mut core = shared.core.lock().unwrap();
@@ -795,7 +828,14 @@ impl Coordinator {
         } else {
             0
         };
-        let transfers = Arc::new(TransferService::new(movers_per_node, config.nodes));
+        // One schedule-fuzz controller per runtime instance (never a
+        // process global: parallel test runtimes must not share visit
+        // counters or seeds would stop replaying), shared by every
+        // instrumented plane.
+        let fuzz = config.sched_fuzz.map(|seed| Arc::new(FuzzController::new(seed)));
+        let transfers = Arc::new(
+            TransferService::new(movers_per_node, config.nodes).with_fuzz(fuzz.clone()),
+        );
         let health = Arc::new(NodeHealth::new(config.nodes as usize));
         // Chaos plan: a positive task-fail probability installs a
         // catch-all injector (and `with_chaos` already raised the retry
@@ -836,7 +876,8 @@ impl Coordinator {
                 config.scheduler
             )
         })?
-        .with_health(Arc::clone(&health));
+        .with_health(Arc::clone(&health))
+        .with_fuzz(fuzz.clone());
         let shared = Arc::new(Shared {
             core: Mutex::new(Core {
                 graph: TaskGraph::new(),
@@ -867,6 +908,7 @@ impl Coordinator {
             chaos_victim,
             checkpoints_written: AtomicU64::new(0),
             checkpoint_bytes: AtomicU64::new(0),
+            fuzz,
         });
 
         // Persistent worker pool: `nodes * workers_per_node` executors that
@@ -1321,6 +1363,8 @@ impl Coordinator {
         stats.transfer_bytes = shared.transfers.transfer_bytes();
         stats.checkpoints_written = shared.checkpoints_written.load(Ordering::Relaxed);
         stats.checkpoint_bytes = shared.checkpoint_bytes.load(Ordering::Relaxed);
+        stats.sched_fuzz_perturbations =
+            shared.fuzz.as_ref().map(|f| f.total_visits()).unwrap_or(0);
     }
 
     /// The observation sink behind an `adaptive` router (`None` for the

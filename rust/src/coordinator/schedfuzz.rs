@@ -1,0 +1,237 @@
+//! Deterministic schedule-fuzzing yield points for the live concurrency
+//! planes.
+//!
+//! The simulator's fuzz layer (`sim::engine`) permutes event order in
+//! virtual time; this module is its live twin. The runtime's hazard
+//! windows — the gaps where one thread's half-finished protocol step is
+//! visible to another — are instrumented with `yield_point` calls:
+//!
+//! | site | window |
+//! |------|--------|
+//! | `ReadyPush` | `ShardedReady::push`: between routing and shard insert |
+//! | `ReadySteal` | `ShardedReady::pop`: before each steal scan |
+//! | `ReadyPark` | `ShardedReady::pop`: between empty scan and park |
+//! | `TransferNext` | mover loop: between claim and transfer |
+//! | `TransferComplete` | mover loop: between transfer and board update |
+//! | `TransferPurge` | `purge_version`: before draining tombstones |
+//! | `GcCollect` | `collect_version`: before discarding residency |
+//! | `NodeKill` | `kill_node_now`: between health flip and board poison |
+//! | `NodeJoin` | `rejoin_node`: between health flip and board revive |
+//!
+//! When fuzzing is off — no `RCOMPSS_SCHED_FUZZ`, no `with_sched_fuzz`,
+//! no `schedfuzz` feature — every hook holds a `None` and compiles down to
+//! one branch on an option discriminant: the plane costs nothing in
+//! production. When armed, a seeded [`FuzzController`] decides, per visit,
+//! whether to fall through, surrender the timeslice, or sleep for a few
+//! hundred microseconds — widening exactly the windows the PR-4 class of
+//! transfer-board/GC races needed hand-crafted timing to reach.
+//!
+//! # Reproducibility protocol
+//!
+//! The perturbation at visit `i` of site `s` under seed `k` is the pure
+//! function [`decision`]`(k, s, i)` — no wall clock, no thread identity,
+//! no global state. One seed therefore yields one byte-identical
+//! perturbation schedule per site, run after run; what the OS scheduler
+//! does inside a widened window still varies, so a seed defines a
+//! reproducible *neighborhood* of interleavings rather than a single one,
+//! and the invariant assertions (transfer-board accounting, zero dead
+//! version bytes, correct results) must hold everywhere in it. Replay a
+//! CI failure with `RCOMPSS_SCHED_FUZZ=<seed>` or
+//! `CoordinatorConfig::with_sched_fuzz(seed)`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// The instrumented hazard sites (see the module table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FuzzSite {
+    ReadyPush = 0,
+    ReadySteal = 1,
+    ReadyPark = 2,
+    TransferNext = 3,
+    TransferComplete = 4,
+    TransferPurge = 5,
+    GcCollect = 6,
+    NodeKill = 7,
+    NodeJoin = 8,
+}
+
+/// Number of [`FuzzSite`] variants (per-site visit counters).
+pub const SITE_COUNT: usize = 9;
+
+/// What one visit to a yield point does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Perturbation {
+    /// Fall straight through.
+    None,
+    /// `thread::yield_now()` this many times: surrender the timeslice so
+    /// a racing thread can take the window.
+    Yield(u8),
+    /// Deterministic sleep in microseconds: hold the window open long
+    /// enough for a whole mover/GC/kill pipeline on another core to pass
+    /// through it.
+    Sleep(u16),
+}
+
+/// The pure decision function: the perturbation at visit `index` of
+/// `site` under `seed`. splitmix64-style finalizer — cheap, branchless,
+/// identical on every platform. Distribution: 1/2 fall through, 3/8
+/// yield 1–3 times, 1/8 sleep 50–500 µs.
+pub fn decision(seed: u64, site: FuzzSite, index: u64) -> Perturbation {
+    let mut h = seed
+        ^ (site as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        ^ index.rotate_left(17);
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94d0_49bb_1331_11eb);
+    h ^= h >> 31;
+    match h % 8 {
+        0..=3 => Perturbation::None,
+        4..=6 => Perturbation::Yield(1 + ((h >> 8) % 3) as u8),
+        _ => Perturbation::Sleep(50 + ((h >> 16) % 450) as u16),
+    }
+}
+
+/// The first `n` decisions of one site's schedule — the replay protocol's
+/// ground truth: two runs under one seed walk identical vectors.
+pub fn schedule(seed: u64, site: FuzzSite, n: u64) -> Vec<Perturbation> {
+    (0..n).map(|i| decision(seed, site, i)).collect()
+}
+
+/// Seeded perturbation controller, installed once per runtime instance —
+/// never a process-global: parallel `cargo test` runtimes in one process
+/// must not share visit counters, or seeds would stop replaying. Each
+/// instrumented structure holds an `Option<Arc<FuzzController>>`; `None`
+/// (the production configuration) short-circuits in `yield_point`.
+pub struct FuzzController {
+    seed: u64,
+    visits: [AtomicU64; SITE_COUNT],
+}
+
+impl FuzzController {
+    pub fn new(seed: u64) -> FuzzController {
+        FuzzController {
+            seed,
+            visits: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Visits taken at `site` so far (diagnostics; summed into
+    /// `RuntimeStats::sched_fuzz_perturbations` at stop).
+    pub fn visits(&self, site: FuzzSite) -> u64 {
+        self.visits[site as usize].load(Ordering::Relaxed)
+    }
+
+    /// Total visits across all sites.
+    pub fn total_visits(&self) -> u64 {
+        self.visits.iter().map(|v| v.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Execute the seeded perturbation for this visit of `site`.
+    pub fn perturb(&self, site: FuzzSite) {
+        let index = self.visits[site as usize].fetch_add(1, Ordering::Relaxed);
+        match decision(self.seed, site, index) {
+            Perturbation::None => {}
+            Perturbation::Yield(n) => {
+                for _ in 0..n {
+                    std::thread::yield_now();
+                }
+            }
+            Perturbation::Sleep(us) => {
+                std::thread::sleep(std::time::Duration::from_micros(us as u64))
+            }
+        }
+    }
+
+    /// The default seed from the environment: `RCOMPSS_SCHED_FUZZ=<seed>`
+    /// arms the plane in any build; under `--features schedfuzz` the plane
+    /// is armed with seed 0 even without the variable (so a fuzzing build
+    /// can never silently run unperturbed). Unparsable values are ignored
+    /// with a warning rather than failing startup.
+    pub fn seed_from_env() -> Option<u64> {
+        if let Ok(v) = std::env::var("RCOMPSS_SCHED_FUZZ") {
+            if let Ok(seed) = v.trim().parse::<u64>() {
+                return Some(seed);
+            }
+            eprintln!("rcompss: ignoring unparsable RCOMPSS_SCHED_FUZZ='{v}' (want a u64 seed)");
+        }
+        if cfg!(feature = "schedfuzz") {
+            Some(0)
+        } else {
+            None
+        }
+    }
+}
+
+/// The hook the hazard sites call. `None` — every production run — is a
+/// single branch; the whole plane optimizes out of the loops that matter.
+#[inline(always)]
+pub(crate) fn yield_point(fuzz: &Option<Arc<FuzzController>>, site: FuzzSite) {
+    if let Some(c) = fuzz {
+        c.perturb(site);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decision_streams_are_pure_and_deterministic() {
+        // The replay contract: (seed, site, index) fully determines the
+        // perturbation — two schedules from one seed are byte-identical.
+        for site in [FuzzSite::ReadyPush, FuzzSite::TransferComplete, FuzzSite::GcCollect] {
+            assert_eq!(schedule(42, site, 256), schedule(42, site, 256));
+        }
+        // Different seeds and different sites explore different orders.
+        assert_ne!(
+            schedule(1, FuzzSite::ReadyPush, 256),
+            schedule(2, FuzzSite::ReadyPush, 256)
+        );
+        assert_ne!(
+            schedule(1, FuzzSite::ReadyPush, 256),
+            schedule(1, FuzzSite::ReadyPark, 256)
+        );
+    }
+
+    #[test]
+    fn decision_mix_covers_all_perturbation_kinds() {
+        let s = schedule(7, FuzzSite::TransferNext, 512);
+        assert!(s.iter().any(|p| *p == Perturbation::None));
+        assert!(s.iter().any(|p| matches!(p, Perturbation::Yield(_))));
+        assert!(s.iter().any(|p| matches!(p, Perturbation::Sleep(_))));
+        // Sleeps stay inside the documented 50-500 µs envelope.
+        for p in &s {
+            if let Perturbation::Sleep(us) = p {
+                assert!((50..500).contains(us), "sleep {us}µs out of envelope");
+            }
+        }
+    }
+
+    #[test]
+    fn controller_counts_visits_per_site() {
+        let c = FuzzController::new(3);
+        assert_eq!(c.total_visits(), 0);
+        for _ in 0..5 {
+            c.perturb(FuzzSite::ReadyPush);
+        }
+        c.perturb(FuzzSite::NodeKill);
+        assert_eq!(c.visits(FuzzSite::ReadyPush), 5);
+        assert_eq!(c.visits(FuzzSite::NodeKill), 1);
+        assert_eq!(c.visits(FuzzSite::GcCollect), 0);
+        assert_eq!(c.total_visits(), 6);
+        assert_eq!(c.seed(), 3);
+    }
+
+    #[test]
+    fn disarmed_hook_is_a_no_op() {
+        // The production path: a None controller does nothing (and in
+        // particular never panics or allocates).
+        yield_point(&None, FuzzSite::TransferPurge);
+    }
+}

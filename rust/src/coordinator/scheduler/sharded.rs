@@ -34,6 +34,7 @@ use crate::coordinator::dag::TaskId;
 use crate::coordinator::fault::NodeHealth;
 use crate::coordinator::placement::{InflightSource, PlacementModel, PlacementSignals};
 use crate::coordinator::registry::NodeId;
+use crate::coordinator::schedfuzz::{yield_point, FuzzController, FuzzSite};
 
 pub struct ShardedReady {
     shards: Vec<Mutex<Box<dyn Scheduler>>>,
@@ -59,6 +60,9 @@ pub struct ShardedReady {
     park: Mutex<()>,
     cv: Condvar,
     shutdown: AtomicBool,
+    /// Schedule-fuzz controller; `None` (production) makes every yield
+    /// point a single no-op branch.
+    fuzz: Option<Arc<FuzzController>>,
 }
 
 /// Lock-free signals view handed to the model on each push.
@@ -110,7 +114,14 @@ impl ShardedReady {
             park: Mutex::new(()),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            fuzz: None,
         })
+    }
+
+    /// Arm the schedule-fuzz yield points (`None` keeps them no-op).
+    pub fn with_fuzz(mut self, fuzz: Option<Arc<FuzzController>>) -> ShardedReady {
+        self.fuzz = fuzz;
+        self
     }
 
     /// Attach the node-liveness plane: dead nodes stop receiving routing
@@ -161,6 +172,9 @@ impl ShardedReady {
                 shard = best;
             }
         }
+        // Hazard window: the routing verdict is out but the task is not yet
+        // visible in any shard — a racing kill/steal sees stale depths.
+        yield_point(&self.fuzz, FuzzSite::ReadyPush);
         {
             // Increment while holding the shard lock so a concurrent pop of
             // this very task (its matching decrement also runs under the
@@ -222,6 +236,10 @@ impl ShardedReady {
                 continue;
             }
             // Scan own shard first, then the others (work stealing).
+            // Hazard window: another worker's pop (or a push) can land
+            // between the scan passes, so a perturbation here explores
+            // steal-order races.
+            yield_point(&self.fuzz, FuzzSite::ReadySteal);
             for i in 0..nodes {
                 let shard = (home + i) % nodes;
                 let mut s = self.shards[shard].lock().unwrap();
@@ -239,6 +257,10 @@ impl ShardedReady {
             // Park until a push or shutdown. Register as a sleeper first,
             // then re-check the count under the park lock, so a concurrent
             // push either sees the registration or is seen by the re-check.
+            // Hazard window: a push can slip between the empty scan above
+            // and the sleeper registration below — the no-lost-wakeup dance
+            // must absorb it.
+            yield_point(&self.fuzz, FuzzSite::ReadyPark);
             let guard = self.park.lock().unwrap();
             self.sleepers.fetch_add(1, Ordering::SeqCst);
             if self.queued.load(Ordering::SeqCst) > 0 || self.shutdown.load(Ordering::SeqCst) {

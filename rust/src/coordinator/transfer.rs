@@ -46,6 +46,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use crate::coordinator::placement::InflightSource;
 use crate::coordinator::registry::{DataKey, NodeId};
 use crate::coordinator::runtime::Shared;
+use crate::coordinator::schedfuzz::{yield_point, FuzzController, FuzzSite};
 use crate::coordinator::store::{self, cold};
 
 /// Total attempts allowed per `(version, node)` pair. A `Failed` entry
@@ -142,6 +143,9 @@ pub struct TransferService {
     failed: AtomicU64,
     retried: AtomicU64,
     bytes: AtomicU64,
+    /// Schedule-fuzz controller; `None` (production) makes every yield
+    /// point a single no-op branch.
+    fuzz: Option<Arc<FuzzController>>,
 }
 
 impl TransferService {
@@ -169,7 +173,14 @@ impl TransferService {
             failed: AtomicU64::new(0),
             retried: AtomicU64::new(0),
             bytes: AtomicU64::new(0),
+            fuzz: None,
         }
+    }
+
+    /// Arm the schedule-fuzz yield points (`None` keeps them no-op).
+    pub fn with_fuzz(mut self, fuzz: Option<Arc<FuzzController>>) -> TransferService {
+        self.fuzz = fuzz;
+        self
     }
 
     /// Node → queue/gauge slot. The one mapping shared by
@@ -457,6 +468,10 @@ impl TransferService {
         if !self.enabled() {
             return;
         }
+        // Hazard window: the GC has decided to collect but the board still
+        // advertises the version — a mover completing the same pair races
+        // the purge.
+        yield_point(&self.fuzz, FuzzSite::TransferPurge);
         let mut inner = self.inner.lock().unwrap();
         let slots = self.inflight.len();
         let inflight = &self.inflight;
@@ -626,8 +641,15 @@ impl InflightSource for TransferService {
 /// `Coordinator::start`, joined by `Coordinator::stop`.
 pub(crate) fn mover_loop(shared: Arc<Shared>, home: NodeId) {
     while let Some((key, node)) = shared.transfers.next_request(home) {
+        // Hazard window: the pair is claimed (Running) but no bytes have
+        // moved — GC purges, node kills, and duplicate requests race here.
+        yield_point(&shared.transfers.fuzz, FuzzSite::TransferNext);
         let t0 = std::time::Instant::now();
         let result = perform_transfer(&shared, key, node);
+        // Hazard window: the replica is staged and its location published,
+        // but the board still says Running — the PR-4 class of
+        // tombstone/GC races lives exactly in this gap.
+        yield_point(&shared.transfers.fuzz, FuzzSite::TransferComplete);
         if let (Some(fb), Ok(Some(nbytes))) = (&shared.feedback, &result) {
             fb.record_transfer(node, *nbytes, t0.elapsed().as_secs_f64());
         }

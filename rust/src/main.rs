@@ -136,6 +136,7 @@ USAGE:
                  [--nodes N] [--workers-per-node W] [--fragments F]
                  [--scheduler fifo|lifo|locality] [--router bytes|cost|roundrobin|adaptive]
                  [--warm on|off (warm-tier transfer staging, default on)]
+                 [--fuzz-seed N (seeded permutation of timestamp-tied events)]
   rcompss dag    --app add|knn|kmeans|linreg [--fragments F] [--out FILE.dot]
   rcompss trace  --app knn|kmeans|linreg --machine shaheen3|marenostrum5
                  [--nodes N] [--workers-per-node W] [--width COLS]
@@ -377,19 +378,26 @@ fn cmd_sim(opts: &Opts) -> anyhow::Result<()> {
     let plan = build_plan(&app, fragments, opts)?;
     let n_tasks = plan.graph.len();
     let cp = plan.graph.critical_path_len();
-    let engine = SimEngine::new(spec.clone(), CostModel::default())
+    let mut engine = SimEngine::new(spec.clone(), CostModel::default())
         .with_scheduler(&opts.get("scheduler", "fifo"))
         .with_router(&opts.get("router", "bytes"))
         .with_warm(opts.get("warm", "on") != "off");
+    if opts.has("fuzz-seed") {
+        engine = engine.with_fuzz_seed(opts.get_usize("fuzz-seed", 0)? as u64);
+    }
     let report = engine.run(plan, &format!("{app}@{}", spec.profile.name))?;
     println!(
-        "sim: app={app} machine={} nodes={} workers/node={} scheduler={} router={} warm={}",
+        "sim: app={app} machine={} nodes={} workers/node={} scheduler={} router={} warm={}{}",
         spec.profile.name,
         spec.nodes,
         spec.workers_per_node,
         opts.get("scheduler", "fifo"),
         opts.get("router", "bytes"),
-        opts.get("warm", "on")
+        opts.get("warm", "on"),
+        report
+            .fuzz_seed
+            .map(|s| format!(" fuzz-seed={s}"))
+            .unwrap_or_default()
     );
     println!(
         "  tasks={n_tasks} critical_path={cp} makespan={:.3}s utilization={:.0}% io={:.3}s \

@@ -69,9 +69,40 @@ impl Default for CostModel {
 }
 
 impl CostModel {
-    /// Override one task type's unit cost (calibration).
+    /// Override one task type's unit cost (calibration). A non-finite or
+    /// negative cost is rejected *here*, with the type named — it would
+    /// otherwise surface as a NaN `Time` ordering panic deep inside the
+    /// engine's event heap, far from the bad calibration that caused it.
     pub fn set_unit_cost(&mut self, ty: &str, seconds_per_unit: f64) {
+        assert!(
+            seconds_per_unit.is_finite() && seconds_per_unit >= 0.0,
+            "cost model: unit cost for '{ty}' must be finite and >= 0, got {seconds_per_unit}"
+        );
         self.unit_costs.insert(ty.to_string(), seconds_per_unit);
+    }
+
+    /// Check every constant for non-finite or negative values. Hand-built
+    /// models can poison fields directly (they are `pub`), bypassing
+    /// [`CostModel::set_unit_cost`]'s assert; the engine calls this at run
+    /// start so such a model fails with the offending field named instead
+    /// of panicking on a NaN time comparison mid-heap.
+    pub fn validate(&self) -> Result<(), String> {
+        let bad = |v: f64| !v.is_finite() || v < 0.0;
+        if bad(self.default_unit_cost) {
+            return Err(format!("default_unit_cost is {}", self.default_unit_cost));
+        }
+        if bad(self.dispatch_overhead_s) {
+            return Err(format!("dispatch_overhead_s is {}", self.dispatch_overhead_s));
+        }
+        if bad(self.master_dispatch_s) {
+            return Err(format!("master_dispatch_s is {}", self.master_dispatch_s));
+        }
+        for (ty, v) in &self.unit_costs {
+            if bad(*v) {
+                return Err(format!("unit cost for '{ty}' is {v}"));
+            }
+        }
+        Ok(())
     }
 
     pub fn unit_cost(&self, ty: &str) -> f64 {
@@ -178,5 +209,28 @@ mod tests {
         assert_eq!(m.unit_cost("mystery"), m.default_unit_cost);
         m.set_unit_cost("mystery", 1e-6);
         assert_eq!(m.unit_cost("mystery"), 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "unit cost for 'bad_type' must be finite")]
+    fn set_unit_cost_rejects_nan_at_construction() {
+        CostModel::default().set_unit_cost("bad_type", f64::NAN);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be finite and >= 0")]
+    fn set_unit_cost_rejects_negative_costs() {
+        CostModel::default().set_unit_cost("bad_type", -1.0);
+    }
+
+    #[test]
+    fn validate_names_the_poisoned_field() {
+        assert!(CostModel::default().validate().is_ok());
+        let mut m = CostModel::default();
+        m.master_dispatch_s = f64::INFINITY;
+        assert!(m.validate().unwrap_err().contains("master_dispatch_s"));
+        let mut m = CostModel::default();
+        m.unit_costs.insert("poisoned".into(), f64::NAN);
+        assert!(m.validate().unwrap_err().contains("poisoned"));
     }
 }

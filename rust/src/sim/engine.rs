@@ -26,24 +26,42 @@
 //! scheduled by an `ExecDone` event at compute completion — otherwise a
 //! claim would pre-reserve the disk far into the future and serialize
 //! every other worker on the node behind it.
+//!
+//! # Schedule fuzzing
+//!
+//! The event heap breaks timestamp ties by insertion order — one arbitrary
+//! schedule out of the many the live runtime's threads could realize.
+//! [`SimEngine::with_fuzz_seed`] installs a `SchedulePerturbation` layer
+//! on the heap: events with equal timestamps (and, under
+//! [`SimEngine::with_fuzz_jitter`], events within a bounded virtual-time
+//! window) are delivered in a seeded-PRNG permutation instead. Every seed
+//! is a distinct but *fully deterministic* schedule — re-running the same
+//! plan with the same seed replays a byte-identical event order — and
+//! [`SimEngine::fuzz_sweep`] drives a whole set of seeds through one plan,
+//! asserting schedule-independence invariants (every task completes, no
+//! dead version bytes, the final data-plane digest is byte-identical
+//! across seeds) and naming the minimal failing seed on violation.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::cluster::ClusterSpec;
-use crate::coordinator::dag::{TaskId, TaskState};
+use crate::coordinator::dag::{TaskGraph, TaskId, TaskState};
 use crate::coordinator::feedback::FeedbackStats;
 use crate::coordinator::placement::{placement_by_name, PlacementModel, RoutedReady};
-use crate::coordinator::registry::{DataKey, NodeId};
+use crate::coordinator::registry::{DataKey, DataRegistry, NodeId};
 use crate::coordinator::scheduler::ReadyTask;
 use crate::sim::cost::CostModel;
-use crate::sim::sink::SimPlan;
+use crate::sim::sink::{SimPlan, SimTaskMeta};
 use crate::trace::{EventKind, Trace, Tracer, WorkerId};
+use crate::util::prng::Pcg64;
 
-/// Totally-ordered f64 for the event heap.
+/// Totally-ordered f64 for the event heap. The engine validates the cost
+/// model up front ([`CostModel::validate`]), so the `expect` below is a
+/// backstop, not the user-facing failure mode for a poisoned model.
 #[derive(Clone, Copy, PartialEq)]
 struct Time(f64);
 
@@ -104,9 +122,22 @@ pub struct SimReport {
     pub trace: Trace,
     /// Mean worker utilization (busy / span).
     pub utilization: f64,
+    /// The schedule-fuzz seed this run executed under (`None` = the
+    /// deterministic insertion-order schedule).
+    pub fuzz_seed: Option<u64>,
+    /// Fully-consumed version bytes left unreclaimed at quiescence. The
+    /// simulator never registers consumer releases, so anything nonzero is
+    /// a registry bookkeeping bug; the live transfer/GC accounting twin of
+    /// this invariant is asserted by `tests/fuzz_schedules.rs`.
+    pub dead_version_bytes: u64,
+    /// Order-insensitive digest of the final data-plane state
+    /// ([`SimPlan::result_digest`]): byte-identical across fuzz seeds when
+    /// the schedule only reordered legal ties.
+    pub result_digest: u64,
 }
 
 /// The engine.
+#[derive(Clone)]
 pub struct SimEngine {
     pub cluster: ClusterSpec,
     pub cost: CostModel,
@@ -130,28 +161,65 @@ pub struct SimEngine {
     /// Elasticity: rejoin this node at the given virtual time (its workers
     /// pay the init stagger again).
     pub node_join: Option<(f64, u32)>,
+    /// Schedule fuzzing: pop timestamp-tied events in a seeded permutation
+    /// (see the module docs). `None` = insertion order.
+    pub fuzz_seed: Option<u64>,
+    /// Fuzz reorder window in virtual seconds (default 0.0: permute exact
+    /// ties only, which is always a legal schedule). A nonzero window
+    /// additionally swaps events up to that far apart, deliberately
+    /// exploring bounded non-monotonic delivery — the engine's FCFS
+    /// servers all advance with `max()`, so a robust plan must still
+    /// drain.
+    pub fuzz_jitter_s: f64,
+}
+
+/// Seeded tie-permutation layer over the event heap. When armed, the heap
+/// is popped through this: the front event plus everything within
+/// `jitter_s` of it is drained into a batch, shuffled by the seeded PRNG,
+/// and delivered in that order. Pop order is a pure function of
+/// (plan, seed), so any violation a seed uncovers replays byte-identically
+/// from that seed. `scratch` is reused across batches: the fuzz layer adds
+/// no steady-state allocations to the hot heap path.
+struct SchedulePerturbation {
+    rng: Pcg64,
+    jitter_s: f64,
+    batch: VecDeque<(Time, u64, Event)>,
+    scratch: Vec<(Time, u64, Event)>,
 }
 
 struct RunState<'a> {
-    plan: &'a mut SimPlan,
+    /// The plan, borrow-split so task metadata can be read (`meta` is
+    /// immutable for the whole run) while the graph and registry mutate —
+    /// this is what lets the hot path hand out `&SimTaskMeta` references
+    /// instead of deep-cloning every task's input/output vectors twice.
+    graph: &'a mut TaskGraph,
+    registry: &'a mut DataRegistry,
+    meta: &'a HashMap<TaskId, SimTaskMeta>,
     router: RoutedReady,
     events: BinaryHeap<Reverse<(Time, u64, Event)>>,
     seq: u64,
+    fuzz: Option<SchedulePerturbation>,
     disk_free: Vec<f64>,
     /// Shared parallel-filesystem backend (writes funnel through it).
     fs_free: f64,
     /// Global FCFS master dispatch server (single COMPSs master process).
     master_free: f64,
     busy: Vec<f64>,
-    per_type: HashMap<String, (usize, f64)>,
+    /// Interned type-name keys: one `Arc` clone per *type*, not one
+    /// `String` allocation per *task*.
+    per_type: HashMap<Arc<str>, (usize, f64)>,
     total_io: f64,
     total_transfer: f64,
-    /// claim start per running task (for busy accounting).
-    started_at: HashMap<TaskId, f64>,
-    /// Worker owning each in-flight task; the kill handler resubmits what
-    /// the dead node was running, and stale ExecDone/TaskDone events (their
-    /// task no longer maps to them) are dropped on arrival.
-    running_on: HashMap<TaskId, WorkerId>,
+    /// Claim start per running task, indexed by dense `TaskId` (NaN = not
+    /// running). Task ids are allocated sequentially from 1, so a flat
+    /// vector replaces the per-task hash insert/remove pair on the hot
+    /// path.
+    started_at: Vec<f64>,
+    /// Worker owning each in-flight task (same dense indexing); the kill
+    /// handler resubmits what the dead node was running, and stale
+    /// ExecDone/TaskDone events (their task no longer maps to them) are
+    /// dropped on arrival.
+    running_on: Vec<Option<WorkerId>>,
     /// Per-node liveness (chaos); dead nodes take no pops and no pushes.
     dead: Vec<bool>,
     /// Per-node liveness epoch, bumped at every kill/join: worker events
@@ -170,10 +238,44 @@ struct RunState<'a> {
     feedback: Option<Arc<FeedbackStats>>,
 }
 
+/// Dense vector index for a `TaskId` (ids are allocated from 1).
+#[inline]
+fn tix(id: TaskId) -> usize {
+    id.0 as usize
+}
+
 impl RunState<'_> {
     fn push_event(&mut self, t: f64, e: Event) {
         self.seq += 1;
         self.events.push(Reverse((Time(t), self.seq, e)));
+    }
+
+    /// Pop the next event, optionally through the fuzz permutation layer.
+    fn next_event(&mut self) -> Option<(f64, Event)> {
+        let events = &mut self.events;
+        let Some(fz) = self.fuzz.as_mut() else {
+            return events.pop().map(|Reverse((Time(t), _, e))| (t, e));
+        };
+        if let Some((Time(t), _, e)) = fz.batch.pop_front() {
+            return Some((t, e));
+        }
+        let Reverse(first) = events.pop()?;
+        let horizon = first.0 .0 + fz.jitter_s;
+        fz.scratch.clear();
+        fz.scratch.push(first);
+        while let Some(Reverse((t, _, _))) = events.peek() {
+            if t.0 <= horizon {
+                let Reverse(next) = events.pop().expect("peeked event");
+                fz.scratch.push(next);
+            } else {
+                break;
+            }
+        }
+        if fz.scratch.len() > 1 {
+            fz.rng.shuffle(&mut fz.scratch);
+        }
+        fz.batch.extend(fz.scratch.drain(..));
+        fz.batch.pop_front().map(|(Time(t), _, e)| (t, e))
     }
 }
 
@@ -188,6 +290,8 @@ impl SimEngine {
             trace: false,
             node_kill: None,
             node_join: None,
+            fuzz_seed: None,
+            fuzz_jitter_s: 0.0,
         }
     }
 
@@ -232,8 +336,118 @@ impl SimEngine {
         self
     }
 
+    /// Arm the schedule fuzzer: timestamp-tied events pop in a permutation
+    /// drawn from this seed (see the module docs). The same (plan, seed)
+    /// pair replays a byte-identical event order, so a violation found in
+    /// a sweep reproduces from its printed seed alone. The CLI spelling is
+    /// `rcompss sim --fuzz-seed N`.
+    pub fn with_fuzz_seed(mut self, seed: u64) -> SimEngine {
+        self.fuzz_seed = Some(seed);
+        self
+    }
+
+    /// Widen the fuzz permutation from exact ties to a virtual-time window
+    /// of `seconds`: events up to that far apart may be delivered out of
+    /// order (bounded non-monotonic delivery — the live runtime's threads
+    /// have no global clock either). Only meaningful with a fuzz seed.
+    pub fn with_fuzz_jitter(mut self, seconds: f64) -> SimEngine {
+        self.fuzz_jitter_s = seconds.max(0.0);
+        self
+    }
+
+    /// Drive one plan through a whole set of fuzz seeds, asserting the
+    /// invariants a schedule permutation must never break:
+    ///
+    /// * the run drains (no stuck tasks — `run` itself enforces
+    ///   quiescence);
+    /// * every structural task completed (`tasks_done >=` the plan size;
+    ///   strictly more only under chaos re-runs);
+    /// * `dead_version_bytes == 0` (no unreclaimed fully-consumed
+    ///   versions);
+    /// * the final data-plane digest is byte-identical across seeds
+    ///   (skipped when node kill/join chaos is armed: recovery re-runs
+    ///   legitimately vary per schedule). The live-plane twin of this
+    ///   sweep — transfer-board accounting,
+    ///   `prefetched + waited + dropped + failed == requested` — is
+    ///   asserted by `tests/fuzz_schedules.rs` through the yield-point
+    ///   hooks.
+    ///
+    /// `make_plan` rebuilds the plan for each seed (a run consumes its
+    /// plan); the plan builders are deterministic, so every rebuild is the
+    /// same DAG. On any violation the error names the **minimal failing
+    /// seed** — re-run `with_fuzz_seed(that_seed)` on the same plan to
+    /// replay the identical event order and violation.
+    pub fn fuzz_sweep(
+        &self,
+        seeds: &[u64],
+        mut make_plan: impl FnMut() -> Result<SimPlan>,
+        label: &str,
+    ) -> Result<Vec<SimReport>> {
+        anyhow::ensure!(!seeds.is_empty(), "fuzz_sweep needs at least one seed");
+        let chaos = self.node_kill.is_some() || self.node_join.is_some();
+        let mut reports = Vec::with_capacity(seeds.len());
+        let mut failures: Vec<(u64, String)> = Vec::new();
+        let mut baseline: Option<(u64, u64)> = None;
+        for &seed in seeds {
+            let plan = make_plan()?;
+            let expected = plan.graph.len();
+            let mut engine = self.clone();
+            engine.fuzz_seed = Some(seed);
+            match engine.run(plan, &format!("{label}#fuzz{seed}")) {
+                Err(e) => failures.push((seed, format!("run failed: {e:#}"))),
+                Ok(report) => {
+                    if report.dead_version_bytes != 0 {
+                        failures.push((
+                            seed,
+                            format!("dead_version_bytes = {}", report.dead_version_bytes),
+                        ));
+                    } else if report.tasks_done < expected {
+                        failures.push((
+                            seed,
+                            format!("only {} of {expected} tasks completed", report.tasks_done),
+                        ));
+                    } else if !chaos {
+                        match baseline {
+                            None => baseline = Some((seed, report.result_digest)),
+                            Some((s0, d0)) if report.result_digest != d0 => {
+                                failures.push((
+                                    seed,
+                                    format!(
+                                        "result digest {:#018x} diverged from seed {s0}'s {d0:#018x}",
+                                        report.result_digest
+                                    ),
+                                ));
+                            }
+                            Some(_) => {}
+                        }
+                    }
+                    reports.push(report);
+                }
+            }
+        }
+        if !failures.is_empty() {
+            failures.sort_by_key(|(s, _)| *s);
+            let (min_seed, msg) = &failures[0];
+            anyhow::bail!(
+                "schedule fuzz '{label}': {}/{} seeds violated invariants; \
+                 minimal failing seed {min_seed} ({msg}). Replay with \
+                 SimEngine::with_fuzz_seed({min_seed}) on the same plan — \
+                 the event order is byte-identical run over run.",
+                failures.len(),
+                seeds.len()
+            );
+        }
+        Ok(reports)
+    }
+
     /// Execute a plan to completion in virtual time.
     pub fn run(&self, mut plan: SimPlan, label: &str) -> Result<SimReport> {
+        // A NaN/negative constant anywhere in the cost model would
+        // otherwise surface as a `Time` ordering panic deep in the event
+        // heap; reject it here with the offending field named.
+        self.cost
+            .validate()
+            .map_err(|e| anyhow::anyhow!("invalid cost model: {e}"))?;
         let profile = &self.cluster.profile;
         let nodes = self.cluster.nodes as usize;
         let wpn = self.cluster.workers_per_node as usize;
@@ -245,15 +459,34 @@ impl SimEngine {
                 )
             })?;
         let feedback = model.feedback();
-        let router = RoutedReady::new(&self.scheduler_name, nodes as u32, model)
+        let mut router = RoutedReady::new(&self.scheduler_name, nodes as u32, model)
             .ok_or_else(|| anyhow::anyhow!("unknown scheduler '{}'", self.scheduler_name))?;
 
-        let ready0 = plan.initially_ready.clone();
+        let SimPlan {
+            graph,
+            registry,
+            meta,
+            initially_ready,
+            ..
+        } = &mut plan;
+        let meta: &HashMap<TaskId, SimTaskMeta> = meta;
+        let n_tasks = graph.len();
+        for id in initially_ready.clone() {
+            push_ready(meta, registry, &mut router, id);
+        }
         let mut st = RunState {
-            plan: &mut plan,
+            graph,
+            registry,
+            meta,
             router,
             events: BinaryHeap::new(),
             seq: 0,
+            fuzz: self.fuzz_seed.map(|seed| SchedulePerturbation {
+                rng: Pcg64::new(seed, 0x5EED),
+                jitter_s: self.fuzz_jitter_s.max(0.0),
+                batch: VecDeque::new(),
+                scratch: Vec::new(),
+            }),
             disk_free: vec![0.0; nodes],
             fs_free: 0.0,
             master_free: 0.0,
@@ -261,8 +494,8 @@ impl SimEngine {
             per_type: HashMap::new(),
             total_io: 0.0,
             total_transfer: 0.0,
-            started_at: HashMap::new(),
-            running_on: HashMap::new(),
+            started_at: vec![f64::NAN; n_tasks + 1],
+            running_on: vec![None; n_tasks + 1],
             dead: vec![false; nodes],
             epoch: vec![0; nodes],
             idle: Vec::new(),
@@ -272,9 +505,6 @@ impl SimEngine {
             warm_hits: 0,
             feedback,
         };
-        for id in ready0 {
-            push_ready(st.plan, &mut st.router, id);
-        }
         for node in 0..nodes {
             for slot in 0..wpn {
                 let wid = WorkerId {
@@ -296,7 +526,7 @@ impl SimEngine {
         let mut tasks_done = 0usize;
         let mut makespan = 0.0f64;
 
-        while let Some(Reverse((Time(now), _, ev))) = st.events.pop() {
+        while let Some((now, ev)) = st.next_event() {
             makespan = makespan.max(now);
             match ev {
                 Event::WorkerIdle(wid, epoch) => {
@@ -311,20 +541,20 @@ impl SimEngine {
                     }
                 }
                 Event::ExecDone(tid, wid) => {
-                    if st.running_on.get(&tid) != Some(&wid) {
+                    if st.running_on[tix(tid)] != Some(wid) {
                         continue; // stale: the attempt died with its node
                     }
                     self.finish_task(&mut st, tid, wid, now);
                 }
                 Event::TaskDone(tid, wid) => {
-                    if st.running_on.get(&tid) != Some(&wid) {
+                    if st.running_on[tix(tid)] != Some(wid) {
                         continue; // stale: the attempt died with its node
                     }
-                    st.running_on.remove(&tid);
+                    st.running_on[tix(tid)] = None;
                     tasks_done += 1;
-                    let newly = st.plan.graph.complete(tid);
+                    let newly = st.graph.complete(tid);
                     for t in newly {
-                        push_ready(st.plan, &mut st.router, t);
+                        push_ready(st.meta, st.registry, &mut st.router, t);
                     }
                     // Put parked workers onto the fresh tasks.
                     let parked: Vec<WorkerId> = std::mem::take(&mut st.idle);
@@ -362,9 +592,9 @@ impl SimEngine {
         }
 
         anyhow::ensure!(
-            st.plan.graph.quiescent(),
+            st.graph.quiescent(),
             "simulation ended with {} unfinished tasks (deadlock in plan?)",
-            st.plan.graph.len() - st.plan.graph.done_count()
+            st.graph.len() - st.graph.done_count()
         );
         let total_busy: f64 = st.busy.iter().sum();
         let utilization = if makespan > 0.0 {
@@ -372,15 +602,29 @@ impl SimEngine {
         } else {
             0.0
         };
+        let per_type: HashMap<String, (usize, f64)> = st
+            .per_type
+            .iter()
+            .map(|(k, v)| (k.to_string(), *v))
+            .collect();
+        let total_io_s = st.total_io;
+        let total_transfer_s = st.total_transfer;
+        let transfer_warm_hits = st.warm_hits;
+        let trace = st.tracer.finish(label);
+        let dead_version_bytes = plan.registry.table().dead_bytes();
+        let result_digest = plan.result_digest();
         Ok(SimReport {
             makespan_s: makespan,
             tasks_done,
-            per_type: st.per_type,
-            total_io_s: st.total_io,
-            total_transfer_s: st.total_transfer,
-            transfer_warm_hits: st.warm_hits,
-            trace: st.tracer.finish(label),
+            per_type,
+            total_io_s,
+            total_transfer_s,
+            transfer_warm_hits,
+            trace,
             utilization,
+            fuzz_seed: self.fuzz_seed,
+            dead_version_bytes,
+            result_digest,
         })
     }
 
@@ -388,22 +632,22 @@ impl SimEngine {
     /// immediately) + compute. Schedules `ExecDone`.
     fn begin_task(&self, st: &mut RunState<'_>, id: TaskId, wid: WorkerId, now: f64) {
         let profile = &self.cluster.profile;
-        st.plan.graph.start(id);
-        st.started_at.insert(id, now);
-        st.running_on.insert(id, wid);
-        let meta = st.plan.meta.get(&id).expect("task meta").clone();
+        let meta_map = st.meta;
+        let meta = meta_map.get(&id).expect("task meta");
+        st.graph.start(id);
+        st.started_at[tix(id)] = now;
+        st.running_on[tix(id)] = Some(wid);
         let node = wid.node.0 as usize;
         // Dispatch goes through the single master: FCFS serial resource.
-        let dispatch_end =
-            now.max(st.master_free) + self.cost.master_dispatch_s;
+        let dispatch_end = now.max(st.master_free) + self.cost.master_dispatch_s;
         st.master_free = dispatch_end;
         let mut t = dispatch_end;
 
         let deser_start = t;
         for key in &meta.inputs {
-            let info = st.plan.registry.info(*key).expect("input info");
+            let info = st.registry.info(*key).expect("input info");
             let bytes = info.bytes;
-            if st.plan.registry.is_local(*key, wid.node) {
+            if st.registry.is_local(*key, wid.node) {
                 // Node already holds the file: served from the page cache
                 // (fragments re-read every K-means iteration never touch
                 // the filesystem again).
@@ -423,7 +667,7 @@ impl SimEngine {
                 }
                 t += tr;
                 st.total_transfer += tr;
-                st.plan.registry.add_location(*key, wid.node);
+                st.registry.add_location(*key, wid.node);
                 if self.warm_staging && st.warm_staged.contains(key) {
                     // Warm hit: the cached serialized blob ships as-is —
                     // no file materialization, no disk-server time (the
@@ -475,11 +719,10 @@ impl SimEngine {
             fb.record_task(&meta.ty, exec);
         }
         t += exec;
-        // Interned Arc<str> name against a String-keyed map: allocate the
-        // key only on the first completion of each type (big DES sweeps
-        // run millions of tasks through here).
+        // Interned Arc<str> keys: allocate only on the first completion of
+        // each type (big DES sweeps run millions of tasks through here).
         if !st.per_type.contains_key(meta.ty.as_ref()) {
-            st.per_type.insert(meta.ty.to_string(), (0, 0.0));
+            st.per_type.insert(Arc::clone(&meta.ty), (0, 0.0));
         }
         let e = st
             .per_type
@@ -494,7 +737,8 @@ impl SimEngine {
     /// complete the task at write end.
     fn finish_task(&self, st: &mut RunState<'_>, id: TaskId, wid: WorkerId, now: f64) {
         let profile = &self.cluster.profile;
-        let meta = st.plan.meta.get(&id).expect("task meta").clone();
+        let meta_map = st.meta;
+        let meta = meta_map.get(&id).expect("task meta");
         let node = wid.node.0 as usize;
         let mut t = now;
         let ser_start = t;
@@ -511,15 +755,16 @@ impl SimEngine {
             let end = end.max(fs_end);
             st.total_io += io + fs;
             t = end;
-            st.plan
-                .registry
+            st.registry
                 .mark_available(*key, wid.node, *bytes, std::path::PathBuf::new());
         }
         if !meta.outputs.is_empty() && t > ser_start {
             st.tracer
                 .record_at(wid, EventKind::Serialize, Some(id), ser_start, t);
         }
-        let start = st.started_at.remove(&id).unwrap_or(now);
+        let started = st.started_at[tix(id)];
+        let start = if started.is_nan() { now } else { started };
+        st.started_at[tix(id)] = f64::NAN;
         st.busy[node * st.wpn + wid.slot as usize] += t - start;
         st.push_event(t, Event::WorkerIdle(wid, st.epoch[node]));
         st.push_event(t, Event::TaskDone(id, wid));
@@ -546,18 +791,20 @@ impl SimEngine {
         let lost_tasks: Vec<TaskId> = st
             .running_on
             .iter()
-            .filter(|(_, w)| w.node == node)
-            .map(|(t, _)| *t)
+            .enumerate()
+            .filter(|(_, w)| w.map_or(false, |w| w.node == node))
+            .map(|(i, _)| TaskId(i as u64))
             .collect();
         for tid in lost_tasks {
-            st.running_on.remove(&tid);
-            st.started_at.remove(&tid);
-            st.plan.graph.resubmit(tid);
-            push_ready(st.plan, &mut st.router, tid);
+            st.running_on[tix(tid)] = None;
+            st.started_at[tix(tid)] = f64::NAN;
+            st.graph.resubmit(tid);
+            push_ready(st.meta, st.registry, &mut st.router, tid);
         }
         // Sole-replica versions die with the node: lineage re-execution,
         // exactly the live `recover_lost_versions` walk.
-        let report = st.plan.registry.table().drop_node(node);
+        let meta_map = st.meta;
+        let report = st.registry.table().drop_node(node);
         let home = NodeId(
             st.dead
                 .iter()
@@ -569,26 +816,24 @@ impl SimEngine {
         let mut reopen: HashSet<TaskId> = HashSet::new();
         while let Some(key) = stack.pop() {
             st.warm_staged.remove(&key);
-            let Some(info) = st.plan.registry.info(key) else {
+            let Some(info) = st.registry.info(key) else {
                 continue;
             };
             match info.producer {
                 None => {
                     // Master-materialized input: survives on the shared
                     // filesystem — re-read it onto an alive node.
-                    st.plan
-                        .registry
+                    st.registry
                         .mark_available(key, home, info.bytes, std::path::PathBuf::new());
                 }
                 Some(tid) => {
-                    if st.plan.graph.state(tid) == Some(TaskState::Done) && reopen.insert(tid) {
-                        let inputs = st.plan.meta.get(&tid).expect("task meta").inputs.clone();
-                        for input in inputs {
-                            if !seen.contains(&input)
-                                && st.plan.registry.info(input).map_or(true, |i| !i.available)
+                    if st.graph.state(tid) == Some(TaskState::Done) && reopen.insert(tid) {
+                        for input in &meta_map.get(&tid).expect("task meta").inputs {
+                            if !seen.contains(input)
+                                && st.registry.info(*input).map_or(true, |i| !i.available)
                             {
-                                seen.insert(input);
-                                stack.push(input);
+                                seen.insert(*input);
+                                stack.push(*input);
                             }
                         }
                     }
@@ -597,22 +842,20 @@ impl SimEngine {
         }
         if !reopen.is_empty() {
             for tid in &reopen {
-                let outputs = st.plan.meta.get(tid).expect("task meta").outputs.clone();
-                for (key, _) in outputs {
+                for (key, _) in &meta_map.get(tid).expect("task meta").outputs {
                     let still = st
-                        .plan
                         .registry
-                        .info(key)
+                        .info(*key)
                         .map_or(false, |i| i.available && !i.locations.is_empty());
                     if !still {
-                        st.plan.registry.table().reset_for_recovery(key);
-                        st.warm_staged.remove(&key);
+                        st.registry.table().reset_for_recovery(*key);
+                        st.warm_staged.remove(key);
                     }
                 }
             }
-            let ready = st.plan.graph.reopen(&reopen);
+            let ready = st.graph.reopen(&reopen);
             for t in ready {
-                push_ready(st.plan, &mut st.router, t);
+                push_ready(st.meta, st.registry, &mut st.router, t);
             }
         }
         // Survivors parked with nothing to do may now have work (reopened
@@ -634,7 +877,7 @@ impl SimEngine {
 /// protocol, discarded at claim time by this state check.
 fn pop_live(st: &mut RunState<'_>, node: NodeId) -> Option<TaskId> {
     while let Some(tid) = st.router.pop_for(node) {
-        if st.plan.graph.state(tid) == Some(TaskState::Ready) {
+        if st.graph.state(tid) == Some(TaskState::Ready) {
             return Some(tid);
         }
     }
@@ -643,13 +886,18 @@ fn pop_live(st: &mut RunState<'_>, node: NodeId) -> Option<TaskId> {
 
 /// Route one newly-ready task through the shared placement engine, with
 /// the same locality snapshot the live `enqueue_ready` would take.
-fn push_ready(plan: &SimPlan, router: &mut RoutedReady, id: TaskId) {
-    let meta = plan.meta.get(&id).expect("meta for ready task");
+fn push_ready(
+    meta: &HashMap<TaskId, SimTaskMeta>,
+    registry: &DataRegistry,
+    router: &mut RoutedReady,
+    id: TaskId,
+) {
+    let meta = meta.get(&id).expect("meta for ready task");
     let inputs = meta
         .inputs
         .iter()
         .map(|k| {
-            let info = plan.registry.info(*k).expect("input info");
+            let info = registry.info(*k).expect("input info");
             (info.bytes, info.locations)
         })
         .collect();
@@ -688,6 +936,8 @@ mod tests {
         assert_eq!(report.tasks_done, n_tasks);
         assert!(report.makespan_s > 0.0);
         assert!(report.utilization > 0.0 && report.utilization <= 1.0);
+        assert_eq!(report.fuzz_seed, None);
+        assert_eq!(report.dead_version_bytes, 0);
     }
 
     #[test]
@@ -924,5 +1174,92 @@ mod tests {
             t64 > t4 * 0.5,
             "disk-bound: 16x workers must not give 2x speedup ({t4} vs {t64})"
         );
+    }
+
+    #[test]
+    fn fuzz_seed_replays_byte_identical_runs() {
+        // The reproducibility contract: one (plan, seed) pair, one event
+        // order. Every timing in the report must match to the bit.
+        let spec = || ClusterSpec::new(MachineProfile::shaheen3(), 3).with_workers_per_node(2);
+        let run = || {
+            SimEngine::new(spec(), CostModel::default())
+                .with_router("cost")
+                .with_fuzz_seed(42)
+                .run(knn_plan(8, 2), "replay")
+                .unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.fuzz_seed, Some(42));
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+        assert_eq!(a.total_io_s.to_bits(), b.total_io_s.to_bits());
+        assert_eq!(a.total_transfer_s.to_bits(), b.total_transfer_s.to_bits());
+        assert_eq!(a.result_digest, b.result_digest);
+        assert_eq!(a.tasks_done, b.tasks_done);
+    }
+
+    #[test]
+    fn fuzz_sweep_holds_invariants_on_healthy_plans() {
+        let spec = ClusterSpec::new(MachineProfile::shaheen3(), 2).with_workers_per_node(2);
+        let engine = SimEngine::new(spec, CostModel::default()).with_router("cost");
+        let reports = engine
+            .fuzz_sweep(&[1, 2, 3, 4], || Ok(knn_plan(4, 2)), "mini")
+            .unwrap();
+        assert_eq!(reports.len(), 4);
+        let d0 = reports[0].result_digest;
+        assert!(reports.iter().all(|r| r.result_digest == d0));
+    }
+
+    #[test]
+    fn fuzz_sweep_names_the_minimal_failing_seed() {
+        // Poison the plan: nothing initially ready, so no schedule can
+        // drain it — every seed fails, and the error must name the
+        // smallest one (CI greps for exactly this phrase).
+        let spec = ClusterSpec::new(MachineProfile::shaheen3(), 2).with_workers_per_node(2);
+        let engine = SimEngine::new(spec, CostModel::default());
+        let err = engine
+            .fuzz_sweep(
+                &[13, 7, 29],
+                || {
+                    let mut p = knn_plan(2, 1);
+                    p.initially_ready.clear();
+                    Ok(p)
+                },
+                "stuck",
+            )
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("minimal failing seed 7"), "{msg}");
+    }
+
+    #[test]
+    fn fuzz_jitter_window_still_drains() {
+        // A nonzero window delivers events up to 100 µs apart out of
+        // order; the FCFS servers absorb it and every seed still drains
+        // with an identical final data plane.
+        let spec = ClusterSpec::new(MachineProfile::shaheen3(), 3).with_workers_per_node(2);
+        let engine = SimEngine::new(spec, CostModel::default())
+            .with_router("bytes")
+            .with_fuzz_jitter(1e-4);
+        let reports = engine
+            .fuzz_sweep(&[5, 6, 7, 8], || Ok(knn_plan(6, 2)), "jitter")
+            .unwrap();
+        let d0 = reports[0].result_digest;
+        assert!(reports.iter().all(|r| r.result_digest == d0));
+    }
+
+    #[test]
+    fn nonfinite_cost_model_is_rejected_before_the_heap() {
+        // A poisoned constant inserted directly (bypassing
+        // `set_unit_cost`'s assert) must fail at run start with the field
+        // named, not as a NaN ordering panic mid-heap.
+        let mut model = CostModel::default();
+        model.unit_costs.insert("KNN_frag".into(), f64::NAN);
+        let spec = ClusterSpec::new(MachineProfile::shaheen3(), 1);
+        let err = SimEngine::new(spec, model)
+            .run(knn_plan(2, 1), "nan")
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("invalid cost model"), "{msg}");
+        assert!(msg.contains("KNN_frag"), "{msg}");
     }
 }

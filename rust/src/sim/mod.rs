@@ -18,6 +18,14 @@
 //!
 //! The engine emits ordinary `trace::Trace` events, so Figure-10-style
 //! timelines come out of simulated runs exactly as they do from live ones.
+//!
+//! The engine doubles as a race-hunting harness: `with_fuzz_seed` pops
+//! timestamp-tied events in a seeded permutation (a distinct, replayable
+//! schedule per seed) and [`engine::SimEngine::fuzz_sweep`] drives many
+//! seeds through one plan, asserting schedule-independence invariants and
+//! naming the minimal failing seed. [`plans::fleet_plan`] builds the
+//! synthetic 10^6-task workloads those sweeps (and the fleet-sim bench)
+//! run at 1,000-node scale.
 
 pub mod cost;
 pub mod engine;
@@ -26,4 +34,5 @@ pub mod sink;
 
 pub use cost::CostModel;
 pub use engine::{SimEngine, SimReport};
+pub use plans::fleet_plan;
 pub use sink::SimSink;

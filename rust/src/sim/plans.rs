@@ -6,13 +6,18 @@
 //! (`Shapes::paper_single_node` / `paper_multi_node`). Shapes never change
 //! the DAG structure — only per-task byte sizes and cost units.
 
+use std::collections::HashMap;
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::apps::kmeans::{plan_kmeans, KmeansConfig};
 use crate::apps::knn::{plan_knn, KnnConfig};
 use crate::apps::linreg::{plan_linreg, LinregConfig};
 use crate::apps::Shapes;
-use crate::sim::sink::{SimPlan, SimSink};
+use crate::coordinator::dag::{EdgeKind, TaskGraph, TaskId};
+use crate::coordinator::registry::{DataKey, DataRegistry};
+use crate::sim::sink::{SimPlan, SimSink, SimTaskMeta};
 
 /// KNN plan: `train_fragments` x `test_blocks` (Figure 3 pattern).
 pub fn knn_plan(train_fragments: usize, test_blocks: usize, seed: u64) -> Result<SimPlan> {
@@ -74,6 +79,66 @@ pub fn linreg_plan_with(
     Ok(sink.finish())
 }
 
+/// Synthetic fleet-scale plan: `width` independent chains of `depth`
+/// small tasks (each task reads its predecessor's output). Built straight
+/// against the registry and graph — no planner, no literal
+/// materialization — because at the 10^6-task scale this feeds (1,000-node
+/// capacity sweeps, schedule-fuzz sweeps, the fleet-sim bench case) the
+/// app planners' per-task bookkeeping would dominate the measurement.
+/// `width` roots are ready at time zero; ~3 heap events per task.
+pub fn fleet_plan(width: usize, depth: usize) -> SimPlan {
+    let width = width.max(1);
+    let depth = depth.max(1);
+    let mut graph = TaskGraph::new();
+    let mut registry = DataRegistry::new();
+    let mut meta: HashMap<TaskId, SimTaskMeta> = HashMap::with_capacity(width * depth);
+    let mut initially_ready = Vec::with_capacity(width);
+    let root_ty: Arc<str> = Arc::from("fleet_root");
+    let link_ty: Arc<str> = Arc::from("fleet_link");
+    for _ in 0..width {
+        let mut prev: Option<DataKey> = None;
+        for d in 0..depth {
+            let id = graph.next_task_id();
+            let mut deps: Vec<(TaskId, EdgeKind, DataKey)> = Vec::new();
+            let mut reads: Vec<DataKey> = Vec::new();
+            if let Some(p) = prev {
+                let (key, raw) = registry.record_read(p.data, id);
+                if let Some(producer) = raw {
+                    deps.push((producer, EdgeKind::Raw, key));
+                }
+                reads.push(key);
+            }
+            let out = registry.new_future(id);
+            let (ty, name) = if d == 0 {
+                (Arc::clone(&root_ty), "fleet_root")
+            } else {
+                (Arc::clone(&link_ty), "fleet_link")
+            };
+            meta.insert(
+                id,
+                SimTaskMeta {
+                    ty,
+                    cost_units: 1e4,
+                    gemm_class: false,
+                    inputs: reads.clone(),
+                    outputs: vec![(out, 1024)],
+                },
+            );
+            if graph.insert_task(id, name, reads, vec![out], deps) {
+                initially_ready.push(id);
+            }
+            prev = Some(out);
+        }
+    }
+    SimPlan {
+        graph,
+        registry,
+        meta,
+        initially_ready,
+        sync_count: 0,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -96,5 +161,31 @@ mod tests {
             p.meta.values().flat_map(|m| m.outputs.iter().map(|(_, b)| *b)).sum()
         };
         assert!(bytes(&b) > bytes(&a));
+    }
+
+    #[test]
+    fn fleet_plan_builds_independent_chains() {
+        let plan = fleet_plan(4, 3);
+        assert_eq!(plan.graph.len(), 12);
+        assert_eq!(plan.initially_ready.len(), 4, "one ready root per chain");
+        let counts = plan.type_counts();
+        assert_eq!(counts.get("fleet_root").copied(), Some(4));
+        assert_eq!(counts.get("fleet_link").copied(), Some(8));
+        // Chains serialize: the critical path is the chain depth.
+        assert!(plan.graph.critical_path_len() >= 3);
+    }
+
+    #[test]
+    fn fleet_plan_runs_to_completion() {
+        use crate::cluster::{ClusterSpec, MachineProfile};
+        use crate::sim::{CostModel, SimEngine};
+        let plan = fleet_plan(8, 5);
+        let n = plan.graph.len();
+        let spec = ClusterSpec::new(MachineProfile::shaheen3(), 4).with_workers_per_node(2);
+        let report = SimEngine::new(spec, CostModel::default())
+            .with_router("roundrobin")
+            .run(plan, "fleet")
+            .unwrap();
+        assert_eq!(report.tasks_done, n);
     }
 }

@@ -45,6 +45,49 @@ impl SimPlan {
         }
         m
     }
+
+    /// Order-insensitive digest of the plan's final data-plane state: the
+    /// task population (type names folded commutatively, so iteration
+    /// order cannot matter), completion count, and the registry's version
+    /// and byte totals. Two runs of the same DAG that produced the same
+    /// data agree on this digest regardless of the schedule that got them
+    /// there — the "byte-identical results" invariant the schedule fuzzer
+    /// checks across seeds. Deliberately excludes anything
+    /// schedule-dependent (timings, placements, re-execution counts).
+    pub fn result_digest(&self) -> u64 {
+        fn fnv(s: &str) -> u64 {
+            let mut h = 0xcbf2_9ce4_8422_2325u64;
+            for b in s.as_bytes() {
+                h ^= *b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+            h
+        }
+        fn mix(mut h: u64) -> u64 {
+            // splitmix64 finalizer.
+            h ^= h >> 30;
+            h = h.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+            h ^= h >> 27;
+            h = h.wrapping_mul(0x94d0_49bb_1331_11eb);
+            h ^ (h >> 31)
+        }
+        let mut acc = 0u64;
+        for t in self.graph.tasks_in_order() {
+            // Wrapping add keeps the fold commutative.
+            acc = acc.wrapping_add(mix(fnv(&t.type_name)));
+        }
+        let mut h = acc;
+        for x in [
+            self.graph.len() as u64,
+            self.graph.done_count() as u64,
+            self.registry.datum_count() as u64,
+            self.registry.version_count() as u64,
+            self.registry.total_bytes(),
+        ] {
+            h = mix(h ^ x);
+        }
+        h
+    }
 }
 
 /// Sink that builds a [`SimPlan`].
@@ -214,6 +257,22 @@ mod tests {
         for (ty, n) in linreg::expected_task_counts(&cfg) {
             assert_eq!(counts.get(ty).copied().unwrap_or(0), n, "type {ty}");
         }
+    }
+
+    #[test]
+    fn result_digest_tracks_plan_identity() {
+        let make = |frags: usize| {
+            let mut cfg = KnnConfig::small(3);
+            cfg.train_fragments = frags;
+            cfg.test_blocks = 2;
+            let mut sink = SimSink::new();
+            knn::plan_knn(&mut sink, &cfg).unwrap();
+            sink.finish()
+        };
+        // Deterministic builders: the same plan digests identically...
+        assert_eq!(make(5).result_digest(), make(5).result_digest());
+        // ... and a structurally different plan does not.
+        assert_ne!(make(5).result_digest(), make(6).result_digest());
     }
 
     #[test]

@@ -1,0 +1,405 @@
+//! Schedule-fuzz acceptance suite: the race-hunting harness end to end.
+//!
+//! Two planes under test. The **simulator** plane permutes timestamp-tied
+//! events with a seeded PRNG (`SimEngine::with_fuzz_seed`) and
+//! `fuzz_sweep` drives many seeds through one plan, asserting
+//! schedule-independence invariants (results byte-identical across seeds,
+//! zero dead version bytes, no stuck tasks) and naming the minimal
+//! failing seed. The **live** plane arms deterministic yield points at the
+//! runtime's hazard windows (`CoordinatorConfig::with_sched_fuzz`) so the
+//! PR-4 class of transfer-board/GC races reproduces from a pinned seed.
+//!
+//! CI's fuzz-matrix job hands a fresh seed base per run via
+//! `RCOMPSS_FUZZ_SEED_BASE` (the sweeps explore new schedules every run);
+//! locally the base defaults to 1 so `cargo test` is deterministic. Any
+//! failure message names the exact seed to replay.
+
+use std::sync::Arc;
+
+use rcompss::api::{CompssRuntime, RuntimeConfig, TaskDef};
+use rcompss::apps::backend::Backend;
+use rcompss::apps::kmeans::{self, KmeansConfig};
+use rcompss::apps::Shapes;
+use rcompss::cluster::{ClusterSpec, MachineProfile};
+use rcompss::coordinator::dag::TaskId;
+use rcompss::coordinator::fault::{ChaosSpec, FailureInjector};
+use rcompss::coordinator::placement::{placement_by_name, InflightSource, RoutedReady};
+use rcompss::coordinator::registry::NodeId;
+use rcompss::coordinator::scheduler::{ReadyTask, ShardedReady};
+use rcompss::sim::plans::{kmeans_plan, knn_plan};
+use rcompss::sim::{fleet_plan, CostModel, SimEngine};
+use rcompss::value::RValue;
+
+/// Seeds for one sweep: `base * 1000 + i`, with the base taken from
+/// `RCOMPSS_FUZZ_SEED_BASE` (CI sets it from the run number) and
+/// defaulting to 1. Distinct sweeps pass distinct `lane`s so the suite's
+/// 64 seeds never overlap.
+fn seeds(lane: u64, n: u64) -> Vec<u64> {
+    let base = std::env::var("RCOMPSS_FUZZ_SEED_BASE")
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .unwrap_or(1);
+    (0..n)
+        .map(|i| base.wrapping_mul(1000).wrapping_add(lane * 100 + i))
+        .collect()
+}
+
+fn cluster(nodes: u32, wpn: u32) -> ClusterSpec {
+    ClusterSpec::new(MachineProfile::shaheen3(), nodes).with_workers_per_node(wpn)
+}
+
+// ---------------------------------------------------------------------------
+// Simulator plane: seeded sweeps over the three plan families.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fuzz_sweep_transfer_heavy_plan_is_schedule_independent() {
+    // KNN's train x test cross-product is the transfer-heavy family:
+    // every test block consumes every train fragment, so the `cost`
+    // router keeps the simulated transfer plane saturated. 24 seeds; the
+    // sweep itself asserts drain, zero dead bytes, and cross-seed result
+    // digests.
+    let engine = SimEngine::new(cluster(4, 2), CostModel::default()).with_router("cost");
+    let reports = engine
+        .fuzz_sweep(&seeds(0, 24), || knn_plan(8, 4, 1), "knn-transfer-heavy")
+        .unwrap();
+    assert_eq!(reports.len(), 24);
+    let done = reports[0].tasks_done;
+    for r in &reports {
+        assert!(r.fuzz_seed.is_some(), "sweep reports carry their seed");
+        assert_eq!(r.tasks_done, done, "seed changed the completed-task count");
+        assert_eq!(r.dead_version_bytes, 0, "seed {} leaked versions", r.fuzz_seed.unwrap());
+    }
+}
+
+#[test]
+fn fuzz_sweep_gc_heavy_plan_is_schedule_independent() {
+    // K-means re-versions the centroids every iteration: each round kills
+    // the previous round's versions, so event permutations stress GC
+    // ordering against late consumers and transfers.
+    let engine = SimEngine::new(cluster(4, 2), CostModel::default()).with_router("bytes");
+    let reports = engine
+        .fuzz_sweep(&seeds(1, 24), || kmeans_plan(8, 3, 1), "kmeans-gc-heavy")
+        .unwrap();
+    assert_eq!(reports.len(), 24);
+    for r in &reports {
+        assert_eq!(r.dead_version_bytes, 0, "seed {} leaked versions", r.fuzz_seed.unwrap());
+    }
+}
+
+#[test]
+fn fuzz_sweep_survives_kill_join_churn() {
+    // Chaos family: a mid-run node kill plus a later rejoin, on top of the
+    // event permutation. Cross-seed digest equality is deliberately not
+    // asserted by the sweep here (the kill point lands differently per
+    // schedule, so re-executed lineage differs); drain + zero dead bytes
+    // must still hold for every seed.
+    let base = SimEngine::new(cluster(4, 2), CostModel::default())
+        .run(knn_plan(6, 3, 1).unwrap(), "baseline")
+        .unwrap();
+    let engine = SimEngine::new(cluster(4, 2), CostModel::default())
+        .with_router("cost")
+        .with_node_kill(base.makespan_s * 0.4, 3)
+        .with_node_join(base.makespan_s * 0.7, 3);
+    let reports = engine
+        .fuzz_sweep(&seeds(2, 16), || knn_plan(6, 3, 1), "knn-kill-join")
+        .unwrap();
+    assert_eq!(reports.len(), 16);
+    for r in &reports {
+        assert!(
+            r.tasks_done >= base.tasks_done,
+            "seed {}: all tasks complete, re-runs included",
+            r.fuzz_seed.unwrap()
+        );
+    }
+}
+
+#[test]
+fn same_seed_replays_bit_identical_runs() {
+    // The replay contract: one seed, one schedule — every derived number
+    // is bit-equal run over run, so a CI-found seed reproduces exactly.
+    let seed = seeds(3, 1)[0];
+    let run = || {
+        SimEngine::new(cluster(3, 2), CostModel::default())
+            .with_router("cost")
+            .with_fuzz_seed(seed)
+            .run(knn_plan(8, 2, 1).unwrap(), "replay")
+            .unwrap()
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+    assert_eq!(a.total_io_s.to_bits(), b.total_io_s.to_bits());
+    assert_eq!(a.total_transfer_s.to_bits(), b.total_transfer_s.to_bits());
+    assert_eq!(a.result_digest, b.result_digest);
+    assert_eq!(a.tasks_done, b.tasks_done);
+}
+
+#[test]
+fn fuzz_sweep_names_the_minimal_failing_seed() {
+    // A plan with its ready frontier withheld can never drain; every seed
+    // fails, and the error must name the *smallest* seed plus the replay
+    // protocol — that is the line CI greps into the job summary.
+    let engine = SimEngine::new(cluster(2, 2), CostModel::default());
+    let err = engine
+        .fuzz_sweep(
+            &[9, 3, 7],
+            || {
+                let mut plan = knn_plan(4, 2, 1)?;
+                plan.initially_ready.clear();
+                Ok(plan)
+            },
+            "withheld-frontier",
+        )
+        .unwrap_err()
+        .to_string();
+    assert!(
+        err.contains("minimal failing seed 3"),
+        "error must name the minimal seed: {err}"
+    );
+    assert!(err.contains("with_fuzz_seed(3)"), "error must show the replay call: {err}");
+}
+
+// ---------------------------------------------------------------------------
+// Placement equivalence: the sim fabric vs the live fabric.
+// ---------------------------------------------------------------------------
+
+fn rt(id: u64, inputs: Vec<(u64, Vec<NodeId>)>) -> ReadyTask {
+    ReadyTask {
+        id: TaskId(id),
+        inputs,
+        type_name: "t".into(),
+    }
+}
+
+#[test]
+fn sim_and_live_fabrics_route_identically_without_inflight_pressure() {
+    // The equivalence property behind the simulator's fidelity claim: for
+    // one push sequence, `RoutedReady` (sim) and `ShardedReady` (live,
+    // with no transfer plane attached) produce the same shard verdicts
+    // under every placement model.
+    let pushes = |i: u64| -> ReadyTask {
+        match i % 4 {
+            0 => rt(i + 1, vec![]),
+            1 => rt(i + 1, vec![(4096, vec![NodeId(1)])]),
+            2 => rt(i + 1, vec![(512, vec![NodeId(0)]), (2048, vec![NodeId(2)])]),
+            _ => rt(i + 1, vec![(128, vec![NodeId((i % 3) as u32)])]),
+        }
+    };
+    for model in ["bytes", "cost", "roundrobin", "adaptive"] {
+        let mut sim = RoutedReady::new("fifo", 3, placement_by_name(model).unwrap()).unwrap();
+        let live = ShardedReady::new("fifo", 3, placement_by_name(model).unwrap(), None).unwrap();
+        let sim_verdicts: Vec<usize> = (0..24).map(|i| sim.push(pushes(i))).collect();
+        let live_verdicts: Vec<usize> = (0..24).map(|i| live.push(pushes(i))).collect();
+        assert_eq!(
+            sim_verdicts, live_verdicts,
+            "model '{model}' diverged between sim and live fabrics"
+        );
+    }
+}
+
+#[test]
+fn claim_time_charging_is_the_only_placement_divergence() {
+    // The simulator charges transfers at *claim* time, so its fabric
+    // always sees zero in-flight pressure — the one documented divergence
+    // from a live `cost` run mid-transfer. Pin it: with a transfer toward
+    // node 1 in flight, the live fabric credits node 1 and routes the
+    // consumer there, while the sim fabric (same model, same pushes)
+    // keeps chasing the resident replica's queue. Everything before the
+    // pressure-carrying push stays identical.
+    struct Toward1;
+    impl InflightSource for Toward1 {
+        fn inflight_toward(&self, node: NodeId) -> u64 {
+            if node == NodeId(1) {
+                1000
+            } else {
+                0
+            }
+        }
+    }
+    let mut sim = RoutedReady::new("fifo", 2, placement_by_name("cost").unwrap()).unwrap();
+    let live = ShardedReady::new(
+        "fifo",
+        2,
+        placement_by_name("cost").unwrap(),
+        Some(Arc::new(Toward1)),
+    )
+    .unwrap();
+    // Pressure-free warm-up push: both fabrics agree (shard 0).
+    assert_eq!(sim.push(rt(1, vec![(8, vec![NodeId(0)])])), 0);
+    assert_eq!(live.push(rt(1, vec![(8, vec![NodeId(0)])])), 0);
+    // The consumer of a version mid-transfer toward node 1: live credits
+    // the in-flight bytes (cost 0 on node 1), sim sees zero pressure and
+    // stays with the replica on node 0 despite its queued task.
+    let consumer = || rt(2, vec![(1000, vec![NodeId(0)])]);
+    assert_eq!(sim.push(consumer()), 0, "sim charges transfers at claim time");
+    assert_eq!(live.push(consumer()), 1, "live credits in-flight pressure");
+}
+
+// ---------------------------------------------------------------------------
+// Live plane: the yield-point harness under a pinned seed.
+// ---------------------------------------------------------------------------
+
+fn tiny_shapes() -> Shapes {
+    Shapes {
+        km_frag_n: 96,
+        km_d: 4,
+        km_k: 3,
+        ..Shapes::default()
+    }
+}
+
+fn tiny_kmeans(rt_handle: &CompssRuntime) -> RValue {
+    let mut cfg = KmeansConfig::small(11);
+    cfg.shapes = tiny_shapes();
+    cfg.fragments = 4;
+    cfg.iterations = 3;
+    kmeans::run_kmeans(rt_handle, &cfg, Backend::Native)
+        .unwrap()
+        .centroids
+}
+
+#[test]
+fn fuzzed_transfer_failures_keep_board_accounting_and_results_exact() {
+    // The PR-4 regression through the live yield-point plane: a 4-node
+    // run under a pinned fuzz seed widens the mover/GC/purge hazard
+    // windows while an injector fails the first transfer attempts, so
+    // retries, tombstone purges, and GC collections interleave in the
+    // perturbed order. The board identity `prefetched + waited + dropped
+    // + failed == requested` and result correctness must survive any such
+    // interleaving. Everything is pinned — router, injector, chaos — so
+    // the ambient CI matrix env cannot perturb the schedule's meaning.
+    let clean = {
+        let rt_handle = CompssRuntime::start(
+            RuntimeConfig::local(2)
+                .with_nodes(4, 2)
+                .with_router("cost")
+                .with_chaos(ChaosSpec::default()),
+        )
+        .unwrap();
+        let centroids = tiny_kmeans(&rt_handle);
+        rt_handle.stop().unwrap();
+        centroids
+    };
+    let mut config = RuntimeConfig::local(2)
+        .with_nodes(4, 2)
+        .with_router("cost")
+        .with_transfer_threads(2)
+        .with_sched_fuzz(7)
+        .with_chaos(ChaosSpec::default());
+    config.injector = Arc::new(FailureInjector::new(1.0, "__transfer__", 6, 42));
+    let rt_handle = CompssRuntime::start(config).unwrap();
+    let centroids = tiny_kmeans(&rt_handle);
+    let stats = rt_handle.stop().unwrap();
+    assert!(
+        clean.all_equal(&centroids, 1e-9),
+        "fuzzed schedule changed the result"
+    );
+    assert_eq!(stats.tasks_failed, 0, "{stats:?}");
+    assert!(stats.transfers_failed >= 1, "the transfer injector never fired: {stats:?}");
+    assert_eq!(
+        stats.transfers_prefetched
+            + stats.transfers_waited
+            + stats.transfers_dropped
+            + stats.transfers_failed,
+        stats.transfers_requested,
+        "transfer-board accounting identity broken: {stats:?}"
+    );
+    assert_eq!(stats.dead_version_bytes, 0, "{stats:?}");
+    assert!(
+        stats.sched_fuzz_perturbations > 0,
+        "the armed yield points never fired: {stats:?}"
+    );
+}
+
+#[test]
+fn disarmed_plane_takes_zero_perturbations() {
+    // The zero-overhead claim, observably: without a seed the controller
+    // is never even constructed, so the visit count is exactly 0.
+    let mut config = RuntimeConfig::local(2).with_nodes(2, 2).with_transfer_threads(1);
+    config.sched_fuzz = None; // pin against an ambient RCOMPSS_SCHED_FUZZ
+    let rt_handle = CompssRuntime::start(config).unwrap();
+    let centroids = tiny_kmeans(&rt_handle);
+    let stats = rt_handle.stop().unwrap();
+    assert!(centroids.as_real().is_some());
+    assert_eq!(stats.sched_fuzz_perturbations, 0, "{stats:?}");
+}
+
+#[test]
+fn armed_plane_replays_one_deterministic_decision_stream_per_seed() {
+    // Two runtimes under one seed see identical perturbation schedules at
+    // every site (per-instance controllers, pure decision function); a
+    // different seed sees a different schedule. The visit *counts* may
+    // differ run to run (OS scheduling varies), so the contract is pinned
+    // on the pure schedule, which the runtime consumes verbatim.
+    use rcompss::coordinator::schedfuzz::{schedule, FuzzSite};
+    for site in [
+        FuzzSite::ReadyPush,
+        FuzzSite::TransferComplete,
+        FuzzSite::GcCollect,
+        FuzzSite::NodeKill,
+    ] {
+        assert_eq!(schedule(7, site, 128), schedule(7, site, 128));
+        assert_ne!(schedule(7, site, 128), schedule(8, site, 128));
+    }
+    // And a fuzzed runtime actually consumes that stream: the counter
+    // proves the sites were visited.
+    let rt_handle = CompssRuntime::start(
+        RuntimeConfig::local(2)
+            .with_nodes(2, 2)
+            .with_transfer_threads(1)
+            .with_sched_fuzz(7)
+            .with_chaos(ChaosSpec::default()),
+    )
+    .unwrap();
+    let add = rt_handle.register_task(TaskDef::new("add", 2, |a| {
+        Ok(vec![RValue::scalar(
+            a[0].as_f64().unwrap() + a[1].as_f64().unwrap(),
+        )])
+    }));
+    let mut acc = rt_handle.submit(&add, &[1.0.into(), 1.0.into()]).unwrap();
+    for _ in 0..16 {
+        acc = rt_handle.submit(&add, &[acc.into(), 1.0.into()]).unwrap();
+    }
+    let v = rt_handle.wait_on(&acc).unwrap().as_f64().unwrap();
+    let stats = rt_handle.stop().unwrap();
+    assert_eq!(v, 18.0);
+    assert!(stats.sched_fuzz_perturbations > 0, "{stats:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Fleet scale: the 1,000-node / 10^6-task capacity requirement.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fleet_scale_sim_drains_a_wide_cluster() {
+    // Always-on scaled-down guard (20k tasks over 1,000 nodes): the
+    // interned per-node state and allocation-free event loop must drain a
+    // fleet-wide plan promptly even in debug builds.
+    let plan = fleet_plan(4_000, 5);
+    let n = plan.graph.len();
+    assert_eq!(n, 20_000);
+    let report = SimEngine::new(cluster(1_000, 4), CostModel::default())
+        .with_router("roundrobin")
+        .with_fuzz_seed(1)
+        .run(plan, "fleet-20k")
+        .unwrap();
+    assert_eq!(report.tasks_done, n);
+    assert_eq!(report.dead_version_bytes, 0);
+}
+
+#[test]
+#[ignore = "release-scale: ~1M tasks x multiple seeds; CI runs it with --include-ignored"]
+fn fleet_scale_million_task_fuzz_sweep() {
+    // The acceptance bar: a 1,000-node, 10^6-task synthetic plan sweeps
+    // multiple fuzz seeds at single-digit seconds per seed (release).
+    let engine = SimEngine::new(cluster(1_000, 4), CostModel::default())
+        .with_router("roundrobin");
+    let reports = engine
+        .fuzz_sweep(&seeds(4, 2), || Ok(fleet_plan(20_000, 50)), "fleet-1m")
+        .unwrap();
+    assert_eq!(reports.len(), 2);
+    for r in &reports {
+        assert_eq!(r.tasks_done, 1_000_000);
+        assert_eq!(r.dead_version_bytes, 0);
+    }
+}
