@@ -27,7 +27,11 @@
 //!    file I/O, blob shipped directly);
 //! 10. **Fleet-scale DES throughput** — a 1,000-node, 10^6-task synthetic
 //!     plan (`sim::fleet_plan`) through the fuzzed event heap, in
-//!     events/sec — the schedule-fuzz sweep's per-seed capacity bar.
+//!     events/sec — the schedule-fuzz sweep's per-seed capacity bar;
+//! 11. **Greedy vs window-compiled dispatch** — the same workload routed
+//!     one verdict per task vs one verdict per 64-task window, with an
+//!     InOut supersede chain surfacing the compiler's fusion/AOT-free
+//!     counters.
 //!
 //! Run: `cargo bench --bench runtime_hotpath`
 
@@ -36,6 +40,7 @@ use rcompss::apps::backend::{self, Backend};
 use rcompss::apps::Shapes;
 use rcompss::bench_harness::{banner, record_result, time_once, time_reps};
 use rcompss::cluster::{ClusterSpec, MachineProfile};
+use rcompss::coordinator::access::Direction;
 use rcompss::coordinator::registry::NodeId;
 use rcompss::coordinator::scheduler::{scheduler_by_name, ReadyTask};
 use rcompss::coordinator::dag::TaskId;
@@ -579,6 +584,79 @@ fn fanout_staging(summary: &mut Vec<Json>) {
     println!();
 }
 
+/// Case [11]: greedy vs window-compiled dispatch. The same workload —
+/// 2,000 independent producers plus a 64-deep InOut supersede chain —
+/// dispatched greedily (one placement verdict per task, every chain
+/// version published and GC'd individually) and through the window
+/// compiler (one verdict per 64-task window; the sub-threshold chain
+/// fuses into dispatch units whose intermediates are handed worker-
+/// locally, never published). Reports wall time per task and the
+/// compiler counters that explain it.
+fn window_compile(summary: &mut Vec<Json>) {
+    println!("[11] greedy vs window-compiled dispatch (2 nodes x 2 workers)");
+    let producers = 2000usize;
+    let chain = 64usize;
+    let payload = 1024usize; // 8 KiB per produced vector
+    for mode in ["off", "window"] {
+        let config = RuntimeConfig::local(2).with_nodes(2, 2).with_compile(mode);
+        let rt = CompssRuntime::start(config).unwrap();
+        let mk = rt.register_task(TaskDef::new("mk", 1, move |args| {
+            let seed = args[0].as_f64().unwrap_or(0.0);
+            Ok(vec![RValue::Real(vec![seed; payload])])
+        }));
+        let bump = rt.register_task(
+            TaskDef::new("bump", 1, |args| {
+                let v = args[0].as_real().unwrap();
+                Ok(vec![RValue::Real(v.iter().map(|x| x + 1.0).collect())])
+            })
+            .with_outputs(0)
+            .with_directions(vec![Direction::InOut]),
+        );
+        let (elapsed, _) = time_once(|| {
+            for i in 0..producers {
+                rt.submit(&mk, &[(i as f64).into()]).unwrap();
+            }
+            let mut latest = rt.submit(&mk, &[0.0.into()]).unwrap();
+            for _ in 0..chain {
+                latest = rt.submit_multi(&bump, &[latest.into()]).unwrap()[0];
+            }
+            rt.barrier().unwrap();
+        });
+        let stats = rt.stop().unwrap();
+        let n_tasks = producers + 1 + chain;
+        let per_task = elapsed / n_tasks as f64 * 1e6;
+        println!(
+            "  compile {mode:6}: {n_tasks} tasks -> {per_task:.1} µs/task | \
+             {} placement verdicts, {} windows, {} fused, {} aot frees, {} alias reuses",
+            stats.placement_verdicts,
+            stats.windows_flushed,
+            stats.window_fused,
+            stats.aot_frees,
+            stats.alias_reuses,
+        );
+        record_result(
+            "hotpath_window_compile",
+            vec![
+                ("compile", Json::Str(mode.into())),
+                ("us_per_task", Json::Num(per_task)),
+                ("placement_verdicts", Json::Num(stats.placement_verdicts as f64)),
+                ("window_fused", Json::Num(stats.window_fused as f64)),
+            ],
+        );
+        summary.push(obj(vec![
+            ("metric", Json::Str("window_compile_us_per_task".into())),
+            ("compile", Json::Str(mode.into())),
+            ("n_tasks", Json::Num(n_tasks as f64)),
+            ("us_per_task", Json::Num(per_task)),
+            ("placement_verdicts", Json::Num(stats.placement_verdicts as f64)),
+            ("window_fused", Json::Num(stats.window_fused as f64)),
+            ("aot_frees", Json::Num(stats.aot_frees as f64)),
+            ("alias_reuses", Json::Num(stats.alias_reuses as f64)),
+        ]));
+    }
+    println!();
+}
+
 fn pure_structures() {
     println!("[5] pure coordination structures");
     // Scheduler ops.
@@ -691,11 +769,11 @@ fn main() {
     gemm_ratio();
     unit_costs();
     codec_throughput();
-    // Cases [4], [6], [7], [8], [9], and [10] share one committed summary
-    // file; it is written only after all six ran, so a measured
+    // Cases [4], [6], [7], [8], [9], [10], and [11] share one committed
+    // summary file; it is written only after all seven ran, so a measured
     // BENCH_hotpath.json always carries the dispatch, batched-submit,
-    // routing, fan-out-staging, and fleet-sim metrics the projected copy
-    // has.
+    // routing, fan-out-staging, fleet-sim, and window-compile metrics the
+    // projected copy has.
     let mut summary: Vec<Json> = Vec::new();
     dispatch_overhead(&mut summary);
     batched_submission(&mut summary);
@@ -703,6 +781,7 @@ fn main() {
     adaptive_routing(&mut summary);
     fanout_staging(&mut summary);
     fleet_sim(&mut summary);
+    window_compile(&mut summary);
     rcompss::bench_harness::write_json_summary("hotpath", summary);
     pure_structures();
 }

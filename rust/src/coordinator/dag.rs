@@ -243,6 +243,39 @@ impl TaskGraph {
         newly_ready
     }
 
+    /// Retire a task the window compiler culled — its outputs are provably
+    /// never consumed — without executing it. The task counts as Done, so
+    /// quiescence accounting and ordering-only (WAR/WAW) dependents behave
+    /// exactly as if it had run; returns the dependents that became ready.
+    /// Only undispatched tasks may be culled: the compiler decides at
+    /// window flush, before the window's first enqueue, so the claim-path
+    /// Running assertion of [`TaskGraph::complete`] is replaced by a
+    /// Pending/Ready one. A culled task that still has unfinished
+    /// predecessors is safe: later `complete`/`cull` calls decrement its
+    /// `pending_deps` but skip the Done state.
+    pub fn cull(&mut self, id: TaskId) -> Vec<TaskId> {
+        let dependents = {
+            let n = self.nodes.get_mut(&id).expect("cull of unknown task");
+            debug_assert!(
+                matches!(n.state, TaskState::Pending | TaskState::Ready),
+                "cull on dispatched {id}"
+            );
+            n.state = TaskState::Done;
+            std::mem::take(&mut n.dependents)
+        };
+        self.done_count += 1;
+        let mut newly_ready = Vec::new();
+        for dep in dependents {
+            let n = self.nodes.get_mut(&dep).expect("dependent missing");
+            n.pending_deps -= 1;
+            if n.pending_deps == 0 && n.state == TaskState::Pending {
+                n.state = TaskState::Ready;
+                newly_ready.push(dep);
+            }
+        }
+        newly_ready
+    }
+
     /// Mark a running task as permanently failed; transitively cancels
     /// everything downstream. Returns the cancelled set.
     pub fn fail(&mut self, id: TaskId) -> Vec<TaskId> {
@@ -746,6 +779,32 @@ mod tests {
         g.start(t2);
         g.complete(t2);
         assert!(g.quiescent());
+    }
+
+    #[test]
+    fn cull_counts_as_done_and_unblocks_ordering_dependents() {
+        // t1 (Ready) is culled before dispatch; t3, gated on t1 and t2,
+        // must become ready once t2 completes — exactly as if t1 ran.
+        let (mut g, t1, t2, t3) = diamond();
+        assert!(g.cull(t1).is_empty());
+        assert_eq!(g.state(t1), Some(TaskState::Done));
+        g.start(t2);
+        assert_eq!(g.complete(t2), vec![t3]);
+        g.start(t3);
+        g.complete(t3);
+        assert!(g.quiescent());
+        assert_eq!(g.done_count(), 3);
+        // A Pending task whose predecessor already vanished via cull: cull
+        // cascades — culling the consumer first, then the producer, must
+        // not underflow the consumer's pending count.
+        let mut g2 = TaskGraph::new();
+        let p = g2.next_task_id();
+        g2.insert_task(p, "p", vec![], vec![key(9, 1)], vec![]);
+        let c = g2.next_task_id();
+        g2.insert_task(c, "c", vec![key(9, 1)], vec![], vec![(p, EdgeKind::Raw, key(9, 1))]);
+        assert!(g2.cull(c).is_empty(), "Pending consumer culled first");
+        assert!(g2.cull(p).is_empty(), "Done consumer is not re-readied");
+        assert!(g2.quiescent());
     }
 
     #[test]

@@ -22,13 +22,15 @@
 //!    dependents and waiters; on failure it resubmits within the retry
 //!    budget.
 
+use std::collections::HashMap;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
-use crate::coordinator::dag::TaskState;
+use crate::coordinator::dag::{TaskId, TaskState};
 use crate::coordinator::registry::{DataKey, NodeId};
 use crate::coordinator::runtime::{
-    kill_node_now, reap_if_drained, release_inputs, Core, Shared, TaskMeta,
+    collect_version, kill_node_now, reap_if_drained, recover_lost_versions, release_inputs,
+    Core, Shared, TaskMeta,
 };
 use crate::coordinator::store::{self, cold};
 use crate::trace::{EventKind, WorkerId};
@@ -151,13 +153,27 @@ pub(crate) fn acquire_input(
     Ok((v, true, bytes))
 }
 
+/// One dispatch unit as a worker sees it: the claimed task plus the
+/// window compiler's plan entries taken with the claim. `fused` names the
+/// member to run inline after a successful completion, `alias` is the
+/// ahead-of-time death list, and `handed` carries a fused intermediate
+/// received worker-local from the head — never published to any tier.
+struct Dispatch {
+    id: TaskId,
+    meta: Arc<TaskMeta>,
+    fused: Option<(TaskId, DataKey)>,
+    alias: Vec<DataKey>,
+    handed: Option<(DataKey, Arc<RValue>)>,
+}
+
 /// Body of every persistent worker thread.
 pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
     // `pop` parks the thread between tasks and returns None at shutdown.
     while let Some(id) = shared.ready.pop(wid.node) {
-        // ---- claim: the control lock covers only the state flip and an
-        // Arc clone of the metadata (no per-input work under the lock).
-        let claim: Option<Arc<TaskMeta>> = {
+        // ---- claim: the control lock covers only the state flip, an Arc
+        // clone of the metadata, and the take of the compiled plan
+        // entries for this task (no per-input work under the lock).
+        let claim: Option<Dispatch> = {
             let mut core = shared.core.lock().unwrap();
             if core.graph.state(id) != Some(TaskState::Ready) {
                 // Stale queue entry: `reopen` re-gated this task (node-loss
@@ -172,257 +188,466 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, wid: WorkerId) {
                 None
             } else {
                 core.graph.start(id);
-                Some(Arc::clone(&core.meta[&id]))
+                // The fusion link is consumed by the successful claim: a
+                // later retry of this task dispatches unfused, so every
+                // failure path degrades to the ordinary protocol.
+                let fused = core.fused_next.remove(&id);
+                let alias = core.alias.remove(&id).unwrap_or_default();
+                Some(Dispatch {
+                    id,
+                    meta: Arc::clone(&core.meta[&id]),
+                    fused,
+                    alias,
+                    handed: None,
+                })
             }
         };
-        let Some(meta) = claim else {
-            continue;
-        };
-        // Locality accounting against the sharded table, outside all locks.
-        // On the memory plane the location of a cross-node input is
-        // published by whoever actually stages the bytes (mover or
-        // fallback); on the file plane the codec read below stages them
-        // implicitly, so the claim records the location up front as the
-        // seed runtime did.
-        let inputs: Vec<(DataKey, bool)> = meta
-            .inputs
-            .iter()
-            .map(|k| {
-                let local = shared.table.is_local(*k, wid.node);
-                if !local && !shared.store.enabled() {
-                    shared.table.add_location(*k, wid.node);
-                }
-                (*k, local)
-            })
-            .collect();
+        // A fused chain runs to exhaustion on this worker: each member is
+        // claimed under the lock inside `run_unit` and handed back here.
+        let mut current = claim;
+        while let Some(unit) = current {
+            current = run_unit(&shared, wid, unit);
+        }
+    }
+}
 
-        // ---- gather inputs ------------------------------------------------
-        let mut args: Vec<Arc<RValue>> = Vec::with_capacity(inputs.len());
-        let mut input_bytes = 0u64;
-        let mut decoded_any = false;
-        let deser_start = shared.tracer.now();
-        let mut io_error: Option<anyhow::Error> = None;
-        for (key, was_local) in &inputs {
-            // A read of a version not resident on this node counts as a
-            // transfer (live mode shares one address space, so the
-            // "transfer" cost is the codec round-trip; the event keeps
-            // live traces comparable with simulated ones).
-            if !*was_local {
-                let t = shared.tracer.now();
-                shared
-                    .tracer
-                    .record_at(wid, EventKind::Transfer, Some(id), t, t);
+/// Gather, execute, publish, and complete one dispatch unit. Returns the
+/// fused member to run inline next (already claimed, with the
+/// intermediate in hand), or `None` when the chain ends here.
+fn run_unit(shared: &Arc<Shared>, wid: WorkerId, unit: Dispatch) -> Option<Dispatch> {
+    let Dispatch {
+        id,
+        meta,
+        fused,
+        alias,
+        handed,
+    } = unit;
+    // Locality accounting against the sharded table, outside all locks.
+    // On the memory plane the location of a cross-node input is
+    // published by whoever actually stages the bytes (mover or
+    // fallback); on the file plane the codec read below stages them
+    // implicitly, so the claim records the location up front as the
+    // seed runtime did. A handed intermediate lives in this worker's
+    // hands, not in any tier — always "local", never recorded.
+    let inputs: Vec<(DataKey, bool)> = meta
+        .inputs
+        .iter()
+        .map(|k| {
+            if handed.as_ref().is_some_and(|(hk, _)| hk == k) {
+                return (*k, true);
             }
-            match acquire_input(&shared, *key, wid.node, *was_local) {
-                Ok((v, decoded, bytes)) => {
-                    args.push(v);
-                    input_bytes += bytes;
-                    decoded_any |= decoded;
-                }
-                Err(e) => {
-                    io_error = Some(e.context(format!("deserialize {key}")));
-                    break;
-                }
+            let local = shared.table.is_local(*k, wid.node);
+            if !local && !shared.store.enabled() {
+                shared.table.add_location(*k, wid.node);
+            }
+            (*k, local)
+        })
+        .collect();
+
+    // ---- gather inputs ------------------------------------------------
+    let mut args: Vec<Arc<RValue>> = Vec::with_capacity(inputs.len());
+    let mut input_bytes = 0u64;
+    let mut decoded_any = false;
+    let deser_start = shared.tracer.now();
+    let mut io_error: Option<anyhow::Error> = None;
+    for (key, was_local) in &inputs {
+        if let Some((hk, hv)) = &handed {
+            if key == hk {
+                // The fused hand-off: zero-copy, zero-lookup.
+                args.push(Arc::clone(hv));
+                continue;
             }
         }
-        let deser_end = shared.tracer.now();
-        if decoded_any {
-            shared.tracer.record_at(
-                wid,
-                EventKind::Deserialize,
-                Some(id),
-                deser_start,
-                deser_end,
-            );
+        // A read of a version not resident on this node counts as a
+        // transfer (live mode shares one address space, so the
+        // "transfer" cost is the codec round-trip; the event keeps
+        // live traces comparable with simulated ones).
+        if !*was_local {
+            let t = shared.tracer.now();
+            shared
+                .tracer
+                .record_at(wid, EventKind::Transfer, Some(id), t, t);
         }
-
-        // ---- execute -------------------------------------------------------
-        let exec_start = shared.tracer.now();
-        let result: anyhow::Result<Vec<RValue>> = match io_error {
-            Some(e) => Err(e),
-            None => {
-                if shared.injector.should_fail(&meta.spec.name) {
-                    Err(anyhow::anyhow!(
-                        "injected failure in '{}' (attempt on {wid})",
-                        meta.spec.name
-                    ))
-                } else {
-                    (meta.spec.body)(&args)
-                }
-            }
-        };
-        drop(args);
-        let exec_end = shared.tracer.now();
-        shared.tracer.record_at(
-            wid,
-            EventKind::TaskExec(Arc::clone(&meta.spec.name)),
-            Some(id),
-            exec_start,
-            exec_end,
-        );
-        // Feed the adaptive router's duration signal: one per-type EWMA
-        // sample per successful execution (failures would poison the
-        // estimate with injector/retry noise).
-        if result.is_ok() {
-            if let Some(fb) = &shared.feedback {
-                fb.record_task(&meta.spec.name, exec_end - exec_start);
-            }
-        }
-
-        match result {
-            Ok(outputs) => {
-                // The node died while this task was executing: its outputs
-                // are gone with it — discard them and resubmit so an alive
-                // node re-runs the attempt (inputs are consumed again by
-                // the retry; no references are released here).
-                if !shared.health.is_alive(wid.node) {
-                    let mut core = shared.core.lock().unwrap();
-                    if core.graph.state(id) == Some(TaskState::Running) {
-                        core.stats.resubmissions += 1;
-                        core.graph.resubmit(id);
-                        let core = &mut *core;
-                        shared.enqueue_ready(core, id);
-                    }
-                    continue;
-                }
-                // ---- publish outputs (outside the control lock) -----------
-                let ser_start = shared.tracer.now();
-                let mut ser_error: Option<anyhow::Error> = None;
-                let mut produced_bytes = 0u64;
-                let mut encoded_any = false;
-                if outputs.len() != meta.outputs.len() {
-                    ser_error = Some(anyhow::anyhow!(
-                        "task '{}' returned {} values, declared {}",
-                        meta.spec.name,
-                        outputs.len(),
-                        meta.outputs.len()
-                    ));
-                } else if shared.store.enabled() {
-                    // Memory plane: the store takes ownership; the codec
-                    // runs only if memory pressure spills a victim. The
-                    // reap covers outputs whose consumers were all
-                    // cancelled while this task was still running.
-                    for (key, value) in meta.outputs.iter().zip(outputs.into_iter()) {
-                        let value = Arc::new(value);
-                        let nbytes = value.byte_size() as u64;
-                        let victims = shared.store.hot().put(*key, Arc::clone(&value), false);
-                        shared.table.mark_available_memory(*key, wid.node, nbytes);
-                        store::demote_victims(&shared, victims);
-                        reap_if_drained(&shared, *key);
-                    }
-                } else {
-                    // File plane: byte-identical to the seed runtime.
-                    let mut produced = Vec::with_capacity(meta.outputs.len());
-                    for (key, value) in meta.outputs.iter().zip(outputs.iter()) {
-                        let path = shared.path_for(*key);
-                        match shared.codec.write_file(value, &path) {
-                            Ok(()) => {
-                                shared.store.cold().note_write();
-                                let bytes =
-                                    std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
-                                produced.push((*key, bytes, path));
-                            }
-                            Err(e) => {
-                                ser_error = Some(e.context(format!("serialize {key}")));
-                                break;
-                            }
-                        }
-                    }
-                    if ser_error.is_none() {
-                        encoded_any = !produced.is_empty();
-                        for (key, bytes, path) in produced {
-                            shared.table.mark_available(key, wid.node, bytes, path);
-                            produced_bytes += bytes;
-                            reap_if_drained(&shared, key);
-                        }
-                    }
-                }
-                let ser_end = shared.tracer.now();
-                if encoded_any {
-                    shared.tracer.record_at(
-                        wid,
-                        EventKind::Serialize,
-                        Some(id),
-                        ser_start,
-                        ser_end,
-                    );
-                }
-
-                let mut success = false;
-                let mut done_count = 0u64;
-                let to_release = {
-                    let mut core = shared.core.lock().unwrap();
-                    if let Some(e) = ser_error {
-                        handle_failure(&shared, &mut core, id, &meta, wid, e)
-                    } else {
-                        core.stats.bytes_serialized += produced_bytes;
-                        core.stats.bytes_deserialized += input_bytes;
-                        core.stats.deserialize_s += deser_end - deser_start;
-                        core.stats.serialize_s += ser_end - ser_start;
-                        core.stats.exec_s += exec_end - exec_start;
-                        // String-keyed public map, Arc<str>-interned name:
-                        // allocate the key only on the first completion of
-                        // each type. (The two-step lookup is deliberate —
-                        // `match get_mut { None => insert }` is the
-                        // get-or-insert shape stable borrowck rejects, and
-                        // `entry()` would allocate a String per call.)
-                        if !core.stats.per_type.contains_key(meta.spec.name.as_ref()) {
-                            core.stats
-                                .per_type
-                                .insert(meta.spec.name.to_string(), (0, 0.0));
-                        }
-                        let per = core
-                            .stats
-                            .per_type
-                            .get_mut(meta.spec.name.as_ref())
-                            .expect("per-type entry just ensured");
-                        per.0 += 1;
-                        per.1 += exec_end - exec_start;
-                        core.stats.tasks_done += 1;
-                        done_count = core.stats.tasks_done;
-                        let newly_ready = core.graph.complete(id);
-                        let core = &mut *core;
-                        for t in newly_ready {
-                            shared.enqueue_ready(core, t);
-                        }
-                        shared.cv_done.notify_all();
-                        success = true;
-                        Vec::new()
-                    }
-                };
-                // Outside the control lock: drop this task's consumer
-                // references. On success the inputs were consumed exactly
-                // once; on permanent failure the references of the failed
-                // task and its cancelled dependents are in `to_release`.
-                // The version GC reclaims whatever drained to zero.
-                if success {
-                    release_inputs(&shared, &meta.inputs);
-                    if shared.checkpoint_cold
-                        && shared.ready.nodes() > 1
-                        && shared.store.enabled()
-                    {
-                        maybe_checkpoint(&shared, &meta, exec_end - exec_start);
-                    }
-                    // Armed chaos: the victim dies the instant the N-th
-                    // completion lands — a deterministic mid-run kill.
-                    if shared.injector.node_kill_due(done_count) {
-                        if let Some(victim) = shared.chaos_victim {
-                            kill_node_now(&shared, victim);
-                        }
-                    }
-                } else {
-                    release_inputs(&shared, &to_release);
-                }
+        match acquire_input(shared, *key, wid.node, *was_local) {
+            Ok((v, decoded, bytes)) => {
+                args.push(v);
+                input_bytes += bytes;
+                decoded_any |= decoded;
             }
             Err(e) => {
-                let to_release = {
-                    let mut core = shared.core.lock().unwrap();
+                io_error = Some(e.context(format!("deserialize {key}")));
+                break;
+            }
+        }
+    }
+    let deser_end = shared.tracer.now();
+    if decoded_any {
+        shared.tracer.record_at(
+            wid,
+            EventKind::Deserialize,
+            Some(id),
+            deser_start,
+            deser_end,
+        );
+    }
+
+    // ---- execute -------------------------------------------------------
+    let exec_start = shared.tracer.now();
+    let result: anyhow::Result<Vec<RValue>> = match io_error {
+        Some(e) => Err(e),
+        None => {
+            if shared.injector.should_fail(&meta.spec.name) {
+                Err(anyhow::anyhow!(
+                    "injected failure in '{}' (attempt on {wid})",
+                    meta.spec.name
+                ))
+            } else {
+                (meta.spec.body)(&args)
+            }
+        }
+    };
+    drop(args);
+    let exec_end = shared.tracer.now();
+    shared.tracer.record_at(
+        wid,
+        EventKind::TaskExec(Arc::clone(&meta.spec.name)),
+        Some(id),
+        exec_start,
+        exec_end,
+    );
+    // Feed the adaptive router's duration signal: one per-type EWMA
+    // sample per successful execution (failures would poison the
+    // estimate with injector/retry noise).
+    if result.is_ok() {
+        if let Some(fb) = &shared.feedback {
+            fb.record_task(&meta.spec.name, exec_end - exec_start);
+        }
+    }
+
+    match result {
+        Ok(outputs) => {
+            // The node died while this task was executing: its outputs
+            // are gone with it — discard them and resubmit so an alive
+            // node re-runs the attempt (inputs are consumed again by
+            // the retry; no references are released here).
+            if !shared.health.is_alive(wid.node) {
+                let mut core = shared.core.lock().unwrap();
+                if core.graph.state(id) == Some(TaskState::Running) {
+                    core.stats.resubmissions += 1;
+                    core.graph.resubmit(id);
+                    let core = &mut *core;
+                    if let Some((hk, _)) = &handed {
+                        // The unpublished fused intermediate died with the
+                        // node: lineage recovery reopens the head (whose
+                        // fused entry the claim already consumed, so its
+                        // retry publishes normally) and re-gates this
+                        // member behind the fresh output.
+                        recover_lost_versions(shared, core, &[*hk]);
+                    }
+                    if core.graph.state(id) == Some(TaskState::Ready) {
+                        shared.enqueue_ready(core, id);
+                    }
+                }
+                return None;
+            }
+            // ---- publish outputs (outside the control lock) -----------
+            let ser_start = shared.tracer.now();
+            let mut ser_error: Option<anyhow::Error> = None;
+            let mut produced_bytes = 0u64;
+            let mut encoded_any = false;
+            let mut handoff: Option<(DataKey, Arc<RValue>)> = None;
+            let mut early_released = false;
+            if outputs.len() != meta.outputs.len() {
+                ser_error = Some(anyhow::anyhow!(
+                    "task '{}' returned {} values, declared {}",
+                    meta.spec.name,
+                    outputs.len(),
+                    meta.outputs.len()
+                ));
+            } else if shared.store.enabled() {
+                // Ahead-of-time death list: this task is the predicted
+                // last reader of these versions — release them *before*
+                // the outputs allocate, so a dying buffer's budget is
+                // already free when its successor is put (refcount-gated:
+                // a racing reader from an earlier window still holds a
+                // reference and the release just decrements). No failure
+                // can interpose between here and completion on this
+                // plane, so the references release exactly once.
+                let mut freed_pool = 0u64;
+                for k in &alias {
+                    if let Some(act) = shared.table.release_consumer(*k, shared.gc_enabled) {
+                        shared.aot_frees.fetch_add(1, Ordering::Relaxed);
+                        freed_pool += act.bytes;
+                        collect_version(shared, &act);
+                    }
+                }
+                early_released = !alias.is_empty();
+                // Memory plane: the store takes ownership; the codec
+                // runs only if memory pressure spills a victim. The
+                // reap covers outputs whose consumers were all
+                // cancelled while this task was still running.
+                for (key, value) in meta.outputs.iter().zip(outputs.into_iter()) {
+                    let value = Arc::new(value);
+                    if fused.as_ref().is_some_and(|(_, fk)| fk == key) {
+                        // The fused intermediate: handed to the member
+                        // on this worker, never published.
+                        handoff = Some((*key, value));
+                        continue;
+                    }
+                    let nbytes = value.byte_size() as u64;
+                    if nbytes > 0 && freed_pool >= nbytes {
+                        // The death list covered this allocation: the
+                        // hot tier reused the dying buffer's budget.
+                        freed_pool -= nbytes;
+                        shared.alias_reuses.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let victims = shared.store.hot().put(*key, Arc::clone(&value), false);
+                    shared.table.mark_available_memory(*key, wid.node, nbytes);
+                    store::demote_victims(shared, victims);
+                    reap_if_drained(shared, *key);
+                }
+            } else {
+                // File plane: byte-identical to the seed runtime (a
+                // fused intermediate skips its file and rides the
+                // hand-off instead).
+                let mut produced = Vec::with_capacity(meta.outputs.len());
+                let mut values = outputs.into_iter();
+                for key in meta.outputs.iter() {
+                    let value = values.next().expect("arity checked above");
+                    if fused.as_ref().is_some_and(|(_, fk)| fk == key) {
+                        handoff = Some((*key, Arc::new(value)));
+                        continue;
+                    }
+                    let path = shared.path_for(*key);
+                    match shared.codec.write_file(&value, &path) {
+                        Ok(()) => {
+                            shared.store.cold().note_write();
+                            let bytes =
+                                std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+                            produced.push((*key, bytes, path));
+                        }
+                        Err(e) => {
+                            ser_error = Some(e.context(format!("serialize {key}")));
+                            break;
+                        }
+                    }
+                }
+                if ser_error.is_none() {
+                    encoded_any = !produced.is_empty();
+                    for (key, bytes, path) in produced {
+                        shared.table.mark_available(key, wid.node, bytes, path);
+                        produced_bytes += bytes;
+                        reap_if_drained(shared, key);
+                    }
+                }
+            }
+            let ser_end = shared.tracer.now();
+            if encoded_any {
+                shared.tracer.record_at(
+                    wid,
+                    EventKind::Serialize,
+                    Some(id),
+                    ser_start,
+                    ser_end,
+                );
+            }
+
+            let mut success = false;
+            let mut done_count = 0u64;
+            let mut inline: Option<Dispatch> = None;
+            let to_release = {
+                let mut core = shared.core.lock().unwrap();
+                if let Some(e) = ser_error {
+                    // A failed fused head publishes its intermediate
+                    // normally before the failure is handled, so the
+                    // unfused retry (or the member, if the head somehow
+                    // half-published) finds consistent state. Only the
+                    // file plane can reach this with a handoff pending.
+                    if let Some((hk, hv)) = handoff.take() {
+                        publish_fallback(shared, wid, hk, hv);
+                    }
+                    handle_failure(shared, &mut core, id, &meta, wid, e)
+                } else {
+                    core.stats.bytes_serialized += produced_bytes;
                     core.stats.bytes_deserialized += input_bytes;
                     core.stats.deserialize_s += deser_end - deser_start;
-                    handle_failure(&shared, &mut core, id, &meta, wid, e)
-                };
-                release_inputs(&shared, &to_release);
+                    core.stats.serialize_s += ser_end - ser_start;
+                    core.stats.exec_s += exec_end - exec_start;
+                    // String-keyed public map, Arc<str>-interned name:
+                    // allocate the key only on the first completion of
+                    // each type. (The two-step lookup is deliberate —
+                    // `match get_mut { None => insert }` is the
+                    // get-or-insert shape stable borrowck rejects, and
+                    // `entry()` would allocate a String per call.)
+                    if !core.stats.per_type.contains_key(meta.spec.name.as_ref()) {
+                        core.stats
+                            .per_type
+                            .insert(meta.spec.name.to_string(), (0, 0.0));
+                    }
+                    let per = core
+                        .stats
+                        .per_type
+                        .get_mut(meta.spec.name.as_ref())
+                        .expect("per-type entry just ensured");
+                    per.0 += 1;
+                    per.1 += exec_end - exec_start;
+                    core.stats.tasks_done += 1;
+                    done_count = core.stats.tasks_done;
+                    let newly_ready = core.graph.complete(id);
+                    let core = &mut *core;
+                    // Fused hand-off: claim the member inline while the
+                    // lock is held — one claim, zero queue traffic, the
+                    // intermediate never published. Fallback (member
+                    // re-gated by recovery, node dying): publish the
+                    // intermediate *before* the enqueue below so no
+                    // racing claimant can find its input missing.
+                    let mut inline_member: Option<TaskId> = None;
+                    if let Some((m, _)) = fused {
+                        let (hk, hv) = handoff.take().expect("fused head has one output");
+                        if core.graph.state(m) == Some(TaskState::Ready)
+                            && shared.health.is_alive(wid.node)
+                        {
+                            core.graph.start(m);
+                            core.placement.remove(&m);
+                            let mfused = core.fused_next.remove(&m);
+                            let malias = core.alias.remove(&m).unwrap_or_default();
+                            inline = Some(Dispatch {
+                                id: m,
+                                meta: Arc::clone(&core.meta[&m]),
+                                fused: mfused,
+                                alias: malias,
+                                handed: Some((hk, hv)),
+                            });
+                            inline_member = Some(m);
+                        } else {
+                            publish_fallback(shared, wid, hk, hv);
+                        }
+                    }
+                    for t in newly_ready {
+                        if inline_member == Some(t) {
+                            continue;
+                        }
+                        shared.enqueue_ready(core, t);
+                    }
+                    // A completed member retires its hand-off: the sole
+                    // consumer is done, nothing can name it again. (A
+                    // waiter that pinned it mid-flight keeps the mark
+                    // off and gets the compiler's wait_on error.)
+                    if let Some((hk, _)) = &handed {
+                        shared.table.collect_unproduced(*hk);
+                        shared.transfers.purge_version(*hk);
+                    }
+                    shared.cv_done.notify_all();
+                    success = true;
+                    Vec::new()
+                }
+            };
+            // Outside the control lock: drop this task's consumer
+            // references. On success the inputs were consumed exactly
+            // once; on permanent failure the references of the failed
+            // task and its cancelled dependents are in `to_release`.
+            // The version GC reclaims whatever drained to zero.
+            if success {
+                if early_released {
+                    // The death-list keys released pre-publish; drop
+                    // only the remaining references (multiplicity-aware).
+                    let mut skip: HashMap<DataKey, usize> = HashMap::new();
+                    for k in &alias {
+                        *skip.entry(*k).or_insert(0) += 1;
+                    }
+                    let rest: Vec<DataKey> = meta
+                        .inputs
+                        .iter()
+                        .filter(|k| {
+                            if let Some(c) = skip.get_mut(k) {
+                                if *c > 0 {
+                                    *c -= 1;
+                                    return false;
+                                }
+                            }
+                            true
+                        })
+                        .copied()
+                        .collect();
+                    release_inputs(shared, &rest);
+                } else {
+                    release_inputs(shared, &meta.inputs);
+                }
+                if shared.checkpoint_cold
+                    && shared.ready.nodes() > 1
+                    && shared.store.enabled()
+                {
+                    maybe_checkpoint(shared, &meta, exec_end - exec_start);
+                }
+                // Armed chaos: the victim dies the instant the N-th
+                // completion lands — a deterministic mid-run kill.
+                if shared.injector.node_kill_due(done_count) {
+                    if let Some(victim) = shared.chaos_victim {
+                        kill_node_now(shared, victim);
+                    }
+                }
+            } else {
+                release_inputs(shared, &to_release);
             }
+            inline
+        }
+        Err(e) => {
+            // A failed fused member must not strand its unpublished
+            // intermediate: publish it first (alive node) so the retry —
+            // on any node — gathers it like a normal input, or hand it
+            // to lineage recovery (dead node) so the head re-derives it.
+            let alive = shared.health.is_alive(wid.node);
+            if let Some((hk, hv)) = &handed {
+                if alive {
+                    publish_fallback(shared, wid, *hk, Arc::clone(hv));
+                }
+            }
+            let to_release = {
+                let mut core = shared.core.lock().unwrap();
+                core.stats.bytes_deserialized += input_bytes;
+                core.stats.deserialize_s += deser_end - deser_start;
+                let to_release = handle_failure(shared, &mut core, id, &meta, wid, e);
+                if !alive && core.graph.state(id) == Some(TaskState::Ready) {
+                    if let Some((hk, _)) = &handed {
+                        // Resubmitted on a dead node with the hand-off
+                        // lost: reopen the head (it republishes) and
+                        // re-gate this member behind it. The stale queue
+                        // entry from the resubmission is discarded by
+                        // the claim-time state check.
+                        recover_lost_versions(shared, &mut core, &[*hk]);
+                    }
+                }
+                to_release
+            };
+            release_inputs(shared, &to_release);
+            None
+        }
+    }
+}
+
+/// Publish a fused intermediate through the normal produce path — the
+/// fallback when the member cannot run inline (re-gated by recovery,
+/// dying node, head or member failure). Touches only leaf domains, so it
+/// is safe both under and off the control lock.
+fn publish_fallback(shared: &Arc<Shared>, wid: WorkerId, key: DataKey, value: Arc<RValue>) {
+    if shared.store.enabled() {
+        let nbytes = value.byte_size() as u64;
+        let victims = shared.store.hot().put(key, value, false);
+        shared.table.mark_available_memory(key, wid.node, nbytes);
+        store::demote_victims(shared, victims);
+        reap_if_drained(shared, key);
+    } else {
+        let path = shared.path_for(key);
+        match shared.codec.write_file(&value, &path) {
+            Ok(()) => {
+                shared.store.cold().note_write();
+                let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+                shared.table.mark_available(key, wid.node, bytes, path);
+                reap_if_drained(shared, key);
+            }
+            Err(e) => eprintln!(
+                "[rcompss] publish of fused intermediate {key} failed: {e:#}"
+            ),
         }
     }
 }

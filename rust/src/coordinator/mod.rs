@@ -31,6 +31,12 @@
 //!   estimated *time* once the signal is warm;
 //! * [`executor`] — the persistent worker pool (threads) for real local
 //!   execution, with memory- or file-based parameter passing;
+//! * [`compile`] — the window compiler: an ahead-of-time DAG compilation
+//!   pass (render-graph style) over bounded submission windows — dead-task
+//!   culling, ahead-of-time lifetime/death lists with hot-tier buffer
+//!   aliasing, short-chain fusion into single dispatch units, and
+//!   whole-window placement replacing per-task greedy verdicts (armed by
+//!   `--compile window` / `RCOMPSS_COMPILE=window`; off by default);
 //! * [`fault`] — task resubmission on failure and failure injection;
 //! * [`schedfuzz`] — deterministic schedule-fuzzing yield points at the
 //!   concurrency planes' hazard windows (armed by `RCOMPSS_SCHED_FUZZ` or
@@ -97,6 +103,7 @@
 //! and zero file I/O.
 
 pub mod access;
+pub mod compile;
 pub mod dag;
 pub mod executor;
 pub mod fault;
@@ -110,6 +117,7 @@ pub mod store;
 pub mod transfer;
 
 pub use access::Direction;
+pub use compile::{compile_window, WindowCtx, WindowPlan, WindowTask};
 pub use dag::{EdgeKind, TaskGraph, TaskId, TaskState};
 pub use feedback::{AdaptivePlacement, FeedbackStats};
 pub use placement::{placement_by_name, PlacementModel, RoutedReady};

@@ -402,7 +402,7 @@ impl RoutedReady {
 
     /// Route and enqueue a ready task; returns the chosen node index.
     pub fn push(&mut self, task: ReadyTask) -> usize {
-        let mut shard = self.model.place(
+        let shard = self.model.place(
             &task,
             self.shards.len(),
             &ShardDepths {
@@ -410,6 +410,31 @@ impl RoutedReady {
                 alive: &self.alive,
             },
         );
+        self.insert_at(shard, task)
+    }
+
+    /// Enqueue on a precomputed shard without a per-task model verdict —
+    /// the simulator's half of the window compiler's dispatch path,
+    /// mirroring `ShardedReady::push_routed`. The dead-shard belt guard
+    /// still applies; returns the shard actually used.
+    pub fn push_routed(&mut self, shard: usize, task: ReadyTask) -> usize {
+        self.insert_at(shard.min(self.shards.len().saturating_sub(1)), task)
+    }
+
+    /// Score a (possibly synthetic, window-aggregate) task against the
+    /// model without enqueueing — the whole-window anchor verdict.
+    pub fn place_window(&self, task: &ReadyTask) -> usize {
+        self.model.place(
+            task,
+            self.shards.len(),
+            &ShardDepths {
+                shards: &self.shards,
+                alive: &self.alive,
+            },
+        )
+    }
+
+    fn insert_at(&mut self, mut shard: usize, task: ReadyTask) -> usize {
         // Belt guard: a model that ignores the alive signal must still not
         // strand work on a dead shard nothing will ever pop from first.
         if !self.alive.get(shard).copied().unwrap_or(false) {
@@ -612,6 +637,23 @@ mod tests {
         assert_eq!(q.pop_for(NodeId(1)), Some(TaskId(2)));
         assert_eq!(q.pop_for(NodeId(1)), None);
         assert!(RoutedReady::new("zzz", 2, placement_by_name("cost").unwrap()).is_none());
+    }
+
+    #[test]
+    fn routed_ready_push_routed_honors_plan_and_belt_guard() {
+        let model = placement_by_name("bytes").unwrap();
+        let mut q = RoutedReady::new("fifo", 2, model).unwrap();
+        // The compiled plan overrides what the model would pick.
+        assert_eq!(q.push_routed(1, rt(1, vec![(100, vec![NodeId(0)])])), 1);
+        assert_eq!(q.pop_for(NodeId(1)), Some(TaskId(1)));
+        // A dead planned shard falls back to a live one.
+        q.set_alive(NodeId(1), false);
+        assert_eq!(q.push_routed(1, rt(2, vec![])), 0);
+        assert_eq!(q.pop_for(NodeId(0)), Some(TaskId(2)));
+        // The anchor verdict consults the model without enqueueing.
+        q.set_alive(NodeId(1), true);
+        assert_eq!(q.place_window(&rt(3, vec![(100, vec![NodeId(1)])])), 1);
+        assert_eq!(q.queue_len(), 0);
     }
 
     /// Signals with a dead-node mask and no other pressure.

@@ -424,6 +424,46 @@ impl VersionTable {
         report
     }
 
+    /// Window-compiler settlement of a version that will never be
+    /// produced — its producer was culled, or it was elided as a fused
+    /// intermediate (handed producer-to-consumer without a publish). The
+    /// version is marked collected so a late `wait_on` errors
+    /// deterministically instead of parking forever and the transfer
+    /// plane never stages it. Unlike the GC's collection gate this does
+    /// not require availability: there are no bytes to free, so no
+    /// [`CollectAction`] is returned. Produced, pinned, or
+    /// already-collected versions are left alone (`false`): a `wait_on`
+    /// pin that raced the compile pass wins, and the caller must keep the
+    /// producer runnable.
+    pub fn collect_unproduced(&self, key: DataKey) -> bool {
+        let mut shard = self.shard(key).write().unwrap();
+        let Some(info) = shard.get_mut(&key) else {
+            return false;
+        };
+        if info.available || info.pinned || info.collected {
+            return false;
+        }
+        info.collected = true;
+        info.in_memory = false;
+        info.path = PathBuf::new();
+        true
+    }
+
+    /// Revert a [`VersionTable::collect_unproduced`] mark: the compile
+    /// pass settles a task's outputs one at a time, and when a later
+    /// output refuses (a racing pin), the earlier marks must be undone so
+    /// the task can execute normally. Only flips versions that are still
+    /// unproduced-and-collected — the exact state `collect_unproduced`
+    /// left them in.
+    pub fn uncollect_unproduced(&self, key: DataKey) {
+        let mut shard = self.shard(key).write().unwrap();
+        if let Some(info) = shard.get_mut(&key) {
+            if info.collected && !info.available {
+                info.collected = false;
+            }
+        }
+    }
+
     /// Reset a version so its producer can re-derive it (lineage
     /// recovery): availability, residency, locations, and — for a version
     /// the GC already collected — the `collected` mark are cleared, so the

@@ -30,6 +30,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::access::Direction;
+use crate::coordinator::compile::{self, WindowCtx, WindowTask};
 use crate::coordinator::dag::{EdgeKind, TaskGraph, TaskId, TaskState};
 use crate::coordinator::executor;
 use crate::coordinator::fault::{ChaosSpec, FailureInjector, NodeHealth, RetryPolicy};
@@ -178,6 +179,14 @@ pub struct CoordinatorConfig {
     /// windows (see [`crate::coordinator::schedfuzz`]). `None` (default)
     /// leaves every hook a single no-op branch.
     pub sched_fuzz: Option<u64>,
+    /// Window-compiler mode (`--compile` / `RCOMPSS_COMPILE`): `"off"`
+    /// (default — greedy per-task dispatch) or `"window"` — buffer
+    /// submissions into bounded windows and run the DAG compilation
+    /// passes (dead-task culling, ahead-of-time lifetimes with hot-tier
+    /// buffer aliasing, short-chain fusion, whole-window placement)
+    /// before any task reaches the ready queues. See
+    /// [`crate::coordinator::compile`].
+    pub compile: String,
 }
 
 /// Default byte budget of the in-memory data plane — the single source of
@@ -197,11 +206,11 @@ impl CoordinatorConfig {
     /// `with_memory_budget(0).with_gc(false)` restores the seed-identical
     /// file plane.
     ///
-    /// The `RCOMPSS_SCHEDULER`, `RCOMPSS_ROUTER`, and
-    /// `RCOMPSS_WARM_BUDGET` environment variables override the
-    /// scheduler/router/warm-budget *defaults* (explicit `with_*` calls
-    /// still win) — this is how CI sweeps the placement × policy × warm
-    /// matrix over the unmodified test suite.
+    /// The `RCOMPSS_SCHEDULER`, `RCOMPSS_ROUTER`, `RCOMPSS_WARM_BUDGET`,
+    /// and `RCOMPSS_COMPILE` environment variables override the
+    /// scheduler/router/warm-budget/compile *defaults* (explicit
+    /// `with_*` calls still win) — this is how CI sweeps the placement ×
+    /// policy × warm × compile matrix over the unmodified test suite.
     pub fn local(workers: u32) -> CoordinatorConfig {
         CoordinatorConfig {
             nodes: 1,
@@ -232,6 +241,7 @@ impl CoordinatorConfig {
                 .unwrap_or_default(),
             checkpoint: std::env::var("RCOMPSS_CHECKPOINT").unwrap_or_else(|_| "none".into()),
             sched_fuzz: FuzzController::seed_from_env(),
+            compile: std::env::var("RCOMPSS_COMPILE").unwrap_or_else(|_| "off".into()),
         }
     }
 
@@ -343,6 +353,13 @@ impl CoordinatorConfig {
         self.sched_fuzz = Some(seed);
         self
     }
+
+    /// Window-compiler mode: `"off"` | `"window"`. Validated at
+    /// [`Coordinator::start`].
+    pub fn with_compile(mut self, mode: &str) -> Self {
+        self.compile = mode.into();
+        self
+    }
 }
 
 pub(crate) fn unique_run_id() -> u64 {
@@ -452,6 +469,28 @@ pub struct RuntimeStats {
     /// Schedule-fuzz plane: yield-point visits taken across all sites
     /// (0 when the plane is disarmed — proof the hooks cost nothing).
     pub sched_fuzz_perturbations: u64,
+    /// Window compiler: windows flushed (size cap + sync points). Zero
+    /// with `--compile off`.
+    pub windows_flushed: u64,
+    /// Window compiler: tasks retired without executing because every
+    /// output was superseded, unpinned, and read only by culled tasks.
+    pub window_culled: u64,
+    /// Window compiler: fusion links — member tasks that ran inline on
+    /// their head's worker with the intermediate handed off unpublished.
+    pub window_fused: u64,
+    /// Window compiler: ahead-of-time death-list releases that really
+    /// collected the version at its predicted last read (pre-publish).
+    pub aot_frees: u64,
+    /// Window compiler: predicted frees whose reclaimed bytes covered an
+    /// output the same task then produced — the hot tier reused the
+    /// dying buffer's budget for the successor allocation.
+    pub alias_reuses: u64,
+    /// Placement verdicts issued: one per greedy ready-queue push, one
+    /// per compiled window (all its dispatch units share it).
+    pub placement_verdicts: u64,
+    /// Hot tier: peak resident bytes over the run. Aliasing keeps this
+    /// flat where the greedy path stacks dying value + successor.
+    pub hot_peak_bytes: u64,
 }
 
 /// Per-task metadata kept by the coordinator; shared with claimants as an
@@ -470,6 +509,21 @@ pub(crate) struct Core {
     pub registry: DataRegistry,
     pub meta: HashMap<TaskId, Arc<TaskMeta>>,
     pub stats: RuntimeStats,
+    /// Window compiler: submitted-but-undispatched tasks buffered for
+    /// the next flush (empty and untouched with `--compile off`).
+    pub window: Vec<TaskId>,
+    /// Compiled fusion links, `head → (member, intermediate)`. The
+    /// executor claims (removes) an entry when it starts the head; a
+    /// retry after a failed start therefore degrades to unfused
+    /// dispatch automatically.
+    pub fused_next: HashMap<TaskId, (TaskId, DataKey)>,
+    /// Compiled ahead-of-time death lists: input versions a task
+    /// releases *before* publishing, as their predicted last reader.
+    pub alias: HashMap<TaskId, Vec<DataKey>>,
+    /// Compiled whole-window placement, task → node shard. Consumed by
+    /// [`Shared::enqueue_ready`]; a task with no entry gets a greedy
+    /// verdict as before.
+    pub placement: HashMap<TaskId, usize>,
 }
 
 /// Shared coordinator handle (master + workers).
@@ -523,7 +577,23 @@ pub(crate) struct Shared {
     /// Schedule-fuzz controller (shared with the dispatch fabric and the
     /// transfer board); `None` in production.
     pub fuzz: Option<Arc<FuzzController>>,
+    /// Window-compiler arm flag (`--compile window`).
+    pub compile_window: bool,
+    /// Window-compiler accounting (the `RuntimeStats` twins).
+    pub windows_flushed: AtomicU64,
+    pub window_culled: AtomicU64,
+    pub window_fused: AtomicU64,
+    pub aot_frees: AtomicU64,
+    pub alias_reuses: AtomicU64,
+    pub placement_verdicts: AtomicU64,
 }
+
+/// One flush's (or batch's) version-table snapshot cache: each input
+/// version is read once per flush/batch instead of once per task. The
+/// placement model and the prefetcher both route on the cached view;
+/// staleness is harmless — prefetch requests are idempotent and the
+/// claim path re-resolves locations at gather time.
+pub(crate) type LocSnapshot = HashMap<DataKey, (u64, Vec<NodeId>)>;
 
 impl Shared {
     /// File path for a datum version: `workdir/dXvY.par` — the on-disk
@@ -542,24 +612,55 @@ impl Shared {
     /// prefetch can therefore never disagree about where a replica lives —
     /// the split-brain the old two-read path allowed.
     pub(crate) fn enqueue_ready(&self, core: &mut Core, id: TaskId) {
+        let mut cache = LocSnapshot::new();
+        self.enqueue_ready_cached(core, id, &mut cache);
+    }
+
+    /// [`Shared::enqueue_ready`] with a caller-held snapshot cache, so a
+    /// batch submission or a window flush reads each shared input
+    /// version once — not once per consuming task.
+    pub(crate) fn enqueue_ready_cached(
+        &self,
+        core: &mut Core,
+        id: TaskId,
+        cache: &mut LocSnapshot,
+    ) {
+        // A buffered window task never dispatches early: a completion
+        // that turns it ready leaves it for its flush to place.
+        if self.compile_window && core.window.contains(&id) {
+            return;
+        }
         let meta = Arc::clone(&core.meta[&id]);
         let snapshot: Vec<(DataKey, u64, Vec<NodeId>)> = meta
             .inputs
             .iter()
             .map(|k| {
-                let info = self.table.info(*k).expect("input version missing");
-                (*k, info.bytes, info.locations)
+                let (bytes, locs) = cache.entry(*k).or_insert_with(|| {
+                    let info = self.table.info(*k).expect("input version missing");
+                    (info.bytes, info.locations)
+                });
+                (*k, *bytes, locs.clone())
             })
             .collect();
         let inputs = snapshot
             .iter()
             .map(|(_, bytes, locs)| (*bytes, locs.clone()))
             .collect();
-        let node = self.ready.push(ReadyTask {
+        let task = ReadyTask {
             id,
             inputs,
             type_name: Arc::clone(&meta.spec.name),
-        });
+        };
+        // A compiled window placed this task already — honor the plan
+        // (its whole window shared one verdict). No entry → a greedy
+        // per-task verdict, the pre-compiler behavior.
+        let node = match core.placement.remove(&id) {
+            Some(shard) => self.ready.push_routed(shard, task),
+            None => {
+                self.placement_verdicts.fetch_add(1, Ordering::Relaxed);
+                self.ready.push(task)
+            }
+        };
         if self.ready.nodes() > 1 && self.store.enabled() && self.transfers.enabled() {
             let dst = NodeId(node as u32);
             for (k, bytes, locs) in &snapshot {
@@ -568,6 +669,195 @@ impl Shared {
                 }
             }
         }
+    }
+
+    /// Flush the submission window: compile the buffered tasks (cull /
+    /// lifetime / fusion passes — see [`compile`]), settle the culled
+    /// tasks' registry state, record the fusion and death-list plans for
+    /// the executor, issue **one** whole-window placement verdict, and
+    /// release the ready frontier to the dispatch fabric. Runs under the
+    /// held control lock; touching the leaf domains (table, store,
+    /// transfer board, ready shards) from here is legal per the lock
+    /// ordering.
+    pub(crate) fn flush_window(&self, core: &mut Core) {
+        if core.window.is_empty() {
+            return;
+        }
+        let window = std::mem::take(&mut core.window);
+        self.windows_flushed.fetch_add(1, Ordering::Relaxed);
+
+        // The compiler's pure snapshot. Tasks cancelled while buffered
+        // (failed upstream) drop out here — the failure path settled them.
+        let mut tasks: Vec<WindowTask> = Vec::with_capacity(window.len());
+        let mut ctx = WindowCtx::default();
+        for id in &window {
+            if !matches!(
+                core.graph.state(*id),
+                Some(TaskState::Pending) | Some(TaskState::Ready)
+            ) {
+                continue;
+            }
+            let meta = &core.meta[id];
+            tasks.push(WindowTask {
+                id: *id,
+                type_name: Arc::clone(&meta.spec.name),
+                inputs: meta.inputs.clone(),
+                outputs: meta.outputs.clone(),
+            });
+            for k in meta.inputs.iter().chain(meta.outputs.iter()) {
+                if ctx.consumers.contains_key(k) {
+                    continue;
+                }
+                let Some(info) = self.table.info(*k) else { continue };
+                ctx.consumers.insert(*k, info.consumers_total);
+                if info.bytes > 0 {
+                    ctx.bytes.insert(*k, info.bytes);
+                }
+                if info.pinned {
+                    ctx.pinned.insert(*k);
+                }
+                if core.registry.latest_key(k.data) != Some(*k) {
+                    ctx.superseded.insert(*k);
+                }
+            }
+        }
+        for t in &tasks {
+            let Some(node) = core.graph.node(t.id) else { continue };
+            for dep in &node.dependents {
+                if let Some(d) = core.graph.node(*dep) {
+                    if d.pending_deps == 1 {
+                        ctx.sole_gate.insert((*dep, t.id));
+                    }
+                }
+            }
+        }
+        let plan = compile::compile_window(&tasks, &ctx);
+
+        // Apply the culls, consumers-first (reverse submission order,
+        // mirroring the compile fixpoint). `collect_unproduced` is the
+        // per-output commit point: it refuses when a waiter pinned the
+        // version after the compile snapshot, in which case this cull —
+        // and, via the committed-reads recheck, any producer cull that
+        // depended on its reads — aborts and the task dispatches
+        // normally.
+        let in_plan: HashSet<TaskId> = plan.culled.iter().copied().collect();
+        let mut committed: HashSet<TaskId> = HashSet::new();
+        let mut committed_reads: HashMap<DataKey, u32> = HashMap::new();
+        for t in tasks.iter().rev().filter(|t| in_plan.contains(&t.id)) {
+            let refs_settled = t.outputs.iter().all(|k| {
+                let total = self
+                    .table
+                    .info(*k)
+                    .map(|i| i.consumers_total)
+                    .unwrap_or(0);
+                total <= committed_reads.get(k).copied().unwrap_or(0)
+            });
+            let mut collected: Vec<DataKey> = Vec::new();
+            let commit = refs_settled
+                && t.outputs.iter().all(|k| {
+                    if self.table.collect_unproduced(*k) {
+                        collected.push(*k);
+                        true
+                    } else {
+                        false
+                    }
+                });
+            if !commit {
+                for k in collected {
+                    self.table.uncollect_unproduced(k);
+                }
+                continue;
+            }
+            committed.insert(t.id);
+            for k in &t.inputs {
+                *committed_reads.entry(*k).or_insert(0) += 1;
+            }
+            // Retire in the graph (counts as done for quiescence and
+            // ordering; dependents un-gate), settle the reads so the GC
+            // sees the same drain a real execution would have produced,
+            // and drop any transfer-board entries naming the dead
+            // outputs (none should exist — the task never enqueued).
+            core.graph.cull(t.id);
+            for k in &t.inputs {
+                if let Some(act) = self.table.release_consumer(*k, self.gc_enabled) {
+                    collect_version(self, &act);
+                }
+            }
+            for k in &t.outputs {
+                self.transfers.purge_version(*k);
+            }
+            self.window_culled.fetch_add(1, Ordering::Relaxed);
+        }
+
+        // Record the fusion links and death lists for the executor.
+        for l in &plan.fused {
+            core.fused_next.insert(l.head, (l.member, l.key));
+        }
+        self.window_fused
+            .fetch_add(plan.fused.len() as u64, Ordering::Relaxed);
+        for (id, list) in &plan.alias {
+            core.alias.insert(*id, list.clone());
+        }
+
+        // Dispatch units: everything that still executes and is not a
+        // fused member — the plan's units plus any aborted cull.
+        let members: HashSet<TaskId> = plan.fused.iter().map(|l| l.member).collect();
+        let dispatch: Vec<TaskId> = tasks
+            .iter()
+            .filter(|t| !members.contains(&t.id) && !committed.contains(&t.id))
+            .map(|t| t.id)
+            .collect();
+
+        // One placement verdict for the whole window: score the
+        // aggregate input set once, then round-robin the dispatch units
+        // over the alive nodes from that anchor. Fused members inherit
+        // their head's shard so a chain never crosses a node boundary.
+        let mut cache = LocSnapshot::new();
+        if !dispatch.is_empty() {
+            let mut agg_inputs: Vec<(u64, Vec<NodeId>)> = Vec::new();
+            for id in &dispatch {
+                for k in &core.meta[id].inputs {
+                    let (bytes, locs) = cache.entry(*k).or_insert_with(|| {
+                        let info = self.table.info(*k).expect("input version missing");
+                        (info.bytes, info.locations)
+                    });
+                    agg_inputs.push((*bytes, locs.clone()));
+                }
+            }
+            let anchor = self.ready.place_window(&ReadyTask {
+                id: dispatch[0],
+                inputs: agg_inputs,
+                type_name: Arc::clone(&core.meta[&dispatch[0]].spec.name),
+            });
+            self.placement_verdicts.fetch_add(1, Ordering::Relaxed);
+            let nodes = self.ready.nodes() as usize;
+            let mut shard = anchor;
+            for id in &dispatch {
+                for _ in 0..nodes {
+                    if self.health.is_alive(NodeId(shard as u32)) {
+                        break;
+                    }
+                    shard = (shard + 1) % nodes;
+                }
+                core.placement.insert(*id, shard);
+                let mut h = *id;
+                while let Some((m, _)) = core.fused_next.get(&h) {
+                    core.placement.insert(*m, shard);
+                    h = *m;
+                }
+                shard = (shard + 1) % nodes;
+            }
+        }
+
+        // Release the ready frontier (the snapshot cache carries over —
+        // the aggregate pass already resolved most inputs).
+        for id in &dispatch {
+            if core.graph.state(*id) == Some(TaskState::Ready) {
+                self.enqueue_ready_cached(core, *id, &mut cache);
+            }
+        }
+        // Culls may have drained a waited-on datum's last consumer.
+        self.cv_done.notify_all();
     }
 }
 
@@ -602,7 +892,7 @@ pub(crate) fn reap_if_drained(shared: &Shared, key: DataKey) {
 /// silently swallowed error). The version table entry stays (marked
 /// collected) so diagnostics and late `wait_on`s get a precise error
 /// instead of a hang.
-fn collect_version(shared: &Shared, act: &CollectAction) {
+pub(crate) fn collect_version(shared: &Shared, act: &CollectAction) {
     // Hazard window: the version is marked collected but its residency,
     // file, and board entries are still being torn down — a mover staging
     // the same version races every step below.
@@ -680,7 +970,7 @@ pub(crate) fn rejoin_node(shared: &Shared, node: NodeId) -> bool {
 /// registry's retained copies, and resubmit the ready frontier. Runs under
 /// the held control lock so no claim can interleave between the consumer
 /// re-registration, the version resets, and the reopen.
-fn recover_lost_versions(shared: &Shared, core: &mut Core, lost: &[DataKey]) {
+pub(crate) fn recover_lost_versions(shared: &Shared, core: &mut Core, lost: &[DataKey]) {
     let mut stack: Vec<DataKey> = lost.to_vec();
     let mut seen: HashSet<DataKey> = lost.iter().copied().collect();
     let mut reopen: HashSet<TaskId> = HashSet::new();
@@ -795,6 +1085,14 @@ impl Coordinator {
                  with_checkpoint)"
             ),
         };
+        let compile_window = match config.compile.as_str() {
+            "off" => false,
+            "window" => true,
+            other => bail!(
+                "unknown compile mode '{other}' (off|window; set via --compile, \
+                 with_compile, or the RCOMPSS_COMPILE default override)"
+            ),
+        };
         let model = placement_by_name(&config.router).ok_or_else(|| {
             anyhow!(
                 "unknown router '{}' (bytes|cost|roundrobin|adaptive; set via --router, \
@@ -884,6 +1182,10 @@ impl Coordinator {
                 registry: DataRegistry::with_table(Arc::clone(&table)),
                 meta: HashMap::new(),
                 stats: RuntimeStats::default(),
+                window: Vec::new(),
+                fused_next: HashMap::new(),
+                alias: HashMap::new(),
+                placement: HashMap::new(),
             }),
             cv_done: Condvar::new(),
             table: Arc::clone(&table),
@@ -909,6 +1211,13 @@ impl Coordinator {
             checkpoints_written: AtomicU64::new(0),
             checkpoint_bytes: AtomicU64::new(0),
             fuzz,
+            compile_window,
+            windows_flushed: AtomicU64::new(0),
+            window_culled: AtomicU64::new(0),
+            window_fused: AtomicU64::new(0),
+            aot_frees: AtomicU64::new(0),
+            alias_reuses: AtomicU64::new(0),
+            placement_verdicts: AtomicU64::new(0),
         });
 
         // Persistent worker pool: `nodes * workers_per_node` executors that
@@ -980,7 +1289,8 @@ impl Coordinator {
         let literal_keys = self.materialize_literals(args)?;
         let (outcome, cancelled) = {
             let mut core = self.shared.core.lock().unwrap();
-            self.analyze_and_insert(&mut core, spec, args, &literal_keys)
+            let mut cache = LocSnapshot::new();
+            self.analyze_and_insert(&mut core, spec, args, &literal_keys, &mut cache)
         };
         if let Some(meta) = cancelled {
             release_inputs(&self.shared, &meta.inputs);
@@ -1015,11 +1325,15 @@ impl Coordinator {
         let mut cancelled: Vec<Arc<TaskMeta>> = Vec::new();
         let outcomes: Vec<SubmitOutcome> = {
             let mut core = self.shared.core.lock().unwrap();
+            // One snapshot cache per lock hold: a shared input read by
+            // every element of the batch costs one table read, not N.
+            let mut cache = LocSnapshot::new();
             calls
                 .iter()
                 .zip(literal_keys.iter())
                 .map(|((spec, args), lits)| {
-                    let (out, c) = self.analyze_and_insert(&mut core, spec, args, lits);
+                    let (out, c) =
+                        self.analyze_and_insert(&mut core, spec, args, lits, &mut cache);
                     if let Some(meta) = c {
                         cancelled.push(meta);
                     }
@@ -1100,6 +1414,7 @@ impl Coordinator {
         spec: &Arc<TaskSpec>,
         args: &[Arg],
         literal_keys: &[Option<DataKey>],
+        cache: &mut LocSnapshot,
     ) -> (SubmitOutcome, Option<Arc<TaskMeta>>) {
         let id = core.graph.next_task_id();
         let mut deps: Vec<(TaskId, EdgeKind, DataKey)> = Vec::new();
@@ -1157,8 +1472,17 @@ impl Coordinator {
         core.stats.tasks_submitted += 1;
 
         let ready = core.graph.insert_task(id, &spec.name, reads, writes, deps);
-        if ready {
-            self.shared.enqueue_ready(core, id);
+        if self.shared.compile_window {
+            // Buffer instead of dispatching; the whole window compiles
+            // and flushes together at the size cap or the next sync.
+            if core.graph.state(id) != Some(TaskState::Cancelled) {
+                core.window.push(id);
+                if core.window.len() >= compile::WINDOW_CAP {
+                    self.shared.flush_window(core);
+                }
+            }
+        } else if ready {
+            self.shared.enqueue_ready_cached(core, id, cache);
         }
         // A task may have been cancelled on insert (failed upstream); its
         // input references are handed back for release off the lock.
@@ -1215,6 +1539,10 @@ impl Coordinator {
         }
         loop {
             let mut core = self.shared.core.lock().unwrap();
+            // A sync point: the buffered window must compile and move or
+            // the producer below never dispatches. The pin above happened
+            // first, so the compiler can no longer cull or fuse `key`.
+            self.shared.flush_window(&mut core);
             loop {
                 let info = self
                     .shared
@@ -1222,6 +1550,15 @@ impl Coordinator {
                     .info(key)
                     .ok_or_else(|| anyhow!("unknown datum {key}"))?;
                 if info.collected {
+                    if self.shared.compile_window
+                        && core.registry.latest_key(key.data) != Some(key)
+                    {
+                        bail!(
+                            "datum {key} was elided by the window compiler (superseded, \
+                             never read); pin or fetch it before submitting its \
+                             overwrite, or run --compile off"
+                        );
+                    }
                     bail!(
                         "datum {key} was reclaimed by the version GC before wait_on; \
                          fetch results before their last consumer finishes or disable gc"
@@ -1249,6 +1586,23 @@ impl Coordinator {
                             ),
                             None => bail!("task {producer} producing {key} was cancelled"),
                         }
+                    }
+                    // Producer retired without publishing: the window
+                    // compiler fused the superseded version away and a
+                    // waiter pinned it only after that decision. (A
+                    // version lost with a node never matches — recovery
+                    // reopens its producer under the same lock hold that
+                    // drops the node, so `Done` + unavailable + armed
+                    // compiler + superseded is unambiguous.)
+                    Some(TaskState::Done)
+                        if self.shared.compile_window
+                            && core.registry.latest_key(key.data) != Some(key) =>
+                    {
+                        bail!(
+                            "datum {key} was elided by the window compiler (superseded, \
+                             producer retired); pin or fetch it before submitting its \
+                             overwrite, or run --compile off"
+                        );
                     }
                     _ => {}
                 }
@@ -1288,7 +1642,8 @@ impl Coordinator {
     /// Block until every submitted task is in a terminal state
     /// (`compss_barrier`). Returns an error if any task failed.
     pub fn barrier(&self) -> Result<()> {
-        let core = self.shared.core.lock().unwrap();
+        let mut core = self.shared.core.lock().unwrap();
+        self.shared.flush_window(&mut core);
         let core = self
             .shared
             .cv_done
@@ -1313,7 +1668,8 @@ impl Coordinator {
     pub fn stop(self) -> Result<RuntimeStats> {
         // Drain outstanding work first (stop() implies a barrier in COMPSs).
         {
-            let core = self.shared.core.lock().unwrap();
+            let mut core = self.shared.core.lock().unwrap();
+            self.shared.flush_window(&mut core);
             let _quiescent = self
                 .shared
                 .cv_done
@@ -1365,6 +1721,13 @@ impl Coordinator {
         stats.checkpoint_bytes = shared.checkpoint_bytes.load(Ordering::Relaxed);
         stats.sched_fuzz_perturbations =
             shared.fuzz.as_ref().map(|f| f.total_visits()).unwrap_or(0);
+        stats.windows_flushed = shared.windows_flushed.load(Ordering::Relaxed);
+        stats.window_culled = shared.window_culled.load(Ordering::Relaxed);
+        stats.window_fused = shared.window_fused.load(Ordering::Relaxed);
+        stats.aot_frees = shared.aot_frees.load(Ordering::Relaxed);
+        stats.alias_reuses = shared.alias_reuses.load(Ordering::Relaxed);
+        stats.placement_verdicts = shared.placement_verdicts.load(Ordering::Relaxed);
+        stats.hot_peak_bytes = shared.store.hot().peak_resident_bytes();
     }
 
     /// The observation sink behind an `adaptive` router (`None` for the
@@ -1376,7 +1739,13 @@ impl Coordinator {
 
     /// Snapshot statistics without stopping.
     pub fn stats(&self) -> RuntimeStats {
-        let mut stats = self.shared.core.lock().unwrap().stats.clone();
+        let mut core = self.shared.core.lock().unwrap();
+        // A snapshot is a progress observation point: programs that poll
+        // it between submissions (instead of syncing) must see the
+        // buffered window move, or an armed compiler would stall them.
+        self.shared.flush_window(&mut core);
+        let mut stats = core.stats.clone();
+        drop(core);
         Self::fill_shared_stats(&self.shared, &mut stats);
         stats
     }

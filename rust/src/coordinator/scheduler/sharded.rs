@@ -150,15 +150,41 @@ impl ShardedReady {
     /// can prefetch the task's remote inputs toward that node at schedule
     /// time — one verdict drives both decisions.
     pub fn push(&self, task: ReadyTask) -> usize {
-        let mut shard = self.model.place(
-            &task,
+        let shard = self.place(&task);
+        self.insert_at(shard, task)
+    }
+
+    /// Enqueue a task on a precomputed shard, skipping the per-task
+    /// placement verdict — the window compiler's dispatch path: one
+    /// whole-window [`ShardedReady::place_window`] verdict covers many
+    /// `push_routed` calls. The dead-node belt guard, the fuzz yield
+    /// point, and the wakeup protocol are identical to
+    /// [`ShardedReady::push`]; returns the shard actually used (the guard
+    /// may redirect).
+    pub fn push_routed(&self, shard: usize, task: ReadyTask) -> usize {
+        self.insert_at(shard.min(self.shards.len().saturating_sub(1)), task)
+    }
+
+    /// Score a (possibly synthetic, window-aggregate) task against the
+    /// placement model without enqueueing anything — the whole-window
+    /// anchor verdict.
+    pub fn place_window(&self, task: &ReadyTask) -> usize {
+        self.place(task)
+    }
+
+    fn place(&self, task: &ReadyTask) -> usize {
+        self.model.place(
+            task,
             self.shards.len(),
             &LiveSignals {
                 depths: &self.depths,
                 inflight: self.inflight.as_deref(),
                 health: self.health.as_deref(),
             },
-        );
+        )
+    }
+
+    fn insert_at(&self, mut shard: usize, task: ReadyTask) -> usize {
         // Belt guard: every model filters dead nodes, but a custom model
         // (or a kill racing the verdict) must still not strand work on a
         // shard whose own worker will never pop again. Stealing would
@@ -447,6 +473,25 @@ mod tests {
             c.join().unwrap();
         }
         assert_eq!(popped.load(Ordering::SeqCst), total);
+    }
+
+    #[test]
+    fn push_routed_skips_the_model_but_keeps_the_belt_guard() {
+        // A compiled-window push lands on the precomputed shard even when
+        // the model would have chosen otherwise (locality points at 0).
+        let q = fabric("fifo", 2, "bytes");
+        assert_eq!(q.push_routed(1, rt(1, vec![(100, vec![NodeId(0)])])), 1);
+        assert_eq!(q.pop(NodeId(1)), Some(TaskId(1)));
+        // Dead precomputed shard: the belt guard redirects to a live one.
+        let health = Arc::new(NodeHealth::new(2));
+        let q = fabric("fifo", 2, "bytes").with_health(Arc::clone(&health));
+        health.mark_dead(NodeId(1));
+        assert_eq!(q.push_routed(1, rt(2, vec![])), 0);
+        assert_eq!(q.pop(NodeId(0)), Some(TaskId(2)));
+        // The window-anchor verdict consults the model without enqueueing.
+        let q = fabric("fifo", 2, "bytes");
+        assert_eq!(q.place_window(&rt(3, vec![(100, vec![NodeId(1)])])), 1);
+        assert_eq!(q.queue_len(), 0);
     }
 
     #[test]

@@ -111,6 +111,10 @@ pub struct DataStore {
     misses: AtomicU64,
     spills: AtomicU64,
     spill_bytes: AtomicU64,
+    /// High-water mark of `resident` — the gauge the window compiler's
+    /// aliasing claim is measured against: an AOT-released dying input
+    /// freed before its consumer's output lands keeps the peak flat.
+    peak_resident: AtomicU64,
     /// Cross-node consumptions that ran the codec *synchronously on the
     /// claim path* (the seed behavior). With the async transfer service on,
     /// this stays zero: movers run the codec, claimants get staged bytes.
@@ -128,6 +132,7 @@ impl DataStore {
             misses: AtomicU64::new(0),
             spills: AtomicU64::new(0),
             spill_bytes: AtomicU64::new(0),
+            peak_resident: AtomicU64::new(0),
             sync_transfer_decodes: AtomicU64::new(0),
         }
     }
@@ -179,6 +184,7 @@ impl DataStore {
             }
         }
         inner.resident += bytes;
+        self.peak_resident.fetch_max(inner.resident, Ordering::Relaxed);
 
         let mut victims = Vec::new();
         while inner.resident > self.budget {
@@ -317,6 +323,11 @@ impl DataStore {
 
     pub fn resident_bytes(&self) -> u64 {
         self.inner.lock().unwrap().resident
+    }
+
+    /// High-water mark of resident bytes over the store's lifetime.
+    pub fn peak_resident_bytes(&self) -> u64 {
+        self.peak_resident.load(Ordering::Relaxed)
     }
 
     pub fn len(&self) -> usize {

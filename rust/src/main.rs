@@ -132,11 +132,13 @@ USAGE:
                  [--gc on|off (default on)] [--max-retries N (default 3)]
                  [--chaos task-fail:<p>,node-kill[:<seed>],seed:<n>|none]
                  [--checkpoint none|cold (proactive sole-replica spills)]
+                 [--compile off|window (DAG window compiler: cull/fuse/alias/place)]
   rcompss sim    --app knn|kmeans|linreg --machine shaheen3|marenostrum5
                  [--nodes N] [--workers-per-node W] [--fragments F]
                  [--scheduler fifo|lifo|locality] [--router bytes|cost|roundrobin|adaptive]
                  [--warm on|off (warm-tier transfer staging, default on)]
                  [--fuzz-seed N (seeded permutation of timestamp-tied events)]
+                 [--compile off|window (window-compile the static plan)]
   rcompss dag    --app add|knn|kmeans|linreg [--fragments F] [--out FILE.dot]
   rcompss trace  --app knn|kmeans|linreg --machine shaheen3|marenostrum5
                  [--nodes N] [--workers-per-node W] [--width COLS]
@@ -201,6 +203,11 @@ fn cmd_run(opts: &Opts) -> anyhow::Result<()> {
             .map_err(|e| anyhow::anyhow!("--chaos: {e}"))?;
         config = config.with_chaos(spec);
     }
+    // Overrides the RCOMPSS_COMPILE default; unknown modes error at start.
+    if opts.has("compile") {
+        config = config.with_compile(&opts.get("compile", "off"));
+    }
+    let compile = config.compile.clone();
     let scheduler = config.scheduler.clone();
     let router = config.router.clone();
     let store = config.store.clone();
@@ -216,7 +223,8 @@ fn cmd_run(opts: &Opts) -> anyhow::Result<()> {
     println!(
         "rcompss run: app={app} nodes={nodes} workers/node={workers} fragments={fragments} \
          backend={backend:?} data-plane={} store={store} warm-budget={warm_budget} \
-         scheduler={scheduler} router={router} transfer-threads={transfer_threads} gc={gc}",
+         scheduler={scheduler} router={router} transfer-threads={transfer_threads} gc={gc} \
+         compile={compile}",
         if memory_budget > 0 { "memory" } else { "file" }
     );
     let t0 = std::time::Instant::now();
@@ -311,6 +319,19 @@ fn cmd_run(opts: &Opts) -> anyhow::Result<()> {
             stats.dead_version_bytes,
         );
     }
+    if stats.windows_flushed > 0 {
+        println!(
+            "compiler: {} windows, {} culled, {} fused, {} aot frees, {} alias reuses, \
+             {} placement verdicts, hot peak {}",
+            stats.windows_flushed,
+            stats.window_culled,
+            stats.window_fused,
+            stats.aot_frees,
+            stats.alias_reuses,
+            stats.placement_verdicts,
+            rcompss::util::table::fmt_bytes(stats.hot_peak_bytes as usize),
+        );
+    }
     if stats.nodes_killed > 0
         || stats.nodes_joined > 0
         || stats.lineage_resubmissions > 0
@@ -385,6 +406,12 @@ fn cmd_sim(opts: &Opts) -> anyhow::Result<()> {
     if opts.has("fuzz-seed") {
         engine = engine.with_fuzz_seed(opts.get_usize("fuzz-seed", 0)? as u64);
     }
+    let compile = match opts.get("compile", "off").as_str() {
+        "off" => false,
+        "window" => true,
+        other => anyhow::bail!("--compile expects off|window, got '{other}'"),
+    };
+    engine = engine.with_compile(compile);
     let report = engine.run(plan, &format!("{app}@{}", spec.profile.name))?;
     println!(
         "sim: app={app} machine={} nodes={} workers/node={} scheduler={} router={} warm={}{}",
@@ -408,6 +435,12 @@ fn cmd_sim(opts: &Opts) -> anyhow::Result<()> {
         report.total_transfer_s,
         report.transfer_warm_hits
     );
+    if compile {
+        println!(
+            "  compiler: culled={} fused={} placement-verdicts={}",
+            report.window_culled, report.window_fused, report.placement_verdicts
+        );
+    }
     let mut types: Vec<_> = report.per_type.iter().collect();
     types.sort_by(|a, b| b.1 .1.partial_cmp(&a.1 .1).unwrap());
     for (ty, (count, secs)) in types {

@@ -49,6 +49,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::cluster::ClusterSpec;
+use crate::coordinator::compile::{self, WindowCtx, WindowTask};
 use crate::coordinator::dag::{TaskGraph, TaskId, TaskState};
 use crate::coordinator::feedback::FeedbackStats;
 use crate::coordinator::placement::{placement_by_name, PlacementModel, RoutedReady};
@@ -134,6 +135,14 @@ pub struct SimReport {
     /// ([`SimPlan::result_digest`]): byte-identical across fuzz seeds when
     /// the schedule only reordered legal ties.
     pub result_digest: u64,
+    /// Tasks retired by the window compiler's dead-task cull, counted
+    /// into `tasks_done` (culled work is work no schedule has to run).
+    pub window_culled: usize,
+    /// Fusion links the window compiler applied (member count).
+    pub window_fused: usize,
+    /// Placement-model verdicts issued: one per greedy push, one per
+    /// compiled window — the compiler's N→1 collapse shows up here.
+    pub placement_verdicts: u64,
 }
 
 /// The engine.
@@ -171,6 +180,13 @@ pub struct SimEngine {
     /// servers all advance with `max()`, so a robust plan must still
     /// drain.
     pub fuzz_jitter_s: f64,
+    /// Run the window compiler over the static plan before execution —
+    /// the simulated twin of the live `--compile window` (see
+    /// [`crate::coordinator::compile`]): dead-task culling, sub-threshold
+    /// chain fusion (members run master-dispatch-free on their head's
+    /// shard, the intermediate never publishes), and whole-window
+    /// placement (one model verdict per 64-task window).
+    pub compile: bool,
 }
 
 /// Seeded tie-permutation layer over the event heap. When armed, the heap
@@ -236,6 +252,18 @@ struct RunState<'a> {
     /// its *virtual* transfer timings and task durations, so the model
     /// learns in simulation exactly as it does live.
     feedback: Option<Arc<FeedbackStats>>,
+    /// Window-compiler shard assignments, consumed on first push (the
+    /// sim's `core.placement`); a resubmission after chaos re-routes
+    /// greedily, exactly like the live fabric.
+    placement_plan: HashMap<TaskId, usize>,
+    /// Fused chain members: claimed inline by their head's worker live,
+    /// so the sim charges them no master-dispatch round-trip.
+    fused_member: HashSet<TaskId>,
+    /// Fused intermediates: handed worker-local, never published — no
+    /// write I/O, no read staging, no registry availability.
+    fused_keys: HashSet<DataKey>,
+    /// Placement-model verdicts (greedy pushes + window anchors).
+    placement_verdicts: u64,
 }
 
 /// Dense vector index for a `TaskId` (ids are allocated from 1).
@@ -292,6 +320,7 @@ impl SimEngine {
             node_join: None,
             fuzz_seed: None,
             fuzz_jitter_s: 0.0,
+            compile: false,
         }
     }
 
@@ -352,6 +381,15 @@ impl SimEngine {
     /// have no global clock either). Only meaningful with a fuzz seed.
     pub fn with_fuzz_jitter(mut self, seconds: f64) -> SimEngine {
         self.fuzz_jitter_s = seconds.max(0.0);
+        self
+    }
+
+    /// Arm the window compiler (the live `--compile window` knob): the
+    /// static plan is compiled in 64-task windows before virtual time
+    /// starts — dead tasks culled, sub-threshold chains fused, one
+    /// placement verdict per window.
+    pub fn with_compile(mut self, on: bool) -> SimEngine {
+        self.compile = on;
         self
     }
 
@@ -471,8 +509,115 @@ impl SimEngine {
         } = &mut plan;
         let meta: &HashMap<TaskId, SimTaskMeta> = meta;
         let n_tasks = graph.len();
-        for id in initially_ready.clone() {
-            push_ready(meta, registry, &mut router, id);
+        let init: Vec<TaskId> = initially_ready.clone();
+
+        // ---- window compilation (the live `--compile window` twin) ------
+        // The sim driver "submits" the whole plan before the first wait,
+        // so consumer counts and supersession are exact over the full
+        // read set — the static analogue of the live flush-time
+        // version-table snapshot.
+        let mut placement_plan: HashMap<TaskId, usize> = HashMap::new();
+        let mut fused_member: HashSet<TaskId> = HashSet::new();
+        let mut fused_keys: HashSet<DataKey> = HashSet::new();
+        let mut window_culled = 0usize;
+        let mut window_fused = 0usize;
+        let mut compile_verdicts = 0u64;
+        if self.compile {
+            let mut consumers: HashMap<DataKey, u32> = HashMap::new();
+            let mut out_bytes: HashMap<DataKey, u64> = HashMap::new();
+            for m in meta.values() {
+                for k in &m.inputs {
+                    *consumers.entry(*k).or_insert(0) += 1;
+                }
+                for (k, b) in &m.outputs {
+                    if *b > 0 {
+                        out_bytes.insert(*k, *b);
+                    }
+                }
+            }
+            let order: Vec<TaskId> = graph.tasks_in_order().map(|t| t.id).collect();
+            for chunk in order.chunks(compile::WINDOW_CAP) {
+                let mut tasks: Vec<WindowTask> = Vec::with_capacity(chunk.len());
+                let mut ctx = WindowCtx::default();
+                for id in chunk {
+                    let m = meta.get(id).expect("task meta");
+                    for k in &m.inputs {
+                        ctx.consumers
+                            .insert(*k, consumers.get(k).copied().unwrap_or(0));
+                        if let Some(b) = out_bytes.get(k) {
+                            ctx.bytes.insert(*k, *b);
+                        } else if let Some(info) = registry.info(*k) {
+                            if info.bytes > 0 {
+                                ctx.bytes.insert(*k, info.bytes);
+                            }
+                        }
+                    }
+                    for (k, _) in &m.outputs {
+                        ctx.consumers
+                            .insert(*k, consumers.get(k).copied().unwrap_or(0));
+                        if let Some(b) = out_bytes.get(k) {
+                            ctx.bytes.insert(*k, *b);
+                        }
+                        if registry.latest_key(k.data) != Some(*k) {
+                            ctx.superseded.insert(*k);
+                        }
+                    }
+                    let node = graph.node(*id).expect("window task in graph");
+                    for d in &node.dependents {
+                        if graph.node(*d).map_or(false, |dn| dn.pending_deps == 1) {
+                            ctx.sole_gate.insert((*d, *id));
+                        }
+                    }
+                    tasks.push(WindowTask {
+                        id: *id,
+                        type_name: Arc::clone(&m.ty),
+                        inputs: m.inputs.clone(),
+                        outputs: m.outputs.iter().map(|(k, _)| *k).collect(),
+                    });
+                }
+                let wplan = compile::compile_window(&tasks, &ctx);
+                // No waiters exist in the sim, so every cull commits.
+                for id in &wplan.culled {
+                    graph.cull(*id);
+                }
+                window_culled += wplan.culled.len();
+                for l in &wplan.fused {
+                    fused_member.insert(l.member);
+                    fused_keys.insert(l.key);
+                }
+                window_fused += wplan.fused.len();
+                // One placement verdict anchors the window; units spread
+                // round-robin from it and members ride their head's shard
+                // transitively down the chain.
+                if !wplan.units.is_empty() {
+                    let agg_inputs: Vec<(u64, Vec<NodeId>)> = wplan
+                        .units
+                        .iter()
+                        .flat_map(|u| meta.get(u).expect("unit meta").inputs.iter())
+                        .filter_map(|k| {
+                            registry.info(*k).map(|i| (i.bytes, i.locations))
+                        })
+                        .collect();
+                    let anchor = router.place_window(&ReadyTask {
+                        id: wplan.units[0],
+                        inputs: agg_inputs,
+                        type_name: Arc::clone(
+                            &meta.get(&wplan.units[0]).expect("unit meta").ty,
+                        ),
+                    });
+                    compile_verdicts += 1;
+                    let mut shard = anchor;
+                    for u in &wplan.units {
+                        placement_plan.insert(*u, shard);
+                        let mut h = *u;
+                        while let Some(l) = wplan.fused.iter().find(|l| l.head == h) {
+                            placement_plan.insert(l.member, shard);
+                            h = l.member;
+                        }
+                        shard = (shard + 1) % nodes;
+                    }
+                }
+            }
         }
         let mut st = RunState {
             graph,
@@ -504,7 +649,29 @@ impl SimEngine {
             warm_staged: HashSet::new(),
             warm_hits: 0,
             feedback,
+            placement_plan,
+            fused_member,
+            fused_keys,
+            placement_verdicts: compile_verdicts,
         };
+        if self.compile {
+            // Culls may have promoted downstream tasks: route everything
+            // Ready after compilation, not just the plan's original
+            // frontier.
+            let ready_now: Vec<TaskId> = st
+                .graph
+                .tasks_in_order()
+                .filter(|t| t.state == TaskState::Ready)
+                .map(|t| t.id)
+                .collect();
+            for id in ready_now {
+                push_ready(&mut st, id);
+            }
+        } else {
+            for id in init {
+                push_ready(&mut st, id);
+            }
+        }
         for node in 0..nodes {
             for slot in 0..wpn {
                 let wid = WorkerId {
@@ -554,7 +721,7 @@ impl SimEngine {
                     tasks_done += 1;
                     let newly = st.graph.complete(tid);
                     for t in newly {
-                        push_ready(st.meta, st.registry, &mut st.router, t);
+                        push_ready(&mut st, t);
                     }
                     // Put parked workers onto the fresh tasks.
                     let parked: Vec<WorkerId> = std::mem::take(&mut st.idle);
@@ -610,12 +777,15 @@ impl SimEngine {
         let total_io_s = st.total_io;
         let total_transfer_s = st.total_transfer;
         let transfer_warm_hits = st.warm_hits;
+        let placement_verdicts = st.placement_verdicts;
         let trace = st.tracer.finish(label);
         let dead_version_bytes = plan.registry.table().dead_bytes();
         let result_digest = plan.result_digest();
         Ok(SimReport {
             makespan_s: makespan,
-            tasks_done,
+            // Culled tasks are retired without running: from the
+            // schedule-invariant point of view they are done work.
+            tasks_done: tasks_done + window_culled,
             per_type,
             total_io_s,
             total_transfer_s,
@@ -625,6 +795,9 @@ impl SimEngine {
             fuzz_seed: self.fuzz_seed,
             dead_version_bytes,
             result_digest,
+            window_culled,
+            window_fused,
+            placement_verdicts,
         })
     }
 
@@ -638,13 +811,25 @@ impl SimEngine {
         st.started_at[tix(id)] = now;
         st.running_on[tix(id)] = Some(wid);
         let node = wid.node.0 as usize;
-        // Dispatch goes through the single master: FCFS serial resource.
-        let dispatch_end = now.max(st.master_free) + self.cost.master_dispatch_s;
-        st.master_free = dispatch_end;
+        // Dispatch goes through the single master: FCFS serial resource —
+        // except a fused chain member, which the head's worker claims
+        // inline without a master round-trip (the fusion pass's win).
+        let dispatch_end = if st.fused_member.contains(&id) {
+            now
+        } else {
+            let end = now.max(st.master_free) + self.cost.master_dispatch_s;
+            st.master_free = end;
+            end
+        };
         let mut t = dispatch_end;
 
         let deser_start = t;
         for key in &meta.inputs {
+            if st.fused_keys.contains(key) {
+                // Fused intermediate: already in the worker's hands —
+                // no read, no transfer, no staging.
+                continue;
+            }
             let info = st.registry.info(*key).expect("input info");
             let bytes = info.bytes;
             if st.registry.is_local(*key, wid.node) {
@@ -743,6 +928,11 @@ impl SimEngine {
         let mut t = now;
         let ser_start = t;
         for (key, bytes) in &meta.outputs {
+            if st.fused_keys.contains(key) {
+                // Fused intermediate: handed to the member worker-local,
+                // never serialized, never published.
+                continue;
+            }
             // Client-link write on this node...
             let io = self.cost.io_time(*bytes, profile);
             let start = t.max(st.disk_free[node]);
@@ -799,7 +989,7 @@ impl SimEngine {
             st.running_on[tix(tid)] = None;
             st.started_at[tix(tid)] = f64::NAN;
             st.graph.resubmit(tid);
-            push_ready(st.meta, st.registry, &mut st.router, tid);
+            push_ready(st, tid);
         }
         // Sole-replica versions die with the node: lineage re-execution,
         // exactly the live `recover_lost_versions` walk.
@@ -855,7 +1045,7 @@ impl SimEngine {
             }
             let ready = st.graph.reopen(&reopen);
             for t in ready {
-                push_ready(st.meta, st.registry, &mut st.router, t);
+                push_ready(st, t);
             }
         }
         // Survivors parked with nothing to do may now have work (reopened
@@ -885,27 +1075,38 @@ fn pop_live(st: &mut RunState<'_>, node: NodeId) -> Option<TaskId> {
 }
 
 /// Route one newly-ready task through the shared placement engine, with
-/// the same locality snapshot the live `enqueue_ready` would take.
-fn push_ready(
-    meta: &HashMap<TaskId, SimTaskMeta>,
-    registry: &DataRegistry,
-    router: &mut RoutedReady,
-    id: TaskId,
-) {
-    let meta = meta.get(&id).expect("meta for ready task");
+/// the same locality snapshot the live `enqueue_ready` would take. A
+/// window-compiled shard assignment is consumed here in place of a
+/// greedy model verdict — the live `core.placement` consult.
+fn push_ready(st: &mut RunState<'_>, id: TaskId) {
+    let meta = st.meta.get(&id).expect("meta for ready task");
     let inputs = meta
         .inputs
         .iter()
         .map(|k| {
-            let info = registry.info(*k).expect("input info");
+            if st.fused_keys.contains(k) {
+                // Handed worker-local by the fused head: no bytes to
+                // weigh, no locations to prefer.
+                return (0, Vec::new());
+            }
+            let info = st.registry.info(*k).expect("input info");
             (info.bytes, info.locations)
         })
         .collect();
-    router.push(ReadyTask {
+    let task = ReadyTask {
         id,
         inputs,
         type_name: Arc::clone(&meta.ty),
-    });
+    };
+    match st.placement_plan.remove(&id) {
+        Some(shard) => {
+            st.router.push_routed(shard, task);
+        }
+        None => {
+            st.placement_verdicts += 1;
+            st.router.push(task);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,478 @@
+//! Window-compiler acceptance suite: `--compile window` must be a pure
+//! performance decision (results byte-identical to `--compile off` for
+//! every app, router, and fuzzed schedule) while its four passes — dead-
+//! task culling, AOT lifetimes with hot-buffer aliasing, sub-threshold
+//! chain fusion, and whole-window placement — observably fire on plans
+//! that expose supersession.
+//!
+//! App plans never overwrite a datum (every output is a fresh future), so
+//! cull/fusion/alias are exercised here through synthetic plans with
+//! `Direction::Out` / `Direction::InOut` arguments; the app matrix pins
+//! the equivalence side. Both compile modes are pinned explicitly in
+//! every runtime built here, so the CI `RCOMPSS_COMPILE` env dimension
+//! can never flip a baseline under the comparison.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use rcompss::api::{CompssRuntime, RuntimeConfig, TaskDef};
+use rcompss::apps::backend::Backend;
+use rcompss::apps::kmeans::{self, KmeansConfig};
+use rcompss::apps::knn::{self, KnnConfig};
+use rcompss::apps::linreg::{self, LinregConfig};
+use rcompss::apps::{LiveSink, Shapes};
+use rcompss::cluster::{ClusterSpec, MachineProfile};
+use rcompss::coordinator::access::Direction;
+use rcompss::coordinator::fault::ChaosSpec;
+use rcompss::sim::plans::knn_plan;
+use rcompss::sim::{CostModel, SimEngine};
+use rcompss::value::RValue;
+
+fn chaos_active() -> bool {
+    std::env::var("RCOMPSS_CHAOS").map_or(false, |v| {
+        rcompss::coordinator::fault::ChaosSpec::parse(&v)
+            .map_or(false, |s| s.is_active())
+    })
+}
+
+fn tiny_shapes() -> Shapes {
+    Shapes {
+        knn_train_n: 128,
+        knn_test_block: 32,
+        knn_d: 8,
+        knn_k: 3,
+        knn_classes: 3,
+        km_frag_n: 96,
+        km_d: 4,
+        km_k: 3,
+        lr_frag_n: 64,
+        lr_p: 8,
+        lr_pred_block: 32,
+        ..Shapes::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Equivalence: every app, every router, compiler on vs off.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn knn_is_byte_identical_across_routers_and_compile_modes() {
+    let mut cfg = KnnConfig::small(5);
+    cfg.shapes = tiny_shapes();
+    cfg.train_fragments = 4;
+    cfg.test_blocks = 2;
+    let mut reference: Option<Vec<i32>> = None;
+    for compile in ["off", "window"] {
+        for router in ["bytes", "cost", "roundrobin", "adaptive"] {
+            let rt = CompssRuntime::start(
+                RuntimeConfig::local(2)
+                    .with_nodes(2, 2)
+                    .with_router(router)
+                    .with_compile(compile),
+            )
+            .unwrap();
+            let mut sink = LiveSink::new(
+                &rt,
+                rcompss::apps::backend::knn_task_defs(cfg.shapes, Backend::Native),
+            );
+            let plan = knn::plan_knn(&mut sink, &cfg).unwrap();
+            let classes = sink.fetch(plan.classes[0]).unwrap();
+            let got = classes.as_int().unwrap().to_vec();
+            let stats = rt.stop().unwrap();
+            if compile == "window" {
+                assert!(
+                    stats.windows_flushed > 0,
+                    "compiler armed but no window flushed: {stats:?}"
+                );
+                if !chaos_active() {
+                    // Satellite invariants survive compilation: the board
+                    // identity and a drained version table at quiescence.
+                    assert_eq!(
+                        stats.transfers_prefetched
+                            + stats.transfers_waited
+                            + stats.transfers_dropped
+                            + stats.transfers_failed,
+                        stats.transfers_requested,
+                        "router {router}: {stats:?}"
+                    );
+                    assert_eq!(stats.dead_version_bytes, 0, "router {router}: {stats:?}");
+                }
+            }
+            match &reference {
+                None => reference = Some(got),
+                Some(want) => assert_eq!(
+                    &got, want,
+                    "compile {compile} router {router} changed results"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn kmeans_and_linreg_are_byte_identical_with_compiler_armed() {
+    let shapes = tiny_shapes();
+    // K-means, fixed iterations so both runs build the same DAG.
+    let mut kcfg = KmeansConfig::small(11);
+    kcfg.shapes = shapes;
+    kcfg.fragments = 3;
+    kcfg.iterations = 3;
+    kcfg.tol = None;
+    let kmeans_run = |compile: &str| {
+        let rt = CompssRuntime::start(
+            RuntimeConfig::local(3).with_compile(compile),
+        )
+        .unwrap();
+        let res = kmeans::run_kmeans(&rt, &kcfg, Backend::Native).unwrap();
+        rt.stop().unwrap();
+        res.centroids
+    };
+    let off = kmeans_run("off");
+    let on = kmeans_run("window");
+    assert!(off.all_equal(&on, 0.0), "compiler changed the k-means centroids");
+
+    let mut lcfg = LinregConfig::small(2);
+    lcfg.shapes = shapes;
+    lcfg.fragments = 4;
+    lcfg.pred_blocks = 2;
+    let linreg_run = |compile: &str| {
+        let rt = CompssRuntime::start(
+            RuntimeConfig::local(3).with_compile(compile),
+        )
+        .unwrap();
+        let res = linreg::run_linreg(&rt, &lcfg, Backend::Native).unwrap();
+        rt.stop().unwrap();
+        res
+    };
+    let off = linreg_run("off");
+    let on = linreg_run("window");
+    assert!(off.beta.all_equal(&on.beta, 0.0), "compiler changed the linreg fit");
+    assert_eq!(off.r2.to_bits(), on.r2.to_bits(), "compiler changed r2");
+}
+
+// ---------------------------------------------------------------------------
+// The passes, observably: cull / fusion / alias / whole-window placement.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn compiler_culls_dead_producer_without_executing_it() {
+    // t1 produces d#v1; t2 OUT-writes d (v1 superseded, never read). With
+    // the window still buffered at the first sync, the compiler retires
+    // t1 — its body must never run — and t2 alone produces the result.
+    // Chaos pinned off: the exact counters below assume no retries.
+    let rt = CompssRuntime::start(
+        RuntimeConfig::local(2)
+            .with_compile("window")
+            .with_chaos(ChaosSpec::default()),
+    )
+    .unwrap();
+    let executed = Arc::new(AtomicBool::new(false));
+    let mk = {
+        let executed = Arc::clone(&executed);
+        rt.register_task(TaskDef::new("mk", 0, move |_| {
+            executed.store(true, Ordering::Release);
+            Ok(vec![RValue::scalar(1.0)])
+        }))
+    };
+    let ow = rt.register_task(
+        TaskDef::new("ow", 1, |_| Ok(vec![RValue::scalar(2.0)]))
+            .with_outputs(0)
+            .with_directions(vec![Direction::Out]),
+    );
+    let v1 = rt.submit(&mk, &[]).unwrap();
+    let outs = rt.submit_multi(&ow, &[v1.into()]).unwrap();
+    assert_eq!(outs.len(), 1);
+    let got = rt.wait_on(&outs[0]).unwrap();
+    assert_eq!(got.as_f64(), Some(2.0));
+    let stats = rt.stop().unwrap();
+    assert_eq!(stats.window_culled, 1, "{stats:?}");
+    assert!(
+        !executed.load(Ordering::Acquire),
+        "culled producer must never execute"
+    );
+}
+
+#[test]
+fn wait_on_of_elided_version_names_the_compiler() {
+    // Fetching a version the compiler already retired is a programming
+    // error (the overwrite was submitted before the fetch); the message
+    // must blame the elision, not the version GC.
+    let rt = CompssRuntime::start(
+        RuntimeConfig::local(2)
+            .with_compile("window")
+            .with_chaos(ChaosSpec::default()),
+    )
+    .unwrap();
+    let mk = rt.register_task(TaskDef::new("mk", 0, |_| Ok(vec![RValue::scalar(1.0)])));
+    let ow = rt.register_task(
+        TaskDef::new("ow", 1, |_| Ok(vec![RValue::scalar(2.0)]))
+            .with_outputs(0)
+            .with_directions(vec![Direction::Out]),
+    );
+    let v1 = rt.submit(&mk, &[]).unwrap();
+    let outs = rt.submit_multi(&ow, &[v1.into()]).unwrap();
+    assert_eq!(rt.wait_on(&outs[0]).unwrap().as_f64(), Some(2.0));
+    let err = rt.wait_on(&v1).unwrap_err().to_string();
+    assert!(
+        err.contains("elided by the window compiler"),
+        "wrong attribution: {err}"
+    );
+    rt.stop().unwrap();
+}
+
+#[test]
+fn compiler_fuses_sub_threshold_inout_chain() {
+    // init → bump → bump → bump over one datum: each intermediate version
+    // is superseded with exactly one reader, so the whole chain collapses
+    // into a single dispatch unit (three fusion links) — and the result
+    // is exactly what four separate executions produce. Chaos pinned
+    // off: the exact fusion/task counters assume no retries.
+    let rt = CompssRuntime::start(
+        RuntimeConfig::local(2)
+            .with_compile("window")
+            .with_chaos(ChaosSpec::default()),
+    )
+    .unwrap();
+    let init = rt.register_task(TaskDef::new("init", 0, |_| Ok(vec![RValue::scalar(0.0)])));
+    let bump = rt.register_task(
+        TaskDef::new("bump", 1, |a| {
+            Ok(vec![RValue::scalar(a[0].as_f64().unwrap() + 1.0)])
+        })
+        .with_outputs(0)
+        .with_directions(vec![Direction::InOut]),
+    );
+    let mut latest = rt.submit(&init, &[]).unwrap();
+    for _ in 0..3 {
+        latest = rt.submit_multi(&bump, &[latest.into()]).unwrap()[0];
+    }
+    let v = rt.wait_on(&latest).unwrap();
+    assert_eq!(v.as_f64(), Some(3.0));
+    let stats = rt.stop().unwrap();
+    assert_eq!(stats.window_fused, 3, "{stats:?}");
+    assert_eq!(stats.tasks_done, 4, "fused members still execute: {stats:?}");
+    assert_eq!(stats.window_culled, 0, "{stats:?}");
+}
+
+#[test]
+fn aot_lifetimes_alias_hot_buffers_without_extra_peak() {
+    // A 1.6 MB fragment read by two in-window consumers (two readers
+    // defeat fusion; the size defeats the fusion byte gate anyway) and
+    // then superseded by an OUT write: the compiler proves the last
+    // reader ends the fragment's lifetime and frees it *before* that
+    // reader's equally-sized output is published, so the hot tier's peak
+    // stays at ~one fragment where the uncompiled run holds two. One
+    // worker makes the release order deterministic.
+    const N: usize = 200_000; // 1.6 MB of f64 — above the fusion byte gate
+    let run = |compile: &str| {
+        let rt = CompssRuntime::start(
+            RuntimeConfig::local(1)
+                .with_compile(compile)
+                .with_chaos(ChaosSpec::default()),
+        )
+        .unwrap();
+        let mk = rt.register_task(TaskDef::new("mk", 0, |_| {
+            Ok(vec![RValue::Real(vec![1.0; N])])
+        }));
+        let stage = rt.register_task(TaskDef::new("stage", 1, |a| {
+            Ok(vec![RValue::scalar(a[0].as_real().unwrap().iter().sum())])
+        }));
+        let finish = rt.register_task(TaskDef::new("finish", 2, |a| {
+            let frag = a[0].as_real().unwrap();
+            let scale = a[1].as_f64().unwrap() / frag.len() as f64;
+            Ok(vec![RValue::Real(frag.iter().map(|x| x * scale).collect())])
+        }));
+        let ow = rt.register_task(
+            TaskDef::new("ow", 1, |_| Ok(vec![RValue::scalar(0.0)]))
+                .with_outputs(0)
+                .with_directions(vec![Direction::Out]),
+        );
+        let frag = rt.submit(&mk, &[]).unwrap();
+        let sum = rt.submit(&stage, &[frag.into()]).unwrap();
+        let scaled = rt.submit(&finish, &[frag.into(), sum.into()]).unwrap();
+        rt.submit_multi(&ow, &[frag.into()]).unwrap();
+        let v = rt.wait_on(&scaled).unwrap();
+        assert_eq!(v.as_real().unwrap()[0], 1.0, "compile {compile}");
+        rt.stop().unwrap()
+    };
+    let off = run("off");
+    let on = run("window");
+    assert!(on.aot_frees >= 1, "lifetime pass never freed: {on:?}");
+    assert!(on.alias_reuses >= 1, "freed pool never reused: {on:?}");
+    assert_eq!(on.window_fused, 0, "two readers must defeat fusion: {on:?}");
+    // The uncompiled run holds the dead fragment across the publish of
+    // its equally-sized successor; the compiled run does not.
+    let frag_bytes = (N * 8) as u64;
+    assert!(
+        off.hot_peak_bytes >= 2 * frag_bytes,
+        "off-run peak should hold two fragments: {off:?}"
+    );
+    assert!(
+        on.hot_peak_bytes < 2 * frag_bytes,
+        "aliasing must cap the peak below two fragments: {on:?}"
+    );
+    assert!(on.hot_peak_bytes <= off.hot_peak_bytes, "{on:?} vs {off:?}");
+}
+
+#[test]
+fn whole_window_placement_issues_one_verdict_per_window() {
+    // Eight independent producers: greedy dispatch consults the model
+    // once per task, a compiled window exactly once in total.
+    let run = |compile: &str| {
+        let rt = CompssRuntime::start(
+            RuntimeConfig::local(1)
+                .with_nodes(2, 1)
+                .with_compile(compile)
+                .with_chaos(ChaosSpec::default()),
+        )
+        .unwrap();
+        let mk = rt.register_task(TaskDef::new("mk", 1, |a| {
+            Ok(vec![RValue::scalar(2.0 * a[0].as_f64().unwrap())])
+        }));
+        let outs: Vec<_> = (0..8)
+            .map(|i| rt.submit(&mk, &[(i as f64).into()]).unwrap())
+            .collect();
+        rt.barrier().unwrap();
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(rt.wait_on(o).unwrap().as_f64(), Some(2.0 * i as f64));
+        }
+        rt.stop().unwrap()
+    };
+    let off = run("off");
+    let on = run("window");
+    assert_eq!(off.placement_verdicts, 8, "one greedy verdict per task: {off:?}");
+    assert_eq!(on.placement_verdicts, 1, "one verdict per window: {on:?}");
+    assert_eq!(on.windows_flushed, 1, "{on:?}");
+    assert_eq!(on.tasks_done, 8, "{on:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Fuzzed schedules with the compiler armed: live and simulated planes.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fuzzed_live_schedule_with_compiler_armed_keeps_results_exact() {
+    // The live yield-point harness on top of a compiled 4-node k-means:
+    // widened hazard windows must not let the compiler's AOT death lists
+    // or fused claims race the GC/transfer planes. Chaos pinned off so
+    // the ambient CI matrix cannot change what this seed means.
+    let mut cfg = KmeansConfig::small(11);
+    cfg.shapes = tiny_shapes();
+    cfg.fragments = 4;
+    cfg.iterations = 3;
+    let clean = {
+        let rt = CompssRuntime::start(
+            RuntimeConfig::local(2)
+                .with_nodes(4, 2)
+                .with_router("cost")
+                .with_compile("off")
+                .with_chaos(ChaosSpec::default()),
+        )
+        .unwrap();
+        let res = kmeans::run_kmeans(&rt, &cfg, Backend::Native).unwrap();
+        rt.stop().unwrap();
+        res.centroids
+    };
+    let rt = CompssRuntime::start(
+        RuntimeConfig::local(2)
+            .with_nodes(4, 2)
+            .with_router("cost")
+            .with_compile("window")
+            .with_sched_fuzz(7)
+            .with_chaos(ChaosSpec::default()),
+    )
+    .unwrap();
+    let res = kmeans::run_kmeans(&rt, &cfg, Backend::Native).unwrap();
+    let stats = rt.stop().unwrap();
+    assert!(
+        clean.all_equal(&res.centroids, 0.0),
+        "compiled + fuzzed schedule changed the result"
+    );
+    assert!(stats.windows_flushed > 0, "{stats:?}");
+    assert!(stats.sched_fuzz_perturbations > 0, "{stats:?}");
+    assert_eq!(stats.tasks_failed, 0, "{stats:?}");
+    assert_eq!(stats.dead_version_bytes, 0, "{stats:?}");
+    assert_eq!(
+        stats.transfers_prefetched
+            + stats.transfers_waited
+            + stats.transfers_dropped
+            + stats.transfers_failed,
+        stats.transfers_requested,
+        "{stats:?}"
+    );
+}
+
+fn seeds(lane: u64, n: u64) -> Vec<u64> {
+    let base = std::env::var("RCOMPSS_FUZZ_SEED_BASE")
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .unwrap_or(1);
+    (0..n)
+        .map(|i| base.wrapping_mul(1000).wrapping_add(lane * 100 + i))
+        .collect()
+}
+
+fn cluster(nodes: u32, wpn: u32) -> ClusterSpec {
+    ClusterSpec::new(MachineProfile::shaheen3(), nodes).with_workers_per_node(wpn)
+}
+
+#[test]
+fn sim_fuzz_sweep_with_compiler_matches_uncompiled_digests() {
+    // 64 seeds through the simulated twin, compiler armed, against the
+    // same 64 seeds uncompiled: per-seed the final data-plane digest and
+    // completed-task count must be byte-identical (app plans never
+    // supersede, so the compiler may only re-batch placement — never
+    // change what is computed), and the placement-verdict count must
+    // collapse from one-per-task to one-per-window.
+    let s = seeds(5, 64);
+    let compiled = SimEngine::new(cluster(4, 2), CostModel::default())
+        .with_router("cost")
+        .with_compile(true)
+        .fuzz_sweep(&s, || knn_plan(6, 3, 1), "knn-compiled")
+        .unwrap();
+    let plain = SimEngine::new(cluster(4, 2), CostModel::default())
+        .with_router("cost")
+        .with_compile(false)
+        .fuzz_sweep(&s, || knn_plan(6, 3, 1), "knn-plain")
+        .unwrap();
+    assert_eq!(compiled.len(), 64);
+    for (c, p) in compiled.iter().zip(&plain) {
+        assert_eq!(c.tasks_done, p.tasks_done, "seed {:?}", c.fuzz_seed);
+        assert_eq!(
+            c.result_digest, p.result_digest,
+            "seed {:?}: compilation changed the data plane",
+            c.fuzz_seed
+        );
+        assert!(
+            c.placement_verdicts * 8 <= p.placement_verdicts,
+            "seed {:?}: verdicts did not collapse ({} vs {})",
+            c.fuzz_seed,
+            c.placement_verdicts,
+            p.placement_verdicts
+        );
+        assert_eq!(c.window_culled, 0, "app plans never supersede");
+        assert_eq!(c.window_fused, 0, "app plans never supersede");
+    }
+}
+
+#[test]
+fn sim_compiled_run_reports_window_counters() {
+    // Deterministic single run: the compiled report carries the verdict
+    // collapse; the plan drains to the same task count either way.
+    let run = |compile: bool| {
+        SimEngine::new(cluster(3, 2), CostModel::default())
+            .with_compile(compile)
+            .run(knn_plan(8, 4, 1).unwrap(), "knn-compile")
+            .unwrap()
+    };
+    let off = run(false);
+    let on = run(true);
+    assert_eq!(on.tasks_done, off.tasks_done);
+    assert_eq!(on.result_digest, off.result_digest);
+    assert!(
+        on.placement_verdicts < off.placement_verdicts,
+        "{} !< {}",
+        on.placement_verdicts,
+        off.placement_verdicts
+    );
+}
