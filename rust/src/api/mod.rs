@@ -24,6 +24,13 @@ use crate::value::RValue;
 
 pub use crate::coordinator::runtime::RuntimeStats;
 
+/// Body of `rcompss worker --connect <addr>`: register with a coordinator
+/// listening on `addr` (preferring node slot `preferred` when given) and
+/// serve a `budget`-bounded replica cache until the coordinator shuts the
+/// cluster down. Facade re-export of the crate-internal TCP transport's
+/// worker loop — see `ARCHITECTURE.md` § Transport.
+pub use crate::coordinator::transport::tcp::run_worker as run_tcp_worker;
+
 /// Runtime configuration (re-exported coordinator config with API-level
 /// constructors).
 pub type RuntimeConfig = CoordinatorConfig;

@@ -222,6 +222,16 @@ impl ClusterSpec {
     pub fn total_workers(&self) -> u32 {
         self.nodes * self.workers_per_node
     }
+
+    /// Join commands for a TCP-transport run: one `rcompss worker` line per
+    /// non-coordinator node slot (node 0 is the coordinator itself). The
+    /// operator runs each line on the machine that should own that slot,
+    /// substituting a routable address for `listen_addr` where needed.
+    pub fn worker_commands(&self, listen_addr: &str) -> Vec<String> {
+        (1..self.nodes)
+            .map(|n| format!("rcompss worker --connect {listen_addr} --node {n}"))
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -260,6 +270,22 @@ mod tests {
     fn cluster_spec_math() {
         let spec = ClusterSpec::new(MachineProfile::shaheen3(), 4).with_workers_per_node(32);
         assert_eq!(spec.total_workers(), 128);
+    }
+
+    #[test]
+    fn worker_commands_skip_the_coordinator_slot() {
+        let spec = ClusterSpec::new(MachineProfile::localbox(), 3);
+        let cmds = spec.worker_commands("10.0.0.1:7077");
+        assert_eq!(
+            cmds,
+            vec![
+                "rcompss worker --connect 10.0.0.1:7077 --node 1".to_string(),
+                "rcompss worker --connect 10.0.0.1:7077 --node 2".to_string(),
+            ]
+        );
+        assert!(ClusterSpec::new(MachineProfile::localbox(), 1)
+            .worker_commands("127.0.0.1:0")
+            .is_empty());
     }
 
     #[test]

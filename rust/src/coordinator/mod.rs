@@ -41,6 +41,12 @@
 //! * [`schedfuzz`] — deterministic schedule-fuzzing yield points at the
 //!   concurrency planes' hazard windows (armed by `RCOMPSS_SCHED_FUZZ` or
 //!   `with_sched_fuzz`; a no-op branch otherwise);
+//! * `transport` (crate-internal) — the pluggable replica-shipping
+//!   plane: the mover loop's staging requests resolve to
+//!   `Transport::fetch`, implemented by the in-process emulation
+//!   (default) or by real `rcompss worker` processes over TCP
+//!   (`--transport tcp`), with the warm tier's encoded blobs going on
+//!   the wire verbatim;
 //! * [`runtime`] — the orchestrator gluing the above behind the API.
 //!
 //! The DAG, registry, and scheduler policies are *pure* (no threads, no
@@ -66,6 +72,7 @@
 //! | location (where each `dXvY` lives) | [`registry::VersionTable`]: 16 `RwLock` shards | workers on every claim/publish, lock-free of control |
 //! | values (the bytes themselves) | [`store::TieredStore`]: hot `Arc<RValue>` cache + warm `Arc<[u8]>` blob cache + cold spill files | producers put hot, consumers get zero-copy handles, demotion walks the tiers |
 //! | movement (cross-node staging) | [`transfer::TransferService`]: per-node request queues + mover threads | routing prefetches, movers stage, claimants park |
+//! | shipping (how staged bytes move) | `transport::Transport`: in-process staging or TCP worker sockets | movers call `fetch`; kill/rejoin close/reopen peers |
 //!
 //! Lock ordering: the control lock may be held while touching the leaf
 //! domains (dispatch shards, table shards, store, transfer board); leaf
@@ -115,6 +122,10 @@ pub mod schedfuzz;
 pub mod scheduler;
 pub mod store;
 pub mod transfer;
+// Crate-internal: the Transport trait's `fetch` signature names the
+// crate-private `Shared` handle. The CLI reaches the worker entry point
+// through the `api::run_tcp_worker` facade re-export.
+pub(crate) mod transport;
 
 pub use access::Direction;
 pub use compile::{compile_window, WindowCtx, WindowPlan, WindowTask};

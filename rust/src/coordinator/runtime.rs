@@ -41,6 +41,7 @@ use crate::coordinator::schedfuzz::{yield_point, FuzzController, FuzzSite};
 use crate::coordinator::scheduler::{ReadyTask, ShardedReady};
 use crate::coordinator::store::{self, SpillPolicy, TieredStore};
 use crate::coordinator::transfer::{self, TransferService};
+use crate::coordinator::transport::{tcp::TcpTransport, InProcTransport, Transport};
 use crate::serialization::{codec_by_name, Codec};
 use crate::trace::{EventKind, Tracer, WorkerId};
 use crate::value::RValue;
@@ -187,6 +188,19 @@ pub struct CoordinatorConfig {
     /// before any task reaches the ready queues. See
     /// [`crate::coordinator::compile`].
     pub compile: String,
+    /// Replica-shipping transport (`--transport` / `RCOMPSS_TRANSPORT`):
+    /// `"inproc"` (default — emulated nodes share one address space) or
+    /// `"tcp"` — worker processes serve replicas over sockets. Without
+    /// [`CoordinatorConfig::listen`] the TCP transport self-hosts a
+    /// loopback cluster (worker threads over real sockets), which is how
+    /// the unmodified test suites pin transport invariance. See the
+    /// crate-internal `coordinator::transport` module and
+    /// `ARCHITECTURE.md` § Transport.
+    pub transport: String,
+    /// TCP-only (`--listen <addr>`): accept external
+    /// `rcompss worker --connect` registrations on this address instead
+    /// of self-hosting loopback workers.
+    pub listen: Option<String>,
 }
 
 /// Default byte budget of the in-memory data plane — the single source of
@@ -242,6 +256,8 @@ impl CoordinatorConfig {
             checkpoint: std::env::var("RCOMPSS_CHECKPOINT").unwrap_or_else(|_| "none".into()),
             sched_fuzz: FuzzController::seed_from_env(),
             compile: std::env::var("RCOMPSS_COMPILE").unwrap_or_else(|_| "off".into()),
+            transport: std::env::var("RCOMPSS_TRANSPORT").unwrap_or_else(|_| "inproc".into()),
+            listen: None,
         }
     }
 
@@ -358,6 +374,20 @@ impl CoordinatorConfig {
     /// [`Coordinator::start`].
     pub fn with_compile(mut self, mode: &str) -> Self {
         self.compile = mode.into();
+        self
+    }
+
+    /// Replica-shipping transport: `"inproc"` | `"tcp"`. Validated at
+    /// [`Coordinator::start`].
+    pub fn with_transport(mut self, name: &str) -> Self {
+        self.transport = name.into();
+        self
+    }
+
+    /// TCP transport only: accept external worker registrations on
+    /// `addr` instead of self-hosting a loopback cluster.
+    pub fn with_listen(mut self, addr: &str) -> Self {
+        self.listen = Some(addr.into());
         self
     }
 }
@@ -577,6 +607,10 @@ pub(crate) struct Shared {
     /// Schedule-fuzz controller (shared with the dispatch fabric and the
     /// transfer board); `None` in production.
     pub fuzz: Option<Arc<FuzzController>>,
+    /// Replica-shipping transport the movers fetch through — in-process
+    /// staging (the emulated cluster) or TCP worker processes. Everything
+    /// above [`Transport::fetch`] is transport-agnostic.
+    pub transport: Arc<dyn Transport>,
     /// Window-compiler arm flag (`--compile window`).
     pub compile_window: bool,
     /// Window-compiler accounting (the `RuntimeStats` twins).
@@ -931,6 +965,9 @@ pub(crate) fn kill_node_now(shared: &Shared, node: NodeId) -> bool {
     // Fail in-flight and queued transfers toward/from the dead node fast —
     // claimants get an immediate error instead of a 3-attempt grind.
     shared.transfers.fail_node(node);
+    // Close the transport's per-node resources (a TCP peer socket) so
+    // in-flight exchanges fail fast instead of timing out.
+    shared.transport.on_node_down(node);
     let report = shared.table.drop_node(node);
     {
         let mut core = shared.core.lock().unwrap();
@@ -956,6 +993,10 @@ pub(crate) fn rejoin_node(shared: &Shared, node: NodeId) -> bool {
     // races the revive below.
     yield_point(&shared.fuzz, FuzzSite::NodeJoin);
     shared.transfers.revive_node(node);
+    // Re-open the transport's per-node resources (self-hosted TCP spawns
+    // a fresh loopback worker; external mode waits for an operator to
+    // restart `rcompss worker`).
+    shared.transport.on_node_up(node);
     {
         let mut core = shared.core.lock().unwrap();
         core.stats.nodes_joined += 1;
@@ -1151,6 +1192,50 @@ impl Coordinator {
                 config.chaos.seed,
             ));
         }
+        // The replica-shipping transport. TCP without `--listen`
+        // self-hosts a loopback cluster (worker threads over real
+        // sockets) so unmodified suites run over TCP; with `--listen` it
+        // blocks here until every external worker registers.
+        let transport: Arc<dyn Transport> = match config.transport.as_str() {
+            "inproc" => {
+                if config.listen.is_some() {
+                    bail!("--listen requires the tcp transport (got transport 'inproc')");
+                }
+                Arc::new(InProcTransport)
+            }
+            "tcp" => {
+                let self_host = config.listen.is_none();
+                let budget = if config.warm_budget > 0 {
+                    config.warm_budget
+                } else {
+                    DEFAULT_WARM_BUDGET
+                };
+                let t =
+                    TcpTransport::bind(config.nodes, config.listen.as_deref(), self_host, budget)?;
+                if config.nodes > 1 {
+                    if !self_host {
+                        println!(
+                            "rcompss: waiting for {} worker(s) on {} — join with: \
+                             rcompss worker --connect {}",
+                            config.nodes - 1,
+                            t.listen_addr(),
+                            t.listen_addr()
+                        );
+                    }
+                    let deadline = if self_host {
+                        std::time::Duration::from_secs(30)
+                    } else {
+                        std::time::Duration::from_secs(300)
+                    };
+                    t.wait_registered(deadline)?;
+                }
+                t
+            }
+            other => bail!(
+                "unknown transport '{other}' (inproc|tcp; set via --transport, \
+                 with_transport, or the RCOMPSS_TRANSPORT default override)"
+            ),
+        };
         let chaos_victim = if config.chaos.node_kill && config.nodes > 1 {
             let mut rng = crate::util::prng::Pcg64::new(config.chaos.seed, 0xD1E);
             config.injector.arm_node_kill(3 + rng.below(20));
@@ -1211,6 +1296,7 @@ impl Coordinator {
             checkpoints_written: AtomicU64::new(0),
             checkpoint_bytes: AtomicU64::new(0),
             fuzz,
+            transport,
             compile_window,
             windows_flushed: AtomicU64::new(0),
             window_culled: AtomicU64::new(0),
@@ -1685,6 +1771,9 @@ impl Coordinator {
         for m in self.movers {
             let _ = m.join();
         }
+        // Tear the transport down only after the movers are gone — no
+        // fetch can be in flight on a closed socket.
+        self.shared.transport.shutdown();
         let mut stats = self.shared.core.lock().unwrap().stats.clone();
         Self::fill_shared_stats(&self.shared, &mut stats);
         Ok(stats)

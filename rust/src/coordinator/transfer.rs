@@ -47,7 +47,6 @@ use crate::coordinator::placement::InflightSource;
 use crate::coordinator::registry::{DataKey, NodeId};
 use crate::coordinator::runtime::Shared;
 use crate::coordinator::schedfuzz::{yield_point, FuzzController, FuzzSite};
-use crate::coordinator::store::{self, cold};
 
 /// Total attempts allowed per `(version, node)` pair. A `Failed` entry
 /// with fewer failures is a *retryable* tombstone: the next
@@ -667,7 +666,9 @@ pub(crate) fn mover_loop(shared: Arc<Shared>, home: NodeId) {
 /// Move one version to `node`: cross the serialization boundary on the
 /// mover — not the claimant — decode, cache the replica zero-copy for the
 /// destination's consumers, and publish the location. Returns the
-/// serialized byte count.
+/// serialized byte count. The actual byte movement is delegated to the
+/// configured [`Transport`](super::transport::Transport) — in-process
+/// staging or a socket hop; every guard here is transport-agnostic.
 ///
 /// A version the GC reclaimed mid-transfer is *dropped* (`Ok(None)`), not
 /// failed: the refcount protocol keeps any version with a live (or
@@ -700,62 +701,21 @@ fn perform_transfer(
     if shared.injector.should_fail("__transfer__") {
         anyhow::bail!("injected transfer failure for {key} -> node {}", node.0);
     }
-    match stage_replica(shared, key, node) {
+    // Source hint for socket transports: the first live replica holder
+    // other than the destination. The in-process transport ignores it
+    // (every node shares one address space).
+    let from = shared.table.info(key).and_then(|info| {
+        info.locations
+            .iter()
+            .copied()
+            .find(|n| *n != node && shared.health.is_alive(*n))
+    });
+    match shared.transport.fetch(shared, key, from, node) {
         Ok(staged) => Ok(staged),
         // Collected while we were encoding/decoding it: benign.
         Err(_) if shared.table.is_collected(key) => Ok(None),
         Err(e) => Err(e),
     }
-}
-
-/// Stage one replica of `key` on `node`, warm-first: the mover ships the
-/// warm tier's serialized blob — built lazily by the first transfer, so an
-/// N-node fan-out of a memory-resident version runs `codec.encode` exactly
-/// once and touches no file — and decodes it into the destination's hot
-/// tier. Only when the warm tier is off (or the bytes were transiently
-/// unreachable) does the old file-staging path run: publish a spill file,
-/// read it back, decode (`ensure_file` is now the cold-tier fallback).
-fn stage_replica(shared: &Shared, key: DataKey, node: NodeId) -> anyhow::Result<Option<u64>> {
-    if let Some(blob) = store::stage_blob(shared, key)? {
-        let nbytes = blob.len() as u64;
-        let value = Arc::new(shared.codec.decode(&blob)?);
-        // Per-tier residency: the replica entry claims a cold file only
-        // when one was actually published for this version — the GC must
-        // only ever delete files that exist.
-        let has_file = shared.table.path_of(key).is_some();
-        let victims = shared.store.hot().put(key, value, has_file);
-        store::demote_victims(shared, victims);
-        if shared.table.is_collected(key) {
-            // The GC ran between our decode and this publish: whichever
-            // removal runs last clears the replica; never publish the
-            // location of a reclaimed version.
-            shared.store.discard_resident(key);
-            return Ok(None);
-        }
-        if !shared.health.is_alive(node) {
-            // The destination died mid-stage: never advertise a replica on
-            // a dead node. The hot entry itself stays — in the emulated
-            // single-address-space store it still serves other nodes.
-            return Ok(None);
-        }
-        shared.table.add_location(key, node);
-        return Ok(Some(nbytes));
-    }
-    let path = cold::ensure_file(shared, key)?;
-    let nbytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
-    shared.store.cold().note_read();
-    let value = Arc::new(shared.codec.read_file(&path)?);
-    let victims = shared.store.hot().put(key, value, true);
-    store::demote_victims(shared, victims);
-    if shared.table.is_collected(key) {
-        shared.store.discard_resident(key);
-        return Ok(None);
-    }
-    if !shared.health.is_alive(node) {
-        return Ok(None);
-    }
-    shared.table.add_location(key, node);
-    Ok(Some(nbytes))
 }
 
 #[cfg(test)]

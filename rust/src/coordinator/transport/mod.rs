@@ -1,0 +1,148 @@
+//! Pluggable replica-shipping plane — *how* bytes reach a destination
+//! node, factored out of *when* they move.
+//!
+//! The [`TransferService`](super::transfer::TransferService) decides which
+//! `(version, node)` pairs to stage and in what order; its mover threads
+//! then call [`Transport::fetch`] to actually move the bytes. Everything
+//! above that call — placement verdicts, feedback EWMAs, the version GC,
+//! chaos kill/join recovery, the sched-fuzz yield points, the window
+//! compiler — is transport-agnostic and must behave identically no matter
+//! which implementation is underneath:
+//!
+//! * [`InProcTransport`] — the emulated cluster: nodes share one address
+//!   space, so staging a replica is a warm-blob (or cold-file) round-trip
+//!   into the shared hot tier. The test-harness default.
+//! * [`TcpTransport`](tcp::TcpTransport) — real `rcompss worker` processes
+//!   registered over sockets: the same warm blob additionally ships to the
+//!   destination worker as a length-framed [`Put`](
+//!   crate::serialization::wire::FrameKind) frame, verbatim — zero
+//!   re-encode, zero coordinator-side file I/O for memory-resident values.
+//!
+//! The invariance is pinned by running the unmodified integration and
+//! property suites against a loopback-TCP cluster
+//! (`RCOMPSS_TRANSPORT=tcp`, CI's `distributed-matrix` job).
+
+pub mod tcp;
+
+use std::sync::Arc;
+
+use crate::coordinator::registry::{DataKey, NodeId};
+use crate::coordinator::runtime::Shared;
+use crate::coordinator::store::{self, cold};
+use crate::value::RValue;
+
+/// One way of moving a replica of `key` onto `to`.
+///
+/// `fetch` runs on a mover thread with **no locks held**; it may block on
+/// I/O, sleep for backoff, and call back into the store/table/health
+/// planes. The return contract matches the old `stage_replica`:
+/// `Ok(Some(nbytes))` — replica staged and location published;
+/// `Ok(None)` — transfer *dropped* without moving bytes (version
+/// collected, destination dead, or destination unreachable after the
+/// bounded reconnect budget); `Err` — a retryable failure, counted and
+/// re-queued by the transfer board's attempt budget.
+pub trait Transport: Send + Sync {
+    /// Short name for banners and stats (`"inproc"` | `"tcp"`).
+    fn name(&self) -> &'static str;
+
+    /// Move one replica. `from` is a hint — the first live node already
+    /// holding the version — which socket transports use to source the
+    /// bytes when the coordinator's own tiers no longer hold them.
+    fn fetch(
+        &self,
+        shared: &Shared,
+        key: DataKey,
+        from: Option<NodeId>,
+        to: NodeId,
+    ) -> anyhow::Result<Option<u64>>;
+
+    /// A node was declared dead (`kill_node` or a transport-detected
+    /// drop). Close/poison any per-node resources.
+    fn on_node_down(&self, _node: NodeId) {}
+
+    /// A node rejoined (`add_node`). Re-open per-node resources.
+    fn on_node_up(&self, _node: NodeId) {}
+
+    /// Orderly teardown at `Coordinator::stop` (movers already joined).
+    fn shutdown(&self) {}
+}
+
+/// Publish a decoded replica into the hot tier and advertise the location
+/// — the tail every transport shares. Returns `false` when the publish
+/// was abandoned (version collected mid-stage, or destination died):
+/// the transfer is then *dropped*, not failed.
+pub(crate) fn publish_replica(
+    shared: &Shared,
+    key: DataKey,
+    node: NodeId,
+    value: Arc<RValue>,
+    has_file: bool,
+) -> bool {
+    let victims = shared.store.hot().put(key, value, has_file);
+    store::demote_victims(shared, victims);
+    if shared.table.is_collected(key) {
+        // The GC ran between the decode and this publish: whichever
+        // removal runs last clears the replica; never publish the
+        // location of a reclaimed version.
+        shared.store.discard_resident(key);
+        return false;
+    }
+    if !shared.health.is_alive(node) {
+        // The destination died mid-stage: never advertise a replica on
+        // a dead node. The hot entry itself stays — in the emulated
+        // single-address-space store it still serves other nodes.
+        return false;
+    }
+    shared.table.add_location(key, node);
+    true
+}
+
+/// The emulated cluster's transport: nodes are threads sharing one
+/// address space, so "shipping" a replica is staging it in the shared
+/// tiered store. This is the pre-refactor `stage_replica` verbatim — the
+/// extraction is behavior-identical by construction and stays the
+/// default so every existing suite keeps exercising it.
+pub struct InProcTransport;
+
+impl Transport for InProcTransport {
+    fn name(&self) -> &'static str {
+        "inproc"
+    }
+
+    /// Stage one replica of `key` on `to`, warm-first: ship the warm
+    /// tier's serialized blob — built lazily by the first transfer, so an
+    /// N-node fan-out of a memory-resident version runs `codec.encode`
+    /// exactly once and touches no file — and decode it into the
+    /// destination's hot tier. Only when the warm tier is off (or the
+    /// bytes were transiently unreachable) does the old file-staging path
+    /// run: publish a spill file, read it back, decode (`ensure_file` is
+    /// the cold-tier fallback).
+    fn fetch(
+        &self,
+        shared: &Shared,
+        key: DataKey,
+        _from: Option<NodeId>,
+        to: NodeId,
+    ) -> anyhow::Result<Option<u64>> {
+        if let Some(blob) = store::stage_blob(shared, key)? {
+            let nbytes = blob.len() as u64;
+            let value = Arc::new(shared.codec.decode(&blob)?);
+            // Per-tier residency: the replica entry claims a cold file
+            // only when one was actually published for this version — the
+            // GC must only ever delete files that exist.
+            let has_file = shared.table.path_of(key).is_some();
+            if !publish_replica(shared, key, to, value, has_file) {
+                return Ok(None);
+            }
+            return Ok(Some(nbytes));
+        }
+        let path = cold::ensure_file(shared, key)?;
+        let nbytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        shared.store.cold().note_read();
+        let value = Arc::new(shared.codec.read_file(&path)?);
+        if !publish_replica(shared, key, to, value, true) {
+            return Ok(None);
+        }
+        Ok(Some(nbytes))
+    }
+}

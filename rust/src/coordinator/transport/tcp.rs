@@ -1,0 +1,652 @@
+//! TCP transport — real worker processes behind the [`Transport`] trait.
+//!
+//! Topology: one coordinator owns the DAG, the scheduler, and the tiered
+//! store; `rcompss worker --connect <addr>` processes register over TCP
+//! and serve as **replica stores** — each holds a budget-bounded cache of
+//! the serialized blobs shipped to it, exactly the bytes a real
+//! distributed claim would read. Node 0 is coordinator-resident (no
+//! socket); nodes `1..n` map to registered workers.
+//!
+//! A staging request becomes, on the wire (framing:
+//! [`crate::serialization::wire`], fixed little-endian header, payload =
+//! the warm tier's already-encoded `Arc<[u8]>` blob **verbatim** — zero
+//! re-encode):
+//!
+//! ```text
+//! coordinator                                worker (node n)
+//!     | Put  { key, blob }  ────────────────────▶ |  cache.insert
+//!     | ◀────────────────────────────── PutOk { } |
+//! ```
+//!
+//! with `Get`/`Blob`/`NotFound` as the reverse path (the coordinator
+//! pulling a blob back from a worker's cache — the last-resort source
+//! when its own tiers lost the bytes), and `Hello`/`Assign` as the
+//! registration handshake.
+//!
+//! Failure mapping: a dead socket is retried with the transfer board's
+//! own deterministic `retry_backoff` schedule; once the attempt budget is
+//! exhausted the node is routed through [`kill_node_now`] — the same
+//! poisoning path as `kill_node` — so a dropped worker looks exactly
+//! like a chaos node-kill to placement, GC, and lineage recovery.
+//!
+//! Two bootstrap modes:
+//! * **self-hosted** (`RCOMPSS_TRANSPORT=tcp`, no `--listen`): the
+//!   coordinator binds a loopback listener and spawns one in-process
+//!   worker *thread* per emulated node over real sockets — the whole
+//!   unmodified test suite runs over TCP in one process. This is the
+//!   invariance pin.
+//! * **external** (`--listen <addr>`): the coordinator waits for
+//!   `rcompss worker --connect` processes to register before starting.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::{publish_replica, Transport};
+use crate::coordinator::registry::{DataId, DataKey, NodeId};
+use crate::coordinator::runtime::{kill_node_now, Shared};
+use crate::coordinator::store::{self, cold};
+use crate::coordinator::transfer::retry_backoff;
+use crate::serialization::wire::{read_frame, write_frame, Frame, FrameKind};
+
+/// Wire size of a `DataKey`: `data:u64(le) version:u32(le)`.
+const KEY_BYTES: usize = 12;
+
+/// `Hello` payload meaning "any free slot".
+const ANY_NODE: u32 = u32::MAX;
+
+/// Per-request reply timeout on coordinator-side sockets: a worker that
+/// stops answering is indistinguishable from a dead one and is treated as
+/// such (retry → poison).
+const REPLY_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Attempts per shipped replica before the destination is declared dead —
+/// mirrors the transfer board's own `MAX_TRANSFER_ATTEMPTS`.
+const SHIP_ATTEMPTS: u32 = 3;
+
+/// How long one ship attempt waits for an empty peer slot to (re)register
+/// before the attempt counts as failed — covers the self-host rejoin race
+/// (worker thread spawned but not yet through the handshake).
+const SLOT_WAIT: Duration = Duration::from_millis(500);
+
+fn encode_key(key: DataKey) -> [u8; KEY_BYTES] {
+    let mut out = [0u8; KEY_BYTES];
+    out[..8].copy_from_slice(&key.data.0.to_le_bytes());
+    out[8..].copy_from_slice(&key.version.to_le_bytes());
+    out
+}
+
+fn decode_key(payload: &[u8]) -> Result<DataKey> {
+    if payload.len() < KEY_BYTES {
+        bail!("key payload too short: {} bytes", payload.len());
+    }
+    Ok(DataKey {
+        data: DataId(u64::from_le_bytes(payload[..8].try_into().unwrap())),
+        version: u32::from_le_bytes(payload[8..KEY_BYTES].try_into().unwrap()),
+    })
+}
+
+/// The worker-side replica store: byte-budgeted FIFO of serialized blobs.
+/// Eviction is silent — the coordinator treats `NotFound` as a cache miss
+/// and falls back to its own tiers (which still hold every live version's
+/// bytes or lineage).
+struct BlobCache {
+    budget: u64,
+    used: u64,
+    order: VecDeque<DataKey>,
+    blobs: HashMap<DataKey, Vec<u8>>,
+}
+
+impl BlobCache {
+    fn new(budget: u64) -> BlobCache {
+        BlobCache {
+            budget: budget.max(1),
+            used: 0,
+            order: VecDeque::new(),
+            blobs: HashMap::new(),
+        }
+    }
+
+    fn insert(&mut self, key: DataKey, blob: Vec<u8>) {
+        if let Some(old) = self.blobs.remove(&key) {
+            self.used -= old.len() as u64;
+            self.order.retain(|k| *k != key);
+        }
+        self.used += blob.len() as u64;
+        self.order.push_back(key);
+        self.blobs.insert(key, blob);
+        while self.used > self.budget && self.order.len() > 1 {
+            if let Some(victim) = self.order.pop_front() {
+                if let Some(b) = self.blobs.remove(&victim) {
+                    self.used -= b.len() as u64;
+                }
+            }
+        }
+    }
+
+    fn get(&self, key: DataKey) -> Option<&Vec<u8>> {
+        self.blobs.get(&key)
+    }
+}
+
+/// See the module docs. Constructed by `Coordinator::start` via
+/// [`TcpTransport::bind`] + [`TcpTransport::wait_registered`].
+pub struct TcpTransport {
+    nodes: u32,
+    /// Slot per node id; slot 0 (coordinator-resident) stays `None`. The
+    /// mutex is held across one request/reply exchange, serializing the
+    /// movers' use of each worker's socket.
+    peers: Vec<Mutex<Option<TcpStream>>>,
+    listen_addr: SocketAddr,
+    /// Self-hosted loopback workers (threads) vs. external processes.
+    self_host: bool,
+    worker_budget: u64,
+    shutting_down: AtomicBool,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl TcpTransport {
+    /// Bind the registration listener and start the acceptor (plus the
+    /// loopback worker threads in self-host mode). Non-blocking: pair
+    /// with [`TcpTransport::wait_registered`] before serving traffic.
+    pub fn bind(
+        nodes: u32,
+        listen: Option<&str>,
+        self_host: bool,
+        worker_budget: u64,
+    ) -> Result<Arc<TcpTransport>> {
+        let addr = listen.unwrap_or("127.0.0.1:0");
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("tcp transport: cannot listen on {addr}"))?;
+        let listen_addr = listener.local_addr()?;
+        let t = Arc::new(TcpTransport {
+            nodes: nodes.max(1),
+            peers: (0..nodes.max(1)).map(|_| Mutex::new(None)).collect(),
+            listen_addr,
+            self_host,
+            worker_budget,
+            shutting_down: AtomicBool::new(false),
+            threads: Mutex::new(Vec::new()),
+        });
+        let mut threads = t.threads.lock().unwrap();
+        let acceptor = Arc::clone(&t);
+        threads.push(
+            std::thread::Builder::new()
+                .name("rcompss-accept".into())
+                .spawn(move || acceptor.accept_loop(listener))
+                .expect("spawn acceptor"),
+        );
+        if self_host {
+            for n in 1..nodes.max(1) {
+                threads.push(spawn_loopback_worker(listen_addr, n, worker_budget));
+            }
+        }
+        drop(threads);
+        Ok(t)
+    }
+
+    /// The address workers connect to (the ephemeral port in self-host
+    /// mode, the `--listen` address otherwise).
+    pub fn listen_addr(&self) -> SocketAddr {
+        self.listen_addr
+    }
+
+    /// Block until every slot `1..nodes` holds a registered worker, or
+    /// fail after `timeout` naming the missing slots.
+    pub fn wait_registered(&self, timeout: Duration) -> Result<()> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let missing: Vec<u32> = (1..self.nodes)
+                .filter(|n| self.peers[*n as usize].lock().unwrap().is_none())
+                .collect();
+            if missing.is_empty() {
+                return Ok(());
+            }
+            if Instant::now() >= deadline {
+                bail!(
+                    "tcp transport: nodes {missing:?} never registered on {} \
+                     (start them with: rcompss worker --connect {})",
+                    self.listen_addr,
+                    self.listen_addr
+                );
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    /// Registration loop: accept, handshake (`Hello` → `Assign`), park
+    /// the stream in its node slot. One bad handshake never kills the
+    /// acceptor; shutdown is signalled by the flag plus a dummy connect.
+    fn accept_loop(self: Arc<Self>, listener: TcpListener) {
+        for stream in listener.incoming() {
+            if self.shutting_down.load(Ordering::SeqCst) {
+                return;
+            }
+            let Ok(mut stream) = stream else { continue };
+            let _ = stream.set_nodelay(true);
+            // The handshake is bounded so a connect-and-stall client
+            // cannot wedge registration forever.
+            let _ = stream.set_read_timeout(Some(REPLY_TIMEOUT));
+            let hello = match read_frame(&mut stream) {
+                Ok(Frame {
+                    kind: FrameKind::Hello,
+                    payload,
+                }) if payload.len() >= 4 => {
+                    u32::from_le_bytes(payload[..4].try_into().unwrap())
+                }
+                _ => continue,
+            };
+            let assigned = self.assign_slot(hello, &stream);
+            match assigned {
+                Some(node) => {
+                    let _ = stream.set_read_timeout(Some(REPLY_TIMEOUT));
+                    if write_frame(&mut stream, FrameKind::Assign, &node.to_le_bytes()).is_err() {
+                        *self.peers[node as usize].lock().unwrap() = None;
+                    }
+                }
+                None => {
+                    let _ = write_frame(
+                        &mut stream,
+                        FrameKind::Error,
+                        b"no free node slot (cluster full)",
+                    );
+                }
+            }
+        }
+    }
+
+    /// Pick the slot for a registering worker: its preferred node if that
+    /// slot is free, else the lowest free slot. Stores the stream.
+    fn assign_slot(&self, preferred: u32, stream: &TcpStream) -> Option<u32> {
+        let candidates: Vec<u32> = if preferred != ANY_NODE {
+            std::iter::once(preferred)
+                .chain((1..self.nodes).filter(|n| *n != preferred))
+                .collect()
+        } else {
+            (1..self.nodes).collect()
+        };
+        for n in candidates {
+            if n == 0 || n >= self.nodes {
+                continue;
+            }
+            let mut slot = self.peers[n as usize].lock().unwrap();
+            if slot.is_none() {
+                *slot = stream.try_clone().ok();
+                if slot.is_some() {
+                    return Some(n);
+                }
+            }
+        }
+        None
+    }
+
+    /// One request/reply exchange on `node`'s socket. Any error poisons
+    /// the slot (socket closed and cleared) so the caller's retry path
+    /// sees a clean "not registered" state.
+    fn exchange(&self, node: NodeId, kind: FrameKind, payload: &[u8]) -> Result<Frame> {
+        let mut slot = self.peers[node.0 as usize].lock().unwrap();
+        let Some(stream) = slot.as_mut() else {
+            bail!("node {} has no registered worker", node.0);
+        };
+        let run = (|| -> Result<Frame> {
+            write_frame(stream, kind, payload)?;
+            read_frame(stream)
+        })();
+        if run.is_err() {
+            if let Some(s) = slot.take() {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+        run
+    }
+
+    /// Ship a blob to `node`'s replica cache, retrying with the transfer
+    /// board's deterministic backoff. `false` means the destination is
+    /// unreachable after the budget — the caller maps that to a node
+    /// death.
+    fn ship(&self, key: DataKey, node: NodeId, blob: &[u8]) -> bool {
+        let mut payload = Vec::with_capacity(KEY_BYTES + blob.len());
+        payload.extend_from_slice(&encode_key(key));
+        payload.extend_from_slice(blob);
+        for attempt in 1..=SHIP_ATTEMPTS {
+            // Cover the (re)registration race: a rejoining worker may be
+            // mid-handshake when the first post-revive transfer lands.
+            let wait_deadline = Instant::now() + SLOT_WAIT;
+            while self.peers[node.0 as usize].lock().unwrap().is_none()
+                && Instant::now() < wait_deadline
+                && !self.shutting_down.load(Ordering::SeqCst)
+            {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            match self.exchange(node, FrameKind::Put, &payload) {
+                Ok(Frame {
+                    kind: FrameKind::PutOk,
+                    ..
+                }) => return true,
+                Ok(f) => {
+                    eprintln!(
+                        "tcp transport: node {} answered Put with {:?}",
+                        node.0, f.kind
+                    );
+                }
+                Err(_) => {}
+            }
+            if self.shutting_down.load(Ordering::SeqCst) {
+                return false;
+            }
+            if attempt < SHIP_ATTEMPTS {
+                std::thread::sleep(retry_backoff(key, node, attempt));
+            }
+        }
+        false
+    }
+
+    /// Pull a blob back from `node`'s replica cache (`Get` → `Blob` |
+    /// `NotFound`) — the last-resort source when the coordinator's own
+    /// tiers lost the bytes.
+    fn get_remote(&self, node: NodeId, key: DataKey) -> Result<Option<Arc<[u8]>>> {
+        match self.exchange(node, FrameKind::Get, &encode_key(key))? {
+            Frame {
+                kind: FrameKind::Blob,
+                payload,
+            } => Ok(Some(Arc::from(payload.into_boxed_slice()))),
+            Frame {
+                kind: FrameKind::NotFound,
+                ..
+            } => Ok(None),
+            f => bail!("node {} answered Get with {:?}", node.0, f.kind),
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    /// Same staging contract as the in-process transport — warm blob
+    /// first (one encode per fan-out), cold spill file as fallback, both
+    /// on the owning side — plus the socket hop: the destination worker
+    /// receives the blob verbatim before the coordinator publishes the
+    /// replica. A destination that stays unreachable through the retry
+    /// budget is declared dead via the `kill_node` path and the transfer
+    /// is dropped, never failed.
+    fn fetch(
+        &self,
+        shared: &Shared,
+        key: DataKey,
+        from: Option<NodeId>,
+        to: NodeId,
+    ) -> Result<Option<u64>> {
+        let (blob, has_file): (Arc<[u8]>, bool) = match store::stage_blob(shared, key)? {
+            Some(blob) => {
+                let has_file = shared.table.path_of(key).is_some();
+                (blob, has_file)
+            }
+            None => match cold::ensure_file(shared, key) {
+                Ok(path) => {
+                    // Cold fallback, owning side only: the spill file
+                    // already holds the encoded bytes — read them
+                    // verbatim, never re-encode.
+                    shared.store.cold().note_read();
+                    let bytes = std::fs::read(&path)?;
+                    (Arc::from(bytes.into_boxed_slice()), true)
+                }
+                Err(e) => {
+                    // Last resort: the version's bytes are gone from
+                    // every coordinator tier, but a worker's replica
+                    // cache may still hold the blob.
+                    let Some(src) = from.filter(|s| s.0 != 0 && *s != to) else {
+                        return Err(e);
+                    };
+                    match self.get_remote(src, key) {
+                        Ok(Some(blob)) => (blob, false),
+                        _ => return Err(e),
+                    }
+                }
+            },
+        };
+        let nbytes = blob.len() as u64;
+        if to.0 != 0 && !self.ship(key, to, &blob) {
+            if self.shutting_down.load(Ordering::SeqCst) {
+                return Ok(None);
+            }
+            // Unreachable after the attempt budget: fold the loss into
+            // the existing recovery plane. `kill_node_now` poisons the
+            // node's transfer pairs (`fail_node`), drops its locations,
+            // and re-executes lost versions from lineage — a dropped
+            // worker is indistinguishable from a chaos `kill_node`.
+            if shared.health.is_alive(to) {
+                eprintln!(
+                    "tcp transport: node {} unreachable after {SHIP_ATTEMPTS} attempts; \
+                     declaring it dead",
+                    to.0
+                );
+                kill_node_now(shared, to);
+            }
+            return Ok(None);
+        }
+        let value = Arc::new(shared.codec.decode(&blob)?);
+        if !publish_replica(shared, key, to, value, has_file) {
+            return Ok(None);
+        }
+        Ok(Some(nbytes))
+    }
+
+    /// `kill_node` / transport-detected death: close and clear the slot
+    /// so in-flight exchanges fail fast and a future rejoin re-registers
+    /// from scratch.
+    fn on_node_down(&self, node: NodeId) {
+        if (node.0 as usize) < self.peers.len() {
+            if let Some(s) = self.peers[node.0 as usize].lock().unwrap().take() {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+
+    /// `add_node` rejoin: in self-host mode spawn a fresh loopback worker
+    /// for the slot (the killed one's thread exited with its socket). In
+    /// external mode the operator restarts `rcompss worker` — the
+    /// acceptor fills the free slot whenever it arrives.
+    fn on_node_up(&self, node: NodeId) {
+        if self.self_host && node.0 != 0 && node.0 < self.nodes {
+            let handle = spawn_loopback_worker(self.listen_addr, node.0, self.worker_budget);
+            self.threads.lock().unwrap().push(handle);
+        }
+    }
+
+    /// Orderly teardown: flag, `Shutdown` frame + close per peer, dummy
+    /// connect to unblock the acceptor, join every thread.
+    fn shutdown(&self) {
+        self.shutting_down.store(true, Ordering::SeqCst);
+        for slot in &self.peers {
+            if let Some(mut s) = slot.lock().unwrap().take() {
+                let _ = write_frame(&mut s, FrameKind::Shutdown, &[]);
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+        let _ = TcpStream::connect(self.listen_addr);
+        let threads = std::mem::take(&mut *self.threads.lock().unwrap());
+        for t in threads {
+            let _ = t.join();
+        }
+    }
+}
+
+fn spawn_loopback_worker(addr: SocketAddr, node: u32, budget: u64) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("rcompss-worker-{node}"))
+        .spawn(move || {
+            let _ = run_worker(&addr.to_string(), Some(node), budget, true);
+        })
+        .expect("spawn loopback worker")
+}
+
+/// Body of `rcompss worker --connect <addr>` (and of the self-hosted
+/// loopback worker threads): register, then serve the replica cache until
+/// the coordinator says `Shutdown` or the socket dies. Connection is
+/// retried for ~10 s so workers may start before (or racing) the
+/// coordinator.
+pub fn run_worker(addr: &str, preferred: Option<u32>, budget: u64, quiet: bool) -> Result<()> {
+    let mut stream = connect_with_retry(addr, Duration::from_secs(10))?;
+    let _ = stream.set_nodelay(true);
+    let hello = preferred.unwrap_or(ANY_NODE).to_le_bytes();
+    write_frame(&mut stream, FrameKind::Hello, &hello)?;
+    let node = match read_frame(&mut stream)? {
+        Frame {
+            kind: FrameKind::Assign,
+            payload,
+        } if payload.len() >= 4 => u32::from_le_bytes(payload[..4].try_into().unwrap()),
+        Frame {
+            kind: FrameKind::Error,
+            payload,
+        } => bail!(
+            "registration refused: {}",
+            String::from_utf8_lossy(&payload)
+        ),
+        f => bail!("unexpected registration reply: {:?}", f.kind),
+    };
+    if !quiet {
+        println!("rcompss worker: registered as node {node} on {addr} (budget {budget} B)");
+    }
+    let mut cache = BlobCache::new(budget);
+    loop {
+        let frame = match read_frame(&mut stream) {
+            Ok(f) => f,
+            // Coordinator gone (EOF/reset): a worker has no state worth
+            // saving — exit quietly.
+            Err(_) => return Ok(()),
+        };
+        match frame.kind {
+            FrameKind::Put => {
+                let key = decode_key(&frame.payload)?;
+                cache.insert(key, frame.payload[KEY_BYTES..].to_vec());
+                write_frame(&mut stream, FrameKind::PutOk, &[])?;
+            }
+            FrameKind::Get => {
+                let key = decode_key(&frame.payload)?;
+                match cache.get(key) {
+                    Some(blob) => write_frame(&mut stream, FrameKind::Blob, blob)?,
+                    None => write_frame(&mut stream, FrameKind::NotFound, &[])?,
+                }
+            }
+            FrameKind::Shutdown => return Ok(()),
+            other => {
+                let msg = format!("unexpected frame {other:?}");
+                write_frame(&mut stream, FrameKind::Error, msg.as_bytes())?;
+            }
+        }
+        stream.flush()?;
+    }
+}
+
+fn connect_with_retry(addr: &str, budget: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + budget;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) if Instant::now() >= deadline => {
+                bail!("cannot connect to coordinator at {addr}: {e}");
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(100)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(d: u64, v: u32) -> DataKey {
+        DataKey {
+            data: DataId(d),
+            version: v,
+        }
+    }
+
+    #[test]
+    fn blob_cache_evicts_fifo_within_budget() {
+        let mut c = BlobCache::new(100);
+        c.insert(key(1, 1), vec![0u8; 40]);
+        c.insert(key(2, 1), vec![0u8; 40]);
+        assert!(c.get(key(1, 1)).is_some());
+        c.insert(key(3, 1), vec![0u8; 40]);
+        // Oldest out first; the two newest fit the budget.
+        assert!(c.get(key(1, 1)).is_none());
+        assert!(c.get(key(2, 1)).is_some());
+        assert!(c.get(key(3, 1)).is_some());
+        // Re-inserting an existing key replaces, never double-counts.
+        c.insert(key(3, 1), vec![1u8; 60]);
+        assert_eq!(c.get(key(3, 1)).unwrap().len(), 60);
+        // A single over-budget blob is still held (the floor keeps one).
+        c.insert(key(4, 1), vec![0u8; 400]);
+        assert!(c.get(key(4, 1)).is_some());
+    }
+
+    #[test]
+    fn key_codec_roundtrips() {
+        let k = key(0xDEAD_BEEF_1234, 77);
+        assert_eq!(decode_key(&encode_key(k)).unwrap(), k);
+        assert!(decode_key(&[0u8; 4]).is_err());
+    }
+
+    #[test]
+    fn external_registration_ship_and_get_roundtrip() {
+        // 3 nodes: coordinator-resident 0 plus two external workers that
+        // connect like `rcompss worker` processes would.
+        let t = TcpTransport::bind(3, Some("127.0.0.1:0"), false, 1 << 20).unwrap();
+        let addr = t.listen_addr().to_string();
+        let (a1, a2) = (addr.clone(), addr.clone());
+        let w1 = std::thread::spawn(move || run_worker(&a1, Some(1), 1 << 20, true));
+        let w2 = std::thread::spawn(move || run_worker(&a2, Some(2), 1 << 20, true));
+        t.wait_registered(Duration::from_secs(5)).unwrap();
+
+        let k = key(42, 7);
+        let blob: Vec<u8> = (0..1024u32).map(|b| b as u8).collect();
+        assert!(t.ship(k, NodeId(1), &blob));
+        assert!(t.ship(k, NodeId(2), &blob));
+        // The blob comes back verbatim from the worker's replica cache.
+        let back = t.get_remote(NodeId(1), k).unwrap().unwrap();
+        assert_eq!(&back[..], &blob[..]);
+        // A key never shipped is a clean miss, not an error.
+        assert!(t.get_remote(NodeId(2), key(9, 9)).unwrap().is_none());
+
+        t.shutdown();
+        w1.join().unwrap().unwrap();
+        w2.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn preferred_slot_collision_falls_to_lowest_free() {
+        let t = TcpTransport::bind(3, Some("127.0.0.1:0"), false, 1 << 20).unwrap();
+        let addr = t.listen_addr().to_string();
+        let (a1, a2) = (addr.clone(), addr.clone());
+        // Both prefer node 1: one gets it, the other falls to slot 2.
+        let w1 = std::thread::spawn(move || run_worker(&a1, Some(1), 1 << 20, true));
+        let w2 = std::thread::spawn(move || run_worker(&a2, Some(1), 1 << 20, true));
+        t.wait_registered(Duration::from_secs(5)).unwrap();
+        t.shutdown();
+        w1.join().unwrap().unwrap();
+        w2.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn unregistered_cluster_times_out_with_join_hint() {
+        let t = TcpTransport::bind(2, Some("127.0.0.1:0"), false, 1 << 20).unwrap();
+        let err = t
+            .wait_registered(Duration::from_millis(50))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("rcompss worker --connect"), "{err}");
+        // Shipping toward the empty slot fails cleanly (no panic, no hang
+        // beyond the bounded slot wait + backoff).
+        assert!(!t.ship(key(1, 1), NodeId(1), b"bytes"));
+        t.shutdown();
+    }
+}

@@ -15,7 +15,7 @@
 use std::collections::HashMap;
 use std::process::ExitCode;
 
-use rcompss::api::{CompssRuntime, RuntimeConfig};
+use rcompss::api::{run_tcp_worker, CompssRuntime, RuntimeConfig};
 use rcompss::apps::backend::Backend;
 use rcompss::apps::kmeans::{self, KmeansConfig};
 use rcompss::apps::knn::{self, KnnConfig};
@@ -104,6 +104,7 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
     let opts = Opts::parse(&args[1..])?;
     match cmd {
         "run" => cmd_run(&opts),
+        "worker" => cmd_worker(&opts),
         "sim" => cmd_sim(&opts),
         "dag" => cmd_dag(&opts),
         "trace" => cmd_trace(&opts),
@@ -133,6 +134,10 @@ USAGE:
                  [--chaos task-fail:<p>,node-kill[:<seed>],seed:<n>|none]
                  [--checkpoint none|cold (proactive sole-replica spills)]
                  [--compile off|window (DAG window compiler: cull/fuse/alias/place)]
+                 [--transport inproc|tcp (replica shipping; default inproc)]
+                 [--listen ADDR (tcp: accept external worker registrations)]
+  rcompss worker --connect ADDR (join a coordinator as a replica-serving node)
+                 [--node N (preferred node slot)] [--budget BYTES (replica cache)]
   rcompss sim    --app knn|kmeans|linreg --machine shaheen3|marenostrum5
                  [--nodes N] [--workers-per-node W] [--fragments F]
                  [--scheduler fifo|lifo|locality] [--router bytes|cost|roundrobin|adaptive]
@@ -207,6 +212,32 @@ fn cmd_run(opts: &Opts) -> anyhow::Result<()> {
     if opts.has("compile") {
         config = config.with_compile(&opts.get("compile", "off"));
     }
+    // Overrides the RCOMPSS_TRANSPORT default; a bare `--listen` implies
+    // tcp (listening makes no sense in-process).
+    if opts.has("transport") {
+        config = config.with_transport(&opts.get("transport", "inproc"));
+    }
+    if opts.has("listen") {
+        let addr = opts.get("listen", "");
+        if addr.is_empty() || addr == "true" {
+            anyhow::bail!("--listen expects an address, e.g. --listen 0.0.0.0:7077");
+        }
+        if !opts.has("transport") && config.transport == "inproc" {
+            config = config.with_transport("tcp");
+        }
+        config = config.with_listen(&addr);
+        // Print the join commands before start() blocks waiting for the
+        // workers to register (localbox profile: host names are moot, the
+        // operator substitutes real ones on a cluster).
+        if nodes > 1 {
+            let spec = ClusterSpec::new(MachineProfile::localbox(), nodes);
+            println!("rcompss run: cluster of {nodes} node(s); join the coordinator with:");
+            for cmd in spec.worker_commands(&addr) {
+                println!("  {cmd}");
+            }
+        }
+    }
+    let transport = config.transport.clone();
     let compile = config.compile.clone();
     let scheduler = config.scheduler.clone();
     let router = config.router.clone();
@@ -224,7 +255,7 @@ fn cmd_run(opts: &Opts) -> anyhow::Result<()> {
         "rcompss run: app={app} nodes={nodes} workers/node={workers} fragments={fragments} \
          backend={backend:?} data-plane={} store={store} warm-budget={warm_budget} \
          scheduler={scheduler} router={router} transfer-threads={transfer_threads} gc={gc} \
-         compile={compile}",
+         compile={compile} transport={transport}",
         if memory_budget > 0 { "memory" } else { "file" }
     );
     let t0 = std::time::Instant::now();
@@ -348,6 +379,23 @@ fn cmd_run(opts: &Opts) -> anyhow::Result<()> {
         );
     }
     Ok(())
+}
+
+/// `rcompss worker --connect <addr>`: join a TCP-transport coordinator as
+/// a replica-serving node and block until it shuts the cluster down (or
+/// the socket dies). The process is stateless — restart it to rejoin.
+fn cmd_worker(opts: &Opts) -> anyhow::Result<()> {
+    let addr = opts.get("connect", "");
+    if addr.is_empty() || addr == "true" {
+        anyhow::bail!("--connect expects the coordinator address, e.g. --connect 10.0.0.1:7077");
+    }
+    let preferred = if opts.has("node") {
+        Some(opts.get_usize("node", 0)? as u32)
+    } else {
+        None
+    };
+    let budget = opts.get_usize("budget", 64 << 20)? as u64;
+    run_tcp_worker(&addr, preferred, budget, false)
 }
 
 fn build_plan(

@@ -35,7 +35,14 @@ pub trait ByteOrder: Send + Sync + 'static {
 
 #[inline]
 fn take<'a>(buf: &'a [u8], off: &mut usize, n: usize) -> Result<&'a [u8]> {
-    match buf.get(*off..*off + n) {
+    // Network input: `*off + n` must not be allowed to wrap — a hostile
+    // length near usize::MAX would overflow the end bound into range and
+    // hand back the wrong slice (or panic in debug builds). checked_add
+    // turns it into the same clean truncation error.
+    let end = off
+        .checked_add(n)
+        .ok_or_else(|| anyhow::anyhow!("corrupt input: offset overflow ({off} + {n})", off = *off))?;
+    match buf.get(*off..end) {
         Some(s) => {
             *off += n;
             Ok(s)
@@ -326,6 +333,129 @@ pub fn decode_tree_exact<B: ByteOrder>(buf: &[u8]) -> Result<RValue> {
     Ok(v)
 }
 
+// ---------------------------------------------------------------------------
+// Length-framed messages — the TCP transport's wire protocol.
+//
+// Every message between the coordinator and an `rcompss worker` process is
+// one frame:
+//
+// ```text
+// frame  := magic:u32(le) kind:u8 len:u64(le) payload[len]
+// ```
+//
+// The 13-byte header is fixed little-endian regardless of the value codec in
+// use — framing and value encoding are independent layers; the payload of a
+// `Put`/`Blob` frame is the warm tier's already-encoded blob shipped
+// verbatim (zero re-encode). `len` is capped at [`MAX_FRAME_BYTES`] and the
+// payload is read through `Read::take`, so a truncated or hostile frame is a
+// clean `Err` — never a panic, never an attacker-sized allocation.
+// ---------------------------------------------------------------------------
+
+/// Frame header magic: `"RCW1"` little-endian. A mismatch means the peer is
+/// not speaking this protocol (or the stream lost sync) — fail fast.
+pub const FRAME_MAGIC: u32 = 0x3157_4352;
+
+/// Upper bound on a frame payload (1 GiB). A `len` field above this is
+/// rejected before any allocation: the cap is what makes a hostile 2^64
+/// length claim harmless.
+pub const MAX_FRAME_BYTES: u64 = 1 << 30;
+
+/// Message kinds of the replica-shipping protocol (see `ARCHITECTURE.md`
+/// § Transport for the exchange diagram).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    /// Worker → coordinator: register; payload = preferred node id
+    /// (`u32` LE, `u32::MAX` = any free slot).
+    Hello = 1,
+    /// Coordinator → worker: registration verdict; payload = assigned
+    /// node id (`u32` LE).
+    Assign = 2,
+    /// Coordinator → worker: store a replica; payload = key (12 bytes)
+    /// followed by the serialized blob.
+    Put = 3,
+    /// Worker → coordinator: `Put` acknowledged.
+    PutOk = 4,
+    /// Coordinator → worker: serve a replica back; payload = key.
+    Get = 5,
+    /// Worker → coordinator: `Get` hit; payload = the blob.
+    Blob = 6,
+    /// Worker → coordinator: `Get` miss (evicted or never stored).
+    NotFound = 7,
+    /// Either side: protocol error; payload = UTF-8 description.
+    Error = 8,
+    /// Coordinator → worker: orderly shutdown, no reply expected.
+    Shutdown = 9,
+}
+
+impl FrameKind {
+    /// Parse a wire tag; `None` for unknown kinds (forward-compat reject).
+    pub fn from_u8(tag: u8) -> Option<FrameKind> {
+        Some(match tag {
+            1 => FrameKind::Hello,
+            2 => FrameKind::Assign,
+            3 => FrameKind::Put,
+            4 => FrameKind::PutOk,
+            5 => FrameKind::Get,
+            6 => FrameKind::Blob,
+            7 => FrameKind::NotFound,
+            8 => FrameKind::Error,
+            9 => FrameKind::Shutdown,
+            _ => return None,
+        })
+    }
+}
+
+/// One decoded frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub payload: Vec<u8>,
+}
+
+/// Write one frame (header + payload) and flush it to the peer.
+pub fn write_frame<W: std::io::Write>(w: &mut W, kind: FrameKind, payload: &[u8]) -> Result<()> {
+    let len = payload.len() as u64;
+    if len > MAX_FRAME_BYTES {
+        bail!("frame payload of {len} bytes exceeds the {MAX_FRAME_BYTES}-byte cap");
+    }
+    let mut header = [0u8; 13];
+    header[..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+    header[4] = kind as u8;
+    header[5..].copy_from_slice(&len.to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame. Truncation (EOF mid-header or mid-payload), a bad magic,
+/// an unknown kind, or a length claim above [`MAX_FRAME_BYTES`] are all
+/// clean errors. The payload is read through `Read::take` into a geometric-
+/// growth buffer, so even an in-cap length claim never pre-allocates more
+/// than the bytes actually on the stream.
+pub fn read_frame<R: std::io::Read>(r: &mut R) -> Result<Frame> {
+    let mut header = [0u8; 13];
+    r.read_exact(&mut header)
+        .map_err(|e| anyhow::anyhow!("truncated frame header: {e}"))?;
+    let magic = u32::from_le_bytes(header[..4].try_into().unwrap());
+    if magic != FRAME_MAGIC {
+        bail!("bad frame magic {magic:#010x} (expected {FRAME_MAGIC:#010x})");
+    }
+    let kind = FrameKind::from_u8(header[4])
+        .ok_or_else(|| anyhow::anyhow!("unknown frame kind {}", header[4]))?;
+    let len = u64::from_le_bytes(header[5..].try_into().unwrap());
+    if len > MAX_FRAME_BYTES {
+        bail!("frame claims {len} bytes, above the {MAX_FRAME_BYTES}-byte cap");
+    }
+    let mut payload = Vec::new();
+    r.take(len).read_to_end(&mut payload)?;
+    if payload.len() as u64 != len {
+        bail!("truncated frame payload: got {} of {len} bytes", payload.len());
+    }
+    Ok(Frame { kind, payload })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -385,5 +515,90 @@ mod tests {
         Le::put_u64(&mut buf, 2);
         buf.extend_from_slice(&[0xFF, 0xFE]);
         assert!(decode_tree_exact::<Le>(&buf).is_err());
+    }
+
+    #[test]
+    fn tree_truncation_at_every_offset_is_a_clean_err() {
+        let mut rng = Pcg64::seeded(23);
+        let mut gen = Gen::new(&mut rng);
+        for _ in 0..20 {
+            let v = gen.arbitrary(3);
+            let mut buf = Vec::new();
+            encode_tree::<Le>(&v, &mut buf);
+            for cut in 0..buf.len() {
+                // Strict prefix: must be Err, must not panic.
+                assert!(decode_tree_exact::<Le>(&buf[..cut]).is_err());
+            }
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_every_kind() {
+        let kinds = [
+            FrameKind::Hello,
+            FrameKind::Assign,
+            FrameKind::Put,
+            FrameKind::PutOk,
+            FrameKind::Get,
+            FrameKind::Blob,
+            FrameKind::NotFound,
+            FrameKind::Error,
+            FrameKind::Shutdown,
+        ];
+        for (i, kind) in kinds.into_iter().enumerate() {
+            let payload: Vec<u8> = (0..i * 7).map(|b| b as u8).collect();
+            let mut wire = Vec::new();
+            write_frame(&mut wire, kind, &payload).unwrap();
+            let frame = read_frame(&mut &wire[..]).unwrap();
+            assert_eq!(frame.kind, kind);
+            assert_eq!(frame.payload, payload);
+        }
+    }
+
+    #[test]
+    fn frame_truncation_at_every_offset_is_a_clean_err() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, FrameKind::Put, b"0123456789abcdef").unwrap();
+        for cut in 0..wire.len() {
+            assert!(read_frame(&mut &wire[..cut]).is_err(), "cut at {cut}");
+        }
+        // The full frame still decodes after the sweep.
+        assert!(read_frame(&mut &wire[..]).is_ok());
+    }
+
+    #[test]
+    fn frame_bad_magic_rejected() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, FrameKind::Get, b"key").unwrap();
+        wire[0] ^= 0x40;
+        assert!(read_frame(&mut &wire[..]).is_err());
+    }
+
+    #[test]
+    fn frame_unknown_kind_rejected() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, FrameKind::Get, b"key").unwrap();
+        wire[4] = 0xEE;
+        assert!(read_frame(&mut &wire[..]).is_err());
+    }
+
+    #[test]
+    fn frame_hostile_length_claim_never_allocates() {
+        // Header claims u64::MAX payload bytes: rejected by the cap before
+        // any allocation happens.
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
+        wire.push(FrameKind::Blob as u8);
+        wire.extend_from_slice(&u64::MAX.to_le_bytes());
+        assert!(read_frame(&mut &wire[..]).is_err());
+
+        // In-cap claim, truncated stream: `take` bounds the read to the
+        // bytes present, so this is a clean truncation error, not an OOM.
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
+        wire.push(FrameKind::Blob as u8);
+        wire.extend_from_slice(&MAX_FRAME_BYTES.to_le_bytes());
+        wire.extend_from_slice(b"only a few bytes");
+        assert!(read_frame(&mut &wire[..]).is_err());
     }
 }

@@ -1,0 +1,247 @@
+//! Loopback-TCP transport invariance: the same suites that pin the
+//! in-process shipping plane, re-run over real sockets. With
+//! `--transport tcp` and no `--listen`, the coordinator self-hosts its
+//! worker peers as threads connected through 127.0.0.1 — so everything
+//! above `Transport::fetch` (placement, feedback, GC, transfer
+//! accounting) runs unmodified while the staged bytes cross a real wire.
+
+use std::sync::Arc;
+
+use rcompss::api::{CompssRuntime, RuntimeConfig};
+use rcompss::apps::backend::Backend;
+use rcompss::apps::kmeans::{self, KmeansConfig};
+use rcompss::apps::knn::{self, KnnConfig};
+use rcompss::apps::linreg::{self, LinregConfig};
+use rcompss::apps::{LiveSink, Shapes};
+
+/// See `integration_runtime.rs`: under the CI chaos matrix the strict
+/// performance-counter assertions are meaningless; results stay pinned.
+fn chaos_active() -> bool {
+    std::env::var("RCOMPSS_CHAOS").map_or(false, |v| {
+        rcompss::coordinator::fault::ChaosSpec::parse(&v)
+            .map_or(false, |s| s.is_active())
+    })
+}
+
+fn tiny_shapes() -> Shapes {
+    Shapes {
+        knn_train_n: 128,
+        knn_test_block: 32,
+        knn_d: 8,
+        knn_k: 3,
+        knn_classes: 3,
+        km_frag_n: 96,
+        km_d: 4,
+        km_k: 3,
+        lr_frag_n: 64,
+        lr_p: 8,
+        lr_pred_block: 32,
+        ..Shapes::default()
+    }
+}
+
+#[test]
+fn tcp_two_node_claims_never_run_codec_synchronously() {
+    // Loopback-TCP twin of the in-process 2-node acceptance test: claims
+    // must never run the codec synchronously, every transfer request must
+    // be accounted for, and results must match the single-node run.
+    let mut cfg = KnnConfig::small(5);
+    cfg.shapes = tiny_shapes();
+    cfg.train_fragments = 4;
+    cfg.test_blocks = 2;
+    let run = |nodes: u32| {
+        let rt = CompssRuntime::start(
+            RuntimeConfig::local(2)
+                .with_nodes(nodes, 2)
+                .with_memory_budget(256 << 20)
+                .with_gc(true)
+                .with_transport("tcp"),
+        )
+        .unwrap();
+        let mut sink = LiveSink::new(
+            &rt,
+            rcompss::apps::backend::knn_task_defs(cfg.shapes, Backend::Native),
+        );
+        let plan = knn::plan_knn(&mut sink, &cfg).unwrap();
+        let classes = sink.fetch(plan.classes[0]).unwrap();
+        let got = classes.as_int().unwrap().to_vec();
+        let stats = rt.stop().unwrap();
+        (got, stats)
+    };
+    let (single, _) = run(1);
+    let (multi, stats) = run(2);
+    assert_eq!(single, multi, "node count changed classification over TCP");
+    if chaos_active() {
+        return;
+    }
+    assert_eq!(
+        stats.sync_transfer_decodes, 0,
+        "claim paths must never run the codec for cross-node inputs: {stats:?}"
+    );
+    assert_eq!(stats.transfers_failed, 0, "{stats:?}");
+    assert_eq!(stats.dead_version_bytes, 0, "{stats:?}");
+    assert_eq!(
+        stats.transfers_prefetched
+            + stats.transfers_waited
+            + stats.transfers_dropped
+            + stats.transfers_failed,
+        stats.transfers_requested,
+        "transfer accounting is consistent over TCP: {stats:?}"
+    );
+    assert!(
+        stats.transfer_states <= 16,
+        "transfer tombstones must not accumulate: {stats:?}"
+    );
+}
+
+#[test]
+fn apps_are_byte_identical_across_transports_and_routers() {
+    // The transport is a shipping mechanism, never a semantic one: for the
+    // same seed, every app must produce bit-identical floats in-process
+    // and over loopback TCP, under every placement model. (Compute runs in
+    // coordinator worker threads under both transports; TCP only changes
+    // how staged replica bytes move.)
+    let shapes = tiny_shapes();
+    for router in ["bytes", "cost", "roundrobin", "adaptive"] {
+        let config = |transport: &str| {
+            RuntimeConfig::local(2)
+                .with_nodes(2, 2)
+                .with_router(router)
+                .with_transport(transport)
+        };
+        // KNN.
+        let knn_run = |transport: &str| {
+            let rt = CompssRuntime::start(config(transport)).unwrap();
+            let mut cfg = KnnConfig::small(5);
+            cfg.shapes = shapes;
+            cfg.train_fragments = 4;
+            cfg.test_blocks = 2;
+            let res = knn::run_knn(&rt, &cfg, Backend::Native).unwrap();
+            rt.stop().unwrap();
+            res
+        };
+        let (ki, kt) = (knn_run("inproc"), knn_run("tcp"));
+        assert_eq!(
+            ki.accuracy.to_bits(),
+            kt.accuracy.to_bits(),
+            "router {router}: knn accuracy diverged across transports"
+        );
+        assert_eq!(ki.total_test_points, kt.total_test_points);
+        // K-means.
+        let km_run = |transport: &str| {
+            let rt = CompssRuntime::start(config(transport)).unwrap();
+            let mut cfg = KmeansConfig::small(11);
+            cfg.shapes = shapes;
+            cfg.fragments = 3;
+            cfg.iterations = 3;
+            cfg.tol = None;
+            let res = kmeans::run_kmeans(&rt, &cfg, Backend::Native).unwrap();
+            rt.stop().unwrap();
+            res
+        };
+        let (mi, mt) = (km_run("inproc"), km_run("tcp"));
+        assert!(
+            mi.centroids.all_equal(&mt.centroids, 0.0),
+            "router {router}: k-means centroids diverged across transports"
+        );
+        assert_eq!(mi.iterations_run, mt.iterations_run);
+        assert_eq!(mi.last_shift.to_bits(), mt.last_shift.to_bits());
+        // Linreg.
+        let lr_run = |transport: &str| {
+            let rt = CompssRuntime::start(config(transport)).unwrap();
+            let mut cfg = LinregConfig::small(2);
+            cfg.shapes = shapes;
+            cfg.fragments = 4;
+            cfg.pred_blocks = 2;
+            let res = linreg::run_linreg(&rt, &cfg, Backend::Native).unwrap();
+            rt.stop().unwrap();
+            res
+        };
+        let (li, lt) = (lr_run("inproc"), lr_run("tcp"));
+        assert!(
+            li.beta.all_equal(&lt.beta, 0.0),
+            "router {router}: linreg beta diverged across transports"
+        );
+        assert_eq!(li.beta_max_err.to_bits(), lt.beta_max_err.to_bits());
+        assert_eq!(li.r2.to_bits(), lt.r2.to_bits());
+    }
+}
+
+#[test]
+fn tcp_warm_fanout_ships_the_blob_with_one_encode_and_zero_file_io() {
+    // TCP twin of the warm fan-out acceptance test: a memory-resident
+    // version fanned out to a 4-node loopback-TCP fabric costs exactly one
+    // encode and zero coordinator-side file I/O — the movers put the warm
+    // tier's already-encoded blob on the wire verbatim.
+    use rcompss::api::TaskDef;
+    use rcompss::value::RValue;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::time::{Duration, Instant};
+    let rt = CompssRuntime::start(
+        RuntimeConfig::local(1)
+            .with_nodes(4, 1)
+            .with_router("roundrobin")
+            .with_warm_budget(rcompss::coordinator::runtime::DEFAULT_WARM_BUDGET)
+            .with_transport("tcp"),
+    )
+    .unwrap();
+    let mk = rt.register_task(TaskDef::new("mk", 0, |_| {
+        Ok(vec![RValue::Real(vec![1.25; 4096])])
+    }));
+    let gate = Arc::new(AtomicBool::new(false));
+    let consume = {
+        let gate = Arc::clone(&gate);
+        rt.register_task(TaskDef::new("consume", 1, move |a| {
+            while !gate.load(Ordering::Acquire) {
+                std::thread::yield_now();
+            }
+            Ok(vec![RValue::scalar(a[0].as_real().unwrap().iter().sum())])
+        }))
+    };
+    let src = rt.submit(&mk, &[]).unwrap();
+    let outs: Vec<_> = (0..8)
+        .map(|_| rt.submit(&consume, &[src.into()]).unwrap())
+        .collect();
+    let t0 = Instant::now();
+    loop {
+        let s = rt.stats();
+        if s.transfers_prefetched + s.transfers_waited >= 3 {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "fan-out staging never completed: {s:?}"
+        );
+        std::thread::yield_now();
+    }
+    gate.store(true, Ordering::Release);
+    let mut total = 0.0;
+    for o in &outs {
+        total += rt.wait_on(o).unwrap().as_f64().unwrap();
+    }
+    let stats = rt.stop().unwrap();
+    assert_eq!(total, 8.0 * 1.25 * 4096.0);
+    if !chaos_active() {
+        assert_eq!(stats.store_encodes, 1, "{stats:?}");
+        assert_eq!(stats.store_file_reads, 0, "{stats:?}");
+        assert_eq!(stats.store_file_writes, 0, "{stats:?}");
+        assert!(stats.warm_hits >= 1, "fan-out replicas hit warm: {stats:?}");
+        assert_eq!(stats.sync_transfer_decodes, 0, "{stats:?}");
+    }
+}
+
+#[test]
+fn transport_config_is_validated_at_startup() {
+    // Unknown transports are rejected, and `--listen` without the TCP
+    // transport is a configuration error, not a silent no-op.
+    assert!(
+        CompssRuntime::start(RuntimeConfig::local(1).with_transport("carrier-pigeon"))
+            .is_err()
+    );
+    assert!(CompssRuntime::start(
+        RuntimeConfig::local(1)
+            .with_transport("inproc")
+            .with_listen("127.0.0.1:0")
+    )
+    .is_err());
+}
