@@ -32,6 +32,11 @@
 //!     one verdict per task vs one verdict per 64-task window, with an
 //!     InOut supersede chain surfacing the compiler's fusion/AOT-free
 //!     counters.
+//! 12. **Relay vs direct-shipped TCP fan-out** — the same N-node warm
+//!     fan-out over loopback TCP with `--p2p off` (every blob relayed
+//!     through the coordinator) against the default direct
+//!     worker-to-worker BlobChunk path, reporting the ship mix and the
+//!     coordinator's own egress bytes — the fabric's scaling bottleneck.
 //!
 //! Run: `cargo bench --bench runtime_hotpath`
 
@@ -584,6 +589,90 @@ fn fanout_staging(summary: &mut Vec<Json>) {
     println!();
 }
 
+/// Case [12]: relay vs direct-shipped TCP fan-out. The warm fan-out of
+/// case [9], re-run over loopback TCP both ways: with `--p2p off` every
+/// remote destination costs the coordinator one full blob `Put` (egress
+/// scales with fan-out width), with direct shipping on the coordinator
+/// seeds each version to one worker and the blob then travels
+/// worker-to-worker as BlobChunk streams over pooled peer links — the
+/// egress column collapses to roughly one blob per version plus control
+/// frames, which is the number that decides how wide a single
+/// coordinator can fan out.
+fn fanout_relay_vs_direct(summary: &mut Vec<Json>) {
+    println!("[12] TCP fan-out: coordinator relay vs direct worker-to-worker (5 nodes x 1 worker)");
+    let producers = 16usize;
+    let consumers_per = 8usize;
+    let payload = 32 * 1024usize; // 256 KiB per produced vector
+    for (mode, p2p) in [("relay", false), ("direct", true)] {
+        let config = RuntimeConfig::local(1)
+            .with_nodes(5, 1)
+            .with_router("roundrobin")
+            .with_transfer_threads(1)
+            .with_warm_budget(rcompss::coordinator::runtime::DEFAULT_WARM_BUDGET)
+            .with_transport("tcp")
+            .with_p2p(p2p);
+        let rt = CompssRuntime::start(config).unwrap();
+        let mk = rt.register_task(TaskDef::new("mk", 1, move |args| {
+            let seed = args[0].as_f64().unwrap_or(0.0);
+            Ok(vec![RValue::Real(vec![seed; payload])])
+        }));
+        let consume = rt.register_task(TaskDef::new("consume", 1, |args| {
+            let a = args[0].as_real().unwrap();
+            Ok(vec![RValue::scalar(a[0] + a[a.len() - 1])])
+        }));
+        let (elapsed, _) = time_once(|| {
+            let outs: Vec<_> = (0..producers)
+                .map(|i| rt.submit(&mk, &[(i as f64).into()]).unwrap())
+                .collect();
+            for out in &outs {
+                for _ in 0..consumers_per {
+                    rt.submit(&consume, &[(*out).into()]).unwrap();
+                }
+            }
+            rt.barrier().unwrap();
+        });
+        let stats = rt.stop().unwrap();
+        let n_tasks = producers * (1 + consumers_per);
+        let per_task = elapsed / n_tasks as f64 * 1e6;
+        println!(
+            "  {mode:6} fan-out: {n_tasks} tasks -> {per_task:.1} µs/task | {} direct, \
+             {} relay, {} seed ships, {} pool hits | coordinator egress {} of {} moved",
+            stats.direct_ships,
+            stats.relay_ships,
+            stats.seed_ships,
+            stats.pool_hits,
+            fmt_bytes(stats.coord_egress_bytes as usize),
+            fmt_bytes(stats.transfer_bytes as usize),
+        );
+        record_result(
+            "hotpath_fanout_relay_vs_direct",
+            vec![
+                ("mode", Json::Str(mode.into())),
+                ("us_per_task", Json::Num(per_task)),
+                ("direct_ships", Json::Num(stats.direct_ships as f64)),
+                ("relay_ships", Json::Num(stats.relay_ships as f64)),
+                ("seed_ships", Json::Num(stats.seed_ships as f64)),
+                ("pool_hits", Json::Num(stats.pool_hits as f64)),
+                ("coord_egress_bytes", Json::Num(stats.coord_egress_bytes as f64)),
+                ("transfer_bytes", Json::Num(stats.transfer_bytes as f64)),
+            ],
+        );
+        summary.push(obj(vec![
+            ("metric", Json::Str("fanout_relay_vs_direct_us_per_task".into())),
+            ("mode", Json::Str(mode.into())),
+            ("n_tasks", Json::Num(n_tasks as f64)),
+            ("us_per_task", Json::Num(per_task)),
+            ("direct_ships", Json::Num(stats.direct_ships as f64)),
+            ("relay_ships", Json::Num(stats.relay_ships as f64)),
+            ("seed_ships", Json::Num(stats.seed_ships as f64)),
+            ("pool_hits", Json::Num(stats.pool_hits as f64)),
+            ("coord_egress_bytes", Json::Num(stats.coord_egress_bytes as f64)),
+            ("transfer_bytes", Json::Num(stats.transfer_bytes as f64)),
+        ]));
+    }
+    println!();
+}
+
 /// Case [11]: greedy vs window-compiled dispatch. The same workload —
 /// 2,000 independent producers plus a 64-deep InOut supersede chain —
 /// dispatched greedily (one placement verdict per task, every chain
@@ -769,11 +858,11 @@ fn main() {
     gemm_ratio();
     unit_costs();
     codec_throughput();
-    // Cases [4], [6], [7], [8], [9], [10], and [11] share one committed
-    // summary file; it is written only after all seven ran, so a measured
-    // BENCH_hotpath.json always carries the dispatch, batched-submit,
-    // routing, fan-out-staging, fleet-sim, and window-compile metrics the
-    // projected copy has.
+    // Cases [4], [6], [7], [8], [9], [10], [11], and [12] share one
+    // committed summary file; it is written only after all eight ran, so a
+    // measured BENCH_hotpath.json always carries the dispatch,
+    // batched-submit, routing, fan-out-staging, fleet-sim, window-compile,
+    // and relay-vs-direct metrics the projected copy has.
     let mut summary: Vec<Json> = Vec::new();
     dispatch_overhead(&mut summary);
     batched_submission(&mut summary);
@@ -782,6 +871,7 @@ fn main() {
     fanout_staging(&mut summary);
     fleet_sim(&mut summary);
     window_compile(&mut summary);
+    fanout_relay_vs_direct(&mut summary);
     rcompss::bench_harness::write_json_summary("hotpath", summary);
     pure_structures();
 }

@@ -82,6 +82,17 @@ pub struct FeedbackStats {
     /// most once per placement decision — every per-node hot signal above
     /// stays a plain atomic.
     per_type: RwLock<HashMap<String, f64>>,
+    /// Per-*pair* bandwidth EWMAs (bytes/second, f64 bits), a flat
+    /// `FEEDBACK_SLOTS × FEEDBACK_SLOTS` matrix indexed
+    /// `(src % S) * S + dst % S`. Fed by the TCP transport's direct
+    /// worker-to-worker ships, whose `ShipDone` acks carry bytes/wall-time
+    /// measured *at the source* — the real src→dst link, not a
+    /// coordinator-relative average.
+    pair_bw: Vec<AtomicU64>,
+    pair_obs: Vec<AtomicU64>,
+    /// Total pair observations; 0 keeps [`AdaptivePlacement`] on its
+    /// original per-destination scoring, bit-for-bit.
+    pair_obs_total: AtomicU64,
 }
 
 impl FeedbackStats {
@@ -94,6 +105,13 @@ impl FeedbackStats {
             task_all: AtomicU64::new(0),
             task_obs: AtomicU64::new(0),
             per_type: RwLock::new(HashMap::new()),
+            pair_bw: (0..FEEDBACK_SLOTS * FEEDBACK_SLOTS)
+                .map(|_| AtomicU64::new(0))
+                .collect(),
+            pair_obs: (0..FEEDBACK_SLOTS * FEEDBACK_SLOTS)
+                .map(|_| AtomicU64::new(0))
+                .collect(),
+            pair_obs_total: AtomicU64::new(0),
         }
     }
 
@@ -128,6 +146,39 @@ impl FeedbackStats {
         Self::fold(&self.bw[slot], first, sample);
         let first_all = self.transfer_obs.fetch_add(1, Ordering::Relaxed) == 0;
         Self::fold(&self.bw_all, first_all, sample);
+    }
+
+    /// Record one completed *direct* transfer over the `src → dst` link:
+    /// `bytes` serialized bytes in `seconds` of wall time, measured at the
+    /// source worker. Folds into the pair matrix only — the per-
+    /// destination and global EWMAs keep their original meaning (the
+    /// coordinator-observed staging throughput recorded by the movers), so
+    /// a run without direct ships scores exactly as before.
+    pub fn record_transfer_pair(&self, src: NodeId, dst: NodeId, bytes: u64, seconds: f64) {
+        if bytes == 0 || !seconds.is_finite() {
+            return;
+        }
+        let sample = bytes as f64 / seconds.max(1e-9);
+        let slot = self.slot(src) * FEEDBACK_SLOTS + self.slot(dst);
+        let first = self.pair_obs[slot].fetch_add(1, Ordering::Relaxed) == 0;
+        Self::fold(&self.pair_bw[slot], first, sample);
+        self.pair_obs_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Observed bandwidth over the `src → dst` link, if any direct ship
+    /// has been measured on it.
+    pub fn bandwidth_between(&self, src: NodeId, dst: NodeId) -> Option<f64> {
+        let slot = self.slot(src) * FEEDBACK_SLOTS + self.slot(dst);
+        if self.pair_obs[slot].load(Ordering::Relaxed) == 0 {
+            return None;
+        }
+        Some(f64::from_bits(self.pair_bw[slot].load(Ordering::Relaxed)))
+    }
+
+    /// Has any per-pair signal landed? Gates the pair-aware scoring
+    /// branch in [`AdaptivePlacement`].
+    pub fn has_pair_observations(&self) -> bool {
+        self.pair_obs_total.load(Ordering::Relaxed) > 0
     }
 
     /// Record one execution of task type `ty` taking `seconds`.
@@ -209,6 +260,14 @@ impl Default for FeedbackStats {
 /// same observations produce identical verdict sequences (the live-vs-sim
 /// equivalence property).
 ///
+/// Once the TCP transport's direct ships have measured at least one real
+/// `src → dst` link ([`FeedbackStats::record_transfer_pair`]), the move
+/// term upgrades to *per-pair* pricing: each absent input is charged over
+/// the best observed link from any node holding it, so the model sees the
+/// actual topology (a slow cross-rack pair, a fast intra-node loopback)
+/// instead of a per-destination average. Runs without direct ships never
+/// enter that branch and score exactly as before.
+///
 /// Cold start: until [`WARM_TRANSFER_OBS`] transfers have been observed,
 /// `place` delegates to an inner [`CostPlacement`], so `--router adaptive`
 /// begins exactly as `--router cost` and only diverges once it has
@@ -261,6 +320,10 @@ impl PlacementModel for AdaptivePlacement {
         }
         let total = task.total_bytes();
         let dur = self.stats.task_seconds(&task.type_name);
+        // Pair-aware pricing only once a direct ship has actually been
+        // measured: without pair signal the scoring below reduces to the
+        // original per-destination math, verdict-for-verdict.
+        let pair_aware = self.stats.has_pair_observations();
         with_scores(nodes, |resident| {
             resident_per_node(task, resident);
             let mut best: Option<(f64, usize, usize)> = None;
@@ -271,13 +334,41 @@ impl PlacementModel for AdaptivePlacement {
                 }
                 let missing = total.saturating_sub(*res);
                 let credit = signals.inflight_toward(node).min(missing);
-                let bw = self
-                    .stats
-                    .bandwidth_toward(node)
-                    .or_else(|| self.stats.mean_bandwidth())
-                    .unwrap_or(1.0)
-                    .max(1.0);
-                let move_s = (missing - credit) as f64 / bw;
+                let move_s = if pair_aware {
+                    // Price each absent input over the best observed link
+                    // from any node already holding it, falling back to
+                    // the destination's coordinator-observed EWMA. The
+                    // in-flight credit scales the total proportionally —
+                    // bytes already moving cost nothing more to move.
+                    let mut secs = 0.0;
+                    for (bytes, holders) in &task.inputs {
+                        if holders.contains(&node) {
+                            continue;
+                        }
+                        let bw = holders
+                            .iter()
+                            .filter_map(|h| self.stats.bandwidth_between(*h, node))
+                            .fold(None::<f64>, |acc, b| Some(acc.map_or(b, |a| a.max(b))))
+                            .or_else(|| self.stats.bandwidth_toward(node))
+                            .or_else(|| self.stats.mean_bandwidth())
+                            .unwrap_or(1.0)
+                            .max(1.0);
+                        secs += *bytes as f64 / bw;
+                    }
+                    if missing > 0 {
+                        secs * ((missing - credit) as f64 / missing as f64)
+                    } else {
+                        0.0
+                    }
+                } else {
+                    let bw = self
+                        .stats
+                        .bandwidth_toward(node)
+                        .or_else(|| self.stats.mean_bandwidth())
+                        .unwrap_or(1.0)
+                        .max(1.0);
+                    (missing - credit) as f64 / bw
+                };
                 let depth = signals.queue_depth(node);
                 let score = move_s + depth as f64 * dur;
                 let better = match &best {
@@ -345,6 +436,63 @@ mod tests {
         s.record_transfer(NodeId(1), 0, 1.0);
         s.record_transfer(NodeId(1), 10, f64::NAN);
         assert_eq!(s.transfer_observations(), 3);
+    }
+
+    #[test]
+    fn pair_ewma_records_and_queries_per_link() {
+        let s = FeedbackStats::new();
+        assert!(!s.has_pair_observations());
+        assert_eq!(s.bandwidth_between(NodeId(1), NodeId(2)), None);
+        s.record_transfer_pair(NodeId(1), NodeId(2), 1000, 1.0);
+        s.record_transfer_pair(NodeId(1), NodeId(2), 2000, 1.0);
+        assert_eq!(s.bandwidth_between(NodeId(1), NodeId(2)), Some(1250.0));
+        // Directional: the reverse link has its own slot.
+        assert_eq!(s.bandwidth_between(NodeId(2), NodeId(1)), None);
+        assert!(s.has_pair_observations());
+        // Pair samples never leak into the coordinator-staging EWMAs:
+        // the warm gate and per-destination signals are untouched.
+        assert_eq!(s.transfer_observations(), 0);
+        assert_eq!(s.bandwidth_toward(NodeId(2)), None);
+        // Degenerate samples are discarded.
+        s.record_transfer_pair(NodeId(1), NodeId(2), 0, 1.0);
+        s.record_transfer_pair(NodeId(1), NodeId(2), 10, f64::NAN);
+        assert_eq!(s.bandwidth_between(NodeId(1), NodeId(2)), Some(1250.0));
+    }
+
+    #[test]
+    fn pair_observations_price_the_real_link() {
+        // Input lives on node 1; candidates are nodes 2 and 3. The
+        // per-destination EWMAs see both the same, but measured direct
+        // ships say the 1→3 link flies while 1→2 crawls: the pair-aware
+        // branch must route to 3. A twin model without pair samples ties
+        // the two and takes the lower index — the original behavior.
+        struct DeadOneAliveRest;
+        impl PlacementSignals for DeadOneAliveRest {
+            fn inflight_toward(&self, _node: NodeId) -> u64 {
+                0
+            }
+            fn queue_depth(&self, _node: NodeId) -> usize {
+                0
+            }
+            fn alive(&self, node: NodeId) -> bool {
+                node.0 >= 2
+            }
+        }
+        let t = rt(1, vec![(1_000_000, vec![NodeId(1)])]);
+        let plain = AdaptivePlacement::new();
+        for _ in 0..3 {
+            plain.stats().record_transfer(NodeId(2), 1_000, 1.0);
+            plain.stats().record_transfer(NodeId(3), 1_000, 1.0);
+        }
+        assert_eq!(plain.place(&t, 4, &DeadOneAliveRest), 2);
+        let paired = AdaptivePlacement::new();
+        for _ in 0..3 {
+            paired.stats().record_transfer(NodeId(2), 1_000, 1.0);
+            paired.stats().record_transfer(NodeId(3), 1_000, 1.0);
+        }
+        paired.stats().record_transfer_pair(NodeId(1), NodeId(2), 1_000, 1.0); // 1 KB/s
+        paired.stats().record_transfer_pair(NodeId(1), NodeId(3), 1 << 30, 1.0); // 1 GB/s
+        assert_eq!(paired.place(&t, 4, &DeadOneAliveRest), 3);
     }
 
     #[test]

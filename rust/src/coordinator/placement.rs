@@ -40,7 +40,7 @@
 //! |------|---------|
 //! | `bytes` | node holding the most resident input bytes, else round-robin (the historical `ShardedReady::route`) |
 //! | `cost` | node minimizing *bytes still to move* (in-flight transfers count as already local) plus a queue-depth load penalty |
-//! | `adaptive` | feedback-driven: minimizes estimated *time* — bytes still to move ÷ observed transfer bandwidth plus queue depth × observed task duration; cold-starts as `cost` (see [`feedback`](super::feedback)) |
+//! | `adaptive` | feedback-driven: minimizes estimated *time* — bytes still to move ÷ observed transfer bandwidth plus queue depth × observed task duration; cold-starts as `cost`; once the TCP transport's direct ships have measured real src→dst links it prices each input over the best observed *per-pair* bandwidth from a holding node (see [`feedback`](super::feedback)) |
 //! | `roundrobin` | strict rotation, ignoring locality (baseline / ablation) |
 //!
 //! Selected via `CoordinatorConfig.router` / `--router` (live) and

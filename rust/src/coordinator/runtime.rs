@@ -201,6 +201,15 @@ pub struct CoordinatorConfig {
     /// `rcompss worker --connect` registrations on this address instead
     /// of self-hosting loopback workers.
     pub listen: Option<String>,
+    /// TCP-only shared registration secret (`--token` / `RCOMPSS_TOKEN`):
+    /// workers (and worker-to-worker peer connections) must present it in
+    /// their `Hello` frame; a mismatch is rejected with a clean error.
+    /// `None` (default) disables auth.
+    pub token: Option<String>,
+    /// TCP-only direct worker-to-worker shipping (`--p2p` /
+    /// `RCOMPSS_P2P`): on by default; off forces every replica through
+    /// the coordinator relay path.
+    pub p2p: bool,
 }
 
 /// Default byte budget of the in-memory data plane — the single source of
@@ -258,6 +267,10 @@ impl CoordinatorConfig {
             compile: std::env::var("RCOMPSS_COMPILE").unwrap_or_else(|_| "off".into()),
             transport: std::env::var("RCOMPSS_TRANSPORT").unwrap_or_else(|_| "inproc".into()),
             listen: None,
+            token: std::env::var("RCOMPSS_TOKEN").ok().filter(|t| !t.is_empty()),
+            p2p: std::env::var("RCOMPSS_P2P")
+                .map(|v| !matches!(v.to_ascii_lowercase().as_str(), "off" | "0" | "false"))
+                .unwrap_or(true),
         }
     }
 
@@ -388,6 +401,21 @@ impl CoordinatorConfig {
     /// `addr` instead of self-hosting a loopback cluster.
     pub fn with_listen(mut self, addr: &str) -> Self {
         self.listen = Some(addr.into());
+        self
+    }
+
+    /// TCP transport only: require this shared secret in every `Hello`
+    /// (worker registration and worker-to-worker peer connections).
+    pub fn with_token(mut self, token: &str) -> Self {
+        self.token = Some(token.into());
+        self
+    }
+
+    /// TCP transport only: enable/disable direct worker-to-worker
+    /// shipping (on by default; off relays every replica through the
+    /// coordinator).
+    pub fn with_p2p(mut self, on: bool) -> Self {
+        self.p2p = on;
         self
     }
 }
@@ -521,6 +549,19 @@ pub struct RuntimeStats {
     /// Hot tier: peak resident bytes over the run. Aliasing keeps this
     /// flat where the greedy path stacks dying value + successor.
     pub hot_peak_bytes: u64,
+    /// TCP transport: blobs streamed directly worker-to-worker (`ShipTo`
+    /// → chunked peer stream). Zero on the in-process transport.
+    pub direct_ships: u64,
+    /// TCP transport: blobs relayed through the coordinator (`Put`).
+    pub relay_ships: u64,
+    /// TCP transport: relay `Put`s issued solely to seed a fresh
+    /// version's producer-side worker cache for direct fan-out.
+    pub seed_ships: u64,
+    /// TCP transport: direct ships that reused a pooled peer connection.
+    pub pool_hits: u64,
+    /// TCP transport: coordinator→worker request bytes (frame headers +
+    /// payloads). Direct shipping keeps this O(1) per version on fan-out.
+    pub coord_egress_bytes: u64,
 }
 
 /// Per-task metadata kept by the coordinator; shared with claimants as an
@@ -938,8 +979,10 @@ pub(crate) fn collect_version(shared: &Shared, act: &CollectAction) {
         }
     }
     // Drop the collected version's transfer-board entries (tombstones and
-    // never-run requests) so the board tracks live versions only.
+    // never-run requests) so the board tracks live versions only, and the
+    // transport's belief about which worker caches still hold the blob.
     shared.transfers.purge_version(act.key);
+    shared.transport.on_version_purged(act.key);
     shared.gc_collected.fetch_add(1, Ordering::Relaxed);
     shared.gc_bytes.fetch_add(act.bytes, Ordering::Relaxed);
 }
@@ -1210,8 +1253,14 @@ impl Coordinator {
                 } else {
                     DEFAULT_WARM_BUDGET
                 };
-                let t =
-                    TcpTransport::bind(config.nodes, config.listen.as_deref(), self_host, budget)?;
+                let t = TcpTransport::bind(
+                    config.nodes,
+                    config.listen.as_deref(),
+                    self_host,
+                    budget,
+                    config.token.clone(),
+                    config.p2p,
+                )?;
                 if config.nodes > 1 {
                     if !self_host {
                         println!(
@@ -1817,6 +1866,12 @@ impl Coordinator {
         stats.alias_reuses = shared.alias_reuses.load(Ordering::Relaxed);
         stats.placement_verdicts = shared.placement_verdicts.load(Ordering::Relaxed);
         stats.hot_peak_bytes = shared.store.hot().peak_resident_bytes();
+        let ship = shared.transport.ship_stats();
+        stats.direct_ships = ship.direct_ships;
+        stats.relay_ships = ship.relay_ships;
+        stats.seed_ships = ship.seed_ships;
+        stats.pool_hits = ship.pool_hits;
+        stats.coord_egress_bytes = ship.egress_bytes;
     }
 
     /// The observation sink behind an `adaptive` router (`None` for the

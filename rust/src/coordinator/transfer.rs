@@ -649,6 +649,11 @@ pub(crate) fn mover_loop(shared: Arc<Shared>, home: NodeId) {
         // but the board still says Running — the PR-4 class of
         // tombstone/GC races lives exactly in this gap.
         yield_point(&shared.transfers.fuzz, FuzzSite::TransferComplete);
+        // Per-destination staging throughput, observed coordinator-side.
+        // The *per-pair* link samples (`record_transfer_pair`) are fed by
+        // the TCP transport itself from its `ShipDone` acks — the source
+        // worker measures the direct src→dst stream, which this wall
+        // clock cannot see.
         if let (Some(fb), Ok(Some(nbytes))) = (&shared.feedback, &result) {
             fb.record_transfer(node, *nbytes, t0.elapsed().as_secs_f64());
         }

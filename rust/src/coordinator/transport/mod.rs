@@ -14,9 +14,12 @@
 //!   into the shared hot tier. The test-harness default.
 //! * [`TcpTransport`](tcp::TcpTransport) — real `rcompss worker` processes
 //!   registered over sockets: the same warm blob additionally ships to the
-//!   destination worker as a length-framed [`Put`](
-//!   crate::serialization::wire::FrameKind) frame, verbatim — zero
-//!   re-encode, zero coordinator-side file I/O for memory-resident values.
+//!   destination worker, verbatim — zero re-encode, zero coordinator-side
+//!   file I/O for memory-resident values. Two wire paths: a direct
+//!   worker-to-worker stream of chunked [`BlobChunk`](
+//!   crate::serialization::wire::FrameKind) frames triggered by a tiny
+//!   `ShipTo` control frame (the default), and the coordinator-relayed
+//!   `Put` frame (the `--p2p off` mode and the universal fallback).
 //!
 //! The invariance is pinned by running the unmodified integration and
 //! property suites against a loopback-TCP cluster
@@ -30,6 +33,24 @@ use crate::coordinator::registry::{DataKey, NodeId};
 use crate::coordinator::runtime::Shared;
 use crate::coordinator::store::{self, cold};
 use crate::value::RValue;
+
+/// Shipping-plane counters a transport may expose (all zero for
+/// transports without a wire, like [`InProcTransport`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShipStats {
+    /// Blobs streamed worker-to-worker (`ShipTo` → `BlobChunk`×k).
+    pub direct_ships: u64,
+    /// Blobs relayed through the coordinator (`Put`).
+    pub relay_ships: u64,
+    /// Relay `Put`s issued only to seed a fresh version's producer-side
+    /// cache so the rest of its fan-out can go direct.
+    pub seed_ships: u64,
+    /// Direct ships that reused a pooled peer connection.
+    pub pool_hits: u64,
+    /// Coordinator→worker request bytes (frame headers + payloads):
+    /// relay `Put`s count their blob, `ShipTo` only the control frame.
+    pub egress_bytes: u64,
+}
 
 /// One way of moving a replica of `key` onto `to`.
 ///
@@ -62,6 +83,16 @@ pub trait Transport: Send + Sync {
 
     /// A node rejoined (`add_node`). Re-open per-node resources.
     fn on_node_up(&self, _node: NodeId) {}
+
+    /// The version GC reclaimed `key`: drop any cached belief about where
+    /// its bytes live (the TCP transport's worker-cache location map).
+    fn on_version_purged(&self, _key: DataKey) {}
+
+    /// Shipping-plane counters for the stats surface; the default is all
+    /// zeros (no wire, nothing shipped).
+    fn ship_stats(&self) -> ShipStats {
+        ShipStats::default()
+    }
 
     /// Orderly teardown at `Coordinator::stop` (movers already joined).
     fn shutdown(&self) {}

@@ -2,15 +2,16 @@
 //!
 //! Topology: one coordinator owns the DAG, the scheduler, and the tiered
 //! store; `rcompss worker --connect <addr>` processes register over TCP
-//! and serve as **replica stores** — each holds a budget-bounded cache of
-//! the serialized blobs shipped to it, exactly the bytes a real
+//! and serve as **replica stores** — each holds a budget-bounded LRU
+//! cache of the serialized blobs shipped to it, exactly the bytes a real
 //! distributed claim would read. Node 0 is coordinator-resident (no
 //! socket); nodes `1..n` map to registered workers.
 //!
 //! A staging request becomes, on the wire (framing:
 //! [`crate::serialization::wire`], fixed little-endian header, payload =
 //! the warm tier's already-encoded `Arc<[u8]>` blob **verbatim** — zero
-//! re-encode):
+//! re-encode), one of two paths. The relay path (the original, still the
+//! universal fallback and the whole story with `--p2p off`):
 //!
 //! ```text
 //! coordinator                                worker (node n)
@@ -18,16 +19,46 @@
 //!     | ◀────────────────────────────── PutOk { } |
 //! ```
 //!
-//! with `Get`/`Blob`/`NotFound` as the reverse path (the coordinator
-//! pulling a blob back from a worker's cache — the last-resort source
-//! when its own tiers lost the bytes), and `Hello`/`Assign` as the
-//! registration handshake.
+//! and the **direct path** (default under `--transport tcp`): when a live
+//! worker's cache already holds the blob, the coordinator sends only a
+//! tiny `ShipTo` control frame and the bytes move worker-to-worker over a
+//! pooled peer socket, streamed in bounded CRC32-checked `BlobChunk`
+//! frames (1 MiB each) so a huge replica never materializes twice on
+//! either side of the link:
 //!
-//! Failure mapping: a dead socket is retried with the transfer board's
-//! own deterministic `retry_backoff` schedule; once the attempt budget is
-//! exhausted the node is routed through [`kill_node_now`] — the same
-//! poisoning path as `kill_node` — so a dropped worker looks exactly
-//! like a chaos node-kill to placement, GC, and lineage recovery.
+//! ```text
+//! coordinator                    worker src                worker dst
+//!     | ShipTo {key,dst,addr} ─────▶ |                          |
+//!     |                              | BlobChunk ×k ───────────▶|  (pooled peer
+//!     |                              | ◀─────────────── PutOk {}|   socket)
+//!     | ◀── ShipDone {key, status,   |                          |
+//!     |     bytes, nanos}            |                          |
+//! ```
+//!
+//! The first transfer of a fresh version has no worker-side copy yet (the
+//! producer ran in a coordinator thread), so the coordinator **seeds** the
+//! producer's worker cache with one relay `Put` and direct-ships from
+//! there — coordinator egress per version is O(1), not O(fan-out). The
+//! `ShipDone` ack carries measured bytes/wall-time, which feeds the
+//! `adaptive` router's *per-pair* bandwidth EWMAs: the model prices the
+//! real src→dst link, not a coordinator-relative average.
+//!
+//! `Get`/`Blob`/`NotFound` is the reverse path (the coordinator pulling a
+//! blob back from a worker's cache — the last-resort source when its own
+//! tiers lost the bytes), and `Hello`/`Assign` the registration
+//! handshake. `Hello` carries the worker's peer-listener port plus the
+//! shared secret (`--token` / `RCOMPSS_TOKEN`) when one is configured;
+//! a token mismatch is rejected with a clean `Error` frame on both the
+//! registration and the peer socket.
+//!
+//! Failure mapping: any direct-path failure (dead source, mid-stream peer
+//! death, stale cache, bad chunk) falls back to relay in the same fetch —
+//! the caller never sees it. A dead *relay* socket is retried with the
+//! transfer board's own deterministic `retry_backoff` schedule; once the
+//! attempt budget is exhausted the node is routed through
+//! [`kill_node_now`] — the same poisoning path as `kill_node` — so a
+//! dropped worker looks exactly like a chaos node-kill to placement, GC,
+//! and lineage recovery.
 //!
 //! Two bootstrap modes:
 //! * **self-hosted** (`RCOMPSS_TRANSPORT=tcp`, no `--listen`): the
@@ -41,22 +72,29 @@
 use std::collections::{HashMap, VecDeque};
 use std::io::Write as _;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use super::{publish_replica, Transport};
+use super::{publish_replica, ShipStats, Transport};
+use crate::coordinator::feedback::FeedbackStats;
 use crate::coordinator::registry::{DataId, DataKey, NodeId};
 use crate::coordinator::runtime::{kill_node_now, Shared};
 use crate::coordinator::store::{self, cold};
 use crate::coordinator::transfer::retry_backoff;
-use crate::serialization::wire::{read_frame, write_frame, Frame, FrameKind};
+use crate::serialization::wire::{
+    decode_chunk, read_frame, write_blob_chunks, write_frame, Frame, FrameKind,
+};
 
 /// Wire size of a `DataKey`: `data:u64(le) version:u32(le)`.
 const KEY_BYTES: usize = 12;
+
+/// Frame header bytes on the wire (`magic:u32 kind:u8 len:u64`), counted
+/// into the coordinator egress gauge alongside each payload.
+const FRAME_HEADER_BYTES: u64 = 13;
 
 /// `Hello` payload meaning "any free slot".
 const ANY_NODE: u32 = u32::MAX;
@@ -75,6 +113,29 @@ const SHIP_ATTEMPTS: u32 = 3;
 /// (worker thread spawned but not yet through the handshake).
 const SLOT_WAIT: Duration = Duration::from_millis(500);
 
+/// Connect budget for a fresh worker→worker peer socket; a peer that
+/// cannot even accept within this is reported failed and the coordinator
+/// relays instead.
+const PEER_CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Idle lifetime of a pooled peer connection; reaped lazily on the next
+/// `ShipTo` through the pool.
+const POOL_IDLE: Duration = Duration::from_secs(30);
+
+/// `ShipDone` status byte: the source could not deliver (connect/stream
+/// failure, malformed request) — coordinator falls back to relay.
+const SHIP_STATUS_FAILED: u8 = 0;
+/// Delivered over a freshly opened peer connection.
+const SHIP_STATUS_FRESH: u8 = 1;
+/// Delivered over a pooled (reused) peer connection.
+const SHIP_STATUS_POOLED: u8 = 2;
+/// The source's cache no longer holds the blob (evicted) — coordinator
+/// forgets the stale location and relays.
+const SHIP_STATUS_MISS: u8 = 3;
+
+/// `ShipDone` payload: `key(12) status(1) bytes:u64(le) nanos:u64(le)`.
+const SHIP_DONE_BYTES: usize = KEY_BYTES + 1 + 8 + 8;
+
 fn encode_key(key: DataKey) -> [u8; KEY_BYTES] {
     let mut out = [0u8; KEY_BYTES];
     out[..8].copy_from_slice(&key.data.0.to_le_bytes());
@@ -92,15 +153,20 @@ fn decode_key(payload: &[u8]) -> Result<DataKey> {
     })
 }
 
-/// The worker-side replica store: byte-budgeted FIFO of serialized blobs.
-/// Eviction is silent — the coordinator treats `NotFound` as a cache miss
-/// and falls back to its own tiers (which still hold every live version's
-/// bytes or lineage).
+/// The worker-side replica store: byte-budgeted **LRU** of serialized
+/// blobs. A `get` (local claim read *or* an outbound direct ship) renews
+/// the entry, so a hot replica fanning out to many peers is never evicted
+/// mid-fan-out by colder traffic. Eviction is silent — the coordinator
+/// treats a miss as exactly that and falls back to its own tiers (which
+/// still hold every live version's bytes or lineage). Blobs are
+/// `Arc<[u8]>` so an outbound peer stream borrows the bytes without
+/// copying them.
 struct BlobCache {
     budget: u64,
     used: u64,
+    /// Recency order, least-recent at the front.
     order: VecDeque<DataKey>,
-    blobs: HashMap<DataKey, Vec<u8>>,
+    blobs: HashMap<DataKey, Arc<[u8]>>,
 }
 
 impl BlobCache {
@@ -113,7 +179,7 @@ impl BlobCache {
         }
     }
 
-    fn insert(&mut self, key: DataKey, blob: Vec<u8>) {
+    fn insert(&mut self, key: DataKey, blob: Arc<[u8]>) {
         if let Some(old) = self.blobs.remove(&key) {
             self.used -= old.len() as u64;
             self.order.retain(|k| *k != key);
@@ -130,8 +196,12 @@ impl BlobCache {
         }
     }
 
-    fn get(&self, key: DataKey) -> Option<&Vec<u8>> {
-        self.blobs.get(&key)
+    fn get(&mut self, key: DataKey) -> Option<Arc<[u8]>> {
+        let blob = self.blobs.get(&key).cloned()?;
+        // LRU touch: move the key to the most-recent end.
+        self.order.retain(|k| *k != key);
+        self.order.push_back(key);
+        Some(blob)
     }
 }
 
@@ -143,10 +213,34 @@ pub struct TcpTransport {
     /// mutex is held across one request/reply exchange, serializing the
     /// movers' use of each worker's socket.
     peers: Vec<Mutex<Option<TcpStream>>>,
+    /// Per-node peer-listener address (registration-socket IP + the port
+    /// the worker announced in `Hello`); `None` until registered or for a
+    /// worker too old to announce one — such a node is relay-only.
+    ship_addrs: Vec<Mutex<Option<SocketAddr>>>,
     listen_addr: SocketAddr,
     /// Self-hosted loopback workers (threads) vs. external processes.
     self_host: bool,
     worker_budget: u64,
+    /// Shared registration secret; `None` disables auth.
+    token: Option<String>,
+    /// Direct worker-to-worker shipping (on by default; `--p2p off` /
+    /// `RCOMPSS_P2P=off` forces every blob through the relay path).
+    p2p: bool,
+    /// Which worker caches are *believed* to hold each key — noted on
+    /// every successful relay, seed, or direct ship; pruned on node death,
+    /// version GC, and `ShipDone` miss reports. Stale entries are safe:
+    /// the source answers "miss" and the fetch relays.
+    /// Lock order: `cache_locs` before any `peers` slot, never reverse.
+    cache_locs: Mutex<HashMap<DataKey, Vec<u32>>>,
+    direct_ships: AtomicU64,
+    relay_ships: AtomicU64,
+    seed_ships: AtomicU64,
+    pool_hits: AtomicU64,
+    /// Coordinator→worker request bytes (frame header + payload) — relay
+    /// `Put`s count their blob here, `ShipTo` counts only the tiny
+    /// control frame. The p2p win is this gauge staying O(1) per version
+    /// on fan-out instead of O(nodes).
+    egress_bytes: AtomicU64,
     shutting_down: AtomicBool,
     threads: Mutex<Vec<JoinHandle<()>>>,
 }
@@ -160,6 +254,8 @@ impl TcpTransport {
         listen: Option<&str>,
         self_host: bool,
         worker_budget: u64,
+        token: Option<String>,
+        p2p: bool,
     ) -> Result<Arc<TcpTransport>> {
         let addr = listen.unwrap_or("127.0.0.1:0");
         let listener = TcpListener::bind(addr)
@@ -168,9 +264,18 @@ impl TcpTransport {
         let t = Arc::new(TcpTransport {
             nodes: nodes.max(1),
             peers: (0..nodes.max(1)).map(|_| Mutex::new(None)).collect(),
+            ship_addrs: (0..nodes.max(1)).map(|_| Mutex::new(None)).collect(),
             listen_addr,
             self_host,
             worker_budget,
+            token,
+            p2p,
+            cache_locs: Mutex::new(HashMap::new()),
+            direct_ships: AtomicU64::new(0),
+            relay_ships: AtomicU64::new(0),
+            seed_ships: AtomicU64::new(0),
+            pool_hits: AtomicU64::new(0),
+            egress_bytes: AtomicU64::new(0),
             shutting_down: AtomicBool::new(false),
             threads: Mutex::new(Vec::new()),
         });
@@ -184,7 +289,12 @@ impl TcpTransport {
         );
         if self_host {
             for n in 1..nodes.max(1) {
-                threads.push(spawn_loopback_worker(listen_addr, n, worker_budget));
+                threads.push(spawn_loopback_worker(
+                    listen_addr,
+                    n,
+                    worker_budget,
+                    t.token.clone(),
+                ));
             }
         }
         drop(threads);
@@ -223,6 +333,11 @@ impl TcpTransport {
     /// Registration loop: accept, handshake (`Hello` → `Assign`), park
     /// the stream in its node slot. One bad handshake never kills the
     /// acceptor; shutdown is signalled by the flag plus a dummy connect.
+    ///
+    /// `Hello` payload: `preferred:u32(le)` followed (since the p2p
+    /// fabric) by `peer_port:u16(le)` and the raw token bytes. The old
+    /// 4-byte shape still parses — such a worker is relay-only and, when
+    /// a token is configured, rejected like any other mismatch.
     fn accept_loop(self: Arc<Self>, listener: TcpListener) {
         for stream in listener.incoming() {
             if self.shutting_down.load(Ordering::SeqCst) {
@@ -233,21 +348,46 @@ impl TcpTransport {
             // The handshake is bounded so a connect-and-stall client
             // cannot wedge registration forever.
             let _ = stream.set_read_timeout(Some(REPLY_TIMEOUT));
-            let hello = match read_frame(&mut stream) {
+            let (hello, peer_port, supplied) = match read_frame(&mut stream) {
                 Ok(Frame {
                     kind: FrameKind::Hello,
                     payload,
                 }) if payload.len() >= 4 => {
-                    u32::from_le_bytes(payload[..4].try_into().unwrap())
+                    let preferred = u32::from_le_bytes(payload[..4].try_into().unwrap());
+                    let peer_port = if payload.len() >= 6 {
+                        u16::from_le_bytes(payload[4..6].try_into().unwrap())
+                    } else {
+                        0
+                    };
+                    let supplied = payload.get(6..).unwrap_or(&[]).to_vec();
+                    (preferred, peer_port, supplied)
                 }
                 _ => continue,
             };
+            if let Some(expected) = &self.token {
+                if supplied != expected.as_bytes() {
+                    let _ = write_frame(
+                        &mut stream,
+                        FrameKind::Error,
+                        b"bad token: registration rejected \
+                          (pass the cluster secret via --token / RCOMPSS_TOKEN)",
+                    );
+                    continue;
+                }
+            }
             let assigned = self.assign_slot(hello, &stream);
             match assigned {
                 Some(node) => {
                     let _ = stream.set_read_timeout(Some(REPLY_TIMEOUT));
                     if write_frame(&mut stream, FrameKind::Assign, &node.to_le_bytes()).is_err() {
                         *self.peers[node as usize].lock().unwrap() = None;
+                    } else if peer_port != 0 {
+                        // Peer listener = the worker's announced port at
+                        // the IP its registration socket came from.
+                        if let Ok(remote) = stream.peer_addr() {
+                            *self.ship_addrs[node as usize].lock().unwrap() =
+                                Some(SocketAddr::new(remote.ip(), peer_port));
+                        }
                     }
                 }
                 None => {
@@ -288,8 +428,11 @@ impl TcpTransport {
 
     /// One request/reply exchange on `node`'s socket. Any error poisons
     /// the slot (socket closed and cleared) so the caller's retry path
-    /// sees a clean "not registered" state.
+    /// sees a clean "not registered" state. Every request is counted into
+    /// the coordinator egress gauge.
     fn exchange(&self, node: NodeId, kind: FrameKind, payload: &[u8]) -> Result<Frame> {
+        self.egress_bytes
+            .fetch_add(FRAME_HEADER_BYTES + payload.len() as u64, Ordering::Relaxed);
         let mut slot = self.peers[node.0 as usize].lock().unwrap();
         let Some(stream) = slot.as_mut() else {
             bail!("node {} has no registered worker", node.0);
@@ -306,10 +449,10 @@ impl TcpTransport {
         run
     }
 
-    /// Ship a blob to `node`'s replica cache, retrying with the transfer
-    /// board's deterministic backoff. `false` means the destination is
-    /// unreachable after the budget — the caller maps that to a node
-    /// death.
+    /// Relay-ship a blob to `node`'s replica cache, retrying with the
+    /// transfer board's deterministic backoff. `false` means the
+    /// destination is unreachable after the budget — the caller maps that
+    /// to a node death.
     fn ship(&self, key: DataKey, node: NodeId, blob: &[u8]) -> bool {
         let mut payload = Vec::with_capacity(KEY_BYTES + blob.len());
         payload.extend_from_slice(&encode_key(key));
@@ -363,6 +506,121 @@ impl TcpTransport {
             f => bail!("node {} answered Get with {:?}", node.0, f.kind),
         }
     }
+
+    /// Note that `node`'s cache (should) hold `key`.
+    fn cache_note(&self, key: DataKey, node: u32) {
+        if node == 0 {
+            return;
+        }
+        let mut locs = self.cache_locs.lock().unwrap();
+        let v = locs.entry(key).or_default();
+        if !v.contains(&node) {
+            v.push(node);
+        }
+    }
+
+    /// Drop a stale location claim (the source answered "miss").
+    fn cache_forget(&self, key: DataKey, node: u32) {
+        let mut locs = self.cache_locs.lock().unwrap();
+        if let Some(v) = locs.get_mut(&key) {
+            v.retain(|n| *n != node);
+            if v.is_empty() {
+                locs.remove(&key);
+            }
+        }
+    }
+
+    /// Pick (or create) a worker-side source for a direct ship of `key`
+    /// toward `to`: a live, peer-capable worker whose cache is believed
+    /// to hold the blob. When none exists — the version is fresh, its
+    /// bytes live only coordinator-side — **seed** the transfer-hint
+    /// worker (`from`, the producer's node) with one relay `Put` and use
+    /// it. Holding `cache_locs` across the seed makes seeding
+    /// single-flight: a concurrent fan-out mover blocks here and then
+    /// finds the seeded location instead of seeding again.
+    fn direct_source(
+        &self,
+        shared: &Shared,
+        key: DataKey,
+        from: Option<NodeId>,
+        to: NodeId,
+        blob: &[u8],
+    ) -> Option<u32> {
+        let mut locs = self.cache_locs.lock().unwrap();
+        if let Some(nodes) = locs.get(&key) {
+            for &n in nodes {
+                if n != 0
+                    && n != to.0
+                    && shared.health.is_alive(NodeId(n))
+                    && self.ship_addrs[n as usize].lock().unwrap().is_some()
+                {
+                    return Some(n);
+                }
+            }
+        }
+        let seed = from.filter(|s| {
+            s.0 != 0
+                && *s != to
+                && shared.health.is_alive(*s)
+                && self.ship_addrs[s.0 as usize].lock().unwrap().is_some()
+        })?;
+        if !self.ship(key, seed, blob) {
+            return None;
+        }
+        self.seed_ships.fetch_add(1, Ordering::Relaxed);
+        // Note inline — `cache_note` would re-lock the mutex we hold.
+        let v = locs.entry(key).or_default();
+        if !v.contains(&seed.0) {
+            v.push(seed.0);
+        }
+        Some(seed.0)
+    }
+
+    /// Ask worker `src` to stream `key` directly to `to`'s peer listener.
+    /// `true` means the destination's cache holds the blob and the pair
+    /// bandwidth sample (measured at the source) has been recorded; any
+    /// `false` means the caller should fall back to relay.
+    fn ship_direct(&self, fb: Option<&FeedbackStats>, key: DataKey, src: u32, to: NodeId) -> bool {
+        let dest = match *self.ship_addrs[to.0 as usize].lock().unwrap() {
+            Some(a) => a.to_string(),
+            None => return false,
+        };
+        let mut payload = Vec::with_capacity(KEY_BYTES + 4 + dest.len());
+        payload.extend_from_slice(&encode_key(key));
+        payload.extend_from_slice(&to.0.to_le_bytes());
+        payload.extend_from_slice(dest.as_bytes());
+        let reply = match self.exchange(NodeId(src), FrameKind::ShipTo, &payload) {
+            Ok(f) => f,
+            Err(_) => return false,
+        };
+        if reply.kind != FrameKind::ShipDone || reply.payload.len() < SHIP_DONE_BYTES {
+            return false;
+        }
+        let status = reply.payload[KEY_BYTES];
+        match status {
+            SHIP_STATUS_FRESH | SHIP_STATUS_POOLED => {
+                let bytes =
+                    u64::from_le_bytes(reply.payload[KEY_BYTES + 1..KEY_BYTES + 9].try_into().unwrap());
+                let nanos = u64::from_le_bytes(
+                    reply.payload[KEY_BYTES + 9..SHIP_DONE_BYTES].try_into().unwrap(),
+                );
+                self.direct_ships.fetch_add(1, Ordering::Relaxed);
+                if status == SHIP_STATUS_POOLED {
+                    self.pool_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                if let Some(fb) = fb {
+                    fb.record_transfer_pair(NodeId(src), to, bytes, nanos as f64 / 1e9);
+                }
+                self.cache_note(key, to.0);
+                true
+            }
+            SHIP_STATUS_MISS => {
+                self.cache_forget(key, src);
+                false
+            }
+            _ => false,
+        }
+    }
 }
 
 impl Transport for TcpTransport {
@@ -372,11 +630,15 @@ impl Transport for TcpTransport {
 
     /// Same staging contract as the in-process transport — warm blob
     /// first (one encode per fan-out), cold spill file as fallback, both
-    /// on the owning side — plus the socket hop: the destination worker
+    /// on the owning side — plus the wire hop: the destination worker
     /// receives the blob verbatim before the coordinator publishes the
-    /// replica. A destination that stays unreachable through the retry
-    /// budget is declared dead via the `kill_node` path and the transfer
-    /// is dropped, never failed.
+    /// replica. With p2p on the hop is attempted worker-to-worker first
+    /// (seeding the producer's cache once per version); **any** direct
+    /// failure — dead source, mid-stream peer death, stale location —
+    /// falls back to the relay path right here, so recovery semantics are
+    /// exactly the relay ones. A destination that stays unreachable
+    /// through the relay retry budget is declared dead via the
+    /// `kill_node` path and the transfer is dropped, never failed.
     fn fetch(
         &self,
         shared: &Shared,
@@ -413,24 +675,37 @@ impl Transport for TcpTransport {
             },
         };
         let nbytes = blob.len() as u64;
-        if to.0 != 0 && !self.ship(key, to, &blob) {
-            if self.shutting_down.load(Ordering::SeqCst) {
-                return Ok(None);
+        if to.0 != 0 {
+            let mut shipped = false;
+            if self.p2p && !self.shutting_down.load(Ordering::SeqCst) {
+                if let Some(src) = self.direct_source(shared, key, from, to, &blob) {
+                    shipped = self.ship_direct(shared.feedback.as_deref(), key, src, to);
+                }
             }
-            // Unreachable after the attempt budget: fold the loss into
-            // the existing recovery plane. `kill_node_now` poisons the
-            // node's transfer pairs (`fail_node`), drops its locations,
-            // and re-executes lost versions from lineage — a dropped
-            // worker is indistinguishable from a chaos `kill_node`.
-            if shared.health.is_alive(to) {
-                eprintln!(
-                    "tcp transport: node {} unreachable after {SHIP_ATTEMPTS} attempts; \
-                     declaring it dead",
-                    to.0
-                );
-                kill_node_now(shared, to);
+            if !shipped {
+                if !self.ship(key, to, &blob) {
+                    if self.shutting_down.load(Ordering::SeqCst) {
+                        return Ok(None);
+                    }
+                    // Unreachable after the attempt budget: fold the loss
+                    // into the existing recovery plane. `kill_node_now`
+                    // poisons the node's transfer pairs (`fail_node`),
+                    // drops its locations, and re-executes lost versions
+                    // from lineage — a dropped worker is indistinguishable
+                    // from a chaos `kill_node`.
+                    if shared.health.is_alive(to) {
+                        eprintln!(
+                            "tcp transport: node {} unreachable after {SHIP_ATTEMPTS} attempts; \
+                             declaring it dead",
+                            to.0
+                        );
+                        kill_node_now(shared, to);
+                    }
+                    return Ok(None);
+                }
+                self.relay_ships.fetch_add(1, Ordering::Relaxed);
+                self.cache_note(key, to.0);
             }
-            return Ok(None);
         }
         let value = Arc::new(shared.codec.decode(&blob)?);
         if !publish_replica(shared, key, to, value, has_file) {
@@ -440,13 +715,21 @@ impl Transport for TcpTransport {
     }
 
     /// `kill_node` / transport-detected death: close and clear the slot
-    /// so in-flight exchanges fail fast and a future rejoin re-registers
+    /// (plus the peer-listener address and every cache-location claim) so
+    /// in-flight exchanges fail fast and a future rejoin re-registers
     /// from scratch.
     fn on_node_down(&self, node: NodeId) {
         if (node.0 as usize) < self.peers.len() {
-            if let Some(s) = self.peers[node.0 as usize].lock().unwrap().take() {
+            let taken = self.peers[node.0 as usize].lock().unwrap().take();
+            if let Some(s) = taken {
                 let _ = s.shutdown(std::net::Shutdown::Both);
             }
+            *self.ship_addrs[node.0 as usize].lock().unwrap() = None;
+            let mut locs = self.cache_locs.lock().unwrap();
+            locs.retain(|_, v| {
+                v.retain(|n| *n != node.0);
+                !v.is_empty()
+            });
         }
     }
 
@@ -456,8 +739,29 @@ impl Transport for TcpTransport {
     /// acceptor fills the free slot whenever it arrives.
     fn on_node_up(&self, node: NodeId) {
         if self.self_host && node.0 != 0 && node.0 < self.nodes {
-            let handle = spawn_loopback_worker(self.listen_addr, node.0, self.worker_budget);
+            let handle = spawn_loopback_worker(
+                self.listen_addr,
+                node.0,
+                self.worker_budget,
+                self.token.clone(),
+            );
             self.threads.lock().unwrap().push(handle);
+        }
+    }
+
+    /// Version GC: its blob is gone everywhere that matters — stop
+    /// believing any worker cache still holds it.
+    fn on_version_purged(&self, key: DataKey) {
+        self.cache_locs.lock().unwrap().remove(&key);
+    }
+
+    fn ship_stats(&self) -> ShipStats {
+        ShipStats {
+            direct_ships: self.direct_ships.load(Ordering::Relaxed),
+            relay_ships: self.relay_ships.load(Ordering::Relaxed),
+            seed_ships: self.seed_ships.load(Ordering::Relaxed),
+            pool_hits: self.pool_hits.load(Ordering::Relaxed),
+            egress_bytes: self.egress_bytes.load(Ordering::Relaxed),
         }
     }
 
@@ -479,24 +783,328 @@ impl Transport for TcpTransport {
     }
 }
 
-fn spawn_loopback_worker(addr: SocketAddr, node: u32, budget: u64) -> JoinHandle<()> {
+fn spawn_loopback_worker(
+    addr: SocketAddr,
+    node: u32,
+    budget: u64,
+    token: Option<String>,
+) -> JoinHandle<()> {
     std::thread::Builder::new()
         .name(format!("rcompss-worker-{node}"))
         .spawn(move || {
-            let _ = run_worker(&addr.to_string(), Some(node), budget, true);
+            let _ = run_worker(&addr.to_string(), Some(node), budget, true, token.as_deref());
         })
         .expect("spawn loopback worker")
 }
 
+/// Per-destination pool of outbound peer sockets on the source worker.
+/// Keyed by the destination's peer-listener address; idle entries are
+/// reaped lazily on the next ship. A pooled socket that turns out stale
+/// (destination restarted, idle-closed underneath us) costs one failed
+/// attempt — the ship retries once on a fresh connection.
+struct PeerPool {
+    conns: HashMap<String, (TcpStream, Instant)>,
+}
+
+impl PeerPool {
+    fn new() -> PeerPool {
+        PeerPool {
+            conns: HashMap::new(),
+        }
+    }
+
+    /// Stream one blob to `dest`, pooling the connection afterwards.
+    /// `Ok(true)` = delivered over a reused connection (a pool hit).
+    fn ship(
+        &mut self,
+        dest: &str,
+        my_node: u32,
+        token: Option<&str>,
+        id: [u8; 12],
+        blob: &[u8],
+    ) -> Result<bool> {
+        self.reap();
+        if let Some((mut s, _)) = self.conns.remove(dest) {
+            if stream_blob(&mut s, id, blob).is_ok() {
+                self.conns.insert(dest.to_owned(), (s, Instant::now()));
+                return Ok(true);
+            }
+        }
+        let mut s = peer_connect(dest, my_node, token)?;
+        stream_blob(&mut s, id, blob)?;
+        self.conns.insert(dest.to_owned(), (s, Instant::now()));
+        Ok(false)
+    }
+
+    fn reap(&mut self) {
+        self.conns.retain(|_, (s, last)| {
+            if last.elapsed() <= POOL_IDLE {
+                true
+            } else {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+                false
+            }
+        });
+    }
+
+    fn close_all(&mut self) {
+        for (_, (s, _)) in self.conns.drain() {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+/// Open and authenticate a fresh peer connection: `Hello { my_node,
+/// token }` → `Assign` (accepted) | `Error` (bad token).
+fn peer_connect(dest: &str, my_node: u32, token: Option<&str>) -> Result<TcpStream> {
+    let addr: SocketAddr = dest
+        .parse()
+        .with_context(|| format!("bad peer address {dest:?}"))?;
+    let mut s = TcpStream::connect_timeout(&addr, PEER_CONNECT_TIMEOUT)
+        .with_context(|| format!("cannot reach peer {dest}"))?;
+    let _ = s.set_nodelay(true);
+    let _ = s.set_read_timeout(Some(REPLY_TIMEOUT));
+    let mut hello = Vec::with_capacity(4 + token.map_or(0, str::len));
+    hello.extend_from_slice(&my_node.to_le_bytes());
+    if let Some(tok) = token {
+        hello.extend_from_slice(tok.as_bytes());
+    }
+    write_frame(&mut s, FrameKind::Hello, &hello)?;
+    match read_frame(&mut s)? {
+        Frame {
+            kind: FrameKind::Assign,
+            ..
+        } => Ok(s),
+        Frame {
+            kind: FrameKind::Error,
+            payload,
+        } => bail!(
+            "peer {dest} refused connection: {}",
+            String::from_utf8_lossy(&payload)
+        ),
+        f => bail!("unexpected peer handshake reply: {:?}", f.kind),
+    }
+}
+
+/// Stream one blob as bounded `BlobChunk` frames and wait for the
+/// receiver's `PutOk` — the single ack covers the whole blob.
+fn stream_blob(s: &mut TcpStream, id: [u8; 12], blob: &[u8]) -> Result<()> {
+    write_blob_chunks(s, id, blob)?;
+    s.flush()?;
+    match read_frame(s)? {
+        Frame {
+            kind: FrameKind::PutOk,
+            ..
+        } => Ok(()),
+        Frame {
+            kind: FrameKind::Error,
+            payload,
+        } => bail!("peer rejected blob: {}", String::from_utf8_lossy(&payload)),
+        f => bail!("unexpected blob ack: {:?}", f.kind),
+    }
+}
+
+/// Source-side handling of one `ShipTo { key, dest_node, dest_addr }`:
+/// look the blob up in the local cache (an LRU touch — fan-out keeps it
+/// hot) and stream it to the destination peer. Always returns a
+/// `ShipDone` payload; failures are reported as a status byte, never as
+/// a dead coordinator socket.
+fn handle_ship_to(
+    payload: &[u8],
+    my_node: u32,
+    cache: &Arc<Mutex<BlobCache>>,
+    pool: &mut PeerPool,
+    token: Option<&str>,
+) -> Vec<u8> {
+    let mut done = vec![0u8; SHIP_DONE_BYTES];
+    if payload.len() < KEY_BYTES + 4 {
+        return done; // SHIP_STATUS_FAILED with a zero key
+    }
+    done[..KEY_BYTES].copy_from_slice(&payload[..KEY_BYTES]);
+    let Ok(key) = decode_key(payload) else {
+        return done;
+    };
+    let Ok(dest) = std::str::from_utf8(&payload[KEY_BYTES + 4..]) else {
+        return done;
+    };
+    if dest.is_empty() {
+        return done;
+    }
+    let Some(blob) = cache.lock().unwrap().get(key) else {
+        done[KEY_BYTES] = SHIP_STATUS_MISS;
+        return done;
+    };
+    let id: [u8; 12] = payload[..KEY_BYTES].try_into().unwrap();
+    let t0 = Instant::now();
+    match pool.ship(dest, my_node, token, id, &blob) {
+        Ok(pooled) => {
+            done[KEY_BYTES] = if pooled {
+                SHIP_STATUS_POOLED
+            } else {
+                SHIP_STATUS_FRESH
+            };
+            done[KEY_BYTES + 1..KEY_BYTES + 9]
+                .copy_from_slice(&(blob.len() as u64).to_le_bytes());
+            done[KEY_BYTES + 9..SHIP_DONE_BYTES]
+                .copy_from_slice(&(t0.elapsed().as_nanos() as u64).to_le_bytes());
+        }
+        Err(_) => {} // status stays SHIP_STATUS_FAILED → coordinator relays
+    }
+    done
+}
+
+/// Destination-side peer server: accept inbound peer connections and
+/// hand each to its own handler thread. Inbound streams are tracked so
+/// worker teardown can unblock the (blocking) handler reads.
+fn peer_accept_loop(
+    listener: TcpListener,
+    cache: Arc<Mutex<BlobCache>>,
+    token: Option<String>,
+    stop: Arc<AtomicBool>,
+    inbound: Arc<Mutex<Vec<TcpStream>>>,
+) {
+    let mut handlers = Vec::new();
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        let _ = stream.set_nodelay(true);
+        if let Ok(clone) = stream.try_clone() {
+            inbound.lock().unwrap().push(clone);
+        }
+        let cache = Arc::clone(&cache);
+        let token = token.clone();
+        if let Ok(h) = std::thread::Builder::new()
+            .name("rcompss-peer".into())
+            .spawn(move || serve_peer(stream, cache, token))
+        {
+            handlers.push(h);
+        }
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+/// One inbound peer connection: authenticate, then assemble in-order
+/// `BlobChunk` streams into the local cache, acking each completed blob
+/// with a single `PutOk`. Any protocol violation (out-of-order offset,
+/// CRC mismatch, inconsistent totals) earns an `Error` frame and a
+/// closed connection — the source maps that to a failed ship and the
+/// coordinator relays.
+fn serve_peer(mut stream: TcpStream, cache: Arc<Mutex<BlobCache>>, token: Option<String>) {
+    let hello = match read_frame(&mut stream) {
+        Ok(Frame {
+            kind: FrameKind::Hello,
+            payload,
+        }) if payload.len() >= 4 => payload,
+        _ => return,
+    };
+    if let Some(expected) = &token {
+        if hello.get(4..).unwrap_or(&[]) != expected.as_bytes() {
+            let _ = write_frame(
+                &mut stream,
+                FrameKind::Error,
+                b"bad token: peer connection rejected",
+            );
+            return;
+        }
+    }
+    if write_frame(&mut stream, FrameKind::Assign, &[]).is_err() {
+        return;
+    }
+    let _ = stream.flush();
+    // One blob in flight per connection: (key, bytes so far, total).
+    let mut pending: Option<(DataKey, Vec<u8>, u64)> = None;
+    loop {
+        let frame = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(_) => return,
+        };
+        match frame.kind {
+            FrameKind::BlobChunk => {
+                let chunk = match decode_chunk(&frame.payload) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        let _ = write_frame(
+                            &mut stream,
+                            FrameKind::Error,
+                            format!("bad chunk: {e}").as_bytes(),
+                        );
+                        return;
+                    }
+                };
+                let Ok(key) = decode_key(&chunk.id) else {
+                    let _ = write_frame(&mut stream, FrameKind::Error, b"bad chunk key");
+                    return;
+                };
+                if chunk.offset == 0 {
+                    // Bounded prealloc: trust `total` only up to a cap so
+                    // a lying header cannot balloon memory up front.
+                    let cap = (chunk.total as usize).min(8 << 20);
+                    pending = Some((key, Vec::with_capacity(cap), chunk.total));
+                }
+                let Some((pkey, buf, total)) = pending.as_mut() else {
+                    let _ = write_frame(&mut stream, FrameKind::Error, b"chunk with no open blob");
+                    return;
+                };
+                if *pkey != key || chunk.offset != buf.len() as u64 || chunk.total != *total {
+                    let _ = write_frame(&mut stream, FrameKind::Error, b"out-of-order chunk");
+                    return;
+                }
+                buf.extend_from_slice(&chunk.data);
+                if buf.len() as u64 == *total {
+                    let (key, buf, _) = pending.take().unwrap();
+                    cache
+                        .lock()
+                        .unwrap()
+                        .insert(key, Arc::from(buf.into_boxed_slice()));
+                    if write_frame(&mut stream, FrameKind::PutOk, &[]).is_err() {
+                        return;
+                    }
+                    let _ = stream.flush();
+                }
+            }
+            FrameKind::Shutdown => return,
+            other => {
+                let _ = write_frame(
+                    &mut stream,
+                    FrameKind::Error,
+                    format!("unexpected peer frame {other:?}").as_bytes(),
+                );
+                return;
+            }
+        }
+    }
+}
+
 /// Body of `rcompss worker --connect <addr>` (and of the self-hosted
-/// loopback worker threads): register, then serve the replica cache until
-/// the coordinator says `Shutdown` or the socket dies. Connection is
-/// retried for ~10 s so workers may start before (or racing) the
-/// coordinator.
-pub fn run_worker(addr: &str, preferred: Option<u32>, budget: u64, quiet: bool) -> Result<()> {
+/// loopback worker threads): register (announcing the peer-listener port
+/// and the shared token), then serve the replica cache — coordinator
+/// `Put`/`Get`/`ShipTo` on the registration socket, inbound peer streams
+/// on the peer listener — until the coordinator says `Shutdown` or the
+/// socket dies. Connection is retried for ~10 s so workers may start
+/// before (or racing) the coordinator.
+pub fn run_worker(
+    addr: &str,
+    preferred: Option<u32>,
+    budget: u64,
+    quiet: bool,
+    token: Option<&str>,
+) -> Result<()> {
     let mut stream = connect_with_retry(addr, Duration::from_secs(10))?;
     let _ = stream.set_nodelay(true);
-    let hello = preferred.unwrap_or(ANY_NODE).to_le_bytes();
+    // Direct worker-to-worker streams land on this listener; its port
+    // rides in the Hello so the coordinator can hand out our address.
+    let peer_listener = TcpListener::bind(SocketAddr::new(stream.local_addr()?.ip(), 0))?;
+    let peer_addr = peer_listener.local_addr()?;
+    let mut hello = Vec::with_capacity(6 + token.map_or(0, str::len));
+    hello.extend_from_slice(&preferred.unwrap_or(ANY_NODE).to_le_bytes());
+    hello.extend_from_slice(&peer_addr.port().to_le_bytes());
+    if let Some(tok) = token {
+        hello.extend_from_slice(tok.as_bytes());
+    }
     write_frame(&mut stream, FrameKind::Hello, &hello)?;
     let node = match read_frame(&mut stream)? {
         Frame {
@@ -513,37 +1121,72 @@ pub fn run_worker(addr: &str, preferred: Option<u32>, budget: u64, quiet: bool) 
         f => bail!("unexpected registration reply: {:?}", f.kind),
     };
     if !quiet {
-        println!("rcompss worker: registered as node {node} on {addr} (budget {budget} B)");
+        println!(
+            "rcompss worker: registered as node {node} on {addr} \
+             (budget {budget} B, peer {peer_addr})"
+        );
     }
-    let mut cache = BlobCache::new(budget);
-    loop {
-        let frame = match read_frame(&mut stream) {
-            Ok(f) => f,
-            // Coordinator gone (EOF/reset): a worker has no state worth
-            // saving — exit quietly.
-            Err(_) => return Ok(()),
-        };
-        match frame.kind {
-            FrameKind::Put => {
-                let key = decode_key(&frame.payload)?;
-                cache.insert(key, frame.payload[KEY_BYTES..].to_vec());
-                write_frame(&mut stream, FrameKind::PutOk, &[])?;
-            }
-            FrameKind::Get => {
-                let key = decode_key(&frame.payload)?;
-                match cache.get(key) {
-                    Some(blob) => write_frame(&mut stream, FrameKind::Blob, blob)?,
-                    None => write_frame(&mut stream, FrameKind::NotFound, &[])?,
+    let cache = Arc::new(Mutex::new(BlobCache::new(budget)));
+    let stop = Arc::new(AtomicBool::new(false));
+    let inbound: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+    let acceptor = {
+        let cache = Arc::clone(&cache);
+        let token = token.map(str::to_owned);
+        let stop = Arc::clone(&stop);
+        let inbound = Arc::clone(&inbound);
+        std::thread::Builder::new()
+            .name(format!("rcompss-peer-accept-{node}"))
+            .spawn(move || peer_accept_loop(peer_listener, cache, token, stop, inbound))
+            .expect("spawn peer acceptor")
+    };
+    let mut pool = PeerPool::new();
+    let result = (|| -> Result<()> {
+        loop {
+            let frame = match read_frame(&mut stream) {
+                Ok(f) => f,
+                // Coordinator gone (EOF/reset): a worker has no state
+                // worth saving — exit quietly.
+                Err(_) => return Ok(()),
+            };
+            match frame.kind {
+                FrameKind::Put => {
+                    let key = decode_key(&frame.payload)?;
+                    let blob: Arc<[u8]> = Arc::from(&frame.payload[KEY_BYTES..]);
+                    cache.lock().unwrap().insert(key, blob);
+                    write_frame(&mut stream, FrameKind::PutOk, &[])?;
+                }
+                FrameKind::Get => {
+                    let key = decode_key(&frame.payload)?;
+                    let blob = cache.lock().unwrap().get(key);
+                    match blob {
+                        Some(blob) => write_frame(&mut stream, FrameKind::Blob, &blob)?,
+                        None => write_frame(&mut stream, FrameKind::NotFound, &[])?,
+                    }
+                }
+                FrameKind::ShipTo => {
+                    let done = handle_ship_to(&frame.payload, node, &cache, &mut pool, token);
+                    write_frame(&mut stream, FrameKind::ShipDone, &done)?;
+                }
+                FrameKind::Shutdown => return Ok(()),
+                other => {
+                    let msg = format!("unexpected frame {other:?}");
+                    write_frame(&mut stream, FrameKind::Error, msg.as_bytes())?;
                 }
             }
-            FrameKind::Shutdown => return Ok(()),
-            other => {
-                let msg = format!("unexpected frame {other:?}");
-                write_frame(&mut stream, FrameKind::Error, msg.as_bytes())?;
-            }
+            stream.flush()?;
         }
-        stream.flush()?;
+    })();
+    // Teardown: stop the peer plane — flag, close outbound pool and
+    // tracked inbound streams (unblocks handler reads), dummy connect to
+    // unblock the acceptor, join (the acceptor joins its handlers).
+    stop.store(true, Ordering::SeqCst);
+    pool.close_all();
+    for s in inbound.lock().unwrap().drain(..) {
+        let _ = s.shutdown(std::net::Shutdown::Both);
     }
+    let _ = TcpStream::connect(peer_addr);
+    let _ = acceptor.join();
+    result
 }
 
 fn connect_with_retry(addr: &str, budget: Duration) -> Result<TcpStream> {
@@ -570,23 +1213,42 @@ mod tests {
         }
     }
 
+    fn blob(len: usize, fill: u8) -> Arc<[u8]> {
+        Arc::from(vec![fill; len].into_boxed_slice())
+    }
+
     #[test]
-    fn blob_cache_evicts_fifo_within_budget() {
+    fn blob_cache_evicts_lru_within_budget() {
         let mut c = BlobCache::new(100);
-        c.insert(key(1, 1), vec![0u8; 40]);
-        c.insert(key(2, 1), vec![0u8; 40]);
+        c.insert(key(1, 1), blob(40, 0));
+        c.insert(key(2, 1), blob(40, 0));
+        // Touch (1,1): it becomes most-recent, so the next eviction takes
+        // (2,1) — the least recently used — not the oldest-inserted.
         assert!(c.get(key(1, 1)).is_some());
-        c.insert(key(3, 1), vec![0u8; 40]);
-        // Oldest out first; the two newest fit the budget.
-        assert!(c.get(key(1, 1)).is_none());
-        assert!(c.get(key(2, 1)).is_some());
+        c.insert(key(3, 1), blob(40, 0));
+        assert!(c.get(key(2, 1)).is_none());
+        assert!(c.get(key(1, 1)).is_some());
         assert!(c.get(key(3, 1)).is_some());
         // Re-inserting an existing key replaces, never double-counts.
-        c.insert(key(3, 1), vec![1u8; 60]);
+        c.insert(key(3, 1), blob(60, 1));
         assert_eq!(c.get(key(3, 1)).unwrap().len(), 60);
         // A single over-budget blob is still held (the floor keeps one).
-        c.insert(key(4, 1), vec![0u8; 400]);
+        c.insert(key(4, 1), blob(400, 0));
         assert!(c.get(key(4, 1)).is_some());
+    }
+
+    #[test]
+    fn blob_cache_get_renews_against_fanout_eviction() {
+        // The fan-out pattern that motivated LRU: one hot replica being
+        // shipped to many peers (a get per ship) while colder inserts
+        // stream through. FIFO would evict the hot blob; LRU never does.
+        let mut c = BlobCache::new(100);
+        c.insert(key(7, 1), blob(40, 7));
+        for d in 0..8u64 {
+            assert!(c.get(key(7, 1)).is_some(), "hot blob evicted at step {d}");
+            c.insert(key(100 + d, 1), blob(40, 0));
+        }
+        assert!(c.get(key(7, 1)).is_some());
     }
 
     #[test]
@@ -600,11 +1262,11 @@ mod tests {
     fn external_registration_ship_and_get_roundtrip() {
         // 3 nodes: coordinator-resident 0 plus two external workers that
         // connect like `rcompss worker` processes would.
-        let t = TcpTransport::bind(3, Some("127.0.0.1:0"), false, 1 << 20).unwrap();
+        let t = TcpTransport::bind(3, Some("127.0.0.1:0"), false, 1 << 20, None, true).unwrap();
         let addr = t.listen_addr().to_string();
         let (a1, a2) = (addr.clone(), addr.clone());
-        let w1 = std::thread::spawn(move || run_worker(&a1, Some(1), 1 << 20, true));
-        let w2 = std::thread::spawn(move || run_worker(&a2, Some(2), 1 << 20, true));
+        let w1 = std::thread::spawn(move || run_worker(&a1, Some(1), 1 << 20, true, None));
+        let w2 = std::thread::spawn(move || run_worker(&a2, Some(2), 1 << 20, true, None));
         t.wait_registered(Duration::from_secs(5)).unwrap();
 
         let k = key(42, 7);
@@ -623,13 +1285,88 @@ mod tests {
     }
 
     #[test]
+    fn direct_ship_streams_worker_to_worker_and_pools_the_link() {
+        let t = TcpTransport::bind(3, Some("127.0.0.1:0"), false, 1 << 24, None, true).unwrap();
+        let addr = t.listen_addr().to_string();
+        let (a1, a2) = (addr.clone(), addr.clone());
+        let w1 = std::thread::spawn(move || run_worker(&a1, Some(1), 1 << 24, true, None));
+        let w2 = std::thread::spawn(move || run_worker(&a2, Some(2), 1 << 24, true, None));
+        t.wait_registered(Duration::from_secs(5)).unwrap();
+
+        // Two blobs on worker 1 — the second spans multiple chunks so the
+        // streamed reassembly is exercised end to end.
+        let k1 = key(1, 1);
+        let k2 = key(2, 1);
+        let b1: Vec<u8> = (0..4096u32).map(|b| (b % 251) as u8).collect();
+        let b2: Vec<u8> = (0..(crate::serialization::wire::CHUNK_BYTES + 777))
+            .map(|b| (b % 253) as u8)
+            .collect();
+        assert!(t.ship(k1, NodeId(1), &b1));
+        assert!(t.ship(k2, NodeId(1), &b2));
+
+        // Direct-ship both 1 → 2; the second ship reuses the pooled peer
+        // connection (a pool hit, reported by the source in ShipDone).
+        assert!(t.ship_direct(None, k1, 1, NodeId(2)));
+        assert!(t.ship_direct(None, k2, 1, NodeId(2)));
+        let s = t.ship_stats();
+        assert_eq!(s.direct_ships, 2);
+        assert_eq!(s.pool_hits, 1);
+
+        // The bytes landed verbatim in the destination's cache.
+        assert_eq!(&t.get_remote(NodeId(2), k1).unwrap().unwrap()[..], &b1[..]);
+        assert_eq!(&t.get_remote(NodeId(2), k2).unwrap().unwrap()[..], &b2[..]);
+
+        // A stale location claim is a reported miss, not a hang: the
+        // source answers SHIP_STATUS_MISS and the claim is forgotten.
+        let k3 = key(3, 1);
+        t.cache_note(k3, 1);
+        assert!(!t.ship_direct(None, k3, 1, NodeId(2)));
+        assert_eq!(t.ship_stats().direct_ships, 2);
+        assert!(t.cache_locs.lock().unwrap().get(&k3).is_none());
+
+        t.shutdown();
+        w1.join().unwrap().unwrap();
+        w2.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn token_mismatch_is_rejected_cleanly() {
+        let t = TcpTransport::bind(
+            2,
+            Some("127.0.0.1:0"),
+            false,
+            1 << 20,
+            Some("sesame".into()),
+            true,
+        )
+        .unwrap();
+        let addr = t.listen_addr().to_string();
+        // Wrong token: refused with a message naming the knob.
+        let err = run_worker(&addr, Some(1), 1 << 20, true, Some("guess"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("bad token"), "{err}");
+        // No token at all: same refusal.
+        let err = run_worker(&addr, Some(1), 1 << 20, true, None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("bad token"), "{err}");
+        // Right token: registers normally.
+        let a1 = addr.clone();
+        let w1 = std::thread::spawn(move || run_worker(&a1, Some(1), 1 << 20, true, Some("sesame")));
+        t.wait_registered(Duration::from_secs(5)).unwrap();
+        t.shutdown();
+        w1.join().unwrap().unwrap();
+    }
+
+    #[test]
     fn preferred_slot_collision_falls_to_lowest_free() {
-        let t = TcpTransport::bind(3, Some("127.0.0.1:0"), false, 1 << 20).unwrap();
+        let t = TcpTransport::bind(3, Some("127.0.0.1:0"), false, 1 << 20, None, true).unwrap();
         let addr = t.listen_addr().to_string();
         let (a1, a2) = (addr.clone(), addr.clone());
         // Both prefer node 1: one gets it, the other falls to slot 2.
-        let w1 = std::thread::spawn(move || run_worker(&a1, Some(1), 1 << 20, true));
-        let w2 = std::thread::spawn(move || run_worker(&a2, Some(1), 1 << 20, true));
+        let w1 = std::thread::spawn(move || run_worker(&a1, Some(1), 1 << 20, true, None));
+        let w2 = std::thread::spawn(move || run_worker(&a2, Some(1), 1 << 20, true, None));
         t.wait_registered(Duration::from_secs(5)).unwrap();
         t.shutdown();
         w1.join().unwrap().unwrap();
@@ -638,7 +1375,7 @@ mod tests {
 
     #[test]
     fn unregistered_cluster_times_out_with_join_hint() {
-        let t = TcpTransport::bind(2, Some("127.0.0.1:0"), false, 1 << 20).unwrap();
+        let t = TcpTransport::bind(2, Some("127.0.0.1:0"), false, 1 << 20, None, true).unwrap();
         let err = t
             .wait_registered(Duration::from_millis(50))
             .unwrap_err()
@@ -647,6 +1384,8 @@ mod tests {
         // Shipping toward the empty slot fails cleanly (no panic, no hang
         // beyond the bounded slot wait + backoff).
         assert!(!t.ship(key(1, 1), NodeId(1), b"bytes"));
+        // So does a direct ship toward it (no peer address registered).
+        assert!(!t.ship_direct(None, key(1, 1), 1, NodeId(1)));
         t.shutdown();
     }
 }

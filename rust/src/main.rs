@@ -136,8 +136,11 @@ USAGE:
                  [--compile off|window (DAG window compiler: cull/fuse/alias/place)]
                  [--transport inproc|tcp (replica shipping; default inproc)]
                  [--listen ADDR (tcp: accept external worker registrations)]
+                 [--token SECRET (tcp: shared registration secret; RCOMPSS_TOKEN)]
+                 [--p2p on|off (tcp: direct worker-to-worker shipping; default on)]
   rcompss worker --connect ADDR (join a coordinator as a replica-serving node)
                  [--node N (preferred node slot)] [--budget BYTES (replica cache)]
+                 [--token SECRET (must match the coordinator's; RCOMPSS_TOKEN)]
   rcompss sim    --app knn|kmeans|linreg --machine shaheen3|marenostrum5
                  [--nodes N] [--workers-per-node W] [--fragments F]
                  [--scheduler fifo|lifo|locality] [--router bytes|cost|roundrobin|adaptive]
@@ -216,6 +219,21 @@ fn cmd_run(opts: &Opts) -> anyhow::Result<()> {
     // tcp (listening makes no sense in-process).
     if opts.has("transport") {
         config = config.with_transport(&opts.get("transport", "inproc"));
+    }
+    if opts.has("token") {
+        let token = opts.get("token", "");
+        if token.is_empty() || token == "true" {
+            anyhow::bail!("--token expects a non-empty shared secret");
+        }
+        config = config.with_token(&token);
+    }
+    // Overrides the RCOMPSS_P2P default (on).
+    if opts.has("p2p") {
+        config = config.with_p2p(match opts.get("p2p", "on").as_str() {
+            "on" | "true" => true,
+            "off" | "false" => false,
+            other => anyhow::bail!("--p2p expects on|off, got '{other}'"),
+        });
     }
     if opts.has("listen") {
         let addr = opts.get("listen", "");
@@ -341,6 +359,16 @@ fn cmd_run(opts: &Opts) -> anyhow::Result<()> {
             stats.sync_transfer_decodes,
         );
     }
+    if transport == "tcp" {
+        println!(
+            "p2p: {} direct, {} relay, {} seed ships, {} pool hits, coordinator egress {}",
+            stats.direct_ships,
+            stats.relay_ships,
+            stats.seed_ships,
+            stats.pool_hits,
+            rcompss::util::table::fmt_bytes(stats.coord_egress_bytes as usize),
+        );
+    }
     if gc {
         println!(
             "gc: {} versions reclaimed / {}, {} spill files deleted, dead bytes at exit: {}",
@@ -395,7 +423,17 @@ fn cmd_worker(opts: &Opts) -> anyhow::Result<()> {
         None
     };
     let budget = opts.get_usize("budget", 64 << 20)? as u64;
-    run_tcp_worker(&addr, preferred, budget, false)
+    // `--token` wins over the RCOMPSS_TOKEN environment fallback.
+    let token = if opts.has("token") {
+        let t = opts.get("token", "");
+        if t.is_empty() || t == "true" {
+            anyhow::bail!("--token expects a non-empty shared secret");
+        }
+        Some(t)
+    } else {
+        std::env::var("RCOMPSS_TOKEN").ok().filter(|t| !t.is_empty())
+    };
+    run_tcp_worker(&addr, preferred, budget, false, token.as_deref())
 }
 
 fn build_plan(

@@ -386,6 +386,20 @@ pub enum FrameKind {
     Error = 8,
     /// Coordinator → worker: orderly shutdown, no reply expected.
     Shutdown = 9,
+    /// Coordinator → source worker: stream a cached replica directly to a
+    /// peer worker; payload = key (12 bytes) + destination node id
+    /// (`u32` LE) + destination peer address (UTF-8).
+    ShipTo = 10,
+    /// Source worker → coordinator: `ShipTo` verdict; payload = key
+    /// (12 bytes) + status byte (0 = failed, 1 = shipped over a fresh
+    /// connection, 2 = shipped over a pooled connection, 3 = cache miss)
+    /// + bytes shipped (`u64` LE) + wall nanos (`u64` LE).
+    ShipDone = 11,
+    /// Worker → worker: one bounded slice of a streamed replica; payload =
+    /// chunk header (id + offset + total + CRC32, see [`decode_chunk`])
+    /// + at most [`CHUNK_BYTES`] data bytes. The receiver acks the
+    /// completed blob — not each chunk — with `PutOk`.
+    BlobChunk = 12,
 }
 
 impl FrameKind {
@@ -401,6 +415,9 @@ impl FrameKind {
             7 => FrameKind::NotFound,
             8 => FrameKind::Error,
             9 => FrameKind::Shutdown,
+            10 => FrameKind::ShipTo,
+            11 => FrameKind::ShipDone,
+            12 => FrameKind::BlobChunk,
             _ => return None,
         })
     }
@@ -454,6 +471,157 @@ pub fn read_frame<R: std::io::Read>(r: &mut R) -> Result<Frame> {
         bail!("truncated frame payload: got {} of {len} bytes", payload.len());
     }
     Ok(Frame { kind, payload })
+}
+
+// ---------------------------------------------------------------------------
+// Chunked blob streaming — the peer-to-peer direct-shipping codec.
+//
+// A replica streamed worker→worker is split into bounded `BlobChunk`
+// frames so a large blob never has to materialize as one frame payload on
+// either side: the sender writes straight out of the cached `Arc` slice,
+// the receiver assembles straight into the single destination buffer.
+// Each chunk carries a CRC32 over its entire payload prefix + data, so a
+// flipped bit anywhere in the stream is a clean protocol error at the
+// receiver (sockets already catch truncation; the CRC catches corruption
+// the TCP checksum's 16 bits can miss at scale).
+// ---------------------------------------------------------------------------
+
+/// Bound on the data bytes of one `BlobChunk` frame (1 MiB): a 1 GiB
+/// replica streams as ~1024 bounded frames instead of one giant payload.
+pub const CHUNK_BYTES: usize = 1 << 20;
+
+/// Wire size of a chunk header: stream id (12) + offset (8) + total (8) +
+/// CRC32 (4).
+pub const CHUNK_HEADER_BYTES: usize = 12 + 8 + 8 + 4;
+
+/// One decoded, CRC-verified `BlobChunk` payload.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Chunk {
+    /// Opaque stream id (the transport uses the 12-byte encoded
+    /// `DataKey`).
+    pub id: [u8; 12],
+    /// Byte offset of `data` within the whole blob. Senders emit chunks
+    /// in order; receivers reject gaps.
+    pub offset: u64,
+    /// Total blob size — the receiver knows completion without a
+    /// trailer frame.
+    pub total: u64,
+    pub data: Vec<u8>,
+}
+
+/// CRC32 (IEEE 802.3, reflected polynomial `0xEDB8_8320`) over `data`.
+/// Hand-rolled nibble-table implementation — small, dependency-free, and
+/// fast enough that the stream stays socket-bound.
+pub fn crc32(data: &[u8]) -> u32 {
+    const POLY: u32 = 0xEDB8_8320;
+    // 16-entry nibble table, computed at compile time.
+    const TABLE: [u32; 16] = {
+        let mut t = [0u32; 16];
+        let mut i = 0;
+        while i < 16 {
+            let mut c = i as u32;
+            let mut k = 0;
+            while k < 4 {
+                c = if c & 1 != 0 { POLY ^ (c >> 1) } else { c >> 1 };
+                k += 1;
+            }
+            t[i] = c;
+            i += 1;
+        }
+        t
+    };
+    let mut crc = !0u32;
+    for b in data {
+        crc = TABLE[((crc ^ (*b as u32)) & 0x0F) as usize] ^ (crc >> 4);
+        crc = TABLE[((crc ^ ((*b as u32) >> 4)) & 0x0F) as usize] ^ (crc >> 4);
+    }
+    !crc
+}
+
+/// Encode one chunk payload: `id ‖ offset ‖ total ‖ crc ‖ data`, with the
+/// CRC covering everything but its own field.
+fn encode_chunk_payload(id: [u8; 12], offset: u64, total: u64, data: &[u8]) -> Vec<u8> {
+    // CRC over the header prefix (id+offset+total) and the data, skipping
+    // the CRC field itself — any corrupted payload byte is caught.
+    let mut covered = Vec::with_capacity(28 + data.len());
+    covered.extend_from_slice(&id);
+    covered.extend_from_slice(&offset.to_le_bytes());
+    covered.extend_from_slice(&total.to_le_bytes());
+    covered.extend_from_slice(data);
+    let crc = crc32(&covered[..]);
+    let mut payload = Vec::with_capacity(CHUNK_HEADER_BYTES + data.len());
+    payload.extend_from_slice(&covered[..28]);
+    payload.extend_from_slice(&crc.to_le_bytes());
+    payload.extend_from_slice(data);
+    payload
+}
+
+/// Stream `blob` to `w` as in-order `BlobChunk` frames of at most
+/// [`CHUNK_BYTES`] data bytes each. An empty blob still emits one chunk so
+/// the receiver observes the (zero-length) stream completing.
+pub fn write_blob_chunks<W: std::io::Write>(w: &mut W, id: [u8; 12], blob: &[u8]) -> Result<()> {
+    let total = blob.len() as u64;
+    let mut offset = 0usize;
+    loop {
+        let end = (offset + CHUNK_BYTES).min(blob.len());
+        let payload = encode_chunk_payload(id, offset as u64, total, &blob[offset..end]);
+        write_frame(w, FrameKind::BlobChunk, &payload)?;
+        offset = end;
+        if offset >= blob.len() {
+            return Ok(());
+        }
+    }
+}
+
+/// Decode and CRC-verify one `BlobChunk` payload. Truncated headers,
+/// oversized data, inconsistent offset/total claims, and any CRC mismatch
+/// are clean errors — the receiving worker drops the stream and the
+/// coordinator's relay fallback re-ships the blob.
+pub fn decode_chunk(payload: &[u8]) -> Result<Chunk> {
+    if payload.len() < CHUNK_HEADER_BYTES {
+        bail!(
+            "truncated chunk header: {} of {CHUNK_HEADER_BYTES} bytes",
+            payload.len()
+        );
+    }
+    let id: [u8; 12] = payload[..12].try_into().unwrap();
+    let offset = u64::from_le_bytes(payload[12..20].try_into().unwrap());
+    let total = u64::from_le_bytes(payload[20..28].try_into().unwrap());
+    let want_crc = u32::from_le_bytes(payload[28..32].try_into().unwrap());
+    let data = &payload[CHUNK_HEADER_BYTES..];
+    let mut covered = Vec::with_capacity(28 + data.len());
+    covered.extend_from_slice(&payload[..28]);
+    covered.extend_from_slice(data);
+    let got_crc = crc32(&covered);
+    if got_crc != want_crc {
+        bail!("chunk CRC mismatch: computed {got_crc:#010x}, frame claims {want_crc:#010x}");
+    }
+    if data.len() > CHUNK_BYTES {
+        bail!("chunk data of {} bytes exceeds the {CHUNK_BYTES}-byte bound", data.len());
+    }
+    if total > MAX_FRAME_BYTES {
+        bail!("chunk claims a {total}-byte blob, above the {MAX_FRAME_BYTES}-byte cap");
+    }
+    let end = offset
+        .checked_add(data.len() as u64)
+        .filter(|e| *e <= total)
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "chunk range {offset}+{} overruns the {total}-byte blob",
+                data.len()
+            )
+        })?;
+    // Every non-final chunk must be full-sized: a short middle chunk means
+    // the sender and receiver disagree about framing.
+    if end < total && data.len() != CHUNK_BYTES {
+        bail!("short non-final chunk: {} bytes at offset {offset} of {total}", data.len());
+    }
+    Ok(Chunk {
+        id,
+        offset,
+        total,
+        data: data.to_vec(),
+    })
 }
 
 #[cfg(test)]
@@ -544,6 +712,9 @@ mod tests {
             FrameKind::NotFound,
             FrameKind::Error,
             FrameKind::Shutdown,
+            FrameKind::ShipTo,
+            FrameKind::ShipDone,
+            FrameKind::BlobChunk,
         ];
         for (i, kind) in kinds.into_iter().enumerate() {
             let payload: Vec<u8> = (0..i * 7).map(|b| b as u8).collect();
@@ -600,5 +771,90 @@ mod tests {
         wire.extend_from_slice(&MAX_FRAME_BYTES.to_le_bytes());
         wire.extend_from_slice(b"only a few bytes");
         assert!(read_frame(&mut &wire[..]).is_err());
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // IEEE 802.3 reference values ("check" vectors from the CRC
+        // catalogue) pin the polynomial, reflection, and final XOR.
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    /// Drain a chunk stream back into a blob, enforcing the receiver's
+    /// in-order/completion rules — the same loop the worker's peer
+    /// handler runs.
+    fn assemble(wire: &[u8]) -> Result<Vec<u8>> {
+        let mut r = wire;
+        let mut buf: Vec<u8> = Vec::new();
+        loop {
+            let frame = read_frame(&mut r)?;
+            if frame.kind != FrameKind::BlobChunk {
+                bail!("unexpected frame {:?} in chunk stream", frame.kind);
+            }
+            let c = decode_chunk(&frame.payload)?;
+            if c.offset != buf.len() as u64 {
+                bail!("out-of-order chunk at {} (have {})", c.offset, buf.len());
+            }
+            buf.extend_from_slice(&c.data);
+            if buf.len() as u64 >= c.total {
+                return Ok(buf);
+            }
+        }
+    }
+
+    #[test]
+    fn blob_chunks_roundtrip_across_sizes() {
+        // Empty, sub-chunk, exactly one chunk, chunk+1, and several
+        // chunks with a ragged tail all reassemble byte-identically.
+        for size in [0, 1, 100, CHUNK_BYTES, CHUNK_BYTES + 1, 3 * CHUNK_BYTES + 37] {
+            let blob: Vec<u8> = (0..size).map(|i| (i * 31 + 7) as u8).collect();
+            let mut wire = Vec::new();
+            write_blob_chunks(&mut wire, [9u8; 12], &blob).unwrap();
+            assert_eq!(assemble(&wire).unwrap(), blob, "size {size}");
+        }
+    }
+
+    #[test]
+    fn chunk_corruption_at_every_offset_is_detected() {
+        // Flip one bit at every payload offset of a single-chunk stream:
+        // the CRC (or, for the CRC field itself, the mismatch) must catch
+        // all of them — no corrupted byte may reassemble silently.
+        let blob: Vec<u8> = (0..257u32).map(|b| b as u8).collect();
+        let payload = encode_chunk_payload([3u8; 12], 0, blob.len() as u64, &blob);
+        assert!(decode_chunk(&payload).is_ok());
+        for i in 0..payload.len() {
+            let mut bad = payload.clone();
+            bad[i] ^= 0x01;
+            assert!(decode_chunk(&bad).is_err(), "flipped byte {i} went undetected");
+        }
+    }
+
+    #[test]
+    fn chunk_truncation_at_every_offset_is_a_clean_err() {
+        let blob = vec![0xA5u8; 100];
+        let mut wire = Vec::new();
+        write_blob_chunks(&mut wire, [1u8; 12], &blob).unwrap();
+        for cut in 0..wire.len() {
+            assert!(assemble(&wire[..cut]).is_err(), "cut at {cut}");
+        }
+        assert_eq!(assemble(&wire).unwrap(), blob);
+    }
+
+    #[test]
+    fn chunk_claims_are_bounded_and_consistent() {
+        // Oversized data, blob totals above the frame cap, ranges that
+        // overrun the total, and short middle chunks are all rejected
+        // even with a valid CRC.
+        let over = encode_chunk_payload([0u8; 12], 0, 2 * CHUNK_BYTES as u64, &[0u8; 10]);
+        // 10 bytes at offset 0 of a 2 MiB blob: short non-final chunk.
+        assert!(decode_chunk(&over).is_err());
+        let overrun = encode_chunk_payload([0u8; 12], 90, 64, &[0u8; 10]);
+        assert!(decode_chunk(&overrun).is_err());
+        let too_big = encode_chunk_payload([0u8; 12], 0, MAX_FRAME_BYTES + 1, &[]);
+        assert!(decode_chunk(&too_big).is_err());
+        let fine = encode_chunk_payload([0u8; 12], 54, 64, &[0u8; 10]);
+        assert_eq!(decode_chunk(&fine).unwrap().offset, 54);
     }
 }
